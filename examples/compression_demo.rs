@@ -1,0 +1,87 @@
+//! Communication-efficiency demo (paper §4.3 / Table 4): sweep the
+//! compression pipeline — none, q16, q8, top-k, federated dropout, and
+//! the paper's combined configuration — reporting per-round upload
+//! volume and accuracy cost on the same federated workload.
+
+use fedhpc::config::presets::quickstart;
+use fedhpc::config::CompressionConfig;
+use fedhpc::experiments::run_real;
+use fedhpc::util::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    fedhpc::util::logging::init();
+
+    let variants: [(&str, CompressionConfig); 6] = [
+        ("none (dense f32)", CompressionConfig::NONE),
+        (
+            "quantize int16",
+            CompressionConfig {
+                quant_bits: 16,
+                topk_frac: 1.0,
+                dropout_keep: 1.0,
+            },
+        ),
+        (
+            "quantize int8",
+            CompressionConfig {
+                quant_bits: 8,
+                topk_frac: 1.0,
+                dropout_keep: 1.0,
+            },
+        ),
+        (
+            "top-10% sparsify",
+            CompressionConfig {
+                quant_bits: 32,
+                topk_frac: 0.1,
+                dropout_keep: 1.0,
+            },
+        ),
+        (
+            "fed-dropout 50%",
+            CompressionConfig {
+                quant_bits: 32,
+                topk_frac: 1.0,
+                dropout_keep: 0.5,
+            },
+        ),
+        ("paper (top-25% + q8)", CompressionConfig::PAPER),
+    ];
+
+    println!("compression sweep: 6 variants × 6 rounds, mock runtime\n");
+    println!(
+        "{:<22} {:>14} {:>10} {:>10}",
+        "codec", "upload/round", "vs dense", "accuracy"
+    );
+    let mut dense_baseline = None;
+    for (label, comp) in variants {
+        let mut cfg = quickstart();
+        cfg.name = format!(
+            "compression_demo_{}",
+            label
+                .chars()
+                .map(|c| if c.is_alphanumeric() { c } else { '_' })
+                .collect::<String>()
+        );
+        cfg.mock_runtime = true;
+        cfg.train.rounds = 6;
+        cfg.train.local_epochs = 1;
+        cfg.train.lr = 0.2;
+        cfg.data.samples_per_client = 96;
+        cfg.data.eval_samples = 256;
+        cfg.compression = comp;
+        let report = run_real(&cfg)?;
+        let up = report.mean_upload_per_round();
+        let base = *dense_baseline.get_or_insert(up);
+        println!(
+            "{:<22} {:>14} {:>9.0}% {:>9.1}%",
+            label,
+            human_bytes(up as u64),
+            up / base * 100.0,
+            report.final_accuracy().unwrap_or(0.0) * 100.0,
+        );
+        report.save("results")?;
+    }
+    println!("\n(paper Table 4: ~45 MB/round dense → ~15 MB compressed, ≈65% reduction)");
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! End-to-end validation driver (DESIGN.md E8): federated training of
+//! the ~3.3M-parameter char-transformer (`e2e_charlm`) through the full
+//! stack — Pallas/JAX AOT artifacts, PJRT runtime, Rust orchestrator,
+//! compression, heterogeneous cluster — for a few hundred aggregate
+//! optimization rounds, logging the loss curve.
+//!
+//! Requires `make artifacts`. Runtime on CPU is dominated by the
+//! transformer fwd/bwd (~0.7 s/step); the default configuration
+//! (6 clients × 2 sel/round × 4 steps × 60 rounds ≈ 480 client steps)
+//! finishes in tens of minutes. `--rounds N` / `--tiny` adjust.
+
+use fedhpc::config::presets::quickstart;
+use fedhpc::config::{Aggregation, CompressionConfig, Partition};
+use fedhpc::experiments::run_real;
+
+fn main() -> anyhow::Result<()> {
+    fedhpc::util::logging::init();
+    let args: Vec<String> = std::env::args().collect();
+    let tiny = args.iter().any(|a| a == "--tiny");
+    let rounds = args
+        .iter()
+        .position(|a| a == "--rounds")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if tiny { 3 } else { 60 });
+
+    let mut cfg = quickstart();
+    cfg.name = "e2e_charlm".into();
+    cfg.data.dataset = "e2e_charlm".into();
+    cfg.mock_runtime = false; // the whole point: the real AOT stack
+    cfg.data.partition = Partition::LabelShard {
+        classes_per_client: 3, // 3 of the 10 corpus roles per client
+    };
+    cfg.aggregation = Aggregation::FedProx { mu: 0.001 };
+    cfg.compression = CompressionConfig {
+        quant_bits: 16,
+        topk_frac: 0.5,
+        dropout_keep: 1.0,
+    };
+    cfg.train.rounds = rounds;
+    cfg.train.local_epochs = 1;
+    cfg.train.lr = 0.05;
+    cfg.cluster.nodes = vec![
+        ("hpc-rtx6000".into(), 3),
+        ("p3.2xlarge".into(), 2),
+        ("t3.large".into(), 1),
+    ];
+    cfg.selection.clients_per_round = 2;
+    cfg.straggler.deadline_ms = Some(3_600_000);
+    if tiny {
+        cfg.data.samples_per_client = 16; // 2 steps/epoch at batch 8
+        cfg.data.eval_samples = 32;
+    } else {
+        cfg.data.samples_per_client = 32; // 4 steps/epoch at batch 8
+        cfg.data.eval_samples = 64;
+    }
+
+    println!(
+        "e2e: char-transformer (~3.3M params) | {} rounds | {} clients/round | fedprox+q16/top50%",
+        cfg.train.rounds, cfg.selection.clients_per_round
+    );
+    let t0 = std::time::Instant::now();
+    let report = run_real(&cfg)?;
+    println!("\nround  train_loss  eval_loss  eval_acc  bytes_up");
+    for r in &report.rounds {
+        println!(
+            "{:>5}  {:>10.4}  {:>9}  {:>8}  {:>9}",
+            r.round,
+            r.train_loss,
+            r.eval_loss.map_or("-".into(), |l| format!("{l:.4}")),
+            r.eval_accuracy
+                .map_or("-".to_string(), |a| format!("{:.3}", a)),
+            fedhpc::util::human_bytes(r.bytes_up),
+        );
+    }
+    let first = report.rounds.first().map(|r| r.train_loss).unwrap_or(0.0);
+    let last = report.rounds.last().map(|r| r.train_loss).unwrap_or(0.0);
+    println!(
+        "\nloss {first:.3} → {last:.3} over {} rounds in {:.1} min (char-level acc {:.1}%)",
+        report.rounds.len(),
+        t0.elapsed().as_secs_f64() / 60.0,
+        report.final_accuracy().unwrap_or(0.0) * 100.0,
+    );
+    report.save("results")?;
+    println!("loss curve saved to results/e2e_charlm.csv");
+    Ok(())
+}

@@ -1,0 +1,118 @@
+"""AOT exporter: lower every model's init/train/eval step to HLO *text*
+and write a manifest the Rust runtime reads to know shapes and layouts.
+
+HLO text — NOT ``lowered.compile()`` / ``.serialize()`` — is the
+interchange format: jax ≥ 0.5 emits HloModuleProtos with 64-bit
+instruction ids that the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):  ``python -m compile.aot --out ../artifacts``
+
+Per model ``m`` this writes::
+
+    {m}_init.hlo.txt    (seed u32[]) -> (params f32[P],)
+    {m}_train.hlo.txt   (params, global, x, y, lr, mu) -> (params', loss, correct)
+    {m}_eval.hlo.txt    (params, x, y) -> (loss_sum, correct)
+
+plus ``manifest.json`` with parameter counts, batch sizes, input
+shapes/dtypes and the kernel impl each artifact was lowered with.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as steps
+from .models import REGISTRY
+from .models.common import ModelDef
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple — see load_hlo.rs pattern)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_step(mdef: ModelDef, kind: str, impl: str) -> str:
+    if kind == "init":
+        fn = steps.make_init(mdef)
+    elif kind == "train":
+        fn = steps.make_train_step(mdef, impl)
+    else:
+        fn = steps.make_eval_step(mdef, impl)
+    return to_hlo_text(jax.jit(fn).lower(*steps.example_args(mdef, kind)))
+
+
+def model_manifest(mdef: ModelDef, impl: str) -> dict:
+    return {
+        "n_params": mdef.n_params,
+        "kernel_impl": impl,
+        "train_batch": mdef.train_batch,
+        "eval_batch": mdef.eval_batch,
+        "x_shape": list(mdef.x_shape),
+        "x_dtype": mdef.x_dtype,
+        "y_shape": list(mdef.y_shape),
+        "samples_per_example": mdef.samples_per_example,
+        "param_names": list(mdef.spec.names),
+        "param_shapes": [list(s) for s in mdef.spec.shapes],
+    }
+
+
+def export_all(out_dir: str, models: list[str], impl_override: str | None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": MANIFEST_VERSION, "models": {}}
+    for name in models:
+        mdef = REGISTRY[name]
+        impl = impl_override or mdef.default_impl
+        for kind in ("init", "train", "eval"):
+            t0 = time.time()
+            text = lower_step(mdef, kind, impl)
+            path = os.path.join(out_dir, f"{name}_{kind}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            print(
+                f"  {name}_{kind}: {len(text) / 1e6:.2f} MB HLO "
+                f"({time.time() - t0:.1f}s, impl={impl})"
+            )
+        manifest["models"][name] = model_manifest(mdef, impl)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default=",".join(sorted(REGISTRY)),
+        help="comma-separated subset of: " + ",".join(sorted(REGISTRY)),
+    )
+    ap.add_argument(
+        "--impl",
+        choices=["pallas", "jnp"],
+        default=None,
+        help="override each model's default kernel impl",
+    )
+    args = ap.parse_args()
+    names = [n for n in args.models.split(",") if n]
+    print(f"exporting {names} -> {args.out}")
+    export_all(args.out, names, args.impl)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""L1 Pallas kernels: communication-efficient update transforms (paper §4.3).
+
+Three kernels, each an elementwise/VPU-shaped pass over the flat update
+vector, tiled so a block fits comfortably in VMEM:
+
+* ``quantize`` / ``dequantize`` — symmetric per-tensor int8/int16
+  quantization. The global ``max|g|`` reduction happens in L2 (a single
+  jnp reduce XLA fuses well); the kernel does the round/clip/scale pass.
+* ``sparsify`` — top-k magnitude sparsification as a *threshold mask*
+  pass. On the paper's GPUs top-k is a radix select; on TPU a
+  threshold-apply maps to the VPU, with the threshold computed once by
+  ``jax.lax.top_k`` in L2 (DESIGN.md §Hardware-Adaptation).
+* ``fedprox_step`` — fused FedProx SGD update
+  ``w - lr * (g + mu * (w - w_global))``: one pass instead of three,
+  which matters because it runs P-sized work every minibatch.
+
+All run under ``interpret=True`` on CPU PJRT; oracles in ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Flat vectors are processed as (rows, 128) tiles: 128 is the VPU lane
+# width; BLOCK_ROWS * 128 * 4B = 256 KiB per operand block in VMEM.
+LANES = 128
+BLOCK_ROWS = 512
+
+
+def _pad_2d(v: jax.Array, rows: int):
+    """Reshape a flat f32 vector to (R, LANES) padded to BLOCK_ROWS tiles."""
+    n = v.shape[0]
+    cols = LANES
+    total = ((n + cols - 1) // cols) * cols
+    r = total // cols
+    rp = ((r + rows - 1) // rows) * rows
+    v2 = jnp.pad(v, (0, rp * cols - n)).reshape(rp, cols)
+    return v2, rp
+
+
+def _unpad(v2: jax.Array, n: int) -> jax.Array:
+    return v2.reshape(-1)[:n]
+
+
+def _quant_kernel(g_ref, scale_ref, q_ref, *, qmax: float):
+    # True division (not mul-by-reciprocal): must round identically to the
+    # oracle and to the Rust codec at ULP boundaries.
+    q = jnp.clip(jnp.round(g_ref[...] / scale_ref[0]), -qmax, qmax)
+    q_ref[...] = q.astype(q_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def quantize(g: jax.Array, bits: int = 8):
+    """Quantize a flat f32 vector to (q, scale). See ref.quantize_ref."""
+    assert bits in (8, 16)
+    qmax = float(2 ** (bits - 1) - 1)
+    dtype = jnp.int8 if bits == 8 else jnp.int16
+    absmax = jnp.max(jnp.abs(g))  # L2-side reduction
+    scale = jnp.where(absmax > 0, absmax / qmax, jnp.float32(1.0))
+    n = g.shape[0]
+    g2, rp = _pad_2d(g, BLOCK_ROWS)
+    rows = min(BLOCK_ROWS, rp)
+    q2 = pl.pallas_call(
+        functools.partial(_quant_kernel, qmax=qmax),
+        grid=(rp // rows,),
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, LANES), dtype),
+        interpret=True,
+    )(g2, scale.reshape(1))
+    return _unpad(q2, n), scale
+
+
+def _dequant_kernel(q_ref, scale_ref, g_ref):
+    g_ref[...] = q_ref[...].astype(jnp.float32) * scale_ref[0]
+
+
+@jax.jit
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize` for a flat int vector."""
+    n = q.shape[0]
+    q2, rp = _pad_2d(q.astype(jnp.float32), BLOCK_ROWS)
+    q2 = q2.astype(q.dtype)
+    rows = min(BLOCK_ROWS, rp)
+    g2 = pl.pallas_call(
+        _dequant_kernel,
+        grid=(rp // rows,),
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, LANES), jnp.float32),
+        interpret=True,
+    )(q2, scale.reshape(1))
+    return _unpad(g2, n)
+
+
+def _mask_kernel(g_ref, t_ref, o_ref):
+    g = g_ref[...]
+    o_ref[...] = jnp.where(jnp.abs(g) >= t_ref[0], g, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def sparsify(g: jax.Array, k: int) -> jax.Array:
+    """Top-k magnitude sparsification of a flat f32 vector.
+
+    Threshold from ``lax.top_k`` (L2), mask applied by the Pallas pass.
+    Ties at the threshold are kept (pessimistic), matching ref + Rust.
+    """
+    n = g.shape[0]
+    k = max(1, min(int(k), n))
+    t = jax.lax.top_k(jnp.abs(g), k)[0][-1]
+    g2, rp = _pad_2d(g, BLOCK_ROWS)
+    rows = min(BLOCK_ROWS, rp)
+    o2 = pl.pallas_call(
+        _mask_kernel,
+        grid=(rp // rows,),
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, LANES), jnp.float32),
+        interpret=True,
+    )(g2, t.reshape(1))
+    return _unpad(o2, n)
+
+
+def _fedprox_kernel(w_ref, g_ref, wg_ref, lr_ref, mu_ref, o_ref):
+    w = w_ref[...]
+    o_ref[...] = w - lr_ref[0] * (g_ref[...] + mu_ref[0] * (w - wg_ref[...]))
+
+
+@jax.jit
+def fedprox_step(
+    w: jax.Array,
+    g: jax.Array,
+    w_global: jax.Array,
+    lr: jax.Array,
+    mu: jax.Array,
+) -> jax.Array:
+    """Fused FedProx SGD step over flat f32 params. See ref.fedprox_step_ref."""
+    n = w.shape[0]
+    w2, rp = _pad_2d(w, BLOCK_ROWS)
+    g2, _ = _pad_2d(g, BLOCK_ROWS)
+    wg2, _ = _pad_2d(w_global, BLOCK_ROWS)
+    rows = min(BLOCK_ROWS, rp)
+    vec = pl.BlockSpec((rows, LANES), lambda i: (i, 0))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    o2 = pl.pallas_call(
+        _fedprox_kernel,
+        grid=(rp // rows,),
+        in_specs=[vec, vec, vec, scalar, scalar],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct((rp, LANES), jnp.float32),
+        interpret=True,
+    )(w2, g2, wg2, jnp.reshape(lr, (1,)), jnp.reshape(mu, (1,)))
+    return _unpad(o2, n)

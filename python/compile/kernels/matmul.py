@@ -1,0 +1,145 @@
+"""L1 Pallas kernel: MXU-tiled matmul.
+
+The paper's local-training hot-spot is the dense compute of each client
+model. On the paper's GPUs that is cuBLAS; the TPU rethink (DESIGN.md
+§Hardware-Adaptation) expresses it as a Pallas kernel tiled for the MXU
+systolic array: ``BlockSpec`` tiles staged HBM→VMEM, f32 accumulation in
+a VMEM scratch accumulator, K-innermost grid so each (i, j) output tile
+is revisited across the K dimension (double-buffered by the Mosaic
+pipeline on real hardware).
+
+On this CPU image the kernel runs under ``interpret=True`` (the Mosaic
+custom-call is TPU-only); correctness is pinned to ``ref.matmul_ref`` by
+python/tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 matches both the MXU systolic array edge and
+# the VPU lane count; VMEM footprint per step is
+# (bm*bk + bk*bn + bm*bn) * 4B = 192 KiB at 128³ — far below ~16 MiB VMEM,
+# leaving room for Mosaic's double buffering (2× input tiles in flight).
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    """One grid step: accumulate x_tile @ w_tile into the VMEM scratch.
+
+    Grid is (M/bm, N/bn, K/bk) with K innermost; the accumulator is
+    zeroed on the first K step and flushed to the output tile on the
+    last, so ``o_ref`` is written exactly once per (i, j).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int = TILE_M,
+    bn: int = TILE_N,
+    bk: int = TILE_K,
+) -> jax.Array:
+    """Tiled Pallas matmul ``x @ w`` for 2-D f32 operands.
+
+    Shapes need not be tile-aligned: inputs are zero-padded up to the
+    tile lattice and the result is sliced back. Tile sizes are clamped
+    to the (padded) problem so small matrices become a single-tile call.
+    """
+    assert x.ndim == 2 and w.ndim == 2, (x.shape, w.shape)
+    assert x.shape[1] == w.shape[0], (x.shape, w.shape)
+    m, k = x.shape
+    _, n = w.shape
+
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    bk = min(bk, _ceil_to(k, 8))
+
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+
+    n_k = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pl_scratch(bm, bn)],
+        interpret=True,  # CPU PJRT; Mosaic lowering is TPU-only
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def pl_scratch(bm: int, bn: int):
+    """VMEM f32 accumulator scratch shape for the kernel."""
+    from jax.experimental.pallas import tpu as pltpu  # local: TPU-only names
+
+    try:
+        return pltpu.VMEM((bm, bn), jnp.float32)
+    except Exception:  # pragma: no cover - fallback for older pallas
+        return pl.VMEM((bm, bn), jnp.float32)
+
+
+@jax.custom_vjp
+def matmul_ad(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Differentiable wrapper: pallas_call has no autodiff rule, so the
+    VJP is spelled explicitly — and the backward pass is itself two
+    Pallas matmuls (``dx = dy @ wᵀ``, ``dw = xᵀ @ dy``), keeping the
+    whole fwd+bwd on the MXU path."""
+    return matmul(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _matmul_bwd(res, dy):
+    x, w = res
+    return matmul(dy, w.T), matmul(x.T, dy)
+
+
+matmul_ad.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    """Dense layer over the last axis using the Pallas matmul.
+
+    Collapses leading axes to a single M dimension (the kernel is 2-D),
+    applies ``x @ w (+ b)`` and restores the leading shape.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    y = matmul_ad(x2, w)
+    if b is not None:
+        y = y + b
+    return y.reshape(lead + (w.shape[1],))

@@ -1,0 +1,80 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every kernel in this package has a reference implementation here; pytest
+(python/tests/) asserts allclose between kernel and oracle across a
+hypothesis-driven sweep of shapes and dtypes. These oracles are also used
+directly by the L2 model code when ``kernel_impl="jnp"`` is selected at
+AOT time (see aot.py), which keeps the lowered HLO small for the large
+end-to-end model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain f32 matmul oracle: ``x @ w`` with f32 accumulation."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def quantize_ref(g: jax.Array, bits: int = 8):
+    """Symmetric per-tensor affine quantization oracle.
+
+    Returns ``(q, scale)`` where ``q`` is int8/int16 and
+    ``g ≈ q * scale``. ``scale = max|g| / qmax`` (all-zero tensors map to
+    scale 1 to avoid div-by-zero, matching the Rust codec).
+    """
+    assert bits in (8, 16)
+    qmax = float(2 ** (bits - 1) - 1)
+    absmax = jnp.max(jnp.abs(g))
+    scale = jnp.where(absmax > 0, absmax / qmax, jnp.float32(1.0))
+    q = jnp.clip(jnp.round(g / scale), -qmax, qmax)
+    dtype = jnp.int8 if bits == 8 else jnp.int16
+    return q.astype(dtype), scale.astype(jnp.float32)
+
+
+def dequantize_ref(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_ref`."""
+    return q.astype(jnp.float32) * scale
+
+
+def topk_threshold_ref(g: jax.Array, k: int) -> jax.Array:
+    """Magnitude threshold such that the top-k survive ``|g| >= t``.
+
+    Ties are kept pessimistically (may keep more than k when magnitudes
+    are equal), matching the two-pass kernel and the Rust codec.
+    """
+    flat = jnp.abs(g.reshape(-1))
+    k = max(1, min(int(k), flat.shape[0]))
+    top = jax.lax.top_k(flat, k)[0]
+    return top[-1]
+
+
+def sparsify_ref(g: jax.Array, k: int) -> jax.Array:
+    """Top-k magnitude sparsification oracle: zero all but top-k entries."""
+    t = topk_threshold_ref(g, k)
+    return jnp.where(jnp.abs(g) >= t, g, jnp.zeros_like(g))
+
+
+def fedprox_step_ref(
+    w: jax.Array,
+    g: jax.Array,
+    w_global: jax.Array,
+    lr: jax.Array,
+    mu: jax.Array,
+) -> jax.Array:
+    """Fused FedProx SGD step oracle.
+
+    ``w' = w - lr * (g + mu * (w - w_global))`` — the proximal term of
+    Li et al. (FedProx) folded into the parameter update so that the
+    whole step is one elementwise pass (paper §4.4). ``mu = 0`` recovers
+    plain FedAvg local SGD.
+    """
+    return w - lr * (g + mu * (w - w_global))
+
+
+def dropout_mask_ref(key: jax.Array, shape, rate: float) -> jax.Array:
+    """Federated-dropout mask oracle: 1 keeps a unit, 0 drops it."""
+    return (jax.random.uniform(key, shape) >= rate).astype(jnp.float32)

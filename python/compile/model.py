@@ -1,0 +1,83 @@
+"""L2 step builders: turn a :class:`ModelDef` into the three jittable
+functions the Rust runtime executes (init / train_step / eval_step).
+
+Signatures (all params flat ``f32[P]``; see models/common.py):
+
+* ``init(seed u32[]) -> (params f32[P],)``
+* ``train_step(params, global_params, x, y, lr f32[], mu f32[])
+    -> (new_params f32[P], loss f32[], correct f32[])``
+  One SGD minibatch step. The FedProx proximal term μ/2·‖w−w₀‖² is
+  folded into the fused L1 update kernel (its gradient is μ(w−w₀));
+  μ=0 recovers plain FedAvg local SGD, so one artifact serves both
+  aggregation strategies (paper §4.4).
+* ``eval_step(params, x, y) -> (loss_sum f32[], correct f32[])``
+  Sum-reducible so the Rust side can accumulate over shards.
+
+The Rust client drives ``train_step`` once per local minibatch for the
+configured number of local epochs (paper §5.1: 5 local epochs), keeping
+the epoch loop — a *policy* decision — in L3 while all math stays in
+the AOT-compiled HLO.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.compress import fedprox_step
+from .kernels.ref import fedprox_step_ref
+from .models.common import ModelDef, softmax_xent
+
+
+def make_init(mdef: ModelDef) -> Callable:
+    from .models.common import init_flat
+
+    def init(seed: jax.Array):
+        return (init_flat(mdef.spec, seed),)
+
+    return init
+
+
+def make_train_step(mdef: ModelDef, impl: str) -> Callable:
+    """Build the fused local-SGD/FedProx minibatch step."""
+    use_pallas_update = impl == "pallas"
+
+    def train_step(params, global_params, x, y, lr, mu):
+        def loss_fn(flat):
+            logits = mdef.apply(mdef.spec.unflatten(flat), x, impl)
+            loss, correct = softmax_xent(logits, y)
+            return loss, correct
+
+        (loss, correct), grad = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        step = fedprox_step if use_pallas_update else fedprox_step_ref
+        new_params = step(params, grad, global_params, lr, mu)
+        return new_params, loss, correct
+
+    return train_step
+
+
+def make_eval_step(mdef: ModelDef, impl: str) -> Callable:
+    def eval_step(params, x, y):
+        logits = mdef.apply(mdef.spec.unflatten(params), x, impl)
+        loss, correct = softmax_xent(logits, y)
+        n = jnp.float32(logits.reshape((-1, logits.shape[-1])).shape[0])
+        return loss * n, correct  # loss_sum over label positions
+
+    return eval_step
+
+
+def example_args(mdef: ModelDef, kind: str):
+    """ShapeDtypeStructs to lower each step with (static shapes)."""
+    p = jax.ShapeDtypeStruct((mdef.n_params,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    if kind == "init":
+        return (jax.ShapeDtypeStruct((), jnp.uint32),)
+    batch = mdef.train_batch if kind == "train" else mdef.eval_batch
+    x = jax.ShapeDtypeStruct((batch,) + mdef.x_shape, mdef.x_jnp_dtype())
+    y = jax.ShapeDtypeStruct((batch,) + mdef.y_shape, jnp.int32)
+    if kind == "train":
+        return (p, p, x, y, scalar, scalar)
+    assert kind == "eval"
+    return (p, x, y)

@@ -1,0 +1,18 @@
+"""L2 model zoo: the paper's three evaluation workloads plus the larger
+end-to-end char-transformer, all exposed through a flat-parameter-vector
+API so the Rust coordinator treats model state as a single ``f32[P]``
+buffer (what gets aggregated, compressed and shipped).
+"""
+
+from . import cifar_cnn, charlm, medmnist_mlp
+from .common import ModelDef, ParamSpec, REGISTRY, get_model
+
+__all__ = [
+    "ModelDef",
+    "ParamSpec",
+    "REGISTRY",
+    "get_model",
+    "cifar_cnn",
+    "charlm",
+    "medmnist_mlp",
+]

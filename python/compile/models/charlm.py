@@ -1,0 +1,135 @@
+"""Shakespeare workload (paper §5.2): character-level language modeling.
+
+Two sizes of the same pre-norm transformer:
+
+* ``charlm`` — the federated evaluation model (vocab 64, seq 32, d=64,
+  1 block): small enough that 60 simulated clients can train it in real
+  time on CPU PJRT. Dense projections use the Pallas matmul kernel.
+* ``e2e_charlm`` — the end-to-end driver model (vocab 96, seq 128,
+  d=256, 4 blocks, ~3.4M params) used by ``examples/e2e_train.rs``.
+  Exported with ``impl="jnp"`` by default: under CPU interpret mode the
+  *emulated* Pallas loop nest in the lowered HLO would dominate
+  wall-clock; on a real TPU both impls lower to the same MXU kernel
+  (DESIGN.md §Hardware-Adaptation).
+
+Attention mixing uses jnp einsums (batched per-head matmuls; the L1
+kernel is 2-D) — the parameter-bearing projections and MLP, i.e. the
+dominant FLOPs, go through the kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelDef, ParamSpec, dense_fn, register
+
+
+def _spec(vocab: int, seq: int, d: int, blocks: int, mlp_mult: int) -> ParamSpec:
+    pairs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_emb", (vocab, d)),
+        ("pos_emb", (seq, d)),
+    ]
+    for i in range(blocks):
+        p = f"b{i}_"
+        pairs += [
+            (p + "ln1_scale", (d,)),
+            (p + "ln1_bias", (d,)),
+            (p + "qkv_w", (d, 3 * d)),
+            (p + "qkv_b", (3 * d,)),
+            (p + "proj_w", (d, d)),
+            (p + "proj_b", (d,)),
+            (p + "ln2_scale", (d,)),
+            (p + "ln2_bias", (d,)),
+            (p + "mlp1_w", (d, mlp_mult * d)),
+            (p + "mlp1_b", (mlp_mult * d,)),
+            (p + "mlp2_w", (mlp_mult * d, d)),
+            (p + "mlp2_b", (d,)),
+        ]
+    pairs += [
+        ("lnf_scale", (d,)),
+        ("lnf_bias", (d,)),
+        ("head_w", (d, vocab)),
+        ("head_b", (vocab,)),
+    ]
+    return ParamSpec.from_pairs(pairs)
+
+
+def _layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+
+def _attention(h: jax.Array, qkv, heads: int) -> jax.Array:
+    """Causal multi-head self-attention. h: f32[B,T,D]."""
+    b, t, d = h.shape
+    hd = d // heads
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def split_heads(a):
+        return a.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)  # B,H,T,hd
+
+    q, k, v = split_heads(q), split_heads(k), split_heads(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    return out.transpose(0, 2, 1, 3).reshape(b, t, d)
+
+
+def _make_apply(seq: int, d: int, blocks: int, heads: int):
+    def apply(params: Dict[str, jax.Array], x: jax.Array, impl: str) -> jax.Array:
+        """Forward pass: x i32[B,T] → logits f32[B,T,V]."""
+        dense = dense_fn(impl)
+        h = params["tok_emb"][x] + params["pos_emb"][None, :, :]
+        for i in range(blocks):
+            p = f"b{i}_"
+            a = _layernorm(h, params[p + "ln1_scale"], params[p + "ln1_bias"])
+            qkv = dense(a, params[p + "qkv_w"], params[p + "qkv_b"])
+            h = h + dense(
+                _attention(a, qkv, heads), params[p + "proj_w"], params[p + "proj_b"]
+            )
+            m = _layernorm(h, params[p + "ln2_scale"], params[p + "ln2_bias"])
+            m = jax.nn.gelu(dense(m, params[p + "mlp1_w"], params[p + "mlp1_b"]))
+            h = h + dense(m, params[p + "mlp2_w"], params[p + "mlp2_b"])
+        h = _layernorm(h, params["lnf_scale"], params["lnf_bias"])
+        return dense(h, params["head_w"], params["head_b"])
+
+    return apply
+
+
+VOCAB, SEQ, D, BLOCKS, HEADS = 64, 32, 64, 1, 4
+MODEL = register(
+    ModelDef(
+        name="charlm",
+        spec=_spec(VOCAB, SEQ, D, BLOCKS, 4),
+        x_shape=(SEQ,),
+        x_dtype="i32",
+        y_shape=(SEQ,),
+        train_batch=16,
+        eval_batch=32,
+        default_impl="pallas",
+        apply=_make_apply(SEQ, D, BLOCKS, HEADS),
+        samples_per_example=SEQ,
+    )
+)
+
+E2E_VOCAB, E2E_SEQ, E2E_D, E2E_BLOCKS, E2E_HEADS = 96, 128, 256, 4, 8
+E2E_MODEL = register(
+    ModelDef(
+        name="e2e_charlm",
+        spec=_spec(E2E_VOCAB, E2E_SEQ, E2E_D, E2E_BLOCKS, 4),
+        x_shape=(E2E_SEQ,),
+        x_dtype="i32",
+        y_shape=(E2E_SEQ,),
+        train_batch=8,
+        eval_batch=16,
+        default_impl="jnp",
+        apply=_make_apply(E2E_SEQ, E2E_D, E2E_BLOCKS, E2E_HEADS),
+        samples_per_example=E2E_SEQ,
+    )
+)

@@ -1,0 +1,168 @@
+"""Flat-parameter model machinery shared by all L2 models.
+
+The FL coordinator (L3, Rust) never sees pytrees: every exported HLO
+takes and returns parameters as one contiguous ``f32[P]`` vector. Each
+model declares an ordered :class:`ParamSpec` (name → shape); the L2
+code unflattens inside the traced function (pure reshape/slice ops that
+XLA folds away) so the flat API costs nothing at runtime.
+
+``dense_fn(impl)`` selects the matmul implementation for dense layers:
+``"pallas"`` routes through the L1 tiled MXU kernel (the default for
+the paper's three workloads), ``"jnp"`` uses the jnp oracle (used for
+the large e2e model where interpret-mode emulation overhead in the
+*lowered* HLO would dominate CPU wall-clock; on a real TPU both lower
+to the same Mosaic kernel — see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import matmul as pallas_mm
+from ..kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Ordered layout of a model's parameters inside the flat vector."""
+
+    names: Tuple[str, ...]
+    shapes: Tuple[Tuple[int, ...], ...]
+
+    @staticmethod
+    def from_pairs(pairs: Sequence[Tuple[str, Tuple[int, ...]]]) -> "ParamSpec":
+        names, shapes = zip(*pairs)
+        return ParamSpec(tuple(names), tuple(tuple(s) for s in shapes))
+
+    @property
+    def sizes(self) -> Tuple[int, ...]:
+        return tuple(int(math.prod(s)) for s in self.shapes)
+
+    @property
+    def offsets(self) -> Tuple[int, ...]:
+        offs, acc = [], 0
+        for sz in self.sizes:
+            offs.append(acc)
+            acc += sz
+        return tuple(offs)
+
+    @property
+    def total(self) -> int:
+        return sum(self.sizes)
+
+    def unflatten(self, flat: jax.Array) -> Dict[str, jax.Array]:
+        """Slice the flat vector into named, shaped parameters."""
+        out = {}
+        for name, shape, off, sz in zip(
+            self.names, self.shapes, self.offsets, self.sizes
+        ):
+            out[name] = jax.lax.dynamic_slice(flat, (off,), (sz,)).reshape(shape)
+        return out
+
+    def flatten(self, tree: Dict[str, jax.Array]) -> jax.Array:
+        """Concatenate named parameters back into the flat vector."""
+        return jnp.concatenate(
+            [tree[n].reshape(-1).astype(jnp.float32) for n in self.names]
+        )
+
+
+def init_param(key: jax.Array, name: str, shape: Tuple[int, ...]) -> jax.Array:
+    """Initializer dispatch by naming convention.
+
+    ``*_w`` dense/conv weights get fan-in-scaled normals (He), ``*_emb``
+    embeddings get N(0, 0.02), ``*_scale`` LayerNorm scales get ones and
+    everything else (biases, LN offsets) zeros.
+    """
+    if name.endswith("_scale"):
+        return jnp.ones(shape, jnp.float32)
+    if name.endswith("_emb"):
+        return 0.02 * jax.random.normal(key, shape, jnp.float32)
+    if name.endswith("_w"):
+        fan_in = int(math.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+        std = math.sqrt(2.0 / max(1, fan_in))
+        return std * jax.random.normal(key, shape, jnp.float32)
+    return jnp.zeros(shape, jnp.float32)
+
+
+def init_flat(spec: ParamSpec, seed: jax.Array) -> jax.Array:
+    """Initialize the flat parameter vector from a scalar uint32 seed."""
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for i, (name, shape) in enumerate(zip(spec.names, spec.shapes)):
+        parts.append(init_param(jax.random.fold_in(key, i), name, shape).reshape(-1))
+    return jnp.concatenate(parts)
+
+
+def dense_fn(impl: str) -> Callable:
+    """Return ``dense(x, w, b)`` for the chosen matmul implementation."""
+    if impl == "pallas":
+        return pallas_mm.dense
+
+    def jnp_dense(x, w, b=None):
+        y = kref.matmul_ref(x.reshape((-1, x.shape[-1])), w)
+        if b is not None:
+            y = y + b
+        return y.reshape(x.shape[:-1] + (w.shape[1],))
+
+    return jnp_dense
+
+
+def softmax_xent(logits: jax.Array, y: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Mean cross-entropy + correct-prediction count over flattened labels.
+
+    ``logits``: f32[..., C]; ``y``: i32[...]. Returns (mean_loss f32[],
+    correct f32[]).
+    """
+    c = logits.shape[-1]
+    logits2 = logits.reshape((-1, c))
+    y2 = y.reshape((-1,))
+    logz = jax.nn.logsumexp(logits2, axis=-1)
+    ll = jnp.take_along_axis(logits2, y2[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - ll)
+    correct = jnp.sum((jnp.argmax(logits2, axis=-1) == y2).astype(jnp.float32))
+    return loss, correct
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    """Everything the AOT exporter needs to emit one model's artifacts."""
+
+    name: str
+    spec: ParamSpec
+    x_shape: Tuple[int, ...]  # per-example input shape (no batch dim)
+    x_dtype: str  # "f32" | "i32"
+    y_shape: Tuple[int, ...]  # per-example label shape
+    train_batch: int
+    eval_batch: int
+    default_impl: str
+    # apply(params_dict, x, impl) -> logits
+    apply: Callable[[Dict[str, jax.Array], jax.Array, str], jax.Array]
+    # samples counted per batch element (e.g. seq_len for LMs)
+    samples_per_example: int = 1
+
+    @property
+    def n_params(self) -> int:
+        return self.spec.total
+
+    def x_jnp_dtype(self):
+        return jnp.float32 if self.x_dtype == "f32" else jnp.int32
+
+
+REGISTRY: Dict[str, ModelDef] = {}
+
+
+def register(mdef: ModelDef) -> ModelDef:
+    REGISTRY[mdef.name] = mdef
+    return mdef
+
+
+def get_model(name: str) -> ModelDef:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown model {name!r}; have {sorted(REGISTRY)}") from None

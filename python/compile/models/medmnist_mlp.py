@@ -1,0 +1,52 @@
+"""MedMNIST workload (paper §5.2): 28×28 grayscale medical-image
+classification, simulating the privacy-sensitive healthcare setting.
+
+A 784→256→128→10 MLP; every layer is a Pallas-matmul dense layer, so
+this model exercises the L1 kernel end-to-end including the backward
+pass (custom VJP → two more Pallas matmuls per layer).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+from .common import ModelDef, ParamSpec, dense_fn, register
+
+IN_DIM = 28 * 28
+N_CLASSES = 10
+
+SPEC = ParamSpec.from_pairs(
+    [
+        ("fc1_w", (IN_DIM, 256)),
+        ("fc1_b", (256,)),
+        ("fc2_w", (256, 128)),
+        ("fc2_b", (128,)),
+        ("fc3_w", (128, N_CLASSES)),
+        ("fc3_b", (N_CLASSES,)),
+    ]
+)
+
+
+def apply(params: Dict[str, jax.Array], x: jax.Array, impl: str) -> jax.Array:
+    """Forward pass: x f32[B,784] → logits f32[B,10]."""
+    dense = dense_fn(impl)
+    h = jax.nn.relu(dense(x, params["fc1_w"], params["fc1_b"]))
+    h = jax.nn.relu(dense(h, params["fc2_w"], params["fc2_b"]))
+    return dense(h, params["fc3_w"], params["fc3_b"])
+
+
+MODEL = register(
+    ModelDef(
+        name="medmnist_mlp",
+        spec=SPEC,
+        x_shape=(IN_DIM,),
+        x_dtype="f32",
+        y_shape=(),
+        train_batch=32,
+        eval_batch=64,
+        default_impl="pallas",
+        apply=apply,
+    )
+)

@@ -1,0 +1,56 @@
+"""AOT pipeline tests: HLO text is parseable-looking, manifest is
+consistent with the registry, and exported entry computations carry the
+expected parameter/result shapes.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile.models import REGISTRY
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_small_model_produces_hlo_text():
+    text = aot.lower_step(REGISTRY["medmnist_mlp"], "eval", "jnp")
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # flat param vector appears as an f32[P] operand
+    assert f"f32[{REGISTRY['medmnist_mlp'].n_params}]" in text
+
+
+def test_lower_train_step_has_tuple_result():
+    text = aot.lower_step(REGISTRY["medmnist_mlp"], "train", "jnp")
+    # return_tuple=True → root is a tuple of (params', loss, correct)
+    p = REGISTRY["medmnist_mlp"].n_params
+    assert f"(f32[{p}]" in text
+
+
+def test_model_manifest_fields():
+    m = aot.model_manifest(REGISTRY["charlm"], "pallas")
+    assert m["n_params"] == REGISTRY["charlm"].n_params
+    assert m["x_dtype"] == "i32"
+    assert m["samples_per_example"] == 32
+    assert len(m["param_names"]) == len(m["param_shapes"])
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_artifacts_match_registry():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == aot.MANIFEST_VERSION
+    for name, entry in manifest["models"].items():
+        assert name in REGISTRY
+        assert entry["n_params"] == REGISTRY[name].n_params
+        for kind in ("init", "train", "eval"):
+            path = os.path.join(ART, f"{name}_{kind}.hlo.txt")
+            assert os.path.exists(path), path
+            with open(path) as fh:
+                head = fh.read(4096)
+            assert "HloModule" in head

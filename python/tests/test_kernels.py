@@ -1,0 +1,198 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes and value ranges; every property is the core
+correctness signal for what the Rust runtime will eventually execute.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import compress as C
+from compile.kernels import matmul as M
+from compile.kernels import ref as R
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rng_array(seed, shape, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_small(m, k, n, seed):
+    x = rng_array(seed, (m, k))
+    w = rng_array(seed + 1, (k, n))
+    np.testing.assert_allclose(
+        M.matmul(x, w), R.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(128, 128, 128), (256, 384, 128), (32, 2048, 128), (200, 130, 250), (1, 1, 1)],
+)
+def test_matmul_matches_ref_tiled(m, k, n):
+    x = rng_array(0, (m, k))
+    w = rng_array(1, (k, n))
+    np.testing.assert_allclose(
+        M.matmul(x, w), R.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_zero_and_identity():
+    x = rng_array(2, (16, 16))
+    eye = jnp.eye(16)
+    np.testing.assert_allclose(M.matmul(x, eye), x, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        M.matmul(x, jnp.zeros((16, 16))), jnp.zeros((16, 16)), atol=0
+    )
+
+
+def test_matmul_custom_vjp_matches_jnp_grad():
+    x = rng_array(3, (24, 40))
+    w = rng_array(4, (40, 12))
+
+    def f_pallas(x, w):
+        return jnp.sum(jnp.sin(M.matmul_ad(x, w)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.sin(R.matmul_ref(x, w)))
+
+    gx_p, gw_p = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx_p, gx_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw_p, gw_r, rtol=1e-4, atol=1e-4)
+
+
+def test_dense_broadcasts_leading_axes():
+    x = rng_array(5, (4, 7, 32))
+    w = rng_array(6, (32, 9))
+    b = rng_array(7, (9,))
+    out = M.dense(x, w, b)
+    assert out.shape == (4, 7, 9)
+    ref = R.matmul_ref(x.reshape(-1, 32), w).reshape(4, 7, 9) + b
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ quantization
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 5000),
+    scale=st.floats(1e-3, 1e3),
+    bits=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_matches_ref(n, scale, bits, seed):
+    g = rng_array(seed, (n,), scale)
+    q, s = C.quantize(g, bits)
+    qr, sr = R.quantize_ref(g, bits)
+    np.testing.assert_allclose(s, sr, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 5000), bits=st.sampled_from([8, 16]), seed=st.integers(0, 2**31 - 1))
+def test_quantize_roundtrip_error_bound(n, bits, seed):
+    """|dequant(quant(g)) - g| <= scale/2 + f32 rounding slack."""
+    g = rng_array(seed, (n,))
+    q, s = C.quantize(g, bits)
+    back = C.dequantize(q, s)
+    maxabs = float(jnp.max(jnp.abs(g)))
+    tol = float(s) / 2 + maxabs * 1e-5 + 1e-7
+    assert float(jnp.max(jnp.abs(back - g))) <= tol
+
+
+def test_quantize_all_zero_vector():
+    g = jnp.zeros(100)
+    q, s = C.quantize(g, 8)
+    assert float(s) == 1.0
+    np.testing.assert_array_equal(np.asarray(q), np.zeros(100, np.int8))
+    np.testing.assert_array_equal(np.asarray(C.dequantize(q, s)), np.zeros(100))
+
+
+def test_quantize_extremes_hit_qmax():
+    g = jnp.asarray([1.0, -1.0, 0.5], jnp.float32)
+    q, s = C.quantize(g, 8)
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) == 127
+
+
+# ----------------------------------------------------------- sparsification
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 4000), frac=st.floats(0.01, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_sparsify_matches_ref(n, frac, seed):
+    g = rng_array(seed, (n,))
+    k = max(1, int(n * frac))
+    np.testing.assert_allclose(C.sparsify(g, k), R.sparsify_ref(g, k), atol=0)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(10, 4000), seed=st.integers(0, 2**31 - 1))
+def test_sparsify_keeps_exactly_k_distinct_magnitudes(n, seed):
+    g = rng_array(seed, (n,))  # continuous → ties have prob 0
+    k = n // 3 + 1
+    out = np.asarray(C.sparsify(g, k))
+    assert int((out != 0).sum()) == k
+    # survivors are exactly the k largest magnitudes
+    idx = np.argsort(-np.abs(np.asarray(g)))[:k]
+    mask = np.zeros(n, bool)
+    mask[idx] = True
+    np.testing.assert_allclose(out[mask], np.asarray(g)[mask], atol=0)
+    assert (out[~mask] == 0).all()
+
+
+def test_sparsify_k_ge_n_is_identity():
+    g = rng_array(11, (37,))
+    np.testing.assert_allclose(C.sparsify(g, 37), g, atol=0)
+    np.testing.assert_allclose(C.sparsify(g, 100), g, atol=0)
+
+
+# --------------------------------------------------------------- fedprox
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 4000),
+    lr=st.floats(1e-4, 1.0),
+    mu=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fedprox_step_matches_ref(n, lr, mu, seed):
+    w = rng_array(seed, (n,))
+    g = rng_array(seed + 1, (n,))
+    wg = rng_array(seed + 2, (n,))
+    out = C.fedprox_step(w, g, wg, jnp.float32(lr), jnp.float32(mu))
+    ref = R.fedprox_step_ref(w, g, wg, jnp.float32(lr), jnp.float32(mu))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+
+
+def test_fedprox_mu_zero_is_plain_sgd():
+    w = rng_array(20, (512,))
+    g = rng_array(21, (512,))
+    out = C.fedprox_step(w, g, jnp.zeros(512), jnp.float32(0.1), jnp.float32(0.0))
+    np.testing.assert_allclose(out, w - 0.1 * g, rtol=1e-6, atol=1e-7)
+
+
+def test_fedprox_pulls_toward_global():
+    """With zero gradient, the prox term moves w toward w_global."""
+    w = jnp.ones(64)
+    wg = jnp.zeros(64)
+    out = C.fedprox_step(w, jnp.zeros(64), wg, jnp.float32(0.5), jnp.float32(1.0))
+    assert float(jnp.max(out)) < 1.0
+    assert float(jnp.min(out)) >= 0.0

@@ -1,0 +1,59 @@
+//! L3 hot path: aggregation of K client updates into the global model.
+//! DESIGN.md §8 target: 60 × 1M-param updates in < 50 ms.
+
+use fedhpc::benchkit::{bench, print_table};
+use fedhpc::config::{Aggregation, WeightScheme};
+use fedhpc::orchestrator::{aggregate, AggInput};
+use fedhpc::util::rng::Rng;
+use std::time::Duration;
+
+fn inputs(k: usize, p: usize, seed: u64) -> (Vec<f32>, Vec<AggInput>) {
+    let mut rng = Rng::new(seed);
+    let global: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+    let inputs = (0..k)
+        .map(|c| AggInput {
+            client: c as u32,
+            delta: (0..p).map(|_| rng.normal() as f32 * 0.01).collect(),
+            n_samples: 100 + (c as u64 * 37) % 400,
+            train_loss: 1.0 + c as f32 * 0.01,
+            update_var: 0.01,
+        })
+        .collect();
+    (global, inputs)
+}
+
+fn main() {
+    let budget = Duration::from_secs(2);
+    let mut stats = Vec::new();
+    for (k, p) in [(20usize, 250_000usize), (60, 250_000), (20, 1_000_000), (60, 1_000_000)] {
+        let (global, ins) = inputs(k, p, 42);
+        stats.push(bench(
+            &format!("fedavg k={k} P={}", p / 1000),
+            budget,
+            || {
+                let out = aggregate(&global, &ins, Aggregation::FedAvg).unwrap();
+                std::hint::black_box(out.new_params.len());
+            },
+        ));
+    }
+    let (global, ins) = inputs(60, 1_000_000, 7);
+    for (name, strat) in [
+        ("weighted:inverse-loss k=60 P=1000", Aggregation::Weighted(WeightScheme::InverseLoss)),
+        (
+            "weighted:inverse-var  k=60 P=1000",
+            Aggregation::Weighted(WeightScheme::InverseVariance),
+        ),
+    ] {
+        stats.push(bench(name, budget, || {
+            let out = aggregate(&global, &ins, strat).unwrap();
+            std::hint::black_box(out.new_params.len());
+        }));
+    }
+    print_table("aggregation hot path (Table 3 / §8 target: 60×1M < 50 ms)", &stats);
+    let target = &stats[3];
+    println!(
+        "\n60 clients × 1M params: {:.1} ms mean ({})",
+        target.mean_ms(),
+        if target.mean_ms() < 50.0 { "MEETS §8 target" } else { "misses §8 target" }
+    );
+}

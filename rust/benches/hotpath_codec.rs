@@ -1,0 +1,46 @@
+//! L3 hot path: compression codecs (paper §4.3). DESIGN.md §8 target:
+//! q8 quantization > 1 GB/s.
+
+use fedhpc::benchkit::{bench, print_table};
+use fedhpc::compress::{compress, decompress, quantize, sparsify_topk, QuantBits};
+use fedhpc::config::CompressionConfig;
+use fedhpc::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let p = 1_000_000usize;
+    let mut rng = Rng::new(0);
+    let update: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+    let budget = Duration::from_secs(2);
+    let mut stats = Vec::new();
+
+    stats.push(bench("quantize q8 1M", budget, || {
+        std::hint::black_box(quantize(&update, QuantBits::B8));
+    }));
+    stats.push(bench("quantize q16 1M", budget, || {
+        std::hint::black_box(quantize(&update, QuantBits::B16));
+    }));
+    stats.push(bench("sparsify top-10% 1M", budget, || {
+        std::hint::black_box(sparsify_topk(&update, p / 10));
+    }));
+    stats.push(bench("sparsify top-25% 1M", budget, || {
+        std::hint::black_box(sparsify_topk(&update, p / 4));
+    }));
+    let paper = CompressionConfig::PAPER;
+    stats.push(bench("pipeline paper(top25+q8) 1M", budget, || {
+        std::hint::black_box(compress(&update, &paper, 1));
+    }));
+    let enc = compress(&update, &paper, 1);
+    stats.push(bench("decompress paper 1M", budget, || {
+        std::hint::black_box(decompress(&enc, p).unwrap());
+    }));
+
+    print_table("codec hot path (Table 4 / §8 target: q8 > 1 GB/s)", &stats);
+    let q8 = &stats[0];
+    let gbps = q8.throughput(4.0 * p as f64) / 1e9;
+    println!(
+        "\nq8 throughput: {:.2} GB/s ({})",
+        gbps,
+        if gbps > 1.0 { "MEETS §8 target" } else { "misses §8 target" }
+    );
+}

@@ -1,0 +1,62 @@
+//! Orchestrator selection + registry benchmarks: adaptive selection
+//! must stay negligible next to round compute even at 1000s of clients
+//! (paper §3.1 scalability objective).
+
+use fedhpc::benchkit::{bench, print_table};
+use fedhpc::config::{SelectionConfig, SelectionPolicy};
+use fedhpc::network::ClientProfile;
+use fedhpc::orchestrator::{select_clients, ClientRegistry};
+use fedhpc::util::rng::Rng;
+use std::time::Duration;
+
+fn registry(n: u32) -> (ClientRegistry, Vec<u32>) {
+    let mut reg = ClientRegistry::new();
+    let mut rng = Rng::new(0);
+    for i in 0..n {
+        reg.register(
+            i,
+            ClientProfile {
+                speed_factor: 0.1 + rng.f64(),
+                mem_gb: 16.0,
+                link_bw: 1e8 + rng.f64() * 1e9,
+                n_samples: 100,
+                bench_step_ms: 5.0 + rng.f64() * 100.0,
+            },
+        );
+        for r in 0..5 {
+            reg.report_success(i, r, 50.0 + rng.f64() * 500.0);
+        }
+    }
+    (reg, (0..n).collect())
+}
+
+fn main() {
+    let budget = Duration::from_secs(2);
+    let mut stats = Vec::new();
+    for n in [60u32, 1_000, 10_000] {
+        let (mut reg, avail) = registry(n);
+        let k = (n / 3) as usize;
+        let cfg = SelectionConfig {
+            policy: SelectionPolicy::Adaptive {
+                explore_frac: 0.2,
+                exclude_factor: 2.5,
+            },
+            clients_per_round: k,
+        };
+        let mut rng = Rng::new(1);
+        let mut round = 0;
+        stats.push(bench(&format!("adaptive n={n} k={k}"), budget, || {
+            round += 1;
+            std::hint::black_box(select_clients(&mut reg, &avail, &cfg, round, &mut rng));
+        }));
+        let cfg_rand = SelectionConfig {
+            policy: SelectionPolicy::Random,
+            clients_per_round: k,
+        };
+        let (mut reg2, avail2) = registry(n);
+        stats.push(bench(&format!("random   n={n} k={k}"), budget, || {
+            std::hint::black_box(select_clients(&mut reg2, &avail2, &cfg_rand, 0, &mut rng));
+        }));
+    }
+    print_table("client selection (paper §4.1; scale target: 10k clients)", &stats);
+}

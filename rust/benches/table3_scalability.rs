@@ -1,0 +1,61 @@
+//! Table 3 reproduction as a bench target: virtual-time scalability of
+//! total training time from 10 to 60 clients over a fixed global
+//! workload, plus timing of the simulator itself.
+
+use fedhpc::benchkit::{bench, print_table};
+use fedhpc::config::presets::paper_testbed;
+use fedhpc::experiments::{run_sim, SimTiming};
+use std::time::Duration;
+
+fn cfg_for(n: usize, rounds: usize) -> fedhpc::config::ExperimentConfig {
+    let total_samples = 61_440;
+    let mut cfg = paper_testbed();
+    let gpu_cloud = n / 6 + usize::from(n % 6 > 3);
+    let cpu_cloud = n / 4;
+    let gpu_hpc = n / 3;
+    let cpu_hpc = n - gpu_cloud - cpu_cloud - gpu_hpc;
+    cfg.cluster.nodes = vec![
+        ("p3.2xlarge".into(), gpu_cloud),
+        ("t3.large".into(), cpu_cloud),
+        ("hpc-rtx6000".into(), gpu_hpc),
+        ("hpc-cpu".into(), cpu_hpc),
+    ];
+    cfg.selection.clients_per_round = (n * 2 / 3).max(1);
+    cfg.data.samples_per_client = total_samples / n;
+    cfg.train.rounds = rounds;
+    cfg.straggler.partial_k = Some((cfg.selection.clients_per_round * 3 / 5).max(1));
+    cfg
+}
+
+fn main() {
+    // the table itself (100 virtual rounds, exactly E2)
+    println!("=== Table 3 (virtual time, 100 rounds) ===");
+    println!("{:>8} {:>14} {:>9}", "clients", "total time", "speedup");
+    let mut base = None;
+    for n in [10usize, 20, 30, 40, 50, 60] {
+        // seed-averaged: the speed lottery makes single sims noisy
+        let mut t = 0.0;
+        for seed in [7u64, 8, 9] {
+            let mut cfg = cfg_for(n, 100);
+            cfg.seed = seed;
+            t += run_sim(&cfg, &SimTiming::default(), false).unwrap().total_time_s / 3.0;
+        }
+        let b = *base.get_or_insert(t);
+        println!("{:>8} {:>12.1} m {:>8.2}x", n, t / 60.0, b / t);
+    }
+    println!("(paper: 100/58/43/33/27/22 min → 1.00/1.72/2.32/3.03/3.70/4.55x)");
+
+    // how fast is the simulator (so sweeps stay cheap)
+    let mut stats = Vec::new();
+    for n in [10usize, 60] {
+        let cfg = cfg_for(n, 10);
+        stats.push(bench(
+            &format!("run_sim {n} clients x 10 rounds"),
+            Duration::from_secs(2),
+            || {
+                std::hint::black_box(run_sim(&cfg, &SimTiming::default(), false).unwrap());
+            },
+        ));
+    }
+    print_table("simulator throughput", &stats);
+}

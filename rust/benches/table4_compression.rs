@@ -1,0 +1,64 @@
+//! Table 4 reproduction as a bench target: per-round communication
+//! volume with vs without compression, on real model-sized updates,
+//! plus wire-encode throughput of the full Update message.
+
+use fedhpc::benchkit::{bench, print_table};
+use fedhpc::compress::{compress, CompressionStats, Encoded};
+use fedhpc::config::CompressionConfig;
+use fedhpc::network::{Msg, UpdateStats};
+use fedhpc::util::{human_bytes, rng::Rng};
+use std::time::Duration;
+
+fn main() {
+    // Paper Table 4 shape: N params such that dense ≈ 45 MB — the
+    // paper's per-round payload — then the compressed counterpart.
+    let p = 45 * 1024 * 1024 / 4;
+    let mut rng = Rng::new(4);
+    let update: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+
+    println!("=== Table 4 (per-client payload) ===");
+    println!("{:>22} {:>14} {:>10}", "codec", "payload", "ratio");
+    for (name, cfg) in [
+        ("no compression", CompressionConfig::NONE),
+        ("paper (top25% + q8)", CompressionConfig::PAPER),
+    ] {
+        let enc = compress(&update, &cfg, 1);
+        let stats = CompressionStats::of(&enc);
+        println!(
+            "{:>22} {:>14} {:>9.0}%",
+            name,
+            human_bytes(stats.wire_bytes),
+            stats.ratio() * 100.0
+        );
+    }
+    println!("(paper: ~45 MB → ~15 MB, ≈65% reduction)");
+
+    let budget = Duration::from_secs(2);
+    let enc_none = Encoded::Dense(update.clone());
+    let enc_paper = compress(&update, &CompressionConfig::PAPER, 1);
+    let stats_of = |delta: Encoded| Msg::Update {
+        round: 1,
+        client: 0,
+        delta,
+        stats: UpdateStats {
+            n_samples: 512,
+            train_loss: 1.0,
+            steps: 80,
+            compute_ms: 100.0,
+            update_var: 0.01,
+        },
+    };
+    let m_none = stats_of(enc_none);
+    let m_paper = stats_of(enc_paper);
+    let mut stats = Vec::new();
+    stats.push(bench("wire-encode dense 45MB", budget, || {
+        std::hint::black_box(m_none.encode().len());
+    }));
+    stats.push(bench("wire-encode paper-compressed", budget, || {
+        std::hint::black_box(m_paper.encode().len());
+    }));
+    stats.push(bench("compress paper 45MB", budget, || {
+        std::hint::black_box(compress(&update, &CompressionConfig::PAPER, 1));
+    }));
+    print_table("Table 4 wire path", &stats);
+}

@@ -1,0 +1,95 @@
+//! Transport layer benchmarks: message codec round-trip, inproc
+//! hub round-trip, and framed-TCP round-trip with model-sized payloads
+//! (the "gRPC vs MPI" comparison from the paper's communication layer).
+
+use fedhpc::benchkit::{bench, print_table};
+use fedhpc::compress::Encoded;
+use fedhpc::network::inproc::InprocHub;
+use fedhpc::network::tcp::{TcpClient, TcpServer};
+use fedhpc::network::{
+    ClientProfile, ClientTransport, LinkShaper, Msg, ServerTransport, TrafficLog, UpdateStats,
+};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn update_msg(p: usize) -> Msg {
+    Msg::Update {
+        round: 1,
+        client: 0,
+        delta: Encoded::Dense(vec![0.5f32; p]),
+        stats: UpdateStats {
+            n_samples: 100,
+            train_loss: 1.0,
+            steps: 10,
+            compute_ms: 5.0,
+            update_var: 0.01,
+        },
+    }
+}
+
+fn main() {
+    let budget = Duration::from_secs(2);
+    let mut stats = Vec::new();
+
+    // codec
+    let msg_small = update_msg(1_000);
+    let msg_big = update_msg(250_000);
+    let enc_big = msg_big.encode();
+    stats.push(bench("Msg::encode 250k-param update", budget, || {
+        std::hint::black_box(msg_big.encode().len());
+    }));
+    stats.push(bench("Msg::decode 250k-param update", budget, || {
+        std::hint::black_box(Msg::decode(&enc_big).unwrap());
+    }));
+
+    // inproc (MPI-like) round trip
+    let traffic = Arc::new(TrafficLog::new());
+    let hub = InprocHub::new(traffic.clone());
+    let client = hub.add_client(0, LinkShaper::unshaped());
+    let server = hub.server();
+    stats.push(bench("inproc roundtrip 1k-param", budget, || {
+        client.send(&msg_small).unwrap();
+        server.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+    }));
+    stats.push(bench("inproc roundtrip 250k-param", budget, || {
+        client.send(&msg_big).unwrap();
+        server.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+    }));
+
+    // tcp (gRPC-like) round trip
+    let tcp_server = TcpServer::bind("127.0.0.1:0", traffic.clone()).unwrap();
+    let addr = tcp_server.local_addr.to_string();
+    let tcp_client = TcpClient::connect(
+        &addr,
+        &Msg::Register {
+            client: 0,
+            profile: ClientProfile {
+                speed_factor: 1.0,
+                mem_gb: 1.0,
+                link_bw: 1e9,
+                n_samples: 1,
+                bench_step_ms: 1.0,
+            },
+        },
+        LinkShaper::unshaped(),
+        traffic,
+    )
+    .unwrap();
+    tcp_server.recv_timeout(Duration::from_secs(2)).unwrap(); // drain Register
+    stats.push(bench("tcp roundtrip 1k-param", budget, || {
+        tcp_client.send(&msg_small).unwrap();
+        tcp_server
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap()
+            .unwrap();
+    }));
+    stats.push(bench("tcp roundtrip 250k-param", budget, || {
+        tcp_client.send(&msg_big).unwrap();
+        tcp_server
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap()
+            .unwrap();
+    }));
+
+    print_table("transport layer (inproc='MPI' vs tcp='gRPC')", &stats);
+}

@@ -1,0 +1,135 @@
+//! Minimal benchmarking harness (criterion is not vendored on this
+//! image; see .cargo/config.toml). Provides warmup + timed iterations,
+//! robust statistics and aligned table output. Used by every target in
+//! `rust/benches/` (all declared `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Result statistics for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// Throughput helper: elements processed per second at the mean.
+    pub fn throughput(&self, elems_per_iter: f64) -> f64 {
+        elems_per_iter / (self.mean_ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: warmup for ~10% of the budget, then sample until
+/// `budget` elapses or `max_iters` reached. Returns robust stats.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchStats {
+    // warmup
+    let warm_until = Instant::now() + budget.mul_f64(0.1);
+    while Instant::now() < warm_until {
+        f();
+    }
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let end = Instant::now() + budget;
+    let max_iters = 100_000;
+    while Instant::now() < end && samples_ns.len() < max_iters {
+        let t0 = Instant::now();
+        f();
+        samples_ns.push(t0.elapsed().as_nanos() as f64);
+    }
+    if samples_ns.is_empty() {
+        // budget too small for even one run: take one sample anyway
+        let t0 = Instant::now();
+        f();
+        samples_ns.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples_ns.sort_by(f64::total_cmp);
+    let n = samples_ns.len();
+    let mean = samples_ns.iter().sum::<f64>() / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        median_ns: samples_ns[n / 2],
+        p95_ns: samples_ns[(n as f64 * 0.95) as usize % n.max(1)],
+        min_ns: samples_ns[0],
+    }
+}
+
+/// Print a group of results as an aligned table.
+pub fn print_table(title: &str, stats: &[BenchStats]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>10} {:>12} {:>12} {:>12}",
+        "benchmark", "iters", "mean", "median", "p95"
+    );
+    for s in stats {
+        println!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}",
+            s.name,
+            s.iters,
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.median_ns),
+            fmt_ns(s.p95_ns)
+        );
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut counter = 0u64;
+        let s = bench("noop", Duration::from_millis(30), || {
+            counter = counter.wrapping_add(1);
+        });
+        assert!(s.iters > 10, "iters {}", s.iters);
+        assert!(s.mean_ns >= 0.0);
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.median_ns <= s.p95_ns * 1.001);
+    }
+
+    #[test]
+    fn stats_helpers() {
+        let s = BenchStats {
+            name: "x".into(),
+            iters: 10,
+            mean_ns: 2e6,
+            median_ns: 2e6,
+            p95_ns: 3e6,
+            min_ns: 1e6,
+        };
+        assert_eq!(s.mean_ms(), 2.0);
+        // 1000 elements in 2 ms → 500k/s
+        assert!((s.throughput(1000.0) - 500_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(1.2e9), "1.20 s");
+    }
+}

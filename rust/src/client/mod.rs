@@ -1,0 +1,16 @@
+//! Federated client (paper §3.2 "Federated Clients (Workers)").
+//!
+//! * [`trainer`] — local training: epochs of minibatch FedProx-SGD via
+//!   the model runtime, delta computation, update statistics.
+//! * [`profile`] — resource profiling benchmark (paper §4.1).
+//! * [`worker`] — the event loop: register → (RoundStart → train →
+//!   Update)* → Shutdown, with heterogeneity emulation and fault
+//!   injection applied where a real deployment would experience them.
+
+mod profile;
+mod trainer;
+mod worker;
+
+pub use profile::profile_runtime;
+pub use trainer::{train_local, LocalOutcome};
+pub use worker::{Worker, WorkerOptions};

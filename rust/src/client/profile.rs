@@ -1,0 +1,110 @@
+//! Resource profiling (paper §4.1): clients benchmark themselves and
+//! report capacity in their registration profile. Here the benchmark
+//! measures real `train_step` latency on synthetic data, then folds in
+//! the node's SKU attributes (the part a real deployment reads from
+//! `/proc` and NVML).
+
+use crate::cluster::Node;
+use crate::data::{Batch, Shard};
+use crate::network::ClientProfile;
+use crate::runtime::ModelRuntime;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Benchmark `runtime` and assemble the registration profile.
+pub fn profile_runtime(
+    runtime: &dyn ModelRuntime,
+    node: &Node,
+    shard: &Shard,
+    bench_steps: usize,
+) -> Result<ClientProfile> {
+    let bench_step_ms = if bench_steps > 0 {
+        let params = runtime.init(0xBEAC)?;
+        let b = runtime.train_batch();
+        let mut rng = Rng::new(0xBEAC);
+        // synthetic batch with the shard's shape
+        let mut x = Vec::with_capacity(b * shard.x_len);
+        let mut y = Vec::with_capacity(b * shard.y_len);
+        for _ in 0..b {
+            for _ in 0..shard.x_len {
+                x.push(rng.normal() as f32);
+            }
+            for _ in 0..shard.y_len {
+                y.push(rng.below(4) as i32);
+            }
+        }
+        let batch = Batch { x, y, n: b };
+        let t0 = std::time::Instant::now();
+        let mut p = params;
+        for _ in 0..bench_steps {
+            p = runtime.train_step(&p, &p.clone(), &batch, 0.01, 0.0)?.params;
+        }
+        t0.elapsed().as_secs_f64() * 1e3 / bench_steps as f64
+    } else {
+        1.0
+    };
+    let (bw, _) = node.link().profile();
+    Ok(ClientProfile {
+        speed_factor: node.speed_factor,
+        mem_gb: node.sku.mem_gb,
+        link_bw: bw,
+        n_samples: shard.n as u64,
+        bench_step_ms: bench_step_ms / node.speed_factor.max(1e-6),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::ClusterConfig;
+    use crate::runtime::MockRuntime;
+
+    fn shard(n: usize, dim: usize) -> Shard {
+        Shard {
+            x: vec![0.5; n * dim],
+            y: vec![0; n],
+            n,
+            x_len: dim,
+            y_len: 1,
+        }
+    }
+
+    #[test]
+    fn profile_reflects_node_attributes() {
+        let cluster = Cluster::build(
+            &ClusterConfig {
+                nodes: vec![("hpc-rtx6000".into(), 1), ("t3.large".into(), 1)],
+                cloud_backend: "inproc".into(),
+                hpc_backend: "inproc".into(),
+            },
+            0,
+        )
+        .unwrap();
+        let rt = MockRuntime::new(16, 4);
+        let s = shard(50, 16);
+        let fast = profile_runtime(&rt, &cluster.nodes[0], &s, 2).unwrap();
+        let slow = profile_runtime(&rt, &cluster.nodes[1], &s, 2).unwrap();
+        assert_eq!(fast.n_samples, 50);
+        // t3.large (speed ~0.02) reports a much slower effective step
+        assert!(slow.bench_step_ms > 5.0 * fast.bench_step_ms);
+        assert!(fast.link_bw > slow.link_bw);
+        assert!(fast.mem_gb > 0.0);
+    }
+
+    #[test]
+    fn zero_bench_steps_is_allowed() {
+        let cluster = Cluster::build(
+            &ClusterConfig {
+                nodes: vec![("hpc-cpu".into(), 1)],
+                cloud_backend: "inproc".into(),
+                hpc_backend: "inproc".into(),
+            },
+            1,
+        )
+        .unwrap();
+        let rt = MockRuntime::new(8, 2);
+        let p = profile_runtime(&rt, &cluster.nodes[0], &shard(10, 8), 0).unwrap();
+        assert!(p.bench_step_ms > 0.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Local training (Algorithm 1 lines 7–8): `local_epochs` epochs of
+//! minibatch steps starting from the global model, then
+//! `Δ_c = w_local − M_r` plus the statistics weighted aggregation needs.
+
+use crate::data::{BatchIter, Shard};
+use crate::runtime::ModelRuntime;
+use anyhow::Result;
+
+/// Result of one client's local round.
+#[derive(Debug, Clone)]
+pub struct LocalOutcome {
+    /// Δ_c = trained params − global params.
+    pub delta: Vec<f32>,
+    pub train_loss: f32,
+    pub steps: u32,
+    /// Variance of delta entries (inverse-variance weighting signal).
+    pub update_var: f32,
+    pub n_samples: u64,
+}
+
+/// Run local training. `stop_after_frac` < 1.0 simulates a mid-round
+/// preemption: training truncates after that fraction of steps and the
+/// caller decides whether anything is reported.
+pub fn train_local(
+    runtime: &dyn ModelRuntime,
+    shard: &Shard,
+    global: &[f32],
+    local_epochs: usize,
+    lr: f32,
+    mu: f32,
+    seed: u64,
+    stop_after_frac: f64,
+) -> Result<LocalOutcome> {
+    let mut params = global.to_vec();
+    let batch_size = runtime.train_batch();
+    let mut iter = BatchIter::new(shard, batch_size, seed);
+    let steps_per_epoch = iter.batches_per_epoch();
+    let total_steps = (steps_per_epoch * local_epochs).max(1);
+    let run_steps = ((total_steps as f64 * stop_after_frac).floor() as usize).min(total_steps);
+
+    let mut loss_acc = 0f64;
+    let mut done = 0u32;
+    for _ in 0..run_steps {
+        let batch = iter.next_batch();
+        let out = runtime.train_step(&params, global, &batch, lr, mu)?;
+        params = out.params;
+        loss_acc += out.loss as f64;
+        done += 1;
+    }
+
+    let mut delta = params;
+    for (d, &g) in delta.iter_mut().zip(global) {
+        *d -= g;
+    }
+    // variance of delta entries
+    let n = delta.len().max(1) as f64;
+    let mean: f64 = delta.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var: f64 = delta
+        .iter()
+        .map(|&x| (x as f64 - mean) * (x as f64 - mean))
+        .sum::<f64>()
+        / n;
+
+    Ok(LocalOutcome {
+        delta,
+        train_loss: if done > 0 {
+            (loss_acc / done as f64) as f32
+        } else {
+            f32::NAN
+        },
+        steps: done,
+        update_var: var as f32,
+        n_samples: shard.n as u64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockRuntime;
+    use crate::util::rng::Rng;
+
+    fn toy_shard(rt: &MockRuntime, n: usize, seed: u64) -> Shard {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::with_capacity(n * rt.dim);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let cls = rng.below(rt.classes);
+            for j in 0..rt.dim {
+                let base = if j % rt.classes == cls { 1.5 } else { 0.0 };
+                x.push(base + 0.3 * rng.normal() as f32);
+            }
+            y.push(cls as i32);
+        }
+        Shard {
+            x,
+            y,
+            n,
+            x_len: rt.dim,
+            y_len: 1,
+        }
+    }
+
+    #[test]
+    fn trains_and_returns_nonzero_delta() {
+        let rt = MockRuntime::new(20, 4);
+        let global = rt.init(0).unwrap();
+        let shard = toy_shard(&rt, 48, 1);
+        let out = train_local(&rt, &shard, &global, 2, 0.1, 0.0, 7, 1.0).unwrap();
+        assert_eq!(out.delta.len(), global.len());
+        assert_eq!(out.n_samples, 48);
+        let steps_per_epoch = 48usize.div_ceil(rt.train_batch());
+        assert_eq!(out.steps as usize, 2 * steps_per_epoch);
+        let norm: f64 = out.delta.iter().map(|&d| (d * d) as f64).sum();
+        assert!(norm > 0.0, "delta is zero — no training happened");
+        assert!(out.train_loss.is_finite());
+        assert!(out.update_var >= 0.0);
+    }
+
+    #[test]
+    fn preemption_truncates_steps() {
+        let rt = MockRuntime::new(20, 4);
+        let global = rt.init(0).unwrap();
+        let shard = toy_shard(&rt, 64, 2);
+        let full = train_local(&rt, &shard, &global, 2, 0.1, 0.0, 7, 1.0).unwrap();
+        let half = train_local(&rt, &shard, &global, 2, 0.1, 0.0, 7, 0.5).unwrap();
+        assert!(half.steps < full.steps);
+        assert!(half.steps > 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let rt = MockRuntime::new(10, 3);
+        let global = rt.init(1).unwrap();
+        let shard = toy_shard(&rt, 32, 3);
+        let a = train_local(&rt, &shard, &global, 1, 0.05, 0.0, 9, 1.0).unwrap();
+        let b = train_local(&rt, &shard, &global, 1, 0.05, 0.0, 9, 1.0).unwrap();
+        assert_eq!(a.delta, b.delta);
+        let c = train_local(&rt, &shard, &global, 1, 0.05, 0.0, 10, 1.0).unwrap();
+        assert_ne!(a.delta, c.delta);
+    }
+
+    #[test]
+    fn fedprox_shrinks_delta() {
+        let rt = MockRuntime::new(20, 4);
+        let global = rt.init(0).unwrap();
+        let shard = toy_shard(&rt, 48, 4);
+        let free = train_local(&rt, &shard, &global, 3, 0.1, 0.0, 5, 1.0).unwrap();
+        let prox = train_local(&rt, &shard, &global, 3, 0.1, 2.0, 5, 1.0).unwrap();
+        let norm = |v: &[f32]| v.iter().map(|&x| (x * x) as f64).sum::<f64>().sqrt();
+        assert!(
+            norm(&prox.delta) < norm(&free.delta),
+            "prox {} !< free {}",
+            norm(&prox.delta),
+            norm(&free.delta)
+        );
+    }
+}

@@ -1,0 +1,338 @@
+//! Worker event loop: one federated client.
+//!
+//! Lifecycle: profile → Register → loop { RoundStart → (fault check) →
+//! local training → compress → Update } until Shutdown. Heterogeneity
+//! emulation: after real compute, the worker sleeps the *extra* time
+//! its simulated SKU would have needed (capped, so CPU-class nodes
+//! don't stall real runs for minutes); fault injection applies
+//! dropouts / preemptions / straggles exactly where a deployment would
+//! see them.
+
+use super::profile::profile_runtime;
+use super::trainer::train_local;
+use crate::cluster::Node;
+use crate::compress::compress;
+use crate::data::Shard;
+use crate::faults::{FaultAction, FaultInjector};
+use crate::network::{ClientTransport, Msg, UpdateStats};
+use crate::runtime::ModelRuntime;
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+/// Worker tunables.
+#[derive(Debug, Clone)]
+pub struct WorkerOptions {
+    /// Emulate SKU speed by sleeping (speed_factor < 1 ⇒ extra wait).
+    pub emulate_speed: bool,
+    /// Cap on emulated slowdown factor (keeps real runs bounded).
+    pub max_slowdown: f64,
+    /// Benchmark steps for the registration profile.
+    pub bench_steps: usize,
+    pub seed: u64,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions {
+            emulate_speed: true,
+            max_slowdown: 4.0,
+            bench_steps: 0,
+            seed: 0,
+        }
+    }
+}
+
+/// A federated worker bound to one node, one shard, one runtime.
+pub struct Worker<T: ClientTransport> {
+    transport: T,
+    runtime: Box<dyn ModelRuntime>,
+    node: Node,
+    shard: Shard,
+    injector: FaultInjector,
+    opts: WorkerOptions,
+}
+
+impl<T: ClientTransport> Worker<T> {
+    pub fn new(
+        transport: T,
+        runtime: Box<dyn ModelRuntime>,
+        node: Node,
+        shard: Shard,
+        injector: FaultInjector,
+        opts: WorkerOptions,
+    ) -> Self {
+        Worker {
+            transport,
+            runtime,
+            node,
+            shard,
+            injector,
+            opts,
+        }
+    }
+
+    /// Register with the orchestrator (sends the profiling benchmark).
+    pub fn register(&self) -> Result<()> {
+        let profile = profile_runtime(
+            self.runtime.as_ref(),
+            &self.node,
+            &self.shard,
+            self.opts.bench_steps,
+        )?;
+        self.transport.send(&Msg::Register {
+            client: self.transport.id(),
+            profile,
+        })
+    }
+
+    /// Main loop; returns the number of rounds participated in.
+    pub fn run(&self) -> Result<u64> {
+        self.register()?;
+        let mut rounds = 0u64;
+        loop {
+            let Some(msg) = self
+                .transport
+                .recv_timeout(Duration::from_millis(250))?
+            else {
+                continue;
+            };
+            match msg {
+                Msg::RoundStart {
+                    round,
+                    deadline_ms: _,
+                    lr,
+                    mu,
+                    local_epochs,
+                    params,
+                    mask_seed,
+                    compression,
+                    ..
+                } => {
+                    let id = self.transport.id();
+                    let is_spot = self.node.sku.preempt_per_hour > 0.0;
+                    let action = self.injector.action(round, id, is_spot);
+                    if action == FaultAction::Dropout {
+                        log::debug!("worker {id}: injected dropout in round {round}");
+                        continue;
+                    }
+                    let global = crate::compress::decompress(&params, self.runtime.n_params())?;
+                    let stop_frac = match action {
+                        FaultAction::Preempt { progress } => progress,
+                        _ => 1.0,
+                    };
+                    let t0 = Instant::now();
+                    let outcome = train_local(
+                        self.runtime.as_ref(),
+                        &self.shard,
+                        &global,
+                        local_epochs as usize,
+                        lr,
+                        mu,
+                        self.opts.seed ^ ((round as u64) << 20 | id as u64),
+                        stop_frac,
+                    )?;
+                    let compute = t0.elapsed();
+                    self.emulate_heterogeneity(compute, &action);
+                    if let FaultAction::Preempt { .. } = action {
+                        log::debug!("worker {id}: preempted in round {round}");
+                        continue; // compute wasted, nothing reported
+                    }
+                    let delta = compress(&outcome.delta, &compression, mask_seed);
+                    self.transport.send(&Msg::Update {
+                        round,
+                        client: id,
+                        delta,
+                        stats: UpdateStats {
+                            n_samples: outcome.n_samples,
+                            train_loss: outcome.train_loss,
+                            steps: outcome.steps,
+                            compute_ms: compute.as_secs_f64() * 1e3,
+                            update_var: outcome.update_var,
+                        },
+                    })?;
+                    rounds += 1;
+                }
+                Msg::RoundEnd { .. } | Msg::RegisterAck { .. } | Msg::Abort { .. } => {}
+                Msg::Shutdown => return Ok(rounds),
+                other => log::debug!("worker: unexpected {}", other.name()),
+            }
+        }
+    }
+
+    /// Sleep out the difference between this node's simulated speed and
+    /// real compute speed, plus any injected straggle.
+    fn emulate_heterogeneity(&self, compute: Duration, action: &FaultAction) {
+        let mut factor = 1.0f64;
+        if self.opts.emulate_speed {
+            factor *= (1.0 / self.node.speed_factor.max(1e-6)).clamp(1.0, self.opts.max_slowdown);
+        }
+        if let FaultAction::Straggle { factor: f } = action {
+            factor *= f;
+        }
+        if factor > 1.0 {
+            let extra = compute.mul_f64(factor - 1.0);
+            // bounded so tests never hang on absurd configs
+            std::thread::sleep(extra.min(Duration::from_secs(30)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::{ClusterConfig, CompressionConfig};
+    use crate::network::inproc::InprocHub;
+    use crate::network::{LinkShaper, ServerTransport, TrafficLog};
+    use crate::runtime::MockRuntime;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn toy_shard(dim: usize, classes: usize, n: usize, seed: u64) -> Shard {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let cls = rng.below(classes);
+            for j in 0..dim {
+                x.push(if j % classes == cls { 1.5 } else { 0.0 });
+            }
+            y.push(cls as i32);
+        }
+        Shard {
+            x,
+            y,
+            n,
+            x_len: dim,
+            y_len: 1,
+        }
+    }
+
+    fn one_node() -> Node {
+        Cluster::build(
+            &ClusterConfig {
+                nodes: vec![("hpc-rtx6000".into(), 1)],
+                cloud_backend: "inproc".into(),
+                hpc_backend: "inproc".into(),
+            },
+            0,
+        )
+        .unwrap()
+        .nodes[0]
+            .clone()
+    }
+
+    #[test]
+    fn worker_registers_trains_and_shuts_down() {
+        let traffic = Arc::new(TrafficLog::new());
+        let hub = InprocHub::new(traffic);
+        let endpoint = hub.add_client(0, LinkShaper::unshaped());
+        let server = hub.server();
+        let rt = MockRuntime::new(12, 3);
+        let n_params = rt.n_params();
+        let global = rt.init(0).unwrap();
+        let worker = Worker::new(
+            endpoint,
+            Box::new(rt),
+            one_node(),
+            toy_shard(12, 3, 32, 1),
+            FaultInjector::disabled(),
+            WorkerOptions {
+                emulate_speed: false,
+                ..Default::default()
+            },
+        );
+        let handle = std::thread::spawn(move || worker.run().unwrap());
+
+        // orchestrator side, hand-rolled for the test
+        let (from, msg) = server
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap()
+            .unwrap();
+        assert_eq!(from, 0);
+        assert!(matches!(msg, Msg::Register { .. }));
+        server
+            .send_to(
+                0,
+                &Msg::RoundStart {
+                    round: 0,
+                    model_version: 0,
+                    deadline_ms: 10_000,
+                    lr: 0.1,
+                    mu: 0.0,
+                    local_epochs: 1,
+                    params: crate::compress::Encoded::Dense(global),
+                    mask_seed: 1,
+                    compression: CompressionConfig::NONE,
+                },
+            )
+            .unwrap();
+        let (_, up) = server
+            .recv_timeout(Duration::from_secs(10))
+            .unwrap()
+            .unwrap();
+        match up {
+            Msg::Update { delta, stats, .. } => {
+                assert_eq!(
+                    crate::compress::decompress(&delta, n_params).unwrap().len(),
+                    n_params
+                );
+                assert!(stats.steps > 0);
+                assert!(stats.compute_ms >= 0.0);
+            }
+            other => panic!("expected Update, got {}", other.name()),
+        }
+        server.send_to(0, &Msg::Shutdown).unwrap();
+        assert_eq!(handle.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn injected_dropout_suppresses_update() {
+        let traffic = Arc::new(TrafficLog::new());
+        let hub = InprocHub::new(traffic);
+        let endpoint = hub.add_client(1, LinkShaper::unshaped());
+        let server = hub.server();
+        let rt = MockRuntime::new(8, 2);
+        let global = rt.init(0).unwrap();
+        let worker = Worker::new(
+            endpoint,
+            Box::new(rt),
+            one_node(),
+            toy_shard(8, 2, 16, 2),
+            FaultInjector::new(
+                crate::config::FaultConfig {
+                    dropout_prob: 1.0, // always drop
+                    ..Default::default()
+                },
+                0,
+            ),
+            WorkerOptions {
+                emulate_speed: false,
+                ..Default::default()
+            },
+        );
+        let handle = std::thread::spawn(move || worker.run().unwrap());
+        server.recv_timeout(Duration::from_secs(5)).unwrap(); // Register
+        server
+            .send_to(
+                1,
+                &Msg::RoundStart {
+                    round: 0,
+                    model_version: 0,
+                    deadline_ms: 1_000,
+                    lr: 0.1,
+                    mu: 0.0,
+                    local_epochs: 1,
+                    params: crate::compress::Encoded::Dense(global),
+                    mask_seed: 1,
+                    compression: CompressionConfig::NONE,
+                },
+            )
+            .unwrap();
+        // no update should arrive
+        let got = server.recv_timeout(Duration::from_millis(600)).unwrap();
+        assert!(got.is_none(), "dropout client sent {got:?}");
+        server.send_to(1, &Msg::Shutdown).unwrap();
+        assert_eq!(handle.join().unwrap(), 0);
+    }
+}

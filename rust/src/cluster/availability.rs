@@ -1,0 +1,136 @@
+//! Node availability traces: a two-state (up/down) Markov model.
+//!
+//! Spot preemption and shared-queue evictions arrive as a Poisson
+//! process with the SKU's `preempt_per_hour` rate; recovery (a new
+//! instance or the queue freeing up) takes an exponential time with a
+//! few-minute mean. Deterministic per (seed, node), so experiments
+//! replay identically.
+
+use crate::util::rng::Rng;
+
+/// Samples up/down intervals for one node over a virtual-time horizon.
+#[derive(Debug, Clone)]
+pub struct AvailabilityModel {
+    preempt_per_hour: f64,
+    /// Mean recovery time in seconds.
+    mean_recovery_s: f64,
+}
+
+impl AvailabilityModel {
+    pub fn new(preempt_per_hour: f64) -> Self {
+        AvailabilityModel {
+            preempt_per_hour,
+            mean_recovery_s: 180.0,
+        }
+    }
+
+    /// Is the node up at virtual time `t_s` (seconds)? Consumes a
+    /// deterministic trace derived from `seed`.
+    pub fn is_up_at(&self, seed: u64, t_s: f64) -> bool {
+        if self.preempt_per_hour <= 0.0 {
+            return true;
+        }
+        let mut rng = Rng::new(seed ^ 0x5EED_A1A1_1AB1_E000u64.wrapping_add(1));
+        let rate_per_s = self.preempt_per_hour / 3600.0;
+        let mut now = 0.0;
+        let mut up = true;
+        // walk the alternating renewal process until we pass t_s
+        while now <= t_s {
+            if up {
+                now += rng.exponential(rate_per_s);
+                if now > t_s {
+                    return true;
+                }
+                up = false;
+            } else {
+                now += rng.exponential(1.0 / self.mean_recovery_s);
+                if now > t_s {
+                    return false;
+                }
+                up = true;
+            }
+        }
+        up
+    }
+
+    /// Does a preemption strike within `[t_s, t_s + dur_s)`? Used to
+    /// decide mid-round spot interruptions.
+    pub fn preempted_during(&self, seed: u64, t_s: f64, dur_s: f64) -> bool {
+        if self.preempt_per_hour <= 0.0 {
+            return false;
+        }
+        // thinning: P(at least one arrival in dur) = 1 - exp(-rate*dur)
+        let rate_per_s = self.preempt_per_hour / 3600.0;
+        let p = 1.0 - (-rate_per_s * dur_s).exp();
+        let mut rng = Rng::new(seed ^ (t_s.to_bits().rotate_left(17)));
+        rng.chance(p)
+    }
+
+    /// Long-run fraction of time the node is up.
+    pub fn steady_state_uptime(&self) -> f64 {
+        if self.preempt_per_hour <= 0.0 {
+            return 1.0;
+        }
+        let mean_up = 3600.0 / self.preempt_per_hour;
+        mean_up / (mean_up + self.mean_recovery_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn on_demand_always_up() {
+        let m = AvailabilityModel::new(0.0);
+        for t in [0.0, 1e3, 1e6] {
+            assert!(m.is_up_at(1, t));
+        }
+        assert!(!m.preempted_during(1, 0.0, 1e6));
+        assert_eq!(m.steady_state_uptime(), 1.0);
+    }
+
+    #[test]
+    fn trace_is_deterministic() {
+        let m = AvailabilityModel::new(2.0);
+        for t in [10.0, 500.0, 3600.0, 7200.0] {
+            assert_eq!(m.is_up_at(9, t), m.is_up_at(9, t));
+        }
+    }
+
+    #[test]
+    fn spot_nodes_sometimes_down() {
+        let m = AvailabilityModel::new(6.0); // aggressive: 6 preemptions/hour
+        let downs = (0..200)
+            .filter(|i| !m.is_up_at(*i as u64, 1800.0))
+            .count();
+        assert!(downs > 0, "expected some nodes down at t=30min");
+        assert!(downs < 200, "expected some nodes up");
+    }
+
+    #[test]
+    fn empirical_uptime_tracks_steady_state() {
+        let m = AvailabilityModel::new(4.0);
+        let expect = m.steady_state_uptime();
+        let n = 2000;
+        let ups = (0..n).filter(|i| m.is_up_at(*i as u64, 5000.0)).count();
+        let frac = ups as f64 / n as f64;
+        assert!(
+            (frac - expect).abs() < 0.1,
+            "empirical {frac} vs steady-state {expect}"
+        );
+    }
+
+    #[test]
+    fn preemption_probability_scales_with_duration() {
+        let m = AvailabilityModel::new(1.0);
+        let n = 3000;
+        let short = (0..n)
+            .filter(|i| m.preempted_during(*i as u64, 0.0, 60.0))
+            .count();
+        let long = (0..n)
+            .filter(|i| m.preempted_during(*i as u64, 1.0, 3600.0))
+            .count();
+        assert!(long > short * 5, "long {long} vs short {short}");
+    }
+}

@@ -1,0 +1,69 @@
+//! Heterogeneous cluster substrate (substitution for the paper's
+//! physical testbed — see DESIGN.md §1).
+//!
+//! The paper ran on 30 AWS EC2 VMs + 30 SLURM nodes. What the
+//! coordinator actually *observes* from that hardware is: relative
+//! compute speed, link bandwidth/latency, and (un)availability. This
+//! module models those signals from public SKU specs so the selection,
+//! straggler and scheduling logic runs against realistic heterogeneity.
+
+mod availability;
+mod catalog;
+mod topology;
+
+pub use availability::AvailabilityModel;
+pub use catalog::{catalog, lookup_sku, NodeSku};
+pub use topology::{Cluster, Node, NodeId};
+
+/// Where a node lives — decides transport backend, scheduler adapter
+/// and link class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Domain {
+    /// Cloud VM (gRPC transport, Kubernetes scheduling, WAN-ish links).
+    Cloud,
+    /// HPC compute node (MPI transport, SLURM scheduling, Infiniband).
+    Hpc,
+}
+
+/// Accelerator class of a node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Accel {
+    Gpu,
+    CpuOnly,
+}
+
+/// Network link class, used by the bandwidth shaper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkClass {
+    /// HPC interconnect: ~100 Gbit/s, microsecond latency.
+    Infiniband,
+    /// Intra-region cloud: ~10 Gbit/s, sub-ms latency.
+    CloudLan,
+    /// Cross-region / egress-constrained: ~1 Gbit/s, tens of ms.
+    CloudWan,
+}
+
+impl LinkClass {
+    /// (bandwidth bytes/sec, one-way latency ms)
+    pub fn profile(self) -> (f64, f64) {
+        match self {
+            LinkClass::Infiniband => (12.5e9, 0.005),
+            LinkClass::CloudLan => (1.25e9, 0.4),
+            LinkClass::CloudWan => (0.125e9, 25.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_profiles_ordered() {
+        let (ib_bw, ib_lat) = LinkClass::Infiniband.profile();
+        let (lan_bw, lan_lat) = LinkClass::CloudLan.profile();
+        let (wan_bw, wan_lat) = LinkClass::CloudWan.profile();
+        assert!(ib_bw > lan_bw && lan_bw > wan_bw);
+        assert!(ib_lat < lan_lat && lan_lat < wan_lat);
+    }
+}

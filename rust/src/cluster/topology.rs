@@ -1,0 +1,202 @@
+//! Cluster instantiation: config → a concrete set of [`Node`]s with
+//! per-node speed samples, availability models and link classes.
+
+use super::{catalog::lookup_sku, AvailabilityModel, Domain, LinkClass, NodeSku};
+use crate::config::ClusterConfig;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Stable node identifier (also the FL client id).
+pub type NodeId = u32;
+
+/// A concrete node instance in the testbed.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub sku: &'static NodeSku,
+    /// This instance's speed (SKU speed × per-instance lottery): two
+    /// "identical" VMs never perform identically in practice.
+    pub speed_factor: f64,
+    pub availability: AvailabilityModel,
+}
+
+impl Node {
+    pub fn domain(&self) -> Domain {
+        self.sku.domain
+    }
+
+    pub fn link(&self) -> LinkClass {
+        self.sku.link
+    }
+
+    /// Sample this node's wall-clock duration for `work_s` seconds of
+    /// reference-node compute, including tenancy jitter.
+    pub fn compute_time_s(&self, work_s: f64, rng: &mut Rng) -> f64 {
+        let base = work_s / self.speed_factor.max(1e-9);
+        let jitter = 1.0 + self.sku.jitter * rng.normal();
+        base * jitter.max(0.2)
+    }
+
+    /// Transfer time for `bytes` over this node's link (one direction).
+    pub fn transfer_time_s(&self, bytes: u64) -> f64 {
+        let (bw, lat_ms) = self.link().profile();
+        lat_ms / 1e3 + bytes as f64 / bw
+    }
+}
+
+/// The instantiated testbed.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub nodes: Vec<Node>,
+}
+
+impl Cluster {
+    /// Build from config; deterministic in `seed`.
+    pub fn build(cfg: &ClusterConfig, seed: u64) -> Result<Cluster> {
+        let mut rng = Rng::new(seed ^ 0xC1F5_7E12);
+        let mut nodes = Vec::new();
+        let mut id: NodeId = 0;
+        for (sku_name, count) in &cfg.nodes {
+            let Some(sku) = lookup_sku(sku_name) else {
+                bail!(
+                    "unknown SKU '{sku_name}'; available: {:?}",
+                    super::catalog().iter().map(|s| s.name).collect::<Vec<_>>()
+                );
+            };
+            for _ in 0..*count {
+                // per-instance silicon/tenancy lottery: ±10%
+                let lottery = 1.0 + 0.1 * rng.normal();
+                nodes.push(Node {
+                    id,
+                    sku,
+                    speed_factor: (sku.speed_factor * lottery.clamp(0.5, 1.5)).max(1e-6),
+                    availability: AvailabilityModel::new(sku.preempt_per_hour),
+                });
+                id += 1;
+            }
+        }
+        Ok(Cluster { nodes })
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: NodeId) -> Option<&Node> {
+        self.nodes.get(id as usize)
+    }
+
+    pub fn by_domain(&self, d: Domain) -> impl Iterator<Item = &Node> {
+        self.nodes.iter().filter(move |n| n.domain() == d)
+    }
+
+    /// Summary line for logs: counts per SKU.
+    pub fn describe(&self) -> String {
+        let mut counts: Vec<(&str, usize)> = Vec::new();
+        for n in &self.nodes {
+            match counts.iter_mut().find(|(name, _)| *name == n.sku.name) {
+                Some((_, c)) => *c += 1,
+                None => counts.push((n.sku.name, 1)),
+            }
+        }
+        counts
+            .iter()
+            .map(|(name, c)| format!("{c}×{name}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ClusterConfig {
+        ClusterConfig {
+            nodes: vec![
+                ("hpc-rtx6000".into(), 3),
+                ("t3.large".into(), 2),
+                ("p3.2xlarge-spot".into(), 1),
+            ],
+            cloud_backend: "inproc".into(),
+            hpc_backend: "inproc".into(),
+        }
+    }
+
+    #[test]
+    fn build_assigns_sequential_ids() {
+        let c = Cluster::build(&cfg(), 1).unwrap();
+        assert_eq!(c.len(), 6);
+        for (i, n) in c.nodes.iter().enumerate() {
+            assert_eq!(n.id as usize, i);
+        }
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let a = Cluster::build(&cfg(), 5).unwrap();
+        let b = Cluster::build(&cfg(), 5).unwrap();
+        for (x, y) in a.nodes.iter().zip(&b.nodes) {
+            assert_eq!(x.speed_factor, y.speed_factor);
+        }
+        let c = Cluster::build(&cfg(), 6).unwrap();
+        assert!(a
+            .nodes
+            .iter()
+            .zip(&c.nodes)
+            .any(|(x, y)| x.speed_factor != y.speed_factor));
+    }
+
+    #[test]
+    fn unknown_sku_rejected() {
+        let mut bad = cfg();
+        bad.nodes.push(("quantum-node".into(), 1));
+        assert!(Cluster::build(&bad, 0).is_err());
+    }
+
+    #[test]
+    fn per_instance_speeds_vary_but_track_sku() {
+        let c = Cluster::build(&cfg(), 2).unwrap();
+        let rtx: Vec<f64> = c
+            .by_domain(Domain::Hpc)
+            .map(|n| n.speed_factor)
+            .collect();
+        assert_eq!(rtx.len(), 3);
+        assert!(rtx.iter().any(|&s| s != rtx[0]), "lottery should vary");
+        for s in rtx {
+            assert!((0.5..=1.5).contains(&s));
+        }
+    }
+
+    #[test]
+    fn compute_time_faster_on_faster_nodes() {
+        let c = Cluster::build(&cfg(), 3).unwrap();
+        let mut rng = Rng::new(0);
+        let gpu = &c.nodes[0]; // hpc-rtx6000
+        let cpu = &c.nodes[3]; // t3.large
+        let tg: f64 = (0..20).map(|_| gpu.compute_time_s(10.0, &mut rng)).sum();
+        let tc: f64 = (0..20).map(|_| cpu.compute_time_s(10.0, &mut rng)).sum();
+        assert!(tc > tg * 5.0, "cpu {tc} vs gpu {tg}");
+    }
+
+    #[test]
+    fn transfer_time_reflects_link_class() {
+        let c = Cluster::build(&cfg(), 4).unwrap();
+        let hpc = &c.nodes[0];
+        let wan = &c.nodes[3];
+        let payload = 45 * 1024 * 1024; // paper Table 4: ~45 MB model
+        assert!(wan.transfer_time_s(payload) > 10.0 * hpc.transfer_time_s(payload));
+    }
+
+    #[test]
+    fn describe_lists_all_skus() {
+        let c = Cluster::build(&cfg(), 0).unwrap();
+        let d = c.describe();
+        assert!(d.contains("3×hpc-rtx6000"));
+        assert!(d.contains("2×t3.large"));
+    }
+}

@@ -1,0 +1,100 @@
+//! Federated dropout (paper §4.3): each client trains/transmits only a
+//! seeded random subset of coordinates. Only the *seed* crosses the
+//! wire — both sides regenerate the identical mask, so the payload
+//! saves the full masked fraction.
+
+use crate::util::rng::Rng;
+
+/// Deterministic kept-coordinate set for (len, keep_frac, seed).
+/// Sorted ascending.
+pub fn dropout_mask_indices(len: usize, keep_frac: f32, seed: u64) -> Vec<u32> {
+    assert!((0.0..=1.0).contains(&keep_frac));
+    if keep_frac >= 1.0 {
+        return (0..len as u32).collect();
+    }
+    let k = ((len as f64 * keep_frac as f64).round() as usize).clamp(1, len);
+    let mut rng = Rng::new(seed ^ 0xD20_0FF);
+    let mut idx = rng.sample_indices(len, k);
+    idx.sort_unstable();
+    idx.into_iter().map(|i| i as u32).collect()
+}
+
+/// A reusable mask handle (kept indices + complement application).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DropoutMask {
+    pub kept: Vec<u32>,
+    pub dense_len: usize,
+}
+
+impl DropoutMask {
+    pub fn generate(dense_len: usize, keep_frac: f32, seed: u64) -> Self {
+        DropoutMask {
+            kept: dropout_mask_indices(dense_len, keep_frac, seed),
+            dense_len,
+        }
+    }
+
+    /// Gather the kept coordinates of `dense`.
+    pub fn gather(&self, dense: &[f32]) -> Vec<f32> {
+        self.kept.iter().map(|&i| dense[i as usize]).collect()
+    }
+
+    /// Scatter `vals` back into a zero vector of the dense length.
+    pub fn scatter(&self, vals: &[f32]) -> Vec<f32> {
+        assert_eq!(vals.len(), self.kept.len());
+        let mut out = vec![0f32; self.dense_len];
+        for (&i, &v) in self.kept.iter().zip(vals) {
+            out[i as usize] = v;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_is_deterministic_and_sorted() {
+        let a = dropout_mask_indices(1000, 0.3, 42);
+        let b = dropout_mask_indices(1000, 0.3, 42);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] < w[1]));
+        let c = dropout_mask_indices(1000, 0.3, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn mask_size_matches_fraction() {
+        let m = dropout_mask_indices(10_000, 0.25, 0);
+        assert_eq!(m.len(), 2500);
+        let all = dropout_mask_indices(100, 1.0, 0);
+        assert_eq!(all.len(), 100);
+        let one = dropout_mask_indices(100, 0.001, 0);
+        assert_eq!(one.len(), 1); // clamped to >= 1
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let dense: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let m = DropoutMask::generate(100, 0.4, 7);
+        let vals = m.gather(&dense);
+        let back = m.scatter(&vals);
+        for (i, &v) in back.iter().enumerate() {
+            if m.kept.contains(&(i as u32)) {
+                assert_eq!(v, dense[i]);
+            } else {
+                assert_eq!(v, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn masks_differ_across_rounds() {
+        // (round, client) seeds must give different coordinate subsets so
+        // coverage rotates (otherwise some params never train)
+        let r1 = dropout_mask_indices(500, 0.5, 100 << 32 | 1);
+        let r2 = dropout_mask_indices(500, 0.5, 101 << 32 | 1);
+        assert_ne!(r1, r2);
+    }
+}

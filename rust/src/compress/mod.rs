@@ -1,0 +1,415 @@
+//! Communication-efficient update encoding (paper §4.3, Table 1).
+//!
+//! The codec pipeline transforms a dense f32 update vector into a
+//! compact wire payload and back:
+//!
+//! ```text
+//! dense Δ ──(federated dropout mask)──(top-k sparsify)──(quantize)──> payload
+//! ```
+//!
+//! Semantics are bit-matched to the L1 Pallas kernels (same scale rule,
+//! same round-half-even, same pessimistic tie handling) — pinned by
+//! tests against values exported from the Python oracle.
+
+mod dropout;
+mod quantize;
+mod sparsify;
+
+pub use dropout::{dropout_mask_indices, DropoutMask};
+pub use quantize::{dequantize, quantize, QData, QuantBits, Quantized};
+pub use sparsify::{sparsify_topk, Sparse};
+
+use crate::config::CompressionConfig;
+use anyhow::{bail, Result};
+
+/// A wire-ready encoded update.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Encoded {
+    /// Raw f32 (compression off).
+    Dense(Vec<f32>),
+    /// Quantized dense values.
+    QDense(Quantized),
+    /// Sparse f32 (indices + values).
+    Sparse(Sparse),
+    /// Sparse + quantized values.
+    QSparse { idx: Vec<u32>, q: Quantized },
+    /// Federated-dropout masked values: the kept-coordinate set is
+    /// derived from `(seed, keep, dense_len)` on BOTH sides, so only
+    /// the seed + payload cross the wire (no indices — that is the
+    /// entire bandwidth win of federated dropout). `inner` is the
+    /// Dense or QDense encoding of the kept values, in mask order.
+    Masked {
+        seed: u64,
+        keep: f32,
+        dense_len: usize,
+        inner: Box<Encoded>,
+    },
+}
+
+impl Encoded {
+    /// Bytes this encoding occupies on the wire (payload only; framing
+    /// overhead is accounted by the transport).
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            Encoded::Dense(v) => 4 * v.len() as u64,
+            Encoded::QDense(q) => q.wire_bytes(),
+            Encoded::Sparse(s) => 8 * s.idx.len() as u64, // 4B idx + 4B val
+            Encoded::QSparse { idx, q } => 4 * idx.len() as u64 + q.wire_bytes(),
+            Encoded::Masked { inner, .. } => 16 + inner.wire_bytes(),
+        }
+    }
+
+    /// Logical (decoded) length.
+    pub fn dense_len(&self) -> usize {
+        match self {
+            Encoded::Dense(v) => v.len(),
+            Encoded::QDense(q) => q.n,
+            Encoded::Sparse(s) => s.dense_len,
+            Encoded::QSparse { q, .. } => q.n,
+            Encoded::Masked { dense_len, .. } => *dense_len,
+        }
+    }
+}
+
+/// Compress a dense update under the given config.
+///
+/// `mask_seed` derives the federated-dropout mask; the orchestrator
+/// uses the same (round, client) seed to know which coordinates were
+/// trained, so only the seed crosses the wire.
+pub fn compress(update: &[f32], cfg: &CompressionConfig, mask_seed: u64) -> Encoded {
+    // 1. federated dropout: keep a seeded coordinate subset
+    let dropped: Option<(Vec<u32>, Vec<f32>)> = if cfg.dropout_keep < 1.0 {
+        let keep = dropout_mask_indices(update.len(), cfg.dropout_keep, mask_seed);
+        let vals = keep.iter().map(|&i| update[i as usize]).collect();
+        Some((keep, vals))
+    } else {
+        None
+    };
+
+    // 2. top-k sparsification (within the kept coordinates)
+    let sparsified: Option<(Vec<u32>, Vec<f32>)> = if cfg.topk_frac < 1.0 {
+        match &dropped {
+            Some((idx, vals)) => {
+                let k = k_of(vals.len(), cfg.topk_frac);
+                let s = sparsify_topk(vals, k);
+                let gidx: Vec<u32> = s.idx.iter().map(|&i| idx[i as usize]).collect();
+                Some((gidx, s.val))
+            }
+            None => {
+                let k = k_of(update.len(), cfg.topk_frac);
+                let s = sparsify_topk(update, k);
+                Some((s.idx, s.val))
+            }
+        }
+    } else {
+        dropped
+    };
+
+    // 3. quantization + encoding selection.
+    // dropout WITHOUT top-k → seeded Masked encoding (no indices on the
+    // wire — both sides regenerate the mask from the seed). Top-k
+    // survivors are data-dependent, so those need explicit indices.
+    let bits = QuantBits::from_u8(cfg.quant_bits);
+    if cfg.topk_frac >= 1.0 {
+        if let Some((_, vals)) = sparsified {
+            let inner = match bits {
+                None => Encoded::Dense(vals),
+                Some(b) => Encoded::QDense(quantize(&vals, b)),
+            };
+            return Encoded::Masked {
+                seed: mask_seed,
+                keep: cfg.dropout_keep,
+                dense_len: update.len(),
+                inner: Box::new(inner),
+            };
+        }
+    }
+    match (sparsified, bits) {
+        (None, None) => Encoded::Dense(update.to_vec()),
+        (None, Some(b)) => Encoded::QDense(quantize(update, b)),
+        (Some((idx, vals)), None) => Encoded::Sparse(Sparse {
+            idx,
+            val: vals,
+            dense_len: update.len(),
+        }),
+        (Some((idx, vals)), Some(b)) => {
+            let mut q = quantize(&vals, b);
+            q.n = update.len(); // decoded length is the full vector
+            Encoded::QSparse { idx, q }
+        }
+    }
+}
+
+/// Decompress back to a dense vector of length `n`.
+pub fn decompress(enc: &Encoded, n: usize) -> Result<Vec<f32>> {
+    match enc {
+        Encoded::Dense(v) => {
+            if v.len() != n {
+                bail!("dense length {} != {}", v.len(), n);
+            }
+            Ok(v.clone())
+        }
+        Encoded::QDense(q) => {
+            if q.n != n {
+                bail!("qdense length {} != {}", q.n, n);
+            }
+            Ok(dequantize(q))
+        }
+        Encoded::Sparse(s) => {
+            let mut out = vec![0f32; n];
+            for (&i, &v) in s.idx.iter().zip(&s.val) {
+                let i = i as usize;
+                if i >= n {
+                    bail!("sparse index {i} out of bounds {n}");
+                }
+                out[i] = v;
+            }
+            Ok(out)
+        }
+        Encoded::QSparse { idx, q } => {
+            let vals = dequantize_values(q);
+            if vals.len() != idx.len() {
+                bail!("qsparse arity mismatch: {} vs {}", vals.len(), idx.len());
+            }
+            let mut out = vec![0f32; n];
+            for (&i, v) in idx.iter().zip(vals) {
+                let i = i as usize;
+                if i >= n {
+                    bail!("qsparse index {i} out of bounds {n}");
+                }
+                out[i] = v;
+            }
+            Ok(out)
+        }
+        Encoded::Masked {
+            seed,
+            keep,
+            dense_len,
+            inner,
+        } => {
+            if *dense_len != n {
+                bail!("masked dense length {dense_len} != {n}");
+            }
+            let kept = dropout_mask_indices(n, *keep, *seed);
+            let vals = match inner.as_ref() {
+                Encoded::Dense(v) => v.clone(),
+                Encoded::QDense(q) => dequantize_values(q),
+                other => bail!("masked inner must be dense-like, got {other:?}"),
+            };
+            if vals.len() != kept.len() {
+                bail!(
+                    "masked arity mismatch: {} values for {} kept coords",
+                    vals.len(),
+                    kept.len()
+                );
+            }
+            let mut out = vec![0f32; n];
+            for (&i, v) in kept.iter().zip(vals) {
+                out[i as usize] = v;
+            }
+            Ok(out)
+        }
+    }
+}
+
+fn dequantize_values(q: &Quantized) -> Vec<f32> {
+    // dequantize exactly the stored values (q.n may be the dense len
+    // for QSparse)
+    match &q.data {
+        quantize::QData::I8(v) => v.iter().map(|&x| x as f32 * q.scale).collect(),
+        quantize::QData::I16(v) => v.iter().map(|&x| x as f32 * q.scale).collect(),
+    }
+}
+
+fn k_of(n: usize, frac: f32) -> usize {
+    ((n as f64 * frac as f64).round() as usize).clamp(1, n)
+}
+
+/// Expected wire bytes for an update of `n` dense f32 entries under
+/// `cfg` — the analytic counterpart of [`compress`] + [`Encoded::wire_bytes`],
+/// used by the virtual-time simulator where no real update exists.
+pub fn expected_wire_bytes(n: usize, cfg: &crate::config::CompressionConfig) -> u64 {
+    let kept = (n as f64 * cfg.dropout_keep.min(1.0) as f64).round().max(1.0);
+    let after_topk = if cfg.topk_frac < 1.0 {
+        (kept * cfg.topk_frac as f64).round().max(1.0)
+    } else {
+        kept
+    };
+    // top-k survivors need explicit indices; dropout-only uses the
+    // seeded Masked encoding (no indices, 16-byte header)
+    let idx_bytes = if cfg.topk_frac < 1.0 { 4.0 } else { 0.0 };
+    let header = if cfg.topk_frac >= 1.0 && cfg.dropout_keep < 1.0 {
+        16.0
+    } else {
+        0.0
+    };
+    let value_bytes = match cfg.quant_bits {
+        8 => 1.0,
+        16 => 2.0,
+        _ => 4.0,
+    };
+    let scale_bytes = if cfg.quant_bits < 32 { 4.0 } else { 0.0 };
+    (after_topk * (value_bytes + idx_bytes) + scale_bytes + header) as u64
+}
+
+/// Compression accounting for the metrics module / Table 4.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompressionStats {
+    pub dense_bytes: u64,
+    pub wire_bytes: u64,
+}
+
+impl CompressionStats {
+    pub fn of(enc: &Encoded) -> Self {
+        CompressionStats {
+            dense_bytes: 4 * enc.dense_len() as u64,
+            wire_bytes: enc.wire_bytes(),
+        }
+    }
+
+    pub fn ratio(&self) -> f64 {
+        self.wire_bytes as f64 / self.dense_bytes.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn vec_of(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn no_compression_is_identity() {
+        let v = vec_of(1000, 0);
+        let enc = compress(&v, &CompressionConfig::NONE, 1);
+        assert_eq!(enc, Encoded::Dense(v.clone()));
+        assert_eq!(decompress(&enc, 1000).unwrap(), v);
+        assert_eq!(CompressionStats::of(&enc).ratio(), 1.0);
+    }
+
+    #[test]
+    fn paper_config_hits_target_reduction() {
+        // Table 4: ~45 MB → ~15 MB, i.e. ratio ≈ 0.33; our PAPER config
+        // (top-25% + int8) gives 0.25 * (4+1)/4 = ~0.31
+        let v = vec_of(100_000, 1);
+        let enc = compress(&v, &CompressionConfig::PAPER, 2);
+        let r = CompressionStats::of(&enc).ratio();
+        assert!((0.25..=0.40).contains(&r), "ratio {r}");
+    }
+
+    #[test]
+    fn quant_only_roundtrip_error_bounded() {
+        let v = vec_of(5000, 2);
+        let cfg = CompressionConfig {
+            quant_bits: 8,
+            topk_frac: 1.0,
+            dropout_keep: 1.0,
+        };
+        let enc = compress(&v, &cfg, 0);
+        let back = decompress(&enc, v.len()).unwrap();
+        let maxabs = v.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let scale = maxabs / 127.0;
+        for (a, b) in v.iter().zip(&back) {
+            assert!((a - b).abs() <= scale / 2.0 + 1e-7);
+        }
+    }
+
+    #[test]
+    fn topk_only_keeps_largest() {
+        let v = vec![0.1f32, -5.0, 0.2, 3.0, -0.05];
+        let cfg = CompressionConfig {
+            quant_bits: 32,
+            topk_frac: 0.4,
+            dropout_keep: 1.0,
+        };
+        let enc = compress(&v, &cfg, 0);
+        let back = decompress(&enc, 5).unwrap();
+        assert_eq!(back, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn dropout_then_decompress_zeroes_masked() {
+        let v = vec_of(1000, 3);
+        let cfg = CompressionConfig {
+            quant_bits: 32,
+            topk_frac: 1.0,
+            dropout_keep: 0.5,
+        };
+        let enc = compress(&v, &cfg, 77);
+        let back = decompress(&enc, 1000).unwrap();
+        let kept = dropout_mask_indices(1000, 0.5, 77);
+        let kept_set: std::collections::HashSet<u32> = kept.into_iter().collect();
+        for (i, (&a, &b)) in v.iter().zip(&back).enumerate() {
+            if kept_set.contains(&(i as u32)) {
+                assert_eq!(a, b);
+            } else {
+                assert_eq!(b, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn full_pipeline_roundtrip_preserves_survivors() {
+        let v = vec_of(10_000, 4);
+        let cfg = CompressionConfig {
+            quant_bits: 16,
+            topk_frac: 0.1,
+            dropout_keep: 0.8,
+        };
+        let enc = compress(&v, &cfg, 5);
+        let back = decompress(&enc, v.len()).unwrap();
+        // survivors approximate originals; everything else is zero
+        let nonzero = back.iter().filter(|&&x| x != 0.0).count();
+        let expect = (10_000f64 * 0.8 * 0.1).round() as usize;
+        assert!(
+            (nonzero as i64 - expect as i64).abs() <= 2,
+            "nonzero {nonzero} vs {expect}"
+        );
+        for (a, b) in v.iter().zip(&back) {
+            if *b != 0.0 {
+                assert!((a - b).abs() < 0.05 * a.abs().max(0.1));
+            }
+        }
+    }
+
+    #[test]
+    fn decompress_rejects_bad_lengths_and_indices() {
+        let enc = Encoded::Dense(vec![1.0; 4]);
+        assert!(decompress(&enc, 5).is_err());
+        let bad = Encoded::Sparse(Sparse {
+            idx: vec![10],
+            val: vec![1.0],
+            dense_len: 5,
+        });
+        assert!(decompress(&bad, 5).is_err());
+    }
+
+    #[test]
+    fn wire_bytes_accounting() {
+        let v = vec_of(1000, 6);
+        let enc8 = compress(
+            &v,
+            &CompressionConfig {
+                quant_bits: 8,
+                topk_frac: 1.0,
+                dropout_keep: 1.0,
+            },
+            0,
+        );
+        assert_eq!(enc8.wire_bytes(), 1000 + 4); // i8 payload + f32 scale
+        let enc16 = compress(
+            &v,
+            &CompressionConfig {
+                quant_bits: 16,
+                topk_frac: 1.0,
+                dropout_keep: 1.0,
+            },
+            0,
+        );
+        assert_eq!(enc16.wire_bytes(), 2000 + 4);
+    }
+}

@@ -1,0 +1,203 @@
+//! Symmetric per-tensor quantization, bit-matched to the L1 kernel
+//! (`python/compile/kernels/compress.py::quantize`):
+//!
+//! * `scale = max|g| / qmax`, or 1.0 for all-zero vectors,
+//! * `q = clip(round_half_even(g / scale), -qmax, qmax)` — jnp.round
+//!   rounds half-to-even, so we must too.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantBits {
+    B8,
+    B16,
+}
+
+impl QuantBits {
+    pub fn from_u8(bits: u8) -> Option<QuantBits> {
+        match bits {
+            8 => Some(QuantBits::B8),
+            16 => Some(QuantBits::B16),
+            _ => None, // 32 = off
+        }
+    }
+
+    pub fn qmax(self) -> f32 {
+        match self {
+            QuantBits::B8 => 127.0,
+            QuantBits::B16 => 32767.0,
+        }
+    }
+}
+
+/// Quantized payload storage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QData {
+    I8(Vec<i8>),
+    I16(Vec<i16>),
+}
+
+impl QData {
+    pub fn len(&self) -> usize {
+        match self {
+            QData::I8(v) => v.len(),
+            QData::I16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A quantized vector: integer payload + scale. `n` is the *decoded*
+/// length (== payload length for dense use; the full dense length when
+/// used inside a sparse encoding).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Quantized {
+    pub data: QData,
+    pub scale: f32,
+    pub n: usize,
+}
+
+impl Quantized {
+    pub fn wire_bytes(&self) -> u64 {
+        let payload = match &self.data {
+            QData::I8(v) => v.len() as u64,
+            QData::I16(v) => 2 * v.len() as u64,
+        };
+        payload + 4 // + f32 scale
+    }
+}
+
+/// Quantize `g` with the kernel's exact semantics.
+///
+/// Hot path (every update, every round): both the |g| max-reduce and
+/// the round/clip pass are data-parallel over chunks; per-element math
+/// is unchanged (true division + round-half-even), so the output is
+/// bit-identical to the serial implementation and the L1 kernel.
+pub fn quantize(g: &[f32], bits: QuantBits) -> Quantized {
+    const MIN_CHUNK: usize = 64 * 1024;
+    let qmax = bits.qmax();
+    let absmax = crate::util::parallel::par_fold(
+        g,
+        MIN_CHUNK,
+        |_, c| c.iter().fold(0f32, |m, &x| m.max(x.abs())),
+        f32::max,
+    )
+    .unwrap_or(0.0);
+    let scale = if absmax > 0.0 { absmax / qmax } else { 1.0 };
+    let data = match bits {
+        QuantBits::B8 => {
+            let mut out = vec![0i8; g.len()];
+            crate::util::parallel::par_chunks_mut(&mut out, MIN_CHUNK, |offset, chunk| {
+                let src = &g[offset..offset + chunk.len()];
+                for (o, &x) in chunk.iter_mut().zip(src) {
+                    *o = (x / scale).round_ties_even().clamp(-qmax, qmax) as i8;
+                }
+            });
+            QData::I8(out)
+        }
+        QuantBits::B16 => {
+            let mut out = vec![0i16; g.len()];
+            crate::util::parallel::par_chunks_mut(&mut out, MIN_CHUNK, |offset, chunk| {
+                let src = &g[offset..offset + chunk.len()];
+                for (o, &x) in chunk.iter_mut().zip(src) {
+                    *o = (x / scale).round_ties_even().clamp(-qmax, qmax) as i16;
+                }
+            });
+            QData::I16(out)
+        }
+    };
+    Quantized {
+        data,
+        scale,
+        n: g.len(),
+    }
+}
+
+/// Dequantize a dense quantized vector.
+pub fn dequantize(q: &Quantized) -> Vec<f32> {
+    match &q.data {
+        QData::I8(v) => v.iter().map(|&x| x as f32 * q.scale).collect(),
+        QData::I16(v) => v.iter().map(|&x| x as f32 * q.scale).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scale_rule_matches_kernel() {
+        let q = quantize(&[1.0, -2.0, 0.5], QuantBits::B8);
+        assert_eq!(q.scale, 2.0 / 127.0);
+        let z = quantize(&[0.0; 10], QuantBits::B8);
+        assert_eq!(z.scale, 1.0);
+        assert_eq!(dequantize(&z), vec![0.0; 10]);
+    }
+
+    #[test]
+    fn extremes_hit_qmax() {
+        let q = quantize(&[3.0, -3.0, 1.5], QuantBits::B8);
+        match &q.data {
+            QData::I8(v) => assert_eq!(&v[..2], &[127, -127]),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn round_half_even() {
+        // values exactly at .5 quantization boundaries must round to even
+        // scale = 2.0 (absmax 254); 1.0/2.0 = 0.5 -> rounds to 0 (even),
+        // 3.0/2.0 = 1.5 -> rounds to 2
+        let q = quantize(&[254.0, 1.0, 3.0], QuantBits::B8);
+        match &q.data {
+            QData::I8(v) => {
+                assert_eq!(v[0], 127);
+                assert_eq!(v[1], 0, "0.5 must round to even (0)");
+                assert_eq!(v[2], 2, "1.5 must round to even (2)");
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bound() {
+        let mut rng = Rng::new(0);
+        for bits in [QuantBits::B8, QuantBits::B16] {
+            let g: Vec<f32> = (0..4096).map(|_| rng.normal() as f32 * 3.0).collect();
+            let q = quantize(&g, bits);
+            let back = dequantize(&q);
+            for (a, b) in g.iter().zip(&back) {
+                assert!(
+                    (a - b).abs() <= q.scale / 2.0 + 1e-6,
+                    "err {} > {}",
+                    (a - b).abs(),
+                    q.scale / 2.0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn b16_more_precise_than_b8() {
+        let mut rng = Rng::new(1);
+        let g: Vec<f32> = (0..2048).map(|_| rng.normal() as f32).collect();
+        let err = |bits| {
+            let q = quantize(&g, bits);
+            let back = dequantize(&q);
+            g.iter()
+                .zip(&back)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>()
+        };
+        assert!(err(QuantBits::B16) < err(QuantBits::B8) / 50.0);
+    }
+
+    #[test]
+    fn wire_bytes() {
+        let g = vec![1.0f32; 100];
+        assert_eq!(quantize(&g, QuantBits::B8).wire_bytes(), 104);
+        assert_eq!(quantize(&g, QuantBits::B16).wire_bytes(), 204);
+    }
+}

@@ -1,0 +1,113 @@
+//! Top-k magnitude sparsification, matching the L1 kernel's threshold
+//! semantics: compute the k-th largest |g| and keep every entry with
+//! `|g| >= t` (ties kept pessimistically, like the kernel's mask pass).
+//!
+//! Selection is O(n) via `select_nth_unstable` on magnitudes — the
+//! radix-select replacement for CPU (DESIGN.md §Hardware-Adaptation).
+
+/// Sparse update: parallel (index, value) arrays plus the dense length.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sparse {
+    pub idx: Vec<u32>,
+    pub val: Vec<f32>,
+    pub dense_len: usize,
+}
+
+/// Keep the top-k entries of `g` by |magnitude|.
+pub fn sparsify_topk(g: &[f32], k: usize) -> Sparse {
+    let n = g.len();
+    let k = k.clamp(1, n.max(1));
+    if n == 0 {
+        return Sparse {
+            idx: vec![],
+            val: vec![],
+            dense_len: 0,
+        };
+    }
+    if k >= n {
+        return Sparse {
+            idx: (0..n as u32).collect(),
+            val: g.to_vec(),
+            dense_len: n,
+        };
+    }
+    // threshold = k-th largest magnitude (kernel parity: |g| >= t kept)
+    let mut mags: Vec<f32> = g.iter().map(|x| x.abs()).collect();
+    let (_, t, _) = mags.select_nth_unstable_by(k - 1, |a, b| b.total_cmp(a));
+    let t = *t;
+    let mut idx = Vec::with_capacity(k + 8);
+    let mut val = Vec::with_capacity(k + 8);
+    for (i, &x) in g.iter().enumerate() {
+        if x.abs() >= t {
+            idx.push(i as u32);
+            val.push(x);
+        }
+    }
+    Sparse {
+        idx,
+        val,
+        dense_len: n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn keeps_exactly_k_distinct_magnitudes() {
+        let mut rng = Rng::new(0);
+        let g: Vec<f32> = (0..5000).map(|_| rng.normal() as f32).collect();
+        let s = sparsify_topk(&g, 500);
+        assert_eq!(s.idx.len(), 500); // continuous values → no ties
+        assert_eq!(s.dense_len, 5000);
+        // survivors are the actual top 500
+        let mut mags: Vec<f32> = g.iter().map(|x| x.abs()).collect();
+        mags.sort_by(|a, b| b.total_cmp(a));
+        let t = mags[499];
+        for &i in &s.idx {
+            assert!(g[i as usize].abs() >= t);
+        }
+    }
+
+    #[test]
+    fn ties_kept_pessimistically() {
+        let g = vec![1.0f32, -1.0, 1.0, 0.5];
+        let s = sparsify_topk(&g, 2);
+        // threshold is 1.0; all three 1.0-magnitude entries survive
+        assert_eq!(s.idx, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn k_bounds() {
+        let g = vec![3.0f32, 1.0, 2.0];
+        let all = sparsify_topk(&g, 10);
+        assert_eq!(all.idx.len(), 3);
+        let one = sparsify_topk(&g, 0); // clamps to 1
+        assert_eq!(one.idx, vec![0]);
+        let empty = sparsify_topk(&[], 5);
+        assert_eq!(empty.dense_len, 0);
+        assert!(empty.idx.is_empty());
+    }
+
+    #[test]
+    fn indices_sorted_and_in_bounds() {
+        let mut rng = Rng::new(1);
+        let g: Vec<f32> = (0..1000).map(|_| rng.normal() as f32).collect();
+        let s = sparsify_topk(&g, 100);
+        assert!(s.idx.windows(2).all(|w| w[0] < w[1]));
+        assert!(s.idx.iter().all(|&i| (i as usize) < 1000));
+        for (&i, &v) in s.idx.iter().zip(&s.val) {
+            assert_eq!(g[i as usize], v);
+        }
+    }
+
+    #[test]
+    fn preserves_signs() {
+        let g = vec![-10.0f32, 0.1, 9.0, -0.2];
+        let s = sparsify_topk(&g, 2);
+        assert_eq!(s.idx, vec![0, 2]);
+        assert_eq!(s.val, vec![-10.0, 9.0]);
+    }
+}

@@ -1,0 +1,372 @@
+//! JSON (de)serialization of [`ExperimentConfig`] via the in-tree
+//! `util::json` — hand-rolled field mapping (no serde on this image),
+//! with round-trip tests pinning the schema.
+
+use super::*;
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+
+pub fn from_json_file(path: &str) -> Result<ExperimentConfig> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading config file {path}"))?;
+    from_json_str(&text).with_context(|| format!("parsing config file {path}"))
+}
+
+pub fn from_json_str(text: &str) -> Result<ExperimentConfig> {
+    let v = Value::parse(text).map_err(|e| anyhow!("{e}"))?;
+    let cfg = decode(&v)?;
+    validate(&cfg)?;
+    Ok(cfg)
+}
+
+fn f64_of(v: &Value, key: &str) -> Result<f64> {
+    v.req(key)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("field '{key}' must be a number"))
+}
+
+fn usize_of(v: &Value, key: &str) -> Result<usize> {
+    v.req(key)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("field '{key}' must be a non-negative integer"))
+}
+
+fn str_of(v: &Value, key: &str) -> Result<String> {
+    Ok(v.req(key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("field '{key}' must be a string"))?
+        .to_string())
+}
+
+fn decode(v: &Value) -> Result<ExperimentConfig> {
+    let data = v.req("data")?;
+    let partition = {
+        let p = data.req("partition")?;
+        match str_of(p, "kind")?.as_str() {
+            "iid" => Partition::Iid,
+            "label_shard" => Partition::LabelShard {
+                classes_per_client: usize_of(p, "classes_per_client")?,
+            },
+            "dirichlet" => Partition::Dirichlet {
+                alpha: f64_of(p, "alpha")?,
+            },
+            k => bail!("unknown partition kind '{k}'"),
+        }
+    };
+    let cluster = {
+        let c = v.req("cluster")?;
+        let nodes = c
+            .req("nodes")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("cluster.nodes must be an array"))?
+            .iter()
+            .map(|n| Ok((str_of(n, "sku")?, usize_of(n, "count")?)))
+            .collect::<Result<Vec<_>>>()?;
+        ClusterConfig {
+            nodes,
+            cloud_backend: str_of(c, "cloud_backend").unwrap_or_else(|_| "inproc".into()),
+            hpc_backend: str_of(c, "hpc_backend").unwrap_or_else(|_| "inproc".into()),
+        }
+    };
+    let aggregation = {
+        let a = v.req("aggregation")?;
+        match str_of(a, "kind")?.as_str() {
+            "fedavg" => Aggregation::FedAvg,
+            "fedprox" => Aggregation::FedProx {
+                mu: f64_of(a, "mu")? as f32,
+            },
+            "weighted" => Aggregation::Weighted(match str_of(a, "scheme")?.as_str() {
+                "data_size" => WeightScheme::DataSize,
+                "inverse_loss" => WeightScheme::InverseLoss,
+                "inverse_variance" => WeightScheme::InverseVariance,
+                s => bail!("unknown weight scheme '{s}'"),
+            }),
+            k => bail!("unknown aggregation kind '{k}'"),
+        }
+    };
+    let selection = {
+        let s = v.req("selection")?;
+        let policy = match str_of(s, "policy")?.as_str() {
+            "random" => SelectionPolicy::Random,
+            "adaptive" => SelectionPolicy::Adaptive {
+                explore_frac: s
+                    .get("explore_frac")
+                    .and_then(Value::as_f64)
+                    .unwrap_or(0.2),
+                exclude_factor: s
+                    .get("exclude_factor")
+                    .and_then(Value::as_f64)
+                    .unwrap_or(2.5),
+            },
+            p => bail!("unknown selection policy '{p}'"),
+        };
+        SelectionConfig {
+            policy,
+            clients_per_round: usize_of(s, "clients_per_round")?,
+        }
+    };
+    let straggler = match v.get("straggler") {
+        None => StragglerConfig::default(),
+        Some(s) => StragglerConfig {
+            deadline_ms: s
+                .get("deadline_ms")
+                .and_then(Value::as_f64)
+                .map(|d| d as u64),
+            partial_k: s.get("partial_k").and_then(Value::as_usize),
+        },
+    };
+    let compression = match v.get("compression") {
+        None => CompressionConfig::NONE,
+        Some(c) => CompressionConfig {
+            quant_bits: c
+                .get("quant_bits")
+                .and_then(Value::as_usize)
+                .unwrap_or(32) as u8,
+            topk_frac: c
+                .get("topk_frac")
+                .and_then(Value::as_f64)
+                .unwrap_or(1.0) as f32,
+            dropout_keep: c
+                .get("dropout_keep")
+                .and_then(Value::as_f64)
+                .unwrap_or(1.0) as f32,
+        },
+    };
+    let faults = match v.get("faults") {
+        None => FaultConfig::default(),
+        Some(f) => FaultConfig {
+            dropout_prob: f.get("dropout_prob").and_then(Value::as_f64).unwrap_or(0.0),
+            preemption_prob: f
+                .get("preemption_prob")
+                .and_then(Value::as_f64)
+                .unwrap_or(0.0),
+            straggler_prob: f
+                .get("straggler_prob")
+                .and_then(Value::as_f64)
+                .unwrap_or(0.0),
+            straggler_factor: f
+                .get("straggler_factor")
+                .and_then(Value::as_f64)
+                .unwrap_or(4.0),
+        },
+    };
+    let t = v.req("train")?;
+    let train = TrainConfig {
+        local_epochs: usize_of(t, "local_epochs")?,
+        lr: f64_of(t, "lr")? as f32,
+        rounds: usize_of(t, "rounds")?,
+        converge_eps: t
+            .get("converge_eps")
+            .and_then(Value::as_f64)
+            .unwrap_or(1e-5) as f32,
+        converge_patience: t
+            .get("converge_patience")
+            .and_then(Value::as_usize)
+            .unwrap_or(3),
+        target_accuracy: t.get("target_accuracy").and_then(Value::as_f64),
+    };
+    Ok(ExperimentConfig {
+        name: str_of(v, "name")?,
+        seed: f64_of(v, "seed").unwrap_or(42.0) as u64,
+        data: DataConfig {
+            dataset: str_of(data, "dataset")?,
+            partition,
+            samples_per_client: usize_of(data, "samples_per_client")?,
+            eval_samples: usize_of(data, "eval_samples")?,
+        },
+        cluster,
+        train,
+        aggregation,
+        selection,
+        straggler,
+        compression,
+        faults,
+        artifacts_dir: str_of(v, "artifacts_dir").unwrap_or_else(|_| "artifacts".into()),
+        mock_runtime: v
+            .get("mock_runtime")
+            .and_then(Value::as_bool)
+            .unwrap_or(false),
+    })
+}
+
+pub fn to_json(cfg: &ExperimentConfig) -> String {
+    use json::{arr, num, obj, s, Value as V};
+    let partition = match cfg.data.partition {
+        Partition::Iid => obj(vec![("kind", s("iid"))]),
+        Partition::LabelShard { classes_per_client } => obj(vec![
+            ("kind", s("label_shard")),
+            ("classes_per_client", num(classes_per_client as f64)),
+        ]),
+        Partition::Dirichlet { alpha } => {
+            obj(vec![("kind", s("dirichlet")), ("alpha", num(alpha))])
+        }
+    };
+    let aggregation = match cfg.aggregation {
+        Aggregation::FedAvg => obj(vec![("kind", s("fedavg"))]),
+        Aggregation::FedProx { mu } => {
+            obj(vec![("kind", s("fedprox")), ("mu", num(mu as f64))])
+        }
+        Aggregation::Weighted(scheme) => obj(vec![
+            ("kind", s("weighted")),
+            (
+                "scheme",
+                s(match scheme {
+                    WeightScheme::DataSize => "data_size",
+                    WeightScheme::InverseLoss => "inverse_loss",
+                    WeightScheme::InverseVariance => "inverse_variance",
+                }),
+            ),
+        ]),
+    };
+    let selection = match cfg.selection.policy {
+        SelectionPolicy::Random => obj(vec![
+            ("policy", s("random")),
+            (
+                "clients_per_round",
+                num(cfg.selection.clients_per_round as f64),
+            ),
+        ]),
+        SelectionPolicy::Adaptive {
+            explore_frac,
+            exclude_factor,
+        } => obj(vec![
+            ("policy", s("adaptive")),
+            ("explore_frac", num(explore_frac)),
+            ("exclude_factor", num(exclude_factor)),
+            (
+                "clients_per_round",
+                num(cfg.selection.clients_per_round as f64),
+            ),
+        ]),
+    };
+    let mut straggler_fields = vec![];
+    if let Some(d) = cfg.straggler.deadline_ms {
+        straggler_fields.push(("deadline_ms", num(d as f64)));
+    }
+    if let Some(k) = cfg.straggler.partial_k {
+        straggler_fields.push(("partial_k", num(k as f64)));
+    }
+    let mut train_fields = vec![
+        ("local_epochs", num(cfg.train.local_epochs as f64)),
+        ("lr", num(cfg.train.lr as f64)),
+        ("rounds", num(cfg.train.rounds as f64)),
+        ("converge_eps", num(cfg.train.converge_eps as f64)),
+        ("converge_patience", num(cfg.train.converge_patience as f64)),
+    ];
+    if let Some(t) = cfg.train.target_accuracy {
+        train_fields.push(("target_accuracy", num(t)));
+    }
+    obj(vec![
+        ("name", s(&cfg.name)),
+        ("seed", num(cfg.seed as f64)),
+        (
+            "data",
+            obj(vec![
+                ("dataset", s(&cfg.data.dataset)),
+                ("partition", partition),
+                (
+                    "samples_per_client",
+                    num(cfg.data.samples_per_client as f64),
+                ),
+                ("eval_samples", num(cfg.data.eval_samples as f64)),
+            ]),
+        ),
+        (
+            "cluster",
+            obj(vec![
+                (
+                    "nodes",
+                    arr(cfg.cluster.nodes.iter().map(|(sku, count)| {
+                        obj(vec![("sku", s(sku)), ("count", num(*count as f64))])
+                    })),
+                ),
+                ("cloud_backend", s(&cfg.cluster.cloud_backend)),
+                ("hpc_backend", s(&cfg.cluster.hpc_backend)),
+            ]),
+        ),
+        ("train", obj(train_fields)),
+        ("aggregation", aggregation),
+        ("selection", selection),
+        ("straggler", obj(straggler_fields)),
+        (
+            "compression",
+            obj(vec![
+                ("quant_bits", num(cfg.compression.quant_bits as f64)),
+                ("topk_frac", num(cfg.compression.topk_frac as f64)),
+                ("dropout_keep", num(cfg.compression.dropout_keep as f64)),
+            ]),
+        ),
+        (
+            "faults",
+            obj(vec![
+                ("dropout_prob", num(cfg.faults.dropout_prob)),
+                ("preemption_prob", num(cfg.faults.preemption_prob)),
+                ("straggler_prob", num(cfg.faults.straggler_prob)),
+                ("straggler_factor", num(cfg.faults.straggler_factor)),
+            ]),
+        ),
+        ("artifacts_dir", s(&cfg.artifacts_dir)),
+        (
+            "mock_runtime",
+            V::Bool(cfg.mock_runtime),
+        ),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::presets::{paper_testbed, quickstart};
+    use super::*;
+
+    #[test]
+    fn roundtrip_quickstart() {
+        let cfg = quickstart();
+        let text = to_json(&cfg);
+        let back = from_json_str(&text).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn roundtrip_paper_testbed() {
+        let cfg = paper_testbed();
+        let back = from_json_str(&to_json(&cfg)).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn roundtrip_all_aggregations_and_partitions() {
+        for agg in [
+            Aggregation::FedAvg,
+            Aggregation::FedProx { mu: 0.5 },
+            Aggregation::Weighted(WeightScheme::InverseVariance),
+        ] {
+            for part in [
+                Partition::Iid,
+                Partition::LabelShard {
+                    classes_per_client: 2,
+                },
+                Partition::Dirichlet { alpha: 0.3 },
+            ] {
+                let mut cfg = quickstart();
+                cfg.aggregation = agg;
+                cfg.data.partition = part;
+                let back = from_json_str(&to_json(&cfg)).unwrap();
+                assert_eq!(cfg, back);
+            }
+        }
+    }
+
+    #[test]
+    fn missing_required_field_errors() {
+        assert!(from_json_str(r#"{"seed": 1}"#).is_err());
+    }
+
+    #[test]
+    fn invalid_config_rejected_on_load() {
+        let mut cfg = quickstart();
+        cfg.selection.clients_per_round = 0;
+        // to_json happily writes it; from_json_str must refuse it
+        assert!(from_json_str(&to_json(&cfg)).is_err());
+    }
+}

@@ -1,0 +1,291 @@
+//! Configuration system.
+//!
+//! All tunables of the framework live in one tree of plain-data structs
+//! ([`ExperimentConfig`] at the root) so that every experiment is fully
+//! described by one value: CLI flags, JSON config files and the presets
+//! below all construct the same thing. Modules consume their slice of
+//! the tree (e.g. `orchestrator` reads [`SelectionConfig`]).
+
+pub mod loader;
+pub mod presets;
+pub mod validate;
+
+pub use loader::{from_json_file, from_json_str, to_json};
+pub use presets::{paper_testbed, quickstart, Preset};
+pub use validate::validate;
+
+/// Aggregation strategy (paper §4.4, Table 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Aggregation {
+    /// FedAvg: data-size-weighted mean of client models (McMahan et al.).
+    FedAvg,
+    /// FedProx: FedAvg server-side + proximal term μ in the client
+    /// objective (Li et al.). μ is shipped to clients each round.
+    FedProx { mu: f32 },
+    /// Weighted aggregation with a dynamic weighting scheme.
+    Weighted(WeightScheme),
+}
+
+impl Aggregation {
+    /// The proximal coefficient clients should train with.
+    pub fn mu(&self) -> f32 {
+        match self {
+            Aggregation::FedProx { mu } => *mu,
+            _ => 0.0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Aggregation::FedAvg => "fedavg",
+            Aggregation::FedProx { .. } => "fedprox",
+            Aggregation::Weighted(_) => "weighted",
+        }
+    }
+}
+
+/// Dynamic client-update weighting (paper §4.4: "local data size,
+/// training loss, or gradient variance").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightScheme {
+    /// ∝ n_c (identical to FedAvg weighting).
+    DataSize,
+    /// ∝ n_c / (1 + loss_c): down-weights clients that fit poorly.
+    InverseLoss,
+    /// ∝ n_c / (1 + Var(Δ_c)): down-weights noisy updates.
+    InverseVariance,
+}
+
+/// Client-selection policy (paper §4.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SelectionPolicy {
+    /// Uniform random among available clients (the paper's baseline and
+    /// the ablation arm of E5).
+    Random,
+    /// Adaptive: score = capability × reliability × bandwidth with an
+    /// exploration floor; slow/unreliable nodes are temporarily excluded.
+    Adaptive {
+        /// Fraction of each round's slots reserved for uniform
+        /// exploration so profiles stay fresh (0.0–1.0).
+        explore_frac: f64,
+        /// Clients whose EWMA round time exceeds `exclude_factor` ×
+        /// median are benched for a cool-down period.
+        exclude_factor: f64,
+    },
+}
+
+impl Default for SelectionPolicy {
+    fn default() -> Self {
+        SelectionPolicy::Adaptive {
+            explore_frac: 0.2,
+            exclude_factor: 2.5,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SelectionConfig {
+    pub policy: SelectionPolicy,
+    /// Clients sampled per round (paper §5.1: 20).
+    pub clients_per_round: usize,
+}
+
+/// Straggler mitigation (paper §4.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StragglerConfig {
+    /// Round deadline; late clients are skipped (deadline-based cutoff).
+    /// `None` disables the cutoff (ablation E7).
+    pub deadline_ms: Option<u64>,
+    /// Aggregate after the fastest k updates (partial aggregation).
+    /// `None` waits for all selected clients (minus deadline misses).
+    pub partial_k: Option<usize>,
+}
+
+impl Default for StragglerConfig {
+    fn default() -> Self {
+        StragglerConfig {
+            deadline_ms: Some(60_000),
+            partial_k: None,
+        }
+    }
+}
+
+/// Update compression pipeline (paper §4.3, Table 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompressionConfig {
+    /// Quantization bit-width for values (32 = off, 16, 8).
+    pub quant_bits: u8,
+    /// Keep only the top-k fraction of update entries by magnitude
+    /// (1.0 = off). Applied before quantization.
+    pub topk_frac: f32,
+    /// Federated dropout: fraction of parameters each client trains and
+    /// transmits (1.0 = off). Mask is derived from (round, client) seed.
+    pub dropout_keep: f32,
+}
+
+impl CompressionConfig {
+    pub const NONE: CompressionConfig = CompressionConfig {
+        quant_bits: 32,
+        topk_frac: 1.0,
+        dropout_keep: 1.0,
+    };
+
+    /// The paper's headline configuration: 8-bit quantization + top-25%
+    /// sparsification (≈65% volume reduction in Table 4).
+    pub const PAPER: CompressionConfig = CompressionConfig {
+        quant_bits: 8,
+        topk_frac: 0.25,
+        dropout_keep: 1.0,
+    };
+
+    pub fn is_none(&self) -> bool {
+        self.quant_bits == 32 && self.topk_frac >= 1.0 && self.dropout_keep >= 1.0
+    }
+}
+
+/// Dataset + partitioning (paper §5.2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataConfig {
+    /// One of: "cifar_cnn", "charlm", "medmnist_mlp", "e2e_charlm" —
+    /// dataset and model are paired 1:1 as in the paper.
+    pub dataset: String,
+    pub partition: Partition,
+    /// Training samples per client (mean; actual counts vary ±).
+    pub samples_per_client: usize,
+    /// Centralized held-out evaluation set size (paper §5.3).
+    pub eval_samples: usize,
+}
+
+/// Non-IID partitioning strategy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Partition {
+    Iid,
+    /// Each client sees only `classes_per_client` classes (paper: 2–3).
+    LabelShard { classes_per_client: usize },
+    /// Dirichlet(α) class mixture per client (α→0 = extreme skew).
+    Dirichlet { alpha: f64 },
+}
+
+/// Hybrid testbed composition (paper §5.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// (SKU name, count) pairs; SKUs come from `cluster::catalog`.
+    pub nodes: Vec<(String, usize)>,
+    /// Communication backend for cloud nodes ("grpc") / HPC nodes
+    /// ("mpi"). In-process simulation uses "inproc" for both.
+    pub cloud_backend: String,
+    pub hpc_backend: String,
+}
+
+impl ClusterConfig {
+    pub fn total_nodes(&self) -> usize {
+        self.nodes.iter().map(|(_, c)| c).sum()
+    }
+}
+
+/// Fault injection (paper §5.4 "Straggler Resilience", §3.1 fault
+/// tolerance objective).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Per-round probability that a selected client drops (crash or
+    /// network loss) before reporting.
+    pub dropout_prob: f64,
+    /// Per-round probability a *spot* node is preempted mid-training.
+    pub preemption_prob: f64,
+    /// Probability a client is slowed by `straggler_factor` this round.
+    pub straggler_prob: f64,
+    pub straggler_factor: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            dropout_prob: 0.0,
+            preemption_prob: 0.0,
+            straggler_prob: 0.0,
+            straggler_factor: 4.0,
+        }
+    }
+}
+
+/// Local training hyper-parameters (paper §5.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrainConfig {
+    pub local_epochs: usize,
+    pub lr: f32,
+    /// Target rounds (paper: 100).
+    pub rounds: usize,
+    /// Convergence: stop when relative model delta < eps for
+    /// `patience` consecutive rounds (Algorithm 1 line 13).
+    pub converge_eps: f32,
+    pub converge_patience: usize,
+    /// Optional accuracy target for time-to-accuracy experiments.
+    pub target_accuracy: Option<f64>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            local_epochs: 5,
+            lr: 0.05,
+            rounds: 100,
+            converge_eps: 1e-5,
+            converge_patience: 3,
+            target_accuracy: None,
+        }
+    }
+}
+
+/// Root experiment description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    pub data: DataConfig,
+    pub cluster: ClusterConfig,
+    pub train: TrainConfig,
+    pub aggregation: Aggregation,
+    pub selection: SelectionConfig,
+    pub straggler: StragglerConfig,
+    pub compression: CompressionConfig,
+    pub faults: FaultConfig,
+    /// Directory with AOT artifacts (HLO text + manifest.json).
+    pub artifacts_dir: String,
+    /// Use the pure-Rust mock runtime instead of PJRT (tests / timing
+    /// sims that don't need real learning).
+    pub mock_runtime: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregation_mu() {
+        assert_eq!(Aggregation::FedAvg.mu(), 0.0);
+        assert_eq!(Aggregation::FedProx { mu: 0.1 }.mu(), 0.1);
+        assert_eq!(Aggregation::Weighted(WeightScheme::InverseLoss).mu(), 0.0);
+    }
+
+    #[test]
+    fn compression_none_detection() {
+        assert!(CompressionConfig::NONE.is_none());
+        assert!(!CompressionConfig::PAPER.is_none());
+        let half = CompressionConfig {
+            quant_bits: 32,
+            topk_frac: 0.5,
+            dropout_keep: 1.0,
+        };
+        assert!(!half.is_none());
+    }
+
+    #[test]
+    fn cluster_total() {
+        let c = ClusterConfig {
+            nodes: vec![("a".into(), 3), ("b".into(), 7)],
+            cloud_backend: "inproc".into(),
+            hpc_backend: "inproc".into(),
+        };
+        assert_eq!(c.total_nodes(), 10);
+    }
+}

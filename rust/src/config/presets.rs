@@ -1,0 +1,152 @@
+//! Canonical experiment presets.
+
+use super::*;
+
+/// Named presets exposed on the CLI (`fedhpc train --preset ...`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Preset {
+    /// Small, fast sanity run (8 clients, 10 rounds, MLP).
+    Quickstart,
+    /// The paper's hybrid testbed (§5.1): 30 cloud VMs + 30 HPC nodes,
+    /// 20 clients/round, 100 rounds, 5 local epochs.
+    PaperTestbed,
+}
+
+impl Preset {
+    pub fn parse(s: &str) -> Option<Preset> {
+        match s {
+            "quickstart" => Some(Preset::Quickstart),
+            "paper" | "paper_testbed" => Some(Preset::PaperTestbed),
+            _ => None,
+        }
+    }
+
+    pub fn build(self) -> ExperimentConfig {
+        match self {
+            Preset::Quickstart => quickstart(),
+            Preset::PaperTestbed => paper_testbed(),
+        }
+    }
+}
+
+/// Small, fast sanity configuration used by `examples/quickstart.rs`
+/// and most integration tests.
+pub fn quickstart() -> ExperimentConfig {
+    ExperimentConfig {
+        name: "quickstart".into(),
+        seed: 42,
+        data: DataConfig {
+            dataset: "medmnist_mlp".into(),
+            partition: Partition::LabelShard {
+                classes_per_client: 3,
+            },
+            samples_per_client: 256,
+            eval_samples: 512,
+        },
+        cluster: ClusterConfig {
+            // a small heterogeneous mix: 4 cloud (1 spot) + 4 HPC
+            nodes: vec![
+                ("p3.2xlarge".into(), 2),
+                ("t3.large".into(), 2),
+                ("hpc-rtx6000".into(), 2),
+                ("hpc-cpu".into(), 2),
+            ],
+            cloud_backend: "inproc".into(),
+            hpc_backend: "inproc".into(),
+        },
+        train: TrainConfig {
+            local_epochs: 2,
+            lr: 0.05,
+            rounds: 10,
+            ..TrainConfig::default()
+        },
+        aggregation: Aggregation::FedAvg,
+        selection: SelectionConfig {
+            policy: SelectionPolicy::default(),
+            clients_per_round: 4,
+        },
+        straggler: StragglerConfig::default(),
+        compression: CompressionConfig::NONE,
+        faults: FaultConfig::default(),
+        artifacts_dir: "artifacts".into(),
+        mock_runtime: false,
+    }
+}
+
+/// The paper's experimental setup (§5.1): a hybrid cluster of 30 AWS
+/// EC2 VMs (GPU p3.2xlarge + CPU t3.large) and 30 SLURM-managed HPC
+/// nodes (Quadro RTX 6000 + CPU-only), 20 clients selected per round,
+/// 100 rounds, 5 local epochs.
+pub fn paper_testbed() -> ExperimentConfig {
+    ExperimentConfig {
+        name: "paper_testbed".into(),
+        seed: 7,
+        data: DataConfig {
+            dataset: "cifar_cnn".into(),
+            partition: Partition::LabelShard {
+                classes_per_client: 2,
+            },
+            samples_per_client: 512,
+            eval_samples: 1024,
+        },
+        cluster: ClusterConfig {
+            nodes: vec![
+                // 30 cloud VMs: mixed GPU/CPU, some spot
+                ("p3.2xlarge".into(), 10),
+                ("p3.2xlarge-spot".into(), 5),
+                ("t3.large".into(), 15),
+                // 30 HPC nodes: SLURM partition
+                ("hpc-rtx6000".into(), 20),
+                ("hpc-cpu".into(), 10),
+            ],
+            cloud_backend: "grpc".into(),
+            hpc_backend: "mpi".into(),
+        },
+        train: TrainConfig {
+            local_epochs: 5,
+            lr: 0.02,
+            rounds: 100,
+            ..TrainConfig::default()
+        },
+        aggregation: Aggregation::FedProx { mu: 0.01 },
+        selection: SelectionConfig {
+            policy: SelectionPolicy::default(),
+            clients_per_round: 20,
+        },
+        straggler: StragglerConfig {
+            deadline_ms: Some(120_000),
+            partial_k: Some(16),
+        },
+        compression: CompressionConfig::PAPER,
+        faults: FaultConfig::default(),
+        artifacts_dir: "artifacts".into(),
+        mock_runtime: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        super::super::validate(&quickstart()).unwrap();
+        super::super::validate(&paper_testbed()).unwrap();
+    }
+
+    #[test]
+    fn paper_testbed_matches_section_5_1() {
+        let c = paper_testbed();
+        assert_eq!(c.cluster.total_nodes(), 60);
+        assert_eq!(c.selection.clients_per_round, 20);
+        assert_eq!(c.train.rounds, 100);
+        assert_eq!(c.train.local_epochs, 5);
+    }
+
+    #[test]
+    fn preset_parse() {
+        assert_eq!(Preset::parse("quickstart"), Some(Preset::Quickstart));
+        assert_eq!(Preset::parse("paper"), Some(Preset::PaperTestbed));
+        assert_eq!(Preset::parse("nope"), None);
+    }
+}

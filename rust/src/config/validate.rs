@@ -1,0 +1,157 @@
+//! Config validation: every experiment is checked once, up front, so
+//! failures surface as one readable error instead of a mid-run panic.
+
+use super::*;
+use anyhow::{bail, Result};
+
+pub fn validate(cfg: &ExperimentConfig) -> Result<()> {
+    if cfg.name.is_empty() {
+        bail!("config: name must not be empty");
+    }
+    let n = cfg.cluster.total_nodes();
+    if n == 0 {
+        bail!("config: cluster has no nodes");
+    }
+    if cfg.selection.clients_per_round == 0 {
+        bail!("config: clients_per_round must be >= 1");
+    }
+    if cfg.selection.clients_per_round > n {
+        bail!(
+            "config: clients_per_round ({}) exceeds cluster size ({n})",
+            cfg.selection.clients_per_round
+        );
+    }
+    if let SelectionPolicy::Adaptive {
+        explore_frac,
+        exclude_factor,
+    } = cfg.selection.policy
+    {
+        if !(0.0..=1.0).contains(&explore_frac) {
+            bail!("config: explore_frac must be in [0,1], got {explore_frac}");
+        }
+        if exclude_factor <= 1.0 {
+            bail!("config: exclude_factor must be > 1, got {exclude_factor}");
+        }
+    }
+    if let Some(k) = cfg.straggler.partial_k {
+        if k == 0 {
+            bail!("config: partial_k must be >= 1");
+        }
+        if k > cfg.selection.clients_per_round {
+            bail!(
+                "config: partial_k ({k}) exceeds clients_per_round ({})",
+                cfg.selection.clients_per_round
+            );
+        }
+    }
+    if cfg.straggler.deadline_ms == Some(0) {
+        bail!("config: deadline_ms must be positive");
+    }
+    match cfg.compression.quant_bits {
+        8 | 16 | 32 => {}
+        b => bail!("config: quant_bits must be 8, 16 or 32, got {b}"),
+    }
+    if !(0.0..=1.0).contains(&cfg.compression.topk_frac) || cfg.compression.topk_frac == 0.0 {
+        bail!(
+            "config: topk_frac must be in (0,1], got {}",
+            cfg.compression.topk_frac
+        );
+    }
+    if !(0.0..=1.0).contains(&cfg.compression.dropout_keep)
+        || cfg.compression.dropout_keep == 0.0
+    {
+        bail!(
+            "config: dropout_keep must be in (0,1], got {}",
+            cfg.compression.dropout_keep
+        );
+    }
+    if cfg.train.local_epochs == 0 {
+        bail!("config: local_epochs must be >= 1");
+    }
+    if cfg.train.rounds == 0 {
+        bail!("config: rounds must be >= 1");
+    }
+    if !(cfg.train.lr > 0.0) {
+        bail!("config: lr must be positive, got {}", cfg.train.lr);
+    }
+    if let Aggregation::FedProx { mu } = cfg.aggregation {
+        if !(mu >= 0.0) {
+            bail!("config: fedprox mu must be >= 0, got {mu}");
+        }
+    }
+    match cfg.data.partition {
+        Partition::LabelShard { classes_per_client } if classes_per_client == 0 => {
+            bail!("config: classes_per_client must be >= 1")
+        }
+        Partition::Dirichlet { alpha } if !(alpha > 0.0) => {
+            bail!("config: dirichlet alpha must be > 0, got {alpha}")
+        }
+        _ => {}
+    }
+    if cfg.data.samples_per_client == 0 {
+        bail!("config: samples_per_client must be >= 1");
+    }
+    for p in [cfg.faults.dropout_prob, cfg.faults.preemption_prob, cfg.faults.straggler_prob] {
+        if !(0.0..=1.0).contains(&p) {
+            bail!("config: fault probabilities must be in [0,1], got {p}");
+        }
+    }
+    if cfg.faults.straggler_factor < 1.0 {
+        bail!(
+            "config: straggler_factor must be >= 1, got {}",
+            cfg.faults.straggler_factor
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::presets::quickstart;
+    use super::*;
+
+    #[test]
+    fn rejects_bad_clients_per_round() {
+        let mut c = quickstart();
+        c.selection.clients_per_round = 0;
+        assert!(validate(&c).is_err());
+        c.selection.clients_per_round = 10_000;
+        assert!(validate(&c).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_partial_k() {
+        let mut c = quickstart();
+        c.straggler.partial_k = Some(0);
+        assert!(validate(&c).is_err());
+        c.straggler.partial_k = Some(c.selection.clients_per_round + 1);
+        assert!(validate(&c).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_quant_bits() {
+        let mut c = quickstart();
+        c.compression.quant_bits = 7;
+        assert!(validate(&c).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_probs_and_rates() {
+        let mut c = quickstart();
+        c.faults.dropout_prob = 1.5;
+        assert!(validate(&c).is_err());
+        let mut c = quickstart();
+        c.train.lr = f32::NAN;
+        assert!(validate(&c).is_err());
+        let mut c = quickstart();
+        c.compression.topk_frac = 0.0;
+        assert!(validate(&c).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dirichlet() {
+        let mut c = quickstart();
+        c.data.partition = Partition::Dirichlet { alpha: 0.0 };
+        assert!(validate(&c).is_err());
+    }
+}

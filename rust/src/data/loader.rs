@@ -1,0 +1,127 @@
+//! Minibatch iteration over a [`Shard`]: shuffled epochs, fixed batch
+//! size (the AOT artifacts have static shapes), last partial batch
+//! padded by wrapping — every example still seen once per epoch.
+
+use super::{Batch, Shard};
+use crate::util::rng::Rng;
+
+/// Epoch-based batch iterator.
+pub struct BatchIter<'a> {
+    shard: &'a Shard,
+    batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(shard: &'a Shard, batch: usize, seed: u64) -> Self {
+        assert!(batch > 0);
+        let mut rng = Rng::new(seed ^ 0xBA7C4);
+        let mut order: Vec<usize> = (0..shard.n).collect();
+        rng.shuffle(&mut order);
+        BatchIter {
+            shard,
+            batch,
+            order,
+            cursor: 0,
+            rng,
+        }
+    }
+
+    /// Batches per epoch (ceil).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.shard.n.div_ceil(self.batch)
+    }
+
+    /// Next batch; reshuffles and wraps at epoch end. The batch is
+    /// always exactly `batch` rows (static artifact shapes): the final
+    /// short batch is completed with examples from the epoch start.
+    pub fn next_batch(&mut self) -> Batch {
+        let b = self.batch;
+        let mut x = Vec::with_capacity(b * self.shard.x_len);
+        let mut y = Vec::with_capacity(b * self.shard.y_len);
+        for k in 0..b {
+            if self.cursor >= self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.cursor = 0;
+            }
+            // wrap within the same call for shards smaller than a batch
+            let i = self.order[(self.cursor + 0) % self.order.len()];
+            self.cursor += 1;
+            let (ex, ey) = self.shard.example(i);
+            x.extend_from_slice(ex);
+            y.extend_from_slice(ey);
+            let _ = k;
+        }
+        Batch { x, y, n: b }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard(n: usize) -> Shard {
+        Shard {
+            x: (0..n * 2).map(|v| v as f32).collect(),
+            y: (0..n as i32).collect(),
+            n,
+            x_len: 2,
+            y_len: 1,
+        }
+    }
+
+    #[test]
+    fn batches_have_static_shape() {
+        let s = shard(10);
+        let mut it = BatchIter::new(&s, 4, 0);
+        for _ in 0..6 {
+            let b = it.next_batch();
+            assert_eq!(b.n, 4);
+            assert_eq!(b.x.len(), 8);
+            assert_eq!(b.y.len(), 4);
+        }
+    }
+
+    #[test]
+    fn epoch_sees_every_example() {
+        let s = shard(12);
+        let mut it = BatchIter::new(&s, 4, 1);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..it.batches_per_epoch() {
+            for y in it.next_batch().y {
+                seen.insert(y);
+            }
+        }
+        assert_eq!(seen.len(), 12);
+    }
+
+    #[test]
+    fn shard_smaller_than_batch_wraps() {
+        let s = shard(3);
+        let mut it = BatchIter::new(&s, 8, 2);
+        let b = it.next_batch();
+        assert_eq!(b.n, 8);
+        let distinct: std::collections::HashSet<i32> = b.y.iter().copied().collect();
+        assert_eq!(distinct.len(), 3);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let s = shard(32);
+        let a = BatchIter::new(&s, 8, 3).next_batch();
+        let b = BatchIter::new(&s, 8, 4).next_batch();
+        assert_ne!(a.y, b.y);
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let s = shard(32);
+        let mut i1 = BatchIter::new(&s, 8, 5);
+        let mut i2 = BatchIter::new(&s, 8, 5);
+        for _ in 0..10 {
+            assert_eq!(i1.next_batch(), i2.next_batch());
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Dataset substrate (substitution for CIFAR-10 / LEAF-Shakespeare /
+//! MedMNIST downloads — see DESIGN.md §1).
+//!
+//! Three synthetic workloads with the same shapes and class structure
+//! as the paper's datasets, plus the paper's non-IID partitioners.
+//! Generators are learnable-by-construction (class-conditional
+//! structure with controlled noise) so accuracy curves behave like the
+//! real thing: models beat chance quickly, non-IID partitions hurt
+//! FedAvg more than FedProx, and harder tasks converge slower.
+
+mod loader;
+mod partition;
+mod shakespeare;
+mod synthetic;
+
+pub use loader::BatchIter;
+pub use partition::{partition_indices, PartitionStats};
+pub use shakespeare::CharCorpus;
+pub use synthetic::{ImageTask, SyntheticImages};
+
+use crate::config::DataConfig;
+#[cfg(test)]
+use crate::config::Partition;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// One minibatch in the runtime's wire layout: flat row-major features
+/// + integer labels. `x` is f32 for image tasks and holds casted token
+/// ids for char-LM tasks (the runtime re-encodes to the artifact's
+/// input dtype).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    /// Number of examples (rows) in this batch.
+    pub n: usize,
+}
+
+/// A client's local shard or the central eval set.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    /// Row-major feature matrix, `n * x_len`.
+    pub x: Vec<f32>,
+    /// Labels: one per example for images; `seq_len` per example for LM.
+    pub y: Vec<i32>,
+    pub n: usize,
+    pub x_len: usize,
+    pub y_len: usize,
+}
+
+impl Shard {
+    pub fn example(&self, i: usize) -> (&[f32], &[i32]) {
+        (
+            &self.x[i * self.x_len..(i + 1) * self.x_len],
+            &self.y[i * self.y_len..(i + 1) * self.y_len],
+        )
+    }
+
+    /// Class histogram (image tasks; first label per example for LM).
+    pub fn label_histogram(&self, n_classes: usize) -> Vec<usize> {
+        let mut h = vec![0usize; n_classes];
+        for i in 0..self.n {
+            let (_, y) = self.example(i);
+            let c = y[0] as usize;
+            if c < n_classes {
+                h[c] += 1;
+            }
+        }
+        h
+    }
+}
+
+/// A federated dataset: per-client shards + a centralized eval set
+/// (paper §5.3 evaluates on a centralized held-out set).
+#[derive(Debug, Clone)]
+pub struct FederatedDataset {
+    pub clients: Vec<Shard>,
+    pub eval: Shard,
+    pub n_classes: usize,
+    pub name: String,
+}
+
+impl FederatedDataset {
+    /// Build the workload matching `cfg.dataset` for `n_clients`
+    /// clients. Deterministic in `seed`.
+    pub fn build(cfg: &DataConfig, n_clients: usize, seed: u64) -> Result<FederatedDataset> {
+        let mut rng = Rng::new(seed ^ 0xDA7A_5E7);
+        match cfg.dataset.as_str() {
+            "cifar_cnn" => Ok(build_image(
+                ImageTask::Cifar,
+                cfg,
+                n_clients,
+                &mut rng,
+                "cifar_cnn",
+            )),
+            "medmnist_mlp" => Ok(build_image(
+                ImageTask::MedMnist,
+                cfg,
+                n_clients,
+                &mut rng,
+                "medmnist_mlp",
+            )),
+            "charlm" => Ok(shakespeare::build_charlm(
+                cfg, n_clients, /*seq=*/ 32, /*vocab=*/ 64, &mut rng, "charlm",
+            )),
+            "e2e_charlm" => Ok(shakespeare::build_charlm(
+                cfg, n_clients, /*seq=*/ 128, /*vocab=*/ 96, &mut rng, "e2e_charlm",
+            )),
+            other => bail!("unknown dataset '{other}'"),
+        }
+    }
+}
+
+fn build_image(
+    task: ImageTask,
+    cfg: &DataConfig,
+    n_clients: usize,
+    rng: &mut Rng,
+    name: &str,
+) -> FederatedDataset {
+    let gen = SyntheticImages::new(task, rng.next_u64());
+    let n_classes = gen.n_classes();
+    // generate a global pool, then partition per the configured scheme
+    let total = cfg.samples_per_client * n_clients;
+    let (xs, ys) = gen.generate(total, rng);
+    let assignment = partition_indices(&ys, n_clients, n_classes, cfg.partition, rng);
+    let x_len = gen.x_len();
+    let mut clients = Vec::with_capacity(n_clients);
+    for idxs in &assignment {
+        let mut x = Vec::with_capacity(idxs.len() * x_len);
+        let mut y = Vec::with_capacity(idxs.len());
+        for &i in idxs {
+            x.extend_from_slice(&xs[i * x_len..(i + 1) * x_len]);
+            y.push(ys[i]);
+        }
+        clients.push(Shard {
+            n: idxs.len(),
+            x,
+            y,
+            x_len,
+            y_len: 1,
+        });
+    }
+    // centralized IID eval set from the same generator
+    let (ex, ey) = gen.generate(cfg.eval_samples, rng);
+    let eval = Shard {
+        n: cfg.eval_samples,
+        x: ex,
+        y: ey,
+        x_len,
+        y_len: 1,
+    };
+    FederatedDataset {
+        clients,
+        eval,
+        n_classes,
+        name: name.into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dc(dataset: &str, partition: Partition) -> DataConfig {
+        DataConfig {
+            dataset: dataset.into(),
+            partition,
+            samples_per_client: 64,
+            eval_samples: 128,
+        }
+    }
+
+    #[test]
+    fn build_all_datasets() {
+        for name in ["cifar_cnn", "medmnist_mlp", "charlm"] {
+            let fd = FederatedDataset::build(&dc(name, Partition::Iid), 4, 1).unwrap();
+            assert_eq!(fd.clients.len(), 4);
+            assert!(fd.eval.n > 0);
+            for c in &fd.clients {
+                assert!(c.n > 0);
+                assert_eq!(c.x.len(), c.n * c.x_len);
+                assert_eq!(c.y.len(), c.n * c.y_len);
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_dataset_errors() {
+        assert!(FederatedDataset::build(&dc("imagenet", Partition::Iid), 2, 0).is_err());
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let cfg = dc("medmnist_mlp", Partition::Iid);
+        let a = FederatedDataset::build(&cfg, 3, 9).unwrap();
+        let b = FederatedDataset::build(&cfg, 3, 9).unwrap();
+        assert_eq!(a.clients[0].x, b.clients[0].x);
+        let c = FederatedDataset::build(&cfg, 3, 10).unwrap();
+        assert_ne!(a.clients[0].x, c.clients[0].x);
+    }
+
+    #[test]
+    fn label_shard_limits_classes_per_client() {
+        let cfg = dc(
+            "cifar_cnn",
+            Partition::LabelShard {
+                classes_per_client: 2,
+            },
+        );
+        let fd = FederatedDataset::build(&cfg, 6, 3).unwrap();
+        for c in &fd.clients {
+            let h = c.label_histogram(fd.n_classes);
+            let present = h.iter().filter(|&&n| n > 0).count();
+            assert!(present <= 3, "client saw {present} classes"); // 2–3 per paper
+            assert!(present >= 1);
+        }
+    }
+
+    #[test]
+    fn shard_example_slicing() {
+        let s = Shard {
+            x: (0..12).map(|v| v as f32).collect(),
+            y: vec![0, 1, 2],
+            n: 3,
+            x_len: 4,
+            y_len: 1,
+        };
+        let (x1, y1) = s.example(1);
+        assert_eq!(x1, &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(y1, &[1]);
+    }
+}

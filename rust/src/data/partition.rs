@@ -1,0 +1,271 @@
+//! Non-IID partitioners (paper §5.2): split a labeled pool across
+//! clients under IID, label-shard (2–3 classes per client) or
+//! Dirichlet(α) schemes.
+
+use crate::config::Partition;
+use crate::util::rng::Rng;
+
+/// Assign pool indices to clients. Returns one index list per client.
+/// Every pool element is assigned to exactly one client.
+pub fn partition_indices(
+    labels: &[i32],
+    n_clients: usize,
+    n_classes: usize,
+    scheme: Partition,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    assert!(n_clients > 0);
+    match scheme {
+        Partition::Iid => {
+            let mut idx: Vec<usize> = (0..labels.len()).collect();
+            rng.shuffle(&mut idx);
+            round_robin(&idx, n_clients)
+        }
+        Partition::LabelShard { classes_per_client } => {
+            label_shard(labels, n_clients, n_classes, classes_per_client, rng)
+        }
+        Partition::Dirichlet { alpha } => {
+            dirichlet(labels, n_clients, n_classes, alpha, rng)
+        }
+    }
+}
+
+fn round_robin(idx: &[usize], n_clients: usize) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::with_capacity(idx.len() / n_clients + 1); n_clients];
+    for (i, &v) in idx.iter().enumerate() {
+        out[i % n_clients].push(v);
+    }
+    out
+}
+
+/// Paper-style label sharding: each client is granted 2–3 classes
+/// (`classes_per_client` ± 1, clamped), then class pools are dealt out
+/// among the clients holding that class.
+fn label_shard(
+    labels: &[i32],
+    n_clients: usize,
+    n_classes: usize,
+    classes_per_client: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    // per-class index pools, shuffled
+    let mut pools: Vec<Vec<usize>> = vec![Vec::new(); n_classes];
+    for (i, &l) in labels.iter().enumerate() {
+        pools[(l as usize).min(n_classes - 1)].push(i);
+    }
+    for p in &mut pools {
+        rng.shuffle(p);
+    }
+    // grant class sets: client c gets classes_per_client (sometimes +1,
+    // reproducing the paper's "2–3 classes") distinct classes
+    let mut grants: Vec<Vec<usize>> = Vec::with_capacity(n_clients);
+    for _ in 0..n_clients {
+        let k = (classes_per_client + usize::from(rng.chance(0.5))).min(n_classes);
+        grants.push(rng.sample_indices(n_classes, k));
+    }
+    // ensure every class is granted to at least one client so no data
+    // is stranded
+    for cls in 0..n_classes {
+        if !grants.iter().any(|g| g.contains(&cls)) {
+            let c = rng.below(n_clients);
+            grants[c].push(cls);
+        }
+    }
+    // deal each class pool among its holders
+    let mut out = vec![Vec::new(); n_clients];
+    for cls in 0..n_classes {
+        let holders: Vec<usize> = (0..n_clients)
+            .filter(|&c| grants[c].contains(&cls))
+            .collect();
+        for (i, &idx) in pools[cls].iter().enumerate() {
+            out[holders[i % holders.len()]].push(idx);
+        }
+    }
+    out
+}
+
+/// Dirichlet(α) partition: for each class, split its pool according to
+/// a Dirichlet draw over clients (the standard FL benchmark scheme).
+fn dirichlet(
+    labels: &[i32],
+    n_clients: usize,
+    n_classes: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    let mut pools: Vec<Vec<usize>> = vec![Vec::new(); n_classes];
+    for (i, &l) in labels.iter().enumerate() {
+        pools[(l as usize).min(n_classes - 1)].push(i);
+    }
+    let mut out = vec![Vec::new(); n_clients];
+    for pool in pools.iter_mut() {
+        rng.shuffle(pool);
+        let weights = rng.dirichlet(alpha, n_clients);
+        // convert weights to contiguous slice boundaries
+        let mut start = 0usize;
+        for (c, w) in weights.iter().enumerate() {
+            let take = if c + 1 == n_clients {
+                pool.len() - start
+            } else {
+                ((w * pool.len() as f64).round() as usize).min(pool.len() - start)
+            };
+            out[c].extend_from_slice(&pool[start..start + take]);
+            start += take;
+        }
+    }
+    out
+}
+
+/// Heterogeneity diagnostics for a partition (used in logs + tests).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionStats {
+    /// Per-client sample counts.
+    pub counts: Vec<usize>,
+    /// Mean number of distinct classes per client.
+    pub mean_classes_per_client: f64,
+    /// Max/min count ratio (imbalance).
+    pub imbalance: f64,
+}
+
+impl PartitionStats {
+    pub fn compute(assignment: &[Vec<usize>], labels: &[i32], n_classes: usize) -> Self {
+        let counts: Vec<usize> = assignment.iter().map(|a| a.len()).collect();
+        let mut class_counts = 0usize;
+        for a in assignment {
+            let mut seen = vec![false; n_classes];
+            for &i in a {
+                seen[(labels[i] as usize).min(n_classes - 1)] = true;
+            }
+            class_counts += seen.iter().filter(|&&s| s).count();
+        }
+        let max = *counts.iter().max().unwrap_or(&0) as f64;
+        let min = *counts.iter().min().unwrap_or(&0) as f64;
+        PartitionStats {
+            mean_classes_per_client: class_counts as f64 / assignment.len() as f64,
+            imbalance: if min > 0.0 { max / min } else { f64::INFINITY },
+            counts,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn labels(n: usize, n_classes: usize, seed: u64) -> Vec<i32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.below(n_classes) as i32).collect()
+    }
+
+    fn assert_exact_cover(assign: &[Vec<usize>], n: usize) {
+        let mut seen = vec![false; n];
+        for a in assign {
+            for &i in a {
+                assert!(!seen[i], "index {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some indices unassigned");
+    }
+
+    #[test]
+    fn iid_covers_and_balances() {
+        let l = labels(1000, 10, 0);
+        let mut rng = Rng::new(1);
+        let a = partition_indices(&l, 7, 10, Partition::Iid, &mut rng);
+        assert_exact_cover(&a, 1000);
+        let stats = PartitionStats::compute(&a, &l, 10);
+        assert!(stats.imbalance < 1.05);
+        assert!(stats.mean_classes_per_client > 9.0);
+    }
+
+    #[test]
+    fn label_shard_covers_and_restricts() {
+        let l = labels(2000, 10, 2);
+        let mut rng = Rng::new(3);
+        let a = partition_indices(
+            &l,
+            8,
+            10,
+            Partition::LabelShard {
+                classes_per_client: 2,
+            },
+            &mut rng,
+        );
+        assert_exact_cover(&a, 2000);
+        let stats = PartitionStats::compute(&a, &l, 10);
+        // paper: 2–3 classes per client (a few may pick up stranded classes)
+        assert!(
+            stats.mean_classes_per_client <= 3.5,
+            "mean classes {}",
+            stats.mean_classes_per_client
+        );
+        assert!(stats.mean_classes_per_client >= 1.5);
+    }
+
+    #[test]
+    fn dirichlet_covers_and_skews_with_small_alpha() {
+        let l = labels(3000, 10, 4);
+        let mut rng = Rng::new(5);
+        let skew = partition_indices(&l, 6, 10, Partition::Dirichlet { alpha: 0.1 }, &mut rng);
+        assert_exact_cover(&skew, 3000);
+        let s_skew = PartitionStats::compute(&skew, &l, 10);
+
+        let mut rng2 = Rng::new(5);
+        let flat = partition_indices(
+            &l,
+            6,
+            10,
+            Partition::Dirichlet { alpha: 100.0 },
+            &mut rng2,
+        );
+        assert_exact_cover(&flat, 3000);
+        let s_flat = PartitionStats::compute(&flat, &l, 10);
+        assert!(
+            s_skew.mean_classes_per_client < s_flat.mean_classes_per_client,
+            "alpha=0.1 ({}) should be more skewed than alpha=100 ({})",
+            s_skew.mean_classes_per_client,
+            s_flat.mean_classes_per_client
+        );
+    }
+
+    #[test]
+    fn deterministic_given_rng_seed() {
+        let l = labels(500, 10, 6);
+        let a = partition_indices(
+            &l,
+            4,
+            10,
+            Partition::LabelShard {
+                classes_per_client: 2,
+            },
+            &mut Rng::new(7),
+        );
+        let b = partition_indices(
+            &l,
+            4,
+            10,
+            Partition::LabelShard {
+                classes_per_client: 2,
+            },
+            &mut Rng::new(7),
+        );
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn single_client_gets_everything() {
+        let l = labels(100, 10, 8);
+        for scheme in [
+            Partition::Iid,
+            Partition::LabelShard {
+                classes_per_client: 2,
+            },
+            Partition::Dirichlet { alpha: 0.5 },
+        ] {
+            let a = partition_indices(&l, 1, 10, scheme, &mut Rng::new(9));
+            assert_eq!(a.len(), 1);
+            assert_eq!(a[0].len(), 100);
+        }
+    }
+}

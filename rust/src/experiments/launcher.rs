@@ -1,0 +1,185 @@
+//! Federation launcher: config → running system.
+//!
+//! Builds the simulated heterogeneous cluster, partitions the dataset,
+//! creates one worker thread per node over the in-process transport
+//! (link-shaped per SKU) and runs the orchestrator round loop to
+//! completion. This is the single entry point examples, the CLI and
+//! the accuracy experiments share.
+
+use crate::client::{Worker, WorkerOptions};
+use crate::cluster::Cluster;
+use crate::config::ExperimentConfig;
+use crate::data::{FederatedDataset, Shard};
+use crate::faults::FaultInjector;
+use crate::metrics::TrainingReport;
+use crate::network::inproc::InprocHub;
+use crate::network::{LinkShaper, TrafficLog};
+use crate::orchestrator::{EvalHarness, NoHooks, Orchestrator, OrchestratorHooks};
+use crate::runtime::{MockRuntime, ModelRuntime, PjrtRuntime};
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Build a runtime for `cfg`'s model. Mock runtimes only support
+/// scalar-label tasks (y_len == 1).
+fn build_runtime(cfg: &ExperimentConfig, sample: &Shard, n_classes: usize) -> Result<Box<dyn ModelRuntime>> {
+    if cfg.mock_runtime {
+        if sample.y_len != 1 {
+            bail!(
+                "mock runtime supports scalar-label tasks only (dataset {} has y_len {})",
+                cfg.data.dataset,
+                sample.y_len
+            );
+        }
+        let mut rt = MockRuntime::new(sample.x_len, n_classes);
+        rt.train_batch = 16;
+        rt.eval_batch = 32;
+        Ok(Box::new(rt))
+    } else {
+        let rt = PjrtRuntime::load(&cfg.artifacts_dir, &cfg.data.dataset)
+            .with_context(|| format!("loading PJRT runtime for {}", cfg.data.dataset))?;
+        Ok(Box::new(rt))
+    }
+}
+
+/// Run a full federated training experiment in-process.
+pub fn run_real(cfg: &ExperimentConfig) -> Result<TrainingReport> {
+    run_real_with_hooks(cfg, &mut NoHooks)
+}
+
+/// Like [`run_real`] but with per-round hooks for harnesses.
+pub fn run_real_with_hooks(
+    cfg: &ExperimentConfig,
+    hooks: &mut dyn OrchestratorHooks,
+) -> Result<TrainingReport> {
+    crate::config::validate(cfg)?;
+    let cluster = Cluster::build(&cfg.cluster, cfg.seed)?;
+    let n_clients = cluster.len();
+    log::info!("cluster: {}", cluster.describe());
+    let dataset = FederatedDataset::build(&cfg.data, n_clients, cfg.seed)?;
+
+    let traffic = Arc::new(TrafficLog::new());
+    let hub = InprocHub::new(traffic.clone());
+
+    // PJRT: one shared service (clones share compiled executables);
+    // mock: cheap per-worker instances.
+    let shared_pjrt: Option<PjrtRuntime> = if cfg.mock_runtime {
+        None
+    } else {
+        Some(
+            PjrtRuntime::load(&cfg.artifacts_dir, &cfg.data.dataset)
+                .with_context(|| format!("loading PJRT runtime for {}", cfg.data.dataset))?,
+        )
+    };
+    let worker_runtime = |shard: &Shard| -> Result<Box<dyn ModelRuntime>> {
+        match &shared_pjrt {
+            Some(rt) => Ok(Box::new(rt.clone())),
+            None => build_runtime(cfg, shard, dataset.n_classes),
+        }
+    };
+
+    // initial global model
+    let eval_runtime = worker_runtime(&dataset.eval)?;
+    let initial = eval_runtime.init(cfg.seed as u32)?;
+    let eval = EvalHarness {
+        runtime: eval_runtime,
+        shard: dataset.eval.clone(),
+    };
+
+    // spawn workers
+    let mut handles = Vec::with_capacity(n_clients);
+    for (node, shard) in cluster.nodes.iter().zip(&dataset.clients) {
+        let endpoint = hub.add_client(node.id, LinkShaper::from_class(node.link()));
+        let runtime = worker_runtime(shard)?;
+        let injector = FaultInjector::new(cfg.faults, cfg.seed);
+        let worker = Worker::new(
+            endpoint,
+            runtime,
+            node.clone(),
+            shard.clone(),
+            injector,
+            WorkerOptions {
+                emulate_speed: true,
+                max_slowdown: 4.0,
+                bench_steps: 0,
+                seed: cfg.seed ^ node.id as u64,
+            },
+        );
+        let name = format!("worker-{}", node.id);
+        handles.push(
+            std::thread::Builder::new()
+                .name(name)
+                .spawn(move || worker.run())
+                .context("spawning worker thread")?,
+        );
+    }
+
+    // run the orchestrator on this thread
+    let mut orch = Orchestrator::new(cfg.clone(), hub.server(), traffic, initial, Some(eval));
+    let report = orch.run(Some((n_clients, Duration::from_secs(60))), hooks)?;
+
+    for h in handles {
+        match h.join() {
+            Ok(Ok(_rounds)) => {}
+            Ok(Err(e)) => log::warn!("worker error: {e}"),
+            Err(_) => log::warn!("worker panicked"),
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets::quickstart, Partition};
+
+    /// End-to-end federation over the mock runtime: 8 heterogeneous
+    /// clients, real threads, real transport, real aggregation.
+    #[test]
+    fn mock_federation_learns() {
+        let mut cfg = quickstart();
+        cfg.mock_runtime = true;
+        cfg.train.rounds = 6;
+        cfg.train.local_epochs = 1;
+        cfg.train.lr = 0.2;
+        cfg.selection.clients_per_round = 4;
+        cfg.data.samples_per_client = 96;
+        cfg.data.eval_samples = 256;
+        cfg.data.partition = Partition::Iid;
+        let report = run_real(&cfg).unwrap();
+        assert!(!report.rounds.is_empty());
+        let final_acc = report.final_accuracy().unwrap();
+        assert!(
+            final_acc > 0.5,
+            "mock federation should beat 10-way chance easily, got {final_acc}"
+        );
+        // traffic was accounted
+        let (down, up) = report.total_bytes();
+        assert!(down > 0 && up > 0);
+    }
+
+    #[test]
+    fn mock_federation_with_faults_still_trains() {
+        let mut cfg = quickstart();
+        cfg.mock_runtime = true;
+        cfg.train.rounds = 4;
+        cfg.train.local_epochs = 1;
+        cfg.faults.dropout_prob = 0.25;
+        cfg.data.samples_per_client = 64;
+        cfg.data.eval_samples = 128;
+        cfg.straggler.deadline_ms = Some(15_000);
+        let report = run_real(&cfg).unwrap();
+        // some rounds must have fewer reporters than selected
+        let total_dropped: u32 = report.rounds.iter().map(|r| r.dropped).sum();
+        assert!(total_dropped > 0, "expected injected dropouts");
+        assert!(report.final_accuracy().is_some());
+    }
+
+    #[test]
+    fn charlm_requires_real_runtime() {
+        let mut cfg = quickstart();
+        cfg.mock_runtime = true;
+        cfg.data.dataset = "charlm".into();
+        assert!(run_real(&cfg).is_err());
+    }
+}

@@ -1,0 +1,53 @@
+//! Paper experiment reproductions (DESIGN.md §4 experiment index).
+//!
+//! * [`launcher`] — wires cluster + data + transports + workers +
+//!   orchestrator into a real in-process federation (`run_real`).
+//! * [`simrunner`] — the virtual-time counterpart for timing
+//!   experiments (Table 3, ablations E5/E7).
+//! * [`tables`] — one entry point per paper table/figure; each prints
+//!   the same rows the paper reports and saves CSV/JSON under
+//!   `results/`.
+
+pub mod launcher;
+pub mod simrunner;
+pub mod tables;
+
+pub use launcher::run_real;
+pub use simrunner::{run_sim, SimReport, SimTiming};
+
+use anyhow::{bail, Result};
+
+/// Experiment ids accepted by `fedhpc experiment --id <id>`.
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("table2", "Accuracy: FedAvg vs FedProx on 3 datasets (Table 2 + Fig 2 series)"),
+    ("table3", "Scalability: total time / speedup at 10–60 clients (Table 3)"),
+    ("table4", "Communication volume with/without compression (Table 4)"),
+    ("straggler", "Fault tolerance: 20% dropouts vs baseline (§5.4)"),
+    ("ablation-selection", "Ablation: adaptive selection off → +round time (§5.5)"),
+    ("ablation-compression", "Ablation: compression off → +bandwidth (§5.5)"),
+    ("ablation-straggler", "Ablation: straggler mitigation off → +time-to-80% (§5.5)"),
+];
+
+/// Dispatch an experiment by id. `quick` shrinks workloads for smoke
+/// runs (used by tests); the full-size run regenerates the paper rows.
+pub fn run(id: &str, quick: bool, out_dir: &str) -> Result<()> {
+    match id {
+        "table2" => tables::table2(quick, out_dir),
+        "table3" => tables::table3(quick, out_dir),
+        "table4" => tables::table4(quick, out_dir),
+        "straggler" => tables::straggler(quick, out_dir),
+        "ablation-selection" => tables::ablation_selection(quick, out_dir),
+        "ablation-compression" => tables::ablation_compression(quick, out_dir),
+        "ablation-straggler" => tables::ablation_straggler(quick, out_dir),
+        "all" => {
+            for (id, _) in EXPERIMENTS {
+                run(id, quick, out_dir)?;
+            }
+            Ok(())
+        }
+        other => bail!(
+            "unknown experiment '{other}'; available: {:?}",
+            EXPERIMENTS.iter().map(|(i, _)| *i).collect::<Vec<_>>()
+        ),
+    }
+}

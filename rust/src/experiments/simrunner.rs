@@ -1,0 +1,418 @@
+//! Virtual-time federation (DESIGN.md §4: E2, E5, E7).
+//!
+//! Reuses the *same* selection, registry, fault and aggregation code as
+//! the real loop, but time is discrete-event virtual time derived from
+//! the cluster model:
+//!
+//! ```text
+//! t_client = t_down(link, model bytes)
+//!          + t_compute(steps × ref_step_s / speed, jitter, straggle)
+//!          + t_up(link, compressed bytes)
+//! ```
+//!
+//! The round ends at the partial-k'th arrival, the deadline, or the
+//! last arrival — whichever the config dictates. Optionally each
+//! reporting client *really trains* (mock runtime) so time-to-accuracy
+//! ablations (E7) get honest accuracy curves attached to honest times.
+
+use crate::cluster::{Cluster, Node};
+use crate::compress::expected_wire_bytes;
+use crate::config::ExperimentConfig;
+use crate::data::FederatedDataset;
+use crate::faults::{FaultAction, FaultInjector};
+use crate::metrics::{RoundMetrics, TrainingReport};
+use crate::network::ClientProfile;
+use crate::orchestrator::{aggregate, AggInput, ClientRegistry, EvalHarness, select_clients};
+use crate::runtime::{MockRuntime, ModelRuntime};
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Timing model parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SimTiming {
+    /// Reference-node seconds per train step (measured once on real
+    /// hardware; see EXPERIMENTS.md §Perf for the measured value).
+    pub ref_step_s: f64,
+    /// Fixed orchestrator overhead per round (selection + aggregation).
+    pub orchestrator_overhead_s: f64,
+}
+
+impl Default for SimTiming {
+    fn default() -> Self {
+        SimTiming {
+            ref_step_s: 0.015,
+            orchestrator_overhead_s: 0.05,
+        }
+    }
+}
+
+/// Virtual-time run result.
+#[derive(Debug)]
+pub struct SimReport {
+    pub report: TrainingReport,
+    /// Total virtual seconds.
+    pub total_time_s: f64,
+}
+
+fn profile_of(node: &Node, n_samples: u64) -> ClientProfile {
+    let (bw, _) = node.link().profile();
+    ClientProfile {
+        speed_factor: node.speed_factor,
+        mem_gb: node.sku.mem_gb,
+        link_bw: bw,
+        n_samples,
+        bench_step_ms: 10.0 / node.speed_factor.max(1e-6),
+    }
+}
+
+/// Run a virtual-time experiment. `with_training=false` skips model
+/// math entirely (pure timing, e.g. Table 3); `true` trains a mock
+/// model so accuracy-vs-time questions can be answered.
+pub fn run_sim(
+    cfg: &ExperimentConfig,
+    timing: &SimTiming,
+    with_training: bool,
+) -> Result<SimReport> {
+    crate::config::validate(cfg)?;
+    let cluster = Cluster::build(&cfg.cluster, cfg.seed)?;
+    let n_clients = cluster.len();
+
+    // data + optional mock training state
+    let (dataset, runtime, mut params, eval): (
+        Option<FederatedDataset>,
+        Option<MockRuntime>,
+        Vec<f32>,
+        Option<EvalHarness>,
+    ) = if with_training {
+        let ds = FederatedDataset::build(&cfg.data, n_clients, cfg.seed)?;
+        if ds.clients[0].y_len != 1 {
+            bail!("run_sim with_training requires a scalar-label dataset");
+        }
+        let rt = MockRuntime::new(ds.clients[0].x_len, ds.n_classes);
+        let params = rt.init(cfg.seed as u32)?;
+        let eval = EvalHarness {
+            runtime: Box::new(MockRuntime::new(ds.clients[0].x_len, ds.n_classes)),
+            shard: ds.eval.clone(),
+        };
+        (Some(ds), Some(rt), params, Some(eval))
+    } else {
+        // pure-timing: P from the artifact manifest if present, else a
+        // representative 250k-param model
+        let p = crate::runtime::Manifest::load(&cfg.artifacts_dir)
+            .ok()
+            .and_then(|m| m.model(&cfg.data.dataset).ok().map(|i| i.n_params))
+            .unwrap_or(250_000);
+        (None, None, vec![0f32; p], None)
+    };
+    let n_params = params.len();
+
+    let mut registry = ClientRegistry::new();
+    let samples = cfg.data.samples_per_client as u64;
+    for node in &cluster.nodes {
+        registry.register(node.id, profile_of(node, samples));
+    }
+    let injector = FaultInjector::new(cfg.faults, cfg.seed);
+    let mut rng = Rng::new(cfg.seed ^ 0x51312);
+    let mut now_s = 0.0f64;
+    let mut report = TrainingReport::new(&cfg.name);
+    let mut tracker = crate::orchestrator::ConvergenceTracker::new(
+        cfg.train.converge_eps,
+        cfg.train.converge_patience,
+        cfg.train.target_accuracy,
+    );
+
+    let steps_per_round = {
+        // ceil(samples / batch) × epochs, batch 16 (mock) or artifact
+        let batch = runtime.as_ref().map_or(16, |r| r.train_batch());
+        cfg.data.samples_per_client.div_ceil(batch) * cfg.train.local_epochs
+    };
+    let down_bytes = 4 * n_params as u64;
+    let up_bytes = expected_wire_bytes(n_params, &cfg.compression);
+
+    for round in 0..cfg.train.rounds as u32 {
+        // availability at virtual time: spot nodes may be down
+        let available: Vec<u32> = cluster
+            .nodes
+            .iter()
+            .filter(|n| n.availability.is_up_at(cfg.seed ^ n.id as u64, now_s))
+            .map(|n| n.id)
+            .collect();
+        if available.is_empty() {
+            bail!("round {round}: every node is down");
+        }
+        let mut round_rng = rng.fork(round as u64);
+        let selected = select_clients(
+            &mut registry,
+            &available,
+            &cfg.selection,
+            round,
+            &mut round_rng,
+        );
+
+        // per-client virtual finish times
+        struct Arrival {
+            client: u32,
+            finish_s: f64,
+            reports: bool,
+        }
+        let mut arrivals: Vec<Arrival> = Vec::with_capacity(selected.len());
+        for &c in &selected {
+            let node = cluster.node(c).unwrap();
+            let action = injector.action(round, c, node.sku.preempt_per_hour > 0.0);
+            let t_down = node.transfer_time_s(down_bytes);
+            let work_s = steps_per_round as f64 * timing.ref_step_s;
+            let mut t_compute = node.compute_time_s(work_s, &mut round_rng);
+            if let FaultAction::Straggle { factor } = action {
+                t_compute *= factor;
+            }
+            let t_up = node.transfer_time_s(up_bytes);
+            arrivals.push(Arrival {
+                client: c,
+                finish_s: t_down + t_compute + t_up,
+                reports: action.reports_update(),
+            });
+        }
+        arrivals.sort_by(|a, b| a.finish_s.total_cmp(&b.finish_s));
+
+        // stopping rule: deadline + partial-k over *reporting* arrivals
+        let deadline_s = cfg
+            .straggler
+            .deadline_ms
+            .map(|d| d as f64 / 1e3)
+            .unwrap_or(f64::INFINITY);
+        let partial_k = cfg.straggler.partial_k.unwrap_or(usize::MAX);
+        let mut reporters: Vec<&Arrival> = Vec::new();
+        let mut round_ends_s: f64 = 0.0;
+        for a in &arrivals {
+            if a.finish_s > deadline_s {
+                break;
+            }
+            if a.reports {
+                reporters.push(a);
+                round_ends_s = a.finish_s;
+                if reporters.len() >= partial_k.min(selected.len()) {
+                    break;
+                }
+            }
+        }
+        if reporters.is_empty() {
+            // nobody made it: round burns the full deadline
+            round_ends_s = deadline_s.min(
+                arrivals
+                    .last()
+                    .map(|a| a.finish_s)
+                    .unwrap_or(deadline_s),
+            );
+        } else if reporters.len() < partial_k.min(selected.len()) {
+            // waited until deadline for the rest
+            let last_wait = arrivals
+                .iter()
+                .filter(|a| a.finish_s <= deadline_s)
+                .map(|a| a.finish_s)
+                .fold(0.0, f64::max);
+            round_ends_s = round_ends_s.max(last_wait);
+        }
+        let duration_s = round_ends_s + timing.orchestrator_overhead_s;
+
+        // registry feedback — the adaptive policy learns from virtual time
+        for a in &arrivals {
+            if a.reports && a.finish_s <= round_ends_s + 1e-9 {
+                registry.report_success(a.client, round, a.finish_s * 1e3);
+            } else {
+                registry.report_failure(a.client, round);
+            }
+        }
+
+        // optional real training for reporters
+        let (train_loss, eval_accuracy, eval_loss, model_delta) = if let (
+            Some(ds),
+            Some(rt),
+        ) = (&dataset, &runtime)
+        {
+            let mut inputs = Vec::new();
+            for a in reporters.iter() {
+                let shard = &ds.clients[a.client as usize];
+                let out = crate::client::train_local(
+                    rt,
+                    shard,
+                    &params,
+                    cfg.train.local_epochs,
+                    cfg.train.lr,
+                    cfg.aggregation.mu(),
+                    cfg.seed ^ ((round as u64) << 20 | a.client as u64),
+                    1.0,
+                )?;
+                inputs.push(AggInput {
+                    client: a.client,
+                    delta: out.delta,
+                    n_samples: out.n_samples,
+                    train_loss: out.train_loss,
+                    update_var: out.update_var,
+                });
+            }
+            if inputs.is_empty() {
+                (f64::NAN, None, None, 0.0)
+            } else {
+                let out = aggregate(&params, &inputs, cfg.aggregation)?;
+                let e = eval.as_ref().unwrap().evaluate(&out.new_params)?;
+                let delta =
+                    crate::orchestrator::ConvergenceTracker::relative_delta(&params, &out.new_params);
+                params = out.new_params;
+                (
+                    out.mean_train_loss,
+                    Some(e.accuracy()),
+                    Some(e.mean_loss()),
+                    delta,
+                )
+            }
+        } else {
+            (f64::NAN, None, None, 0.0)
+        };
+
+        now_s += duration_s;
+        let n_rep = reporters.len() as u32;
+        report.push(RoundMetrics {
+            round,
+            selected: selected.len() as u32,
+            reported: n_rep,
+            dropped: selected.len() as u32 - n_rep,
+            deadline_misses: arrivals
+                .iter()
+                .filter(|a| a.finish_s > deadline_s)
+                .count() as u32,
+            train_loss,
+            eval_accuracy,
+            eval_loss,
+            duration_s,
+            bytes_down: down_bytes * selected.len() as u64,
+            bytes_up: up_bytes * n_rep as u64,
+            model_delta,
+        });
+
+        if with_training {
+            if let (Some(acc), Some(target)) = (eval_accuracy, cfg.train.target_accuracy) {
+                if acc >= target {
+                    report.target_accuracy_at = Some(round);
+                    break;
+                }
+            }
+            let _ = &mut tracker;
+        }
+    }
+    if let Some(t) = cfg.train.target_accuracy {
+        report.target_accuracy_at = report.target_accuracy_at.or(report.rounds_to_accuracy(t));
+    }
+    Ok(SimReport {
+        total_time_s: now_s,
+        report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{paper_testbed, quickstart};
+
+    fn timing() -> SimTiming {
+        SimTiming::default()
+    }
+
+    #[test]
+    fn pure_timing_run_produces_rounds() {
+        let mut cfg = paper_testbed();
+        cfg.train.rounds = 5;
+        let sim = run_sim(&cfg, &timing(), false).unwrap();
+        assert_eq!(sim.report.rounds.len(), 5);
+        assert!(sim.total_time_s > 0.0);
+        for r in &sim.report.rounds {
+            assert!(r.reported > 0, "round {} had no reporters", r.round);
+            assert!(r.duration_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn more_clients_is_faster_per_data(
+    ) {
+        // Table 3's shape: with samples split over more clients, total
+        // time shrinks (each client trains fewer steps)
+        let total_samples = 10_240;
+        let mut times = Vec::new();
+        for n in [10usize, 40] {
+            let mut cfg = paper_testbed();
+            cfg.cluster.nodes = vec![("hpc-rtx6000".into(), n)];
+            cfg.selection.clients_per_round = n;
+            cfg.data.samples_per_client = total_samples / n;
+            cfg.train.rounds = 5;
+            cfg.straggler.partial_k = None;
+            let sim = run_sim(&cfg, &timing(), false).unwrap();
+            times.push(sim.total_time_s);
+        }
+        assert!(
+            times[1] < times[0] * 0.5,
+            "40 clients ({:.1}s) should be ≫ faster than 10 ({:.1}s)",
+            times[1],
+            times[0]
+        );
+    }
+
+    #[test]
+    fn partial_k_shortens_rounds() {
+        let mut cfg = paper_testbed();
+        cfg.train.rounds = 5;
+        cfg.straggler.partial_k = None;
+        cfg.straggler.deadline_ms = None;
+        let full = run_sim(&cfg, &timing(), false).unwrap();
+        cfg.straggler.partial_k = Some(5);
+        let partial = run_sim(&cfg, &timing(), false).unwrap();
+        assert!(
+            partial.total_time_s < full.total_time_s,
+            "partial {:.1}s !< full {:.1}s",
+            partial.total_time_s,
+            full.total_time_s
+        );
+    }
+
+    #[test]
+    fn training_sim_learns() {
+        let mut cfg = quickstart();
+        cfg.mock_runtime = true;
+        cfg.train.rounds = 8;
+        cfg.train.lr = 0.2;
+        cfg.train.local_epochs = 1;
+        cfg.data.samples_per_client = 64;
+        cfg.data.eval_samples = 128;
+        cfg.data.partition = crate::config::Partition::Iid;
+        let sim = run_sim(&cfg, &timing(), true).unwrap();
+        let acc = sim.report.final_accuracy().unwrap();
+        assert!(acc > 0.4, "sim training should learn, got {acc}");
+    }
+
+    #[test]
+    fn compression_reduces_sim_upload() {
+        let mut cfg = paper_testbed();
+        cfg.train.rounds = 3;
+        cfg.compression = crate::config::CompressionConfig::NONE;
+        let none = run_sim(&cfg, &timing(), false).unwrap();
+        cfg.compression = crate::config::CompressionConfig::PAPER;
+        let comp = run_sim(&cfg, &timing(), false).unwrap();
+        let (_, up_none) = none.report.total_bytes();
+        let (_, up_comp) = comp.report.total_bytes();
+        let ratio = up_comp as f64 / up_none as f64;
+        assert!(
+            (0.2..0.45).contains(&ratio),
+            "compressed/dense upload ratio {ratio}"
+        );
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let mut cfg = paper_testbed();
+        cfg.train.rounds = 3;
+        let a = run_sim(&cfg, &timing(), false).unwrap();
+        let b = run_sim(&cfg, &timing(), false).unwrap();
+        assert_eq!(a.total_time_s, b.total_time_s);
+        cfg.seed += 1;
+        let c = run_sim(&cfg, &timing(), false).unwrap();
+        assert_ne!(a.total_time_s, c.total_time_s);
+    }
+}

@@ -1,0 +1,380 @@
+//! Table/figure harnesses: each function regenerates one paper
+//! artifact, prints the same rows the paper reports, and saves the
+//! underlying series under `results/` (CSV for Fig 2 curves, JSON for
+//! everything). Paper numbers quoted in comments for side-by-side
+//! reading; EXPERIMENTS.md records paper-vs-measured.
+//!
+//! `quick=true` shrinks every workload to smoke-test size (mock
+//! runtime, few rounds) so the whole suite runs in CI seconds.
+
+use super::launcher::run_real;
+use super::simrunner::{run_sim, SimTiming};
+use crate::config::{
+    presets::paper_testbed, Aggregation, CompressionConfig, ExperimentConfig, Partition,
+    SelectionPolicy,
+};
+use crate::metrics::TrainingReport;
+use crate::util::human_bytes;
+use anyhow::Result;
+
+fn out(dir: &str, rep: &TrainingReport) {
+    if let Err(e) = rep.save(dir) {
+        log::warn!("saving report failed: {e}");
+    }
+}
+
+/// Base config for accuracy experiments (real training).
+fn accuracy_cfg(dataset: &str, quick: bool) -> ExperimentConfig {
+    let mut cfg = paper_testbed();
+    cfg.data.dataset = dataset.into();
+    cfg.data.partition = Partition::LabelShard {
+        classes_per_client: 2,
+    };
+    if quick {
+        cfg.mock_runtime = true; // only valid for scalar-label tasks
+        cfg.cluster.nodes = vec![("hpc-rtx6000".into(), 6)];
+        cfg.selection.clients_per_round = 4;
+        cfg.train.rounds = 4;
+        cfg.train.local_epochs = 1;
+        cfg.data.samples_per_client = 64;
+        cfg.data.eval_samples = 128;
+        cfg.straggler = crate::config::StragglerConfig::default();
+    } else {
+        // tractable-on-CPU scale that preserves the paper's structure:
+        // heterogeneous 12-node cluster, 8 clients/round
+        cfg.cluster.nodes = vec![
+            ("p3.2xlarge".into(), 3),
+            ("t3.large".into(), 3),
+            ("hpc-rtx6000".into(), 4),
+            ("hpc-cpu".into(), 2),
+        ];
+        cfg.selection.clients_per_round = 8;
+        cfg.train.rounds = 12; // tractable on the 1-vCPU testbed
+        cfg.train.local_epochs = 2;
+        cfg.data.samples_per_client = 128;
+        cfg.data.eval_samples = 512;
+        cfg.straggler.deadline_ms = Some(600_000);
+        cfg.straggler.partial_k = None;
+    }
+    cfg.compression = CompressionConfig::NONE;
+    cfg
+}
+
+/// Table 2 + Fig 2: FedAvg vs FedProx accuracy on the three datasets
+/// under non-IID partitioning. Paper: CIFAR-10 81.7/83.2, Shakespeare
+/// 57.9/59.3, MedMNIST 89.3/90.1 — FedProx wins everywhere; we check
+/// the ordering and save per-round curves (Fig 2).
+pub fn table2(quick: bool, out_dir: &str) -> Result<()> {
+    let datasets: &[&str] = if quick {
+        &["medmnist_mlp"]
+    } else {
+        &["cifar_cnn", "charlm", "medmnist_mlp"]
+    };
+    println!("\n=== Table 2: FedAvg vs FedProx (non-IID) ===");
+    println!("{:<14} {:>10} {:>10}", "dataset", "FedAvg", "FedProx");
+    for ds in datasets {
+        let mut accs = Vec::new();
+        for agg in [Aggregation::FedAvg, Aggregation::FedProx { mu: 0.05 }] {
+            let mut cfg = accuracy_cfg(ds, quick);
+            if *ds == "charlm" {
+                cfg.mock_runtime = false; // LM needs the real runtime
+                cfg.train.lr = 0.3;
+            }
+            if *ds == "cifar_cnn" && !quick {
+                cfg.train.lr = 0.02;
+            }
+            cfg.aggregation = agg;
+            cfg.name = format!("table2_{ds}_{}", agg.name());
+            let rep = run_real(&cfg)?;
+            out(out_dir, &rep); // per-round series = Fig 2 source
+            accs.push(rep.best_accuracy().unwrap_or(0.0));
+        }
+        println!(
+            "{:<14} {:>9.1}% {:>9.1}%",
+            ds,
+            accs[0] * 100.0,
+            accs[1] * 100.0
+        );
+    }
+    println!("(paper: cifar 81.7/83.2, shakespeare 57.9/59.3, medmnist 89.3/90.1)");
+    Ok(())
+}
+
+/// Table 3: scalability — total training time and speedup from 10 to 60
+/// clients over a fixed global workload. Paper: 100→22 min, 4.55×.
+pub fn table3(quick: bool, out_dir: &str) -> Result<()> {
+    let rounds = if quick { 5 } else { 100 };
+    let total_samples = 61_440; // divisible by 10..60
+    println!("\n=== Table 3: scalability (virtual time) ===");
+    println!(
+        "{:>8} {:>14} {:>10}",
+        "clients", "total time", "speedup"
+    );
+    let mut base_time = None;
+    let mut rows = Vec::new();
+    for n in [10usize, 20, 30, 40, 50, 60] {
+        let mut cfg = paper_testbed();
+        // keep the paper's hybrid mix ratio at every scale
+        let gpu_cloud = n / 6 + usize::from(n % 6 > 3);
+        let cpu_cloud = n / 4;
+        let gpu_hpc = n / 3;
+        let cpu_hpc = n - gpu_cloud - cpu_cloud - gpu_hpc;
+        cfg.cluster.nodes = vec![
+            ("p3.2xlarge".into(), gpu_cloud),
+            ("t3.large".into(), cpu_cloud),
+            ("hpc-rtx6000".into(), gpu_hpc),
+            ("hpc-cpu".into(), cpu_hpc),
+        ];
+        cfg.selection.clients_per_round = (n * 2 / 3).max(1);
+        cfg.data.samples_per_client = total_samples / n;
+        cfg.train.rounds = rounds;
+        cfg.straggler.partial_k = Some((cfg.selection.clients_per_round * 3 / 5).max(1));
+        cfg.name = format!("table3_{n}clients");
+        // average over seeds: the per-instance speed lottery + adaptive
+        // selection make single runs noisy at small n
+        let seeds = [7u64, 8, 9];
+        let mut t = 0.0;
+        for &s in &seeds {
+            cfg.seed = s;
+            let sim = run_sim(&cfg, &SimTiming::default(), false)?;
+            t += sim.total_time_s / seeds.len() as f64;
+            if s == seeds[0] {
+                out(out_dir, &sim.report);
+            }
+        }
+        let speedup = base_time.get_or_insert(t).max(1e-9) / t * 1.0;
+        let speedup = if n == 10 { 1.0 } else { speedup };
+        println!(
+            "{:>8} {:>12.1} m {:>9.2}x",
+            n,
+            t / 60.0,
+            speedup
+        );
+        rows.push((n, t, speedup));
+    }
+    println!("(paper: 10→100 min 1.00x … 60→22 min 4.55x)");
+    Ok(())
+}
+
+/// Table 4: communication volume per round with vs without compression
+/// over rounds 1–10. Paper: ~45 MB → ~15 MB (≈65% reduction).
+pub fn table4(quick: bool, out_dir: &str) -> Result<()> {
+    let mut base = accuracy_cfg("medmnist_mlp", quick);
+    base.train.rounds = if quick { 3 } else { 10 };
+    base.mock_runtime = quick;
+    println!("\n=== Table 4: per-round communication volume ===");
+    println!(
+        "{:>6} {:>18} {:>18}",
+        "round", "no compression", "with compression"
+    );
+    let mut reports = Vec::new();
+    for (label, comp) in [
+        ("none", CompressionConfig::NONE),
+        ("paper", CompressionConfig::PAPER),
+    ] {
+        let mut cfg = base.clone();
+        cfg.compression = comp;
+        cfg.name = format!("table4_{label}");
+        let rep = run_real(&cfg)?;
+        out(out_dir, &rep);
+        reports.push(rep);
+    }
+    let rounds = reports[0].rounds.len().min(reports[1].rounds.len());
+    for i in 0..rounds {
+        println!(
+            "{:>6} {:>18} {:>18}",
+            i + 1,
+            human_bytes(reports[0].rounds[i].bytes_up),
+            human_bytes(reports[1].rounds[i].bytes_up),
+        );
+    }
+    let (u0, u1) = (
+        reports[0].mean_upload_per_round(),
+        reports[1].mean_upload_per_round(),
+    );
+    println!(
+        "mean upload/round: {} -> {} ({:.0}% reduction; paper ≈65%)",
+        human_bytes(u0 as u64),
+        human_bytes(u1 as u64),
+        (1.0 - u1 / u0) * 100.0
+    );
+    Ok(())
+}
+
+/// §5.4 straggler resilience: 20% dropouts per round must cost <~2%
+/// final accuracy (paper: <1.8%).
+pub fn straggler(quick: bool, out_dir: &str) -> Result<()> {
+    let mut base = accuracy_cfg("medmnist_mlp", quick);
+    base.mock_runtime = true; // accuracy-delta experiment: mock suffices + fast
+    // mock compute is ms-scale: a short deadline keeps dropout rounds
+    // from burning 60 s each waiting for clients that will never report
+    base.straggler.deadline_ms = Some(3_000);
+    base.straggler.partial_k = None;
+    if !quick {
+        base.train.rounds = 25;
+        base.cluster.nodes = vec![("hpc-rtx6000".into(), 12)];
+        base.selection.clients_per_round = 8;
+    }
+    println!("\n=== §5.4 straggler resilience (20% dropouts) ===");
+    let mut accs = Vec::new();
+    for (label, p) in [("baseline", 0.0), ("dropout20", 0.2)] {
+        let mut cfg = base.clone();
+        cfg.faults.dropout_prob = p;
+        cfg.name = format!("straggler_{label}");
+        let rep = run_real(&cfg)?;
+        out(out_dir, &rep);
+        accs.push(rep.best_accuracy().unwrap_or(0.0));
+    }
+    println!(
+        "baseline {:.1}%  with-dropouts {:.1}%  drop {:.2} pp (paper <1.8 pp)",
+        accs[0] * 100.0,
+        accs[1] * 100.0,
+        (accs[0] - accs[1]) * 100.0
+    );
+    Ok(())
+}
+
+/// §5.5 ablation: disabling adaptive selection → +12% round duration.
+pub fn ablation_selection(quick: bool, out_dir: &str) -> Result<()> {
+    let rounds = if quick { 10 } else { 60 };
+    println!("\n=== §5.5 ablation: adaptive selection ===");
+    let mut durs = Vec::new();
+    for (label, policy) in [
+        ("adaptive", SelectionPolicy::default()),
+        ("random", SelectionPolicy::Random),
+    ] {
+        let mut cfg = paper_testbed();
+        cfg.train.rounds = rounds;
+        cfg.selection.policy = policy;
+        cfg.straggler.partial_k = None; // isolate the selection effect
+        cfg.straggler.deadline_ms = Some(3_600_000);
+        cfg.name = format!("ablation_selection_{label}");
+        let sim = run_sim(&cfg, &SimTiming::default(), false)?;
+        out(out_dir, &sim.report);
+        durs.push(sim.total_time_s / rounds as f64);
+    }
+    println!(
+        "mean round: adaptive {:.1}s, random {:.1}s → +{:.0}% without adaptive (paper +12%)",
+        durs[0],
+        durs[1],
+        (durs[1] / durs[0] - 1.0) * 100.0
+    );
+    Ok(())
+}
+
+/// §5.5 ablation: disabling compression → +70% bandwidth.
+pub fn ablation_compression(quick: bool, out_dir: &str) -> Result<()> {
+    let mut base = accuracy_cfg("medmnist_mlp", true);
+    base.mock_runtime = true;
+    base.train.rounds = if quick { 3 } else { 10 };
+    println!("\n=== §5.5 ablation: communication compression ===");
+    let mut ups = Vec::new();
+    for (label, comp) in [
+        ("with", CompressionConfig::PAPER),
+        ("without", CompressionConfig::NONE),
+    ] {
+        let mut cfg = base.clone();
+        cfg.compression = comp;
+        cfg.name = format!("ablation_compression_{label}");
+        let rep = run_real(&cfg)?;
+        out(out_dir, &rep);
+        ups.push(rep.mean_upload_per_round());
+    }
+    println!(
+        "upload/round: with {} → without {} (+{:.0}%; paper +70%)",
+        human_bytes(ups[0] as u64),
+        human_bytes(ups[1] as u64),
+        (ups[1] / ups[0] - 1.0) * 100.0
+    );
+    Ok(())
+}
+
+/// §5.5 ablation: disabling straggler mitigation → 15–20% longer to
+/// reach 80% accuracy (virtual time, with real mock training).
+pub fn ablation_straggler(quick: bool, out_dir: &str) -> Result<()> {
+    println!("\n=== §5.5 ablation: straggler mitigation ===");
+    let target = if quick { 0.5 } else { 0.8 };
+    let mut times = Vec::new();
+    for (label, mitigated) in [("with", true), ("without", false)] {
+        let mut cfg = paper_testbed();
+        cfg.mock_runtime = true;
+        cfg.data.dataset = "medmnist_mlp".into();
+        cfg.data.partition = Partition::LabelShard {
+            classes_per_client: 3,
+        };
+        cfg.data.samples_per_client = if quick { 64 } else { 192 };
+        cfg.data.eval_samples = if quick { 128 } else { 512 };
+        cfg.train.rounds = if quick { 10 } else { 60 };
+        cfg.train.lr = 0.2;
+        cfg.train.local_epochs = if quick { 1 } else { 2 };
+        cfg.train.target_accuracy = Some(target);
+        cfg.faults.straggler_prob = 0.25;
+        cfg.faults.straggler_factor = 6.0;
+        if mitigated {
+            cfg.straggler.deadline_ms = Some(120_000);
+            cfg.straggler.partial_k = Some(16);
+        } else {
+            cfg.straggler.deadline_ms = None;
+            cfg.straggler.partial_k = None;
+        }
+        cfg.name = format!("ablation_straggler_{label}");
+        let sim = run_sim(&cfg, &SimTiming::default(), true)?;
+        out(out_dir, &sim.report);
+        let t = sim
+            .report
+            .time_to_accuracy(target)
+            .unwrap_or(sim.total_time_s);
+        times.push(t);
+    }
+    println!(
+        "virtual time to {:.0}% acc: with {:.1}s, without {:.1}s (+{:.0}%; paper +15–20%)",
+        target * 100.0,
+        times[0],
+        times[1],
+        (times[1] / times[0] - 1.0) * 100.0
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Quick-mode smoke tests for every harness that doesn't need PJRT
+    // artifacts. table2 quick-mode uses the mock runtime.
+
+    #[test]
+    fn table3_quick() {
+        table3(true, "/tmp/fedhpc_test_results").unwrap();
+    }
+
+    #[test]
+    fn table4_quick() {
+        table4(true, "/tmp/fedhpc_test_results").unwrap();
+    }
+
+    #[test]
+    fn straggler_quick() {
+        straggler(true, "/tmp/fedhpc_test_results").unwrap();
+    }
+
+    #[test]
+    fn ablation_selection_quick() {
+        ablation_selection(true, "/tmp/fedhpc_test_results").unwrap();
+    }
+
+    #[test]
+    fn ablation_compression_quick() {
+        ablation_compression(true, "/tmp/fedhpc_test_results").unwrap();
+    }
+
+    #[test]
+    fn ablation_straggler_quick() {
+        ablation_straggler(true, "/tmp/fedhpc_test_results").unwrap();
+    }
+
+    #[test]
+    fn table2_quick() {
+        table2(true, "/tmp/fedhpc_test_results").unwrap();
+    }
+}

@@ -1,0 +1,153 @@
+//! Fault injection (paper §3.1 fault-tolerance objective, §5.4
+//! straggler-resilience experiment).
+//!
+//! Deterministic per (seed, round, client): experiments replay exactly,
+//! and the orchestrator/client code paths cannot tell injected faults
+//! from real ones — dropouts simply never report, preemptions abort
+//! mid-training, stragglers run N× slower, network faults degrade the
+//! link.
+
+use crate::config::FaultConfig;
+use crate::util::rng::Rng;
+
+/// What happens to one client in one round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// Train and report normally.
+    None,
+    /// Vanish for the round (crash / network partition): no update.
+    Dropout,
+    /// Start training, get killed partway (spot preemption): no update,
+    /// wasted compute.
+    Preempt {
+        /// Fraction of local work completed before the kill.
+        progress: f64,
+    },
+    /// Run `factor`× slower this round (noisy neighbor, thermal
+    /// throttling, shared queue contention).
+    Straggle { factor: f64 },
+}
+
+impl FaultAction {
+    pub fn reports_update(&self) -> bool {
+        matches!(self, FaultAction::None | FaultAction::Straggle { .. })
+    }
+}
+
+/// Deterministic fault oracle.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    cfg: FaultConfig,
+    seed: u64,
+}
+
+impl FaultInjector {
+    pub fn new(cfg: FaultConfig, seed: u64) -> Self {
+        FaultInjector { cfg, seed }
+    }
+
+    pub fn disabled() -> Self {
+        FaultInjector {
+            cfg: FaultConfig::default(),
+            seed: 0,
+        }
+    }
+
+    fn rng_for(&self, round: u32, client: u32) -> Rng {
+        Rng::new(
+            self.seed
+                ^ ((round as u64) << 32 | client as u64).wrapping_mul(0xFA17_1B2D_9E37_79B9),
+        )
+    }
+
+    /// Decide this client's fate for the round. Checks are ordered by
+    /// severity: dropout > preemption > straggle.
+    pub fn action(&self, round: u32, client: u32, is_spot: bool) -> FaultAction {
+        let mut rng = self.rng_for(round, client);
+        if rng.chance(self.cfg.dropout_prob) {
+            return FaultAction::Dropout;
+        }
+        if is_spot && rng.chance(self.cfg.preemption_prob) {
+            return FaultAction::Preempt {
+                progress: rng.f64(),
+            };
+        }
+        if rng.chance(self.cfg.straggler_prob) {
+            return FaultAction::Straggle {
+                factor: self.cfg.straggler_factor.max(1.0),
+            };
+        }
+        FaultAction::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(dropout: f64, preempt: f64, straggle: f64) -> FaultConfig {
+        FaultConfig {
+            dropout_prob: dropout,
+            preemption_prob: preempt,
+            straggler_prob: straggle,
+            straggler_factor: 4.0,
+        }
+    }
+
+    #[test]
+    fn no_faults_when_disabled() {
+        let inj = FaultInjector::disabled();
+        for r in 0..50 {
+            for c in 0..20 {
+                assert_eq!(inj.action(r, c, true), FaultAction::None);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_round_client() {
+        let inj = FaultInjector::new(cfg(0.3, 0.3, 0.3), 7);
+        for r in 0..20 {
+            for c in 0..10 {
+                assert_eq!(inj.action(r, c, true), inj.action(r, c, true));
+            }
+        }
+    }
+
+    #[test]
+    fn dropout_rate_is_calibrated() {
+        // paper §5.4: "20% simulated client dropouts per round"
+        let inj = FaultInjector::new(cfg(0.2, 0.0, 0.0), 1);
+        let n = 10_000;
+        let drops = (0..n)
+            .filter(|i| inj.action((i / 100) as u32, (i % 100) as u32, false) == FaultAction::Dropout)
+            .count();
+        let rate = drops as f64 / n as f64;
+        assert!((rate - 0.2).abs() < 0.02, "dropout rate {rate}");
+    }
+
+    #[test]
+    fn preemption_only_hits_spot_nodes() {
+        let inj = FaultInjector::new(cfg(0.0, 0.9, 0.0), 2);
+        for r in 0..20 {
+            assert_eq!(inj.action(r, 0, false), FaultAction::None);
+        }
+        let preempts = (0..100)
+            .filter(|&r| matches!(inj.action(r, 0, true), FaultAction::Preempt { .. }))
+            .count();
+        assert!(preempts > 70, "spot preemptions {preempts}/100");
+    }
+
+    #[test]
+    fn straggle_factor_and_report_semantics() {
+        let inj = FaultInjector::new(cfg(0.0, 0.0, 1.0), 3);
+        match inj.action(0, 0, false) {
+            FaultAction::Straggle { factor } => assert_eq!(factor, 4.0),
+            other => panic!("expected straggle, got {other:?}"),
+        }
+        assert!(FaultAction::None.reports_update());
+        assert!(FaultAction::Straggle { factor: 2.0 }.reports_update());
+        assert!(!FaultAction::Dropout.reports_update());
+        assert!(!FaultAction::Preempt { progress: 0.5 }.reports_update());
+    }
+}

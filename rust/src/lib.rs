@@ -1,0 +1,42 @@
+//! # FedHPC — federated learning for heterogeneous HPC + cloud
+//!
+//! A from-scratch reproduction of *"Federated Learning Framework for
+//! Scalable AI in Heterogeneous HPC and Cloud Environments"* (CS.DC
+//! 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: central
+//!   orchestrator, adaptive client selection, straggler mitigation,
+//!   communication-efficient updates, scheduler adapters and
+//!   fault-tolerant aggregation, plus every substrate they need
+//!   (cluster simulation, transports, codecs, datasets, metrics).
+//! * **L2/L1 (python/, build-time only)** — JAX models and Pallas
+//!   kernels AOT-lowered to HLO text in `artifacts/`, executed here
+//!   through the PJRT CPU client ([`runtime`]). Python is never on the
+//!   training path.
+//!
+//! Start at [`orchestrator::Orchestrator`] (server side),
+//! [`client::Worker`] (client side) and [`experiments`] (paper
+//! table/figure reproductions). `examples/quickstart.rs` is the
+//! five-minute tour.
+
+pub mod client;
+pub mod cluster;
+pub mod compress;
+pub mod config;
+pub mod data;
+pub mod faults;
+pub mod metrics;
+pub mod network;
+pub mod orchestrator;
+pub mod runtime;
+pub mod scheduler;
+pub mod secure;
+pub mod sim;
+pub mod util;
+
+pub mod benchkit;
+pub mod experiments;
+pub mod testkit;
+
+/// Crate version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

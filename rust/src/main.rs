@@ -1,0 +1,297 @@
+//! `fedhpc` — CLI launcher for the federated learning framework.
+//!
+//! Subcommands:
+//!   train        run a federated training experiment (preset or JSON config)
+//!   experiment   regenerate a paper table/figure (see DESIGN.md §4)
+//!   serve        start a TCP orchestrator (multi-process deployment)
+//!   worker       start a TCP worker and connect to an orchestrator
+//!   sim          virtual-time run (timing studies)
+//!   list         list models, presets, SKUs and experiments
+
+use anyhow::{Context, Result};
+use fedhpc::client::{Worker, WorkerOptions};
+use fedhpc::cluster::Cluster;
+use fedhpc::config::{self, ExperimentConfig, Preset};
+use fedhpc::data::FederatedDataset;
+use fedhpc::experiments;
+use fedhpc::faults::FaultInjector;
+use fedhpc::network::tcp::{TcpClient, TcpServer};
+use fedhpc::network::{LinkShaper, Msg, TrafficLog};
+use fedhpc::orchestrator::{EvalHarness, NoHooks, Orchestrator};
+use fedhpc::runtime::{Manifest, MockRuntime, ModelRuntime, PjrtRuntime};
+use fedhpc::util::argparse::Args;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    fedhpc::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    let (cmd, rest) = argv.split_first().unwrap();
+    let result = match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "experiment" => cmd_experiment(rest),
+        "serve" => cmd_serve(rest),
+        "worker" => cmd_worker(rest),
+        "sim" => cmd_sim(rest),
+        "list" => cmd_list(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            print_usage();
+            Err(anyhow::anyhow!("unknown command '{other}'"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "fedhpc {} — federated learning for heterogeneous HPC + cloud
+
+usage: fedhpc <command> [options]
+
+commands:
+  train       run federated training (--preset quickstart|paper, or --config file.json)
+  experiment  regenerate a paper table/figure (--id table2|table3|table4|straggler|ablation-*|all)
+  serve       TCP orchestrator for multi-process deployment
+  worker      TCP worker process (connect to a serve instance)
+  sim         virtual-time timing run
+  list        models, presets, SKUs, experiments",
+        fedhpc::VERSION
+    );
+}
+
+fn load_config(p: &fedhpc::util::argparse::Parsed) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = p.get("config") {
+        config::from_json_file(path)?
+    } else {
+        let preset = p.get("preset").unwrap_or("quickstart");
+        Preset::parse(preset)
+            .with_context(|| format!("unknown preset '{preset}'"))?
+            .build()
+    };
+    if let Some(r) = p.get("rounds") {
+        cfg.train.rounds = r.parse().context("--rounds")?;
+    }
+    if let Some(m) = p.get("model") {
+        cfg.data.dataset = m.to_string();
+    }
+    if let Some(s) = p.get("seed") {
+        cfg.seed = s.parse().context("--seed")?;
+    }
+    if p.has("mock") {
+        cfg.mock_runtime = true;
+    }
+    if let Some(a) = p.get("artifacts") {
+        cfg.artifacts_dir = a.to_string();
+    }
+    config::validate(&cfg)?;
+    Ok(cfg)
+}
+
+fn train_args() -> Args {
+    Args::new()
+        .opt("preset", Some("quickstart"), "preset: quickstart | paper")
+        .opt("config", None, "JSON config file (overrides preset)")
+        .opt("rounds", None, "override training rounds")
+        .opt("model", None, "override dataset/model")
+        .opt("seed", None, "override experiment seed")
+        .opt("artifacts", None, "artifacts directory")
+        .opt("out", Some("results"), "output directory for reports")
+        .flag("mock", "use the pure-Rust mock runtime")
+}
+
+fn cmd_train(rest: &[String]) -> Result<()> {
+    let p = train_args().parse(rest)?;
+    let cfg = load_config(&p)?;
+    println!(
+        "training '{}': {} on {} nodes, {} rounds",
+        cfg.name,
+        cfg.data.dataset,
+        cfg.cluster.total_nodes(),
+        cfg.train.rounds
+    );
+    let report = experiments::run_real(&cfg)?;
+    report.save(p.get("out").unwrap_or("results"))?;
+    println!(
+        "done: final acc {} | best {} | total {:.1}s | up {} down {}",
+        report
+            .final_accuracy()
+            .map_or("-".into(), |a| format!("{:.3}", a)),
+        report
+            .best_accuracy()
+            .map_or("-".into(), |a| format!("{:.3}", a)),
+        report.total_duration_s(),
+        fedhpc::util::human_bytes(report.total_bytes().1),
+        fedhpc::util::human_bytes(report.total_bytes().0),
+    );
+    Ok(())
+}
+
+fn cmd_experiment(rest: &[String]) -> Result<()> {
+    let p = Args::new()
+        .opt("id", None, "experiment id (or 'all')")
+        .opt("out", Some("results"), "output directory")
+        .flag("quick", "smoke-test scale")
+        .parse(rest)?;
+    let id = p.req("id")?;
+    experiments::run(id, p.has("quick"), p.get("out").unwrap_or("results"))
+}
+
+fn cmd_sim(rest: &[String]) -> Result<()> {
+    let p = train_args().parse(rest)?;
+    let cfg = load_config(&p)?;
+    let sim = experiments::run_sim(&cfg, &experiments::SimTiming::default(), false)?;
+    println!(
+        "virtual time: {:.1}s over {} rounds ({:.2}s/round)",
+        sim.total_time_s,
+        sim.report.rounds.len(),
+        sim.total_time_s / sim.report.rounds.len().max(1) as f64
+    );
+    sim.report.save(p.get("out").unwrap_or("results"))?;
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let p = Args::new()
+        .opt("bind", Some("127.0.0.1:7070"), "listen address")
+        .opt("preset", Some("quickstart"), "preset: quickstart | paper")
+        .opt("config", None, "JSON config file")
+        .opt("rounds", None, "override training rounds")
+        .opt("model", None, "override dataset/model")
+        .opt("seed", None, "override seed")
+        .opt("artifacts", None, "artifacts directory")
+        .opt("out", Some("results"), "output directory")
+        .opt("clients", None, "expected worker count (default: cluster size)")
+        .flag("mock", "use the mock runtime")
+        .parse(rest)?;
+    let cfg = load_config(&p)?;
+    let expected = match p.get("clients") {
+        Some(c) => c.parse().context("--clients")?,
+        None => cfg.cluster.total_nodes(),
+    };
+    let traffic = Arc::new(TrafficLog::new());
+    let server = TcpServer::bind(p.get("bind").unwrap(), traffic.clone())?;
+    println!("orchestrator listening on {}", server.local_addr);
+
+    // centralized eval set + initial params
+    let dataset = FederatedDataset::build(&cfg.data, expected, cfg.seed)?;
+    let runtime: Box<dyn ModelRuntime> = if cfg.mock_runtime {
+        Box::new(MockRuntime::new(dataset.eval.x_len, dataset.n_classes))
+    } else {
+        Box::new(PjrtRuntime::load(&cfg.artifacts_dir, &cfg.data.dataset)?)
+    };
+    let initial = runtime.init(cfg.seed as u32)?;
+    let eval = EvalHarness {
+        runtime,
+        shard: dataset.eval.clone(),
+    };
+    let mut orch = Orchestrator::new(cfg.clone(), server, traffic, initial, Some(eval));
+    let report = orch.run(Some((expected, Duration::from_secs(120))), &mut NoHooks)?;
+    report.save(p.get("out").unwrap_or("results"))?;
+    println!(
+        "done: final acc {}",
+        report
+            .final_accuracy()
+            .map_or("-".into(), |a| format!("{:.3}", a))
+    );
+    Ok(())
+}
+
+fn cmd_worker(rest: &[String]) -> Result<()> {
+    let p = Args::new()
+        .opt("connect", Some("127.0.0.1:7070"), "orchestrator address")
+        .opt("id", None, "client id (u32)")
+        .opt("preset", Some("quickstart"), "preset (must match server)")
+        .opt("config", None, "JSON config file (must match server)")
+        .opt("model", None, "override dataset/model")
+        .opt("seed", None, "override seed (must match server)")
+        .opt("artifacts", None, "artifacts directory")
+        .opt("clients", None, "total worker count (must match server)")
+        .flag("mock", "use the mock runtime")
+        .parse(rest)?;
+    let cfg = load_config(&p)?;
+    let id: u32 = p.req("id")?.parse().context("--id")?;
+    let n_clients = match p.get("clients") {
+        Some(c) => c.parse().context("--clients")?,
+        None => cfg.cluster.total_nodes(),
+    };
+    // the same seed ⇒ same cluster + same partition as the server
+    let cluster = Cluster::build(&cfg.cluster, cfg.seed)?;
+    let dataset = FederatedDataset::build(&cfg.data, n_clients, cfg.seed)?;
+    let node = cluster
+        .node(id)
+        .with_context(|| format!("client id {id} exceeds cluster size {}", cluster.len()))?
+        .clone();
+    let shard = dataset.clients[id as usize].clone();
+    let runtime: Box<dyn ModelRuntime> = if cfg.mock_runtime {
+        Box::new(MockRuntime::new(shard.x_len, dataset.n_classes))
+    } else {
+        Box::new(PjrtRuntime::load(&cfg.artifacts_dir, &cfg.data.dataset)?)
+    };
+    let traffic = Arc::new(TrafficLog::new());
+    let profile = fedhpc::client::profile_runtime(runtime.as_ref(), &node, &shard, 0)?;
+    let transport = TcpClient::connect(
+        p.get("connect").unwrap(),
+        &Msg::Register {
+            client: id,
+            profile,
+        },
+        LinkShaper::from_class(node.link()),
+        traffic,
+    )?;
+    println!("worker {id} connected ({})", node.sku.name);
+    let worker = Worker::new(
+        transport,
+        runtime,
+        node,
+        shard,
+        FaultInjector::new(cfg.faults, cfg.seed),
+        WorkerOptions {
+            seed: cfg.seed ^ id as u64,
+            ..Default::default()
+        },
+    );
+    // Register is sent twice (once by connect, once by run) — the
+    // orchestrator treats re-registration as a profile refresh.
+    let rounds = worker.run()?;
+    println!("worker {id} done after {rounds} rounds");
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("presets: quickstart, paper");
+    println!("\nSKUs:");
+    for sku in fedhpc::cluster::catalog() {
+        println!(
+            "  {:<18} {:?}/{:?} speed={:.3} link={:?} preempt={}/h",
+            sku.name, sku.domain, sku.accel, sku.speed_factor, sku.link, sku.preempt_per_hour
+        );
+    }
+    println!("\nexperiments:");
+    for (id, desc) in experiments::EXPERIMENTS {
+        println!("  {id:<22} {desc}");
+    }
+    match Manifest::load("artifacts") {
+        Ok(m) => {
+            println!("\nmodels (artifacts/):");
+            for (name, info) in &m.models {
+                println!(
+                    "  {:<14} P={:<9} train_batch={} impl={}",
+                    name, info.n_params, info.train_batch, info.kernel_impl
+                );
+            }
+        }
+        Err(_) => println!("\nmodels: artifacts/ not built (run `make artifacts`)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,260 @@
+//! Experiment metrics (paper §5.3): accuracy, convergence speed,
+//! round/total training time, communication volume, fault counts.
+//!
+//! [`RoundMetrics`] is appended once per round by the orchestrator;
+//! [`TrainingReport`] summarizes a run and exports CSV/JSON for the
+//! table/figure harnesses in `experiments/`.
+
+use crate::util::json::{arr, num, obj, s, Value};
+use std::io::Write;
+
+/// Everything measured in one round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundMetrics {
+    pub round: u32,
+    /// Clients selected / reported / dropped / missed-deadline.
+    pub selected: u32,
+    pub reported: u32,
+    pub dropped: u32,
+    pub deadline_misses: u32,
+    /// Mean client training loss (weighted by samples).
+    pub train_loss: f64,
+    /// Centralized eval after aggregation (None if eval skipped).
+    pub eval_accuracy: Option<f64>,
+    pub eval_loss: Option<f64>,
+    /// Wall-clock (real runs) or virtual (sim runs) duration, seconds.
+    pub duration_s: f64,
+    /// Bytes down (broadcast) / up (updates) this round.
+    pub bytes_down: u64,
+    pub bytes_up: u64,
+    /// Relative model movement ‖ΔM‖/‖M‖ (convergence tracking).
+    pub model_delta: f64,
+}
+
+impl RoundMetrics {
+    pub fn to_json(&self) -> Value {
+        let mut fields = vec![
+            ("round", num(self.round as f64)),
+            ("selected", num(self.selected as f64)),
+            ("reported", num(self.reported as f64)),
+            ("dropped", num(self.dropped as f64)),
+            ("deadline_misses", num(self.deadline_misses as f64)),
+            ("train_loss", num(self.train_loss)),
+            ("duration_s", num(self.duration_s)),
+            ("bytes_down", num(self.bytes_down as f64)),
+            ("bytes_up", num(self.bytes_up as f64)),
+            ("model_delta", num(self.model_delta)),
+        ];
+        if let Some(a) = self.eval_accuracy {
+            fields.push(("eval_accuracy", num(a)));
+        }
+        if let Some(l) = self.eval_loss {
+            fields.push(("eval_loss", num(l)));
+        }
+        obj(fields)
+    }
+
+    pub const CSV_HEADER: &'static str = "round,selected,reported,dropped,deadline_misses,train_loss,eval_accuracy,eval_loss,duration_s,bytes_down,bytes_up,model_delta";
+
+    pub fn to_csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{:.6},{},{},{:.3},{},{},{:.3e}",
+            self.round,
+            self.selected,
+            self.reported,
+            self.dropped,
+            self.deadline_misses,
+            self.train_loss,
+            self.eval_accuracy.map_or(String::new(), |a| format!("{a:.4}")),
+            self.eval_loss.map_or(String::new(), |l| format!("{l:.4}")),
+            self.duration_s,
+            self.bytes_down,
+            self.bytes_up,
+            self.model_delta,
+        )
+    }
+}
+
+/// Whole-run record.
+#[derive(Debug, Clone, Default)]
+pub struct TrainingReport {
+    pub name: String,
+    pub rounds: Vec<RoundMetrics>,
+    pub converged_at: Option<u32>,
+    pub target_accuracy_at: Option<u32>,
+}
+
+impl TrainingReport {
+    pub fn new(name: &str) -> Self {
+        TrainingReport {
+            name: name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn push(&mut self, m: RoundMetrics) {
+        self.rounds.push(m);
+    }
+
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.rounds.iter().rev().find_map(|r| r.eval_accuracy)
+    }
+
+    pub fn best_accuracy(&self) -> Option<f64> {
+        self.rounds
+            .iter()
+            .filter_map(|r| r.eval_accuracy)
+            .fold(None, |best, a| Some(best.map_or(a, |b: f64| b.max(a))))
+    }
+
+    pub fn total_duration_s(&self) -> f64 {
+        self.rounds.iter().map(|r| r.duration_s).sum()
+    }
+
+    pub fn total_bytes(&self) -> (u64, u64) {
+        self.rounds
+            .iter()
+            .fold((0, 0), |(d, u), r| (d + r.bytes_down, u + r.bytes_up))
+    }
+
+    /// Mean per-client upload per round (Table 4's metric), bytes.
+    pub fn mean_upload_per_round(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|r| r.bytes_up as f64).sum::<f64>() / self.rounds.len() as f64
+    }
+
+    /// First round whose eval accuracy reached `target`.
+    pub fn rounds_to_accuracy(&self, target: f64) -> Option<u32> {
+        self.rounds
+            .iter()
+            .find(|r| r.eval_accuracy.is_some_and(|a| a >= target))
+            .map(|r| r.round)
+    }
+
+    /// Virtual/wall time until accuracy reached `target`, seconds.
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        let mut t = 0.0;
+        for r in &self.rounds {
+            t += r.duration_s;
+            if r.eval_accuracy.is_some_and(|a| a >= target) {
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("name", s(&self.name)),
+            (
+                "converged_at",
+                self.converged_at.map_or(Value::Null, |r| num(r as f64)),
+            ),
+            (
+                "final_accuracy",
+                self.final_accuracy().map_or(Value::Null, num),
+            ),
+            ("total_duration_s", num(self.total_duration_s())),
+            ("rounds", arr(self.rounds.iter().map(|r| r.to_json()))),
+        ])
+    }
+
+    pub fn write_csv<W: Write>(&self, mut w: W) -> std::io::Result<()> {
+        writeln!(w, "{}", RoundMetrics::CSV_HEADER)?;
+        for r in &self.rounds {
+            writeln!(w, "{}", r.to_csv_row())?;
+        }
+        Ok(())
+    }
+
+    pub fn save(&self, dir: &str) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let base = format!("{dir}/{}", self.name);
+        std::fs::write(format!("{base}.json"), self.to_json().to_string())?;
+        let mut csv = Vec::new();
+        self.write_csv(&mut csv)?;
+        std::fs::write(format!("{base}.csv"), csv)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rm(round: u32, acc: Option<f64>, dur: f64) -> RoundMetrics {
+        RoundMetrics {
+            round,
+            selected: 4,
+            reported: 4,
+            dropped: 0,
+            deadline_misses: 0,
+            train_loss: 1.0 / (round + 1) as f64,
+            eval_accuracy: acc,
+            eval_loss: acc.map(|a| 1.0 - a),
+            duration_s: dur,
+            bytes_down: 100,
+            bytes_up: 50,
+            model_delta: 0.01,
+        }
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let mut rep = TrainingReport::new("t");
+        rep.push(rm(0, Some(0.3), 10.0));
+        rep.push(rm(1, None, 10.0));
+        rep.push(rm(2, Some(0.8), 10.0));
+        rep.push(rm(3, Some(0.7), 10.0));
+        assert_eq!(rep.final_accuracy(), Some(0.7));
+        assert_eq!(rep.best_accuracy(), Some(0.8));
+        assert_eq!(rep.total_duration_s(), 40.0);
+        assert_eq!(rep.total_bytes(), (400, 200));
+        assert_eq!(rep.mean_upload_per_round(), 50.0);
+        assert_eq!(rep.rounds_to_accuracy(0.75), Some(2));
+        assert_eq!(rep.rounds_to_accuracy(0.99), None);
+        assert_eq!(rep.time_to_accuracy(0.75), Some(30.0));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut rep = TrainingReport::new("t");
+        rep.push(rm(0, Some(0.5), 1.0));
+        let mut buf = Vec::new();
+        rep.write_csv(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.trim().lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(
+            lines[0].split(',').count(),
+            lines[1].split(',').count(),
+            "header/row column mismatch"
+        );
+    }
+
+    #[test]
+    fn json_export_parses_back() {
+        let mut rep = TrainingReport::new("t");
+        rep.push(rm(0, Some(0.5), 1.0));
+        rep.converged_at = Some(9);
+        let text = rep.to_json().to_string();
+        let v = crate::util::json::Value::parse(&text).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("t"));
+        assert_eq!(v.get("converged_at").unwrap().as_usize(), Some(9));
+        assert_eq!(v.get("rounds").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn save_writes_files() {
+        let dir = std::env::temp_dir().join("fedhpc_metrics_test");
+        let dir = dir.to_str().unwrap();
+        let mut rep = TrainingReport::new("unit");
+        rep.push(rm(0, Some(0.5), 1.0));
+        rep.save(dir).unwrap();
+        assert!(std::path::Path::new(&format!("{dir}/unit.json")).exists());
+        assert!(std::path::Path::new(&format!("{dir}/unit.csv")).exists());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

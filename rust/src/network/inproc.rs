@@ -1,0 +1,375 @@
+//! In-process transport: mpsc channels + shaped delivery.
+//!
+//! Plays the role of MPI on the HPC side (microsecond latency when
+//! unshaped) and doubles as the default test transport. Bandwidth
+//! emulation: each message is stamped with a due-time from the link
+//! shaper at send; the receiver holds it until due — so a 45 MB model
+//! on a WAN-class link genuinely arrives seconds later, without a real
+//! slow socket.
+
+use super::message::Msg;
+use super::shaper::{LinkShaper, TrafficLog};
+use super::transport::{ClientTransport, ServerTransport};
+use crate::cluster::NodeId;
+use anyhow::{anyhow, Result};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+struct Envelope<T> {
+    due: Instant,
+    seq: u64,
+    payload: T,
+}
+
+/// Receiver that respects envelope due-times.
+struct ShapedReceiver<T> {
+    rx: Receiver<Envelope<T>>,
+    /// Not-yet-due messages, ordered by due time.
+    pending: BinaryHeap<Reverse<(Instant, u64, HeapSlot<T>)>>,
+}
+
+/// Wrapper so T needs no Ord — ordering uses (due, seq) only.
+struct HeapSlot<T>(T);
+
+impl<T> PartialEq for HeapSlot<T> {
+    fn eq(&self, _: &Self) -> bool {
+        true
+    }
+}
+impl<T> Eq for HeapSlot<T> {}
+impl<T> PartialOrd for HeapSlot<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for HeapSlot<T> {
+    fn cmp(&self, _: &Self) -> std::cmp::Ordering {
+        std::cmp::Ordering::Equal
+    }
+}
+
+impl<T> ShapedReceiver<T> {
+    fn new(rx: Receiver<Envelope<T>>) -> Self {
+        ShapedReceiver {
+            rx,
+            pending: BinaryHeap::new(),
+        }
+    }
+
+    fn drain_channel(&mut self) {
+        while let Ok(env) = self.rx.try_recv() {
+            self.pending
+                .push(Reverse((env.due, env.seq, HeapSlot(env.payload))));
+        }
+    }
+
+    /// Pop the next due message, waiting up to `timeout`.
+    fn recv_timeout(&mut self, timeout: Duration) -> Option<T> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            self.drain_channel();
+            let now = Instant::now();
+            if let Some(Reverse((due, _, _))) = self.pending.peek() {
+                if *due <= now {
+                    let Reverse((_, _, slot)) = self.pending.pop().unwrap();
+                    return Some(slot.0);
+                }
+                // wait until the earliest of: message due, caller deadline
+                let wait = (*due).min(deadline).saturating_duration_since(now);
+                if wait.is_zero() && deadline <= now {
+                    return None;
+                }
+                match self.rx.recv_timeout(wait.max(Duration::from_micros(50))) {
+                    Ok(env) => self
+                        .pending
+                        .push(Reverse((env.due, env.seq, HeapSlot(env.payload)))),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => {
+                        // senders gone; flush whatever is due eventually
+                        if self.pending.is_empty() {
+                            return None;
+                        }
+                    }
+                }
+                continue;
+            }
+            // nothing pending: block on the channel
+            let now = Instant::now();
+            if deadline <= now {
+                return None;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(env) => self
+                    .pending
+                    .push(Reverse((env.due, env.seq, HeapSlot(env.payload)))),
+                Err(_) => return None,
+            }
+        }
+    }
+}
+
+use super::round_of;
+
+/// Builder: creates the server endpoint and one client endpoint per
+/// node, with per-client link shapers.
+pub struct InprocHub {
+    server_in_tx: Sender<Envelope<(NodeId, Msg)>>,
+    server_rx: Arc<Mutex<ShapedReceiver<(NodeId, Msg)>>>,
+    client_txs: Arc<Mutex<HashMap<NodeId, Sender<Envelope<Msg>>>>>,
+    shapers: Arc<Mutex<HashMap<NodeId, LinkShaper>>>,
+    traffic: Arc<TrafficLog>,
+    seq: Arc<Mutex<u64>>,
+}
+
+impl InprocHub {
+    pub fn new(traffic: Arc<TrafficLog>) -> Self {
+        let (tx, rx) = channel();
+        InprocHub {
+            server_in_tx: tx,
+            server_rx: Arc::new(Mutex::new(ShapedReceiver::new(rx))),
+            client_txs: Arc::new(Mutex::new(HashMap::new())),
+            shapers: Arc::new(Mutex::new(HashMap::new())),
+            traffic,
+            seq: Arc::new(Mutex::new(0)),
+        }
+    }
+
+    /// Register a client with its link shaper; returns its endpoint.
+    pub fn add_client(&self, id: NodeId, shaper: LinkShaper) -> InprocClient {
+        let (tx, rx) = channel();
+        self.client_txs.lock().unwrap().insert(id, tx);
+        self.shapers.lock().unwrap().insert(id, shaper);
+        InprocClient {
+            id,
+            shaper,
+            to_server: self.server_in_tx.clone(),
+            rx: Mutex::new(ShapedReceiver::new(rx)),
+            traffic: self.traffic.clone(),
+            seq: self.seq.clone(),
+        }
+    }
+
+    /// The server endpoint (one per hub).
+    pub fn server(&self) -> InprocServer {
+        InprocServer {
+            rx: self.server_rx.clone(),
+            client_txs: self.client_txs.clone(),
+            shapers: self.shapers.clone(),
+            traffic: self.traffic.clone(),
+            seq: self.seq.clone(),
+        }
+    }
+}
+
+pub struct InprocServer {
+    rx: Arc<Mutex<ShapedReceiver<(NodeId, Msg)>>>,
+    client_txs: Arc<Mutex<HashMap<NodeId, Sender<Envelope<Msg>>>>>,
+    shapers: Arc<Mutex<HashMap<NodeId, LinkShaper>>>,
+    traffic: Arc<TrafficLog>,
+    seq: Arc<Mutex<u64>>,
+}
+
+impl ServerTransport for InprocServer {
+    fn send_to(&self, to: NodeId, msg: &Msg) -> Result<()> {
+        let bytes = msg.wire_bytes();
+        let shaper = self
+            .shapers
+            .lock()
+            .unwrap()
+            .get(&to)
+            .copied()
+            .unwrap_or_else(LinkShaper::unshaped);
+        self.traffic.record_down(round_of(msg), bytes);
+        let mut s = self.seq.lock().unwrap();
+        *s += 1;
+        let seq = *s;
+        drop(s);
+        let env = Envelope {
+            due: Instant::now() + shaper.delay(bytes),
+            seq,
+            payload: msg.clone(),
+        };
+        self.client_txs
+            .lock()
+            .unwrap()
+            .get(&to)
+            .ok_or_else(|| anyhow!("inproc: unknown client {to}"))?
+            .send(env)
+            .map_err(|_| anyhow!("inproc: client {to} disconnected"))
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<(NodeId, Msg)>> {
+        Ok(self.rx.lock().unwrap().recv_timeout(timeout))
+    }
+
+    fn connected(&self) -> Vec<NodeId> {
+        let mut v: Vec<NodeId> = self.client_txs.lock().unwrap().keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+pub struct InprocClient {
+    id: NodeId,
+    shaper: LinkShaper,
+    to_server: Sender<Envelope<(NodeId, Msg)>>,
+    rx: Mutex<ShapedReceiver<Msg>>,
+    traffic: Arc<TrafficLog>,
+    seq: Arc<Mutex<u64>>,
+}
+
+impl ClientTransport for InprocClient {
+    fn send(&self, msg: &Msg) -> Result<()> {
+        let bytes = msg.wire_bytes();
+        self.traffic.record_up(round_of(msg), bytes);
+        let mut s = self.seq.lock().unwrap();
+        *s += 1;
+        let seq = *s;
+        drop(s);
+        let env = Envelope {
+            due: Instant::now() + self.shaper.delay(bytes),
+            seq,
+            payload: (self.id, msg.clone()),
+        };
+        self.to_server
+            .send(env)
+            .map_err(|_| anyhow!("inproc: server disconnected"))
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Msg>> {
+        Ok(self.rx.lock().unwrap().recv_timeout(timeout))
+    }
+
+    fn id(&self) -> NodeId {
+        self.id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hub() -> (InprocHub, Arc<TrafficLog>) {
+        let traffic = Arc::new(TrafficLog::new());
+        (InprocHub::new(traffic.clone()), traffic)
+    }
+
+    #[test]
+    fn roundtrip_unshaped() {
+        let (hub, _) = hub();
+        let c1 = hub.add_client(1, LinkShaper::unshaped());
+        let server = hub.server();
+        c1.send(&Msg::Heartbeat {
+            client: 1,
+            round: 0,
+        })
+        .unwrap();
+        let (from, msg) = server
+            .recv_timeout(Duration::from_millis(200))
+            .unwrap()
+            .unwrap();
+        assert_eq!(from, 1);
+        assert!(matches!(msg, Msg::Heartbeat { client: 1, .. }));
+        server.send_to(1, &Msg::RegisterAck { client: 1 }).unwrap();
+        let got = c1.recv_timeout(Duration::from_millis(200)).unwrap().unwrap();
+        assert_eq!(got, Msg::RegisterAck { client: 1 });
+    }
+
+    #[test]
+    fn recv_times_out_cleanly() {
+        let (hub, _) = hub();
+        let _c = hub.add_client(1, LinkShaper::unshaped());
+        let server = hub.server();
+        let t0 = Instant::now();
+        let r = server.recv_timeout(Duration::from_millis(50)).unwrap();
+        assert!(r.is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(45));
+    }
+
+    #[test]
+    fn shaped_delivery_is_delayed_and_ordered() {
+        let (hub, _) = hub();
+        let slow = LinkShaper {
+            bandwidth: 1e6, // 1 MB/s
+            latency: Duration::from_millis(20),
+            degradation: 1.0,
+        };
+        let c = hub.add_client(1, slow);
+        let server = hub.server();
+        // ~16 B message: delay ≈ latency ≈ 20 ms
+        let t0 = Instant::now();
+        c.send(&Msg::Heartbeat {
+            client: 1,
+            round: 1,
+        })
+        .unwrap();
+        // not yet due
+        assert!(server.recv_timeout(Duration::from_millis(2)).unwrap().is_none());
+        let got = server.recv_timeout(Duration::from_millis(500)).unwrap();
+        assert!(got.is_some());
+        let waited = t0.elapsed();
+        assert!(
+            waited >= Duration::from_millis(15),
+            "arrived too early: {waited:?}"
+        );
+    }
+
+    #[test]
+    fn unknown_client_send_errors() {
+        let (hub, _) = hub();
+        let server = hub.server();
+        assert!(server.send_to(9, &Msg::Shutdown).is_err());
+    }
+
+    #[test]
+    fn traffic_is_accounted_by_direction_and_round() {
+        let (hub, traffic) = hub();
+        let c = hub.add_client(1, LinkShaper::unshaped());
+        let server = hub.server();
+        c.send(&Msg::Heartbeat {
+            client: 1,
+            round: 3,
+        })
+        .unwrap();
+        server
+            .send_to(
+                1,
+                &Msg::RoundEnd {
+                    round: 3,
+                    model_version: 4,
+                },
+            )
+            .unwrap();
+        let (down, up) = traffic.round(3);
+        assert!(down > 0 && up > 0);
+    }
+
+    #[test]
+    fn multiple_clients_interleave() {
+        let (hub, _) = hub();
+        let clients: Vec<_> = (0..5u32)
+            .map(|i| hub.add_client(i, LinkShaper::unshaped()))
+            .collect();
+        let server = hub.server();
+        assert_eq!(server.connected(), vec![0, 1, 2, 3, 4]);
+        for c in &clients {
+            c.send(&Msg::Heartbeat {
+                client: c.id(),
+                round: 0,
+            })
+            .unwrap();
+        }
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..5 {
+            let (from, _) = server
+                .recv_timeout(Duration::from_millis(500))
+                .unwrap()
+                .unwrap();
+            seen.insert(from);
+        }
+        assert_eq!(seen.len(), 5);
+    }
+}

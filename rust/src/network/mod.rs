@@ -1,0 +1,34 @@
+//! Communication layer (paper §3.2 "Communication Layer").
+//!
+//! * [`message`] — the versioned wire protocol between orchestrator and
+//!   clients (binary codec, no serde).
+//! * [`transport`] — the `ServerTransport`/`ClientTransport` traits.
+//! * [`inproc`] — channel-based transport: the "MPI" path for HPC-local
+//!   simulation and the default for tests (microsecond latency).
+//! * [`tcp`] — length-prefixed framed TCP: the "gRPC" path; actually
+//!   crosses a socket, supports multi-process deployment.
+//! * [`shaper`] — per-link bandwidth/latency shaping + byte accounting,
+//!   applied uniformly to either transport.
+
+pub mod inproc;
+pub mod message;
+pub mod shaper;
+pub mod tcp;
+pub mod transport;
+
+pub use message::{ClientProfile, Msg, UpdateStats, PROTOCOL_VERSION};
+pub use shaper::{LinkShaper, TrafficLog};
+pub use transport::{ClientTransport, ServerTransport};
+
+/// Round a message belongs to, for traffic accounting (0 for
+/// round-less control messages).
+pub(crate) fn round_of(msg: &Msg) -> u32 {
+    match msg {
+        Msg::RoundStart { round, .. }
+        | Msg::Update { round, .. }
+        | Msg::Heartbeat { round, .. }
+        | Msg::RoundEnd { round, .. }
+        | Msg::Abort { round } => *round,
+        _ => 0,
+    }
+}

@@ -1,0 +1,178 @@
+//! Link shaping + traffic accounting.
+//!
+//! The shaper answers one question per message: *when* does it arrive,
+//! given the link's bandwidth/latency and the payload size. Transports
+//! stamp each envelope with the computed due-time; receivers hold
+//! messages until due. This reproduces the paper's bandwidth-
+//! constrained behaviour (slow WAN clients take visibly longer to
+//! upload a 45 MB model) without needing real slow links.
+//!
+//! [`TrafficLog`] aggregates per-round byte counts — the source of
+//! Table 4 / ablation E6 numbers.
+
+use crate::cluster::LinkClass;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Per-link shaping model.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkShaper {
+    /// Bytes per second.
+    pub bandwidth: f64,
+    /// One-way latency.
+    pub latency: Duration,
+    /// Multiplier for fault injection (≥1 slows the link).
+    pub degradation: f64,
+}
+
+impl LinkShaper {
+    pub fn from_class(class: LinkClass) -> Self {
+        let (bw, lat_ms) = class.profile();
+        LinkShaper {
+            bandwidth: bw,
+            latency: Duration::from_secs_f64(lat_ms / 1e3),
+            degradation: 1.0,
+        }
+    }
+
+    /// Unshaped (infinite bandwidth, zero latency) — unit tests.
+    pub fn unshaped() -> Self {
+        LinkShaper {
+            bandwidth: f64::INFINITY,
+            latency: Duration::ZERO,
+            degradation: 1.0,
+        }
+    }
+
+    /// Transfer delay for a payload of `bytes`.
+    pub fn delay(&self, bytes: u64) -> Duration {
+        if self.bandwidth.is_infinite() && self.latency.is_zero() {
+            return Duration::ZERO;
+        }
+        let serialize_s = bytes as f64 / self.bandwidth * self.degradation;
+        self.latency.mul_f64(self.degradation) + Duration::from_secs_f64(serialize_s)
+    }
+}
+
+/// Thread-safe per-round traffic accounting.
+#[derive(Debug, Default)]
+pub struct TrafficLog {
+    inner: Mutex<TrafficInner>,
+}
+
+#[derive(Debug, Default)]
+struct TrafficInner {
+    /// round -> (bytes down to clients, bytes up from clients)
+    per_round: BTreeMap<u32, (u64, u64)>,
+    total_down: u64,
+    total_up: u64,
+}
+
+impl TrafficLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_down(&self, round: u32, bytes: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.per_round.entry(round).or_default().0 += bytes;
+        g.total_down += bytes;
+    }
+
+    pub fn record_up(&self, round: u32, bytes: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.per_round.entry(round).or_default().1 += bytes;
+        g.total_up += bytes;
+    }
+
+    /// (down, up) bytes for a round.
+    pub fn round(&self, round: u32) -> (u64, u64) {
+        self.inner
+            .lock()
+            .unwrap()
+            .per_round
+            .get(&round)
+            .copied()
+            .unwrap_or((0, 0))
+    }
+
+    pub fn totals(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.total_down, g.total_up)
+    }
+
+    /// All rounds in order: (round, down, up).
+    pub fn rounds(&self) -> Vec<(u32, u64, u64)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .per_round
+            .iter()
+            .map(|(&r, &(d, u))| (r, d, u))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unshaped_is_instant() {
+        assert_eq!(LinkShaper::unshaped().delay(1 << 30), Duration::ZERO);
+    }
+
+    #[test]
+    fn delay_scales_with_size_and_link() {
+        let ib = LinkShaper::from_class(LinkClass::Infiniband);
+        let wan = LinkShaper::from_class(LinkClass::CloudWan);
+        let mb45 = 45 * 1024 * 1024;
+        assert!(wan.delay(mb45) > ib.delay(mb45) * 20);
+        assert!(wan.delay(2 * mb45) > wan.delay(mb45));
+        // 45 MB over ~1 Gbit/s ≈ 0.38 s — sanity against the paper's
+        // per-round payloads being seconds, not hours
+        let d = wan.delay(mb45).as_secs_f64();
+        assert!((0.1..10.0).contains(&d), "45MB WAN delay {d}s");
+    }
+
+    #[test]
+    fn degradation_slows_link() {
+        let mut s = LinkShaper::from_class(LinkClass::CloudLan);
+        let base = s.delay(1_000_000);
+        s.degradation = 4.0;
+        assert!(s.delay(1_000_000) >= base * 3);
+    }
+
+    #[test]
+    fn traffic_log_accumulates() {
+        let log = TrafficLog::new();
+        log.record_down(1, 100);
+        log.record_down(1, 50);
+        log.record_up(1, 30);
+        log.record_up(2, 70);
+        assert_eq!(log.round(1), (150, 30));
+        assert_eq!(log.round(2), (0, 70));
+        assert_eq!(log.round(99), (0, 0));
+        assert_eq!(log.totals(), (150, 100));
+        assert_eq!(log.rounds(), vec![(1, 150, 30), (2, 0, 70)]);
+    }
+
+    #[test]
+    fn traffic_log_is_thread_safe() {
+        let log = std::sync::Arc::new(TrafficLog::new());
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let l = log.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    l.record_up(0, 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(log.round(0).1, 8000);
+    }
+}

@@ -1,0 +1,373 @@
+//! Framed-TCP transport — the "gRPC" path (paper: cloud backend).
+//!
+//! Wire format: `[u32 frame length][Msg::encode() bytes]`. A real
+//! socket per client; the server accepts connections and identifies
+//! each peer by its first message (which must be `Register`). Reader
+//! threads decode frames and feed a shared queue; writes go through a
+//! per-peer mutexed stream. Optional link shaping adds artificial
+//! delay on top of real socket time (receiver-side hold, like inproc).
+
+use super::message::Msg;
+use super::shaper::{LinkShaper, TrafficLog};
+use super::transport::{ClientTransport, ServerTransport};
+use crate::cluster::NodeId;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+const MAX_FRAME: u32 = 1 << 30; // 1 GiB sanity bound
+
+fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
+    let len = payload.len() as u32;
+    if len > MAX_FRAME {
+        bail!("frame too large: {len}");
+    }
+    stream.write_all(&len.to_le_bytes())?;
+    stream.write_all(payload)?;
+    Ok(())
+}
+
+fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
+    let mut hdr = [0u8; 4];
+    stream.read_exact(&mut hdr)?;
+    let len = u32::from_le_bytes(hdr);
+    if len > MAX_FRAME {
+        bail!("frame too large: {len}");
+    }
+    let mut buf = vec![0u8; len as usize];
+    stream.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Server: accept loop + per-connection reader threads.
+pub struct TcpServer {
+    rx: Mutex<Receiver<(NodeId, Msg)>>,
+    peers: Arc<Mutex<HashMap<NodeId, TcpStream>>>,
+    traffic: Arc<TrafficLog>,
+    pub local_addr: std::net::SocketAddr,
+}
+
+impl TcpServer {
+    /// Bind and start accepting. `addr` like "127.0.0.1:0".
+    pub fn bind(addr: &str, traffic: Arc<TrafficLog>) -> Result<TcpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local_addr = listener.local_addr()?;
+        let (tx, rx) = channel::<(NodeId, Msg)>();
+        let peers: Arc<Mutex<HashMap<NodeId, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
+        let peers_accept = peers.clone();
+        std::thread::Builder::new()
+            .name("tcp-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    let Ok(mut stream) = conn else { continue };
+                    let tx = tx.clone();
+                    let peers = peers_accept.clone();
+                    std::thread::Builder::new()
+                        .name("tcp-read".into())
+                        .spawn(move || {
+                            // first frame must identify the peer
+                            let Ok(first) = read_frame(&mut stream) else {
+                                return;
+                            };
+                            let Ok(msg) = Msg::decode(&first) else {
+                                log::warn!("tcp: undecodable first frame, dropping conn");
+                                return;
+                            };
+                            let id = match &msg {
+                                Msg::Register { client, .. } => *client,
+                                other => {
+                                    log::warn!(
+                                        "tcp: first frame was {}, expected Register",
+                                        other.name()
+                                    );
+                                    return;
+                                }
+                            };
+                            if let Ok(w) = stream.try_clone() {
+                                peers.lock().unwrap().insert(id, w);
+                            }
+                            if tx.send((id, msg)).is_err() {
+                                return;
+                            }
+                            loop {
+                                match read_frame(&mut stream) {
+                                    Ok(buf) => match Msg::decode(&buf) {
+                                        Ok(m) => {
+                                            if tx.send((id, m)).is_err() {
+                                                break;
+                                            }
+                                        }
+                                        Err(e) => {
+                                            log::warn!("tcp: bad frame from {id}: {e}");
+                                            break;
+                                        }
+                                    },
+                                    Err(_) => break, // peer closed
+                                }
+                            }
+                            peers.lock().unwrap().remove(&id);
+                        })
+                        .ok();
+                }
+            })
+            .context("spawning tcp accept thread")?;
+        Ok(TcpServer {
+            rx: Mutex::new(rx),
+            peers,
+            traffic,
+            local_addr,
+        })
+    }
+}
+
+impl ServerTransport for TcpServer {
+    fn send_to(&self, to: NodeId, msg: &Msg) -> Result<()> {
+        let payload = msg.encode();
+        self.traffic
+            .record_down(super::round_of(msg), payload.len() as u64);
+        let mut peers = self.peers.lock().unwrap();
+        let stream = peers
+            .get_mut(&to)
+            .ok_or_else(|| anyhow!("tcp: client {to} not connected"))?;
+        write_frame(stream, &payload)
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<(NodeId, Msg)>> {
+        match self.rx.lock().unwrap().recv_timeout(timeout) {
+            Ok(v) => Ok(Some(v)),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Ok(None),
+        }
+    }
+
+    fn connected(&self) -> Vec<NodeId> {
+        let mut v: Vec<NodeId> = self.peers.lock().unwrap().keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Client: one connection + a reader thread.
+pub struct TcpClient {
+    id: NodeId,
+    writer: Mutex<TcpStream>,
+    rx: Mutex<Receiver<Msg>>,
+    traffic: Arc<TrafficLog>,
+    shaper: LinkShaper,
+}
+
+impl TcpClient {
+    /// Connect and immediately send `register` (must be Msg::Register).
+    pub fn connect(
+        addr: &str,
+        register: &Msg,
+        shaper: LinkShaper,
+        traffic: Arc<TrafficLog>,
+    ) -> Result<TcpClient> {
+        let id = match register {
+            Msg::Register { client, .. } => *client,
+            other => bail!("tcp connect needs a Register message, got {}", other.name()),
+        };
+        let mut stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let payload = register.encode();
+        traffic.record_up(0, payload.len() as u64);
+        write_frame(&mut stream, &payload)?;
+        let reader = stream.try_clone()?;
+        let (tx, rx) = channel::<Msg>();
+        std::thread::Builder::new()
+            .name(format!("tcp-client-{id}"))
+            .spawn(move || {
+                let mut reader = reader;
+                loop {
+                    match read_frame(&mut reader) {
+                        Ok(buf) => match Msg::decode(&buf) {
+                            Ok(m) => {
+                                if tx.send(m).is_err() {
+                                    break;
+                                }
+                            }
+                            Err(e) => {
+                                log::warn!("tcp client: bad frame: {e}");
+                                break;
+                            }
+                        },
+                        Err(_) => break,
+                    }
+                }
+            })
+            .context("spawning tcp client reader")?;
+        Ok(TcpClient {
+            id,
+            writer: Mutex::new(stream),
+            rx: Mutex::new(rx),
+            traffic,
+            shaper,
+        })
+    }
+}
+
+impl ClientTransport for TcpClient {
+    fn send(&self, msg: &Msg) -> Result<()> {
+        let payload = msg.encode();
+        self.traffic
+            .record_up(super::round_of(msg), payload.len() as u64);
+        // emulate constrained uplink: hold before writing (the paper's
+        // WAN clients really do take longer to upload)
+        let delay = self.shaper.delay(payload.len() as u64);
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+        write_frame(&mut self.writer.lock().unwrap(), &payload)
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Msg>> {
+        match self.rx.lock().unwrap().recv_timeout(timeout) {
+            Ok(v) => Ok(Some(v)),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Ok(None),
+        }
+    }
+
+    fn id(&self) -> NodeId {
+        self.id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::message::ClientProfile;
+
+    fn profile() -> ClientProfile {
+        ClientProfile {
+            speed_factor: 1.0,
+            mem_gb: 1.0,
+            link_bw: 1e9,
+            n_samples: 10,
+            bench_step_ms: 1.0,
+        }
+    }
+
+    fn register(id: NodeId) -> Msg {
+        Msg::Register {
+            client: id,
+            profile: profile(),
+        }
+    }
+
+    #[test]
+    fn connect_register_roundtrip() {
+        let traffic = Arc::new(TrafficLog::new());
+        let server = TcpServer::bind("127.0.0.1:0", traffic.clone()).unwrap();
+        let addr = server.local_addr.to_string();
+        let client =
+            TcpClient::connect(&addr, &register(5), LinkShaper::unshaped(), traffic).unwrap();
+        // server sees the Register first
+        let (from, msg) = server
+            .recv_timeout(Duration::from_secs(2))
+            .unwrap()
+            .unwrap();
+        assert_eq!(from, 5);
+        assert!(matches!(msg, Msg::Register { client: 5, .. }));
+        // server -> client
+        server.send_to(5, &Msg::RegisterAck { client: 5 }).unwrap();
+        let got = client.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert_eq!(got, Msg::RegisterAck { client: 5 });
+        // client -> server again
+        client
+            .send(&Msg::Heartbeat {
+                client: 5,
+                round: 1,
+            })
+            .unwrap();
+        let (_, hb) = server
+            .recv_timeout(Duration::from_secs(2))
+            .unwrap()
+            .unwrap();
+        assert!(matches!(hb, Msg::Heartbeat { .. }));
+    }
+
+    #[test]
+    fn multiple_clients() {
+        let traffic = Arc::new(TrafficLog::new());
+        let server = TcpServer::bind("127.0.0.1:0", traffic.clone()).unwrap();
+        let addr = server.local_addr.to_string();
+        let clients: Vec<_> = (0..4u32)
+            .map(|i| {
+                TcpClient::connect(&addr, &register(i), LinkShaper::unshaped(), traffic.clone())
+                    .unwrap()
+            })
+            .collect();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..4 {
+            let (from, _) = server
+                .recv_timeout(Duration::from_secs(2))
+                .unwrap()
+                .unwrap();
+            seen.insert(from);
+        }
+        assert_eq!(seen.len(), 4);
+        for c in &clients {
+            server
+                .send_to(c.id(), &Msg::RoundEnd {
+                    round: 0,
+                    model_version: 1,
+                })
+                .unwrap();
+            assert!(c.recv_timeout(Duration::from_secs(2)).unwrap().is_some());
+        }
+        let mut conn = server.connected();
+        conn.sort_unstable();
+        assert_eq!(conn, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn send_to_unknown_client_errors() {
+        let traffic = Arc::new(TrafficLog::new());
+        let server = TcpServer::bind("127.0.0.1:0", traffic).unwrap();
+        assert!(server.send_to(42, &Msg::Shutdown).is_err());
+    }
+
+    #[test]
+    fn large_frame_roundtrip() {
+        let traffic = Arc::new(TrafficLog::new());
+        let server = TcpServer::bind("127.0.0.1:0", traffic.clone()).unwrap();
+        let addr = server.local_addr.to_string();
+        let client =
+            TcpClient::connect(&addr, &register(1), LinkShaper::unshaped(), traffic).unwrap();
+        server.recv_timeout(Duration::from_secs(2)).unwrap(); // drain Register
+        // ~4 MB model payload
+        let params: Vec<f32> = (0..1_000_000).map(|i| i as f32).collect();
+        client
+            .send(&Msg::Update {
+                round: 1,
+                client: 1,
+                delta: crate::compress::Encoded::Dense(params.clone()),
+                stats: super::super::message::UpdateStats {
+                    n_samples: 1,
+                    train_loss: 0.0,
+                    steps: 1,
+                    compute_ms: 0.0,
+                    update_var: 0.0,
+                },
+            })
+            .unwrap();
+        let (_, msg) = server
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap()
+            .unwrap();
+        match msg {
+            Msg::Update { delta, .. } => match delta {
+                crate::compress::Encoded::Dense(v) => assert_eq!(v, params),
+                _ => unreachable!(),
+            },
+            _ => unreachable!(),
+        }
+    }
+}

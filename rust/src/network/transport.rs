@@ -1,0 +1,29 @@
+//! Transport abstraction: the orchestrator speaks `ServerTransport`,
+//! workers speak `ClientTransport`; inproc ("MPI") and TCP ("gRPC")
+//! implement both. All methods are blocking-with-timeout — the
+//! framework's concurrency model is plain threads (see DESIGN.md).
+
+use crate::cluster::NodeId;
+use crate::network::message::Msg;
+use anyhow::Result;
+use std::time::Duration;
+
+/// Server side: addressed send, any-source receive.
+pub trait ServerTransport: Send {
+    /// Send `msg` to a specific client.
+    fn send_to(&self, to: NodeId, msg: &Msg) -> Result<()>;
+
+    /// Receive the next message from any client, waiting up to
+    /// `timeout`. `Ok(None)` = timed out (not an error).
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<(NodeId, Msg)>>;
+
+    /// Clients currently connected/known.
+    fn connected(&self) -> Vec<NodeId>;
+}
+
+/// Client side: send to server, receive from server.
+pub trait ClientTransport: Send {
+    fn send(&self, msg: &Msg) -> Result<()>;
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Msg>>;
+    fn id(&self) -> NodeId;
+}

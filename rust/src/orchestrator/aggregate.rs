@@ -1,0 +1,268 @@
+//! Aggregation engine (paper §4.4 + Algorithm 1 line 11).
+//!
+//! All strategies share one shape: `M_{r+1} = M_r + Σ_c w_c Δ_c` with
+//! weights normalized over the updates that actually arrived (partial
+//! aggregation is therefore "free": the weight mass renormalizes over
+//! the fastest k — Liu et al.'s FedPA behaviour).
+//!
+//! * FedAvg / FedProx: `w_c ∝ n_c` (server side identical; the proximal
+//!   term lives in the client objective).
+//! * Weighted(InverseLoss): `w_c ∝ n_c / (1 + loss_c)`.
+//! * Weighted(InverseVariance): `w_c ∝ n_c / (1 + Var(Δ_c))`.
+
+use crate::cluster::NodeId;
+use crate::config::{Aggregation, WeightScheme};
+use anyhow::{bail, Result};
+
+/// One client's contribution.
+#[derive(Debug, Clone)]
+pub struct AggInput {
+    pub client: NodeId,
+    /// Dense decoded update Δ_c.
+    pub delta: Vec<f32>,
+    pub n_samples: u64,
+    pub train_loss: f32,
+    pub update_var: f32,
+}
+
+/// Aggregation result.
+#[derive(Debug, Clone)]
+pub struct AggOutcome {
+    pub new_params: Vec<f32>,
+    /// Normalized weight per contributing client (for logs/tests).
+    pub weights: Vec<(NodeId, f64)>,
+    /// Sample-weighted mean train loss across contributors.
+    pub mean_train_loss: f64,
+}
+
+/// Aggregate updates into new global parameters.
+pub fn aggregate(
+    global: &[f32],
+    inputs: &[AggInput],
+    strategy: Aggregation,
+) -> Result<AggOutcome> {
+    if inputs.is_empty() {
+        bail!("aggregate: no updates to aggregate");
+    }
+    let p = global.len();
+    for i in inputs {
+        if i.delta.len() != p {
+            bail!(
+                "aggregate: client {} delta length {} != {}",
+                i.client,
+                i.delta.len(),
+                p
+            );
+        }
+    }
+    let raw: Vec<f64> = inputs
+        .iter()
+        .map(|i| {
+            let n = i.n_samples.max(1) as f64;
+            match strategy {
+                Aggregation::FedAvg | Aggregation::FedProx { .. } => n,
+                Aggregation::Weighted(WeightScheme::DataSize) => n,
+                Aggregation::Weighted(WeightScheme::InverseLoss) => {
+                    n / (1.0 + i.train_loss.max(0.0) as f64)
+                }
+                Aggregation::Weighted(WeightScheme::InverseVariance) => {
+                    n / (1.0 + i.update_var.max(0.0) as f64)
+                }
+            }
+        })
+        .collect();
+    let total: f64 = raw.iter().sum();
+    if !(total > 0.0) {
+        bail!("aggregate: degenerate weights (total {total})");
+    }
+    // Accumulate in f64 for stability. Hot path (60 clients × 1M params
+    // per round — EXPERIMENTS.md §Perf): the f64 accumulator is blocked
+    // so it stays in L1 while we stream each client's delta through it
+    // once (the naive input-major loop re-streams the 8·P-byte
+    // accumulator per client). Parallel across chunks on multi-core;
+    // per-element input order is fixed either way, so results are
+    // bit-identical to the serial loop.
+    const BLOCK: usize = 4096;
+    let wn: Vec<f64> = raw.iter().map(|&w| w / total).collect();
+    let mut new_params = vec![0f32; p];
+    crate::util::parallel::par_chunks_mut(&mut new_params, 256 * 1024, |offset, chunk| {
+        let mut acc = [0f64; BLOCK];
+        let mut start = 0;
+        while start < chunk.len() {
+            let len = BLOCK.min(chunk.len() - start);
+            let base = offset + start;
+            acc[..len].fill(0.0);
+            for (input, &w) in inputs.iter().zip(&wn) {
+                let d = &input.delta[base..base + len];
+                for (a, &x) in acc[..len].iter_mut().zip(d) {
+                    *a += w * x as f64;
+                }
+            }
+            let g = &global[base..base + len];
+            for ((out, &a), &gv) in chunk[start..start + len]
+                .iter_mut()
+                .zip(&acc[..len])
+                .zip(g)
+            {
+                *out = (gv as f64 + a) as f32;
+            }
+            start += len;
+        }
+    });
+    let n_total: f64 = inputs.iter().map(|i| i.n_samples.max(1) as f64).sum();
+    let mean_train_loss = inputs
+        .iter()
+        .map(|i| i.train_loss as f64 * i.n_samples.max(1) as f64)
+        .sum::<f64>()
+        / n_total;
+    Ok(AggOutcome {
+        new_params,
+        weights: inputs
+            .iter()
+            .zip(&raw)
+            .map(|(i, &w)| (i.client, w / total))
+            .collect(),
+        mean_train_loss,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn input(client: NodeId, delta: Vec<f32>, n: u64, loss: f32, var: f32) -> AggInput {
+        AggInput {
+            client,
+            delta,
+            n_samples: n,
+            train_loss: loss,
+            update_var: var,
+        }
+    }
+
+    #[test]
+    fn fedavg_weights_by_samples() {
+        let global = vec![0f32; 3];
+        let out = aggregate(
+            &global,
+            &[
+                input(0, vec![1.0, 1.0, 1.0], 300, 1.0, 0.0),
+                input(1, vec![-1.0, -1.0, -1.0], 100, 1.0, 0.0),
+            ],
+            Aggregation::FedAvg,
+        )
+        .unwrap();
+        // w = (0.75, 0.25) → M = 0.75*1 - 0.25*1 = 0.5
+        for v in out.new_params {
+            assert!((v - 0.5).abs() < 1e-6);
+        }
+        assert_eq!(out.weights[0], (0, 0.75));
+        assert_eq!(out.weights[1], (1, 0.25));
+    }
+
+    #[test]
+    fn weights_always_normalize() {
+        let global = vec![0f32; 2];
+        for strat in [
+            Aggregation::FedAvg,
+            Aggregation::FedProx { mu: 0.1 },
+            Aggregation::Weighted(WeightScheme::DataSize),
+            Aggregation::Weighted(WeightScheme::InverseLoss),
+            Aggregation::Weighted(WeightScheme::InverseVariance),
+        ] {
+            let out = aggregate(
+                &global,
+                &[
+                    input(0, vec![1.0, 0.0], 50, 2.0, 0.5),
+                    input(1, vec![0.0, 1.0], 70, 0.5, 0.1),
+                    input(2, vec![1.0, 1.0], 30, 1.0, 0.9),
+                ],
+                strat,
+            )
+            .unwrap();
+            let sum: f64 = out.weights.iter().map(|(_, w)| w).sum();
+            assert!((sum - 1.0).abs() < 1e-9, "{strat:?}: weights sum {sum}");
+        }
+    }
+
+    #[test]
+    fn inverse_loss_downweights_lossy_clients() {
+        let global = vec![0f32; 1];
+        let out = aggregate(
+            &global,
+            &[
+                input(0, vec![1.0], 100, 0.1, 0.0), // fits well
+                input(1, vec![-1.0], 100, 9.0, 0.0), // fits poorly
+            ],
+            Aggregation::Weighted(WeightScheme::InverseLoss),
+        )
+        .unwrap();
+        assert!(out.new_params[0] > 0.5, "got {}", out.new_params[0]);
+    }
+
+    #[test]
+    fn inverse_variance_downweights_noisy_updates() {
+        let global = vec![0f32; 1];
+        let out = aggregate(
+            &global,
+            &[
+                input(0, vec![1.0], 100, 1.0, 0.01),
+                input(1, vec![-1.0], 100, 1.0, 10.0),
+            ],
+            Aggregation::Weighted(WeightScheme::InverseVariance),
+        )
+        .unwrap();
+        assert!(out.new_params[0] > 0.5);
+    }
+
+    #[test]
+    fn partial_aggregation_renormalizes() {
+        // aggregating 2-of-3 must behave as if only those 2 existed
+        let global = vec![10f32; 2];
+        let all = [
+            input(0, vec![1.0, 0.0], 100, 1.0, 0.0),
+            input(1, vec![0.0, 1.0], 100, 1.0, 0.0),
+        ];
+        let out = aggregate(&global, &all, Aggregation::FedAvg).unwrap();
+        assert!((out.new_params[0] - 10.5).abs() < 1e-6);
+        assert!((out.new_params[1] - 10.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mean_train_loss_weighted_by_samples() {
+        let global = vec![0f32; 1];
+        let out = aggregate(
+            &global,
+            &[
+                input(0, vec![0.0], 300, 1.0, 0.0),
+                input(1, vec![0.0], 100, 5.0, 0.0),
+            ],
+            Aggregation::FedAvg,
+        )
+        .unwrap();
+        assert!((out.mean_train_loss - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn errors_on_empty_and_mismatched() {
+        let global = vec![0f32; 3];
+        assert!(aggregate(&global, &[], Aggregation::FedAvg).is_err());
+        assert!(aggregate(
+            &global,
+            &[input(0, vec![1.0], 1, 0.0, 0.0)],
+            Aggregation::FedAvg
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn f64_accumulation_is_stable() {
+        // many tiny contributions must not vanish in f32 rounding
+        let global = vec![0f32; 1];
+        let inputs: Vec<AggInput> = (0..10_000)
+            .map(|i| input(i, vec![1e-4], 1, 0.0, 0.0))
+            .collect();
+        let out = aggregate(&global, &inputs, Aggregation::FedAvg).unwrap();
+        assert!((out.new_params[0] - 1e-4).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,111 @@
+//! Convergence detection (Algorithm 1 line 13): relative model
+//! movement ‖M_{r+1} − M_r‖ / ‖M_r‖ below ε for `patience` consecutive
+//! rounds, plus optional target-accuracy early stop.
+
+/// Tracks convergence across rounds.
+#[derive(Debug, Clone)]
+pub struct ConvergenceTracker {
+    eps: f32,
+    patience: usize,
+    below: usize,
+    pub target_accuracy: Option<f64>,
+    last_delta: f64,
+}
+
+impl ConvergenceTracker {
+    pub fn new(eps: f32, patience: usize, target_accuracy: Option<f64>) -> Self {
+        ConvergenceTracker {
+            eps,
+            patience: patience.max(1),
+            below: 0,
+            target_accuracy,
+            last_delta: f64::INFINITY,
+        }
+    }
+
+    /// Relative movement between old and new parameters.
+    pub fn relative_delta(old: &[f32], new: &[f32]) -> f64 {
+        debug_assert_eq!(old.len(), new.len());
+        let mut num = 0f64;
+        let mut den = 0f64;
+        for (&o, &n) in old.iter().zip(new) {
+            let d = (n - o) as f64;
+            num += d * d;
+            den += (o as f64) * (o as f64);
+        }
+        if den == 0.0 {
+            return if num == 0.0 { 0.0 } else { f64::INFINITY };
+        }
+        (num / den).sqrt()
+    }
+
+    /// Feed one round; returns true if converged (Algorithm 1's
+    /// `Converged(M_r, M_{r+1}, ε)` with patience).
+    pub fn update(&mut self, old: &[f32], new: &[f32], eval_accuracy: Option<f64>) -> bool {
+        self.last_delta = Self::relative_delta(old, new);
+        if self.last_delta < self.eps as f64 {
+            self.below += 1;
+        } else {
+            self.below = 0;
+        }
+        if self.below >= self.patience {
+            return true;
+        }
+        if let (Some(target), Some(acc)) = (self.target_accuracy, eval_accuracy) {
+            if acc >= target {
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn last_delta(&self) -> f64 {
+        self.last_delta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relative_delta_basics() {
+        let a = vec![1.0f32, 0.0];
+        assert_eq!(ConvergenceTracker::relative_delta(&a, &a), 0.0);
+        let b = vec![1.1f32, 0.0];
+        let d = ConvergenceTracker::relative_delta(&a, &b);
+        assert!((d - 0.1).abs() < 1e-6);
+        // zero old params, nonzero new -> infinity
+        assert!(ConvergenceTracker::relative_delta(&[0.0], &[1.0]).is_infinite());
+        assert_eq!(ConvergenceTracker::relative_delta(&[0.0], &[0.0]), 0.0);
+    }
+
+    #[test]
+    fn patience_requires_consecutive_quiet_rounds() {
+        let mut t = ConvergenceTracker::new(0.01, 3, None);
+        let base = vec![1.0f32; 10];
+        let quiet: Vec<f32> = base.iter().map(|v| v + 1e-5).collect();
+        let loud: Vec<f32> = base.iter().map(|v| v + 0.5).collect();
+        assert!(!t.update(&base, &quiet, None));
+        assert!(!t.update(&base, &quiet, None));
+        assert!(!t.update(&base, &loud, None)); // resets the streak
+        assert!(!t.update(&base, &quiet, None));
+        assert!(!t.update(&base, &quiet, None));
+        assert!(t.update(&base, &quiet, None)); // 3rd consecutive
+    }
+
+    #[test]
+    fn target_accuracy_stops_early() {
+        let mut t = ConvergenceTracker::new(1e-9, 5, Some(0.8));
+        let a = vec![1.0f32];
+        let b = vec![2.0f32];
+        assert!(!t.update(&a, &b, Some(0.5)));
+        assert!(t.update(&a, &b, Some(0.85)));
+    }
+
+    #[test]
+    fn no_accuracy_no_early_stop() {
+        let mut t = ConvergenceTracker::new(1e-9, 5, Some(0.8));
+        assert!(!t.update(&[1.0], &[2.0], None));
+    }
+}

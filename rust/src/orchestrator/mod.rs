@@ -1,0 +1,22 @@
+//! Central orchestrator (paper §3.2): the lightweight, stateless-ish
+//! coordination unit that selects clients, distributes the global
+//! model, collects updates under deadlines, aggregates and tracks
+//! convergence (Algorithm 1).
+//!
+//! * [`registry`] — client profiles + reliability/timing history.
+//! * [`selection`] — adaptive client selection (paper §4.1).
+//! * [`aggregate`] — FedAvg / FedProx / weighted + partial-k (§4.2, §4.4).
+//! * [`convergence`] — Algorithm 1 line 13.
+//! * [`server`] — the round loop over a [`ServerTransport`].
+
+mod aggregate;
+mod convergence;
+mod registry;
+mod selection;
+mod server;
+
+pub use aggregate::{aggregate, AggInput, AggOutcome};
+pub use convergence::ConvergenceTracker;
+pub use registry::{ClientRecord, ClientRegistry};
+pub use selection::select_clients;
+pub use server::{mask_seed, EvalHarness, NoHooks, Orchestrator, OrchestratorHooks, RoundOutcome};

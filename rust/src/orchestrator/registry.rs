@@ -1,0 +1,221 @@
+//! Client registry: profiles from registration + running reliability
+//! and timing history (paper §4.1 "performance history": successful
+//! participation, update quality, completion time).
+
+use crate::cluster::NodeId;
+use crate::network::ClientProfile;
+use std::collections::BTreeMap;
+
+/// EWMA smoothing for round-time estimates.
+const EWMA_ALPHA: f64 = 0.3;
+
+/// Everything the orchestrator knows about one client.
+#[derive(Debug, Clone)]
+pub struct ClientRecord {
+    pub id: NodeId,
+    pub profile: ClientProfile,
+    /// EWMA of observed round completion time (ms); starts from the
+    /// profile's benchmark estimate.
+    pub ewma_round_ms: f64,
+    pub successes: u64,
+    pub failures: u64,
+    /// Rounds remaining on the bench after being excluded as a
+    /// straggler (0 = eligible).
+    pub benched_for: u32,
+    /// Round in which this client last participated.
+    pub last_selected_round: Option<u32>,
+}
+
+impl ClientRecord {
+    /// Laplace-smoothed success rate in [0, 1].
+    pub fn reliability(&self) -> f64 {
+        (self.successes as f64 + 1.0) / ((self.successes + self.failures) as f64 + 2.0)
+    }
+
+    /// Selection score (paper §4.1): compute capability × reliability ×
+    /// bandwidth, where capability is inverse expected round time.
+    pub fn score(&self) -> f64 {
+        let speed = 1.0 / self.ewma_round_ms.max(1.0);
+        let bw = (self.profile.link_bw / 1e9).clamp(0.05, 10.0);
+        speed * self.reliability() * bw.sqrt()
+    }
+}
+
+/// The registry.
+#[derive(Debug, Default)]
+pub struct ClientRegistry {
+    clients: BTreeMap<NodeId, ClientRecord>,
+}
+
+impl ClientRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, id: NodeId, profile: ClientProfile) {
+        let est_round_ms = profile.bench_step_ms.max(0.1) * 10.0; // rough prior
+        self.clients
+            .entry(id)
+            .and_modify(|r| r.profile = profile.clone())
+            .or_insert(ClientRecord {
+                id,
+                profile,
+                ewma_round_ms: est_round_ms,
+                successes: 0,
+                failures: 0,
+                benched_for: 0,
+                last_selected_round: None,
+            });
+    }
+
+    pub fn len(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clients.is_empty()
+    }
+
+    pub fn get(&self, id: NodeId) -> Option<&ClientRecord> {
+        self.clients.get(&id)
+    }
+
+    pub fn ids(&self) -> Vec<NodeId> {
+        self.clients.keys().copied().collect()
+    }
+
+    pub fn records(&self) -> impl Iterator<Item = &ClientRecord> {
+        self.clients.values()
+    }
+
+    /// Record a successful round: update EWMA time + success count.
+    pub fn report_success(&mut self, id: NodeId, round: u32, round_ms: f64) {
+        if let Some(r) = self.clients.get_mut(&id) {
+            r.successes += 1;
+            r.ewma_round_ms = EWMA_ALPHA * round_ms + (1.0 - EWMA_ALPHA) * r.ewma_round_ms;
+            r.last_selected_round = Some(round);
+        }
+    }
+
+    /// Record a failure (dropout, deadline miss, preemption).
+    pub fn report_failure(&mut self, id: NodeId, round: u32) {
+        if let Some(r) = self.clients.get_mut(&id) {
+            r.failures += 1;
+            r.last_selected_round = Some(round);
+        }
+    }
+
+    /// Bench a straggler for `rounds` rounds (paper §4.1 load
+    /// balancing: "temporarily excluded").
+    pub fn bench(&mut self, id: NodeId, rounds: u32) {
+        if let Some(r) = self.clients.get_mut(&id) {
+            r.benched_for = r.benched_for.max(rounds);
+        }
+    }
+
+    /// Start-of-round housekeeping: decrement bench counters.
+    pub fn tick_round(&mut self) {
+        for r in self.clients.values_mut() {
+            r.benched_for = r.benched_for.saturating_sub(1);
+        }
+    }
+
+    /// Median EWMA round time across clients (exclusion threshold).
+    pub fn median_round_ms(&self) -> f64 {
+        let mut times: Vec<f64> = self.clients.values().map(|r| r.ewma_round_ms).collect();
+        if times.is_empty() {
+            return 0.0;
+        }
+        times.sort_by(f64::total_cmp);
+        times[times.len() / 2]
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_profile(speed: f64, bw: f64) -> ClientProfile {
+    ClientProfile {
+        speed_factor: speed,
+        mem_gb: 16.0,
+        link_bw: bw,
+        n_samples: 100,
+        bench_step_ms: 10.0 / speed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_rereg() {
+        let mut reg = ClientRegistry::new();
+        reg.register(1, test_profile(1.0, 1e9));
+        reg.register(1, test_profile(0.5, 1e9));
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.get(1).unwrap().profile.speed_factor, 0.5);
+    }
+
+    #[test]
+    fn reliability_laplace_smoothed() {
+        let mut reg = ClientRegistry::new();
+        reg.register(1, test_profile(1.0, 1e9));
+        assert_eq!(reg.get(1).unwrap().reliability(), 0.5); // no history
+        for r in 0..8 {
+            reg.report_success(1, r, 100.0);
+        }
+        assert!(reg.get(1).unwrap().reliability() > 0.8);
+        reg.report_failure(1, 9);
+        let rel = reg.get(1).unwrap().reliability();
+        assert!(rel < 0.9 && rel > 0.5);
+    }
+
+    #[test]
+    fn ewma_tracks_recent_times() {
+        let mut reg = ClientRegistry::new();
+        reg.register(1, test_profile(1.0, 1e9));
+        let before = reg.get(1).unwrap().ewma_round_ms;
+        for r in 0..20 {
+            reg.report_success(1, r, 500.0);
+        }
+        let after = reg.get(1).unwrap().ewma_round_ms;
+        assert!((after - 500.0).abs() < 50.0, "ewma {after} from {before}");
+    }
+
+    #[test]
+    fn score_orders_by_capability() {
+        let mut reg = ClientRegistry::new();
+        reg.register(1, test_profile(1.0, 1e9)); // fast gpu
+        reg.register(2, test_profile(0.02, 1e8)); // slow cpu
+        for r in 0..5 {
+            reg.report_success(1, r, 100.0);
+            reg.report_success(2, r, 5000.0);
+        }
+        assert!(reg.get(1).unwrap().score() > 10.0 * reg.get(2).unwrap().score());
+    }
+
+    #[test]
+    fn bench_and_tick() {
+        let mut reg = ClientRegistry::new();
+        reg.register(1, test_profile(1.0, 1e9));
+        reg.bench(1, 2);
+        assert_eq!(reg.get(1).unwrap().benched_for, 2);
+        reg.tick_round();
+        assert_eq!(reg.get(1).unwrap().benched_for, 1);
+        reg.tick_round();
+        reg.tick_round();
+        assert_eq!(reg.get(1).unwrap().benched_for, 0);
+    }
+
+    #[test]
+    fn median_round_time() {
+        let mut reg = ClientRegistry::new();
+        for (i, t) in [(1u32, 100.0), (2, 200.0), (3, 10_000.0)] {
+            reg.register(i, test_profile(1.0, 1e9));
+            for r in 0..10 {
+                reg.report_success(i, r, t);
+            }
+        }
+        let m = reg.median_round_ms();
+        assert!((150.0..=300.0).contains(&m), "median {m}");
+    }
+}

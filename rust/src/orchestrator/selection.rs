@@ -1,0 +1,280 @@
+//! Adaptive client selection (paper §4.1).
+//!
+//! `Random` samples uniformly (the ablation baseline). `Adaptive`
+//! scores clients by capability × reliability × bandwidth, benches
+//! chronic stragglers (EWMA round time > exclude_factor × median) and
+//! reserves an exploration fraction of slots for uniform sampling so
+//! cold/benched profiles keep getting refreshed.
+
+use super::registry::ClientRegistry;
+use crate::cluster::NodeId;
+use crate::config::{SelectionConfig, SelectionPolicy};
+use crate::util::rng::Rng;
+
+/// Pick this round's cohort from `available` clients.
+///
+/// Deterministic in `rng`. Returns at most `cfg.clients_per_round` ids
+/// (fewer if not enough clients are available).
+pub fn select_clients(
+    registry: &mut ClientRegistry,
+    available: &[NodeId],
+    cfg: &SelectionConfig,
+    round: u32,
+    rng: &mut Rng,
+) -> Vec<NodeId> {
+    let k = cfg.clients_per_round.min(available.len());
+    if k == 0 {
+        return vec![];
+    }
+    match cfg.policy {
+        SelectionPolicy::Random => {
+            let picks = rng.sample_indices(available.len(), k);
+            picks.into_iter().map(|i| available[i]).collect()
+        }
+        SelectionPolicy::Adaptive {
+            explore_frac,
+            exclude_factor,
+        } => adaptive(registry, available, k, explore_frac, exclude_factor, round, rng),
+    }
+}
+
+fn adaptive(
+    registry: &mut ClientRegistry,
+    available: &[NodeId],
+    k: usize,
+    explore_frac: f64,
+    exclude_factor: f64,
+    round: u32,
+    rng: &mut Rng,
+) -> Vec<NodeId> {
+    registry.tick_round();
+    // bench chronic stragglers: EWMA round time far above the median
+    let median = registry.median_round_ms();
+    if median > 0.0 && round > 0 {
+        let stragglers: Vec<NodeId> = available
+            .iter()
+            .copied()
+            .filter(|&id| {
+                registry
+                    .get(id)
+                    .is_some_and(|r| r.ewma_round_ms > exclude_factor * median)
+            })
+            .collect();
+        for id in stragglers {
+            registry.bench(id, 3);
+            log::debug!("selection: benching straggler {id} for 3 rounds");
+        }
+    }
+    // eligible = available and not benched
+    let eligible: Vec<NodeId> = available
+        .iter()
+        .copied()
+        .filter(|&id| registry.get(id).map_or(true, |r| r.benched_for == 0))
+        .collect();
+    // if benching ate too much of the pool, fall back to all available
+    let pool: &[NodeId] = if eligible.len() >= k {
+        &eligible
+    } else {
+        available
+    };
+
+    let n_explore = ((k as f64) * explore_frac).round() as usize;
+    let n_exploit = k - n_explore;
+
+    // exploit: top-scoring clients
+    let mut scored: Vec<(f64, NodeId)> = pool
+        .iter()
+        .map(|&id| {
+            let s = registry.get(id).map_or(0.0, |r| r.score());
+            (s, id)
+        })
+        .collect();
+    scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    let mut selected: Vec<NodeId> = scored.iter().take(n_exploit).map(|&(_, id)| id).collect();
+
+    // explore: uniform among the rest
+    let rest: Vec<NodeId> = pool
+        .iter()
+        .copied()
+        .filter(|id| !selected.contains(id))
+        .collect();
+    let picks = rng.sample_indices(rest.len(), n_explore.min(rest.len()));
+    selected.extend(picks.into_iter().map(|i| rest[i]));
+
+    // top up if exploration pool was short
+    if selected.len() < k {
+        for &(_, id) in scored.iter() {
+            if selected.len() >= k {
+                break;
+            }
+            if !selected.contains(&id) {
+                selected.push(id);
+            }
+        }
+    }
+    selected.truncate(k);
+    selected
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::registry::test_profile;
+    use super::*;
+
+    fn registry_with(n: u32) -> (ClientRegistry, Vec<NodeId>) {
+        let mut reg = ClientRegistry::new();
+        for i in 0..n {
+            reg.register(i, test_profile(1.0, 1e9));
+        }
+        (reg, (0..n).collect())
+    }
+
+    fn cfg(policy: SelectionPolicy, k: usize) -> SelectionConfig {
+        SelectionConfig {
+            policy,
+            clients_per_round: k,
+        }
+    }
+
+    #[test]
+    fn random_selects_k_distinct() {
+        let (mut reg, avail) = registry_with(30);
+        let mut rng = Rng::new(0);
+        let sel = select_clients(&mut reg, &avail, &cfg(SelectionPolicy::Random, 10), 0, &mut rng);
+        assert_eq!(sel.len(), 10);
+        let mut s = sel.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 10);
+    }
+
+    #[test]
+    fn k_larger_than_pool_takes_all() {
+        let (mut reg, avail) = registry_with(5);
+        let mut rng = Rng::new(1);
+        for policy in [SelectionPolicy::Random, SelectionPolicy::default()] {
+            let sel = select_clients(&mut reg, &avail, &cfg(policy, 20), 0, &mut rng);
+            assert_eq!(sel.len(), 5);
+        }
+    }
+
+    #[test]
+    fn adaptive_prefers_fast_reliable_clients() {
+        let mut reg = ClientRegistry::new();
+        // 0..5 fast, 5..10 slow
+        for i in 0..10u32 {
+            let speed = if i < 5 { 1.0 } else { 0.02 };
+            reg.register(i, test_profile(speed, 1e9));
+        }
+        for r in 0..10 {
+            for i in 0..10u32 {
+                let t = if i < 5 { 100.0 } else { 5_000.0 };
+                reg.report_success(i, r, t);
+            }
+        }
+        let avail: Vec<NodeId> = (0..10).collect();
+        let mut rng = Rng::new(2);
+        // no exploration → pure exploitation for determinism
+        let sel = select_clients(
+            &mut reg,
+            &avail,
+            &cfg(
+                SelectionPolicy::Adaptive {
+                    explore_frac: 0.0,
+                    exclude_factor: 100.0,
+                },
+                5,
+            ),
+            5,
+            &mut rng,
+        );
+        assert_eq!(sel.len(), 5);
+        assert!(sel.iter().all(|&id| id < 5), "picked slow clients: {sel:?}");
+    }
+
+    #[test]
+    fn adaptive_benches_extreme_stragglers() {
+        let mut reg = ClientRegistry::new();
+        for i in 0..10u32 {
+            reg.register(i, test_profile(1.0, 1e9));
+        }
+        for r in 0..5 {
+            for i in 0..10u32 {
+                let t = if i == 9 { 100_000.0 } else { 100.0 };
+                reg.report_success(i, r, t);
+            }
+        }
+        let avail: Vec<NodeId> = (0..10).collect();
+        let mut rng = Rng::new(3);
+        let sel = select_clients(
+            &mut reg,
+            &avail,
+            &cfg(
+                SelectionPolicy::Adaptive {
+                    explore_frac: 0.0,
+                    exclude_factor: 2.5,
+                },
+                9,
+            ),
+            5,
+            &mut rng,
+        );
+        assert!(!sel.contains(&9), "straggler 9 selected: {sel:?}");
+        assert!(reg.get(9).unwrap().benched_for > 0);
+    }
+
+    #[test]
+    fn exploration_reaches_cold_clients() {
+        let mut reg = ClientRegistry::new();
+        for i in 0..20u32 {
+            reg.register(i, test_profile(1.0, 1e9));
+        }
+        // clients 0..10 have glowing history; 10..20 are cold
+        for r in 0..10 {
+            for i in 0..10u32 {
+                reg.report_success(i, r, 50.0);
+            }
+        }
+        let avail: Vec<NodeId> = (0..20).collect();
+        let mut hit_cold = false;
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let sel = select_clients(
+                &mut reg,
+                &avail,
+                &cfg(
+                    SelectionPolicy::Adaptive {
+                        explore_frac: 0.4,
+                        exclude_factor: 100.0,
+                    },
+                    10,
+                ),
+                1,
+                &mut rng,
+            );
+            if sel.iter().any(|&id| id >= 10) {
+                hit_cold = true;
+                break;
+            }
+        }
+        assert!(hit_cold, "exploration never sampled cold clients");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (mut r1, avail) = registry_with(30);
+        let (mut r2, _) = registry_with(30);
+        let c = cfg(SelectionPolicy::default(), 10);
+        let a = select_clients(&mut r1, &avail, &c, 0, &mut Rng::new(9));
+        let b = select_clients(&mut r2, &avail, &c, 0, &mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_pool_returns_empty() {
+        let (mut reg, _) = registry_with(5);
+        let mut rng = Rng::new(0);
+        let sel = select_clients(&mut reg, &[], &cfg(SelectionPolicy::Random, 3), 0, &mut rng);
+        assert!(sel.is_empty());
+    }
+}

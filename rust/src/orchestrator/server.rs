@@ -1,0 +1,397 @@
+//! The orchestrator round loop (Algorithm 1).
+//!
+//! Generic over [`ServerTransport`], so the same loop drives in-process
+//! simulations, multi-thread runs and multi-process TCP deployments.
+//! Per round: select → broadcast → collect-with-deadline/partial-k →
+//! aggregate → evaluate → convergence check. Fault tolerance: clients
+//! that miss the deadline or vanish are simply skipped (their registry
+//! reliability drops, which feeds back into selection).
+
+use super::aggregate::{aggregate, AggInput};
+use super::convergence::ConvergenceTracker;
+use super::registry::ClientRegistry;
+use super::selection::select_clients;
+use crate::cluster::NodeId;
+use crate::compress::{decompress, Encoded};
+use crate::config::ExperimentConfig;
+use crate::data::{Batch, Shard};
+use crate::metrics::{RoundMetrics, TrainingReport};
+use crate::network::{Msg, ServerTransport, TrafficLog};
+use crate::runtime::{EvalOut, ModelRuntime};
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Centralized evaluation harness (paper §5.3: accuracy on a
+/// centralized held-out set).
+pub struct EvalHarness {
+    pub runtime: Box<dyn ModelRuntime>,
+    pub shard: Shard,
+}
+
+impl EvalHarness {
+    pub fn evaluate(&self, params: &[f32]) -> Result<EvalOut> {
+        let b = self.runtime.eval_batch();
+        let n_batches = (self.shard.n / b).max(1);
+        let mut total = EvalOut {
+            loss_sum: 0.0,
+            correct: 0.0,
+            n: 0,
+        };
+        for i in 0..n_batches {
+            let mut x = Vec::with_capacity(b * self.shard.x_len);
+            let mut y = Vec::with_capacity(b * self.shard.y_len);
+            for k in 0..b {
+                let idx = (i * b + k) % self.shard.n;
+                let (ex, ey) = self.shard.example(idx);
+                x.extend_from_slice(ex);
+                y.extend_from_slice(ey);
+            }
+            total.merge(self.runtime.eval_step(params, &Batch { x, y, n: b })?);
+        }
+        Ok(total)
+    }
+}
+
+/// Hooks for experiment harnesses (ablation logging etc.).
+pub trait OrchestratorHooks {
+    /// Called after each round with its metrics.
+    fn on_round(&mut self, _m: &RoundMetrics) {}
+}
+
+/// Default no-op hooks.
+pub struct NoHooks;
+impl OrchestratorHooks for NoHooks {}
+
+/// Outcome of a completed round.
+#[derive(Debug)]
+pub struct RoundOutcome {
+    pub metrics: RoundMetrics,
+    pub converged: bool,
+}
+
+/// The central orchestrator.
+pub struct Orchestrator<T: ServerTransport> {
+    cfg: ExperimentConfig,
+    transport: T,
+    registry: ClientRegistry,
+    traffic: Arc<TrafficLog>,
+    eval: Option<EvalHarness>,
+    rng: Rng,
+    params: Vec<f32>,
+    model_version: u32,
+    /// Evaluate every N rounds (1 = every round).
+    pub eval_every: u32,
+}
+
+impl<T: ServerTransport> Orchestrator<T> {
+    pub fn new(
+        cfg: ExperimentConfig,
+        transport: T,
+        traffic: Arc<TrafficLog>,
+        initial_params: Vec<f32>,
+        eval: Option<EvalHarness>,
+    ) -> Self {
+        let rng = Rng::new(cfg.seed ^ 0x0C5);
+        Orchestrator {
+            cfg,
+            transport,
+            registry: ClientRegistry::new(),
+            traffic,
+            eval,
+            rng,
+            params: initial_params,
+            model_version: 0,
+            eval_every: 1,
+        }
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    pub fn registry(&self) -> &ClientRegistry {
+        &self.registry
+    }
+
+    /// Phase 0: absorb registrations until `expected` clients joined or
+    /// `timeout` passed. Returns the number registered.
+    pub fn wait_for_clients(&mut self, expected: usize, timeout: Duration) -> Result<usize> {
+        let deadline = Instant::now() + timeout;
+        while self.registry.len() < expected {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let step = (deadline - now).min(Duration::from_millis(100));
+            if let Some((from, msg)) = self.transport.recv_timeout(step)? {
+                self.handle_control(from, msg)?;
+            }
+        }
+        log::info!(
+            "orchestrator: {} / {expected} clients registered",
+            self.registry.len()
+        );
+        Ok(self.registry.len())
+    }
+
+    fn handle_control(&mut self, from: NodeId, msg: Msg) -> Result<()> {
+        match msg {
+            Msg::Register { client, profile } => {
+                if client != from {
+                    log::warn!("register id mismatch: envelope {from}, body {client}");
+                }
+                self.registry.register(client, profile);
+                self.transport
+                    .send_to(client, &Msg::RegisterAck { client })?;
+            }
+            Msg::Heartbeat { .. } => {}
+            other => {
+                log::debug!("orchestrator: ignoring {} outside round", other.name());
+            }
+        }
+        Ok(())
+    }
+
+    /// Run one round `r`. Blocking; returns metrics + convergence info.
+    pub fn run_round(&mut self, round: u32, tracker: &mut ConvergenceTracker) -> Result<RoundOutcome> {
+        let t_round = Instant::now();
+        let available = self.registry.ids();
+        if available.is_empty() {
+            bail!("round {round}: no clients registered");
+        }
+        let mut round_rng = self.rng.fork(round as u64);
+        let selected = select_clients(
+            &mut self.registry,
+            &available,
+            &self.cfg.selection,
+            round,
+            &mut round_rng,
+        );
+        if selected.is_empty() {
+            bail!("round {round}: selection returned no clients");
+        }
+        log::debug!("round {round}: selected {selected:?}");
+
+        let deadline_ms = self.cfg.straggler.deadline_ms.unwrap_or(3_600_000);
+        // Algorithm 1 line 5: broadcast the global model
+        for &c in &selected {
+            let msg = Msg::RoundStart {
+                round,
+                model_version: self.model_version,
+                deadline_ms,
+                lr: self.cfg.train.lr,
+                mu: self.cfg.aggregation.mu(),
+                local_epochs: self.cfg.train.local_epochs as u32,
+                params: Encoded::Dense(self.params.clone()),
+                mask_seed: mask_seed(self.cfg.seed, round, c),
+                compression: self.cfg.compression,
+            };
+            if let Err(e) = self.transport.send_to(c, &msg) {
+                log::warn!("round {round}: broadcast to {c} failed: {e}");
+            }
+        }
+
+        // Algorithm 1 lines 6–10: collect updates
+        let partial_k = self
+            .cfg
+            .straggler
+            .partial_k
+            .unwrap_or(usize::MAX)
+            .min(selected.len());
+        let deadline = t_round + Duration::from_millis(deadline_ms);
+        let mut inputs: Vec<AggInput> = Vec::with_capacity(selected.len());
+        let mut reported: Vec<NodeId> = Vec::new();
+        while reported.len() < selected.len() && inputs.len() < partial_k {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let step = (deadline - now).min(Duration::from_millis(50));
+            let Some((from, msg)) = self.transport.recv_timeout(step)? else {
+                continue;
+            };
+            match msg {
+                Msg::Update {
+                    round: r,
+                    client,
+                    delta,
+                    stats,
+                } => {
+                    if r != round {
+                        log::debug!("stale update from {client} for round {r}");
+                        continue;
+                    }
+                    if !selected.contains(&client) || reported.contains(&client) {
+                        continue;
+                    }
+                    match decompress(&delta, self.params.len()) {
+                        Ok(dense) => {
+                            inputs.push(AggInput {
+                                client,
+                                delta: dense,
+                                n_samples: stats.n_samples,
+                                train_loss: stats.train_loss,
+                                update_var: stats.update_var,
+                            });
+                            reported.push(client);
+                            self.registry.report_success(
+                                client,
+                                round,
+                                t_round.elapsed().as_secs_f64() * 1e3,
+                            );
+                        }
+                        Err(e) => {
+                            log::warn!("round {round}: bad update from {client}: {e}");
+                            self.registry.report_failure(client, round);
+                            reported.push(client);
+                        }
+                    }
+                }
+                other => self.handle_control(from, other)?,
+            }
+        }
+
+        // fault accounting: selected clients that never reported
+        let mut deadline_misses = 0u32;
+        for &c in &selected {
+            if !reported.contains(&c) {
+                self.registry.report_failure(c, round);
+                deadline_misses += 1;
+            }
+        }
+
+        // Algorithm 1 lines 11–12: aggregate + update global model
+        let old_params = std::mem::take(&mut self.params);
+        let (new_params, mean_loss) = if inputs.is_empty() {
+            log::warn!("round {round}: zero updates — keeping old model");
+            (old_params.clone(), f64::NAN)
+        } else {
+            let out = aggregate(&old_params, &inputs, self.cfg.aggregation)?;
+            (out.new_params, out.mean_train_loss)
+        };
+
+        // evaluate (centralized, §5.3)
+        let (eval_accuracy, eval_loss) = if round % self.eval_every == 0 {
+            match &self.eval {
+                Some(h) => {
+                    let e = h.evaluate(&new_params)?;
+                    (Some(e.accuracy()), Some(e.mean_loss()))
+                }
+                None => (None, None),
+            }
+        } else {
+            (None, None)
+        };
+
+        let converged = tracker.update(&old_params, &new_params, eval_accuracy);
+        let model_delta = tracker.last_delta();
+        self.params = new_params;
+        self.model_version = round + 1;
+
+        // notify round end (selected only; broadcast would also be fine)
+        for &c in &selected {
+            let _ = self.transport.send_to(
+                c,
+                &Msg::RoundEnd {
+                    round,
+                    model_version: self.model_version,
+                },
+            );
+        }
+
+        let (bytes_down, bytes_up) = self.traffic.round(round);
+        Ok(RoundOutcome {
+            metrics: RoundMetrics {
+                round,
+                selected: selected.len() as u32,
+                reported: inputs.len() as u32,
+                dropped: (selected.len() - reported.len()) as u32,
+                deadline_misses,
+                train_loss: mean_loss,
+                eval_accuracy,
+                eval_loss,
+                duration_s: t_round.elapsed().as_secs_f64(),
+                bytes_down,
+                bytes_up,
+                model_delta,
+            },
+            converged,
+        })
+    }
+
+    /// Full training run (Algorithm 1). Consumes registrations first if
+    /// `wait_for` is given.
+    pub fn run(
+        &mut self,
+        wait_for: Option<(usize, Duration)>,
+        hooks: &mut dyn OrchestratorHooks,
+    ) -> Result<TrainingReport> {
+        if let Some((n, timeout)) = wait_for {
+            let got = self.wait_for_clients(n, timeout)?;
+            if got == 0 {
+                bail!("no clients registered");
+            }
+        }
+        let mut report = TrainingReport::new(&self.cfg.name);
+        let mut tracker = ConvergenceTracker::new(
+            self.cfg.train.converge_eps,
+            self.cfg.train.converge_patience,
+            self.cfg.train.target_accuracy,
+        );
+        for round in 0..self.cfg.train.rounds as u32 {
+            let outcome = self.run_round(round, &mut tracker)?;
+            log::info!(
+                "round {round}: loss={:.4} acc={} reported={}/{} dur={:.2}s",
+                outcome.metrics.train_loss,
+                outcome
+                    .metrics
+                    .eval_accuracy
+                    .map_or("-".into(), |a| format!("{:.3}", a)),
+                outcome.metrics.reported,
+                outcome.metrics.selected,
+                outcome.metrics.duration_s,
+            );
+            hooks.on_round(&outcome.metrics);
+            let converged = outcome.converged;
+            report.push(outcome.metrics);
+            if converged {
+                report.converged_at = Some(round);
+                log::info!("converged at round {round}");
+                break;
+            }
+        }
+        if let Some(t) = self.cfg.train.target_accuracy {
+            report.target_accuracy_at = report.rounds_to_accuracy(t);
+        }
+        // Algorithm 1 done: release the fleet
+        for c in self.transport.connected() {
+            let _ = self.transport.send_to(c, &Msg::Shutdown);
+        }
+        Ok(report)
+    }
+}
+
+/// Federated-dropout mask seed for (experiment, round, client) — the
+/// client derives the identical mask from this.
+pub fn mask_seed(exp_seed: u64, round: u32, client: NodeId) -> u64 {
+    exp_seed ^ ((round as u64) << 32 | client as u64).wrapping_mul(0x2545F4914F6CDD1D)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_seed_unique_per_round_and_client() {
+        let mut seen = std::collections::HashSet::new();
+        for r in 0..100 {
+            for c in 0..60 {
+                assert!(seen.insert(mask_seed(7, r, c)));
+            }
+        }
+        assert_eq!(mask_seed(7, 3, 4), mask_seed(7, 3, 4));
+        assert_ne!(mask_seed(7, 3, 4), mask_seed(8, 3, 4));
+    }
+}

@@ -1,0 +1,196 @@
+//! `artifacts/manifest.json` reader — the contract between
+//! `python/compile/aot.py` (writer) and the PJRT runtime (reader).
+
+use crate::util::json::Value;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+pub const SUPPORTED_VERSION: usize = 1;
+
+/// Per-model artifact metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInfo {
+    pub name: String,
+    pub n_params: usize,
+    pub kernel_impl: String,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    /// Per-example input shape (no batch dim).
+    pub x_shape: Vec<usize>,
+    /// "f32" or "i32".
+    pub x_dtype: String,
+    /// Per-example label shape ([] for scalar labels).
+    pub y_shape: Vec<usize>,
+    pub samples_per_example: usize,
+}
+
+impl ModelInfo {
+    pub fn x_len(&self) -> usize {
+        self.x_shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn y_len(&self) -> usize {
+        self.y_shape.iter().product::<usize>().max(1)
+    }
+
+    /// Artifact path for a step kind ("init" | "train" | "eval").
+    pub fn hlo_path(&self, dir: &Path, kind: &str) -> PathBuf {
+        dir.join(format!("{}_{kind}.hlo.txt", self.name))
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelInfo>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let dir = PathBuf::from(dir);
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let v = Value::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let version = v
+            .req("version")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("manifest: bad version"))?;
+        if version != SUPPORTED_VERSION {
+            bail!("manifest version {version} unsupported (want {SUPPORTED_VERSION})");
+        }
+        let mut models = BTreeMap::new();
+        let obj = v
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest: models must be an object"))?;
+        for (name, m) in obj {
+            let shape_of = |key: &str| -> Result<Vec<usize>> {
+                m.req(key)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("manifest: {key} must be an array"))?
+                    .iter()
+                    .map(|x| {
+                        x.as_usize()
+                            .ok_or_else(|| anyhow!("manifest: bad dim in {key}"))
+                    })
+                    .collect()
+            };
+            let usize_of = |key: &str| -> Result<usize> {
+                m.req(key)?
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("manifest: {key} must be an integer"))
+            };
+            let str_of = |key: &str| -> Result<String> {
+                Ok(m.req(key)?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("manifest: {key} must be a string"))?
+                    .to_string())
+            };
+            let info = ModelInfo {
+                name: name.clone(),
+                n_params: usize_of("n_params")?,
+                kernel_impl: str_of("kernel_impl")?,
+                train_batch: usize_of("train_batch")?,
+                eval_batch: usize_of("eval_batch")?,
+                x_shape: shape_of("x_shape")?,
+                x_dtype: str_of("x_dtype")?,
+                y_shape: shape_of("y_shape")?,
+                samples_per_example: usize_of("samples_per_example")?,
+            };
+            if info.x_dtype != "f32" && info.x_dtype != "i32" {
+                bail!("manifest: model {name}: unsupported x_dtype {}", info.x_dtype);
+            }
+            models.insert(name.clone(), info);
+        }
+        Ok(Manifest { models, dir })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "model '{name}' not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {
+        "medmnist_mlp": {
+          "n_params": 235146, "kernel_impl": "pallas",
+          "train_batch": 32, "eval_batch": 64,
+          "x_shape": [784], "x_dtype": "f32", "y_shape": [],
+          "samples_per_example": 1,
+          "param_names": ["fc1_w"], "param_shapes": [[784, 256]]
+        },
+        "charlm": {
+          "n_params": 60416, "kernel_impl": "pallas",
+          "train_batch": 16, "eval_batch": 32,
+          "x_shape": [32], "x_dtype": "i32", "y_shape": [32],
+          "samples_per_example": 32,
+          "param_names": [], "param_shapes": []
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let mlp = m.model("medmnist_mlp").unwrap();
+        assert_eq!(mlp.n_params, 235146);
+        assert_eq!(mlp.x_len(), 784);
+        assert_eq!(mlp.y_len(), 1);
+        let lm = m.model("charlm").unwrap();
+        assert_eq!(lm.x_dtype, "i32");
+        assert_eq!(lm.y_len(), 32);
+        assert_eq!(
+            lm.hlo_path(&m.dir, "train"),
+            PathBuf::from("/tmp/a/charlm_train.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert!(m.model("resnet50").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version_and_dtype() {
+        let bad_ver = SAMPLE.replace("\"version\": 1", "\"version\": 99");
+        assert!(Manifest::parse(&bad_ver, PathBuf::from(".")).is_err());
+        let bad_dtype = SAMPLE.replace("\"f32\"", "\"f64\"");
+        assert!(Manifest::parse(&bad_dtype, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn load_real_artifacts_if_present() {
+        // integration: parse the manifest actually produced by aot.py
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(m.models.contains_key("medmnist_mlp"));
+            for info in m.models.values() {
+                assert!(info.n_params > 0);
+                assert!(info.hlo_path(&m.dir, "train").exists());
+            }
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Model runtime: executes the AOT-compiled L2/L1 compute from Rust.
+//!
+//! * [`manifest`] — reads `artifacts/manifest.json` (shapes, dtypes,
+//!   batch sizes) written by `python/compile/aot.py`.
+//! * [`pjrt`] — the real thing: HLO text → PJRT CPU executable →
+//!   `train_step`/`eval_step` over flat `f32[P]` parameter buffers.
+//! * [`mock`] — a pure-Rust multinomial-logistic-regression runtime
+//!   with the same interface, for tests and timing simulations that
+//!   must run without artifacts.
+//!
+//! Python never runs at training time: the runtime is the only bridge
+//! between the Rust coordinator and the paper's model math.
+
+pub mod manifest;
+pub mod mock;
+pub mod pjrt;
+
+pub use manifest::{Manifest, ModelInfo};
+pub use mock::MockRuntime;
+pub use pjrt::PjrtRuntime;
+
+use crate::data::Batch;
+use anyhow::Result;
+
+/// Outcome of one train step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepOut {
+    pub params: Vec<f32>,
+    pub loss: f32,
+    /// Correct predictions in the batch (label positions for LMs).
+    pub correct: f32,
+}
+
+/// Outcome of an eval pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalOut {
+    pub loss_sum: f32,
+    pub correct: f32,
+    /// Label positions evaluated.
+    pub n: u64,
+}
+
+impl EvalOut {
+    pub fn accuracy(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.n as f64
+        }
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.loss_sum as f64 / self.n as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: EvalOut) {
+        self.loss_sum += other.loss_sum;
+        self.correct += other.correct;
+        self.n += other.n;
+    }
+}
+
+/// What every runtime backend provides. One instance serves one model.
+pub trait ModelRuntime: Send {
+    /// Flat parameter count P.
+    fn n_params(&self) -> usize;
+
+    /// Train minibatch rows expected by `train_step`.
+    fn train_batch(&self) -> usize;
+
+    /// Eval minibatch rows expected by `eval_step`.
+    fn eval_batch(&self) -> usize;
+
+    /// Label positions per example (seq_len for LMs, 1 for images).
+    fn samples_per_example(&self) -> usize;
+
+    /// Initialize parameters from a seed.
+    fn init(&self, seed: u32) -> Result<Vec<f32>>;
+
+    /// One SGD/FedProx minibatch step (Algorithm 1 line 7, fused with
+    /// the L1 kernel's update rule).
+    fn train_step(
+        &self,
+        params: &[f32],
+        global: &[f32],
+        batch: &Batch,
+        lr: f32,
+        mu: f32,
+    ) -> Result<StepOut>;
+
+    /// Evaluate on one batch.
+    fn eval_step(&self, params: &[f32], batch: &Batch) -> Result<EvalOut>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_out_merge_and_ratios() {
+        let mut a = EvalOut {
+            loss_sum: 10.0,
+            correct: 5.0,
+            n: 10,
+        };
+        a.merge(EvalOut {
+            loss_sum: 2.0,
+            correct: 5.0,
+            n: 10,
+        });
+        assert_eq!(a.n, 20);
+        assert_eq!(a.accuracy(), 0.5);
+        assert!((a.mean_loss() - 0.6).abs() < 1e-9);
+        let empty = EvalOut {
+            loss_sum: 0.0,
+            correct: 0.0,
+            n: 0,
+        };
+        assert_eq!(empty.accuracy(), 0.0);
+        assert_eq!(empty.mean_loss(), 0.0);
+    }
+}

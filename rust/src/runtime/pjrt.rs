@@ -1,0 +1,361 @@
+//! PJRT-backed runtime: loads `artifacts/*.hlo.txt`, compiles once on
+//! the PJRT CPU client, and serves train/eval/init execution to any
+//! number of worker threads.
+//!
+//! Threading: the `xla` crate's `PjRtClient` wraps an `Rc` (not Send),
+//! so a dedicated **service thread** owns the client + executables;
+//! worker threads talk to it through a channel. XLA's CPU backend
+//! already parallelizes inside a single execution, so one service
+//! thread keeps the machine busy; a pool can be layered on top by
+//! creating several `PjrtRuntime`s (each compiles its own copy).
+
+use super::{EvalOut, ModelRuntime, StepOut};
+use crate::data::Batch;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+enum Req {
+    Init {
+        seed: u32,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    Train {
+        params: Vec<f32>,
+        global: Vec<f32>,
+        x: Vec<f32>,
+        y: Vec<i32>,
+        lr: f32,
+        mu: f32,
+        reply: Sender<Result<StepOut>>,
+    },
+    Eval {
+        params: Vec<f32>,
+        x: Vec<f32>,
+        y: Vec<i32>,
+        reply: Sender<Result<(f32, f32)>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the service thread. Cheap to clone; all clones share the
+/// same compiled executables.
+#[derive(Clone)]
+pub struct PjrtRuntime {
+    tx: Sender<Req>,
+    info: super::ModelInfo,
+    // keep the service thread's panic observable
+    _joiner: Arc<JoinOnDrop>,
+}
+
+// The Sender is Send; the handle is shared across worker threads.
+// (Mutex only to satisfy older mpsc Sender !Sync — std's Sender is
+// Send+!Sync until 1.72; current std Sender is Sync, but stay safe.)
+struct JoinOnDrop {
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    tx: Sender<Req>,
+}
+
+impl Drop for JoinOnDrop {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Shutdown);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl PjrtRuntime {
+    /// Load + compile the three artifacts for `model` from `dir`.
+    pub fn load(dir: &str, model: &str) -> Result<PjrtRuntime> {
+        let manifest = super::Manifest::load(dir)?;
+        let info = manifest.model(model)?.clone();
+        Self::from_info(&manifest.dir, info)
+    }
+
+    pub fn from_info(dir: &Path, info: super::ModelInfo) -> Result<PjrtRuntime> {
+        let (tx, rx) = channel::<Req>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let dir = dir.to_path_buf();
+        let info_thread = info.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("pjrt-{}", info.name))
+            .spawn(move || {
+                let svc = match Service::new(&dir, &info_thread) {
+                    Ok(s) => {
+                        let _ = ready_tx.send(Ok(()));
+                        s
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                svc.run(rx);
+            })
+            .context("spawning pjrt service thread")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt service thread died during startup"))??;
+        Ok(PjrtRuntime {
+            tx: tx.clone(),
+            info,
+            _joiner: Arc::new(JoinOnDrop {
+                handle: Mutex::new(Some(handle)),
+                tx,
+            }),
+        })
+    }
+
+    pub fn info(&self) -> &super::ModelInfo {
+        &self.info
+    }
+}
+
+/// Owns the PJRT client; runs on the service thread.
+struct Service {
+    init: xla::PjRtLoadedExecutable,
+    train: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    info: super::ModelInfo,
+}
+
+impl Service {
+    fn new(dir: &Path, info: &super::ModelInfo) -> Result<Service> {
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        log::info!(
+            "pjrt[{}]: platform={} compiling artifacts…",
+            info.name,
+            client.platform_name()
+        );
+        let compile = |kind: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = info.hlo_path(dir, kind);
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(wrap_xla)
+            .with_context(|| format!("loading {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(wrap_xla)?;
+            log::info!(
+                "pjrt[{}]: compiled {kind} in {:.1}s",
+                info.name,
+                t0.elapsed().as_secs_f64()
+            );
+            Ok(exe)
+        };
+        Ok(Service {
+            init: compile("init")?,
+            train: compile("train")?,
+            eval: compile("eval")?,
+            info: info.clone(),
+        })
+    }
+
+    fn run(self, rx: std::sync::mpsc::Receiver<Req>) {
+        while let Ok(req) = rx.recv() {
+            match req {
+                Req::Init { seed, reply } => {
+                    let _ = reply.send(self.do_init(seed));
+                }
+                Req::Train {
+                    params,
+                    global,
+                    x,
+                    y,
+                    lr,
+                    mu,
+                    reply,
+                } => {
+                    let _ = reply.send(self.do_train(&params, &global, &x, &y, lr, mu));
+                }
+                Req::Eval {
+                    params,
+                    x,
+                    y,
+                    reply,
+                } => {
+                    let _ = reply.send(self.do_eval(&params, &x, &y));
+                }
+                Req::Shutdown => break,
+            }
+        }
+    }
+
+    fn x_literal(&self, x: &[f32], batch: usize) -> Result<xla::Literal> {
+        let mut dims: Vec<i64> = vec![batch as i64];
+        dims.extend(self.info.x_shape.iter().map(|&d| d as i64));
+        let lit = if self.info.x_dtype == "i32" {
+            let ints: Vec<i32> = x.iter().map(|&v| v as i32).collect();
+            xla::Literal::vec1(&ints)
+        } else {
+            xla::Literal::vec1(x)
+        };
+        lit.reshape(&dims).map_err(wrap_xla)
+    }
+
+    fn y_literal(&self, y: &[i32], batch: usize) -> Result<xla::Literal> {
+        let mut dims: Vec<i64> = vec![batch as i64];
+        dims.extend(self.info.y_shape.iter().map(|&d| d as i64));
+        xla::Literal::vec1(y).reshape(&dims).map_err(wrap_xla)
+    }
+
+    fn do_init(&self, seed: u32) -> Result<Vec<f32>> {
+        let seed_lit = xla::Literal::scalar(seed);
+        let out = self.init.execute::<xla::Literal>(&[seed_lit]).map_err(wrap_xla)?;
+        let lit = out[0][0].to_literal_sync().map_err(wrap_xla)?;
+        let params = lit.to_tuple1().map_err(wrap_xla)?;
+        let v = params.to_vec::<f32>().map_err(wrap_xla)?;
+        if v.len() != self.info.n_params {
+            bail!("init returned {} params, want {}", v.len(), self.info.n_params);
+        }
+        Ok(v)
+    }
+
+    fn do_train(
+        &self,
+        params: &[f32],
+        global: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        mu: f32,
+    ) -> Result<StepOut> {
+        let b = self.info.train_batch;
+        let args = [
+            xla::Literal::vec1(params),
+            xla::Literal::vec1(global),
+            self.x_literal(x, b)?,
+            self.y_literal(y, b)?,
+            xla::Literal::scalar(lr),
+            xla::Literal::scalar(mu),
+        ];
+        let out = self.train.execute::<xla::Literal>(&args).map_err(wrap_xla)?;
+        let lit = out[0][0].to_literal_sync().map_err(wrap_xla)?;
+        let (p, loss, correct) = lit.to_tuple3().map_err(wrap_xla)?;
+        Ok(StepOut {
+            params: p.to_vec::<f32>().map_err(wrap_xla)?,
+            loss: loss.get_first_element::<f32>().map_err(wrap_xla)?,
+            correct: correct.get_first_element::<f32>().map_err(wrap_xla)?,
+        })
+    }
+
+    fn do_eval(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let b = self.info.eval_batch;
+        let args = [
+            xla::Literal::vec1(params),
+            self.x_literal(x, b)?,
+            self.y_literal(y, b)?,
+        ];
+        let out = self.eval.execute::<xla::Literal>(&args).map_err(wrap_xla)?;
+        let lit = out[0][0].to_literal_sync().map_err(wrap_xla)?;
+        let (loss_sum, correct) = lit.to_tuple2().map_err(wrap_xla)?;
+        Ok((
+            loss_sum.get_first_element::<f32>().map_err(wrap_xla)?,
+            correct.get_first_element::<f32>().map_err(wrap_xla)?,
+        ))
+    }
+}
+
+fn wrap_xla(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+impl ModelRuntime for PjrtRuntime {
+    fn n_params(&self) -> usize {
+        self.info.n_params
+    }
+
+    fn train_batch(&self) -> usize {
+        self.info.train_batch
+    }
+
+    fn eval_batch(&self) -> usize {
+        self.info.eval_batch
+    }
+
+    fn samples_per_example(&self) -> usize {
+        self.info.samples_per_example
+    }
+
+    fn init(&self, seed: u32) -> Result<Vec<f32>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Init { seed, reply })
+            .map_err(|_| anyhow!("pjrt service gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt service gone"))?
+    }
+
+    fn train_step(
+        &self,
+        params: &[f32],
+        global: &[f32],
+        batch: &Batch,
+        lr: f32,
+        mu: f32,
+    ) -> Result<StepOut> {
+        if batch.n != self.info.train_batch {
+            bail!(
+                "train batch {} != artifact batch {}",
+                batch.n,
+                self.info.train_batch
+            );
+        }
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Train {
+                params: params.to_vec(),
+                global: global.to_vec(),
+                x: batch.x.clone(),
+                y: batch.y.clone(),
+                lr,
+                mu,
+                reply,
+            })
+            .map_err(|_| anyhow!("pjrt service gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt service gone"))?
+    }
+
+    fn eval_step(&self, params: &[f32], batch: &Batch) -> Result<EvalOut> {
+        if batch.n != self.info.eval_batch {
+            bail!(
+                "eval batch {} != artifact batch {}",
+                batch.n,
+                self.info.eval_batch
+            );
+        }
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Eval {
+                params: params.to_vec(),
+                x: batch.x.clone(),
+                y: batch.y.clone(),
+                reply,
+            })
+            .map_err(|_| anyhow!("pjrt service gone"))?;
+        let (loss_sum, correct) = rx.recv().map_err(|_| anyhow!("pjrt service gone"))??;
+        Ok(EvalOut {
+            loss_sum,
+            correct,
+            n: (batch.n * self.info.samples_per_example) as u64,
+        })
+    }
+}
+
+// Integration tests live in rust/tests/pjrt_integration.rs (they need
+// built artifacts); unit coverage here is limited to handle plumbing.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_fails_cleanly_without_artifacts() {
+        let err = PjrtRuntime::load("/nonexistent-dir", "medmnist_mlp")
+            .err()
+            .expect("should fail");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

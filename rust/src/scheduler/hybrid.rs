@@ -1,0 +1,161 @@
+//! Hybrid scheduler: routes jobs to SLURM (HPC) or K8s (cloud) by
+//! partition prefix — the paper's "hybrid coordination capabilities,
+//! facilitating scheduling across both HPC and cloud resources".
+//!
+//! Partition names `hpc:<partition>` go to SLURM; `cloud:<pool>` go to
+//! K8s. Job ids are made globally unique by an origin bit.
+
+use super::job::{Job, JobId, JobState};
+use super::{K8sSim, SchedulerAdapter, SlurmSim};
+use crate::cluster::NodeId;
+use anyhow::{bail, Result};
+
+const CLOUD_BIT: JobId = 1 << 62;
+
+pub struct HybridScheduler {
+    slurm: SlurmSim,
+    k8s: K8sSim,
+}
+
+impl HybridScheduler {
+    pub fn new(slurm: SlurmSim, k8s: K8sSim) -> Self {
+        HybridScheduler { slurm, k8s }
+    }
+
+    fn route(partition: &str) -> Result<(bool, String)> {
+        if let Some(p) = partition.strip_prefix("hpc:") {
+            Ok((false, p.to_string()))
+        } else if let Some(p) = partition.strip_prefix("cloud:") {
+            Ok((true, p.to_string()))
+        } else {
+            bail!(
+                "hybrid: partition '{partition}' must be prefixed 'hpc:' or 'cloud:'"
+            )
+        }
+    }
+}
+
+impl SchedulerAdapter for HybridScheduler {
+    fn submit(&mut self, mut job: Job) -> Result<JobId> {
+        let (is_cloud, inner) = Self::route(&job.partition)?;
+        job.partition = inner;
+        if is_cloud {
+            Ok(self.k8s.submit(job)? | CLOUD_BIT)
+        } else {
+            self.slurm.submit(job)
+        }
+    }
+
+    fn tick(&mut self, now_s: f64) -> Vec<(JobId, JobState)> {
+        let mut out = self.slurm.tick(now_s);
+        out.extend(
+            self.k8s
+                .tick(now_s)
+                .into_iter()
+                .map(|(id, st)| (id | CLOUD_BIT, st)),
+        );
+        out
+    }
+
+    fn state(&self, id: JobId) -> Option<JobState> {
+        if id & CLOUD_BIT != 0 {
+            self.k8s.state(id & !CLOUD_BIT)
+        } else {
+            self.slurm.state(id)
+        }
+    }
+
+    fn allocated_nodes(&self) -> Vec<NodeId> {
+        let mut v = self.slurm.allocated_nodes();
+        v.extend(self.k8s.allocated_nodes());
+        v.sort_unstable();
+        v
+    }
+
+    fn cancel(&mut self, id: JobId) -> Result<()> {
+        if id & CLOUD_BIT != 0 {
+            self.k8s.cancel(id & !CLOUD_BIT)
+        } else {
+            self.slurm.cancel(id)
+        }
+    }
+
+    fn queue_summary(&self) -> String {
+        format!(
+            "hybrid [{} | {}]",
+            self.slurm.queue_summary(),
+            self.k8s.queue_summary()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::k8s::Pool;
+    use super::*;
+
+    fn hybrid() -> HybridScheduler {
+        HybridScheduler::new(
+            SlurmSim::new(vec![("gpu", vec![0, 1])]),
+            K8sSim::new(vec![Pool {
+                name: "gpu".into(),
+                initial: vec![100, 101],
+                scale_reserve: vec![],
+                scale_up_delay_s: 10.0,
+            }]),
+        )
+    }
+
+    fn job(client: NodeId, partition: &str) -> Job {
+        Job {
+            client,
+            partition: partition.into(),
+            priority: 0,
+            walltime_s: 50.0,
+            preemptible: false,
+        }
+    }
+
+    #[test]
+    fn routes_by_prefix() {
+        let mut h = hybrid();
+        let a = h.submit(job(1, "hpc:gpu")).unwrap();
+        let b = h.submit(job(2, "cloud:gpu")).unwrap();
+        assert_eq!(a & CLOUD_BIT, 0);
+        assert_ne!(b & CLOUD_BIT, 0);
+        h.tick(0.0);
+        h.tick(3.0); // k8s pod start delay
+        assert!(h.state(a).unwrap().is_running());
+        assert!(h.state(b).unwrap().is_running());
+        // HPC node 0/1 + cloud node 100/101 both allocated
+        let nodes = h.allocated_nodes();
+        assert!(nodes.contains(&0));
+        assert!(nodes.contains(&100));
+    }
+
+    #[test]
+    fn rejects_unprefixed_partition() {
+        let mut h = hybrid();
+        assert!(h.submit(job(1, "gpu")).is_err());
+    }
+
+    #[test]
+    fn cancel_routes_correctly() {
+        let mut h = hybrid();
+        let a = h.submit(job(1, "hpc:gpu")).unwrap();
+        let b = h.submit(job(2, "cloud:gpu")).unwrap();
+        h.tick(0.0);
+        h.cancel(a).unwrap();
+        h.cancel(b).unwrap();
+        assert_eq!(h.state(a), Some(JobState::Cancelled));
+        assert_eq!(h.state(b), Some(JobState::Cancelled));
+    }
+
+    #[test]
+    fn summary_mentions_both() {
+        let h = hybrid();
+        let s = h.queue_summary();
+        assert!(s.contains("slurm"));
+        assert!(s.contains("k8s"));
+    }
+}

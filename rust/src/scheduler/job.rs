@@ -1,0 +1,70 @@
+//! Job model shared by all scheduler backends.
+
+use crate::cluster::NodeId;
+
+pub type JobId = u64;
+
+/// A request for one worker placement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Job {
+    /// FL client this job will host.
+    pub client: NodeId,
+    /// Partition (SLURM) / node pool (K8s) name, e.g. "gpu", "cpu".
+    pub partition: String,
+    /// Higher runs earlier within a partition.
+    pub priority: i32,
+    /// Requested wall time (seconds); the sim releases the node after.
+    pub walltime_s: f64,
+    /// Whether the job may be preempted by higher-priority arrivals.
+    pub preemptible: bool,
+}
+
+/// Lifecycle: Pending → Running → {Completed, Cancelled, Preempted}.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum JobState {
+    Pending,
+    Running { node: NodeId, since_s: f64 },
+    Completed { at_s: f64 },
+    Cancelled,
+    Preempted { at_s: f64 },
+}
+
+impl JobState {
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            JobState::Completed { .. } | JobState::Cancelled | JobState::Preempted { .. }
+        )
+    }
+
+    pub fn is_running(&self) -> bool {
+        matches!(self, JobState::Running { .. })
+    }
+}
+
+/// A granted placement: which node hosts which client.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Placement {
+    pub job: JobId,
+    pub client: NodeId,
+    pub node: NodeId,
+    pub start_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_predicates() {
+        assert!(!JobState::Pending.is_terminal());
+        assert!(JobState::Running {
+            node: 1,
+            since_s: 0.0
+        }
+        .is_running());
+        assert!(JobState::Completed { at_s: 5.0 }.is_terminal());
+        assert!(JobState::Cancelled.is_terminal());
+        assert!(JobState::Preempted { at_s: 1.0 }.is_terminal());
+    }
+}

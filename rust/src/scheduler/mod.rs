@@ -1,0 +1,51 @@
+//! Scheduler adapter (paper §3.2 "Scheduler Adapter").
+//!
+//! One trait, three backends:
+//! * [`SlurmSim`] — batch scheduler with partitions, FIFO + priority
+//!   queueing, node exclusivity and preemption (the HPC side).
+//! * [`K8sSim`] — pod orchestration with autoscaling (the cloud side).
+//! * [`HybridScheduler`] — routes jobs across both by domain, the
+//!   paper's "hybrid coordination capability".
+//! * [`LocalAdapter`] — trivial pass-through for in-process runs.
+//!
+//! The FL launcher asks the scheduler for worker placements; the
+//! simulators model queue wait and allocation lifecycles so that
+//! "requesting 20 workers on a busy SLURM partition" behaves like it
+//! does in real deployments (delayed starts = stragglers at round 0).
+
+mod hybrid;
+mod job;
+mod k8s;
+mod local;
+mod slurm;
+
+pub use hybrid::HybridScheduler;
+pub use job::{Job, JobId, JobState, Placement};
+pub use k8s::{K8sSim, Pool};
+pub use local::LocalAdapter;
+pub use slurm::SlurmSim;
+
+use crate::cluster::NodeId;
+use anyhow::Result;
+
+/// Abstraction over resource managers (SLURM, Kubernetes, hybrid).
+pub trait SchedulerAdapter: Send {
+    /// Submit a job requesting one node; returns its id.
+    fn submit(&mut self, job: Job) -> Result<JobId>;
+
+    /// Advance the scheduler's virtual clock to `now_s`, processing
+    /// queue movements. Returns jobs that changed state.
+    fn tick(&mut self, now_s: f64) -> Vec<(JobId, JobState)>;
+
+    /// Current state of a job.
+    fn state(&self, id: JobId) -> Option<JobState>;
+
+    /// Nodes currently allocated to running jobs.
+    fn allocated_nodes(&self) -> Vec<NodeId>;
+
+    /// Cancel a job (scancel / pod delete).
+    fn cancel(&mut self, id: JobId) -> Result<()>;
+
+    /// Human-readable queue summary (squeue / kubectl get pods).
+    fn queue_summary(&self) -> String;
+}

@@ -1,0 +1,341 @@
+//! SLURM-like batch scheduler simulation.
+//!
+//! Models the behaviours that matter to FL-on-HPC (Haus et al.; paper
+//! §2, §3.2): named partitions with fixed node sets, FIFO-within-
+//! priority queueing, exclusive node allocation, walltime-bounded runs
+//! and priority preemption. Queue wait — the dominant HPC latency —
+//! emerges naturally when jobs outnumber partition nodes.
+
+use super::job::{Job, JobId, JobState};
+use super::SchedulerAdapter;
+use crate::cluster::NodeId;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+struct Entry {
+    job: Job,
+    state: JobState,
+    submit_seq: u64,
+}
+
+/// One SLURM "cluster" with named partitions.
+pub struct SlurmSim {
+    partitions: BTreeMap<String, Vec<NodeId>>,
+    /// node -> job currently occupying it
+    busy: BTreeMap<NodeId, JobId>,
+    jobs: BTreeMap<JobId, Entry>,
+    next_id: JobId,
+    seq: u64,
+    now_s: f64,
+    /// Enable priority preemption of preemptible jobs.
+    pub preemption_enabled: bool,
+}
+
+impl SlurmSim {
+    pub fn new(partitions: Vec<(&str, Vec<NodeId>)>) -> Self {
+        SlurmSim {
+            partitions: partitions
+                .into_iter()
+                .map(|(n, v)| (n.to_string(), v))
+                .collect(),
+            busy: BTreeMap::new(),
+            jobs: BTreeMap::new(),
+            next_id: 1,
+            seq: 0,
+            now_s: 0.0,
+            preemption_enabled: true,
+        }
+    }
+
+    fn free_nodes(&self, partition: &str) -> Vec<NodeId> {
+        self.partitions
+            .get(partition)
+            .map(|nodes| {
+                nodes
+                    .iter()
+                    .copied()
+                    .filter(|n| !self.busy.contains_key(n))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Try to start pending jobs (highest priority, then FIFO).
+    fn schedule(&mut self, changes: &mut Vec<(JobId, JobState)>) {
+        // collect pending ids ordered by (-priority, submit_seq)
+        let mut pending: Vec<JobId> = self
+            .jobs
+            .iter()
+            .filter(|(_, e)| e.state == JobState::Pending)
+            .map(|(&id, _)| id)
+            .collect();
+        pending.sort_by_key(|id| {
+            let e = &self.jobs[id];
+            (-e.job.priority, e.submit_seq)
+        });
+        for id in pending {
+            let partition = self.jobs[&id].job.partition.clone();
+            let free = self.free_nodes(&partition);
+            if let Some(&node) = free.first() {
+                self.busy.insert(node, id);
+                let st = JobState::Running {
+                    node,
+                    since_s: self.now_s,
+                };
+                self.jobs.get_mut(&id).unwrap().state = st;
+                changes.push((id, st));
+            } else if self.preemption_enabled {
+                // look for a lower-priority preemptible victim
+                let my_prio = self.jobs[&id].job.priority;
+                let victim = self
+                    .partitions
+                    .get(&partition)
+                    .into_iter()
+                    .flatten()
+                    .filter_map(|n| self.busy.get(n).map(|&j| (*n, j)))
+                    .filter(|(_, j)| {
+                        let e = &self.jobs[j];
+                        e.job.preemptible && e.job.priority < my_prio
+                    })
+                    .min_by_key(|(_, j)| self.jobs[j].job.priority);
+                if let Some((node, victim_id)) = victim {
+                    let st = JobState::Preempted { at_s: self.now_s };
+                    self.jobs.get_mut(&victim_id).unwrap().state = st;
+                    changes.push((victim_id, st));
+                    self.busy.insert(node, id);
+                    let st = JobState::Running {
+                        node,
+                        since_s: self.now_s,
+                    };
+                    self.jobs.get_mut(&id).unwrap().state = st;
+                    changes.push((id, st));
+                }
+            }
+        }
+    }
+}
+
+impl SchedulerAdapter for SlurmSim {
+    fn submit(&mut self, job: Job) -> Result<JobId> {
+        if !self.partitions.contains_key(&job.partition) {
+            bail!(
+                "sbatch: invalid partition '{}' (have: {:?})",
+                job.partition,
+                self.partitions.keys().collect::<Vec<_>>()
+            );
+        }
+        if job.walltime_s <= 0.0 {
+            bail!("sbatch: walltime must be positive");
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.seq += 1;
+        self.jobs.insert(
+            id,
+            Entry {
+                job,
+                state: JobState::Pending,
+                submit_seq: self.seq,
+            },
+        );
+        Ok(id)
+    }
+
+    fn tick(&mut self, now_s: f64) -> Vec<(JobId, JobState)> {
+        assert!(now_s >= self.now_s, "time went backwards");
+        self.now_s = now_s;
+        let mut changes = Vec::new();
+        // complete jobs whose walltime elapsed
+        let done: Vec<(JobId, NodeId)> = self
+            .jobs
+            .iter()
+            .filter_map(|(&id, e)| match e.state {
+                JobState::Running { node, since_s }
+                    if now_s - since_s >= e.job.walltime_s =>
+                {
+                    Some((id, node))
+                }
+                _ => None,
+            })
+            .collect();
+        for (id, node) in done {
+            self.busy.remove(&node);
+            let st = JobState::Completed { at_s: now_s };
+            self.jobs.get_mut(&id).unwrap().state = st;
+            changes.push((id, st));
+        }
+        self.schedule(&mut changes);
+        changes
+    }
+
+    fn state(&self, id: JobId) -> Option<JobState> {
+        self.jobs.get(&id).map(|e| e.state)
+    }
+
+    fn allocated_nodes(&self) -> Vec<NodeId> {
+        self.busy.keys().copied().collect()
+    }
+
+    fn cancel(&mut self, id: JobId) -> Result<()> {
+        let e = self
+            .jobs
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("scancel: no such job {id}"))?;
+        if e.state.is_terminal() {
+            return Ok(()); // idempotent like scancel
+        }
+        if let JobState::Running { node, .. } = e.state {
+            self.busy.remove(&node);
+        }
+        e.state = JobState::Cancelled;
+        Ok(())
+    }
+
+    fn queue_summary(&self) -> String {
+        let pending = self
+            .jobs
+            .values()
+            .filter(|e| e.state == JobState::Pending)
+            .count();
+        let running = self.jobs.values().filter(|e| e.state.is_running()).count();
+        format!(
+            "slurm: {} partitions, {running} running, {pending} pending",
+            self.partitions.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(client: NodeId, partition: &str, prio: i32, wall: f64) -> Job {
+        Job {
+            client,
+            partition: partition.into(),
+            priority: prio,
+            walltime_s: wall,
+            preemptible: false,
+        }
+    }
+
+    fn sim2() -> SlurmSim {
+        SlurmSim::new(vec![("gpu", vec![0, 1]), ("cpu", vec![2])])
+    }
+
+    #[test]
+    fn fifo_within_capacity() {
+        let mut s = sim2();
+        let a = s.submit(job(10, "gpu", 0, 100.0)).unwrap();
+        let b = s.submit(job(11, "gpu", 0, 100.0)).unwrap();
+        let c = s.submit(job(12, "gpu", 0, 100.0)).unwrap();
+        s.tick(0.0);
+        assert!(s.state(a).unwrap().is_running());
+        assert!(s.state(b).unwrap().is_running());
+        assert_eq!(s.state(c), Some(JobState::Pending)); // queue full
+        assert_eq!(s.allocated_nodes().len(), 2);
+    }
+
+    #[test]
+    fn queued_job_starts_when_walltime_frees_node() {
+        let mut s = sim2();
+        let a = s.submit(job(10, "gpu", 0, 50.0)).unwrap();
+        let _b = s.submit(job(11, "gpu", 0, 50.0)).unwrap();
+        let c = s.submit(job(12, "gpu", 0, 50.0)).unwrap();
+        s.tick(0.0);
+        s.tick(49.0);
+        assert_eq!(s.state(c), Some(JobState::Pending));
+        let changes = s.tick(50.0);
+        assert!(changes
+            .iter()
+            .any(|(id, st)| *id == a && matches!(st, JobState::Completed { .. })));
+        assert!(s.state(c).unwrap().is_running());
+    }
+
+    #[test]
+    fn priority_order() {
+        let mut s = SlurmSim::new(vec![("gpu", vec![0])]);
+        s.submit(job(1, "gpu", 0, 10.0)).unwrap();
+        s.tick(0.0);
+        let low = s.submit(job(2, "gpu", 1, 10.0)).unwrap();
+        let high = s.submit(job(3, "gpu", 5, 10.0)).unwrap();
+        s.tick(10.0); // first job completes; high-prio must win
+        assert!(s.state(high).unwrap().is_running());
+        assert_eq!(s.state(low), Some(JobState::Pending));
+    }
+
+    #[test]
+    fn preemption_of_low_priority_preemptible() {
+        let mut s = SlurmSim::new(vec![("gpu", vec![0])]);
+        let victim = s
+            .submit(Job {
+                client: 1,
+                partition: "gpu".into(),
+                priority: 0,
+                walltime_s: 1000.0,
+                preemptible: true,
+            })
+            .unwrap();
+        s.tick(0.0);
+        assert!(s.state(victim).unwrap().is_running());
+        let bully = s.submit(job(2, "gpu", 10, 10.0)).unwrap();
+        let changes = s.tick(1.0);
+        assert!(matches!(
+            s.state(victim),
+            Some(JobState::Preempted { .. })
+        ));
+        assert!(s.state(bully).unwrap().is_running());
+        assert!(changes.len() >= 2);
+    }
+
+    #[test]
+    fn no_preemption_when_disabled_or_not_preemptible() {
+        let mut s = SlurmSim::new(vec![("gpu", vec![0])]);
+        s.preemption_enabled = false;
+        let a = s
+            .submit(Job {
+                client: 1,
+                partition: "gpu".into(),
+                priority: 0,
+                walltime_s: 1000.0,
+                preemptible: true,
+            })
+            .unwrap();
+        s.tick(0.0);
+        let b = s.submit(job(2, "gpu", 10, 10.0)).unwrap();
+        s.tick(1.0);
+        assert!(s.state(a).unwrap().is_running());
+        assert_eq!(s.state(b), Some(JobState::Pending));
+    }
+
+    #[test]
+    fn cancel_frees_node_and_is_idempotent() {
+        let mut s = sim2();
+        let a = s.submit(job(1, "gpu", 0, 100.0)).unwrap();
+        s.tick(0.0);
+        s.cancel(a).unwrap();
+        assert_eq!(s.state(a), Some(JobState::Cancelled));
+        assert!(s.allocated_nodes().is_empty() || !s.allocated_nodes().contains(&0));
+        s.cancel(a).unwrap(); // idempotent
+        assert!(s.cancel(999).is_err());
+    }
+
+    #[test]
+    fn invalid_partition_rejected() {
+        let mut s = sim2();
+        assert!(s.submit(job(1, "tpu", 0, 10.0)).is_err());
+        assert!(s.submit(job(1, "gpu", 0, 0.0)).is_err());
+    }
+
+    #[test]
+    fn queue_summary_counts() {
+        let mut s = sim2();
+        s.submit(job(1, "gpu", 0, 10.0)).unwrap();
+        s.submit(job(2, "gpu", 0, 10.0)).unwrap();
+        s.submit(job(3, "gpu", 0, 10.0)).unwrap();
+        s.tick(0.0);
+        let q = s.queue_summary();
+        assert!(q.contains("2 running"), "{q}");
+        assert!(q.contains("1 pending"), "{q}");
+    }
+}

@@ -1,0 +1,118 @@
+//! Differential privacy on the aggregate (paper §6: "differential
+//! privacy" under secure aggregation future work).
+//!
+//! Gaussian mechanism: per-client updates are L2-clipped to bound
+//! sensitivity, then calibrated N(0, σ²) noise is added to the
+//! aggregate; σ follows the standard analytic bound
+//! `σ ≥ clip · √(2 ln(1.25/δ)) / ε` for one release.
+
+use crate::util::rng::Rng;
+
+/// DP configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DpConfig {
+    pub epsilon: f64,
+    pub delta: f64,
+    /// L2 clipping norm applied to each client update.
+    pub clip_norm: f64,
+}
+
+impl DpConfig {
+    /// Noise stddev for one aggregate release.
+    pub fn sigma(&self) -> f64 {
+        assert!(self.epsilon > 0.0 && self.delta > 0.0 && self.delta < 1.0);
+        self.clip_norm * (2.0 * (1.25 / self.delta).ln()).sqrt() / self.epsilon
+    }
+}
+
+/// Clip `v` in place to L2 norm ≤ `clip`; returns the original norm.
+pub fn clip_l2(v: &mut [f32], clip: f64) -> f64 {
+    let norm = v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+    if norm > clip && norm > 0.0 {
+        let scale = (clip / norm) as f32;
+        for x in v.iter_mut() {
+            *x *= scale;
+        }
+    }
+    norm
+}
+
+/// Add Gaussian noise to an aggregate (noise scaled by 1/n_clients,
+/// since the mean of n clipped updates has sensitivity clip/n).
+pub fn gaussian_mechanism(agg: &mut [f32], cfg: &DpConfig, n_clients: usize, seed: u64) {
+    let sigma = cfg.sigma() / n_clients.max(1) as f64;
+    let mut rng = Rng::new(seed ^ 0xD1FF_5EED_0000_0001);
+    for x in agg.iter_mut() {
+        *x += (sigma * rng.normal()) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigma_monotone_in_privacy() {
+        let tight = DpConfig {
+            epsilon: 0.5,
+            delta: 1e-5,
+            clip_norm: 1.0,
+        };
+        let loose = DpConfig {
+            epsilon: 4.0,
+            delta: 1e-5,
+            clip_norm: 1.0,
+        };
+        assert!(tight.sigma() > loose.sigma());
+    }
+
+    #[test]
+    fn clip_preserves_small_and_shrinks_large() {
+        let mut small = vec![0.1f32, 0.2];
+        let n = clip_l2(&mut small, 10.0);
+        assert!(n < 10.0);
+        assert_eq!(small, vec![0.1, 0.2]);
+
+        let mut large = vec![3.0f32, 4.0]; // norm 5
+        clip_l2(&mut large, 1.0);
+        let norm: f64 = large.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+        // direction preserved
+        assert!((large[0] / large[1] - 0.75).abs() < 1e-5);
+    }
+
+    #[test]
+    fn noise_statistics() {
+        let cfg = DpConfig {
+            epsilon: 1.0,
+            delta: 1e-5,
+            clip_norm: 1.0,
+        };
+        let n = 20_000;
+        let mut v = vec![0f32; n];
+        gaussian_mechanism(&mut v, &cfg, 10, 0);
+        let expect_sigma = cfg.sigma() / 10.0;
+        let mean = v.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        let var = v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < expect_sigma * 0.1, "mean {mean}");
+        assert!(
+            (var.sqrt() - expect_sigma).abs() / expect_sigma < 0.1,
+            "std {} vs {expect_sigma}",
+            var.sqrt()
+        );
+    }
+
+    #[test]
+    fn noise_deterministic_in_seed() {
+        let cfg = DpConfig {
+            epsilon: 1.0,
+            delta: 1e-5,
+            clip_norm: 1.0,
+        };
+        let mut a = vec![0f32; 50];
+        let mut b = vec![0f32; 50];
+        gaussian_mechanism(&mut a, &cfg, 5, 7);
+        gaussian_mechanism(&mut b, &cfg, 5, 7);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,15 @@
+//! Secure aggregation + differential privacy (paper §6 future work,
+//! implemented here as first-class extensions).
+//!
+//! * [`masking`] — pairwise additive masking (Bonawitz-style, simplified
+//!   to the honest-but-curious model): each client pair (i, j) derives a
+//!   shared mask from a common seed; client i adds it, client j
+//!   subtracts it, so the server learns only the *sum* of updates.
+//! * [`dp`] — Gaussian-mechanism noise on the aggregate with optional
+//!   per-client update clipping.
+
+pub mod dp;
+pub mod masking;
+
+pub use dp::{clip_l2, gaussian_mechanism, DpConfig};
+pub use masking::{MaskedUpdate, SecureAggregator};

@@ -1,0 +1,164 @@
+//! Discrete-event virtual time (S15 in DESIGN.md).
+//!
+//! Timing experiments (Table 3 scalability, ablations E5/E7) must not
+//! depend on this machine's wall clock: a round's duration is *derived*
+//! from node speed factors, payload sizes and link profiles, then the
+//! orchestrator's deadline / partial-k logic plays out against virtual
+//! time. [`EventQueue`] is a classic min-heap discrete-event core;
+//! [`VirtualClock`] is the shared notion of "now".
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Monotonic virtual clock (seconds).
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    now_s: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn now_s(&self) -> f64 {
+        self.now_s
+    }
+
+    pub fn advance_to(&mut self, t_s: f64) {
+        assert!(
+            t_s >= self.now_s - 1e-12,
+            "virtual time went backwards: {} -> {t_s}",
+            self.now_s
+        );
+        self.now_s = self.now_s.max(t_s);
+    }
+}
+
+/// Min-heap of timestamped events.
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Reverse<Event<T>>>,
+    seq: u64,
+}
+
+struct Event<T> {
+    at_s: f64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Event<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at_s == other.at_s && self.seq == other.seq
+    }
+}
+impl<T> Eq for Event<T> {}
+impl<T> PartialOrd for Event<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Event<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at_s
+            .total_cmp(&other.at_s)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn push(&mut self, at_s: f64, payload: T) {
+        self.seq += 1;
+        self.heap.push(Reverse(Event {
+            at_s,
+            seq: self.seq,
+            payload,
+        }));
+    }
+
+    /// Pop the earliest event: (time, payload).
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|Reverse(e)| (e.at_s, e.payload))
+    }
+
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|Reverse(e)| e.at_s)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_monotonic() {
+        let mut c = VirtualClock::new();
+        c.advance_to(5.0);
+        c.advance_to(5.0);
+        c.advance_to(7.5);
+        assert_eq!(c.now_s(), 7.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "backwards")]
+    fn clock_rejects_regression() {
+        let mut c = VirtualClock::new();
+        c.advance_to(5.0);
+        c.advance_to(4.0);
+    }
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        assert_eq!(q.peek_time(), Some(1.0));
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((3.0, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(1.0, "first");
+        q.push(1.0, "second");
+        assert_eq!(q.pop().unwrap().1, "first");
+        assert_eq!(q.pop().unwrap().1, "second");
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut q = EventQueue::new();
+        q.push(10.0, 10);
+        q.push(1.0, 1);
+        assert_eq!(q.pop(), Some((1.0, 1)));
+        q.push(5.0, 5);
+        assert_eq!(q.pop(), Some((5.0, 5)));
+        assert_eq!(q.pop(), Some((10.0, 10)));
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,149 @@
+//! Property-testing harness (proptest is not vendored on this image).
+//!
+//! [`check`] runs a property over N generated cases; on failure it
+//! reports the case seed so the exact input replays with
+//! `FEDHPC_PROP_SEED=<seed>`. [`Gen`] wraps the in-tree RNG with
+//! generator combinators for the shapes our invariants need (vectors,
+//! ranges, weights). Used by `rust/tests/prop_*.rs` for coordinator
+//! invariants (selection, aggregation, codecs, wire format).
+
+use crate::util::rng::Rng;
+
+/// Case generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    /// Size hint for collections this case (grows across cases).
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.f32()
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Normal-distributed f32 vector of generated length ≤ size.
+    pub fn f32_vec(&mut self, max_len: usize) -> Vec<f32> {
+        let n = self.usize_in(1, max_len.max(1));
+        (0..n).map(|_| self.rng.normal() as f32).collect()
+    }
+
+    /// Vector with occasional pathological values (zeros, huge, tiny,
+    /// repeated) — the cases uniform sampling misses.
+    pub fn f32_vec_nasty(&mut self, max_len: usize) -> Vec<f32> {
+        let mut v = self.f32_vec(max_len);
+        let n = v.len();
+        for _ in 0..self.usize_in(0, n.min(8)) {
+            let i = self.rng.below(n);
+            v[i] = match self.rng.below(5) {
+                0 => 0.0,
+                1 => 1e30,
+                2 => -1e30,
+                3 => 1e-30,
+                _ => v[self.rng.below(n)], // duplicate (ties)
+            };
+        }
+        v
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `prop` over `cases` generated cases. Panics with the failing
+/// seed on the first violation.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
+    // replay mode
+    if let Ok(seed) = std::env::var("FEDHPC_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("FEDHPC_PROP_SEED must be a u64");
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            size: 64,
+        };
+        prop(&mut g);
+        return;
+    }
+    let base = 0xF00D_0000u64;
+    for case in 0..cases {
+        let seed = base + case as u64;
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            // ramp sizes so early failures are small
+            size: 4 + case * 97 / cases.max(1),
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "\nproperty '{name}' FAILED on case {case} — replay with FEDHPC_PROP_SEED={seed}\n"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 50, |g| {
+            let v = g.f32_vec(100);
+            assert!(!v.is_empty());
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failures() {
+        check("failing", 50, |g| {
+            let n = g.usize_in(0, 100);
+            assert!(n < 90, "boom at {n}");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen {
+            rng: Rng::new(1),
+            size: 10,
+        };
+        for _ in 0..1000 {
+            let u = g.usize_in(3, 7);
+            assert!((3..=7).contains(&u));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn nasty_vectors_contain_pathologies_sometimes() {
+        let mut saw_zero = false;
+        let mut saw_huge = false;
+        for seed in 0..200 {
+            let mut g = Gen {
+                rng: Rng::new(seed),
+                size: 64,
+            };
+            let v = g.f32_vec_nasty(64);
+            saw_zero |= v.contains(&0.0);
+            saw_huge |= v.iter().any(|&x| x.abs() >= 1e30);
+        }
+        assert!(saw_zero && saw_huge);
+    }
+}

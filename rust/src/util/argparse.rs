@@ -1,0 +1,223 @@
+//! Tiny CLI argument parser (no clap on this image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters, defaults and a generated usage block.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative arg set: declare flags/options, then `parse`.
+#[derive(Debug, Default)]
+pub struct Args {
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &'static str, default: Option<&str>, help: &'static str) -> Self {
+        self.specs.push(Spec {
+            name,
+            help,
+            takes_value: true,
+            default: default.map(|s| s.to_string()),
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(Spec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn usage(&self, cmd: &str) -> String {
+        let mut s = format!("usage: {cmd} [options]\n\noptions:\n");
+        for spec in &self.specs {
+            let left = if spec.takes_value {
+                format!("--{} <v>", spec.name)
+            } else {
+                format!("--{}", spec.name)
+            };
+            let def = spec
+                .default
+                .as_deref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {left:<26} {}{def}\n", spec.help));
+        }
+        s
+    }
+
+    /// Parse a raw token list (no program name).
+    pub fn parse(mut self, tokens: &[String]) -> Result<Parsed> {
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(rest) = t.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| anyhow!("unknown option --{name}"))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            tokens
+                                .get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow!("--{name} needs a value"))?
+                        }
+                    };
+                    self.values.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        bail!("flag --{name} does not take a value");
+                    }
+                    self.flags.push(name);
+                }
+            } else {
+                self.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        // fill defaults
+        for spec in &self.specs {
+            if spec.takes_value && !self.values.contains_key(spec.name) {
+                if let Some(d) = &spec.default {
+                    self.values.insert(spec.name.to_string(), d.clone());
+                }
+            }
+        }
+        Ok(Parsed {
+            values: self.values,
+            flags: self.flags,
+            positional: self.positional,
+        })
+    }
+}
+
+/// Result of parsing; typed getters.
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        self.req(name)?
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        self.req(name)?
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        self.req(name)?
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn f32(&self, name: &str) -> Result<f32> {
+        self.req(name)?
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    fn spec() -> Args {
+        Args::new()
+            .opt("rounds", Some("100"), "number of rounds")
+            .opt("model", None, "model name")
+            .flag("verbose", "chatty output")
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let p = spec()
+            .parse(&toks("train --rounds 5 --model=charlm --verbose"))
+            .unwrap();
+        assert_eq!(p.usize("rounds").unwrap(), 5);
+        assert_eq!(p.get("model"), Some("charlm"));
+        assert!(p.has("verbose"));
+        assert_eq!(p.positional(), &["train".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = spec().parse(&toks("")).unwrap();
+        assert_eq!(p.usize("rounds").unwrap(), 100);
+        assert_eq!(p.get("model"), None);
+        assert!(!p.has("verbose"));
+    }
+
+    #[test]
+    fn unknown_and_missing_value_error() {
+        assert!(spec().parse(&toks("--bogus")).is_err());
+        assert!(spec().parse(&toks("--model")).is_err());
+        assert!(spec().parse(&toks("--verbose=yes")).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = spec().usage("fedhpc train");
+        assert!(u.contains("--rounds"));
+        assert!(u.contains("default: 100"));
+    }
+}

@@ -1,0 +1,286 @@
+//! Little-endian wire encoding helpers for the message codec.
+//!
+//! A tiny, allocation-conscious reader/writer pair. The framework's
+//! protocol (network::message) encodes everything through these, so the
+//! wire format is defined in exactly one place.
+
+use anyhow::{bail, Result};
+
+/// Append-only byte writer.
+#[derive(Default, Debug)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Writer {
+            buf: Vec::with_capacity(n),
+        }
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    /// Length-prefixed f32 slice, bulk-copied as raw LE bytes.
+    pub fn f32_slice(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        self.buf.reserve(v.len() * 4);
+        // f32 -> LE bytes; on LE targets this is a straight memcpy
+        for chunk in v {
+            self.buf.extend_from_slice(&chunk.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed u32 slice.
+    pub fn u32_slice(&mut self, v: &[u32]) {
+        self.u64(v.len() as u64);
+        self.buf.reserve(v.len() * 4);
+        for chunk in v {
+            self.buf.extend_from_slice(&chunk.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed i8 slice.
+    pub fn i8_slice(&mut self, v: &[i8]) {
+        self.u64(v.len() as u64);
+        // i8 -> u8 reinterpret is byte-identical
+        self.buf
+            .extend_from_slice(unsafe { &*(v as *const [i8] as *const [u8]) });
+    }
+
+    /// Length-prefixed i16 slice.
+    pub fn i16_slice(&mut self, v: &[i16]) {
+        self.u64(v.len() as u64);
+        self.buf.reserve(v.len() * 2);
+        for chunk in v {
+            self.buf.extend_from_slice(&chunk.to_le_bytes());
+        }
+    }
+}
+
+/// Cursor-based byte reader with bounds-checked typed accessors.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "wire decode: wanted {n} bytes, have {} (pos {})",
+                self.remaining(),
+                self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn len_prefix(&mut self) -> Result<usize> {
+        let n = self.u64()?;
+        // sanity bound: one message never exceeds 16 GiB
+        if n > (16u64 << 30) {
+            bail!("wire decode: implausible length {n}");
+        }
+        Ok(n as usize)
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.len_prefix()?;
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let b = self.bytes()?;
+        Ok(std::str::from_utf8(b)
+            .map_err(|e| anyhow::anyhow!("wire decode: bad utf-8: {e}"))?
+            .to_string())
+    }
+
+    pub fn f32_vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.len_prefix()?;
+        let raw = self.take(n * 4)?;
+        let mut out = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            out.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    pub fn u32_vec(&mut self) -> Result<Vec<u32>> {
+        let n = self.len_prefix()?;
+        let raw = self.take(n * 4)?;
+        let mut out = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            out.push(u32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    pub fn i8_vec(&mut self) -> Result<Vec<i8>> {
+        let n = self.len_prefix()?;
+        let raw = self.take(n)?;
+        Ok(raw.iter().map(|&b| b as i8).collect())
+    }
+
+    pub fn i16_vec(&mut self) -> Result<Vec<i16>> {
+        let n = self.len_prefix()?;
+        let raw = self.take(n * 2)?;
+        let mut out = Vec::with_capacity(n);
+        for c in raw.chunks_exact(2) {
+            out.push(i16::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u16(300);
+        w.u32(70_000);
+        w.u64(1 << 40);
+        w.f32(1.5);
+        w.f64(-2.25);
+        w.str("héllo");
+        let v = w.into_vec();
+        let mut r = Reader::new(&v);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 300);
+        assert_eq!(r.u32().unwrap(), 70_000);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.f32().unwrap(), 1.5);
+        assert_eq!(r.f64().unwrap(), -2.25);
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn roundtrip_slices() {
+        let f = vec![1.0f32, -2.0, 3.5];
+        let u = vec![1u32, 2, 3, 4];
+        let i8s = vec![-128i8, 0, 127];
+        let i16s = vec![-32768i16, 0, 32767];
+        let mut w = Writer::new();
+        w.f32_slice(&f);
+        w.u32_slice(&u);
+        w.i8_slice(&i8s);
+        w.i16_slice(&i16s);
+        let v = w.into_vec();
+        let mut r = Reader::new(&v);
+        assert_eq!(r.f32_vec().unwrap(), f);
+        assert_eq!(r.u32_vec().unwrap(), u);
+        assert_eq!(r.i8_vec().unwrap(), i8s);
+        assert_eq!(r.i16_vec().unwrap(), i16s);
+    }
+
+    #[test]
+    fn truncated_input_errors() {
+        let mut w = Writer::new();
+        w.f32_slice(&[1.0, 2.0, 3.0]);
+        let v = w.into_vec();
+        let mut r = Reader::new(&v[..v.len() - 1]);
+        assert!(r.f32_vec().is_err());
+        let mut r2 = Reader::new(&v[..4]);
+        assert!(r2.f32_vec().is_err());
+    }
+
+    #[test]
+    fn implausible_length_rejected() {
+        let mut w = Writer::new();
+        w.u64(u64::MAX);
+        let v = w.into_vec();
+        let mut r = Reader::new(&v);
+        assert!(r.bytes().is_err());
+    }
+}

@@ -1,0 +1,74 @@
+//! Minimal `log` facade backend (no env_logger on this image).
+//!
+//! Timestamped, leveled, thread-named output to stderr. Level comes
+//! from `FEDHPC_LOG` (error|warn|info|debug|trace), default `info`.
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::sync::Once;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+struct StderrLogger;
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let now = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .unwrap_or_default();
+        let secs = now.as_secs();
+        let millis = now.subsec_millis();
+        let tag = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let thread = std::thread::current();
+        let name = thread.name().unwrap_or("?");
+        eprintln!(
+            "[{secs}.{millis:03} {tag} {name} {}] {}",
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static INIT: Once = Once::new();
+static LOGGER: StderrLogger = StderrLogger;
+
+/// Install the logger (idempotent). Returns the active level.
+pub fn init() -> LevelFilter {
+    let level = match std::env::var("FEDHPC_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    };
+    INIT.call_once(|| {
+        let _ = log::set_logger(&LOGGER);
+        log::set_max_level(level);
+    });
+    level
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        let a = super::init();
+        let b = super::init();
+        assert_eq!(a, b);
+        log::info!("logging smoke test line");
+    }
+}

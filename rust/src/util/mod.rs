@@ -1,0 +1,61 @@
+//! Dependency-free utility substrates.
+//!
+//! The build image vendors only the `xla` crate closure, so the usual
+//! ecosystem crates (rand, serde, clap, env_logger) are implemented
+//! in-tree, each scoped to exactly what the framework needs.
+
+pub mod argparse;
+pub mod bytes;
+pub mod json;
+pub mod logging;
+pub mod parallel;
+pub mod rng;
+
+/// Format a byte count as a human-readable string (e.g. "1.25 MB").
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a duration in milliseconds with adaptive units.
+pub fn human_ms(ms: f64) -> String {
+    if ms < 1.0 {
+        format!("{:.0} µs", ms * 1000.0)
+    } else if ms < 1000.0 {
+        format!("{ms:.1} ms")
+    } else if ms < 60_000.0 {
+        format!("{:.2} s", ms / 1000.0)
+    } else {
+        format!("{:.1} min", ms / 60_000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KB");
+        assert_eq!(human_bytes(5 * 1024 * 1024), "5.00 MB");
+    }
+
+    #[test]
+    fn human_ms_units() {
+        assert_eq!(human_ms(0.5), "500 µs");
+        assert_eq!(human_ms(12.34), "12.3 ms");
+        assert_eq!(human_ms(2500.0), "2.50 s");
+        assert_eq!(human_ms(120_000.0), "2.0 min");
+    }
+}

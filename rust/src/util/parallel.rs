@@ -1,0 +1,133 @@
+//! Scoped data-parallel helpers (no rayon on this image).
+//!
+//! `par_chunks_mut` splits a mutable slice across `available_parallelism`
+//! threads with `std::thread::scope`; small inputs run inline so the
+//! helpers are safe to use unconditionally on hot paths.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Threads to use for `n` elements with a minimum per-thread chunk.
+fn n_threads(n: usize, min_chunk: usize) -> usize {
+    let hw = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    (n / min_chunk.max(1)).clamp(1, hw)
+}
+
+/// Apply `f(offset, chunk)` over disjoint chunks of `data` in parallel.
+/// `f` must be pure per-element (no cross-chunk dependencies).
+pub fn par_chunks_mut<T, F>(data: &mut [T], min_chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    let threads = n_threads(n, min_chunk);
+    if threads <= 1 {
+        f(0, data);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (i, part) in data.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || f(i * chunk, part));
+        }
+    });
+}
+
+/// Parallel fold: apply `map(offset, chunk) -> A` over disjoint chunks
+/// of a shared slice, then `reduce` the per-chunk results (order of
+/// reduction is by chunk index, so deterministic).
+pub fn par_fold<T, A, M, R>(data: &[T], min_chunk: usize, map: M, reduce: R) -> Option<A>
+where
+    T: Sync,
+    A: Send,
+    M: Fn(usize, &[T]) -> A + Sync,
+    R: Fn(A, A) -> A,
+{
+    let n = data.len();
+    if n == 0 {
+        return None;
+    }
+    let threads = n_threads(n, min_chunk);
+    if threads <= 1 {
+        return Some(map(0, data));
+    }
+    let chunk = n.div_ceil(threads);
+    let results: Vec<(usize, A)> = std::thread::scope(|s| {
+        let handles: Vec<_> = data
+            .chunks(chunk)
+            .enumerate()
+            .map(|(i, part)| {
+                let map = &map;
+                s.spawn(move || (i, map(i * chunk, part)))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut sorted = results;
+    sorted.sort_by_key(|(i, _)| *i);
+    sorted.into_iter().map(|(_, a)| a).reduce(reduce)
+}
+
+/// Global counter used by tests to verify multi-threading engaged.
+#[doc(hidden)]
+pub static PAR_INVOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+#[doc(hidden)]
+pub fn note_invocation() {
+    PAR_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_chunks_mut_covers_all_elements_once() {
+        let mut v = vec![0u32; 100_000];
+        par_chunks_mut(&mut v, 1024, |offset, chunk| {
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = (offset + j) as u32;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i as u32);
+        }
+    }
+
+    #[test]
+    fn small_input_runs_inline() {
+        let mut v = vec![1u8; 10];
+        par_chunks_mut(&mut v, 1024, |_, chunk| {
+            for x in chunk {
+                *x += 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    fn par_fold_sum_matches_serial() {
+        let v: Vec<f64> = (0..250_000).map(|i| i as f64).collect();
+        let got = par_fold(&v, 4096, |_, c| c.iter().sum::<f64>(), |a, b| a + b).unwrap();
+        let want: f64 = v.iter().sum();
+        assert!((got - want).abs() < 1e-6 * want);
+    }
+
+    #[test]
+    fn par_fold_max_deterministic() {
+        let v: Vec<f32> = (0..100_000).map(|i| ((i * 37) % 1000) as f32).collect();
+        let a = par_fold(&v, 1000, |_, c| c.iter().cloned().fold(0f32, f32::max), f32::max);
+        let b = par_fold(&v, 1000, |_, c| c.iter().cloned().fold(0f32, f32::max), f32::max);
+        assert_eq!(a, b);
+        assert_eq!(a, Some(999.0));
+    }
+
+    #[test]
+    fn par_fold_empty() {
+        let v: Vec<f32> = vec![];
+        assert!(par_fold(&v, 10, |_, c| c.len(), |a, b| a + b).is_none());
+    }
+}

@@ -1,0 +1,94 @@
+//! Multi-process-shaped integration: a full federation over the framed
+//! TCP transport ("gRPC" path) — real sockets, reader threads, large
+//! model frames — with the orchestrator and workers in separate
+//! threads, as `fedhpc serve` / `fedhpc worker` would run them in
+//! separate processes.
+
+use fedhpc::client::{Worker, WorkerOptions};
+use fedhpc::cluster::Cluster;
+use fedhpc::config::presets::quickstart;
+use fedhpc::data::FederatedDataset;
+use fedhpc::faults::FaultInjector;
+use fedhpc::network::tcp::{TcpClient, TcpServer};
+use fedhpc::network::{LinkShaper, Msg, TrafficLog};
+use fedhpc::orchestrator::{EvalHarness, NoHooks, Orchestrator};
+use fedhpc::runtime::{MockRuntime, ModelRuntime};
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn tcp_federation_end_to_end() {
+    let mut cfg = quickstart();
+    cfg.name = "it_tcp".into();
+    cfg.mock_runtime = true;
+    cfg.cluster.nodes = vec![("hpc-rtx6000".into(), 4)];
+    cfg.selection.clients_per_round = 3;
+    cfg.train.rounds = 3;
+    cfg.train.local_epochs = 1;
+    cfg.train.lr = 0.2;
+    cfg.data.samples_per_client = 64;
+    cfg.data.eval_samples = 128;
+    cfg.data.partition = fedhpc::config::Partition::Iid;
+    cfg.straggler.deadline_ms = Some(30_000);
+
+    let n = cfg.cluster.total_nodes();
+    let cluster = Cluster::build(&cfg.cluster, cfg.seed).unwrap();
+    let dataset = FederatedDataset::build(&cfg.data, n, cfg.seed).unwrap();
+
+    let traffic = Arc::new(TrafficLog::new());
+    let server = TcpServer::bind("127.0.0.1:0", traffic.clone()).unwrap();
+    let addr = server.local_addr.to_string();
+
+    // workers, each over its own TCP connection
+    let mut handles = Vec::new();
+    for (node, shard) in cluster.nodes.iter().zip(&dataset.clients) {
+        let rt = MockRuntime::new(shard.x_len, dataset.n_classes);
+        let profile =
+            fedhpc::client::profile_runtime(&rt, node, shard, 0).unwrap();
+        let transport = TcpClient::connect(
+            &addr,
+            &Msg::Register {
+                client: node.id,
+                profile,
+            },
+            LinkShaper::unshaped(),
+            Arc::new(TrafficLog::new()),
+        )
+        .unwrap();
+        let worker = Worker::new(
+            transport,
+            Box::new(rt),
+            node.clone(),
+            shard.clone(),
+            FaultInjector::disabled(),
+            WorkerOptions {
+                emulate_speed: false,
+                seed: cfg.seed ^ node.id as u64,
+                ..Default::default()
+            },
+        );
+        handles.push(std::thread::spawn(move || worker.run()));
+    }
+
+    // orchestrator over the same socket server
+    let eval_rt = MockRuntime::new(dataset.eval.x_len, dataset.n_classes);
+    let initial = eval_rt.init(cfg.seed as u32).unwrap();
+    let eval = EvalHarness {
+        runtime: Box::new(eval_rt),
+        shard: dataset.eval.clone(),
+    };
+    let mut orch = Orchestrator::new(cfg.clone(), server, traffic, initial, Some(eval));
+    let report = orch
+        .run(Some((n, Duration::from_secs(30))), &mut NoHooks)
+        .unwrap();
+
+    assert_eq!(report.rounds.len(), 3);
+    for r in &report.rounds {
+        assert_eq!(r.reported, 3, "round {} lost updates over TCP", r.round);
+    }
+    assert!(report.final_accuracy().unwrap() > 0.3);
+    for h in handles {
+        let rounds = h.join().unwrap().unwrap();
+        assert!(rounds <= 3);
+    }
+}

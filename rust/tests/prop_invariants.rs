@@ -1,0 +1,274 @@
+//! Property-based tests over coordinator invariants (testkit is the
+//! in-tree proptest replacement — see rust/src/testkit).
+//!
+//! Each property runs hundreds of generated cases including
+//! pathological values (zeros, ±1e30, ties); failures print a replay
+//! seed (FEDHPC_PROP_SEED).
+
+use fedhpc::compress::{
+    compress, decompress, dropout_mask_indices, quantize, sparsify_topk, QuantBits,
+};
+use fedhpc::config::{
+    Aggregation, CompressionConfig, SelectionConfig, SelectionPolicy, WeightScheme,
+};
+use fedhpc::network::{ClientProfile, Msg, UpdateStats};
+use fedhpc::orchestrator::{aggregate, select_clients, AggInput, ClientRegistry};
+use fedhpc::testkit::{check, Gen};
+
+fn any_compression(g: &mut Gen) -> CompressionConfig {
+    CompressionConfig {
+        quant_bits: *g.pick(&[8u8, 16, 32]),
+        topk_frac: *g.pick(&[0.05f32, 0.25, 0.5, 1.0]),
+        dropout_keep: *g.pick(&[0.3f32, 0.7, 1.0]),
+    }
+}
+
+#[test]
+fn prop_codec_roundtrip_preserves_survivors_and_zeroes_rest() {
+    check("codec roundtrip", 300, |g| {
+        let v = g.f32_vec_nasty(2000);
+        // huge magnitudes destroy int8 resolution for everything else —
+        // that's expected; bound inputs to a sane gradient range
+        let v: Vec<f32> = v
+            .iter()
+            .map(|&x| if x.abs() > 1e3 { x.signum() * 1e3 } else { x })
+            .collect();
+        let cfg = any_compression(g);
+        let seed = g.rng.next_u64();
+        let enc = compress(&v, &cfg, seed);
+        let back = decompress(&enc, v.len()).unwrap();
+        assert_eq!(back.len(), v.len());
+        // quantization error bound: scale/2 on surviving coords
+        let maxabs = v.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let tol = match cfg.quant_bits {
+            8 => maxabs / 127.0,
+            16 => maxabs / 32767.0,
+            _ => 1e-6,
+        };
+        for (a, b) in v.iter().zip(&back) {
+            if *b != 0.0 {
+                assert!(
+                    (a - b).abs() <= tol + 1e-6,
+                    "survivor error {} > {tol}",
+                    (a - b).abs()
+                );
+            }
+        }
+        // wire bytes never exceed dense bytes (+tiny header)
+        assert!(enc.wire_bytes() <= 4 * v.len() as u64 + 16);
+    });
+}
+
+#[test]
+fn prop_quantize_error_bound_and_determinism() {
+    check("quantize", 300, |g| {
+        let v = g.f32_vec(4096);
+        for bits in [QuantBits::B8, QuantBits::B16] {
+            let q1 = quantize(&v, bits);
+            let q2 = quantize(&v, bits);
+            assert_eq!(q1, q2, "quantize must be deterministic");
+            let back: Vec<f32> = fedhpc::compress::dequantize(&q1);
+            for (a, b) in v.iter().zip(&back) {
+                // scale/2 quantization error + f32 rounding of the
+                // divide/round/multiply round-trip itself
+                let tol = q1.scale / 2.0 + a.abs() * 1e-5 + 1e-7;
+                assert!((a - b).abs() <= tol, "err {} > {tol}", (a - b).abs());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sparsify_keeps_at_least_k_and_all_larger() {
+    check("sparsify", 300, |g| {
+        let v = g.f32_vec_nasty(3000);
+        let k = g.usize_in(1, v.len());
+        let s = sparsify_topk(&v, k);
+        assert!(s.idx.len() >= k.min(v.len()), "kept {} < k {k}", s.idx.len());
+        // no kept value is smaller in magnitude than any dropped value
+        let kept: std::collections::HashSet<u32> = s.idx.iter().copied().collect();
+        let min_kept = s
+            .val
+            .iter()
+            .map(|x| x.abs())
+            .fold(f32::INFINITY, f32::min);
+        for (i, &x) in v.iter().enumerate() {
+            if !kept.contains(&(i as u32)) {
+                assert!(
+                    x.abs() <= min_kept,
+                    "dropped |{}| > min kept {min_kept}",
+                    x.abs()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_dropout_mask_deterministic_sorted_bounded() {
+    check("dropout mask", 300, |g| {
+        let n = g.usize_in(1, 5000);
+        let keep = g.f32_in(0.05, 1.0);
+        let seed = g.rng.next_u64();
+        let m1 = dropout_mask_indices(n, keep, seed);
+        let m2 = dropout_mask_indices(n, keep, seed);
+        assert_eq!(m1, m2);
+        assert!(m1.windows(2).all(|w| w[0] < w[1]));
+        assert!(m1.iter().all(|&i| (i as usize) < n));
+        let expect = ((n as f64 * keep as f64).round() as usize).clamp(1, n);
+        assert_eq!(m1.len(), expect);
+    });
+}
+
+#[test]
+fn prop_aggregation_weights_normalize_and_bound_result() {
+    check("aggregation", 300, |g| {
+        let p = g.usize_in(1, 200);
+        let k = g.usize_in(1, 12);
+        let global: Vec<f32> = (0..p).map(|_| g.f32_in(-1.0, 1.0)).collect();
+        let inputs: Vec<AggInput> = (0..k)
+            .map(|c| AggInput {
+                client: c as u32,
+                delta: (0..p).map(|_| g.f32_in(-1.0, 1.0)).collect(),
+                n_samples: g.usize_in(1, 1000) as u64,
+                train_loss: g.f32_in(0.0, 10.0),
+                update_var: g.f32_in(0.0, 5.0),
+            })
+            .collect();
+        let strat = *g.pick(&[
+            Aggregation::FedAvg,
+            Aggregation::FedProx { mu: 0.1 },
+            Aggregation::Weighted(WeightScheme::InverseLoss),
+            Aggregation::Weighted(WeightScheme::InverseVariance),
+        ]);
+        let out = aggregate(&global, &inputs, strat).unwrap();
+        let wsum: f64 = out.weights.iter().map(|(_, w)| w).sum();
+        assert!((wsum - 1.0).abs() < 1e-9, "weights sum {wsum}");
+        assert!(out.weights.iter().all(|(_, w)| *w >= 0.0));
+        // convexity: new param within global ± max|delta|
+        for j in 0..p {
+            let max_d = inputs
+                .iter()
+                .map(|i| i.delta[j].abs())
+                .fold(0f32, f32::max);
+            let moved = (out.new_params[j] - global[j]).abs();
+            assert!(
+                moved <= max_d + 1e-5,
+                "param {j} moved {moved} > max delta {max_d}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_selection_k_distinct_available() {
+    check("selection", 200, |g| {
+        let n = g.usize_in(1, 80) as u32;
+        let mut reg = ClientRegistry::new();
+        for i in 0..n {
+            reg.register(
+                i,
+                ClientProfile {
+                    speed_factor: g.f64_in(0.01, 2.0),
+                    mem_gb: 16.0,
+                    link_bw: g.f64_in(1e7, 1e10),
+                    n_samples: g.usize_in(10, 1000) as u64,
+                    bench_step_ms: g.f64_in(1.0, 500.0),
+                },
+            );
+            // random history
+            for r in 0..g.usize_in(0, 5) as u32 {
+                if g.bool() {
+                    reg.report_success(i, r, g.f64_in(10.0, 10_000.0));
+                } else {
+                    reg.report_failure(i, r);
+                }
+            }
+        }
+        let avail: Vec<u32> = (0..n).filter(|_| g.bool()).collect();
+        let k = g.usize_in(1, 40);
+        let policy = if g.bool() {
+            SelectionPolicy::Random
+        } else {
+            SelectionPolicy::Adaptive {
+                explore_frac: g.f64_in(0.0, 1.0),
+                exclude_factor: g.f64_in(1.5, 10.0),
+            }
+        };
+        let cfg = SelectionConfig {
+            policy,
+            clients_per_round: k,
+        };
+        let round = g.usize_in(0, 50) as u32;
+        let sel = select_clients(&mut reg, &avail, &cfg, round, &mut g.rng);
+        // invariants: ≤ k, distinct, all from available
+        assert!(sel.len() <= k);
+        assert_eq!(sel.len(), k.min(avail.len()));
+        let mut sorted = sel.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), sel.len(), "duplicate selection");
+        for id in &sel {
+            assert!(avail.contains(id), "selected unavailable client {id}");
+        }
+    });
+}
+
+#[test]
+fn prop_message_roundtrip_with_random_compression() {
+    check("message roundtrip", 200, |g| {
+        let v = g.f32_vec(1500);
+        let cfg = any_compression(g);
+        let delta = compress(&v, &cfg, g.rng.next_u64());
+        let msg = Msg::Update {
+            round: g.usize_in(0, 1000) as u32,
+            client: g.usize_in(0, 500) as u32,
+            delta,
+            stats: UpdateStats {
+                n_samples: g.usize_in(0, 100_000) as u64,
+                train_loss: g.f32_in(0.0, 100.0),
+                steps: g.usize_in(0, 10_000) as u32,
+                compute_ms: g.f64_in(0.0, 1e6),
+                update_var: g.f32_in(0.0, 10.0),
+            },
+        };
+        let enc = msg.encode();
+        assert_eq!(Msg::decode(&enc).unwrap(), msg);
+        // truncations never panic
+        let cut = g.usize_in(0, enc.len());
+        let _ = Msg::decode(&enc[..cut]);
+    });
+}
+
+#[test]
+fn prop_secure_masking_cancels() {
+    use fedhpc::secure::{MaskedUpdate, SecureAggregator};
+    check("secure masking", 100, |g| {
+        let p = g.usize_in(1, 300);
+        let k = g.usize_in(2, 8);
+        let agg = SecureAggregator::new(g.rng.next_u64(), p);
+        let raw: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..p).map(|_| g.f32_in(-1.0, 1.0)).collect())
+            .collect();
+        let participants: Vec<u32> = (0..k as u32).collect();
+        let masked: Vec<MaskedUpdate> = raw
+            .iter()
+            .enumerate()
+            .map(|(i, u)| MaskedUpdate {
+                client: i as u32,
+                values: agg.mask(i as u32, u, &participants),
+                weight: 1.0,
+            })
+            .collect();
+        let got = agg.aggregate(&masked);
+        for j in 0..p {
+            let want: f64 =
+                raw.iter().map(|u| u[j] as f64).sum::<f64>() / k as f64;
+            assert!(
+                (got[j] as f64 - want).abs() < 1e-3,
+                "coord {j}: {} vs {want}",
+                got[j]
+            );
+        }
+    });
+}
