@@ -1,0 +1,160 @@
+//! Collection-phase hot path: the pre-streaming orchestrator (buffer
+//! all k decoded deltas, then one block-major batch aggregate — the
+//! kernel reproduced below verbatim) vs streaming (fold each delta
+//! into the O(P) accumulator the moment it arrives, free it, normalize
+//! once at the end).
+//!
+//! Reports round wall-time plus a bytes-held proxy for collection-phase
+//! peak memory: the buffered path keeps k decoded f32 deltas alive at
+//! once (O(k·P)); the streaming path keeps one decoded delta plus the
+//! f64 accumulator (O(P)). Streaming pays more accumulator bandwidth
+//! per round (~k·16P vs ~k·4P) — this bench makes that trade visible
+//! instead of implicit.
+
+use fedhpc::benchkit::{bench, fmt_ns, print_table, BenchStats};
+use fedhpc::config::Aggregation;
+use fedhpc::orchestrator::{AggInput, StreamingAggregator};
+use fedhpc::util::parallel::par_chunks_mut;
+use fedhpc::util::rng::Rng;
+use std::time::Duration;
+
+/// The pre-streaming batch kernel (block-major, L1-resident f64
+/// accumulator block), kept here as the honest baseline: this is the
+/// exact shape `orchestrator::aggregate` had before the streaming
+/// refactor.
+fn blocked_batch_aggregate(global: &[f32], inputs: &[AggInput]) -> Vec<f32> {
+    const BLOCK: usize = 4096;
+    let raw: Vec<f64> = inputs.iter().map(|i| i.n_samples.max(1) as f64).collect();
+    let total: f64 = raw.iter().sum();
+    let wn: Vec<f64> = raw.iter().map(|&w| w / total).collect();
+    let mut new_params = vec![0f32; global.len()];
+    par_chunks_mut(&mut new_params, 256 * 1024, |offset, chunk| {
+        let mut acc = [0f64; BLOCK];
+        let mut start = 0;
+        while start < chunk.len() {
+            let len = BLOCK.min(chunk.len() - start);
+            let base = offset + start;
+            acc[..len].fill(0.0);
+            for (input, &w) in inputs.iter().zip(&wn) {
+                let d = &input.delta[base..base + len];
+                for (a, &x) in acc[..len].iter_mut().zip(d) {
+                    *a += w * x as f64;
+                }
+            }
+            let g = &global[base..base + len];
+            for ((out, &a), &gv) in chunk[start..start + len].iter_mut().zip(&acc[..len]).zip(g) {
+                *out = (gv as f64 + a) as f32;
+            }
+            start += len;
+        }
+    });
+    new_params
+}
+
+fn template_delta(p: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..p).map(|_| rng.normal() as f32 * 0.01).collect()
+}
+
+fn input(client: u32, delta: Vec<f32>) -> AggInput {
+    AggInput {
+        client,
+        delta,
+        n_samples: 100 + (client as u64 * 37) % 400,
+        train_loss: 1.0 + client as f32 * 0.01,
+        update_var: 0.01,
+    }
+}
+
+fn human(bytes: u64) -> String {
+    if bytes >= 1 << 30 {
+        format!("{:.2} GiB", bytes as f64 / (1u64 << 30) as f64)
+    } else {
+        format!("{:.1} MiB", bytes as f64 / (1u64 << 20) as f64)
+    }
+}
+
+fn main() {
+    let budget = Duration::from_secs(3);
+    let mut stats: Vec<BenchStats> = Vec::new();
+    let mut memo: Vec<String> = Vec::new();
+
+    for (k, p) in [(20usize, 250_000usize), (60, 1_000_000)] {
+        let mut rng = Rng::new(42);
+        let global: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+        // one template per client; `clone()` below plays the role of
+        // decoding the arrived update into a dense delta
+        let templates: Vec<Vec<f32>> = (0..k)
+            .map(|c| template_delta(p, 1000 + c as u64))
+            .collect();
+
+        // sanity: streaming matches the old blocked kernel to f32
+        // tolerance (op order differs, so bit-identity is not expected
+        // here — it IS expected, and pinned by test, between streaming
+        // and the batch wrapper)
+        {
+            let inputs: Vec<AggInput> = templates
+                .iter()
+                .enumerate()
+                .map(|(c, t)| input(c as u32, t.clone()))
+                .collect();
+            let old = blocked_batch_aggregate(&global, &inputs);
+            let mut agg = StreamingAggregator::new(p, Aggregation::FedAvg);
+            for i in &inputs {
+                agg.fold(i).unwrap();
+            }
+            let streamed = agg.finalize(&global).unwrap();
+            for (a, b) in old.iter().zip(&streamed.new_params) {
+                assert!((a - b).abs() <= 1e-6 * a.abs().max(1.0), "paths diverged");
+            }
+        }
+
+        stats.push(bench(&format!("buffered  k={k} P={}k", p / 1000), budget, || {
+            // decode everything first (O(k·P) alive), then the old
+            // block-major kernel
+            let inputs: Vec<AggInput> = templates
+                .iter()
+                .enumerate()
+                .map(|(c, t)| input(c as u32, t.clone()))
+                .collect();
+            let out = blocked_batch_aggregate(&global, &inputs);
+            std::hint::black_box(out.len());
+        }));
+        stats.push(bench(&format!("streaming k={k} P={}k", p / 1000), budget, || {
+            // decode-fold-free per arrival (one delta alive at a time)
+            let mut agg = StreamingAggregator::new(p, Aggregation::FedAvg);
+            for (c, t) in templates.iter().enumerate() {
+                let one = input(c as u32, t.clone());
+                agg.fold(&one).unwrap();
+            }
+            let out = agg.finalize(&global).unwrap();
+            std::hint::black_box(out.new_params.len());
+        }));
+
+        let buffered_peak = (4 * p as u64) * k as u64 + 8 * p as u64;
+        let streaming_peak = 4 * p as u64 + 8 * p as u64;
+        memo.push(format!(
+            "k={k} P={}k: collection bytes held — buffered {} vs streaming {} ({:.0}× less)",
+            p / 1000,
+            human(buffered_peak),
+            human(streaming_peak),
+            buffered_peak as f64 / streaming_peak as f64,
+        ));
+    }
+
+    print_table(
+        "collect+aggregate round cost (old blocked batch vs streaming fold)",
+        &stats,
+    );
+    println!();
+    for line in &memo {
+        println!("{line}");
+    }
+    let (buf, st) = (&stats[2], &stats[3]);
+    println!(
+        "\n60 clients × 1M params: buffered {} vs streaming {} per round \
+         (streaming trades accumulator bandwidth for O(P) memory + overlap with arrival)",
+        fmt_ns(buf.mean_ns),
+        fmt_ns(st.mean_ns),
+    );
+}

@@ -287,6 +287,68 @@ mod tests {
     }
 
     #[test]
+    fn worker_trains_from_shared_preencoded_broadcast() {
+        // the orchestrator broadcasts one pre-encoded payload per
+        // round; over inproc the worker receives it still wrapped, and
+        // its normal decompress path must unwrap it transparently
+        let traffic = Arc::new(TrafficLog::new());
+        let hub = InprocHub::new(traffic);
+        let endpoint = hub.add_client(0, LinkShaper::unshaped());
+        let server = hub.server();
+        let rt = MockRuntime::new(12, 3);
+        let n_params = rt.n_params();
+        let global = rt.init(0).unwrap();
+        let worker = Worker::new(
+            endpoint,
+            Box::new(rt),
+            one_node(),
+            toy_shard(12, 3, 32, 1),
+            FaultInjector::disabled(),
+            WorkerOptions {
+                emulate_speed: false,
+                ..Default::default()
+            },
+        );
+        let handle = std::thread::spawn(move || worker.run().unwrap());
+        server.recv_timeout(Duration::from_secs(5)).unwrap(); // Register
+        let shared = crate::compress::Encoded::PreEncoded(
+            crate::network::pre_encode_dense(&global),
+        );
+        server
+            .send_to(
+                0,
+                &Msg::RoundStart {
+                    round: 0,
+                    model_version: 0,
+                    deadline_ms: 10_000,
+                    lr: 0.1,
+                    mu: 0.0,
+                    local_epochs: 1,
+                    params: shared,
+                    mask_seed: 1,
+                    compression: CompressionConfig::NONE,
+                },
+            )
+            .unwrap();
+        let (_, up) = server
+            .recv_timeout(Duration::from_secs(10))
+            .unwrap()
+            .unwrap();
+        match up {
+            Msg::Update { delta, stats, .. } => {
+                assert_eq!(
+                    crate::compress::decompress(&delta, n_params).unwrap().len(),
+                    n_params
+                );
+                assert!(stats.steps > 0);
+            }
+            other => panic!("expected Update, got {}", other.name()),
+        }
+        server.send_to(0, &Msg::Shutdown).unwrap();
+        assert_eq!(handle.join().unwrap(), 1);
+    }
+
+    #[test]
     fn injected_dropout_suppresses_update() {
         let traffic = Arc::new(TrafficLog::new());
         let hub = InprocHub::new(traffic);

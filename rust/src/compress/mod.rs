@@ -44,6 +44,25 @@ pub enum Encoded {
         dense_len: usize,
         inner: Box<Encoded>,
     },
+    /// An encoding already serialized to its codec bytes, shared behind
+    /// an `Arc`. The orchestrator pre-encodes the round's model payload
+    /// once and every broadcast send clones only the pointer; on the
+    /// wire the bytes are indistinguishable from the underlying
+    /// encoding (the decoder never produces this variant).
+    PreEncoded(PreEncoded),
+}
+
+/// Shared, pre-serialized payload: the exact bytes the wire codec
+/// (`network::message`) writes for the underlying encoding, plus the
+/// metadata needed for accounting without re-decoding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PreEncoded {
+    /// Serialized encoding (codec tag + body).
+    pub bytes: std::sync::Arc<[u8]>,
+    /// Logical decoded length of the underlying encoding.
+    pub dense_len: usize,
+    /// `wire_bytes()` of the underlying encoding.
+    pub wire: u64,
 }
 
 impl Encoded {
@@ -56,6 +75,7 @@ impl Encoded {
             Encoded::Sparse(s) => 8 * s.idx.len() as u64, // 4B idx + 4B val
             Encoded::QSparse { idx, q } => 4 * idx.len() as u64 + q.wire_bytes(),
             Encoded::Masked { inner, .. } => 16 + inner.wire_bytes(),
+            Encoded::PreEncoded(p) => p.wire,
         }
     }
 
@@ -67,6 +87,7 @@ impl Encoded {
             Encoded::Sparse(s) => s.dense_len,
             Encoded::QSparse { q, .. } => q.n,
             Encoded::Masked { dense_len, .. } => *dense_len,
+            Encoded::PreEncoded(p) => p.dense_len,
         }
     }
 }
@@ -208,6 +229,21 @@ pub fn decompress(enc: &Encoded, n: usize) -> Result<Vec<f32>> {
                 out[i as usize] = v;
             }
             Ok(out)
+        }
+        Encoded::PreEncoded(p) => {
+            // deserialize the shared bytes back into the underlying
+            // encoding (never PreEncoded itself), then decode that;
+            // the dense case moves the freshly decoded vector out
+            // rather than re-cloning it through the Dense arm
+            match crate::network::message::decode_payload(&p.bytes)? {
+                Encoded::Dense(v) => {
+                    if v.len() != n {
+                        bail!("dense length {} != {}", v.len(), n);
+                    }
+                    Ok(v)
+                }
+                inner => decompress(&inner, n),
+            }
         }
     }
 }
@@ -386,6 +422,17 @@ mod tests {
             dense_len: 5,
         });
         assert!(decompress(&bad, 5).is_err());
+    }
+
+    #[test]
+    fn pre_encoded_decompresses_like_inner() {
+        let v = vec_of(500, 9);
+        let pre = Encoded::PreEncoded(crate::network::message::pre_encode(&Encoded::Dense(
+            v.clone(),
+        )));
+        assert_eq!(pre.dense_len(), 500);
+        assert_eq!(pre.wire_bytes(), 4 * 500);
+        assert_eq!(decompress(&pre, 500).unwrap(), v);
     }
 
     #[test]

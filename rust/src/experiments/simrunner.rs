@@ -331,8 +331,7 @@ mod tests {
     }
 
     #[test]
-    fn more_clients_is_faster_per_data(
-    ) {
+    fn more_clients_is_faster_per_data() {
         // Table 3's shape: with samples split over more clients, total
         // time shrinks (each client trains fewer steps)
         let total_samples = 10_240;

@@ -174,6 +174,10 @@ pub struct InprocServer {
 
 impl ServerTransport for InprocServer {
     fn send_to(&self, to: NodeId, msg: &Msg) -> Result<()> {
+        // `msg.clone()` below is what makes shared broadcasts cheap
+        // here: a RoundStart carrying `Encoded::PreEncoded` clones an
+        // Arc of the round's serialized model instead of the O(P)
+        // parameter vector, so all k sends share one buffer.
         let bytes = msg.wire_bytes();
         let shaper = self
             .shapers

@@ -6,10 +6,11 @@
 //! round-trip + fuzz-ish tests below.
 
 use crate::cluster::NodeId;
-use crate::compress::{Encoded, QData, Quantized, Sparse};
+use crate::compress::{Encoded, PreEncoded, QData, Quantized, Sparse};
 use crate::config::CompressionConfig;
 use crate::util::bytes::{Reader, Writer};
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 pub const PROTOCOL_VERSION: u8 = 1;
 
@@ -117,27 +118,8 @@ impl Msg {
                 encode_profile(&mut w, profile);
             }
             Msg::RegisterAck { client } => w.u32(*client),
-            Msg::RoundStart {
-                round,
-                model_version,
-                deadline_ms,
-                lr,
-                mu,
-                local_epochs,
-                params,
-                mask_seed,
-                compression,
-            } => {
-                w.u32(*round);
-                w.u32(*model_version);
-                w.u64(*deadline_ms);
-                w.f32(*lr);
-                w.f32(*mu);
-                w.u32(*local_epochs);
-                w.u64(*mask_seed);
-                w.u8(compression.quant_bits);
-                w.f32(compression.topk_frac);
-                w.f32(compression.dropout_keep);
+            Msg::RoundStart { params, .. } => {
+                self.encode_round_start_header(&mut w);
                 encode_encoded(&mut w, params);
             }
             Msg::Update {
@@ -245,6 +227,61 @@ impl Msg {
         Ok(msg)
     }
 
+    /// All `RoundStart` fields except the model payload (which is
+    /// always encoded last, so a shared pre-encoded payload can be
+    /// appended — or written separately — after this header).
+    fn encode_round_start_header(&self, w: &mut Writer) {
+        let Msg::RoundStart {
+            round,
+            model_version,
+            deadline_ms,
+            lr,
+            mu,
+            local_epochs,
+            params: _,
+            mask_seed,
+            compression,
+        } = self
+        else {
+            unreachable!("encode_round_start_header on {}", self.name());
+        };
+        w.u32(*round);
+        w.u32(*model_version);
+        w.u64(*deadline_ms);
+        w.f32(*lr);
+        w.f32(*mu);
+        w.u32(*local_epochs);
+        w.u64(*mask_seed);
+        w.u8(compression.quant_bits);
+        w.f32(compression.topk_frac);
+        w.f32(compression.dropout_keep);
+    }
+
+    /// Encode, splitting off a shared trailing payload when one exists.
+    ///
+    /// For a `RoundStart` whose params are [`Encoded::PreEncoded`] this
+    /// returns `(header bytes, Some(shared payload bytes))` — their
+    /// concatenation is byte-identical to [`Msg::encode`], but the
+    /// payload `Arc` is cloned instead of copied, so a transport can
+    /// write the two parts back to back and a k-client broadcast never
+    /// re-serializes (or re-copies) the model. Every other message
+    /// returns `(encode(), None)`.
+    pub fn encode_split(&self) -> (Vec<u8>, Option<Arc<[u8]>>) {
+        if let Msg::RoundStart {
+            params: Encoded::PreEncoded(p),
+            ..
+        } = self
+        {
+            let mut w = Writer::with_capacity(64);
+            w.u8(PROTOCOL_VERSION);
+            w.u8(self.tag());
+            self.encode_round_start_header(&mut w);
+            (w.into_vec(), Some(p.bytes.clone()))
+        } else {
+            (self.encode(), None)
+        }
+    }
+
     /// Payload size on the wire (encoded length).
     pub fn wire_bytes(&self) -> u64 {
         // cheap upper path: full encode for model-bearing messages would
@@ -312,7 +349,54 @@ fn encode_encoded(w: &mut Writer, e: &Encoded) {
             w.u64(*dense_len as u64);
             encode_encoded(w, inner);
         }
+        // already-serialized bytes: splice verbatim (they carry their
+        // own tag, so the wire stays identical to the inner encoding)
+        Encoded::PreEncoded(p) => w.raw(&p.bytes),
     }
+}
+
+/// Serialize `e` once into a shareable [`PreEncoded`] payload.
+///
+/// Wrapping the result in [`Encoded::PreEncoded`] makes every
+/// subsequent [`Msg::encode`] splice the same bytes (and every
+/// in-process `Msg::clone` an `Arc` bump) instead of re-serializing —
+/// the orchestrator uses this to encode a round's model broadcast
+/// exactly once for all k recipients.
+pub fn pre_encode(e: &Encoded) -> PreEncoded {
+    if let Encoded::PreEncoded(p) = e {
+        return p.clone();
+    }
+    let mut w = Writer::with_capacity(e.wire_bytes() as usize + 32);
+    encode_encoded(&mut w, e);
+    PreEncoded {
+        bytes: w.into_vec().into(),
+        dense_len: e.dense_len(),
+        wire: e.wire_bytes(),
+    }
+}
+
+/// [`pre_encode`] for a dense parameter vector, without materializing
+/// an intermediate `Encoded::Dense` clone of the model.
+pub fn pre_encode_dense(v: &[f32]) -> PreEncoded {
+    let mut w = Writer::with_capacity(v.len() * 4 + 16);
+    w.u8(0); // Encoded::Dense tag — must match encode_encoded
+    w.f32_slice(v);
+    PreEncoded {
+        bytes: w.into_vec().into(),
+        dense_len: v.len(),
+        wire: 4 * v.len() as u64,
+    }
+}
+
+/// Decode the bytes of a [`PreEncoded`] payload back into the
+/// underlying encoding (never `PreEncoded` itself).
+pub fn decode_payload(bytes: &[u8]) -> Result<Encoded> {
+    let mut r = Reader::new(bytes);
+    let e = decode_encoded(&mut r)?;
+    if !r.is_done() {
+        bail!("trailing bytes after encoded payload");
+    }
+    Ok(e)
 }
 
 fn encode_quantized(w: &mut Writer, q: &Quantized) {
@@ -513,6 +597,69 @@ mod tests {
         let mut trailing = good;
         trailing.push(0);
         assert!(Msg::decode(&trailing).is_err());
+    }
+
+    fn round_start(params: Encoded) -> Msg {
+        Msg::RoundStart {
+            round: 7,
+            model_version: 7,
+            deadline_ms: 60_000,
+            lr: 0.05,
+            mu: 0.01,
+            local_epochs: 5,
+            params,
+            mask_seed: 0xABCD,
+            compression: CompressionConfig::PAPER,
+        }
+    }
+
+    #[test]
+    fn pre_encoded_payload_is_wire_identical_to_inner() {
+        let mut rng = Rng::new(4);
+        let v: Vec<f32> = (0..400).map(|_| rng.normal() as f32).collect();
+        let dense_msg = round_start(Encoded::Dense(v.clone()));
+        let pre = pre_encode(&Encoded::Dense(v.clone()));
+        assert_eq!(pre, pre_encode_dense(&v), "both constructors must agree");
+        let shared_msg = round_start(Encoded::PreEncoded(pre));
+
+        // byte-identical on the wire, protocol version unchanged
+        assert_eq!(dense_msg.encode(), shared_msg.encode());
+        assert_eq!(dense_msg.wire_bytes(), shared_msg.wire_bytes());
+        // the receiver sees the inner encoding, never PreEncoded
+        match Msg::decode(&shared_msg.encode()).unwrap() {
+            Msg::RoundStart { params, .. } => assert_eq!(params, Encoded::Dense(v)),
+            other => panic!("expected RoundStart, got {}", other.name()),
+        }
+    }
+
+    #[test]
+    fn encode_split_concatenates_to_full_encode() {
+        let v = vec![1.5f32; 64];
+        let shared = round_start(Encoded::PreEncoded(pre_encode_dense(&v)));
+        let (head, payload) = shared.encode_split();
+        let payload = payload.expect("shared payload expected");
+        let mut joined = head;
+        joined.extend_from_slice(&payload);
+        assert_eq!(joined, shared.encode());
+
+        // non-shared messages pass through whole
+        let (whole, none) = Msg::Shutdown.encode_split();
+        assert!(none.is_none());
+        assert_eq!(whole, Msg::Shutdown.encode());
+        let dense = round_start(Encoded::Dense(v));
+        let (whole, none) = dense.encode_split();
+        assert!(none.is_none());
+        assert_eq!(whole, dense.encode());
+    }
+
+    #[test]
+    fn decode_payload_roundtrips_and_rejects_trailing() {
+        let v = vec![2.0f32, -3.0, 4.5];
+        let pre = pre_encode_dense(&v);
+        assert_eq!(decode_payload(&pre.bytes).unwrap(), Encoded::Dense(v));
+        let mut trailing = pre.bytes.to_vec();
+        trailing.push(0);
+        assert!(decode_payload(&trailing).is_err());
     }
 
     #[test]

@@ -16,7 +16,10 @@ pub mod shaper;
 pub mod tcp;
 pub mod transport;
 
-pub use message::{ClientProfile, Msg, UpdateStats, PROTOCOL_VERSION};
+pub use message::{
+    decode_payload, pre_encode, pre_encode_dense, ClientProfile, Msg, UpdateStats,
+    PROTOCOL_VERSION,
+};
 pub use shaper::{LinkShaper, TrafficLog};
 pub use transport::{ClientTransport, ServerTransport};
 

@@ -22,12 +22,22 @@ use std::time::Duration;
 const MAX_FRAME: u32 = 1 << 30; // 1 GiB sanity bound
 
 fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
-    let len = payload.len() as u32;
-    if len > MAX_FRAME {
+    write_frame_parts(stream, payload, &[])
+}
+
+/// Write one frame from two parts without concatenating them — the
+/// broadcast path sends a per-client header followed by the round's
+/// shared (pre-encoded) model payload, so nothing is copied per send.
+fn write_frame_parts(stream: &mut TcpStream, head: &[u8], tail: &[u8]) -> Result<()> {
+    let len = head.len() + tail.len();
+    if len > MAX_FRAME as usize {
         bail!("frame too large: {len}");
     }
-    stream.write_all(&len.to_le_bytes())?;
-    stream.write_all(payload)?;
+    stream.write_all(&(len as u32).to_le_bytes())?;
+    stream.write_all(head)?;
+    if !tail.is_empty() {
+        stream.write_all(tail)?;
+    }
     Ok(())
 }
 
@@ -126,14 +136,19 @@ impl TcpServer {
 
 impl ServerTransport for TcpServer {
     fn send_to(&self, to: NodeId, msg: &Msg) -> Result<()> {
-        let payload = msg.encode();
-        self.traffic
-            .record_down(super::round_of(msg), payload.len() as u64);
+        // shared payloads (pre-encoded broadcasts) are written as a
+        // second frame part: serialized once per round, not per client
+        let (head, shared) = msg.encode_split();
+        let total = head.len() + shared.as_ref().map_or(0, |p| p.len());
+        self.traffic.record_down(super::round_of(msg), total as u64);
         let mut peers = self.peers.lock().unwrap();
         let stream = peers
             .get_mut(&to)
             .ok_or_else(|| anyhow!("tcp: client {to} not connected"))?;
-        write_frame(stream, &payload)
+        match shared {
+            None => write_frame(stream, &head),
+            Some(payload) => write_frame_parts(stream, &head, &payload),
+        }
     }
 
     fn recv_timeout(&self, timeout: Duration) -> Result<Option<(NodeId, Msg)>> {
@@ -332,6 +347,45 @@ mod tests {
         let traffic = Arc::new(TrafficLog::new());
         let server = TcpServer::bind("127.0.0.1:0", traffic).unwrap();
         assert!(server.send_to(42, &Msg::Shutdown).is_err());
+    }
+
+    #[test]
+    fn shared_payload_broadcast_roundtrips() {
+        // a RoundStart carrying the round's pre-encoded (shared) model
+        // payload must arrive byte-identically to a dense one
+        let traffic = Arc::new(TrafficLog::new());
+        let server = TcpServer::bind("127.0.0.1:0", traffic.clone()).unwrap();
+        let addr = server.local_addr.to_string();
+        let client =
+            TcpClient::connect(&addr, &register(2), LinkShaper::unshaped(), traffic).unwrap();
+        server.recv_timeout(Duration::from_secs(2)).unwrap(); // drain Register
+        let params: Vec<f32> = (0..5_000).map(|i| i as f32 * 0.25).collect();
+        let shared = crate::compress::Encoded::PreEncoded(super::super::message::pre_encode_dense(
+            &params,
+        ));
+        server
+            .send_to(
+                2,
+                &Msg::RoundStart {
+                    round: 1,
+                    model_version: 1,
+                    deadline_ms: 1_000,
+                    lr: 0.1,
+                    mu: 0.0,
+                    local_epochs: 1,
+                    params: shared,
+                    mask_seed: 3,
+                    compression: crate::config::CompressionConfig::NONE,
+                },
+            )
+            .unwrap();
+        let got = client.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        match got {
+            Msg::RoundStart { params: p, .. } => {
+                assert_eq!(p, crate::compress::Encoded::Dense(params));
+            }
+            other => panic!("expected RoundStart, got {}", other.name()),
+        }
     }
 
     #[test]

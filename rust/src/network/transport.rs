@@ -11,6 +11,13 @@ use std::time::Duration;
 /// Server side: addressed send, any-source receive.
 pub trait ServerTransport: Send {
     /// Send `msg` to a specific client.
+    ///
+    /// Broadcast contract: `msg` may carry a shared, pre-encoded
+    /// payload (`Encoded::PreEncoded`, one `Arc` of serialized bytes
+    /// per round). Implementations must treat the message as
+    /// immutable and should forward the shared bytes (via
+    /// `Msg::encode_split` / `Msg::clone`) rather than re-serializing
+    /// the payload per recipient.
     fn send_to(&self, to: NodeId, msg: &Msg) -> Result<()>;
 
     /// Receive the next message from any client, waiting up to

@@ -9,6 +9,32 @@
 //!   term lives in the client objective).
 //! * Weighted(InverseLoss): `w_c ∝ n_c / (1 + loss_c)`.
 //! * Weighted(InverseVariance): `w_c ∝ n_c / (1 + Var(Δ_c))`.
+//!
+//! # Streaming invariant (fold-then-normalize)
+//!
+//! Because `M_{r+1} = M_r + (Σ_c raw_c·Δ_c) / Σ_c raw_c`, aggregation
+//! is a single global scalar away from fully streamable: each arriving
+//! update folds its *unnormalized* contribution `raw_c·Δ_c` into one
+//! f64 accumulator of length P and its decoded delta can be freed on
+//! the spot, so the collection phase holds O(P) state instead of
+//! buffering all k deltas (O(k·P)). [`StreamingAggregator::finalize`]
+//! then applies the one normalization scalar `1/Σ raw_c` and adds the
+//! global model.
+//!
+//! Determinism: per element, additions happen in arrival order and the
+//! parallel fold partitions elements (never splits one element's
+//! additions across threads), so for a fixed arrival order the result
+//! is bit-identical regardless of thread count — and the batch
+//! [`aggregate`] is a thin wrapper that folds its slice in order
+//! through the same code path, pinning batch/streaming equivalence.
+//!
+//! Cost of streaming: each fold streams the full 8·P-byte accumulator
+//! once, so a k-client round moves ~k·16P bytes of accumulator traffic
+//! where the old block-major batch kernel kept a 4 KiB block in L1 and
+//! moved ~k·4P. That extra bandwidth is the price of O(P) collection
+//! memory and of overlapping aggregation with network arrival (the
+//! end-of-round stall disappears); `benches/hotpath_streaming.rs`
+//! measures both sides against the old blocked kernel.
 
 use crate::cluster::NodeId;
 use crate::config::{Aggregation, WeightScheme};
@@ -35,7 +61,129 @@ pub struct AggOutcome {
     pub mean_train_loss: f64,
 }
 
+/// Streaming aggregation state: O(P) regardless of how many clients
+/// report (the collection loop folds each decoded delta the moment it
+/// arrives and frees it — see the module docs for the invariant).
+#[derive(Debug)]
+pub struct StreamingAggregator {
+    strategy: Aggregation,
+    /// Unnormalized running sum `Σ raw_c·Δ_c` in f64 — the only
+    /// parameter-sized state held during collection.
+    acc: Vec<f64>,
+    /// `(client, raw_c)` per folded update, in arrival order.
+    raw: Vec<(NodeId, f64)>,
+    /// `Σ raw_c` — the single normalization scalar.
+    total_weight: f64,
+    /// `Σ n_c` and `Σ loss_c·n_c` for the sample-weighted mean loss.
+    n_total: f64,
+    loss_weighted: f64,
+}
+
+impl StreamingAggregator {
+    /// Start a round's aggregation for a model of `n_params` entries.
+    pub fn new(n_params: usize, strategy: Aggregation) -> Self {
+        StreamingAggregator {
+            strategy,
+            acc: vec![0f64; n_params],
+            raw: Vec::new(),
+            total_weight: 0.0,
+            n_total: 0.0,
+            loss_weighted: 0.0,
+        }
+    }
+
+    /// Updates folded so far.
+    pub fn n_updates(&self) -> usize {
+        self.raw.len()
+    }
+
+    /// Raw (unnormalized) weight of one update under `strategy`.
+    fn raw_weight(strategy: Aggregation, input: &AggInput) -> f64 {
+        let n = input.n_samples.max(1) as f64;
+        match strategy {
+            Aggregation::FedAvg | Aggregation::FedProx { .. } => n,
+            Aggregation::Weighted(WeightScheme::DataSize) => n,
+            Aggregation::Weighted(WeightScheme::InverseLoss) => {
+                n / (1.0 + input.train_loss.max(0.0) as f64)
+            }
+            Aggregation::Weighted(WeightScheme::InverseVariance) => {
+                n / (1.0 + input.update_var.max(0.0) as f64)
+            }
+        }
+    }
+
+    /// Fold one arriving update into the accumulator. The caller can
+    /// (and the orchestrator does) drop the decoded delta immediately
+    /// afterwards — nothing of it is retained.
+    pub fn fold(&mut self, input: &AggInput) -> Result<()> {
+        if input.delta.len() != self.acc.len() {
+            bail!(
+                "aggregate: client {} delta length {} != {}",
+                input.client,
+                input.delta.len(),
+                self.acc.len()
+            );
+        }
+        let w = Self::raw_weight(self.strategy, input);
+        let delta = &input.delta;
+        // parallel across disjoint element ranges; each element gets
+        // exactly one addition per fold, so the value is independent of
+        // the thread count (arrival order is the only order that
+        // matters — see module docs)
+        crate::util::parallel::par_chunks_mut(&mut self.acc, 256 * 1024, |offset, chunk| {
+            let d = &delta[offset..offset + chunk.len()];
+            for (a, &x) in chunk.iter_mut().zip(d) {
+                *a += w * x as f64;
+            }
+        });
+        self.raw.push((input.client, w));
+        self.total_weight += w;
+        let n = input.n_samples.max(1) as f64;
+        self.n_total += n;
+        self.loss_weighted += input.train_loss as f64 * n;
+        Ok(())
+    }
+
+    /// Apply the single normalization scalar and produce the new global
+    /// model: `M_{r+1} = M_r + acc / Σ raw_c`.
+    pub fn finalize(self, global: &[f32]) -> Result<AggOutcome> {
+        if self.raw.is_empty() {
+            bail!("aggregate: no updates to aggregate");
+        }
+        if global.len() != self.acc.len() {
+            bail!(
+                "aggregate: global length {} != {}",
+                global.len(),
+                self.acc.len()
+            );
+        }
+        let total = self.total_weight;
+        if !(total > 0.0) {
+            bail!("aggregate: degenerate weights (total {total})");
+        }
+        let acc = self.acc;
+        let mut new_params = vec![0f32; acc.len()];
+        crate::util::parallel::par_chunks_mut(&mut new_params, 256 * 1024, |offset, chunk| {
+            let a = &acc[offset..offset + chunk.len()];
+            let g = &global[offset..offset + chunk.len()];
+            for ((out, &av), &gv) in chunk.iter_mut().zip(a).zip(g) {
+                *out = (gv as f64 + av / total) as f32;
+            }
+        });
+        Ok(AggOutcome {
+            new_params,
+            weights: self.raw.iter().map(|&(c, w)| (c, w / total)).collect(),
+            mean_train_loss: self.loss_weighted / self.n_total,
+        })
+    }
+}
+
 /// Aggregate updates into new global parameters.
+///
+/// Thin wrapper over [`StreamingAggregator`]: the slice is folded in
+/// order through the exact streaming code path, so batch and streaming
+/// results are bit-identical by construction for the same arrival
+/// order.
 pub fn aggregate(
     global: &[f32],
     inputs: &[AggInput],
@@ -44,86 +192,11 @@ pub fn aggregate(
     if inputs.is_empty() {
         bail!("aggregate: no updates to aggregate");
     }
-    let p = global.len();
-    for i in inputs {
-        if i.delta.len() != p {
-            bail!(
-                "aggregate: client {} delta length {} != {}",
-                i.client,
-                i.delta.len(),
-                p
-            );
-        }
+    let mut agg = StreamingAggregator::new(global.len(), strategy);
+    for input in inputs {
+        agg.fold(input)?;
     }
-    let raw: Vec<f64> = inputs
-        .iter()
-        .map(|i| {
-            let n = i.n_samples.max(1) as f64;
-            match strategy {
-                Aggregation::FedAvg | Aggregation::FedProx { .. } => n,
-                Aggregation::Weighted(WeightScheme::DataSize) => n,
-                Aggregation::Weighted(WeightScheme::InverseLoss) => {
-                    n / (1.0 + i.train_loss.max(0.0) as f64)
-                }
-                Aggregation::Weighted(WeightScheme::InverseVariance) => {
-                    n / (1.0 + i.update_var.max(0.0) as f64)
-                }
-            }
-        })
-        .collect();
-    let total: f64 = raw.iter().sum();
-    if !(total > 0.0) {
-        bail!("aggregate: degenerate weights (total {total})");
-    }
-    // Accumulate in f64 for stability. Hot path (60 clients × 1M params
-    // per round — EXPERIMENTS.md §Perf): the f64 accumulator is blocked
-    // so it stays in L1 while we stream each client's delta through it
-    // once (the naive input-major loop re-streams the 8·P-byte
-    // accumulator per client). Parallel across chunks on multi-core;
-    // per-element input order is fixed either way, so results are
-    // bit-identical to the serial loop.
-    const BLOCK: usize = 4096;
-    let wn: Vec<f64> = raw.iter().map(|&w| w / total).collect();
-    let mut new_params = vec![0f32; p];
-    crate::util::parallel::par_chunks_mut(&mut new_params, 256 * 1024, |offset, chunk| {
-        let mut acc = [0f64; BLOCK];
-        let mut start = 0;
-        while start < chunk.len() {
-            let len = BLOCK.min(chunk.len() - start);
-            let base = offset + start;
-            acc[..len].fill(0.0);
-            for (input, &w) in inputs.iter().zip(&wn) {
-                let d = &input.delta[base..base + len];
-                for (a, &x) in acc[..len].iter_mut().zip(d) {
-                    *a += w * x as f64;
-                }
-            }
-            let g = &global[base..base + len];
-            for ((out, &a), &gv) in chunk[start..start + len]
-                .iter_mut()
-                .zip(&acc[..len])
-                .zip(g)
-            {
-                *out = (gv as f64 + a) as f32;
-            }
-            start += len;
-        }
-    });
-    let n_total: f64 = inputs.iter().map(|i| i.n_samples.max(1) as f64).sum();
-    let mean_train_loss = inputs
-        .iter()
-        .map(|i| i.train_loss as f64 * i.n_samples.max(1) as f64)
-        .sum::<f64>()
-        / n_total;
-    Ok(AggOutcome {
-        new_params,
-        weights: inputs
-            .iter()
-            .zip(&raw)
-            .map(|(i, &w)| (i.client, w / total))
-            .collect(),
-        mean_train_loss,
-    })
+    agg.finalize(global)
 }
 
 #[cfg(test)]
@@ -253,6 +326,60 @@ mod tests {
             Aggregation::FedAvg
         )
         .is_err());
+    }
+
+    #[test]
+    fn streaming_fold_matches_batch_bitwise() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(11);
+        let p = 1537; // deliberately not a multiple of any chunk size
+        let global: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+        let inputs: Vec<AggInput> = (0..7u32)
+            .map(|c| {
+                input(
+                    c,
+                    (0..p).map(|_| rng.normal() as f32 * 0.01).collect(),
+                    10 + c as u64 * 13,
+                    0.5 + c as f32 * 0.1,
+                    0.01 * c as f32,
+                )
+            })
+            .collect();
+        for strat in [
+            Aggregation::FedAvg,
+            Aggregation::Weighted(WeightScheme::InverseLoss),
+            Aggregation::Weighted(WeightScheme::InverseVariance),
+        ] {
+            let batch = aggregate(&global, &inputs, strat).unwrap();
+            let mut agg = StreamingAggregator::new(p, strat);
+            for i in &inputs {
+                agg.fold(i).unwrap();
+                assert!(agg.n_updates() <= inputs.len());
+            }
+            let streamed = agg.finalize(&global).unwrap();
+            for (a, b) in batch.new_params.iter().zip(&streamed.new_params) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{strat:?} diverged");
+            }
+            assert_eq!(batch.weights, streamed.weights);
+            assert_eq!(
+                batch.mean_train_loss.to_bits(),
+                streamed.mean_train_loss.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_rejects_bad_lengths_and_empty() {
+        let mut agg = StreamingAggregator::new(3, Aggregation::FedAvg);
+        assert!(agg.fold(&input(0, vec![1.0], 1, 0.0, 0.0)).is_err());
+        assert_eq!(agg.n_updates(), 0);
+        assert!(StreamingAggregator::new(3, Aggregation::FedAvg)
+            .finalize(&[0.0; 3])
+            .is_err());
+        let mut agg = StreamingAggregator::new(2, Aggregation::FedAvg);
+        agg.fold(&input(0, vec![1.0, 2.0], 1, 0.0, 0.0)).unwrap();
+        assert_eq!(agg.n_updates(), 1);
+        assert!(agg.finalize(&[0.0; 3]).is_err());
     }
 
     #[test]

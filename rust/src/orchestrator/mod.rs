@@ -15,7 +15,7 @@ mod registry;
 mod selection;
 mod server;
 
-pub use aggregate::{aggregate, AggInput, AggOutcome};
+pub use aggregate::{aggregate, AggInput, AggOutcome, StreamingAggregator};
 pub use convergence::ConvergenceTracker;
 pub use registry::{ClientRecord, ClientRegistry};
 pub use selection::select_clients;

@@ -6,8 +6,20 @@
 //! aggregate → evaluate → convergence check. Fault tolerance: clients
 //! that miss the deadline or vanish are simply skipped (their registry
 //! reliability drops, which feeds back into selection).
+//!
+//! Scaling shape of one round (the two limits OmniFed and the
+//! cross-facility FL literature identify on FL servers):
+//!
+//! * **Broadcast fan-out** — the round's model payload is serialized
+//!   exactly once ([`crate::network::pre_encode_dense`]) and every
+//!   per-client `RoundStart` shares the same `Arc`'d bytes; only the
+//!   small per-client header (mask seed etc.) differs.
+//! * **Collection memory** — arriving updates are folded straight into
+//!   a [`StreamingAggregator`] (fold-then-normalize, see the
+//!   `orchestrator::aggregate` module docs) and each decoded delta is
+//!   freed on the spot, so collection holds O(P) state, not O(k·P).
 
-use super::aggregate::{aggregate, AggInput};
+use super::aggregate::{AggInput, StreamingAggregator};
 use super::convergence::ConvergenceTracker;
 use super::registry::ClientRegistry;
 use super::selection::select_clients;
@@ -16,10 +28,11 @@ use crate::compress::{decompress, Encoded};
 use crate::config::ExperimentConfig;
 use crate::data::{Batch, Shard};
 use crate::metrics::{RoundMetrics, TrainingReport};
-use crate::network::{Msg, ServerTransport, TrafficLog};
+use crate::network::{pre_encode_dense, Msg, ServerTransport, TrafficLog};
 use crate::runtime::{EvalOut, ModelRuntime};
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
+use std::collections::HashSet;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -155,7 +168,11 @@ impl<T: ServerTransport> Orchestrator<T> {
     }
 
     /// Run one round `r`. Blocking; returns metrics + convergence info.
-    pub fn run_round(&mut self, round: u32, tracker: &mut ConvergenceTracker) -> Result<RoundOutcome> {
+    pub fn run_round(
+        &mut self,
+        round: u32,
+        tracker: &mut ConvergenceTracker,
+    ) -> Result<RoundOutcome> {
         let t_round = Instant::now();
         let available = self.registry.ids();
         if available.is_empty() {
@@ -175,7 +192,10 @@ impl<T: ServerTransport> Orchestrator<T> {
         log::debug!("round {round}: selected {selected:?}");
 
         let deadline_ms = self.cfg.straggler.deadline_ms.unwrap_or(3_600_000);
-        // Algorithm 1 line 5: broadcast the global model
+        // Algorithm 1 line 5: broadcast the global model. The payload
+        // is serialized exactly once per round; each send only clones
+        // the Arc (inproc) or re-writes the shared bytes (tcp).
+        let shared_params = Encoded::PreEncoded(pre_encode_dense(&self.params));
         for &c in &selected {
             let msg = Msg::RoundStart {
                 round,
@@ -184,7 +204,7 @@ impl<T: ServerTransport> Orchestrator<T> {
                 lr: self.cfg.train.lr,
                 mu: self.cfg.aggregation.mu(),
                 local_epochs: self.cfg.train.local_epochs as u32,
-                params: Encoded::Dense(self.params.clone()),
+                params: shared_params.clone(),
                 mask_seed: mask_seed(self.cfg.seed, round, c),
                 compression: self.cfg.compression,
             };
@@ -192,8 +212,11 @@ impl<T: ServerTransport> Orchestrator<T> {
                 log::warn!("round {round}: broadcast to {c} failed: {e}");
             }
         }
+        drop(shared_params);
 
-        // Algorithm 1 lines 6–10: collect updates
+        // Algorithm 1 lines 6–10: collect updates, folding each one
+        // into the streaming aggregator as it arrives — at most one
+        // decoded delta is alive at any time (O(P), not O(k·P))
         let partial_k = self
             .cfg
             .straggler
@@ -201,9 +224,10 @@ impl<T: ServerTransport> Orchestrator<T> {
             .unwrap_or(usize::MAX)
             .min(selected.len());
         let deadline = t_round + Duration::from_millis(deadline_ms);
-        let mut inputs: Vec<AggInput> = Vec::with_capacity(selected.len());
-        let mut reported: Vec<NodeId> = Vec::new();
-        while reported.len() < selected.len() && inputs.len() < partial_k {
+        let selected_set: HashSet<NodeId> = selected.iter().copied().collect();
+        let mut reported: HashSet<NodeId> = HashSet::with_capacity(selected.len());
+        let mut agg = StreamingAggregator::new(self.params.len(), self.cfg.aggregation);
+        while reported.len() < selected.len() && agg.n_updates() < partial_k {
             let now = Instant::now();
             if now >= deadline {
                 break;
@@ -223,19 +247,19 @@ impl<T: ServerTransport> Orchestrator<T> {
                         log::debug!("stale update from {client} for round {r}");
                         continue;
                     }
-                    if !selected.contains(&client) || reported.contains(&client) {
+                    if !selected_set.contains(&client) || reported.contains(&client) {
                         continue;
                     }
                     match decompress(&delta, self.params.len()) {
                         Ok(dense) => {
-                            inputs.push(AggInput {
+                            agg.fold(&AggInput {
                                 client,
                                 delta: dense,
                                 n_samples: stats.n_samples,
                                 train_loss: stats.train_loss,
                                 update_var: stats.update_var,
-                            });
-                            reported.push(client);
+                            })?;
+                            reported.insert(client);
                             self.registry.report_success(
                                 client,
                                 round,
@@ -245,7 +269,7 @@ impl<T: ServerTransport> Orchestrator<T> {
                         Err(e) => {
                             log::warn!("round {round}: bad update from {client}: {e}");
                             self.registry.report_failure(client, round);
-                            reported.push(client);
+                            reported.insert(client);
                         }
                     }
                 }
@@ -262,21 +286,25 @@ impl<T: ServerTransport> Orchestrator<T> {
             }
         }
 
-        // Algorithm 1 lines 11–12: aggregate + update global model
-        let old_params = std::mem::take(&mut self.params);
-        let (new_params, mean_loss) = if inputs.is_empty() {
+        // Algorithm 1 lines 11–12: finalize the aggregate (one
+        // normalization scalar) + update the global model. On a
+        // zero-update round the old model is kept as-is — no clone.
+        let n_updates = agg.n_updates();
+        let (new_params, mean_loss) = if n_updates == 0 {
             log::warn!("round {round}: zero updates — keeping old model");
-            (old_params.clone(), f64::NAN)
+            (None, f64::NAN)
         } else {
-            let out = aggregate(&old_params, &inputs, self.cfg.aggregation)?;
-            (out.new_params, out.mean_train_loss)
+            let out = agg.finalize(&self.params)?;
+            (Some(out.new_params), out.mean_train_loss)
         };
+        let current: &[f32] = new_params.as_deref().unwrap_or(&self.params);
 
-        // evaluate (centralized, §5.3)
-        let (eval_accuracy, eval_loss) = if round % self.eval_every == 0 {
+        // evaluate (centralized, §5.3); eval_every == 0 means never
+        let do_eval = self.eval_every != 0 && round % self.eval_every == 0;
+        let (eval_accuracy, eval_loss) = if do_eval {
             match &self.eval {
                 Some(h) => {
-                    let e = h.evaluate(&new_params)?;
+                    let e = h.evaluate(current)?;
                     (Some(e.accuracy()), Some(e.mean_loss()))
                 }
                 None => (None, None),
@@ -285,9 +313,11 @@ impl<T: ServerTransport> Orchestrator<T> {
             (None, None)
         };
 
-        let converged = tracker.update(&old_params, &new_params, eval_accuracy);
+        let converged = tracker.update(&self.params, current, eval_accuracy);
         let model_delta = tracker.last_delta();
-        self.params = new_params;
+        if let Some(p) = new_params {
+            self.params = p;
+        }
         self.model_version = round + 1;
 
         // notify round end (selected only; broadcast would also be fine)
@@ -306,7 +336,7 @@ impl<T: ServerTransport> Orchestrator<T> {
             metrics: RoundMetrics {
                 round,
                 selected: selected.len() as u32,
-                reported: inputs.len() as u32,
+                reported: n_updates as u32,
                 dropped: (selected.len() - reported.len()) as u32,
                 deadline_misses,
                 train_loss: mean_loss,
@@ -381,7 +411,11 @@ pub fn mask_seed(exp_seed: u64, round: u32, client: NodeId) -> u64 {
 
 #[cfg(test)]
 mod tests {
+    use super::super::registry::test_profile;
     use super::*;
+    use crate::config::SelectionPolicy;
+    use crate::network::inproc::{InprocClient, InprocHub, InprocServer};
+    use crate::network::{ClientTransport, LinkShaper, UpdateStats};
 
     #[test]
     fn mask_seed_unique_per_round_and_client() {
@@ -393,5 +427,172 @@ mod tests {
         }
         assert_eq!(mask_seed(7, 3, 4), mask_seed(7, 3, 4));
         assert_ne!(mask_seed(7, 3, 4), mask_seed(8, 3, 4));
+    }
+
+    fn test_cfg(k: usize) -> ExperimentConfig {
+        let mut cfg = crate::config::presets::quickstart();
+        cfg.selection.clients_per_round = k;
+        cfg.selection.policy = SelectionPolicy::Random;
+        cfg.straggler.deadline_ms = Some(400);
+        cfg.straggler.partial_k = None;
+        cfg
+    }
+
+    /// n registered dummy clients + an orchestrator over inproc, with
+    /// the RegisterAck handshake already drained from every client.
+    fn federation(
+        cfg: ExperimentConfig,
+        n: u32,
+        initial: Vec<f32>,
+    ) -> (Orchestrator<InprocServer>, Vec<InprocClient>) {
+        let traffic = Arc::new(TrafficLog::new());
+        let hub = InprocHub::new(traffic.clone());
+        let clients: Vec<InprocClient> = (0..n)
+            .map(|i| hub.add_client(i, LinkShaper::unshaped()))
+            .collect();
+        let mut orch = Orchestrator::new(cfg, hub.server(), traffic, initial, None);
+        for c in &clients {
+            c.send(&Msg::Register {
+                client: c.id(),
+                profile: test_profile(1.0, 1e9),
+            })
+            .unwrap();
+        }
+        assert_eq!(
+            orch.wait_for_clients(n as usize, Duration::from_secs(5)).unwrap(),
+            n as usize
+        );
+        for c in &clients {
+            let ack = c.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+            assert!(matches!(ack, Msg::RegisterAck { .. }));
+        }
+        (orch, clients)
+    }
+
+    fn update(client: NodeId, round: u32, delta: Vec<f32>) -> Msg {
+        Msg::Update {
+            round,
+            client,
+            delta: Encoded::Dense(delta),
+            stats: UpdateStats {
+                n_samples: 100,
+                train_loss: 1.0,
+                steps: 1,
+                compute_ms: 1.0,
+                update_var: 0.0,
+            },
+        }
+    }
+
+    fn tracker() -> ConvergenceTracker {
+        ConvergenceTracker::new(1e-12, 1000, None)
+    }
+
+    #[test]
+    fn eval_every_zero_means_never_evaluate() {
+        // regression: `round % eval_every` used to divide by zero
+        let (mut orch, clients) = federation(test_cfg(1), 1, vec![0f32; 4]);
+        orch.eval_every = 0;
+        clients[0].send(&update(0, 0, vec![1.0; 4])).unwrap();
+        let out = orch.run_round(0, &mut tracker()).unwrap();
+        assert_eq!(out.metrics.reported, 1);
+        assert!(out.metrics.eval_accuracy.is_none());
+    }
+
+    #[test]
+    fn stale_round_updates_are_ignored() {
+        let (mut orch, clients) = federation(test_cfg(1), 1, vec![0f32; 3]);
+        clients[0].send(&update(0, 7, vec![9.0; 3])).unwrap(); // stale
+        clients[0].send(&update(0, 0, vec![2.0; 3])).unwrap();
+        let out = orch.run_round(0, &mut tracker()).unwrap();
+        assert_eq!(out.metrics.reported, 1);
+        assert_eq!(orch.params(), &[2.0f32; 3][..]);
+    }
+
+    #[test]
+    fn duplicate_updates_from_same_client_first_wins() {
+        let (mut orch, clients) = federation(test_cfg(2), 2, vec![0f32; 3]);
+        clients[0].send(&update(0, 0, vec![2.0; 3])).unwrap();
+        clients[0].send(&update(0, 0, vec![100.0; 3])).unwrap(); // dup
+        clients[1].send(&update(1, 0, vec![4.0; 3])).unwrap();
+        let out = orch.run_round(0, &mut tracker()).unwrap();
+        assert_eq!(out.metrics.reported, 2);
+        // (100·2 + 100·4) / 200 = 3; the duplicate never contributes
+        assert_eq!(orch.params(), &[3.0f32; 3][..]);
+    }
+
+    #[test]
+    fn updates_from_unselected_clients_are_ignored() {
+        let (mut orch, clients) = federation(test_cfg(1), 2, vec![0f32; 3]);
+        clients[0].send(&update(0, 0, vec![1.0; 3])).unwrap();
+        clients[1].send(&update(1, 0, vec![2.0; 3])).unwrap();
+        let out = orch.run_round(0, &mut tracker()).unwrap();
+        assert_eq!(out.metrics.selected, 1);
+        assert_eq!(out.metrics.reported, 1);
+        // only the selected client (the one that got a RoundStart)
+        // contributed to the aggregate
+        let mut sel = None;
+        for c in &clients {
+            if let Some(Msg::RoundStart { .. }) =
+                c.recv_timeout(Duration::from_millis(100)).unwrap()
+            {
+                sel = Some(c.id());
+            }
+        }
+        let want = if sel.unwrap() == 0 { 1.0f32 } else { 2.0f32 };
+        assert_eq!(orch.params(), &[want; 3][..]);
+    }
+
+    #[test]
+    fn partial_k_cuts_off_in_arrival_order() {
+        let mut cfg = test_cfg(3);
+        cfg.straggler.partial_k = Some(2);
+        let (mut orch, clients) = federation(cfg, 3, vec![0f32; 3]);
+        clients[0].send(&update(0, 0, vec![2.0; 3])).unwrap();
+        clients[1].send(&update(1, 0, vec![4.0; 3])).unwrap();
+        clients[2].send(&update(2, 0, vec![1000.0; 3])).unwrap(); // too late
+        let out = orch.run_round(0, &mut tracker()).unwrap();
+        assert_eq!(out.metrics.selected, 3);
+        assert_eq!(out.metrics.reported, 2);
+        assert_eq!(out.metrics.dropped, 1);
+        assert_eq!(out.metrics.deadline_misses, 1);
+        // first two arrivals only: (100·2 + 100·4) / 200 = 3
+        assert_eq!(orch.params(), &[3.0f32; 3][..]);
+    }
+
+    #[test]
+    fn broadcast_payload_is_encoded_once_and_shared() {
+        let (mut orch, clients) = federation(test_cfg(3), 3, vec![0.5f32; 3]);
+        for c in &clients {
+            c.send(&update(c.id(), 0, vec![1.0; 3])).unwrap();
+        }
+        orch.run_round(0, &mut tracker()).unwrap();
+        let mut arcs = Vec::new();
+        for c in &clients {
+            match c.recv_timeout(Duration::from_secs(1)).unwrap().unwrap() {
+                Msg::RoundStart { params, .. } => match params {
+                    Encoded::PreEncoded(p) => {
+                        let dec = decompress(&Encoded::PreEncoded(p.clone()), 3).unwrap();
+                        assert_eq!(dec, vec![0.5f32; 3]);
+                        arcs.push(p.bytes);
+                    }
+                    other => panic!("expected shared payload, got {other:?}"),
+                },
+                other => panic!("expected RoundStart, got {}", other.name()),
+            }
+        }
+        // one serialization per round: all k sends share the same bytes
+        assert!(Arc::ptr_eq(&arcs[0], &arcs[1]));
+        assert!(Arc::ptr_eq(&arcs[1], &arcs[2]));
+    }
+
+    #[test]
+    fn zero_update_round_keeps_model_unchanged() {
+        let (mut orch, _clients) = federation(test_cfg(1), 1, vec![1.5f32; 3]);
+        let out = orch.run_round(0, &mut tracker()).unwrap();
+        assert_eq!(out.metrics.reported, 0);
+        assert_eq!(out.metrics.deadline_misses, 1);
+        assert!(out.metrics.train_loss.is_nan());
+        assert_eq!(orch.params(), &[1.5f32; 3][..]);
     }
 }

@@ -64,6 +64,12 @@ impl Writer {
         self.buf.extend_from_slice(v);
     }
 
+    /// Append pre-serialized bytes verbatim (no length prefix). Used to
+    /// splice an already-encoded payload into a larger message.
+    pub fn raw(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
     pub fn str(&mut self, v: &str) {
         self.bytes(v.as_bytes());
     }
