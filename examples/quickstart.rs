@@ -1,33 +1,119 @@
-//! Quickstart: a complete federated run in ~40 lines.
+//! Quickstart: a complete federated run, wired by hand around the
+//! composable `OrchestratorBuilder`.
 //!
 //! Trains the MedMNIST MLP across 8 simulated heterogeneous nodes
 //! (2× p3.2xlarge, 2× t3.large, 2× RTX 6000, 2× HPC CPU) with non-IID
-//! label-shard data, FedAvg aggregation and a round deadline.
+//! label-shard data and a round deadline. The aggregation strategy and
+//! server optimizer are picked *by registry name*, so the same binary
+//! demonstrates FedAvg, robust trimmed-mean, server momentum, …:
+//!
+//!   cargo run --release --example quickstart -- --mock
+//!   cargo run --release --example quickstart -- --mock --aggregation trimmed_mean:0.2
+//!   cargo run --release --example quickstart -- --mock --server-opt fedavgm:0.5
 //!
 //! Run with real AOT compute:   make artifacts && cargo run --release --example quickstart
-//! Run without artifacts:       cargo run --release --example quickstart -- --mock
 
+use fedhpc::client::{Worker, WorkerOptions};
+use fedhpc::cluster::Cluster;
 use fedhpc::config::presets::quickstart;
-use fedhpc::experiments::run_real;
+use fedhpc::data::{FederatedDataset, Shard};
+use fedhpc::faults::FaultInjector;
+use fedhpc::network::inproc::InprocHub;
+use fedhpc::network::{LinkShaper, TrafficLog};
+use fedhpc::orchestrator::strategy::registry::{server_opt_by_name, strategy_by_name};
+use fedhpc::orchestrator::{EvalHarness, NoHooks, Orchestrator};
+use fedhpc::runtime::{MockRuntime, ModelRuntime, PjrtRuntime};
+use std::sync::Arc;
+use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
     fedhpc::util::logging::init();
-    let mock = std::env::args().any(|a| a == "--mock");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mock = args.iter().any(|a| a == "--mock");
+    let opt_of = |name: &str| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    // strategy + server optimizer by registry name
+    let agg_name = opt_of("--aggregation").unwrap_or_else(|| "fedavg".into());
+    let opt_name = opt_of("--server-opt").unwrap_or_else(|| "sgd".into());
+    let strategy = strategy_by_name(&agg_name)?;
+    let server_opt = server_opt_by_name(&opt_name)?;
 
     let mut cfg = quickstart();
     cfg.mock_runtime = mock;
     cfg.train.rounds = 10;
 
     println!(
-        "quickstart: {} | {} nodes | {} clients/round | {} rounds | runtime: {}",
+        "quickstart: {} | {} nodes | {} clients/round | {} rounds | {} + {} | runtime: {}",
         cfg.data.dataset,
         cfg.cluster.total_nodes(),
         cfg.selection.clients_per_round,
         cfg.train.rounds,
+        agg_name,
+        opt_name,
         if mock { "mock" } else { "PJRT (AOT artifacts)" },
     );
 
-    let report = run_real(&cfg)?;
+    // the federation, wired by hand: cluster model, partitioned data,
+    // in-process transport, one worker thread per node
+    let cluster = Cluster::build(&cfg.cluster, cfg.seed)?;
+    let n_clients = cluster.len();
+    let dataset = FederatedDataset::build(&cfg.data, n_clients, cfg.seed)?;
+    let traffic = Arc::new(TrafficLog::new());
+    let hub = InprocHub::new(traffic.clone());
+
+    let shared_pjrt = if mock {
+        None
+    } else {
+        Some(PjrtRuntime::load(&cfg.artifacts_dir, &cfg.data.dataset)?)
+    };
+    let runtime_for = |shard: &Shard| -> Box<dyn ModelRuntime> {
+        match &shared_pjrt {
+            Some(rt) => Box::new(rt.clone()),
+            None => Box::new(MockRuntime::new(shard.x_len, dataset.n_classes)),
+        }
+    };
+
+    let mut handles = Vec::with_capacity(n_clients);
+    for (node, shard) in cluster.nodes.iter().zip(&dataset.clients) {
+        let worker = Worker::new(
+            hub.add_client(node.id, LinkShaper::from_class(node.link())),
+            runtime_for(shard),
+            node.clone(),
+            shard.clone(),
+            FaultInjector::new(cfg.faults, cfg.seed),
+            WorkerOptions {
+                emulate_speed: true,
+                seed: cfg.seed ^ node.id as u64,
+                ..Default::default()
+            },
+        );
+        handles.push(std::thread::spawn(move || worker.run()));
+    }
+
+    // the composable orchestrator: transport + strategy + server
+    // optimizer + evaluation cadence, one typed builder
+    let eval_runtime = runtime_for(&dataset.eval);
+    let initial = eval_runtime.init(cfg.seed as u32)?;
+    let mut orch = Orchestrator::builder(cfg.clone())
+        .transport(hub.server())
+        .traffic(traffic)
+        .initial_params(initial)
+        .strategy(strategy)
+        .server_opt(server_opt)
+        .eval(EvalHarness {
+            runtime: eval_runtime,
+            shard: dataset.eval.clone(),
+        })
+        .eval_every(1)
+        .build()?;
+    let report = orch.run(Some((n_clients, Duration::from_secs(60))), &mut NoHooks)?;
+    for h in handles {
+        let _ = h.join();
+    }
 
     println!("\nround  train_loss  eval_acc  duration");
     for r in &report.rounds {

@@ -43,6 +43,13 @@ fn main() {
             "weighted:inverse-var  k=60 P=1000",
             Aggregation::Weighted(WeightScheme::InverseVariance),
         ),
+        // buffered order statistics: per-coordinate sort of k values —
+        // the price of robustness vs the streaming weighted fold
+        (
+            "trimmed-mean:0.1      k=60 P=1000",
+            Aggregation::TrimmedMean { trim_frac: 0.1 },
+        ),
+        ("coordinate-median     k=60 P=1000", Aggregation::CoordinateMedian),
     ] {
         stats.push(bench(name, budget, || {
             let out = aggregate(&global, &ins, strat).unwrap();

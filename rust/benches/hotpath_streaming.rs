@@ -13,7 +13,9 @@
 
 use fedhpc::benchkit::{bench, fmt_ns, print_table, BenchStats};
 use fedhpc::config::Aggregation;
-use fedhpc::orchestrator::{AggInput, StreamingAggregator};
+use fedhpc::orchestrator::strategy::registry::strategy_from_config;
+use fedhpc::orchestrator::strategy::SgdServer;
+use fedhpc::orchestrator::{AggInput, RoundAggregator};
 use fedhpc::util::parallel::par_chunks_mut;
 use fedhpc::util::rng::Rng;
 use std::time::Duration;
@@ -76,6 +78,7 @@ fn human(bytes: u64) -> String {
 
 fn main() {
     let budget = Duration::from_secs(3);
+    let strategy = strategy_from_config(&Aggregation::FedAvg);
     let mut stats: Vec<BenchStats> = Vec::new();
     let mut memo: Vec<String> = Vec::new();
 
@@ -99,11 +102,11 @@ fn main() {
                 .map(|(c, t)| input(c as u32, t.clone()))
                 .collect();
             let old = blocked_batch_aggregate(&global, &inputs);
-            let mut agg = StreamingAggregator::new(p, Aggregation::FedAvg);
+            let mut agg = RoundAggregator::new(strategy.clone(), p);
             for i in &inputs {
                 agg.fold(i).unwrap();
             }
-            let streamed = agg.finalize(&global).unwrap();
+            let streamed = agg.finalize(&global, &mut SgdServer).unwrap();
             for (a, b) in old.iter().zip(&streamed.new_params) {
                 assert!((a - b).abs() <= 1e-6 * a.abs().max(1.0), "paths diverged");
             }
@@ -122,12 +125,12 @@ fn main() {
         }));
         stats.push(bench(&format!("streaming k={k} P={}k", p / 1000), budget, || {
             // decode-fold-free per arrival (one delta alive at a time)
-            let mut agg = StreamingAggregator::new(p, Aggregation::FedAvg);
+            let mut agg = RoundAggregator::new(strategy.clone(), p);
             for (c, t) in templates.iter().enumerate() {
                 let one = input(c as u32, t.clone());
                 agg.fold(&one).unwrap();
             }
-            let out = agg.finalize(&global).unwrap();
+            let out = agg.finalize(&global, &mut SgdServer).unwrap();
             std::hint::black_box(out.new_params.len());
         }));
 

@@ -21,6 +21,7 @@ pub struct LocalOutcome {
 /// Run local training. `stop_after_frac` < 1.0 simulates a mid-round
 /// preemption: training truncates after that fraction of steps and the
 /// caller decides whether anything is reported.
+#[allow(clippy::too_many_arguments)]
 pub fn train_local(
     runtime: &dyn ModelRuntime,
     shard: &Shard,

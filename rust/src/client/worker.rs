@@ -128,7 +128,7 @@ impl<T: ClientTransport> Worker<T> {
                         local_epochs as usize,
                         lr,
                         mu,
-                        self.opts.seed ^ ((round as u64) << 20 | id as u64),
+                        self.opts.seed ^ (((round as u64) << 20) | id as u64),
                         stop_frac,
                     )?;
                     let compute = t0.elapsed();

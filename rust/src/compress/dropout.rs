@@ -93,8 +93,8 @@ mod tests {
     fn masks_differ_across_rounds() {
         // (round, client) seeds must give different coordinate subsets so
         // coverage rotates (otherwise some params never train)
-        let r1 = dropout_mask_indices(500, 0.5, 100 << 32 | 1);
-        let r2 = dropout_mask_indices(500, 0.5, 101 << 32 | 1);
+        let r1 = dropout_mask_indices(500, 0.5, (100 << 32) | 1);
+        let r2 = dropout_mask_indices(500, 0.5, (101 << 32) | 1);
         assert_ne!(r1, r2);
     }
 }

@@ -70,19 +70,62 @@ fn decode(v: &Value) -> Result<ExperimentConfig> {
     };
     let aggregation = {
         let a = v.req("aggregation")?;
+        // kind strings are the registry names (Aggregation::KINDS);
+        // an unknown name is a load-time error, never a panic
         match str_of(a, "kind")?.as_str() {
             "fedavg" => Aggregation::FedAvg,
             "fedprox" => Aggregation::FedProx {
                 mu: f64_of(a, "mu")? as f32,
             },
-            "weighted" => Aggregation::Weighted(match str_of(a, "scheme")?.as_str() {
-                "data_size" => WeightScheme::DataSize,
-                "inverse_loss" => WeightScheme::InverseLoss,
-                "inverse_variance" => WeightScheme::InverseVariance,
-                s => bail!("unknown weight scheme '{s}'"),
-            }),
-            k => bail!("unknown aggregation kind '{k}'"),
+            "weighted" => Aggregation::Weighted(WeightScheme::parse(
+                str_of(a, "scheme")?.as_str(),
+            )?),
+            "trimmed_mean" => Aggregation::TrimmedMean {
+                trim_frac: a
+                    .get("trim_frac")
+                    .and_then(Value::as_f64)
+                    .unwrap_or(defaults::TRIM_FRAC as f64) as f32,
+            },
+            "coordinate_median" => Aggregation::CoordinateMedian,
+            k => bail!(
+                "unknown aggregation kind '{k}' (known: {})",
+                Aggregation::KINDS.join(", ")
+            ),
         }
+    };
+    let server_opt = match v.get("server_opt") {
+        None => ServerOptKind::Sgd,
+        Some(o) => match str_of(o, "kind")?.as_str() {
+            "sgd" => ServerOptKind::Sgd,
+            "fedavgm" => ServerOptKind::FedAvgM {
+                beta: o
+                    .get("beta")
+                    .and_then(Value::as_f64)
+                    .unwrap_or(defaults::FEDAVGM_BETA as f64) as f32,
+            },
+            "fedadam" => ServerOptKind::FedAdam {
+                lr: o
+                    .get("lr")
+                    .and_then(Value::as_f64)
+                    .unwrap_or(defaults::FEDADAM_LR as f64) as f32,
+                beta1: o
+                    .get("beta1")
+                    .and_then(Value::as_f64)
+                    .unwrap_or(defaults::FEDADAM_BETA1 as f64) as f32,
+                beta2: o
+                    .get("beta2")
+                    .and_then(Value::as_f64)
+                    .unwrap_or(defaults::FEDADAM_BETA2 as f64) as f32,
+                eps: o
+                    .get("eps")
+                    .and_then(Value::as_f64)
+                    .unwrap_or(defaults::FEDADAM_EPS as f64) as f32,
+            },
+            k => bail!(
+                "unknown server_opt kind '{k}' (known: {})",
+                ServerOptKind::KINDS.join(", ")
+            ),
+        },
     };
     let selection = {
         let s = v.req("selection")?;
@@ -177,6 +220,7 @@ fn decode(v: &Value) -> Result<ExperimentConfig> {
         cluster,
         train,
         aggregation,
+        server_opt,
         selection,
         straggler,
         compression,
@@ -208,14 +252,31 @@ pub fn to_json(cfg: &ExperimentConfig) -> String {
         }
         Aggregation::Weighted(scheme) => obj(vec![
             ("kind", s("weighted")),
-            (
-                "scheme",
-                s(match scheme {
-                    WeightScheme::DataSize => "data_size",
-                    WeightScheme::InverseLoss => "inverse_loss",
-                    WeightScheme::InverseVariance => "inverse_variance",
-                }),
-            ),
+            ("scheme", s(scheme.name())),
+        ]),
+        Aggregation::TrimmedMean { trim_frac } => obj(vec![
+            ("kind", s("trimmed_mean")),
+            ("trim_frac", num(trim_frac as f64)),
+        ]),
+        Aggregation::CoordinateMedian => obj(vec![("kind", s("coordinate_median"))]),
+    };
+    let server_opt = match cfg.server_opt {
+        ServerOptKind::Sgd => obj(vec![("kind", s("sgd"))]),
+        ServerOptKind::FedAvgM { beta } => obj(vec![
+            ("kind", s("fedavgm")),
+            ("beta", num(beta as f64)),
+        ]),
+        ServerOptKind::FedAdam {
+            lr,
+            beta1,
+            beta2,
+            eps,
+        } => obj(vec![
+            ("kind", s("fedadam")),
+            ("lr", num(lr as f64)),
+            ("beta1", num(beta1 as f64)),
+            ("beta2", num(beta2 as f64)),
+            ("eps", num(eps as f64)),
         ]),
     };
     let selection = match cfg.selection.policy {
@@ -286,6 +347,7 @@ pub fn to_json(cfg: &ExperimentConfig) -> String {
         ),
         ("train", obj(train_fields)),
         ("aggregation", aggregation),
+        ("server_opt", server_opt),
         ("selection", selection),
         ("straggler", obj(straggler_fields)),
         (
@@ -339,7 +401,11 @@ mod tests {
         for agg in [
             Aggregation::FedAvg,
             Aggregation::FedProx { mu: 0.5 },
+            Aggregation::Weighted(WeightScheme::DataSize),
+            Aggregation::Weighted(WeightScheme::InverseLoss),
             Aggregation::Weighted(WeightScheme::InverseVariance),
+            Aggregation::TrimmedMean { trim_frac: 0.25 },
+            Aggregation::CoordinateMedian,
         ] {
             for part in [
                 Partition::Iid,
@@ -355,6 +421,68 @@ mod tests {
                 assert_eq!(cfg, back);
             }
         }
+    }
+
+    #[test]
+    fn roundtrip_all_server_opts() {
+        for opt in [
+            ServerOptKind::Sgd,
+            ServerOptKind::FedAvgM { beta: 0.9 },
+            ServerOptKind::FedAdam {
+                lr: 0.05,
+                beta1: 0.9,
+                beta2: 0.99,
+                eps: 1e-3,
+            },
+        ] {
+            let mut cfg = quickstart();
+            cfg.server_opt = opt;
+            let back = from_json_str(&to_json(&cfg)).unwrap();
+            assert_eq!(cfg, back);
+        }
+    }
+
+    #[test]
+    fn missing_server_opt_section_defaults_to_sgd() {
+        // configs written before the server_opt axis existed still load
+        let text = to_json(&quickstart());
+        let stripped = {
+            let v = Value::parse(&text).unwrap();
+            let keep: Vec<(&str, Value)> = [
+                "name",
+                "seed",
+                "data",
+                "cluster",
+                "train",
+                "aggregation",
+                "selection",
+            ]
+            .iter()
+            .map(|k| (*k, v.req(k).unwrap().clone()))
+            .collect();
+            json::obj(keep).to_string()
+        };
+        let cfg = from_json_str(&stripped).unwrap();
+        assert_eq!(cfg.server_opt, ServerOptKind::Sgd);
+    }
+
+    #[test]
+    fn unknown_strategy_names_error_instead_of_panicking() {
+        let mut text = to_json(&quickstart());
+        text = text.replace("\"fedavg\"", "\"krum\"");
+        let err = from_json_str(&text).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("unknown aggregation kind 'krum'"),
+            "got: {err:#}"
+        );
+
+        let mut text = to_json(&quickstart());
+        text = text.replace("\"sgd\"", "\"lamb\"");
+        let err = from_json_str(&text).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("unknown server_opt kind 'lamb'"),
+            "got: {err:#}"
+        );
     }
 
     #[test]

@@ -14,7 +14,26 @@ pub use loader::{from_json_file, from_json_str, to_json};
 pub use presets::{paper_testbed, quickstart, Preset};
 pub use validate::validate;
 
-/// Aggregation strategy (paper §4.4, Table 1).
+use anyhow::{bail, Result};
+
+/// Default strategy / server-optimizer parameters — the single source
+/// both the name parser ([`Aggregation::parse`] /
+/// [`ServerOptKind::parse`]) and the JSON loader draw from, so the CLI
+/// path and the config-file path can never drift apart.
+pub mod defaults {
+    pub const FEDPROX_MU: f32 = 0.01;
+    pub const TRIM_FRAC: f32 = 0.1;
+    pub const FEDAVGM_BETA: f32 = 0.9;
+    pub const FEDADAM_LR: f32 = 0.1;
+    pub const FEDADAM_BETA1: f32 = 0.9;
+    pub const FEDADAM_BETA2: f32 = 0.99;
+    pub const FEDADAM_EPS: f32 = 1e-3;
+}
+
+/// Aggregation strategy (paper §4.4, Table 1). Each variant maps 1:1 to
+/// an [`crate::orchestrator::strategy::AggStrategy`] implementation via
+/// the strategy registry; [`Aggregation::parse`] is the name-keyed axis
+/// the CLI, examples and config files share.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Aggregation {
     /// FedAvg: data-size-weighted mean of client models (McMahan et al.).
@@ -24,9 +43,27 @@ pub enum Aggregation {
     FedProx { mu: f32 },
     /// Weighted aggregation with a dynamic weighting scheme.
     Weighted(WeightScheme),
+    /// Coordinate-wise trimmed mean (Yin et al.): per parameter, drop
+    /// the `trim_frac` fraction of largest and smallest client values
+    /// and average the rest. Robust to poisoned/faulty clients; runs in
+    /// the orchestrator's buffered mode (order statistic).
+    TrimmedMean { trim_frac: f32 },
+    /// Coordinate-wise median: maximally robust order statistic,
+    /// ignores sample-count weighting entirely. Buffered mode.
+    CoordinateMedian,
 }
 
 impl Aggregation {
+    /// Registry names accepted by [`Aggregation::parse`] (and by config
+    /// files as `aggregation.kind`).
+    pub const KINDS: &'static [&'static str] = &[
+        "fedavg",
+        "fedprox",
+        "weighted",
+        "trimmed_mean",
+        "coordinate_median",
+    ];
+
     /// The proximal coefficient clients should train with.
     pub fn mu(&self) -> f32 {
         match self {
@@ -40,7 +77,84 @@ impl Aggregation {
             Aggregation::FedAvg => "fedavg",
             Aggregation::FedProx { .. } => "fedprox",
             Aggregation::Weighted(_) => "weighted",
+            Aggregation::TrimmedMean { .. } => "trimmed_mean",
+            Aggregation::CoordinateMedian => "coordinate_median",
         }
+    }
+
+    /// Parse a strategy by registry name, with an optional `:`-suffixed
+    /// parameter: `"fedavg"`, `"fedprox"` / `"fedprox:0.1"` (μ),
+    /// `"weighted:inverse_loss"` (scheme, default `data_size`),
+    /// `"trimmed_mean"` / `"trimmed_mean:0.2"` (trim fraction),
+    /// `"coordinate_median"`. Unknown names, out-of-range parameters
+    /// and stray parameters on parameterless kinds are errors, never a
+    /// panic — config loading and the CLI funnel through here.
+    pub fn parse(spec: &str) -> Result<Aggregation> {
+        let (kind, arg) = match spec.split_once(':') {
+            Some((k, a)) => (k, Some(a)),
+            None => (spec, None),
+        };
+        let num = |default: f32| -> Result<f32> {
+            match arg {
+                None => Ok(default),
+                Some(a) => match a.parse::<f32>() {
+                    Ok(v) => Ok(v),
+                    Err(_) => bail!("aggregation '{kind}': bad parameter '{a}'"),
+                },
+            }
+        };
+        let no_arg = || -> Result<()> {
+            match arg {
+                None => Ok(()),
+                Some(a) => bail!("aggregation '{kind}' takes no parameter (got '{a}')"),
+            }
+        };
+        let agg = match kind {
+            "fedavg" => {
+                no_arg()?;
+                Aggregation::FedAvg
+            }
+            "fedprox" => Aggregation::FedProx {
+                mu: num(defaults::FEDPROX_MU)?,
+            },
+            "weighted" => Aggregation::Weighted(match arg {
+                None => WeightScheme::DataSize,
+                Some(s) => WeightScheme::parse(s)?,
+            }),
+            "trimmed_mean" => Aggregation::TrimmedMean {
+                trim_frac: num(defaults::TRIM_FRAC)?,
+            },
+            "coordinate_median" => {
+                no_arg()?;
+                Aggregation::CoordinateMedian
+            }
+            k => bail!(
+                "unknown aggregation kind '{k}' (known: {})",
+                Aggregation::KINDS.join(", ")
+            ),
+        };
+        agg.check_params()?;
+        Ok(agg)
+    }
+
+    /// Range checks for variant parameters — shared by
+    /// [`Aggregation::parse`] (so the by-name/CLI path rejects what a
+    /// config file would) and by [`validate`].
+    pub fn check_params(&self) -> Result<()> {
+        match *self {
+            Aggregation::FedProx { mu } => {
+                if mu.is_nan() || mu < 0.0 {
+                    bail!("config: fedprox mu must be >= 0, got {mu}");
+                }
+            }
+            Aggregation::TrimmedMean { trim_frac } => {
+                if trim_frac.is_nan() || trim_frac <= 0.0 || trim_frac >= 0.5 {
+                    bail!("config: trimmed_mean trim_frac must be in (0, 0.5), got {trim_frac}");
+                }
+            }
+            _ => {}
+        }
+        Ok(())
     }
 }
 
@@ -54,6 +168,137 @@ pub enum WeightScheme {
     InverseLoss,
     /// ∝ n_c / (1 + Var(Δ_c)): down-weights noisy updates.
     InverseVariance,
+}
+
+impl WeightScheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WeightScheme::DataSize => "data_size",
+            WeightScheme::InverseLoss => "inverse_loss",
+            WeightScheme::InverseVariance => "inverse_variance",
+        }
+    }
+
+    pub fn parse(name: &str) -> Result<WeightScheme> {
+        Ok(match name {
+            "data_size" => WeightScheme::DataSize,
+            "inverse_loss" => WeightScheme::InverseLoss,
+            "inverse_variance" => WeightScheme::InverseVariance,
+            s => bail!("unknown weight scheme '{s}'"),
+        })
+    }
+}
+
+/// Server-side optimizer applied when a round finalizes (FedOpt family,
+/// Reddi et al.): `M_{r+1} = opt(M_r, Δ_agg)`. Optimizer state
+/// (momentum, second moments) lives on the orchestrator and carries
+/// across rounds.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum ServerOptKind {
+    /// Plain server step: `M_{r+1} = M_r + Δ_agg` (the classic FedAvg
+    /// server, and the default).
+    #[default]
+    Sgd,
+    /// Server momentum (FedAvgM, Hsu et al.):
+    /// `v ← β·v + Δ_agg; M ← M + v`.
+    FedAvgM { beta: f32 },
+    /// Server Adam (FedAdam, Reddi et al.) with bias correction.
+    FedAdam {
+        lr: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+    },
+}
+
+impl ServerOptKind {
+    /// Registry names accepted by [`ServerOptKind::parse`] (and by
+    /// config files as `server_opt.kind`).
+    pub const KINDS: &'static [&'static str] = &["sgd", "fedavgm", "fedadam"];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServerOptKind::Sgd => "sgd",
+            ServerOptKind::FedAvgM { .. } => "fedavgm",
+            ServerOptKind::FedAdam { .. } => "fedadam",
+        }
+    }
+
+    /// Parse a server optimizer by registry name with an optional
+    /// `:`-suffixed parameter: `"sgd"`, `"fedavgm"` / `"fedavgm:0.9"`
+    /// (β), `"fedadam"` / `"fedadam:0.05"` (server lr). Unknown names,
+    /// out-of-range parameters and stray parameters on parameterless
+    /// kinds are errors.
+    pub fn parse(spec: &str) -> Result<ServerOptKind> {
+        let (kind, arg) = match spec.split_once(':') {
+            Some((k, a)) => (k, Some(a)),
+            None => (spec, None),
+        };
+        let num = |default: f32| -> Result<f32> {
+            match arg {
+                None => Ok(default),
+                Some(a) => match a.parse::<f32>() {
+                    Ok(v) => Ok(v),
+                    Err(_) => bail!("server_opt '{kind}': bad parameter '{a}'"),
+                },
+            }
+        };
+        let opt = match kind {
+            "sgd" | "none" => {
+                if let Some(a) = arg {
+                    bail!("server_opt '{kind}' takes no parameter (got '{a}')");
+                }
+                ServerOptKind::Sgd
+            }
+            "fedavgm" => ServerOptKind::FedAvgM {
+                beta: num(defaults::FEDAVGM_BETA)?,
+            },
+            "fedadam" => ServerOptKind::FedAdam {
+                lr: num(defaults::FEDADAM_LR)?,
+                beta1: defaults::FEDADAM_BETA1,
+                beta2: defaults::FEDADAM_BETA2,
+                eps: defaults::FEDADAM_EPS,
+            },
+            k => bail!(
+                "unknown server_opt kind '{k}' (known: {})",
+                ServerOptKind::KINDS.join(", ")
+            ),
+        };
+        opt.check_params()?;
+        Ok(opt)
+    }
+
+    /// Range checks for variant parameters — shared by
+    /// [`ServerOptKind::parse`] and [`validate`].
+    pub fn check_params(&self) -> Result<()> {
+        match *self {
+            ServerOptKind::Sgd => {}
+            ServerOptKind::FedAvgM { beta } => {
+                if beta.is_nan() || !(0.0..1.0).contains(&beta) {
+                    bail!("config: fedavgm beta must be in [0, 1), got {beta}");
+                }
+            }
+            ServerOptKind::FedAdam {
+                lr,
+                beta1,
+                beta2,
+                eps,
+            } => {
+                if lr.is_nan() || lr <= 0.0 {
+                    bail!("config: fedadam lr must be positive, got {lr}");
+                }
+                for (name, b) in [("beta1", beta1), ("beta2", beta2)] {
+                    if b.is_nan() || !(0.0..1.0).contains(&b) {
+                        bail!("config: fedadam {name} must be in [0, 1), got {b}");
+                    }
+                }
+                if eps.is_nan() || eps <= 0.0 {
+                    bail!("config: fedadam eps must be positive, got {eps}");
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Client-selection policy (paper §4.1).
@@ -245,6 +490,7 @@ pub struct ExperimentConfig {
     pub cluster: ClusterConfig,
     pub train: TrainConfig,
     pub aggregation: Aggregation,
+    pub server_opt: ServerOptKind,
     pub selection: SelectionConfig,
     pub straggler: StragglerConfig,
     pub compression: CompressionConfig,
@@ -265,6 +511,71 @@ mod tests {
         assert_eq!(Aggregation::FedAvg.mu(), 0.0);
         assert_eq!(Aggregation::FedProx { mu: 0.1 }.mu(), 0.1);
         assert_eq!(Aggregation::Weighted(WeightScheme::InverseLoss).mu(), 0.0);
+        assert_eq!(Aggregation::TrimmedMean { trim_frac: 0.1 }.mu(), 0.0);
+    }
+
+    #[test]
+    fn aggregation_parse_known_names_and_params() {
+        assert_eq!(Aggregation::parse("fedavg").unwrap(), Aggregation::FedAvg);
+        assert_eq!(
+            Aggregation::parse("fedprox:0.5").unwrap(),
+            Aggregation::FedProx { mu: 0.5 }
+        );
+        assert_eq!(
+            Aggregation::parse("weighted:inverse_variance").unwrap(),
+            Aggregation::Weighted(WeightScheme::InverseVariance)
+        );
+        assert_eq!(
+            Aggregation::parse("weighted").unwrap(),
+            Aggregation::Weighted(WeightScheme::DataSize)
+        );
+        assert_eq!(
+            Aggregation::parse("trimmed_mean:0.25").unwrap(),
+            Aggregation::TrimmedMean { trim_frac: 0.25 }
+        );
+        assert_eq!(
+            Aggregation::parse("coordinate_median").unwrap(),
+            Aggregation::CoordinateMedian
+        );
+        // every registered kind parses with defaults
+        for kind in Aggregation::KINDS {
+            let agg = Aggregation::parse(kind).unwrap();
+            assert_eq!(&agg.name(), kind);
+        }
+        assert!(Aggregation::parse("krum").is_err());
+        assert!(Aggregation::parse("fedprox:not_a_number").is_err());
+        assert!(Aggregation::parse("weighted:no_such_scheme").is_err());
+        // out-of-range parameters are rejected on the by-name path too
+        assert!(Aggregation::parse("trimmed_mean:0.9").is_err());
+        assert!(Aggregation::parse("fedprox:-0.5").is_err());
+        // parameterless kinds reject a stray parameter instead of
+        // silently discarding it
+        assert!(Aggregation::parse("fedavg:1").is_err());
+        assert!(Aggregation::parse("coordinate_median:0.3").is_err());
+    }
+
+    #[test]
+    fn server_opt_parse_known_names_and_params() {
+        assert_eq!(ServerOptKind::parse("sgd").unwrap(), ServerOptKind::Sgd);
+        assert_eq!(ServerOptKind::parse("none").unwrap(), ServerOptKind::Sgd);
+        assert_eq!(
+            ServerOptKind::parse("fedavgm:0.5").unwrap(),
+            ServerOptKind::FedAvgM { beta: 0.5 }
+        );
+        assert!(matches!(
+            ServerOptKind::parse("fedadam:0.05").unwrap(),
+            ServerOptKind::FedAdam { lr, .. } if lr == 0.05
+        ));
+        for kind in ServerOptKind::KINDS {
+            let opt = ServerOptKind::parse(kind).unwrap();
+            assert_eq!(&opt.name(), kind);
+        }
+        assert!(ServerOptKind::parse("lamb").is_err());
+        assert!(ServerOptKind::parse("fedavgm:x").is_err());
+        // out-of-range / stray parameters are rejected
+        assert!(ServerOptKind::parse("fedavgm:1.5").is_err());
+        assert!(ServerOptKind::parse("fedadam:0").is_err());
+        assert!(ServerOptKind::parse("sgd:0.1").is_err());
     }
 
     #[test]

@@ -61,6 +61,7 @@ pub fn quickstart() -> ExperimentConfig {
             ..TrainConfig::default()
         },
         aggregation: Aggregation::FedAvg,
+        server_opt: ServerOptKind::Sgd,
         selection: SelectionConfig {
             policy: SelectionPolicy::default(),
             clients_per_round: 4,
@@ -109,6 +110,7 @@ pub fn paper_testbed() -> ExperimentConfig {
             ..TrainConfig::default()
         },
         aggregation: Aggregation::FedProx { mu: 0.01 },
+        server_opt: ServerOptKind::Sgd,
         selection: SelectionConfig {
             policy: SelectionPolicy::default(),
             clients_per_round: 20,

@@ -71,19 +71,18 @@ pub fn validate(cfg: &ExperimentConfig) -> Result<()> {
     if cfg.train.rounds == 0 {
         bail!("config: rounds must be >= 1");
     }
-    if !(cfg.train.lr > 0.0) {
+    if cfg.train.lr.is_nan() || cfg.train.lr <= 0.0 {
         bail!("config: lr must be positive, got {}", cfg.train.lr);
     }
-    if let Aggregation::FedProx { mu } = cfg.aggregation {
-        if !(mu >= 0.0) {
-            bail!("config: fedprox mu must be >= 0, got {mu}");
-        }
-    }
+    // strategy / server-opt parameter ranges: shared with the name
+    // parser so the CLI and config-file paths reject the same inputs
+    cfg.aggregation.check_params()?;
+    cfg.server_opt.check_params()?;
     match cfg.data.partition {
         Partition::LabelShard { classes_per_client } if classes_per_client == 0 => {
             bail!("config: classes_per_client must be >= 1")
         }
-        Partition::Dirichlet { alpha } if !(alpha > 0.0) => {
+        Partition::Dirichlet { alpha } if alpha.is_nan() || alpha <= 0.0 => {
             bail!("config: dirichlet alpha must be > 0, got {alpha}")
         }
         _ => {}
@@ -153,5 +152,51 @@ mod tests {
         let mut c = quickstart();
         c.data.partition = Partition::Dirichlet { alpha: 0.0 };
         assert!(validate(&c).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_trim_frac() {
+        for bad in [0.0f32, 0.5, 0.9, -0.1, f32::NAN] {
+            let mut c = quickstart();
+            c.aggregation = Aggregation::TrimmedMean { trim_frac: bad };
+            assert!(validate(&c).is_err(), "trim_frac {bad} should be rejected");
+        }
+        let mut c = quickstart();
+        c.aggregation = Aggregation::TrimmedMean { trim_frac: 0.25 };
+        assert!(validate(&c).is_ok());
+        c.aggregation = Aggregation::CoordinateMedian;
+        assert!(validate(&c).is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_server_opt_params() {
+        let mut c = quickstart();
+        c.server_opt = ServerOptKind::FedAvgM { beta: 1.0 };
+        assert!(validate(&c).is_err());
+        c.server_opt = ServerOptKind::FedAvgM { beta: -0.1 };
+        assert!(validate(&c).is_err());
+        c.server_opt = ServerOptKind::FedAvgM { beta: 0.9 };
+        assert!(validate(&c).is_ok());
+        c.server_opt = ServerOptKind::FedAdam {
+            lr: 0.0,
+            beta1: 0.9,
+            beta2: 0.99,
+            eps: 1e-3,
+        };
+        assert!(validate(&c).is_err());
+        c.server_opt = ServerOptKind::FedAdam {
+            lr: 0.1,
+            beta1: 0.9,
+            beta2: 1.5,
+            eps: 1e-3,
+        };
+        assert!(validate(&c).is_err());
+        c.server_opt = ServerOptKind::FedAdam {
+            lr: 0.1,
+            beta1: 0.9,
+            beta2: 0.99,
+            eps: 1e-3,
+        };
+        assert!(validate(&c).is_ok());
     }
 }

@@ -22,7 +22,11 @@ use std::time::Duration;
 
 /// Build a runtime for `cfg`'s model. Mock runtimes only support
 /// scalar-label tasks (y_len == 1).
-fn build_runtime(cfg: &ExperimentConfig, sample: &Shard, n_classes: usize) -> Result<Box<dyn ModelRuntime>> {
+fn build_runtime(
+    cfg: &ExperimentConfig,
+    sample: &Shard,
+    n_classes: usize,
+) -> Result<Box<dyn ModelRuntime>> {
     if cfg.mock_runtime {
         if sample.y_len != 1 {
             bail!(
@@ -114,8 +118,14 @@ pub fn run_real_with_hooks(
         );
     }
 
-    // run the orchestrator on this thread
-    let mut orch = Orchestrator::new(cfg.clone(), hub.server(), traffic, initial, Some(eval));
+    // run the orchestrator on this thread; strategy + server optimizer
+    // come from the config's registry names
+    let mut orch = Orchestrator::builder(cfg.clone())
+        .transport(hub.server())
+        .traffic(traffic)
+        .initial_params(initial)
+        .eval(eval)
+        .build()?;
     let report = orch.run(Some((n_clients, Duration::from_secs(60))), hooks)?;
 
     for h in handles {

@@ -22,7 +22,8 @@ use crate::data::FederatedDataset;
 use crate::faults::{FaultAction, FaultInjector};
 use crate::metrics::{RoundMetrics, TrainingReport};
 use crate::network::ClientProfile;
-use crate::orchestrator::{aggregate, AggInput, ClientRegistry, EvalHarness, select_clients};
+use crate::orchestrator::strategy::registry as strategy_registry;
+use crate::orchestrator::{select_clients, AggInput, ClientRegistry, EvalHarness, RoundAggregator};
 use crate::runtime::{MockRuntime, ModelRuntime};
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
@@ -78,6 +79,7 @@ pub fn run_sim(
     let n_clients = cluster.len();
 
     // data + optional mock training state
+    #[allow(clippy::type_complexity)]
     let (dataset, runtime, mut params, eval): (
         Option<FederatedDataset>,
         Option<MockRuntime>,
@@ -112,6 +114,10 @@ pub fn run_sim(
         registry.register(node.id, profile_of(node, samples));
     }
     let injector = FaultInjector::new(cfg.faults, cfg.seed);
+    // same strategy/server-opt plumbing as the real loop; optimizer
+    // state (momentum etc.) carries across virtual rounds
+    let strategy = strategy_registry::strategy_from_config(&cfg.aggregation);
+    let mut server_opt = strategy_registry::server_opt_from_config(&cfg.server_opt);
     let mut rng = Rng::new(cfg.seed ^ 0x51312);
     let mut now_s = 0.0f64;
     let mut report = TrainingReport::new(&cfg.name);
@@ -238,8 +244,8 @@ pub fn run_sim(
                     &params,
                     cfg.train.local_epochs,
                     cfg.train.lr,
-                    cfg.aggregation.mu(),
-                    cfg.seed ^ ((round as u64) << 20 | a.client as u64),
+                    strategy.mu(),
+                    cfg.seed ^ (((round as u64) << 20) | a.client as u64),
                     1.0,
                 )?;
                 inputs.push(AggInput {
@@ -253,7 +259,11 @@ pub fn run_sim(
             if inputs.is_empty() {
                 (f64::NAN, None, None, 0.0)
             } else {
-                let out = aggregate(&params, &inputs, cfg.aggregation)?;
+                let mut agg = RoundAggregator::new(strategy.clone(), params.len());
+                for input in &inputs {
+                    agg.fold(input)?;
+                }
+                let out = agg.finalize(&params, server_opt.as_mut())?;
                 let e = eval.as_ref().unwrap().evaluate(&out.new_params)?;
                 let delta =
                     crate::orchestrator::ConvergenceTracker::relative_delta(&params, &out.new_params);
@@ -384,6 +394,23 @@ mod tests {
         let sim = run_sim(&cfg, &timing(), true).unwrap();
         let acc = sim.report.final_accuracy().unwrap();
         assert!(acc > 0.4, "sim training should learn, got {acc}");
+    }
+
+    #[test]
+    fn training_sim_supports_robust_strategy_and_server_opt() {
+        let mut cfg = quickstart();
+        cfg.mock_runtime = true;
+        cfg.train.rounds = 6;
+        cfg.train.lr = 0.2;
+        cfg.train.local_epochs = 1;
+        cfg.data.samples_per_client = 64;
+        cfg.data.eval_samples = 128;
+        cfg.data.partition = crate::config::Partition::Iid;
+        cfg.aggregation = crate::config::Aggregation::TrimmedMean { trim_frac: 0.2 };
+        cfg.server_opt = crate::config::ServerOptKind::FedAvgM { beta: 0.3 };
+        let sim = run_sim(&cfg, &timing(), true).unwrap();
+        assert_eq!(sim.report.rounds.len(), 6);
+        assert!(sim.report.final_accuracy().is_some());
     }
 
     #[test]

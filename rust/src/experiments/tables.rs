@@ -74,7 +74,10 @@ pub fn table2(quick: bool, out_dir: &str) -> Result<()> {
     println!("{:<14} {:>10} {:>10}", "dataset", "FedAvg", "FedProx");
     for ds in datasets {
         let mut accs = Vec::new();
-        for agg in [Aggregation::FedAvg, Aggregation::FedProx { mu: 0.05 }] {
+        // strategies selected by registry name — the same string axis
+        // config files and the CLI use
+        for agg_name in ["fedavg", "fedprox:0.05"] {
+            let agg = Aggregation::parse(agg_name)?;
             let mut cfg = accuracy_cfg(ds, quick);
             if *ds == "charlm" {
                 cfg.mock_runtime = false; // LM needs the real runtime

@@ -56,7 +56,7 @@ impl FaultInjector {
     fn rng_for(&self, round: u32, client: u32) -> Rng {
         Rng::new(
             self.seed
-                ^ ((round as u64) << 32 | client as u64).wrapping_mul(0xFA17_1B2D_9E37_79B9),
+                ^ (((round as u64) << 32) | client as u64).wrapping_mul(0xFA17_1B2D_9E37_79B9),
         )
     }
 

@@ -94,6 +94,13 @@ fn load_config(p: &fedhpc::util::argparse::Parsed) -> Result<ExperimentConfig> {
     if let Some(a) = p.get("artifacts") {
         cfg.artifacts_dir = a.to_string();
     }
+    // strategy overrides by registry name (see `fedhpc list`)
+    if let Some(a) = p.get("aggregation") {
+        cfg.aggregation = config::Aggregation::parse(a).context("--aggregation")?;
+    }
+    if let Some(o) = p.get("server-opt") {
+        cfg.server_opt = config::ServerOptKind::parse(o).context("--server-opt")?;
+    }
     config::validate(&cfg)?;
     Ok(cfg)
 }
@@ -106,6 +113,17 @@ fn train_args() -> Args {
         .opt("model", None, "override dataset/model")
         .opt("seed", None, "override experiment seed")
         .opt("artifacts", None, "artifacts directory")
+        .opt(
+            "aggregation",
+            None,
+            "aggregation strategy: fedavg | fedprox[:mu] | weighted[:scheme] | \
+             trimmed_mean[:frac] | coordinate_median",
+        )
+        .opt(
+            "server-opt",
+            None,
+            "server optimizer: sgd | fedavgm[:beta] | fedadam[:lr]",
+        )
         .opt("out", Some("results"), "output directory for reports")
         .flag("mock", "use the pure-Rust mock runtime")
 }
@@ -170,6 +188,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .opt("model", None, "override dataset/model")
         .opt("seed", None, "override seed")
         .opt("artifacts", None, "artifacts directory")
+        .opt("aggregation", None, "aggregation strategy by registry name")
+        .opt("server-opt", None, "server optimizer by registry name")
         .opt("out", Some("results"), "output directory")
         .opt("clients", None, "expected worker count (default: cluster size)")
         .flag("mock", "use the mock runtime")
@@ -195,7 +215,12 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         runtime,
         shard: dataset.eval.clone(),
     };
-    let mut orch = Orchestrator::new(cfg.clone(), server, traffic, initial, Some(eval));
+    let mut orch = Orchestrator::builder(cfg.clone())
+        .transport(server)
+        .traffic(traffic)
+        .initial_params(initial)
+        .eval(eval)
+        .build()?;
     let report = orch.run(Some((expected, Duration::from_secs(120))), &mut NoHooks)?;
     report.save(p.get("out").unwrap_or("results"))?;
     println!(
@@ -270,6 +295,14 @@ fn cmd_worker(rest: &[String]) -> Result<()> {
 
 fn cmd_list() -> Result<()> {
     println!("presets: quickstart, paper");
+    println!(
+        "\naggregation strategies: {}",
+        fedhpc::orchestrator::strategy::registry::strategy_names().join(", ")
+    );
+    println!(
+        "server optimizers: {}",
+        fedhpc::orchestrator::strategy::registry::server_opt_names().join(", ")
+    );
     println!("\nSKUs:");
     for sku in fedhpc::cluster::catalog() {
         println!(

@@ -1,14 +1,12 @@
-//! Aggregation engine (paper §4.4 + Algorithm 1 line 11).
+//! Streaming aggregation core (paper §4.4 + Algorithm 1 line 11).
 //!
-//! All strategies share one shape: `M_{r+1} = M_r + Σ_c w_c Δ_c` with
-//! weights normalized over the updates that actually arrived (partial
-//! aggregation is therefore "free": the weight mass renormalizes over
-//! the fastest k — Liu et al.'s FedPA behaviour).
-//!
-//! * FedAvg / FedProx: `w_c ∝ n_c` (server side identical; the proximal
-//!   term lives in the client objective).
-//! * Weighted(InverseLoss): `w_c ∝ n_c / (1 + loss_c)`.
-//! * Weighted(InverseVariance): `w_c ∝ n_c / (1 + Var(Δ_c))`.
+//! This module owns the *mechanics* of fold-then-normalize; the
+//! *policy* (how an update is weighted, whether a round must buffer)
+//! lives in [`super::strategy`]. All streaming strategies share one
+//! shape: `M_{r+1} = M_r + Σ_c w_c Δ_c` with weights normalized over
+//! the updates that actually arrived (partial aggregation is therefore
+//! "free": the weight mass renormalizes over the fastest k — Liu et
+//! al.'s FedPA behaviour).
 //!
 //! # Streaming invariant (fold-then-normalize)
 //!
@@ -18,15 +16,16 @@
 //! f64 accumulator of length P and its decoded delta can be freed on
 //! the spot, so the collection phase holds O(P) state instead of
 //! buffering all k deltas (O(k·P)). [`StreamingAggregator::finalize`]
-//! then applies the one normalization scalar `1/Σ raw_c` and adds the
-//! global model.
+//! then applies the one normalization scalar `1/Σ raw_c`, yielding the
+//! round's aggregated update Δ_agg ([`AggDelta`]); a
+//! [`super::strategy::ServerOpt`] turns that into the new global model.
 //!
 //! Determinism: per element, additions happen in arrival order and the
 //! parallel fold partitions elements (never splits one element's
 //! additions across threads), so for a fixed arrival order the result
 //! is bit-identical regardless of thread count — and the batch
-//! [`aggregate`] is a thin wrapper that folds its slice in order
-//! through the same code path, pinning batch/streaming equivalence.
+//! [`aggregate`] folds its slice in order through the same code path,
+//! pinning batch/streaming equivalence.
 //!
 //! Cost of streaming: each fold streams the full 8·P-byte accumulator
 //! once, so a k-client round moves ~k·16P bytes of accumulator traffic
@@ -36,8 +35,9 @@
 //! end-of-round stall disappears); `benches/hotpath_streaming.rs`
 //! measures both sides against the old blocked kernel.
 
+use super::strategy::{registry, RoundAggregator, SgdServer};
 use crate::cluster::NodeId;
-use crate::config::{Aggregation, WeightScheme};
+use crate::config::Aggregation;
 use anyhow::{bail, Result};
 
 /// One client's contribution.
@@ -51,7 +51,7 @@ pub struct AggInput {
     pub update_var: f32,
 }
 
-/// Aggregation result.
+/// Aggregation result (after the server optimizer is applied).
 #[derive(Debug, Clone)]
 pub struct AggOutcome {
     pub new_params: Vec<f32>,
@@ -61,12 +61,30 @@ pub struct AggOutcome {
     pub mean_train_loss: f64,
 }
 
+/// A finalized round aggregate *before* the server optimizer runs: the
+/// f64 aggregated update Δ_agg plus per-round bookkeeping. Every
+/// strategy — streaming or buffered — produces one of these; a
+/// [`super::strategy::ServerOpt`] maps `(M_r, Δ_agg) → M_{r+1}`.
+#[derive(Debug, Clone)]
+pub struct AggDelta {
+    /// The aggregated update Δ_agg, in f64 (cast to f32 only after the
+    /// server optimizer has combined it with the global model).
+    pub delta: Vec<f64>,
+    /// Normalized weight per contributing client, in arrival order.
+    pub weights: Vec<(NodeId, f64)>,
+    /// Sample-weighted mean train loss across contributors.
+    pub mean_train_loss: f64,
+}
+
 /// Streaming aggregation state: O(P) regardless of how many clients
 /// report (the collection loop folds each decoded delta the moment it
 /// arrives and frees it — see the module docs for the invariant).
+///
+/// Weight-agnostic: the caller (normally a
+/// [`super::strategy::RoundAggregator`]) supplies each update's raw
+/// weight, so one kernel serves every streaming strategy.
 #[derive(Debug)]
 pub struct StreamingAggregator {
-    strategy: Aggregation,
     /// Unnormalized running sum `Σ raw_c·Δ_c` in f64 — the only
     /// parameter-sized state held during collection.
     acc: Vec<f64>,
@@ -81,9 +99,8 @@ pub struct StreamingAggregator {
 
 impl StreamingAggregator {
     /// Start a round's aggregation for a model of `n_params` entries.
-    pub fn new(n_params: usize, strategy: Aggregation) -> Self {
+    pub fn new(n_params: usize) -> Self {
         StreamingAggregator {
-            strategy,
             acc: vec![0f64; n_params],
             raw: Vec::new(),
             total_weight: 0.0,
@@ -97,25 +114,11 @@ impl StreamingAggregator {
         self.raw.len()
     }
 
-    /// Raw (unnormalized) weight of one update under `strategy`.
-    fn raw_weight(strategy: Aggregation, input: &AggInput) -> f64 {
-        let n = input.n_samples.max(1) as f64;
-        match strategy {
-            Aggregation::FedAvg | Aggregation::FedProx { .. } => n,
-            Aggregation::Weighted(WeightScheme::DataSize) => n,
-            Aggregation::Weighted(WeightScheme::InverseLoss) => {
-                n / (1.0 + input.train_loss.max(0.0) as f64)
-            }
-            Aggregation::Weighted(WeightScheme::InverseVariance) => {
-                n / (1.0 + input.update_var.max(0.0) as f64)
-            }
-        }
-    }
-
-    /// Fold one arriving update into the accumulator. The caller can
-    /// (and the orchestrator does) drop the decoded delta immediately
-    /// afterwards — nothing of it is retained.
-    pub fn fold(&mut self, input: &AggInput) -> Result<()> {
+    /// Fold one arriving update with raw (unnormalized) weight `w` into
+    /// the accumulator. The caller can (and the orchestrator does) drop
+    /// the decoded delta immediately afterwards — nothing of it is
+    /// retained.
+    pub fn fold(&mut self, input: &AggInput, w: f64) -> Result<()> {
         if input.delta.len() != self.acc.len() {
             bail!(
                 "aggregate: client {} delta length {} != {}",
@@ -124,7 +127,12 @@ impl StreamingAggregator {
                 self.acc.len()
             );
         }
-        let w = Self::raw_weight(self.strategy, input);
+        if w.is_nan() || w.is_infinite() || w < 0.0 {
+            bail!(
+                "aggregate: invalid weight {w} for client {}",
+                input.client
+            );
+        }
         let delta = &input.delta;
         // parallel across disjoint element ranges; each element gets
         // exactly one addition per fold, so the value is independent of
@@ -144,46 +152,37 @@ impl StreamingAggregator {
         Ok(())
     }
 
-    /// Apply the single normalization scalar and produce the new global
-    /// model: `M_{r+1} = M_r + acc / Σ raw_c`.
-    pub fn finalize(self, global: &[f32]) -> Result<AggOutcome> {
+    /// Apply the single normalization scalar, producing the round's
+    /// aggregated update `Δ_agg = acc / Σ raw_c`.
+    pub fn finalize(self) -> Result<AggDelta> {
         if self.raw.is_empty() {
             bail!("aggregate: no updates to aggregate");
         }
-        if global.len() != self.acc.len() {
-            bail!(
-                "aggregate: global length {} != {}",
-                global.len(),
-                self.acc.len()
-            );
-        }
         let total = self.total_weight;
-        if !(total > 0.0) {
+        if total.is_nan() || total <= 0.0 {
             bail!("aggregate: degenerate weights (total {total})");
         }
-        let acc = self.acc;
-        let mut new_params = vec![0f32; acc.len()];
-        crate::util::parallel::par_chunks_mut(&mut new_params, 256 * 1024, |offset, chunk| {
-            let a = &acc[offset..offset + chunk.len()];
-            let g = &global[offset..offset + chunk.len()];
-            for ((out, &av), &gv) in chunk.iter_mut().zip(a).zip(g) {
-                *out = (gv as f64 + av / total) as f32;
+        let mut delta = self.acc;
+        crate::util::parallel::par_chunks_mut(&mut delta, 256 * 1024, |_offset, chunk| {
+            for a in chunk.iter_mut() {
+                *a /= total;
             }
         });
-        Ok(AggOutcome {
-            new_params,
+        Ok(AggDelta {
+            delta,
             weights: self.raw.iter().map(|&(c, w)| (c, w / total)).collect(),
             mean_train_loss: self.loss_weighted / self.n_total,
         })
     }
 }
 
-/// Aggregate updates into new global parameters.
+/// Aggregate a batch of updates into new global parameters with a
+/// plain SGD server step.
 ///
-/// Thin wrapper over [`StreamingAggregator`]: the slice is folded in
-/// order through the exact streaming code path, so batch and streaming
-/// results are bit-identical by construction for the same arrival
-/// order.
+/// Thin wrapper over [`super::strategy::RoundAggregator`]: the slice is
+/// folded in order through the exact streaming (or buffered) code
+/// path, so batch and streaming results are bit-identical by
+/// construction for the same arrival order.
 pub fn aggregate(
     global: &[f32],
     inputs: &[AggInput],
@@ -192,16 +191,17 @@ pub fn aggregate(
     if inputs.is_empty() {
         bail!("aggregate: no updates to aggregate");
     }
-    let mut agg = StreamingAggregator::new(global.len(), strategy);
+    let mut agg = RoundAggregator::new(registry::strategy_from_config(&strategy), global.len());
     for input in inputs {
         agg.fold(input)?;
     }
-    agg.finalize(global)
+    agg.finalize(global, &mut SgdServer)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::WeightScheme;
 
     fn input(client: NodeId, delta: Vec<f32>, n: u64, loss: f32, var: f32) -> AggInput {
         AggInput {
@@ -242,6 +242,8 @@ mod tests {
             Aggregation::Weighted(WeightScheme::DataSize),
             Aggregation::Weighted(WeightScheme::InverseLoss),
             Aggregation::Weighted(WeightScheme::InverseVariance),
+            Aggregation::TrimmedMean { trim_frac: 0.25 },
+            Aggregation::CoordinateMedian,
         ] {
             let out = aggregate(
                 &global,
@@ -328,6 +330,11 @@ mod tests {
         .is_err());
     }
 
+    /// The pre-refactor pinned behaviour: for every streaming strategy,
+    /// folding through a [`RoundAggregator`] one update at a time is
+    /// bit-identical to the batch wrapper — and both match the
+    /// closed-form `M + Σ raw·Δ / Σ raw` the old enum-matched
+    /// aggregator computed.
     #[test]
     fn streaming_fold_matches_batch_bitwise() {
         use crate::util::rng::Rng;
@@ -347,16 +354,18 @@ mod tests {
             .collect();
         for strat in [
             Aggregation::FedAvg,
+            Aggregation::FedProx { mu: 0.1 },
+            Aggregation::Weighted(WeightScheme::DataSize),
             Aggregation::Weighted(WeightScheme::InverseLoss),
             Aggregation::Weighted(WeightScheme::InverseVariance),
         ] {
             let batch = aggregate(&global, &inputs, strat).unwrap();
-            let mut agg = StreamingAggregator::new(p, strat);
+            let mut agg = RoundAggregator::new(registry::strategy_from_config(&strat), p);
             for i in &inputs {
                 agg.fold(i).unwrap();
                 assert!(agg.n_updates() <= inputs.len());
             }
-            let streamed = agg.finalize(&global).unwrap();
+            let streamed = agg.finalize(&global, &mut SgdServer).unwrap();
             for (a, b) in batch.new_params.iter().zip(&streamed.new_params) {
                 assert_eq!(a.to_bits(), b.to_bits(), "{strat:?} diverged");
             }
@@ -365,21 +374,58 @@ mod tests {
                 batch.mean_train_loss.to_bits(),
                 streamed.mean_train_loss.to_bits()
             );
+
+            // pre-refactor reference: raw weights exactly as the old
+            // enum-matched StreamingAggregator computed them
+            let raw: Vec<f64> = inputs
+                .iter()
+                .map(|i| {
+                    let n = i.n_samples.max(1) as f64;
+                    match strat {
+                        Aggregation::Weighted(WeightScheme::InverseLoss) => {
+                            n / (1.0 + i.train_loss.max(0.0) as f64)
+                        }
+                        Aggregation::Weighted(WeightScheme::InverseVariance) => {
+                            n / (1.0 + i.update_var.max(0.0) as f64)
+                        }
+                        _ => n,
+                    }
+                })
+                .collect();
+            let total: f64 = raw.iter().sum();
+            for j in 0..p {
+                let mut acc = 0f64;
+                for (i, &w) in inputs.iter().zip(&raw) {
+                    acc += w * i.delta[j] as f64;
+                }
+                let want = (global[j] as f64 + acc / total) as f32;
+                assert_eq!(
+                    want.to_bits(),
+                    batch.new_params[j].to_bits(),
+                    "{strat:?} diverged from pre-refactor formula at {j}"
+                );
+            }
         }
     }
 
     #[test]
-    fn streaming_rejects_bad_lengths_and_empty() {
-        let mut agg = StreamingAggregator::new(3, Aggregation::FedAvg);
-        assert!(agg.fold(&input(0, vec![1.0], 1, 0.0, 0.0)).is_err());
+    fn streaming_rejects_bad_lengths_weights_and_empty() {
+        let mut agg = StreamingAggregator::new(3);
+        assert!(agg.fold(&input(0, vec![1.0], 1, 0.0, 0.0), 1.0).is_err());
         assert_eq!(agg.n_updates(), 0);
-        assert!(StreamingAggregator::new(3, Aggregation::FedAvg)
-            .finalize(&[0.0; 3])
+        assert!(agg
+            .fold(&input(0, vec![1.0, 2.0, 3.0], 1, 0.0, 0.0), f64::NAN)
             .is_err());
-        let mut agg = StreamingAggregator::new(2, Aggregation::FedAvg);
+        assert!(agg
+            .fold(&input(0, vec![1.0, 2.0, 3.0], 1, 0.0, 0.0), -1.0)
+            .is_err());
+        assert!(StreamingAggregator::new(3).finalize().is_err());
+        // a server opt rejects a global/delta length mismatch
+        let strategy = registry::strategy_from_config(&Aggregation::FedAvg);
+        let mut agg = RoundAggregator::new(strategy, 2);
         agg.fold(&input(0, vec![1.0, 2.0], 1, 0.0, 0.0)).unwrap();
         assert_eq!(agg.n_updates(), 1);
-        assert!(agg.finalize(&[0.0; 3]).is_err());
+        assert!(agg.finalize(&[0.0; 3], &mut SgdServer).is_err());
     }
 
     #[test]

@@ -5,18 +5,27 @@
 //!
 //! * [`registry`] — client profiles + reliability/timing history.
 //! * [`selection`] — adaptive client selection (paper §4.1).
-//! * [`aggregate`] — FedAvg / FedProx / weighted + partial-k (§4.2, §4.4).
+//! * [`aggregate`] — the streaming fold-then-normalize core (§4.2, §4.4).
+//! * [`strategy`] — pluggable aggregation strategies (FedAvg/FedProx/
+//!   weighted/robust), server optimizers (FedAvgM/FedAdam) and the
+//!   name-keyed registry that makes them a configuration axis.
 //! * [`convergence`] — Algorithm 1 line 13.
-//! * [`server`] — the round loop over a [`ServerTransport`].
+//! * [`server`] — the round loop over a [`crate::network::ServerTransport`],
+//!   assembled via [`OrchestratorBuilder`].
 
-mod aggregate;
+pub mod aggregate;
 mod convergence;
 mod registry;
 mod selection;
 mod server;
+pub mod strategy;
 
-pub use aggregate::{aggregate, AggInput, AggOutcome, StreamingAggregator};
+pub use aggregate::{aggregate, AggDelta, AggInput, AggOutcome, StreamingAggregator};
 pub use convergence::ConvergenceTracker;
 pub use registry::{ClientRecord, ClientRegistry};
 pub use selection::select_clients;
-pub use server::{mask_seed, EvalHarness, NoHooks, Orchestrator, OrchestratorHooks, RoundOutcome};
+pub use server::{
+    mask_seed, EvalHarness, NoHooks, Orchestrator, OrchestratorBuilder, OrchestratorHooks,
+    RoundOutcome,
+};
+pub use strategy::{AggStrategy, RoundAggregator, ServerOpt};

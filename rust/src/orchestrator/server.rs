@@ -2,36 +2,45 @@
 //!
 //! Generic over [`ServerTransport`], so the same loop drives in-process
 //! simulations, multi-thread runs and multi-process TCP deployments.
-//! Per round: select → broadcast → collect-with-deadline/partial-k →
-//! aggregate → evaluate → convergence check. Fault tolerance: clients
-//! that miss the deadline or vanish are simply skipped (their registry
-//! reliability drops, which feeds back into selection).
+//! Orchestrators are assembled with [`OrchestratorBuilder`]
+//! (`Orchestrator::builder(cfg).transport(..).strategy(..)…build()`),
+//! which defaults the aggregation strategy and server optimizer from
+//! the config's registry names.
 //!
-//! Scaling shape of one round (the two limits OmniFed and the
-//! cross-facility FL literature identify on FL servers):
+//! Per round, [`Orchestrator::run_round`] runs three phases:
 //!
-//! * **Broadcast fan-out** — the round's model payload is serialized
-//!   exactly once ([`crate::network::pre_encode_dense`]) and every
-//!   per-client `RoundStart` shares the same `Arc`'d bytes; only the
-//!   small per-client header (mask seed etc.) differs.
-//! * **Collection memory** — arriving updates are folded straight into
-//!   a [`StreamingAggregator`] (fold-then-normalize, see the
-//!   `orchestrator::aggregate` module docs) and each decoded delta is
-//!   freed on the spot, so collection holds O(P) state, not O(k·P).
+//! 1. **broadcast** — select clients, serialize the model payload
+//!    exactly once ([`crate::network::pre_encode_dense`]) and share
+//!    the `Arc`'d bytes across every per-client `RoundStart`. A failed
+//!    send excludes that client from the expected-reporter count (it
+//!    never got the model, so waiting for it would just burn the
+//!    deadline) — it is counted in `dropped`, not `deadline_misses`.
+//! 2. **collect** — fold arriving updates into a
+//!    [`RoundAggregator`] under the deadline / partial-k stopping
+//!    rule. Streaming strategies hold O(P) state and free each decoded
+//!    delta on the spot; buffered (order-statistic) strategies keep
+//!    the round's deltas alive (see `orchestrator::strategy`).
+//! 3. **finalize** — normalize into Δ_agg, apply the server optimizer
+//!    `M_{r+1} = opt(M_r, Δ_agg)`, evaluate, track convergence.
+//!
+//! Fault tolerance: clients that miss the deadline or vanish are
+//! simply skipped (their registry reliability drops, which feeds back
+//! into selection).
 
-use super::aggregate::{AggInput, StreamingAggregator};
+use super::aggregate::AggInput;
 use super::convergence::ConvergenceTracker;
 use super::registry::ClientRegistry;
 use super::selection::select_clients;
+use super::strategy::{registry as strategy_registry, AggStrategy, RoundAggregator, ServerOpt};
 use crate::cluster::NodeId;
 use crate::compress::{decompress, Encoded};
 use crate::config::ExperimentConfig;
 use crate::data::{Batch, Shard};
 use crate::metrics::{RoundMetrics, TrainingReport};
-use crate::network::{pre_encode_dense, Msg, ServerTransport, TrafficLog};
+use crate::network::{pre_encode_dense, Msg, ServerTransport, TrafficLog, UpdateStats};
 use crate::runtime::{EvalOut, ModelRuntime};
 use crate::util::rng::Rng;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::HashSet;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -67,8 +76,16 @@ impl EvalHarness {
     }
 }
 
-/// Hooks for experiment harnesses (ablation logging etc.).
+/// Hooks for experiment harnesses (ablation logging, live dashboards).
 pub trait OrchestratorHooks {
+    /// Called once per round, after selection and before broadcast.
+    fn on_round_start(&mut self, _round: u32, _selected: &[NodeId]) {}
+
+    /// Called for every client update the aggregator accepted, as it
+    /// arrives (rejected updates — undecodable or refused by the
+    /// strategy — are not reported here).
+    fn on_update(&mut self, _round: u32, _client: NodeId, _stats: &UpdateStats) {}
+
     /// Called after each round with its metrics.
     fn on_round(&mut self, _m: &RoundMetrics) {}
 }
@@ -84,7 +101,118 @@ pub struct RoundOutcome {
     pub converged: bool,
 }
 
-/// The central orchestrator.
+/// Typed builder for [`Orchestrator`] — the one place orchestration
+/// policy is assembled. `transport` and `initial_params` are required;
+/// everything else defaults from the config (`strategy` / `server_opt`
+/// from the registry names in `cfg.aggregation` / `cfg.server_opt`,
+/// fresh traffic log, evaluation every round).
+pub struct OrchestratorBuilder<T: ServerTransport> {
+    cfg: ExperimentConfig,
+    transport: Option<T>,
+    traffic: Option<Arc<TrafficLog>>,
+    initial_params: Option<Vec<f32>>,
+    eval: Option<EvalHarness>,
+    eval_every: u32,
+    strategy: Option<Arc<dyn AggStrategy>>,
+    server_opt: Option<Box<dyn ServerOpt>>,
+}
+
+impl<T: ServerTransport> OrchestratorBuilder<T> {
+    pub fn new(cfg: ExperimentConfig) -> Self {
+        OrchestratorBuilder {
+            cfg,
+            transport: None,
+            traffic: None,
+            initial_params: None,
+            eval: None,
+            eval_every: 1,
+            strategy: None,
+            server_opt: None,
+        }
+    }
+
+    /// Server endpoint the round loop drives (required).
+    pub fn transport(mut self, transport: T) -> Self {
+        self.transport = Some(transport);
+        self
+    }
+
+    /// Traffic accounting shared with the transport (defaults to a
+    /// fresh log — pass the transport's log to see real byte counts).
+    pub fn traffic(mut self, traffic: Arc<TrafficLog>) -> Self {
+        self.traffic = Some(traffic);
+        self
+    }
+
+    /// Initial global model `M_0` (required).
+    pub fn initial_params(mut self, params: Vec<f32>) -> Self {
+        self.initial_params = Some(params);
+        self
+    }
+
+    /// Centralized evaluation harness (optional; without one, rounds
+    /// report no accuracy).
+    pub fn eval(mut self, eval: EvalHarness) -> Self {
+        self.eval = Some(eval);
+        self
+    }
+
+    /// Evaluate every `n` rounds (default 1 = every round).
+    ///
+    /// **`0` means never evaluate.** This is the single home of that
+    /// convention: `run_round` consults it through one predicate and
+    /// a regression test pins the zero case.
+    pub fn eval_every(mut self, n: u32) -> Self {
+        self.eval_every = n;
+        self
+    }
+
+    /// Override the aggregation strategy (defaults to the registry
+    /// instance for `cfg.aggregation`).
+    pub fn strategy(mut self, strategy: Arc<dyn AggStrategy>) -> Self {
+        self.strategy = Some(strategy);
+        self
+    }
+
+    /// Override the server optimizer (defaults to the registry
+    /// instance for `cfg.server_opt`).
+    pub fn server_opt(mut self, server_opt: Box<dyn ServerOpt>) -> Self {
+        self.server_opt = Some(server_opt);
+        self
+    }
+
+    pub fn build(self) -> Result<Orchestrator<T>> {
+        let transport = self
+            .transport
+            .ok_or_else(|| anyhow!("OrchestratorBuilder: transport(..) is required"))?;
+        let params = self
+            .initial_params
+            .ok_or_else(|| anyhow!("OrchestratorBuilder: initial_params(..) is required"))?;
+        let strategy = self
+            .strategy
+            .unwrap_or_else(|| strategy_registry::strategy_from_config(&self.cfg.aggregation));
+        let server_opt = self
+            .server_opt
+            .unwrap_or_else(|| strategy_registry::server_opt_from_config(&self.cfg.server_opt));
+        let traffic = self.traffic.unwrap_or_else(|| Arc::new(TrafficLog::new()));
+        let rng = Rng::new(self.cfg.seed ^ 0x0C5);
+        Ok(Orchestrator {
+            cfg: self.cfg,
+            transport,
+            registry: ClientRegistry::new(),
+            traffic,
+            eval: self.eval,
+            rng,
+            params,
+            model_version: 0,
+            strategy,
+            server_opt,
+            eval_every: self.eval_every,
+        })
+    }
+}
+
+/// The central orchestrator. Assemble with [`Orchestrator::builder`].
 pub struct Orchestrator<T: ServerTransport> {
     cfg: ExperimentConfig,
     transport: T,
@@ -94,30 +222,23 @@ pub struct Orchestrator<T: ServerTransport> {
     rng: Rng,
     params: Vec<f32>,
     model_version: u32,
-    /// Evaluate every N rounds (1 = every round).
-    pub eval_every: u32,
+    strategy: Arc<dyn AggStrategy>,
+    server_opt: Box<dyn ServerOpt>,
+    eval_every: u32,
+}
+
+/// What the collect phase hands to finalize.
+struct CollectOutcome {
+    /// Clients the broadcast actually reached (send succeeded).
+    reached: Vec<NodeId>,
+    /// Clients that reported (good or bad update) before cutoff.
+    reported: HashSet<NodeId>,
 }
 
 impl<T: ServerTransport> Orchestrator<T> {
-    pub fn new(
-        cfg: ExperimentConfig,
-        transport: T,
-        traffic: Arc<TrafficLog>,
-        initial_params: Vec<f32>,
-        eval: Option<EvalHarness>,
-    ) -> Self {
-        let rng = Rng::new(cfg.seed ^ 0x0C5);
-        Orchestrator {
-            cfg,
-            transport,
-            registry: ClientRegistry::new(),
-            traffic,
-            eval,
-            rng,
-            params: initial_params,
-            model_version: 0,
-            eval_every: 1,
-        }
+    /// Start building an orchestrator over `cfg`.
+    pub fn builder(cfg: ExperimentConfig) -> OrchestratorBuilder<T> {
+        OrchestratorBuilder::new(cfg)
     }
 
     pub fn params(&self) -> &[f32] {
@@ -126,6 +247,11 @@ impl<T: ServerTransport> Orchestrator<T> {
 
     pub fn registry(&self) -> &ClientRegistry {
         &self.registry
+    }
+
+    /// The aggregation strategy rounds run under.
+    pub fn strategy(&self) -> &dyn AggStrategy {
+        self.strategy.as_ref()
     }
 
     /// Phase 0: absorb registrations until `expected` clients joined or
@@ -167,13 +293,19 @@ impl<T: ServerTransport> Orchestrator<T> {
         Ok(())
     }
 
-    /// Run one round `r`. Blocking; returns metrics + convergence info.
-    pub fn run_round(
-        &mut self,
-        round: u32,
-        tracker: &mut ConvergenceTracker,
-    ) -> Result<RoundOutcome> {
-        let t_round = Instant::now();
+    /// Whether round `round` gets a centralized evaluation
+    /// (`eval_every == 0` = never — see
+    /// [`OrchestratorBuilder::eval_every`]).
+    fn should_eval(&self, round: u32) -> bool {
+        self.eval_every != 0 && round % self.eval_every == 0
+    }
+
+    fn round_deadline_ms(&self) -> u64 {
+        self.cfg.straggler.deadline_ms.unwrap_or(3_600_000)
+    }
+
+    /// Select this round's cohort (Algorithm 1 line 4).
+    fn select_phase(&mut self, round: u32) -> Result<Vec<NodeId>> {
         let available = self.registry.ids();
         if available.is_empty() {
             bail!("round {round}: no clients registered");
@@ -190,44 +322,63 @@ impl<T: ServerTransport> Orchestrator<T> {
             bail!("round {round}: selection returned no clients");
         }
         log::debug!("round {round}: selected {selected:?}");
+        Ok(selected)
+    }
 
-        let deadline_ms = self.cfg.straggler.deadline_ms.unwrap_or(3_600_000);
-        // Algorithm 1 line 5: broadcast the global model. The payload
-        // is serialized exactly once per round; each send only clones
-        // the Arc (inproc) or re-writes the shared bytes (tcp).
+    /// Phase 1 (Algorithm 1 line 5): broadcast the global model. The
+    /// payload is serialized exactly once per round; each send only
+    /// clones the Arc (inproc) or re-writes the shared bytes (tcp).
+    /// Returns the clients the model actually reached — a failed send
+    /// is excluded from the expected-reporter count so collection
+    /// never waits out the deadline for a client that never got the
+    /// model (it still counts in `dropped`).
+    fn broadcast_phase(&mut self, round: u32, selected: &[NodeId]) -> Vec<NodeId> {
+        let deadline_ms = self.round_deadline_ms();
         let shared_params = Encoded::PreEncoded(pre_encode_dense(&self.params));
-        for &c in &selected {
+        let mut reached = Vec::with_capacity(selected.len());
+        for &c in selected {
             let msg = Msg::RoundStart {
                 round,
                 model_version: self.model_version,
                 deadline_ms,
                 lr: self.cfg.train.lr,
-                mu: self.cfg.aggregation.mu(),
+                mu: self.strategy.mu(),
                 local_epochs: self.cfg.train.local_epochs as u32,
                 params: shared_params.clone(),
                 mask_seed: mask_seed(self.cfg.seed, round, c),
                 compression: self.cfg.compression,
             };
-            if let Err(e) = self.transport.send_to(c, &msg) {
-                log::warn!("round {round}: broadcast to {c} failed: {e}");
+            match self.transport.send_to(c, &msg) {
+                Ok(()) => reached.push(c),
+                Err(e) => log::warn!(
+                    "round {round}: broadcast to {c} failed ({e}) — excluded from collection"
+                ),
             }
         }
-        drop(shared_params);
+        reached
+    }
 
-        // Algorithm 1 lines 6–10: collect updates, folding each one
-        // into the streaming aggregator as it arrives — at most one
-        // decoded delta is alive at any time (O(P), not O(k·P))
+    /// Phase 2 (Algorithm 1 lines 6–10): collect updates under the
+    /// deadline / partial-k stopping rule, folding each one into the
+    /// aggregator as it arrives.
+    fn collect_phase(
+        &mut self,
+        round: u32,
+        t_round: Instant,
+        reached: Vec<NodeId>,
+        agg: &mut RoundAggregator,
+        hooks: &mut dyn OrchestratorHooks,
+    ) -> Result<CollectOutcome> {
         let partial_k = self
             .cfg
             .straggler
             .partial_k
             .unwrap_or(usize::MAX)
-            .min(selected.len());
-        let deadline = t_round + Duration::from_millis(deadline_ms);
-        let selected_set: HashSet<NodeId> = selected.iter().copied().collect();
-        let mut reported: HashSet<NodeId> = HashSet::with_capacity(selected.len());
-        let mut agg = StreamingAggregator::new(self.params.len(), self.cfg.aggregation);
-        while reported.len() < selected.len() && agg.n_updates() < partial_k {
+            .min(reached.len());
+        let deadline = t_round + Duration::from_millis(self.round_deadline_ms());
+        let reached_set: HashSet<NodeId> = reached.iter().copied().collect();
+        let mut reported: HashSet<NodeId> = HashSet::with_capacity(reached.len());
+        while reported.len() < reached.len() && agg.n_updates() < partial_k {
             let now = Instant::now();
             if now >= deadline {
                 break;
@@ -247,18 +398,24 @@ impl<T: ServerTransport> Orchestrator<T> {
                         log::debug!("stale update from {client} for round {r}");
                         continue;
                     }
-                    if !selected_set.contains(&client) || reported.contains(&client) {
+                    if !reached_set.contains(&client) || reported.contains(&client) {
                         continue;
                     }
-                    match decompress(&delta, self.params.len()) {
-                        Ok(dense) => {
-                            agg.fold(&AggInput {
-                                client,
-                                delta: dense,
-                                n_samples: stats.n_samples,
-                                train_loss: stats.train_loss,
-                                update_var: stats.update_var,
-                            })?;
+                    // a bad update (undecodable, or rejected by the
+                    // strategy — e.g. a custom weight() returning
+                    // NaN) skips this client, never aborts the round
+                    let folded = decompress(&delta, self.params.len()).and_then(|dense| {
+                        agg.fold(&AggInput {
+                            client,
+                            delta: dense,
+                            n_samples: stats.n_samples,
+                            train_loss: stats.train_loss,
+                            update_var: stats.update_var,
+                        })
+                    });
+                    match folded {
+                        Ok(()) => {
+                            hooks.on_update(round, client, &stats);
                             reported.insert(client);
                             self.registry.report_success(
                                 client,
@@ -276,32 +433,51 @@ impl<T: ServerTransport> Orchestrator<T> {
                 other => self.handle_control(from, other)?,
             }
         }
+        Ok(CollectOutcome { reached, reported })
+    }
 
-        // fault accounting: selected clients that never reported
+    /// Phase 3 (Algorithm 1 lines 11–13): fault accounting, finalize
+    /// Δ_agg, server-optimizer step, evaluation, convergence.
+    fn finalize_phase(
+        &mut self,
+        round: u32,
+        t_round: Instant,
+        selected: &[NodeId],
+        collect: CollectOutcome,
+        agg: RoundAggregator,
+        tracker: &mut ConvergenceTracker,
+    ) -> Result<RoundOutcome> {
+        let CollectOutcome { reached, reported } = collect;
+        // fault accounting: a reached client that never reported is a
+        // deadline miss; every selected non-reporter (including failed
+        // broadcasts) feeds the registry's reliability signal
+        let reached_set: HashSet<NodeId> = reached.iter().copied().collect();
         let mut deadline_misses = 0u32;
-        for &c in &selected {
+        for &c in selected {
             if !reported.contains(&c) {
                 self.registry.report_failure(c, round);
-                deadline_misses += 1;
+                if reached_set.contains(&c) {
+                    deadline_misses += 1;
+                }
             }
         }
 
-        // Algorithm 1 lines 11–12: finalize the aggregate (one
-        // normalization scalar) + update the global model. On a
-        // zero-update round the old model is kept as-is — no clone.
+        // finalize the aggregate (one normalization scalar / order
+        // statistic) + server-optimizer model step. On a zero-update
+        // round the old model is kept as-is — no clone, and the
+        // optimizer state does not advance.
         let n_updates = agg.n_updates();
         let (new_params, mean_loss) = if n_updates == 0 {
             log::warn!("round {round}: zero updates — keeping old model");
             (None, f64::NAN)
         } else {
-            let out = agg.finalize(&self.params)?;
+            let out = agg.finalize(&self.params, self.server_opt.as_mut())?;
             (Some(out.new_params), out.mean_train_loss)
         };
         let current: &[f32] = new_params.as_deref().unwrap_or(&self.params);
 
-        // evaluate (centralized, §5.3); eval_every == 0 means never
-        let do_eval = self.eval_every != 0 && round % self.eval_every == 0;
-        let (eval_accuracy, eval_loss) = if do_eval {
+        // evaluate (centralized, §5.3)
+        let (eval_accuracy, eval_loss) = if self.should_eval(round) {
             match &self.eval {
                 Some(h) => {
                     let e = h.evaluate(current)?;
@@ -321,7 +497,7 @@ impl<T: ServerTransport> Orchestrator<T> {
         self.model_version = round + 1;
 
         // notify round end (selected only; broadcast would also be fine)
-        for &c in &selected {
+        for &c in selected {
             let _ = self.transport.send_to(
                 c,
                 &Msg::RoundEnd {
@@ -351,6 +527,23 @@ impl<T: ServerTransport> Orchestrator<T> {
         })
     }
 
+    /// Run one round `r`: broadcast → collect → finalize. Blocking;
+    /// returns metrics + convergence info.
+    pub fn run_round(
+        &mut self,
+        round: u32,
+        tracker: &mut ConvergenceTracker,
+        hooks: &mut dyn OrchestratorHooks,
+    ) -> Result<RoundOutcome> {
+        let t_round = Instant::now();
+        let selected = self.select_phase(round)?;
+        hooks.on_round_start(round, &selected);
+        let reached = self.broadcast_phase(round, &selected);
+        let mut agg = RoundAggregator::new(self.strategy.clone(), self.params.len());
+        let collect = self.collect_phase(round, t_round, reached, &mut agg, hooks)?;
+        self.finalize_phase(round, t_round, &selected, collect, agg, tracker)
+    }
+
     /// Full training run (Algorithm 1). Consumes registrations first if
     /// `wait_for` is given.
     pub fn run(
@@ -371,7 +564,7 @@ impl<T: ServerTransport> Orchestrator<T> {
             self.cfg.train.target_accuracy,
         );
         for round in 0..self.cfg.train.rounds as u32 {
-            let outcome = self.run_round(round, &mut tracker)?;
+            let outcome = self.run_round(round, &mut tracker, hooks)?;
             log::info!(
                 "round {round}: loss={:.4} acc={} reported={}/{} dur={:.2}s",
                 outcome.metrics.train_loss,
@@ -406,16 +599,17 @@ impl<T: ServerTransport> Orchestrator<T> {
 /// Federated-dropout mask seed for (experiment, round, client) — the
 /// client derives the identical mask from this.
 pub fn mask_seed(exp_seed: u64, round: u32, client: NodeId) -> u64 {
-    exp_seed ^ ((round as u64) << 32 | client as u64).wrapping_mul(0x2545F4914F6CDD1D)
+    exp_seed ^ (((round as u64) << 32) | client as u64).wrapping_mul(0x2545F4914F6CDD1D)
 }
 
 #[cfg(test)]
 mod tests {
     use super::super::registry::test_profile;
     use super::*;
-    use crate::config::SelectionPolicy;
+    use crate::config::{Aggregation, SelectionPolicy};
     use crate::network::inproc::{InprocClient, InprocHub, InprocServer};
-    use crate::network::{ClientTransport, LinkShaper, UpdateStats};
+    use crate::network::{ClientTransport, LinkShaper};
+    use crate::orchestrator::strategy::FedAvgM;
 
     #[test]
     fn mask_seed_unique_per_round_and_client() {
@@ -450,7 +644,12 @@ mod tests {
         let clients: Vec<InprocClient> = (0..n)
             .map(|i| hub.add_client(i, LinkShaper::unshaped()))
             .collect();
-        let mut orch = Orchestrator::new(cfg, hub.server(), traffic, initial, None);
+        let mut orch = Orchestrator::builder(cfg)
+            .transport(hub.server())
+            .traffic(traffic)
+            .initial_params(initial)
+            .build()
+            .unwrap();
         for c in &clients {
             c.send(&Msg::Register {
                 client: c.id(),
@@ -489,12 +688,63 @@ mod tests {
     }
 
     #[test]
+    fn builder_requires_transport_and_params() {
+        let cfg = test_cfg(1);
+        assert!(Orchestrator::<InprocServer>::builder(cfg.clone())
+            .build()
+            .is_err());
+        let hub = InprocHub::new(Arc::new(TrafficLog::new()));
+        assert!(Orchestrator::builder(cfg)
+            .transport(hub.server())
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn builder_defaults_strategy_and_server_opt_from_config() {
+        let mut cfg = test_cfg(1);
+        cfg.aggregation = Aggregation::TrimmedMean { trim_frac: 0.2 };
+        let hub = InprocHub::new(Arc::new(TrafficLog::new()));
+        let orch = Orchestrator::builder(cfg)
+            .transport(hub.server())
+            .initial_params(vec![0f32; 2])
+            .build()
+            .unwrap();
+        assert_eq!(orch.strategy().name(), "trimmed_mean");
+        assert!(orch.strategy().needs_buffering());
+    }
+
+    #[test]
     fn eval_every_zero_means_never_evaluate() {
         // regression: `round % eval_every` used to divide by zero
-        let (mut orch, clients) = federation(test_cfg(1), 1, vec![0f32; 4]);
-        orch.eval_every = 0;
+        let (mut orch, clients) = {
+            let cfg = test_cfg(1);
+            let traffic = Arc::new(TrafficLog::new());
+            let hub = InprocHub::new(traffic.clone());
+            let clients: Vec<InprocClient> =
+                (0..1).map(|i| hub.add_client(i, LinkShaper::unshaped())).collect();
+            let mut orch = Orchestrator::builder(cfg)
+                .transport(hub.server())
+                .traffic(traffic)
+                .initial_params(vec![0f32; 4])
+                .eval_every(0)
+                .build()
+                .unwrap();
+            for c in &clients {
+                c.send(&Msg::Register {
+                    client: c.id(),
+                    profile: test_profile(1.0, 1e9),
+                })
+                .unwrap();
+            }
+            orch.wait_for_clients(1, Duration::from_secs(5)).unwrap();
+            for c in &clients {
+                c.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+            }
+            (orch, clients)
+        };
         clients[0].send(&update(0, 0, vec![1.0; 4])).unwrap();
-        let out = orch.run_round(0, &mut tracker()).unwrap();
+        let out = orch.run_round(0, &mut tracker(), &mut NoHooks).unwrap();
         assert_eq!(out.metrics.reported, 1);
         assert!(out.metrics.eval_accuracy.is_none());
     }
@@ -504,7 +754,7 @@ mod tests {
         let (mut orch, clients) = federation(test_cfg(1), 1, vec![0f32; 3]);
         clients[0].send(&update(0, 7, vec![9.0; 3])).unwrap(); // stale
         clients[0].send(&update(0, 0, vec![2.0; 3])).unwrap();
-        let out = orch.run_round(0, &mut tracker()).unwrap();
+        let out = orch.run_round(0, &mut tracker(), &mut NoHooks).unwrap();
         assert_eq!(out.metrics.reported, 1);
         assert_eq!(orch.params(), &[2.0f32; 3][..]);
     }
@@ -515,7 +765,7 @@ mod tests {
         clients[0].send(&update(0, 0, vec![2.0; 3])).unwrap();
         clients[0].send(&update(0, 0, vec![100.0; 3])).unwrap(); // dup
         clients[1].send(&update(1, 0, vec![4.0; 3])).unwrap();
-        let out = orch.run_round(0, &mut tracker()).unwrap();
+        let out = orch.run_round(0, &mut tracker(), &mut NoHooks).unwrap();
         assert_eq!(out.metrics.reported, 2);
         // (100·2 + 100·4) / 200 = 3; the duplicate never contributes
         assert_eq!(orch.params(), &[3.0f32; 3][..]);
@@ -526,7 +776,7 @@ mod tests {
         let (mut orch, clients) = federation(test_cfg(1), 2, vec![0f32; 3]);
         clients[0].send(&update(0, 0, vec![1.0; 3])).unwrap();
         clients[1].send(&update(1, 0, vec![2.0; 3])).unwrap();
-        let out = orch.run_round(0, &mut tracker()).unwrap();
+        let out = orch.run_round(0, &mut tracker(), &mut NoHooks).unwrap();
         assert_eq!(out.metrics.selected, 1);
         assert_eq!(out.metrics.reported, 1);
         // only the selected client (the one that got a RoundStart)
@@ -551,7 +801,7 @@ mod tests {
         clients[0].send(&update(0, 0, vec![2.0; 3])).unwrap();
         clients[1].send(&update(1, 0, vec![4.0; 3])).unwrap();
         clients[2].send(&update(2, 0, vec![1000.0; 3])).unwrap(); // too late
-        let out = orch.run_round(0, &mut tracker()).unwrap();
+        let out = orch.run_round(0, &mut tracker(), &mut NoHooks).unwrap();
         assert_eq!(out.metrics.selected, 3);
         assert_eq!(out.metrics.reported, 2);
         assert_eq!(out.metrics.dropped, 1);
@@ -566,7 +816,7 @@ mod tests {
         for c in &clients {
             c.send(&update(c.id(), 0, vec![1.0; 3])).unwrap();
         }
-        orch.run_round(0, &mut tracker()).unwrap();
+        orch.run_round(0, &mut tracker(), &mut NoHooks).unwrap();
         let mut arcs = Vec::new();
         for c in &clients {
             match c.recv_timeout(Duration::from_secs(1)).unwrap().unwrap() {
@@ -589,10 +839,158 @@ mod tests {
     #[test]
     fn zero_update_round_keeps_model_unchanged() {
         let (mut orch, _clients) = federation(test_cfg(1), 1, vec![1.5f32; 3]);
-        let out = orch.run_round(0, &mut tracker()).unwrap();
+        let out = orch.run_round(0, &mut tracker(), &mut NoHooks).unwrap();
         assert_eq!(out.metrics.reported, 0);
         assert_eq!(out.metrics.deadline_misses, 1);
         assert!(out.metrics.train_loss.is_nan());
         assert_eq!(orch.params(), &[1.5f32; 3][..]);
+    }
+
+    /// ISSUE satellite bugfix: a client whose broadcast send fails must
+    /// not count toward the expected-reporter count — before the fix,
+    /// collection waited out the whole round deadline for it.
+    #[test]
+    fn failed_broadcast_is_excluded_from_expected_reporters() {
+        let mut cfg = test_cfg(2);
+        // long deadline: the pre-fix behaviour would stall here
+        cfg.straggler.deadline_ms = Some(30_000);
+        let (mut orch, mut clients) = federation(cfg, 2, vec![0f32; 3]);
+        // client 1 disconnects: its channel closes, so send_to fails
+        drop(clients.pop().unwrap());
+        clients[0].send(&update(0, 0, vec![2.0; 3])).unwrap();
+        let t0 = Instant::now();
+        let out = orch.run_round(0, &mut tracker(), &mut NoHooks).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "collection waited for a client that never got the model"
+        );
+        assert_eq!(out.metrics.selected, 2);
+        assert_eq!(out.metrics.reported, 1);
+        // the unreachable client is dropped, but not a deadline miss
+        assert_eq!(out.metrics.dropped, 1);
+        assert_eq!(out.metrics.deadline_misses, 0);
+        assert_eq!(orch.params(), &[2.0f32; 3][..]);
+    }
+
+    #[test]
+    fn hooks_observe_round_start_and_updates() {
+        #[derive(Default)]
+        struct Counting {
+            starts: Vec<(u32, usize)>,
+            updates: Vec<(u32, NodeId)>,
+            rounds: u32,
+        }
+        impl OrchestratorHooks for Counting {
+            fn on_round_start(&mut self, round: u32, selected: &[NodeId]) {
+                self.starts.push((round, selected.len()));
+            }
+            fn on_update(&mut self, round: u32, client: NodeId, stats: &UpdateStats) {
+                assert_eq!(stats.n_samples, 100);
+                self.updates.push((round, client));
+            }
+            fn on_round(&mut self, _m: &RoundMetrics) {
+                self.rounds += 1;
+            }
+        }
+        let (mut orch, clients) = federation(test_cfg(2), 2, vec![0f32; 3]);
+        clients[0].send(&update(0, 0, vec![2.0; 3])).unwrap();
+        clients[1].send(&update(1, 0, vec![4.0; 3])).unwrap();
+        let mut hooks = Counting::default();
+        orch.run_round(0, &mut tracker(), &mut hooks).unwrap();
+        assert_eq!(hooks.starts, vec![(0, 2)]);
+        assert_eq!(hooks.updates.len(), 2);
+        assert!(hooks.updates.iter().all(|&(r, _)| r == 0));
+        // on_round fires from run(), not run_round — untouched here
+        assert_eq!(hooks.rounds, 0);
+    }
+
+    #[test]
+    fn buffered_strategy_runs_through_the_round_loop() {
+        let mut cfg = test_cfg(3);
+        cfg.aggregation = Aggregation::CoordinateMedian;
+        let (mut orch, clients) = federation(cfg, 3, vec![0f32; 3]);
+        clients[0].send(&update(0, 0, vec![1.0; 3])).unwrap();
+        clients[1].send(&update(1, 0, vec![2.0; 3])).unwrap();
+        clients[2].send(&update(2, 0, vec![900.0; 3])).unwrap(); // outlier
+        let out = orch.run_round(0, &mut tracker(), &mut NoHooks).unwrap();
+        assert_eq!(out.metrics.reported, 3);
+        // median of {1, 2, 900} per coordinate
+        assert_eq!(orch.params(), &[2.0f32; 3][..]);
+    }
+
+    /// A strategy that rejects an update (bad weight) must skip that
+    /// client like any other bad update — never abort the round.
+    #[test]
+    fn strategy_rejecting_updates_does_not_abort_the_round() {
+        struct NanWeight;
+        impl AggStrategy for NanWeight {
+            fn name(&self) -> &'static str {
+                "nan_weight"
+            }
+            fn weight(&self, _input: &AggInput) -> f64 {
+                f64::NAN
+            }
+        }
+        let traffic = Arc::new(TrafficLog::new());
+        let hub = InprocHub::new(traffic.clone());
+        let client = hub.add_client(0, LinkShaper::unshaped());
+        let mut orch = Orchestrator::builder(test_cfg(1))
+            .transport(hub.server())
+            .traffic(traffic)
+            .initial_params(vec![1.0f32; 3])
+            .strategy(Arc::new(NanWeight))
+            .build()
+            .unwrap();
+        client
+            .send(&Msg::Register {
+                client: 0,
+                profile: test_profile(1.0, 1e9),
+            })
+            .unwrap();
+        orch.wait_for_clients(1, Duration::from_secs(5)).unwrap();
+        client.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        client.send(&update(0, 0, vec![5.0; 3])).unwrap();
+        let out = orch.run_round(0, &mut tracker(), &mut NoHooks).unwrap();
+        // the update was rejected, not aggregated; model unchanged
+        assert_eq!(out.metrics.reported, 0);
+        assert_eq!(orch.params(), &[1.0f32; 3][..]);
+    }
+
+    /// Server-optimizer state carries across rounds inside the real
+    /// round loop (not just in unit isolation).
+    #[test]
+    fn server_opt_momentum_carries_across_rounds() {
+        let cfg = {
+            let mut c = test_cfg(1);
+            c.train.rounds = 2;
+            c
+        };
+        let traffic = Arc::new(TrafficLog::new());
+        let hub = InprocHub::new(traffic.clone());
+        let client = hub.add_client(0, LinkShaper::unshaped());
+        let mut orch = Orchestrator::builder(cfg)
+            .transport(hub.server())
+            .traffic(traffic)
+            .initial_params(vec![0f32; 3])
+            .server_opt(Box::new(FedAvgM::new(0.5)))
+            .build()
+            .unwrap();
+        client
+            .send(&Msg::Register {
+                client: 0,
+                profile: test_profile(1.0, 1e9),
+            })
+            .unwrap();
+        orch.wait_for_clients(1, Duration::from_secs(5)).unwrap();
+        client.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+
+        // round 0: Δ_agg = 1 → v = 1, M = 1
+        client.send(&update(0, 0, vec![1.0; 3])).unwrap();
+        orch.run_round(0, &mut tracker(), &mut NoHooks).unwrap();
+        assert_eq!(orch.params(), &[1.0f32; 3][..]);
+        // round 1: Δ_agg = 1 → v = 0.5·1 + 1 = 1.5, M = 2.5
+        client.send(&update(0, 1, vec![1.0; 3])).unwrap();
+        orch.run_round(1, &mut tracker(), &mut NoHooks).unwrap();
+        assert_eq!(orch.params(), &[2.5f32; 3][..]);
     }
 }

@@ -1,0 +1,330 @@
+//! Pluggable round strategies: aggregation policies and server-side
+//! optimizers (paper §4.4; FedOpt, Reddi et al.; robust aggregation,
+//! Yin et al.).
+//!
+//! The orchestrator's round loop is generic over two seams:
+//!
+//! * [`AggStrategy`] — *how client updates combine into one round
+//!   update* `Δ_agg`. Configured per experiment
+//!   ([`crate::config::Aggregation`]) or injected directly via
+//!   [`crate::orchestrator::OrchestratorBuilder::strategy`]; the
+//!   name-keyed [`registry`] maps config/CLI strings to instances.
+//! * [`ServerOpt`] — *how `Δ_agg` moves the global model*:
+//!   `M_{r+1} = opt(M_r, Δ_agg)`. Optimizer state (momentum, second
+//!   moments) lives on the orchestrator and carries across rounds.
+//!
+//! # Streaming vs. buffered contract
+//!
+//! A strategy declares its collection mode via
+//! [`AggStrategy::needs_buffering`]:
+//!
+//! * **Streaming** (default): each arriving update contributes only a
+//!   scalar raw weight ([`AggStrategy::weight`]); the
+//!   [`RoundAggregator`] folds `raw_c·Δ_c` into one O(P) f64
+//!   accumulator and frees the decoded delta immediately
+//!   (fold-then-normalize — see [`super::aggregate`] for the
+//!   invariant and its cost model). Collection memory is O(P)
+//!   regardless of how many clients report.
+//! * **Buffered** (`needs_buffering() == true`): the round keeps every
+//!   decoded delta alive (O(k·P)) and [`AggStrategy::buffered_delta`]
+//!   sees them together at finalize. This is the escape hatch for
+//!   order statistics — [`TrimmedMean`], [`CoordinateMedian`] — which
+//!   cannot be expressed as a weighted sum.
+//!
+//! # Determinism invariant
+//!
+//! For a fixed arrival order, both modes are bit-deterministic across
+//! thread counts: the streaming fold partitions *elements* (never one
+//! element's additions), and buffered strategies sort each
+//! coordinate's values with a total order (`f64::total_cmp`). The
+//! batch [`super::aggregate::aggregate`] wrapper replays the same code
+//! paths in slice order, so batch/streaming bit-equivalence is pinned
+//! by construction (and by test).
+
+pub mod registry;
+mod robust;
+mod server_opt;
+
+pub use robust::{CoordinateMedian, TrimmedMean};
+pub use server_opt::{FedAdam, FedAvgM, ServerOpt, SgdServer};
+
+use super::aggregate::{AggDelta, AggInput, AggOutcome, StreamingAggregator};
+use crate::config::WeightScheme;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// A per-round aggregation policy. Implementations must be cheap to
+/// share (`Send + Sync`); all per-round state lives in the
+/// [`RoundAggregator`], so one instance serves every round.
+pub trait AggStrategy: Send + Sync {
+    /// Registry name (matches [`crate::config::Aggregation::name`]).
+    fn name(&self) -> &'static str;
+
+    /// Proximal coefficient shipped to clients each round (FedProx);
+    /// 0 for strategies without a proximal term.
+    fn mu(&self) -> f32 {
+        0.0
+    }
+
+    /// `false` (default): stream via [`AggStrategy::weight`].
+    /// `true`: buffer the round's deltas for
+    /// [`AggStrategy::buffered_delta`] (order statistics).
+    fn needs_buffering(&self) -> bool {
+        false
+    }
+
+    /// Raw (unnormalized) weight of one arriving update on the
+    /// streaming path. Must be finite and non-negative; the engine
+    /// normalizes by the sum over arrived updates. Unused when
+    /// `needs_buffering()`.
+    fn weight(&self, input: &AggInput) -> f64;
+
+    /// Buffered-mode aggregation over the full round (only called when
+    /// `needs_buffering()`): produce the round's aggregated update
+    /// Δ_agg from all k buffered inputs.
+    fn buffered_delta(&self, _n_params: usize, _inputs: &[AggInput]) -> Result<AggDelta> {
+        bail!(
+            "strategy '{}' is streaming-only (buffered_delta not implemented)",
+            self.name()
+        )
+    }
+}
+
+/// FedAvg: `w_c ∝ n_c` (McMahan et al.).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FedAvg;
+
+/// Sample count with the same floor the engine has always applied.
+fn samples(input: &AggInput) -> f64 {
+    input.n_samples.max(1) as f64
+}
+
+impl AggStrategy for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn weight(&self, input: &AggInput) -> f64 {
+        samples(input)
+    }
+}
+
+/// FedProx (Li et al.): server side identical to FedAvg; the proximal
+/// term μ lives in the client objective and is shipped each round via
+/// [`AggStrategy::mu`].
+#[derive(Debug, Clone, Copy)]
+pub struct FedProx {
+    pub mu: f32,
+}
+
+impl AggStrategy for FedProx {
+    fn name(&self) -> &'static str {
+        "fedprox"
+    }
+
+    fn mu(&self) -> f32 {
+        self.mu
+    }
+
+    fn weight(&self, input: &AggInput) -> f64 {
+        samples(input)
+    }
+}
+
+/// Dynamic weighting (paper §4.4): `w_c ∝ n_c`, `n_c / (1 + loss_c)`
+/// or `n_c / (1 + Var(Δ_c))` depending on the scheme.
+#[derive(Debug, Clone, Copy)]
+pub struct WeightedAgg {
+    pub scheme: WeightScheme,
+}
+
+impl AggStrategy for WeightedAgg {
+    fn name(&self) -> &'static str {
+        "weighted"
+    }
+
+    fn weight(&self, input: &AggInput) -> f64 {
+        let n = samples(input);
+        match self.scheme {
+            WeightScheme::DataSize => n,
+            WeightScheme::InverseLoss => n / (1.0 + input.train_loss.max(0.0) as f64),
+            WeightScheme::InverseVariance => n / (1.0 + input.update_var.max(0.0) as f64),
+        }
+    }
+}
+
+/// Per-round aggregation engine: drives one round's collection under a
+/// strategy, in whichever mode the strategy declares.
+///
+/// Streaming strategies fold straight into a [`StreamingAggregator`]
+/// (O(P) collection state); buffered strategies accumulate inputs
+/// (O(k·P)) and defer to [`AggStrategy::buffered_delta`]. Either way
+/// [`RoundAggregator::finalize`] hands Δ_agg to a [`ServerOpt`] for
+/// the model step.
+pub struct RoundAggregator {
+    strategy: Arc<dyn AggStrategy>,
+    mode: Mode,
+}
+
+enum Mode {
+    Streaming(StreamingAggregator),
+    Buffered {
+        n_params: usize,
+        inputs: Vec<AggInput>,
+    },
+}
+
+impl RoundAggregator {
+    /// Begin a round for a model of `n_params` entries.
+    pub fn new(strategy: Arc<dyn AggStrategy>, n_params: usize) -> Self {
+        let mode = if strategy.needs_buffering() {
+            Mode::Buffered {
+                n_params,
+                inputs: Vec::new(),
+            }
+        } else {
+            Mode::Streaming(StreamingAggregator::new(n_params))
+        };
+        RoundAggregator { strategy, mode }
+    }
+
+    /// The strategy this round is running.
+    pub fn strategy(&self) -> &dyn AggStrategy {
+        self.strategy.as_ref()
+    }
+
+    /// Updates accepted so far.
+    pub fn n_updates(&self) -> usize {
+        match &self.mode {
+            Mode::Streaming(core) => core.n_updates(),
+            Mode::Buffered { inputs, .. } => inputs.len(),
+        }
+    }
+
+    /// Fold one arriving update. The streaming path only reads the
+    /// input (the caller frees its decoded delta on return — O(P)
+    /// collection state); the buffered path clones and retains it
+    /// until finalize (O(k·P), inherent to order statistics).
+    pub fn fold(&mut self, input: &AggInput) -> Result<()> {
+        match &mut self.mode {
+            Mode::Streaming(core) => {
+                let w = self.strategy.weight(input);
+                core.fold(input, w)
+            }
+            Mode::Buffered { n_params, inputs } => {
+                if input.delta.len() != *n_params {
+                    bail!(
+                        "aggregate: client {} delta length {} != {}",
+                        input.client,
+                        input.delta.len(),
+                        *n_params
+                    );
+                }
+                inputs.push(input.clone());
+                Ok(())
+            }
+        }
+    }
+
+    /// Finalize the round: normalize (or run the order statistic),
+    /// then apply the server optimizer `M_{r+1} = opt(M_r, Δ_agg)`.
+    pub fn finalize(self, global: &[f32], opt: &mut dyn ServerOpt) -> Result<AggOutcome> {
+        let agg = match self.mode {
+            Mode::Streaming(core) => core.finalize()?,
+            Mode::Buffered { n_params, inputs } => {
+                if inputs.is_empty() {
+                    bail!("aggregate: no updates to aggregate");
+                }
+                self.strategy.buffered_delta(n_params, &inputs)?
+            }
+        };
+        let new_params = opt.apply(global, &agg.delta)?;
+        Ok(AggOutcome {
+            new_params,
+            weights: agg.weights,
+            mean_train_loss: agg.mean_train_loss,
+        })
+    }
+}
+
+/// Uniform per-client report weights for order-statistic strategies
+/// (weights don't drive the math there, but logs and tests still see a
+/// normalized distribution).
+pub(crate) fn uniform_weights(inputs: &[AggInput]) -> Vec<(crate::cluster::NodeId, f64)> {
+    let w = 1.0 / inputs.len() as f64;
+    inputs.iter().map(|i| (i.client, w)).collect()
+}
+
+/// Sample-weighted mean train loss — identical to the streaming
+/// engine's bookkeeping.
+pub(crate) fn weighted_mean_loss(inputs: &[AggInput]) -> f64 {
+    let mut n_total = 0.0f64;
+    let mut loss_weighted = 0.0f64;
+    for i in inputs {
+        let n = i.n_samples.max(1) as f64;
+        n_total += n;
+        loss_weighted += i.train_loss as f64 * n;
+    }
+    loss_weighted / n_total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn input(client: u32, delta: Vec<f32>, n: u64) -> AggInput {
+        AggInput {
+            client,
+            delta,
+            n_samples: n,
+            train_loss: 1.0,
+            update_var: 0.0,
+        }
+    }
+
+    #[test]
+    fn streaming_strategies_report_streaming_mode() {
+        for s in [
+            &FedAvg as &dyn AggStrategy,
+            &FedProx { mu: 0.1 },
+            &WeightedAgg {
+                scheme: WeightScheme::InverseLoss,
+            },
+        ] {
+            assert!(!s.needs_buffering(), "{} should stream", s.name());
+        }
+        assert!(TrimmedMean { trim_frac: 0.1 }.needs_buffering());
+        assert!(CoordinateMedian.needs_buffering());
+    }
+
+    #[test]
+    fn streaming_only_strategy_rejects_buffered_call() {
+        assert!(FedAvg.buffered_delta(2, &[]).is_err());
+    }
+
+    #[test]
+    fn mu_flows_from_strategy() {
+        assert_eq!(FedProx { mu: 0.25 }.mu(), 0.25);
+        assert_eq!(FedAvg.mu(), 0.0);
+        assert_eq!(TrimmedMean { trim_frac: 0.1 }.mu(), 0.0);
+    }
+
+    #[test]
+    fn buffered_mode_checks_lengths_and_counts() {
+        let mut agg = RoundAggregator::new(Arc::new(CoordinateMedian), 2);
+        assert_eq!(agg.n_updates(), 0);
+        assert!(agg.fold(&input(0, vec![1.0], 10)).is_err());
+        agg.fold(&input(0, vec![1.0, 2.0], 10)).unwrap();
+        agg.fold(&input(1, vec![3.0, 4.0], 10)).unwrap();
+        assert_eq!(agg.n_updates(), 2);
+        let out = agg.finalize(&[0.0, 0.0], &mut SgdServer).unwrap();
+        // even k: median is the mean of the two middle values
+        assert_eq!(out.new_params, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn empty_buffered_round_errors() {
+        let agg = RoundAggregator::new(Arc::new(CoordinateMedian), 2);
+        assert!(agg.finalize(&[0.0, 0.0], &mut SgdServer).is_err());
+    }
+}

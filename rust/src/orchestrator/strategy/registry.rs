@@ -1,0 +1,113 @@
+//! Name-keyed strategy registry: one place that maps configuration
+//! values — and the `"name[:param]"` strings the CLI, config files,
+//! examples and benches share — to strategy / server-optimizer
+//! instances. [`crate::config::Aggregation::parse`] and
+//! [`crate::config::ServerOptKind::parse`] own the string grammar;
+//! this module owns the instantiation, so adding a strategy means one
+//! config variant + one arm here, and every selection surface (JSON
+//! loader, `--aggregation` flag, builder) picks it up.
+
+use super::{
+    AggStrategy, CoordinateMedian, FedAdam, FedAvg, FedAvgM, FedProx, ServerOpt, SgdServer,
+    TrimmedMean, WeightedAgg,
+};
+use crate::config::{Aggregation, ServerOptKind};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// All registered aggregation strategy names.
+pub fn strategy_names() -> &'static [&'static str] {
+    Aggregation::KINDS
+}
+
+/// All registered server-optimizer names.
+pub fn server_opt_names() -> &'static [&'static str] {
+    ServerOptKind::KINDS
+}
+
+/// Instantiate the strategy a config value describes.
+pub fn strategy_from_config(agg: &Aggregation) -> Arc<dyn AggStrategy> {
+    match *agg {
+        Aggregation::FedAvg => Arc::new(FedAvg),
+        Aggregation::FedProx { mu } => Arc::new(FedProx { mu }),
+        Aggregation::Weighted(scheme) => Arc::new(WeightedAgg { scheme }),
+        Aggregation::TrimmedMean { trim_frac } => Arc::new(TrimmedMean { trim_frac }),
+        Aggregation::CoordinateMedian => Arc::new(CoordinateMedian),
+    }
+}
+
+/// Instantiate the server optimizer a config value describes. Fresh
+/// state every call — optimizer state belongs to one training run.
+pub fn server_opt_from_config(kind: &ServerOptKind) -> Box<dyn ServerOpt> {
+    match *kind {
+        ServerOptKind::Sgd => Box::new(SgdServer),
+        ServerOptKind::FedAvgM { beta } => Box::new(FedAvgM::new(beta)),
+        ServerOptKind::FedAdam {
+            lr,
+            beta1,
+            beta2,
+            eps,
+        } => Box::new(FedAdam::new(lr, beta1, beta2, eps)),
+    }
+}
+
+/// Instantiate a strategy by registry name (`"fedavg"`,
+/// `"fedprox:0.1"`, `"trimmed_mean:0.2"`, …). Unknown names error.
+pub fn strategy_by_name(spec: &str) -> Result<Arc<dyn AggStrategy>> {
+    Ok(strategy_from_config(&Aggregation::parse(spec)?))
+}
+
+/// Instantiate a server optimizer by registry name (`"sgd"`,
+/// `"fedavgm:0.9"`, `"fedadam:0.05"`, …). Unknown names error.
+pub fn server_opt_by_name(spec: &str) -> Result<Box<dyn ServerOpt>> {
+    Ok(server_opt_from_config(&ServerOptKind::parse(spec)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_registered_name_instantiates_with_matching_name() {
+        for name in strategy_names() {
+            let s = strategy_by_name(name).unwrap();
+            assert_eq!(&s.name(), name);
+        }
+        for name in server_opt_names() {
+            let o = server_opt_by_name(name).unwrap();
+            assert_eq!(&o.name(), name);
+        }
+    }
+
+    #[test]
+    fn params_flow_through_by_name_selection() {
+        let s = strategy_by_name("fedprox:0.125").unwrap();
+        assert_eq!(s.mu(), 0.125);
+        let s = strategy_by_name("trimmed_mean:0.3").unwrap();
+        assert!(s.needs_buffering());
+    }
+
+    #[test]
+    fn unknown_names_error() {
+        assert!(strategy_by_name("no_such_strategy").is_err());
+        assert!(server_opt_by_name("no_such_opt").is_err());
+    }
+
+    #[test]
+    fn config_and_instance_names_agree() {
+        for agg in [
+            Aggregation::FedAvg,
+            Aggregation::FedProx { mu: 0.1 },
+            Aggregation::TrimmedMean { trim_frac: 0.1 },
+            Aggregation::CoordinateMedian,
+        ] {
+            assert_eq!(strategy_from_config(&agg).name(), agg.name());
+        }
+        for opt in [
+            ServerOptKind::Sgd,
+            ServerOptKind::FedAvgM { beta: 0.9 },
+        ] {
+            assert_eq!(server_opt_from_config(&opt).name(), opt.name());
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! Robust order-statistic aggregation (buffered mode): coordinate-wise
+//! trimmed mean and median (Yin et al., "Byzantine-Robust Distributed
+//! Learning"). These defend the fault-tolerance claims of the paper's
+//! §3.1 against *adversarial* failures — a poisoned or faulty client
+//! whose update is arbitrarily large moves a weighted mean arbitrarily
+//! far, but cannot move an order statistic past the honest majority.
+//!
+//! Both strategies are deterministic for a fixed arrival order: each
+//! coordinate's k values are sorted with the total order
+//! `f64::total_cmp`, and the parallel sweep partitions coordinates
+//! (never one coordinate's values), so results are bit-identical
+//! across thread counts.
+
+use super::{uniform_weights, weighted_mean_loss, AggDelta, AggInput, AggStrategy};
+use crate::util::parallel::par_chunks_mut;
+use anyhow::{bail, Result};
+
+fn check_lengths(n_params: usize, inputs: &[AggInput]) -> Result<()> {
+    if inputs.is_empty() {
+        bail!("aggregate: no updates to aggregate");
+    }
+    for input in inputs {
+        if input.delta.len() != n_params {
+            bail!(
+                "aggregate: client {} delta length {} != {}",
+                input.client,
+                input.delta.len(),
+                n_params
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Coordinate-wise trimmed mean: per parameter, sort the k client
+/// values, drop `⌊trim_frac·k⌋` from each end and average the rest
+/// (clamped so at least one value always survives). Tolerates up to
+/// `⌊trim_frac·k⌋` arbitrarily-poisoned clients per round.
+#[derive(Debug, Clone, Copy)]
+pub struct TrimmedMean {
+    /// Fraction trimmed from *each* end, in (0, 0.5).
+    pub trim_frac: f32,
+}
+
+impl AggStrategy for TrimmedMean {
+    fn name(&self) -> &'static str {
+        "trimmed_mean"
+    }
+
+    fn needs_buffering(&self) -> bool {
+        true
+    }
+
+    /// Unused: order statistics don't weight updates (documented
+    /// contract — only consulted on the streaming path).
+    fn weight(&self, _input: &AggInput) -> f64 {
+        1.0
+    }
+
+    fn buffered_delta(&self, n_params: usize, inputs: &[AggInput]) -> Result<AggDelta> {
+        check_lengths(n_params, inputs)?;
+        let k = inputs.len();
+        let trim = ((self.trim_frac as f64) * k as f64).floor() as usize;
+        // keep at least one value even at tiny k
+        let trim = trim.min(k.saturating_sub(1) / 2);
+        let keep = (k - 2 * trim) as f64;
+        let mut delta = vec![0f64; n_params];
+        par_chunks_mut(&mut delta, 64 * 1024, |offset, chunk| {
+            let mut vals = vec![0f64; k];
+            for (i, out) in chunk.iter_mut().enumerate() {
+                let j = offset + i;
+                for (slot, input) in vals.iter_mut().zip(inputs) {
+                    *slot = input.delta[j] as f64;
+                }
+                vals.sort_unstable_by(f64::total_cmp);
+                *out = vals[trim..k - trim].iter().sum::<f64>() / keep;
+            }
+        });
+        Ok(AggDelta {
+            delta,
+            weights: uniform_weights(inputs),
+            mean_train_loss: weighted_mean_loss(inputs),
+        })
+    }
+}
+
+/// Coordinate-wise median: the maximally robust order statistic
+/// (breakdown point 1/2). Ignores sample-count weighting entirely.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CoordinateMedian;
+
+impl AggStrategy for CoordinateMedian {
+    fn name(&self) -> &'static str {
+        "coordinate_median"
+    }
+
+    fn needs_buffering(&self) -> bool {
+        true
+    }
+
+    /// Unused: see [`TrimmedMean::weight`].
+    fn weight(&self, _input: &AggInput) -> f64 {
+        1.0
+    }
+
+    fn buffered_delta(&self, n_params: usize, inputs: &[AggInput]) -> Result<AggDelta> {
+        check_lengths(n_params, inputs)?;
+        let k = inputs.len();
+        let mut delta = vec![0f64; n_params];
+        par_chunks_mut(&mut delta, 64 * 1024, |offset, chunk| {
+            let mut vals = vec![0f64; k];
+            for (i, out) in chunk.iter_mut().enumerate() {
+                let j = offset + i;
+                for (slot, input) in vals.iter_mut().zip(inputs) {
+                    *slot = input.delta[j] as f64;
+                }
+                vals.sort_unstable_by(f64::total_cmp);
+                *out = if k % 2 == 1 {
+                    vals[k / 2]
+                } else {
+                    (vals[k / 2 - 1] + vals[k / 2]) / 2.0
+                };
+            }
+        });
+        Ok(AggDelta {
+            delta,
+            weights: uniform_weights(inputs),
+            mean_train_loss: weighted_mean_loss(inputs),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::registry::strategy_from_config;
+    use super::super::SgdServer;
+    use super::*;
+    use crate::config::Aggregation;
+    use crate::orchestrator::aggregate::aggregate;
+
+    fn input(client: u32, delta: Vec<f32>) -> AggInput {
+        AggInput {
+            client,
+            delta,
+            n_samples: 100,
+            train_loss: 1.0,
+            update_var: 0.0,
+        }
+    }
+
+    #[test]
+    fn trimmed_mean_ignores_outliers() {
+        let global = vec![0f32; 2];
+        let inputs: Vec<AggInput> = vec![
+            input(0, vec![1.0, -1.0]),
+            input(1, vec![1.0, -1.0]),
+            input(2, vec![1.0, -1.0]),
+            input(3, vec![1.0, -1.0]),
+            input(4, vec![1000.0, -1000.0]), // poisoned
+        ];
+        let out = aggregate(
+            &global,
+            &inputs,
+            Aggregation::TrimmedMean { trim_frac: 0.2 },
+        )
+        .unwrap();
+        // trim = 1 from each end: the poisoned value never contributes
+        assert_eq!(out.new_params, vec![1.0, -1.0]);
+        // FedAvg, by contrast, is dragged far off
+        let avg = aggregate(&global, &inputs, Aggregation::FedAvg).unwrap();
+        assert!(avg.new_params[0] > 100.0);
+    }
+
+    #[test]
+    fn trimmed_mean_small_k_degrades_to_mean() {
+        // k=1 and k=2: trim clamps to 0, plain unweighted mean
+        let global = vec![0f32; 1];
+        let out = aggregate(
+            &global,
+            &[input(0, vec![2.0])],
+            Aggregation::TrimmedMean { trim_frac: 0.4 },
+        )
+        .unwrap();
+        assert_eq!(out.new_params, vec![2.0]);
+        let out = aggregate(
+            &global,
+            &[input(0, vec![2.0]), input(1, vec![4.0])],
+            Aggregation::TrimmedMean { trim_frac: 0.4 },
+        )
+        .unwrap();
+        assert_eq!(out.new_params, vec![3.0]);
+    }
+
+    #[test]
+    fn coordinate_median_picks_middle_per_coordinate() {
+        let global = vec![10f32; 3];
+        let out = aggregate(
+            &global,
+            &[
+                input(0, vec![1.0, 5.0, -3.0]),
+                input(1, vec![2.0, 4.0, 900.0]), // one poisoned coordinate
+                input(2, vec![3.0, 6.0, -4.0]),
+            ],
+            Aggregation::CoordinateMedian,
+        )
+        .unwrap();
+        assert_eq!(out.new_params, vec![12.0, 15.0, 7.0]);
+    }
+
+    #[test]
+    fn median_ignores_sample_count_weighting() {
+        let global = vec![0f32; 1];
+        let mut heavy = input(0, vec![100.0]);
+        heavy.n_samples = 1_000_000; // huge n must not matter
+        let out = aggregate(
+            &global,
+            &[heavy, input(1, vec![1.0]), input(2, vec![2.0])],
+            Aggregation::CoordinateMedian,
+        )
+        .unwrap();
+        assert_eq!(out.new_params, vec![2.0]);
+    }
+
+    /// The headline robustness scenario (ISSUE satellite): one client
+    /// sends a huge poisoned update every round. Under FedAvg the
+    /// global model is dragged far from the optimum and stays there;
+    /// under TrimmedMean the federation converges to the target as if
+    /// the attacker were absent.
+    #[test]
+    fn trimmed_mean_converges_under_poisoning_where_fedavg_diverges() {
+        let target = vec![3.0f32; 8];
+        let run = |strategy: Aggregation| -> Vec<f32> {
+            let mut global = vec![0f32; 8];
+            for _round in 0..40 {
+                let mut inputs: Vec<AggInput> = (0..5u32)
+                    .map(|c| {
+                        // honest clients: step 30% of the way to target
+                        let delta: Vec<f32> = global
+                            .iter()
+                            .zip(&target)
+                            .map(|(&g, &t)| 0.3 * (t - g))
+                            .collect();
+                        input(c, delta)
+                    })
+                    .collect();
+                inputs.push(input(5, vec![100.0; 8])); // poisoned client
+                let out = aggregate(&global, &inputs, strategy).unwrap();
+                global = out.new_params;
+            }
+            global
+        };
+        let robust = run(Aggregation::TrimmedMean { trim_frac: 0.2 });
+        let avg = run(Aggregation::FedAvg);
+        for (r, &t) in robust.iter().zip(&target) {
+            assert!(
+                (r - t).abs() < 0.05,
+                "trimmed mean should converge to {t}, got {r}"
+            );
+        }
+        assert!(
+            (avg[0] - target[0]).abs() > 10.0,
+            "fedavg should be dragged off target by the poisoned client, got {}",
+            avg[0]
+        );
+    }
+
+    #[test]
+    fn buffered_batch_and_incremental_fold_agree_bitwise() {
+        use super::super::RoundAggregator;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(5);
+        let p = 777;
+        let global: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+        let inputs: Vec<AggInput> = (0..9u32)
+            .map(|c| {
+                input(
+                    c,
+                    (0..p).map(|_| rng.normal() as f32 * 0.1).collect(),
+                )
+            })
+            .collect();
+        for strat in [
+            Aggregation::TrimmedMean { trim_frac: 0.25 },
+            Aggregation::CoordinateMedian,
+        ] {
+            let batch = aggregate(&global, &inputs, strat).unwrap();
+            let mut agg = RoundAggregator::new(strategy_from_config(&strat), p);
+            for i in &inputs {
+                agg.fold(i).unwrap();
+            }
+            let streamed = agg.finalize(&global, &mut SgdServer).unwrap();
+            for (a, b) in batch.new_params.iter().zip(&streamed.new_params) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{strat:?} diverged");
+            }
+        }
+    }
+}

@@ -1,0 +1,280 @@
+//! Server-side optimizers (FedOpt family, Reddi et al.): the second
+//! half of a round's finalize, `M_{r+1} = opt(M_r, Δ_agg)`.
+//!
+//! The aggregation strategy reduces k client updates to one f64 Δ_agg;
+//! the server optimizer decides how that update moves the global
+//! model. [`SgdServer`] reproduces the classic FedAvg step
+//! bit-identically; [`FedAvgM`] and [`FedAdam`] carry optimizer state
+//! (momentum / second moments, in f64) across rounds on the
+//! orchestrator — state the old enum-based aggregation path had no
+//! place to keep.
+
+use crate::util::parallel::par_chunks_mut;
+use anyhow::{bail, Result};
+
+/// One server optimizer step per non-empty round. Implementations may
+/// carry state across calls (`&mut self`); a zero-update round skips
+/// the step entirely, so state advances only when the model does.
+pub trait ServerOpt: Send {
+    /// Registry name (matches [`crate::config::ServerOptKind::name`]).
+    fn name(&self) -> &'static str;
+
+    /// `M_{r+1}` from `M_r` and the round's aggregated update Δ_agg.
+    /// `delta` is f64 end to end; the result is cast to f32 once, at
+    /// the very end, exactly like the pre-refactor finalize.
+    fn apply(&mut self, global: &[f32], delta: &[f64]) -> Result<Vec<f32>>;
+}
+
+fn check_lengths(name: &str, global: &[f32], delta: &[f64]) -> Result<()> {
+    if global.len() != delta.len() {
+        bail!(
+            "server-opt {name}: global length {} != delta length {}",
+            global.len(),
+            delta.len()
+        );
+    }
+    Ok(())
+}
+
+/// Plain server step `M_{r+1} = M_r + Δ_agg` — the classic FedAvg
+/// server and the default. Stateless; bit-identical to the
+/// pre-refactor fold-then-normalize finalize.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SgdServer;
+
+impl ServerOpt for SgdServer {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn apply(&mut self, global: &[f32], delta: &[f64]) -> Result<Vec<f32>> {
+        check_lengths("sgd", global, delta)?;
+        let mut new_params = vec![0f32; global.len()];
+        par_chunks_mut(&mut new_params, 256 * 1024, |offset, chunk| {
+            let d = &delta[offset..offset + chunk.len()];
+            let g = &global[offset..offset + chunk.len()];
+            for ((out, &dv), &gv) in chunk.iter_mut().zip(d).zip(g) {
+                *out = (gv as f64 + dv) as f32;
+            }
+        });
+        Ok(new_params)
+    }
+}
+
+/// Server momentum (FedAvgM, Hsu et al.):
+/// `v ← β·v + Δ_agg; M_{r+1} = M_r + v`. The velocity vector persists
+/// across rounds (f64, O(P)).
+#[derive(Debug)]
+pub struct FedAvgM {
+    beta: f64,
+    velocity: Vec<f64>,
+}
+
+impl FedAvgM {
+    pub fn new(beta: f32) -> Self {
+        FedAvgM {
+            beta: beta as f64,
+            velocity: Vec::new(),
+        }
+    }
+
+    /// Current velocity (empty before the first step) — for tests.
+    pub fn velocity(&self) -> &[f64] {
+        &self.velocity
+    }
+}
+
+impl ServerOpt for FedAvgM {
+    fn name(&self) -> &'static str {
+        "fedavgm"
+    }
+
+    fn apply(&mut self, global: &[f32], delta: &[f64]) -> Result<Vec<f32>> {
+        check_lengths("fedavgm", global, delta)?;
+        if self.velocity.is_empty() {
+            self.velocity = vec![0f64; delta.len()];
+        }
+        if self.velocity.len() != delta.len() {
+            bail!(
+                "server-opt fedavgm: model size changed ({} != {})",
+                self.velocity.len(),
+                delta.len()
+            );
+        }
+        let beta = self.beta;
+        par_chunks_mut(&mut self.velocity, 256 * 1024, |offset, chunk| {
+            let d = &delta[offset..offset + chunk.len()];
+            for (v, &dv) in chunk.iter_mut().zip(d) {
+                *v = beta * *v + dv;
+            }
+        });
+        let velocity = &self.velocity;
+        let mut new_params = vec![0f32; global.len()];
+        par_chunks_mut(&mut new_params, 256 * 1024, |offset, chunk| {
+            let v = &velocity[offset..offset + chunk.len()];
+            let g = &global[offset..offset + chunk.len()];
+            for ((out, &vv), &gv) in chunk.iter_mut().zip(v).zip(g) {
+                *out = (gv as f64 + vv) as f32;
+            }
+        });
+        Ok(new_params)
+    }
+}
+
+/// Server Adam (FedAdam, Reddi et al.) with bias correction:
+/// `m ← β₁·m + (1−β₁)·Δ; v ← β₂·v + (1−β₂)·Δ²;`
+/// `M_{r+1} = M_r + lr · m̂ / (√v̂ + ε)`. First/second moments persist
+/// across rounds (f64, O(P) each).
+#[derive(Debug)]
+pub struct FedAdam {
+    lr: f64,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    t: i32,
+    m: Vec<f64>,
+    v: Vec<f64>,
+}
+
+impl FedAdam {
+    pub fn new(lr: f32, beta1: f32, beta2: f32, eps: f32) -> Self {
+        FedAdam {
+            lr: lr as f64,
+            beta1: beta1 as f64,
+            beta2: beta2 as f64,
+            eps: eps as f64,
+            t: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+}
+
+impl ServerOpt for FedAdam {
+    fn name(&self) -> &'static str {
+        "fedadam"
+    }
+
+    fn apply(&mut self, global: &[f32], delta: &[f64]) -> Result<Vec<f32>> {
+        check_lengths("fedadam", global, delta)?;
+        if self.m.is_empty() {
+            self.m = vec![0f64; delta.len()];
+            self.v = vec![0f64; delta.len()];
+        }
+        if self.m.len() != delta.len() {
+            bail!(
+                "server-opt fedadam: model size changed ({} != {})",
+                self.m.len(),
+                delta.len()
+            );
+        }
+        self.t += 1;
+        let (b1, b2) = (self.beta1, self.beta2);
+        par_chunks_mut(&mut self.m, 256 * 1024, |offset, chunk| {
+            let d = &delta[offset..offset + chunk.len()];
+            for (m, &dv) in chunk.iter_mut().zip(d) {
+                *m = b1 * *m + (1.0 - b1) * dv;
+            }
+        });
+        par_chunks_mut(&mut self.v, 256 * 1024, |offset, chunk| {
+            let d = &delta[offset..offset + chunk.len()];
+            for (v, &dv) in chunk.iter_mut().zip(d) {
+                *v = b2 * *v + (1.0 - b2) * dv * dv;
+            }
+        });
+        let bc1 = 1.0 - b1.powi(self.t);
+        let bc2 = 1.0 - b2.powi(self.t);
+        let (lr, eps) = (self.lr, self.eps);
+        let (m, v) = (&self.m, &self.v);
+        let mut new_params = vec![0f32; global.len()];
+        par_chunks_mut(&mut new_params, 256 * 1024, |offset, chunk| {
+            let mm = &m[offset..offset + chunk.len()];
+            let vv = &v[offset..offset + chunk.len()];
+            let g = &global[offset..offset + chunk.len()];
+            for (i, out) in chunk.iter_mut().enumerate() {
+                let mhat = mm[i] / bc1;
+                let vhat = vv[i] / bc2;
+                *out = (g[i] as f64 + lr * mhat / (vhat.sqrt() + eps)) as f32;
+            }
+        });
+        Ok(new_params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_is_plain_add() {
+        let out = SgdServer
+            .apply(&[1.0, 2.0, 3.0], &[0.5, -0.5, 0.0])
+            .unwrap();
+        assert_eq!(out, vec![1.5, 1.5, 3.0]);
+        assert!(SgdServer.apply(&[1.0], &[0.5, 0.5]).is_err());
+    }
+
+    /// The momentum satellite: state must carry across rounds.
+    #[test]
+    fn fedavgm_momentum_accumulates_across_rounds() {
+        let mut opt = FedAvgM::new(0.5);
+        assert!(opt.velocity().is_empty());
+        // round 0: v = 1.0, M = 0 + 1.0
+        let m1 = opt.apply(&[0.0; 4], &[1.0; 4]).unwrap();
+        assert_eq!(m1, vec![1.0f32; 4]);
+        assert_eq!(opt.velocity(), &[1.0f64; 4][..]);
+        // round 1 (same delta): v = 0.5·1 + 1 = 1.5, M = 1 + 1.5 = 2.5
+        let m2 = opt.apply(&m1, &[1.0; 4]).unwrap();
+        assert_eq!(m2, vec![2.5f32; 4]);
+        assert_eq!(opt.velocity(), &[1.5f64; 4][..]);
+        // round 2: v = 0.75 + 1 = 1.75, M = 4.25
+        let m3 = opt.apply(&m2, &[1.0; 4]).unwrap();
+        assert_eq!(m3, vec![4.25f32; 4]);
+    }
+
+    #[test]
+    fn fedavgm_beta_zero_matches_sgd() {
+        let mut opt = FedAvgM::new(0.0);
+        let g = [0.5f32, -1.0, 2.0];
+        let d = [0.25f64, 0.25, -0.5];
+        let a = opt.apply(&g, &d).unwrap();
+        let b = SgdServer.apply(&g, &d).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fedavgm_rejects_model_size_change() {
+        let mut opt = FedAvgM::new(0.9);
+        opt.apply(&[0.0; 3], &[1.0; 3]).unwrap();
+        assert!(opt.apply(&[0.0; 4], &[1.0; 4]).is_err());
+    }
+
+    #[test]
+    fn fedadam_steps_toward_delta_direction_bounded_by_lr() {
+        let mut opt = FedAdam::new(0.1, 0.9, 0.99, 1e-8);
+        let mut global = vec![0f32; 3];
+        for _ in 0..5 {
+            global = opt.apply(&global, &[1.0, -1.0, 1.0]).unwrap();
+        }
+        // with bias correction and constant delta, each step ≈ lr
+        assert!(global[0] > 0.3 && global[0] < 0.6, "got {}", global[0]);
+        assert!(global[1] < -0.3 && global[1] > -0.6);
+        assert!((global[0] + global[1]).abs() < 1e-6, "symmetry");
+    }
+
+    #[test]
+    fn fedadam_adapts_per_coordinate_scale() {
+        // a coordinate with tiny gradients moves at the same ~lr pace
+        // as a large one (that's the point of Adam)
+        let mut opt = FedAdam::new(0.1, 0.9, 0.99, 1e-12);
+        let mut global = vec![0f32; 2];
+        for _ in 0..10 {
+            global = opt.apply(&global, &[1e-4, 10.0]).unwrap();
+        }
+        let ratio = global[1] / global[0];
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "per-coordinate normalization failed: {global:?}"
+        );
+    }
+}

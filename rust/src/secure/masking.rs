@@ -39,7 +39,7 @@ impl SecureAggregator {
 
     fn pair_seed(&self, a: NodeId, b: NodeId) -> u64 {
         let (lo, hi) = if a < b { (a, b) } else { (b, a) };
-        self.session_seed ^ ((lo as u64) << 32 | hi as u64).wrapping_mul(0x9E3779B97F4A7C15)
+        self.session_seed ^ (((lo as u64) << 32) | hi as u64).wrapping_mul(0x9E3779B97F4A7C15)
     }
 
     fn mask_for_pair(&self, a: NodeId, b: NodeId) -> Vec<f32> {

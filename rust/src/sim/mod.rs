@@ -66,6 +66,12 @@ impl<T> Ord for Event<T> {
     }
 }
 
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl<T> EventQueue<T> {
     pub fn new() -> Self {
         EventQueue {

@@ -4,7 +4,7 @@
 
 use fedhpc::config::{
     presets::quickstart, Aggregation, CompressionConfig, Partition, SelectionPolicy,
-    StragglerConfig, WeightScheme,
+    ServerOptKind, StragglerConfig, WeightScheme,
 };
 use fedhpc::experiments::run_real;
 
@@ -73,6 +73,51 @@ fn weighted_aggregation_variants_run() {
         let rep = run_real(&cfg).unwrap();
         assert!(rep.final_accuracy().is_some());
     }
+}
+
+/// New strategy API end to end: robust aggregation and server
+/// optimizers are selected *by name* (the registry strings a config
+/// file carries), survive a JSON round-trip, and drive a full
+/// federation over real threads + transport.
+#[test]
+fn strategies_selectable_by_name_from_config_run_end_to_end() {
+    for (agg, opt) in [
+        ("trimmed_mean:0.25", "sgd"),
+        ("coordinate_median", "fedavgm:0.3"),
+        ("fedavg", "fedadam:0.1"),
+    ] {
+        let mut cfg = base_cfg("it_strategy_by_name");
+        cfg.name = format!("it_{}_{}", agg.replace(':', "_"), opt.replace(':', "_"));
+        cfg.train.rounds = 3;
+        cfg.aggregation = Aggregation::parse(agg).unwrap();
+        cfg.server_opt = ServerOptKind::parse(opt).unwrap();
+        // prove the selection survives the config-file path
+        let cfg = fedhpc::config::from_json_str(&fedhpc::config::to_json(&cfg)).unwrap();
+        assert_eq!(cfg.aggregation.name(), agg.split(':').next().unwrap());
+        assert_eq!(cfg.server_opt.name(), opt.split(':').next().unwrap());
+        let rep = run_real(&cfg).unwrap();
+        assert_eq!(rep.rounds.len(), 3, "{agg}/{opt} federation died early");
+        assert!(
+            rep.final_accuracy().is_some(),
+            "{agg}/{opt} produced no accuracy"
+        );
+    }
+}
+
+/// FedAvgM momentum across a real federation still learns (momentum
+/// state carried on the orchestrator between rounds).
+#[test]
+fn fedavgm_server_momentum_federation_learns() {
+    let mut cfg = base_cfg("it_fedavgm");
+    cfg.data.partition = Partition::Iid;
+    cfg.train.rounds = 6;
+    cfg.server_opt = ServerOptKind::FedAvgM { beta: 0.3 };
+    let rep = run_real(&cfg).unwrap();
+    assert!(
+        rep.final_accuracy().unwrap() > 0.3,
+        "momentum federation should beat chance, got {:?}",
+        rep.final_accuracy()
+    );
 }
 
 #[test]

@@ -77,7 +77,13 @@ fn tcp_federation_end_to_end() {
         runtime: Box::new(eval_rt),
         shard: dataset.eval.clone(),
     };
-    let mut orch = Orchestrator::new(cfg.clone(), server, traffic, initial, Some(eval));
+    let mut orch = Orchestrator::builder(cfg.clone())
+        .transport(server)
+        .traffic(traffic)
+        .initial_params(initial)
+        .eval(eval)
+        .build()
+        .unwrap();
     let report = orch
         .run(Some((n, Duration::from_secs(30))), &mut NoHooks)
         .unwrap();

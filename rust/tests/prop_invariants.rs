@@ -140,6 +140,10 @@ fn prop_aggregation_weights_normalize_and_bound_result() {
             Aggregation::FedProx { mu: 0.1 },
             Aggregation::Weighted(WeightScheme::InverseLoss),
             Aggregation::Weighted(WeightScheme::InverseVariance),
+            // buffered order statistics: results stay within the
+            // per-coordinate value range, so the same bound applies
+            Aggregation::TrimmedMean { trim_frac: 0.25 },
+            Aggregation::CoordinateMedian,
         ]);
         let out = aggregate(&global, &inputs, strat).unwrap();
         let wsum: f64 = out.weights.iter().map(|(_, w)| w).sum();
