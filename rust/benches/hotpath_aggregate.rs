@@ -1,11 +1,10 @@
 //! L3 hot path: aggregation of K client updates into the global model.
 //! DESIGN.md §8 target: 60 × 1M-param updates in < 50 ms.
 
-use fedhpc::benchkit::{bench, print_table};
+use fedhpc::benchkit::{bench, budget_from_env, json_num_obj, print_table, write_json_report};
 use fedhpc::config::{Aggregation, WeightScheme};
 use fedhpc::orchestrator::{aggregate, AggInput};
 use fedhpc::util::rng::Rng;
-use std::time::Duration;
 
 fn inputs(k: usize, p: usize, seed: u64) -> (Vec<f32>, Vec<AggInput>) {
     let mut rng = Rng::new(seed);
@@ -23,7 +22,7 @@ fn inputs(k: usize, p: usize, seed: u64) -> (Vec<f32>, Vec<AggInput>) {
 }
 
 fn main() {
-    let budget = Duration::from_secs(2);
+    let budget = budget_from_env(2000);
     let mut stats = Vec::new();
     for (k, p) in [(20usize, 250_000usize), (60, 250_000), (20, 1_000_000), (60, 1_000_000)] {
         let (global, ins) = inputs(k, p, 42);
@@ -63,4 +62,15 @@ fn main() {
         target.mean_ms(),
         if target.mean_ms() < 50.0 { "MEETS §8 target" } else { "misses §8 target" }
     );
+    let extra = json_num_obj(&[
+        ("fedavg_60x1m_ms", target.mean_ms()),
+        ("target_ms", 50.0),
+    ]);
+    write_json_report(
+        "BENCH_aggregate.json",
+        "hotpath_aggregate",
+        &stats,
+        &[("section8", extra)],
+    )
+    .unwrap();
 }

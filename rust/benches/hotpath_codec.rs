@@ -1,17 +1,16 @@
 //! L3 hot path: compression codecs (paper §4.3). DESIGN.md §8 target:
 //! q8 quantization > 1 GB/s.
 
-use fedhpc::benchkit::{bench, print_table};
+use fedhpc::benchkit::{bench, budget_from_env, json_num_obj, print_table, write_json_report};
 use fedhpc::compress::{compress, decompress, quantize, sparsify_topk, QuantBits};
 use fedhpc::config::CompressionConfig;
 use fedhpc::util::rng::Rng;
-use std::time::Duration;
 
 fn main() {
     let p = 1_000_000usize;
     let mut rng = Rng::new(0);
     let update: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
-    let budget = Duration::from_secs(2);
+    let budget = budget_from_env(2000);
     let mut stats = Vec::new();
 
     stats.push(bench("quantize q8 1M", budget, || {
@@ -43,4 +42,12 @@ fn main() {
         gbps,
         if gbps > 1.0 { "MEETS §8 target" } else { "misses §8 target" }
     );
+    let extra = json_num_obj(&[("q8_gb_per_s", gbps), ("target_gb_per_s", 1.0)]);
+    write_json_report(
+        "BENCH_codec.json",
+        "hotpath_codec",
+        &stats,
+        &[("section8", extra)],
+    )
+    .unwrap();
 }

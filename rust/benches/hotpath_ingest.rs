@@ -1,0 +1,222 @@
+//! Ingest hot path: what one arriving update costs the server.
+//!
+//! Baseline is the pre-PR path — `compress::decompress` materializes a
+//! dense P-length vector, then the streaming engine folds all P
+//! elements — so a top-25% sparse update cost the same as a dense one
+//! and the compression win died at the server door. The fused path
+//! (`DecodedView` → `fold_view`) folds straight from the encoded form:
+//! O(nnz) work, zero dense materialization, and for pre-encoded wire
+//! bytes not even an intermediate index/value `Vec`.
+//!
+//! The two paths are bit-identical (asserted below before timing, and
+//! pinned by property test in `prop_invariants.rs`). Acceptance target
+//! for this PR: ≥5× updates/sec at `CompressionConfig::PAPER` with 1M
+//! params, and no regression on dense updates.
+//!
+//! Emits `BENCH_ingest.json` (updates/sec, bytes/update, speedup,
+//! allocs avoided) so the repo's perf trajectory is machine-readable
+//! from this PR onward. `FEDHPC_BENCH_BUDGET_MS` shrinks the budget
+//! for CI smoke runs.
+
+use fedhpc::benchkit::{
+    bench, budget_from_env, json_num_obj, print_table, write_json_report, BenchStats,
+};
+use fedhpc::compress::{compress, decompress, DecodedView, Encoded};
+use fedhpc::config::{Aggregation, CompressionConfig};
+use fedhpc::network::pre_encode;
+use fedhpc::orchestrator::strategy::registry::strategy_from_config;
+use fedhpc::orchestrator::strategy::SgdServer;
+use fedhpc::orchestrator::{AggInput, RoundAggregator, ViewInput};
+use fedhpc::util::json::Value;
+use fedhpc::util::rng::Rng;
+use fedhpc::util::scratch::ScratchPool;
+use std::sync::Arc;
+
+const P: usize = 1_000_000;
+const K: usize = 20;
+
+struct Case {
+    name: &'static str,
+    cfg: CompressionConfig,
+    /// Dense-vector allocations the baseline performs per update that
+    /// the fused path does not (decode buffer, dequantize buffer).
+    allocs_avoided: f64,
+}
+
+fn stats_of(client: u32) -> (u64, f32, f32) {
+    (100 + (client as u64 * 37) % 400, 1.0, 0.01)
+}
+
+fn agg_input(client: u32, delta: Vec<f32>) -> AggInput {
+    let (n_samples, train_loss, update_var) = stats_of(client);
+    AggInput {
+        client,
+        delta,
+        n_samples,
+        train_loss,
+        update_var,
+    }
+}
+
+fn view_input<'a>(client: u32, view: &'a DecodedView<'a>) -> ViewInput<'a> {
+    let (n_samples, train_loss, update_var) = stats_of(client);
+    ViewInput {
+        client,
+        view,
+        n_samples,
+        train_loss,
+        update_var,
+    }
+}
+
+/// One collection phase over `encs` through the baseline
+/// densify-then-fold path; returns the finalized model.
+fn round_baseline(
+    strategy: &Arc<dyn fedhpc::orchestrator::AggStrategy>,
+    global: &[f32],
+    encs: &[Encoded],
+) -> Vec<f32> {
+    let mut agg = RoundAggregator::new(strategy.clone(), P);
+    for (c, enc) in encs.iter().enumerate() {
+        let dense = decompress(enc, P).unwrap();
+        agg.fold(&agg_input(c as u32, dense)).unwrap();
+    }
+    agg.finalize(global, &mut SgdServer).unwrap().new_params
+}
+
+/// The same collection phase through the fused decode→fold ingest.
+fn round_fused(
+    strategy: &Arc<dyn fedhpc::orchestrator::AggStrategy>,
+    pool: &Arc<ScratchPool>,
+    global: &[f32],
+    encs: &[Encoded],
+) -> Vec<f32> {
+    let mut agg = RoundAggregator::with_pool(strategy.clone(), P, pool.clone());
+    for (c, enc) in encs.iter().enumerate() {
+        let view = DecodedView::of(enc, P).unwrap();
+        agg.fold_view(&view_input(c as u32, &view)).unwrap();
+    }
+    agg.finalize(global, &mut SgdServer).unwrap().new_params
+}
+
+fn main() {
+    let budget = budget_from_env(3000);
+    let strategy = strategy_from_config(&Aggregation::FedAvg);
+    let pool = Arc::new(ScratchPool::new());
+    let mut rng = Rng::new(42);
+    let global: Vec<f32> = (0..P).map(|_| rng.normal() as f32).collect();
+
+    let cases = [
+        Case {
+            name: "paper(top25+q8)",
+            cfg: CompressionConfig::PAPER,
+            allocs_avoided: 2.0, // dense decode buffer + dequantize buffer
+        },
+        Case {
+            name: "sparse(top25,f32)",
+            cfg: CompressionConfig {
+                quant_bits: 32,
+                topk_frac: 0.25,
+                dropout_keep: 1.0,
+            },
+            allocs_avoided: 1.0,
+        },
+        Case {
+            name: "dense(none)",
+            cfg: CompressionConfig::NONE,
+            allocs_avoided: 1.0, // decompress clones the dense vector
+        },
+    ];
+
+    let mut stats: Vec<BenchStats> = Vec::new();
+    let mut extra: Vec<(String, Value)> = Vec::new();
+    let mut paper_speedup = None;
+    let mut dense_speedup = None;
+
+    for case in &cases {
+        // K distinct client updates, compressed once up front — ingest
+        // starts at the decoded wire message, like the server's
+        let encs: Vec<Encoded> = (0..K)
+            .map(|c| {
+                let mut r = Rng::new(1000 + c as u64);
+                let upd: Vec<f32> = (0..P).map(|_| r.normal() as f32 * 0.01).collect();
+                compress(&upd, &case.cfg, c as u64)
+            })
+            .collect();
+        // the fused path must be pinned bit-identical before we time it
+        let a = round_baseline(&strategy, &global, &encs);
+        let b = round_fused(&strategy, &pool, &global, &encs);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{}: paths diverged", case.name);
+        }
+        // and the borrowed wire-bytes path must agree too
+        let pre: Vec<Encoded> = encs
+            .iter()
+            .map(|e| Encoded::PreEncoded(pre_encode(e)))
+            .collect();
+        let c = round_fused(&strategy, &pool, &global, &pre);
+        for (x, y) in a.iter().zip(&c) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{}: wire path diverged", case.name);
+        }
+
+        let wire_bytes = encs[0].wire_bytes() as f64;
+        let base = bench(&format!("densify+fold {}", case.name), budget, || {
+            std::hint::black_box(round_baseline(&strategy, &global, &encs).len());
+        });
+        let fused = bench(&format!("fused fold   {}", case.name), budget, || {
+            std::hint::black_box(round_fused(&strategy, &pool, &global, &encs).len());
+        });
+        let wire = bench(&format!("fused wire   {}", case.name), budget, || {
+            std::hint::black_box(round_fused(&strategy, &pool, &global, &pre).len());
+        });
+
+        let ups = |s: &BenchStats| K as f64 / (s.mean_ns / 1e9);
+        let speedup = ups(&fused) / ups(&base);
+        println!(
+            "{}: baseline {:.0} updates/s, fused {:.0} updates/s ({:.2}x), wire-bytes {:.0} updates/s",
+            case.name,
+            ups(&base),
+            ups(&fused),
+            speedup,
+            ups(&wire),
+        );
+        extra.push((
+            case.name.to_string(),
+            json_num_obj(&[
+                ("params", P as f64),
+                ("updates_per_round", K as f64),
+                ("bytes_per_update", wire_bytes),
+                ("baseline_updates_per_sec", ups(&base)),
+                ("fused_updates_per_sec", ups(&fused)),
+                ("wire_updates_per_sec", ups(&wire)),
+                ("speedup", speedup),
+                ("allocs_avoided_per_update", case.allocs_avoided),
+            ]),
+        ));
+        match case.name {
+            "paper(top25+q8)" => paper_speedup = Some(speedup),
+            "dense(none)" => dense_speedup = Some(speedup),
+            _ => {}
+        }
+        stats.push(base);
+        stats.push(fused);
+        stats.push(wire);
+    }
+
+    print_table(
+        "update ingest (densify-then-fold baseline vs fused decode→fold), K=20 rounds of 1M params",
+        &stats,
+    );
+    let paper = paper_speedup.unwrap();
+    let dense = dense_speedup.unwrap();
+    println!(
+        "\nPAPER config: {:.2}x updates/sec ({}); dense: {:.2}x ({})",
+        paper,
+        if paper >= 5.0 { "MEETS >=5x target" } else { "misses >=5x target" },
+        dense,
+        if dense >= 0.95 { "no regression" } else { "REGRESSION" },
+    );
+
+    let extras: Vec<(&str, Value)> = extra.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    write_json_report("BENCH_ingest.json", "hotpath_ingest", &stats, &extras).unwrap();
+}

@@ -11,14 +11,15 @@
 //! per round (~k·16P vs ~k·4P) — this bench makes that trade visible
 //! instead of implicit.
 
-use fedhpc::benchkit::{bench, fmt_ns, print_table, BenchStats};
+use fedhpc::benchkit::{
+    bench, budget_from_env, fmt_ns, json_num_obj, print_table, write_json_report, BenchStats,
+};
 use fedhpc::config::Aggregation;
 use fedhpc::orchestrator::strategy::registry::strategy_from_config;
 use fedhpc::orchestrator::strategy::SgdServer;
 use fedhpc::orchestrator::{AggInput, RoundAggregator};
 use fedhpc::util::parallel::par_chunks_mut;
 use fedhpc::util::rng::Rng;
-use std::time::Duration;
 
 /// The pre-streaming batch kernel (block-major, L1-resident f64
 /// accumulator block), kept here as the honest baseline: this is the
@@ -77,7 +78,7 @@ fn human(bytes: u64) -> String {
 }
 
 fn main() {
-    let budget = Duration::from_secs(3);
+    let budget = budget_from_env(3000);
     let strategy = strategy_from_config(&Aggregation::FedAvg);
     let mut stats: Vec<BenchStats> = Vec::new();
     let mut memo: Vec<String> = Vec::new();
@@ -160,4 +161,17 @@ fn main() {
         fmt_ns(buf.mean_ns),
         fmt_ns(st.mean_ns),
     );
+    let extra = json_num_obj(&[
+        ("buffered_round_ns_60x1m", buf.mean_ns),
+        ("streaming_round_ns_60x1m", st.mean_ns),
+        ("buffered_peak_bytes_60x1m", (4.0 * 1e6) * 60.0 + 8.0 * 1e6),
+        ("streaming_peak_bytes_60x1m", 4.0 * 1e6 + 8.0 * 1e6),
+    ]);
+    write_json_report(
+        "BENCH_streaming.json",
+        "hotpath_streaming",
+        &stats,
+        &[("collection", extra)],
+    )
+    .unwrap();
 }

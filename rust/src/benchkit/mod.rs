@@ -62,6 +62,64 @@ pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchStats {
     }
 }
 
+/// Per-case time budget for a bench binary: the default, unless
+/// `FEDHPC_BENCH_BUDGET_MS` overrides it (CI smoke runs set a few tens
+/// of milliseconds so the binaries double as cheap regression probes).
+pub fn budget_from_env(default_ms: u64) -> Duration {
+    let ms = std::env::var("FEDHPC_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(default_ms);
+    Duration::from_millis(ms.max(1))
+}
+
+/// Build a JSON object from numeric key/value pairs (helper for the
+/// `extra` metrics of [`write_json_report`]).
+pub fn json_num_obj(pairs: &[(&str, f64)]) -> crate::util::json::Value {
+    use crate::util::json::Value;
+    let mut m = std::collections::BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert((*k).to_string(), Value::Num(*v));
+    }
+    Value::Obj(m)
+}
+
+/// Write a bench run as machine-readable JSON (the repo convention is
+/// `BENCH_<name>.json` in the working directory) so the perf
+/// trajectory is trackable across PRs. Timing stats are keyed by
+/// benchmark name; `extra` carries bench-specific derived metrics
+/// (updates/sec, speedups, bytes/update, …).
+pub fn write_json_report(
+    path: &str,
+    bench: &str,
+    stats: &[BenchStats],
+    extra: &[(&str, crate::util::json::Value)],
+) -> std::io::Result<()> {
+    use crate::util::json::Value;
+    use std::collections::BTreeMap;
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Value::Str(bench.to_string()));
+    let mut results = BTreeMap::new();
+    for s in stats {
+        let mut m = BTreeMap::new();
+        m.insert("iters".to_string(), Value::Num(s.iters as f64));
+        m.insert("mean_ns".to_string(), Value::Num(s.mean_ns));
+        m.insert("median_ns".to_string(), Value::Num(s.median_ns));
+        m.insert("p95_ns".to_string(), Value::Num(s.p95_ns));
+        m.insert("min_ns".to_string(), Value::Num(s.min_ns));
+        results.insert(s.name.clone(), Value::Obj(m));
+    }
+    root.insert("results".to_string(), Value::Obj(results));
+    for (k, v) in extra {
+        root.insert((*k).to_string(), v.clone());
+    }
+    let mut body = Value::Obj(root).to_string();
+    body.push('\n');
+    std::fs::write(path, body)?;
+    println!("\nmachine-readable report: {path}");
+    Ok(())
+}
+
 /// Print a group of results as an aligned table.
 pub fn print_table(title: &str, stats: &[BenchStats]) {
     println!("\n== {title} ==");

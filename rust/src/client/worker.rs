@@ -11,11 +11,12 @@
 use super::profile::profile_runtime;
 use super::trainer::train_local;
 use crate::cluster::Node;
-use crate::compress::compress;
+use crate::compress::{compress, decompress_owned, DecodedView, Encoded};
 use crate::data::Shard;
 use crate::faults::{FaultAction, FaultInjector};
 use crate::network::{ClientTransport, Msg, UpdateStats};
 use crate::runtime::ModelRuntime;
+use crate::util::scratch::ScratchPool;
 use anyhow::Result;
 use std::time::{Duration, Instant};
 
@@ -50,6 +51,8 @@ pub struct Worker<T: ClientTransport> {
     shard: Shard,
     injector: FaultInjector,
     opts: WorkerOptions,
+    /// Recycles the per-round global-model decode buffer.
+    scratch: ScratchPool,
 }
 
 impl<T: ClientTransport> Worker<T> {
@@ -68,6 +71,30 @@ impl<T: ClientTransport> Worker<T> {
             shard,
             injector,
             opts,
+            scratch: ScratchPool::new(),
+        }
+    }
+
+    /// Decode the broadcast global model into a dense vector. Owned
+    /// dense payloads (the normal broadcast) move straight out with no
+    /// copy ([`decompress_owned`]); compressed broadcasts scatter into
+    /// a pooled scratch buffer instead of a fresh `vec![0f32; P]` per
+    /// round. Returns `true` when the buffer came from the pool — only
+    /// those go back via `put` after training (pooling the moved-out
+    /// message payloads would grow the pool by one dead buffer per
+    /// round, since that path never takes from it).
+    fn decode_global(&self, params: Encoded) -> Result<(Vec<f32>, bool)> {
+        let n = self.runtime.n_params();
+        match params {
+            p @ (Encoded::Dense(_) | Encoded::PreEncoded(_)) => {
+                Ok((decompress_owned(p, n)?, false))
+            }
+            enc => {
+                let view = DecodedView::of(&enc, n)?;
+                let mut buf = self.scratch.take(n);
+                view.write_dense(&mut buf);
+                Ok((buf, true))
+            }
         }
     }
 
@@ -115,7 +142,7 @@ impl<T: ClientTransport> Worker<T> {
                         log::debug!("worker {id}: injected dropout in round {round}");
                         continue;
                     }
-                    let global = crate::compress::decompress(&params, self.runtime.n_params())?;
+                    let (global, pooled) = self.decode_global(params)?;
                     let stop_frac = match action {
                         FaultAction::Preempt { progress } => progress,
                         _ => 1.0,
@@ -132,6 +159,11 @@ impl<T: ClientTransport> Worker<T> {
                         stop_frac,
                     )?;
                     let compute = t0.elapsed();
+                    // training no longer needs the global model —
+                    // recycle pool-owned buffers for the next decode
+                    if pooled {
+                        self.scratch.put(global);
+                    }
                     self.emulate_heterogeneity(compute, &action);
                     if let FaultAction::Preempt { .. } = action {
                         log::debug!("worker {id}: preempted in round {round}");

@@ -9,7 +9,8 @@ use crate::util::rng::Rng;
 /// Sorted ascending.
 pub fn dropout_mask_indices(len: usize, keep_frac: f32, seed: u64) -> Vec<u32> {
     assert!((0.0..=1.0).contains(&keep_frac));
-    if keep_frac >= 1.0 {
+    if keep_frac >= 1.0 || len == 0 {
+        // len == 0: nothing to keep — the old `.clamp(1, 0)` panicked
         return (0..len as u32).collect();
     }
     let k = ((len as f64 * keep_frac as f64).round() as usize).clamp(1, len);

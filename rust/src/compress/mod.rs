@@ -10,6 +10,32 @@
 //! Semantics are bit-matched to the L1 Pallas kernels (same scale rule,
 //! same round-half-even, same pessimistic tie handling) — pinned by
 //! tests against values exported from the Python oracle.
+//!
+//! # Ingest without materialization
+//!
+//! [`decompress`] reconstructs the dense vector — O(P) allocation and
+//! writes no matter how sparse the encoding was. The server-side ingest
+//! hot path never needs that vector: aggregation folds `w·Δ` into an
+//! accumulator, and a sparse update only touches its stored
+//! coordinates. [`DecodedView`] is the zero-materialization decode: a
+//! borrowed, *validated* view over an [`Encoded`] (including the raw
+//! bytes of a [`PreEncoded`] payload, read in place) that yields
+//! `(index, value)` pairs via [`DecodedView::for_each_nonzero`] or
+//! fused-folds them via [`DecodedView::fold_scaled_into`] — O(k) for
+//! Sparse/QSparse, O(kept) for Masked, chunk-parallel for Dense/QDense.
+//! Skipping the unstored coordinates is bit-identical to folding the
+//! densified vector: every unstored coordinate decodes to `+0.0`, and
+//! `acc + w·(+0.0)` cannot change `acc` because a fold accumulator is
+//! never `-0.0` (it starts at `+0.0`, and IEEE-754 addition only
+//! yields `-0.0` from `(-0.0) + (-0.0)`, which `+0.0 + t` never
+//! produces). Stored zeros (including `-0.0`) are still yielded, so
+//! their contributions match the dense path exactly; the invariant is
+//! pinned by property tests across all five encodings.
+//!
+//! Validation is strict: a view rejects out-of-bounds, non-increasing
+//! or duplicated indices up front (the densify path's last-write-wins
+//! on duplicates cannot be reproduced by a fold, so such updates are
+//! refused rather than silently aggregated differently).
 
 mod dropout;
 mod quantize;
@@ -20,6 +46,7 @@ pub use quantize::{dequantize, quantize, QData, QuantBits, Quantized};
 pub use sparsify::{sparsify_topk, Sparse};
 
 use crate::config::CompressionConfig;
+use crate::util::bytes::{f32_le_at, i16_le_at, u32_le_at};
 use anyhow::{bail, Result};
 
 /// A wire-ready encoded update.
@@ -89,6 +116,371 @@ impl Encoded {
             Encoded::Masked { dense_len, .. } => *dense_len,
             Encoded::PreEncoded(p) => p.dense_len,
         }
+    }
+}
+
+/// Borrowed value storage of a view: decoded f32 values are produced on
+/// the fly from whatever representation the encoding carries — owned
+/// typed slices for a decoded [`Encoded`], raw little-endian wire bytes
+/// for a [`PreEncoded`] payload (no intermediate `Vec` either way).
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum ValSlice<'a> {
+    F32(&'a [f32]),
+    /// Packed LE f32 wire bytes (`4·len`).
+    F32Le(&'a [u8]),
+    Q8 { v: &'a [i8], scale: f32 },
+    Q16 { v: &'a [i16], scale: f32 },
+    /// Packed LE i16 wire bytes (`2·len`).
+    Q16Le { v: &'a [u8], scale: f32 },
+}
+
+impl<'a> ValSlice<'a> {
+    fn len(&self) -> usize {
+        match self {
+            ValSlice::F32(v) => v.len(),
+            ValSlice::F32Le(v) => v.len() / 4,
+            ValSlice::Q8 { v, .. } => v.len(),
+            ValSlice::Q16 { v, .. } => v.len(),
+            ValSlice::Q16Le { v, .. } => v.len() / 2,
+        }
+    }
+
+    /// `f(i, value)` for `i` in `lo..hi`, with the representation match
+    /// hoisted out of the loop. Decode math is identical to
+    /// [`dequantize`] (`int as f32 * scale`), so views are bit-equal
+    /// to densifying.
+    fn for_each_range(&self, lo: usize, hi: usize, mut f: impl FnMut(usize, f32)) {
+        match self {
+            ValSlice::F32(v) => {
+                for (i, &x) in v[lo..hi].iter().enumerate() {
+                    f(lo + i, x);
+                }
+            }
+            ValSlice::F32Le(v) => {
+                for i in lo..hi {
+                    f(i, f32_le_at(v, i));
+                }
+            }
+            ValSlice::Q8 { v, scale } => {
+                for (i, &x) in v[lo..hi].iter().enumerate() {
+                    f(lo + i, x as f32 * scale);
+                }
+            }
+            ValSlice::Q16 { v, scale } => {
+                for (i, &x) in v[lo..hi].iter().enumerate() {
+                    f(lo + i, x as f32 * scale);
+                }
+            }
+            ValSlice::Q16Le { v, scale } => {
+                for i in lo..hi {
+                    f(i, i16_le_at(v, i) as f32 * scale);
+                }
+            }
+        }
+    }
+}
+
+/// Borrowed index storage of a sparse view (owned or raw LE bytes).
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum IdxSlice<'a> {
+    U32(&'a [u32]),
+    /// Packed LE u32 wire bytes (`4·len`).
+    U32Le(&'a [u8]),
+}
+
+impl<'a> IdxSlice<'a> {
+    fn len(&self) -> usize {
+        match self {
+            IdxSlice::U32(v) => v.len(),
+            IdxSlice::U32Le(v) => v.len() / 4,
+        }
+    }
+
+    #[inline]
+    fn get(&self, i: usize) -> u32 {
+        match self {
+            IdxSlice::U32(v) => v[i],
+            IdxSlice::U32Le(v) => u32_le_at(v, i),
+        }
+    }
+
+    /// First position whose index is ≥ `bound` (indices are validated
+    /// strictly increasing, so binary search is valid).
+    fn lower_bound(&self, bound: u32) -> usize {
+        let (mut lo, mut hi) = (0, self.len());
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if self.get(mid) < bound {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+}
+
+enum ViewKind<'a> {
+    /// Every coordinate is stored, in order.
+    Dense(ValSlice<'a>),
+    /// Explicit (strictly increasing) indices + values.
+    Indexed { idx: IdxSlice<'a>, vals: ValSlice<'a> },
+    /// Seeded federated-dropout mask: kept indices are regenerated
+    /// (owned, O(kept)); values are borrowed from the inner encoding.
+    Kept { kept: Vec<u32>, vals: ValSlice<'a> },
+}
+
+/// A validated, zero-materialization decode of an [`Encoded`] update:
+/// the nonzero structure is exposed for visiting / fused folding
+/// without ever building the dense vector. See the module docs for the
+/// bit-identity argument and the strictness contract.
+pub struct DecodedView<'a> {
+    n: usize,
+    kind: ViewKind<'a>,
+}
+
+/// Minimum stored entries before a fold parallelizes (below this the
+/// scoped-thread spawn costs more than the scatter).
+const PAR_MIN_NNZ: usize = 64 * 1024;
+/// Accumulator chunk for parallel folds — must stay identical to the
+/// dense fold in `orchestrator::aggregate` so thread-count determinism
+/// arguments carry over unchanged.
+const FOLD_CHUNK: usize = 256 * 1024;
+
+impl<'a> DecodedView<'a> {
+    /// Build a view over `enc` for a model of `n` parameters,
+    /// performing every check [`decompress`] would (lengths, bounds)
+    /// plus strict index monotonicity.
+    pub fn of(enc: &'a Encoded, n: usize) -> Result<DecodedView<'a>> {
+        match enc {
+            Encoded::Dense(v) => Self::from_parts_dense(ValSlice::F32(v), n, "dense"),
+            Encoded::QDense(q) => {
+                if q.n != n {
+                    bail!("qdense length {} != {}", q.n, n);
+                }
+                Self::from_parts_dense(quantized_vals(q), n, "qdense")
+            }
+            Encoded::Sparse(s) => {
+                if s.dense_len != n {
+                    bail!("sparse dense length {} != {}", s.dense_len, n);
+                }
+                Self::from_parts_indexed(IdxSlice::U32(&s.idx), ValSlice::F32(&s.val), n, "sparse")
+            }
+            Encoded::QSparse { idx, q } => {
+                if q.n != n {
+                    bail!("qsparse length {} != {}", q.n, n);
+                }
+                Self::from_parts_indexed(IdxSlice::U32(idx), quantized_vals(q), n, "qsparse")
+            }
+            Encoded::Masked {
+                seed,
+                keep,
+                dense_len,
+                inner,
+            } => {
+                let vals = match inner.as_ref() {
+                    Encoded::Dense(v) => ValSlice::F32(v),
+                    Encoded::QDense(q) => quantized_vals(q),
+                    other => bail!("masked inner must be dense-like, got {other:?}"),
+                };
+                Self::from_parts_masked(*seed, *keep, *dense_len, vals, n)
+            }
+            Encoded::PreEncoded(p) => crate::network::message::view_payload(&p.bytes, n),
+        }
+    }
+
+    /// Dense-like view: exactly `n` stored values.
+    pub(crate) fn from_parts_dense(
+        vals: ValSlice<'a>,
+        n: usize,
+        what: &str,
+    ) -> Result<DecodedView<'a>> {
+        if vals.len() != n {
+            bail!("{what} length {} != {}", vals.len(), n);
+        }
+        Ok(DecodedView {
+            n,
+            kind: ViewKind::Dense(vals),
+        })
+    }
+
+    /// Explicitly-indexed sparse view; validates arity, bounds and
+    /// strict monotonicity (duplicates would make the fold diverge from
+    /// the densify path's last-write-wins — refuse them instead).
+    pub(crate) fn from_parts_indexed(
+        idx: IdxSlice<'a>,
+        vals: ValSlice<'a>,
+        n: usize,
+        what: &str,
+    ) -> Result<DecodedView<'a>> {
+        let len = idx.len();
+        if len != vals.len() {
+            bail!("{what} arity mismatch: {} vs {}", vals.len(), len);
+        }
+        // hot path: one tight monotonicity sweep per representation;
+        // once indices strictly increase, only the last needs a bounds
+        // check
+        let increasing = match idx {
+            IdxSlice::U32(v) => v.windows(2).all(|w| w[0] < w[1]),
+            IdxSlice::U32Le(raw) => (1..len).all(|j| u32_le_at(raw, j - 1) < u32_le_at(raw, j)),
+        };
+        if !increasing {
+            bail!("{what} indices not strictly increasing");
+        }
+        if len > 0 {
+            let last = idx.get(len - 1);
+            if last as usize >= n {
+                bail!("{what} index {last} out of bounds {n}");
+            }
+        }
+        Ok(DecodedView {
+            n,
+            kind: ViewKind::Indexed { idx, vals },
+        })
+    }
+
+    /// Seeded-mask view: regenerates the kept-coordinate set and
+    /// validates it against the stored values.
+    pub(crate) fn from_parts_masked(
+        seed: u64,
+        keep: f32,
+        dense_len: usize,
+        vals: ValSlice<'a>,
+        n: usize,
+    ) -> Result<DecodedView<'a>> {
+        if dense_len != n {
+            bail!("masked dense length {dense_len} != {n}");
+        }
+        if !(0.0..=1.0).contains(&keep) {
+            bail!("masked keep fraction {keep} outside [0, 1]");
+        }
+        let kept = dropout_mask_indices(n, keep, seed);
+        if vals.len() != kept.len() {
+            bail!(
+                "masked arity mismatch: {} values for {} kept coords",
+                vals.len(),
+                kept.len()
+            );
+        }
+        Ok(DecodedView {
+            n,
+            kind: ViewKind::Kept { kept, vals },
+        })
+    }
+
+    /// Logical (dense) length of the decoded update.
+    pub fn dense_len(&self) -> usize {
+        self.n
+    }
+
+    /// Stored entries the view will yield (== `dense_len` for
+    /// dense-like encodings).
+    pub fn nnz(&self) -> usize {
+        match &self.kind {
+            ViewKind::Dense(v) => v.len(),
+            ViewKind::Indexed { idx, .. } => idx.len(),
+            ViewKind::Kept { kept, .. } => kept.len(),
+        }
+    }
+
+    /// Whether every coordinate is stored (Dense/QDense payloads).
+    pub fn is_dense(&self) -> bool {
+        matches!(self.kind, ViewKind::Dense(_))
+    }
+
+    /// Visit every *stored* `(index, value)` pair in increasing index
+    /// order. Unstored coordinates are exactly `0.0` and are not
+    /// yielded; stored zeros (including `-0.0`) are.
+    pub fn for_each_nonzero(&self, mut f: impl FnMut(usize, f32)) {
+        match &self.kind {
+            ViewKind::Dense(vals) => vals.for_each_range(0, vals.len(), f),
+            ViewKind::Indexed { idx, vals } => {
+                vals.for_each_range(0, vals.len(), |j, v| f(idx.get(j) as usize, v))
+            }
+            ViewKind::Kept { kept, vals } => {
+                vals.for_each_range(0, vals.len(), |j, v| f(kept[j] as usize, v))
+            }
+        }
+    }
+
+    /// Materialize into `out` (fully overwritten) — bit-identical to
+    /// [`decompress`]. This is the escape hatch for consumers that
+    /// genuinely need the dense vector (buffered strategies, the
+    /// client-side global-model decode); pair it with a
+    /// [`crate::util::scratch::ScratchPool`] buffer to avoid the
+    /// per-update allocation.
+    pub fn write_dense(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.n, "write_dense length mismatch");
+        match &self.kind {
+            ViewKind::Dense(ValSlice::F32(v)) => out.copy_from_slice(v),
+            ViewKind::Dense(vals) => vals.for_each_range(0, vals.len(), |i, v| out[i] = v),
+            _ => {
+                out.fill(0.0);
+                self.for_each_nonzero(|i, v| out[i] = v);
+            }
+        }
+    }
+
+    /// Fused decode→fold: `acc[i] += w * value as f64` for every stored
+    /// entry. Cost is O(nnz); dense payloads and large sparse payloads
+    /// partition the accumulator across threads (each element still
+    /// receives exactly one addition, so the result is independent of
+    /// thread count — the same argument as the dense fold in
+    /// `orchestrator::aggregate`).
+    pub fn fold_scaled_into(&self, acc: &mut [f64], w: f64) {
+        assert_eq!(acc.len(), self.n, "fold_scaled_into length mismatch");
+        match &self.kind {
+            ViewKind::Dense(vals) => {
+                crate::util::parallel::par_chunks_mut(acc, FOLD_CHUNK, |offset, chunk| {
+                    vals.for_each_range(offset, offset + chunk.len(), |i, v| {
+                        chunk[i - offset] += w * v as f64;
+                    });
+                });
+            }
+            ViewKind::Indexed { idx, vals } => {
+                if idx.len() < PAR_MIN_NNZ {
+                    vals.for_each_range(0, vals.len(), |j, v| {
+                        acc[idx.get(j) as usize] += w * v as f64;
+                    });
+                } else {
+                    // indices are strictly increasing: each accumulator
+                    // chunk owns a contiguous index subrange, found by
+                    // binary search
+                    crate::util::parallel::par_chunks_mut(acc, FOLD_CHUNK, |offset, chunk| {
+                        let lo = idx.lower_bound(offset as u32);
+                        let hi = idx.lower_bound((offset + chunk.len()) as u32);
+                        vals.for_each_range(lo, hi, |j, v| {
+                            chunk[idx.get(j) as usize - offset] += w * v as f64;
+                        });
+                    });
+                }
+            }
+            ViewKind::Kept { kept, vals } => {
+                if kept.len() < PAR_MIN_NNZ {
+                    vals.for_each_range(0, vals.len(), |j, v| {
+                        acc[kept[j] as usize] += w * v as f64;
+                    });
+                } else {
+                    // kept indices are sorted ascending by construction
+                    crate::util::parallel::par_chunks_mut(acc, FOLD_CHUNK, |offset, chunk| {
+                        let lo = kept.partition_point(|&i| (i as usize) < offset);
+                        let hi = kept.partition_point(|&i| (i as usize) < offset + chunk.len());
+                        vals.for_each_range(lo, hi, |j, v| {
+                            chunk[kept[j] as usize - offset] += w * v as f64;
+                        });
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Map a quantized payload to its value slice (arity against the
+/// surrounding structure is checked by the `from_parts_*` constructor).
+fn quantized_vals(q: &Quantized) -> ValSlice<'_> {
+    match &q.data {
+        QData::I8(v) => ValSlice::Q8 { v, scale: q.scale },
+        QData::I16(v) => ValSlice::Q16 { v, scale: q.scale },
     }
 }
 
@@ -174,6 +566,11 @@ pub fn decompress(enc: &Encoded, n: usize) -> Result<Vec<f32>> {
             if q.n != n {
                 bail!("qdense length {} != {}", q.n, n);
             }
+            if q.data.len() != n {
+                // a corrupt payload must error, not hand back a
+                // wrong-length "dense vector of length n"
+                bail!("qdense arity mismatch: {} vs {}", q.data.len(), n);
+            }
             Ok(dequantize(q))
         }
         Encoded::Sparse(s) => {
@@ -210,6 +607,11 @@ pub fn decompress(enc: &Encoded, n: usize) -> Result<Vec<f32>> {
         } => {
             if *dense_len != n {
                 bail!("masked dense length {dense_len} != {n}");
+            }
+            if !(0.0..=1.0).contains(keep) {
+                // a hostile wire value must error, not trip the
+                // mask generator's assert
+                bail!("masked keep fraction {keep} outside [0, 1]");
             }
             let kept = dropout_mask_indices(n, *keep, *seed);
             let vals = match inner.as_ref() {
@@ -248,6 +650,27 @@ pub fn decompress(enc: &Encoded, n: usize) -> Result<Vec<f32>> {
     }
 }
 
+/// [`decompress`] for callers that own the encoding: the `Dense` (and
+/// pre-encoded dense) payload is moved out instead of cloned — the
+/// client-side global-model decode receives a fresh dense vector every
+/// round and was paying a full O(P) copy for nothing.
+pub fn decompress_owned(enc: Encoded, n: usize) -> Result<Vec<f32>> {
+    match enc {
+        Encoded::Dense(v) => {
+            if v.len() != n {
+                bail!("dense length {} != {}", v.len(), n);
+            }
+            Ok(v)
+        }
+        // decode_payload materializes the inner encoding owned, so the
+        // dense case moves through the arm above
+        Encoded::PreEncoded(p) => {
+            decompress_owned(crate::network::message::decode_payload(&p.bytes)?, n)
+        }
+        other => decompress(&other, n),
+    }
+}
+
 fn dequantize_values(q: &Quantized) -> Vec<f32> {
     // dequantize exactly the stored values (q.n may be the dense len
     // for QSparse)
@@ -258,6 +681,11 @@ fn dequantize_values(q: &Quantized) -> Vec<f32> {
 }
 
 fn k_of(n: usize, frac: f32) -> usize {
+    if n == 0 {
+        // an empty update keeps an empty encoding — the old
+        // `.clamp(1, 0)` panicked here
+        return 0;
+    }
     ((n as f64 * frac as f64).round() as usize).clamp(1, n)
 }
 
@@ -433,6 +861,170 @@ mod tests {
         assert_eq!(pre.dense_len(), 500);
         assert_eq!(pre.wire_bytes(), 4 * 500);
         assert_eq!(decompress(&pre, 500).unwrap(), v);
+    }
+
+    /// ISSUE satellite regression: an empty update with `topk_frac <
+    /// 1.0` (or `dropout_keep < 1.0`) used to panic in `k_of` /
+    /// `dropout_mask_indices` via `.clamp(1, 0)`.
+    #[test]
+    fn empty_update_compresses_to_empty_encoding() {
+        for cfg in [
+            CompressionConfig::NONE,
+            CompressionConfig::PAPER,
+            CompressionConfig {
+                quant_bits: 8,
+                topk_frac: 1.0,
+                dropout_keep: 0.5,
+            },
+            CompressionConfig {
+                quant_bits: 32,
+                topk_frac: 0.5,
+                dropout_keep: 0.5,
+            },
+        ] {
+            let enc = compress(&[], &cfg, 3);
+            assert_eq!(enc.dense_len(), 0, "{cfg:?}");
+            assert_eq!(decompress(&enc, 0).unwrap(), Vec::<f32>::new());
+            let view = DecodedView::of(&enc, 0).unwrap();
+            assert_eq!(view.nnz(), 0);
+        }
+    }
+
+    fn all_encoding_configs() -> Vec<CompressionConfig> {
+        vec![
+            CompressionConfig::NONE, // Dense
+            CompressionConfig {
+                quant_bits: 8,
+                topk_frac: 1.0,
+                dropout_keep: 1.0,
+            }, // QDense i8
+            CompressionConfig {
+                quant_bits: 16,
+                topk_frac: 1.0,
+                dropout_keep: 1.0,
+            }, // QDense i16
+            CompressionConfig {
+                quant_bits: 32,
+                topk_frac: 0.25,
+                dropout_keep: 1.0,
+            }, // Sparse
+            CompressionConfig::PAPER, // QSparse
+            CompressionConfig {
+                quant_bits: 32,
+                topk_frac: 1.0,
+                dropout_keep: 0.5,
+            }, // Masked + Dense
+            CompressionConfig {
+                quant_bits: 8,
+                topk_frac: 1.0,
+                dropout_keep: 0.5,
+            }, // Masked + QDense
+        ]
+    }
+
+    #[test]
+    fn decoded_view_matches_decompress_for_every_encoding() {
+        let v = vec_of(2000, 11);
+        for cfg in all_encoding_configs() {
+            let enc = compress(&v, &cfg, 9);
+            let dense = decompress(&enc, v.len()).unwrap();
+            let pre = Encoded::PreEncoded(crate::network::message::pre_encode(&enc));
+            for enc in [enc, pre] {
+                let view = DecodedView::of(&enc, v.len()).unwrap();
+                assert_eq!(view.dense_len(), v.len());
+                // stored pairs come in strictly increasing index order
+                // and carry exactly the densified values
+                let mut last: Option<usize> = None;
+                let mut count = 0usize;
+                let mut seen = vec![false; v.len()];
+                view.for_each_nonzero(|i, x| {
+                    if let Some(p) = last {
+                        assert!(p < i, "indices must increase ({p} then {i})");
+                    }
+                    last = Some(i);
+                    assert_eq!(x.to_bits(), dense[i].to_bits(), "{cfg:?} at {i}");
+                    seen[i] = true;
+                    count += 1;
+                });
+                assert_eq!(count, view.nnz());
+                for (i, s) in seen.iter().enumerate() {
+                    if !s {
+                        assert_eq!(dense[i], 0.0, "unstored coord {i} must be zero");
+                    }
+                }
+                // write_dense is bit-identical to decompress
+                let mut buf = vec![9f32; v.len()];
+                view.write_dense(&mut buf);
+                for (j, (a, b)) in buf.iter().zip(&dense).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{cfg:?} write_dense at {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decoded_view_rejects_malformed_encodings() {
+        // wrong dense length
+        assert!(DecodedView::of(&Encoded::Dense(vec![1.0; 4]), 5).is_err());
+        // out-of-bounds index
+        let bad = |idx: Vec<u32>, val: Vec<f32>| {
+            Encoded::Sparse(Sparse {
+                idx,
+                val,
+                dense_len: 5,
+            })
+        };
+        assert!(DecodedView::of(&bad(vec![10], vec![1.0]), 5).is_err());
+        // duplicate / non-increasing indices: densify's last-write-wins
+        // cannot be reproduced by a fold, so the view refuses them
+        assert!(DecodedView::of(&bad(vec![1, 1], vec![1.0, 2.0]), 5).is_err());
+        assert!(DecodedView::of(&bad(vec![3, 1], vec![1.0, 2.0]), 5).is_err());
+        // arity mismatch
+        assert!(DecodedView::of(&bad(vec![1], vec![1.0, 2.0]), 5).is_err());
+        // qdense declared length must match the model size even when
+        // the stored value count happens to (decompress parity)
+        let bad_qn = Encoded::QDense(Quantized {
+            data: QData::I8(vec![0; 5]),
+            scale: 1.0,
+            n: 4,
+        });
+        assert!(DecodedView::of(&bad_qn, 5).is_err());
+        // declared length right but payload short: both decode paths
+        // must error rather than hand back a wrong-length vector
+        let bad_arity = Encoded::QDense(Quantized {
+            data: QData::I8(vec![0; 3]),
+            scale: 1.0,
+            n: 5,
+        });
+        assert!(decompress(&bad_arity, 5).is_err());
+        assert!(DecodedView::of(&bad_arity, 5).is_err());
+        // hostile keep fraction errors instead of tripping the mask
+        // generator's assert — on both decode paths
+        let bad_keep = Encoded::Masked {
+            seed: 0,
+            keep: 2.0,
+            dense_len: 4,
+            inner: Box::new(Encoded::Dense(vec![0.0; 4])),
+        };
+        assert!(DecodedView::of(&bad_keep, 4).is_err());
+        assert!(decompress(&bad_keep, 4).is_err());
+    }
+
+    #[test]
+    fn decompress_owned_moves_dense_out() {
+        let v = vec![1.0f32, 2.0, 3.0];
+        let ptr = v.as_ptr();
+        let out = decompress_owned(Encoded::Dense(v), 3).unwrap();
+        assert_eq!(out.as_ptr(), ptr, "owned dense decode must not copy");
+        assert!(decompress_owned(Encoded::Dense(vec![1.0]), 3).is_err());
+        // pre-encoded dense moves the freshly decoded vector out too
+        let pre = Encoded::PreEncoded(crate::network::message::pre_encode_dense(&[1.5, -2.5]));
+        assert_eq!(decompress_owned(pre, 2).unwrap(), vec![1.5, -2.5]);
+        // non-dense encodings fall through to the borrowed path
+        let sp = compress(&vec_of(100, 2), &CompressionConfig::PAPER, 1);
+        let a = decompress(&sp, 100).unwrap();
+        let b = decompress_owned(sp, 100).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

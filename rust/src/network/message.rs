@@ -6,7 +6,7 @@
 //! round-trip + fuzz-ish tests below.
 
 use crate::cluster::NodeId;
-use crate::compress::{Encoded, PreEncoded, QData, Quantized, Sparse};
+use crate::compress::{DecodedView, Encoded, PreEncoded, QData, Quantized, Sparse};
 use crate::config::CompressionConfig;
 use crate::util::bytes::{Reader, Writer};
 use anyhow::{bail, Result};
@@ -397,6 +397,81 @@ pub fn decode_payload(bytes: &[u8]) -> Result<Encoded> {
         bail!("trailing bytes after encoded payload");
     }
     Ok(e)
+}
+
+/// Borrowed decode of a [`PreEncoded`] payload: parse the wire bytes
+/// into a [`DecodedView`] whose index/value storage *is* the payload
+/// buffer — no `Vec` is materialized for any encoding. Validation
+/// (lengths, bounds, monotonic indices) is identical to
+/// [`DecodedView::of`] over the decoded structures, because both paths
+/// share the `from_parts_*` constructors.
+pub fn view_payload<'a>(bytes: &'a [u8], n: usize) -> Result<DecodedView<'a>> {
+    use crate::compress::{IdxSlice, ValSlice};
+    let mut r = Reader::new(bytes);
+    let view = match r.u8()? {
+        0 => DecodedView::from_parts_dense(ValSlice::F32Le(r.f32_raw()?), n, "dense")?,
+        1 => {
+            let (vals, qn) = view_quantized(&mut r)?;
+            if qn != n {
+                bail!("qdense length {qn} != {n}");
+            }
+            DecodedView::from_parts_dense(vals, n, "qdense")?
+        }
+        2 => {
+            let dense_len = r.u64()? as usize;
+            if dense_len != n {
+                bail!("sparse dense length {dense_len} != {n}");
+            }
+            let idx = IdxSlice::U32Le(r.u32_raw()?);
+            let val = ValSlice::F32Le(r.f32_raw()?);
+            DecodedView::from_parts_indexed(idx, val, n, "sparse")?
+        }
+        3 => {
+            let idx = IdxSlice::U32Le(r.u32_raw()?);
+            let (vals, qn) = view_quantized(&mut r)?;
+            if qn != n {
+                bail!("qsparse length {qn} != {n}");
+            }
+            DecodedView::from_parts_indexed(idx, vals, n, "qsparse")?
+        }
+        4 => {
+            let seed = r.u64()?;
+            let keep = r.f32()?;
+            let dense_len = r.u64()? as usize;
+            let vals = match r.u8()? {
+                0 => ValSlice::F32Le(r.f32_raw()?),
+                1 => view_quantized(&mut r)?.0,
+                _ => bail!("masked inner must be dense-like"),
+            };
+            DecodedView::from_parts_masked(seed, keep, dense_len, vals, n)?
+        }
+        t => bail!("bad encoded tag {t}"),
+    };
+    if !r.is_done() {
+        bail!("trailing bytes after encoded payload");
+    }
+    Ok(view)
+}
+
+/// Borrowed counterpart of [`decode_quantized`]: value bytes stay in
+/// the payload buffer. Returns the value slice and the declared decoded
+/// length `n`.
+fn view_quantized<'a>(r: &mut Reader<'a>) -> Result<(crate::compress::ValSlice<'a>, usize)> {
+    use crate::compress::ValSlice;
+    let n = r.u64()? as usize;
+    let scale = r.f32()?;
+    let vals = match r.u8()? {
+        8 => ValSlice::Q8 {
+            v: r.i8_raw()?,
+            scale,
+        },
+        16 => ValSlice::Q16Le {
+            v: r.i16_raw()?,
+            scale,
+        },
+        b => bail!("bad quantized bit width {b}"),
+    };
+    Ok((vals, n))
 }
 
 fn encode_quantized(w: &mut Writer, q: &Quantized) {

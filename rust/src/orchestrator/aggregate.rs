@@ -27,16 +27,31 @@
 //! [`aggregate`] folds its slice in order through the same code path,
 //! pinning batch/streaming equivalence.
 //!
-//! Cost of streaming: each fold streams the full 8·P-byte accumulator
-//! once, so a k-client round moves ~k·16P bytes of accumulator traffic
-//! where the old block-major batch kernel kept a 4 KiB block in L1 and
-//! moved ~k·4P. That extra bandwidth is the price of O(P) collection
-//! memory and of overlapping aggregation with network arrival (the
-//! end-of-round stall disappears); `benches/hotpath_streaming.rs`
-//! measures both sides against the old blocked kernel.
+//! Cost of streaming: each *dense* fold streams the full 8·P-byte
+//! accumulator once, so a k-client round moves ~k·16P bytes of
+//! accumulator traffic where the old block-major batch kernel kept a
+//! 4 KiB block in L1 and moved ~k·4P. That extra bandwidth is the
+//! price of O(P) collection memory and of overlapping aggregation with
+//! network arrival (the end-of-round stall disappears);
+//! `benches/hotpath_streaming.rs` measures both sides against the old
+//! blocked kernel.
+//!
+//! # Fused decode→fold ingest
+//!
+//! The round loop does not decode updates densely at all:
+//! [`StreamingAggregator::fold_view`] folds an arriving update straight
+//! from its [`crate::compress::DecodedView`], touching only the
+//! coordinates that actually crossed the wire — O(k) for a top-k
+//! sparse update, not O(P). The dense fold above remains for callers
+//! that already hold a dense delta (the batch [`aggregate`] wrapper,
+//! tests, custom strategies); both entry points are bit-identical for
+//! the same update and pinned so by property test.
+//! `benches/hotpath_ingest.rs` measures fused vs densify-then-fold and
+//! emits `BENCH_ingest.json`.
 
 use super::strategy::{registry, RoundAggregator, SgdServer};
 use crate::cluster::NodeId;
+use crate::compress::DecodedView;
 use crate::config::Aggregation;
 use anyhow::{bail, Result};
 
@@ -46,6 +61,20 @@ pub struct AggInput {
     pub client: NodeId,
     /// Dense decoded update Δ_c.
     pub delta: Vec<f32>,
+    pub n_samples: u64,
+    pub train_loss: f32,
+    pub update_var: f32,
+}
+
+/// One client's contribution as a zero-materialization decode view —
+/// the ingest-path counterpart of [`AggInput`]. The delta is borrowed
+/// straight from the arriving [`crate::compress::Encoded`] (or its
+/// pre-encoded wire bytes); strategies that can fold sparsely never
+/// see a dense vector at all.
+pub struct ViewInput<'a> {
+    pub client: NodeId,
+    /// Validated decode view over the arriving update Δ_c.
+    pub view: &'a DecodedView<'a>,
     pub n_samples: u64,
     pub train_loss: f32,
     pub update_var: f32,
@@ -114,6 +143,22 @@ impl StreamingAggregator {
         self.raw.len()
     }
 
+    fn check_weight(&self, w: f64, client: NodeId) -> Result<()> {
+        if w.is_nan() || w.is_infinite() || w < 0.0 {
+            bail!("aggregate: invalid weight {w} for client {client}");
+        }
+        Ok(())
+    }
+
+    /// Per-update bookkeeping shared by both fold entry points.
+    fn note(&mut self, client: NodeId, w: f64, n_samples: u64, train_loss: f32) {
+        self.raw.push((client, w));
+        self.total_weight += w;
+        let n = n_samples.max(1) as f64;
+        self.n_total += n;
+        self.loss_weighted += train_loss as f64 * n;
+    }
+
     /// Fold one arriving update with raw (unnormalized) weight `w` into
     /// the accumulator. The caller can (and the orchestrator does) drop
     /// the decoded delta immediately afterwards — nothing of it is
@@ -127,12 +172,7 @@ impl StreamingAggregator {
                 self.acc.len()
             );
         }
-        if w.is_nan() || w.is_infinite() || w < 0.0 {
-            bail!(
-                "aggregate: invalid weight {w} for client {}",
-                input.client
-            );
-        }
+        self.check_weight(w, input.client)?;
         let delta = &input.delta;
         // parallel across disjoint element ranges; each element gets
         // exactly one addition per fold, so the value is independent of
@@ -144,11 +184,30 @@ impl StreamingAggregator {
                 *a += w * x as f64;
             }
         });
-        self.raw.push((input.client, w));
-        self.total_weight += w;
-        let n = input.n_samples.max(1) as f64;
-        self.n_total += n;
-        self.loss_weighted += input.train_loss as f64 * n;
+        self.note(input.client, w, input.n_samples, input.train_loss);
+        Ok(())
+    }
+
+    /// Fused decode→fold: like [`StreamingAggregator::fold`] but
+    /// straight from an encoded update's [`DecodedView`] — O(nnz)
+    /// instead of O(P), and no dense vector is ever materialized.
+    /// Bit-identical to decoding and folding densely (stored entries
+    /// perform the same `acc += w·x` additions in the same per-element
+    /// order; unstored coordinates contribute exactly nothing, which
+    /// matches adding `w·0.0` — see the `compress` module docs for the
+    /// signed-zero argument, and `prop_invariants` for the pin).
+    pub fn fold_view(&mut self, input: &ViewInput<'_>, w: f64) -> Result<()> {
+        if input.view.dense_len() != self.acc.len() {
+            bail!(
+                "aggregate: client {} delta length {} != {}",
+                input.client,
+                input.view.dense_len(),
+                self.acc.len()
+            );
+        }
+        self.check_weight(w, input.client)?;
+        input.view.fold_scaled_into(&mut self.acc, w);
+        self.note(input.client, w, input.n_samples, input.train_loss);
         Ok(())
     }
 
@@ -426,6 +485,74 @@ mod tests {
         agg.fold(&input(0, vec![1.0, 2.0], 1, 0.0, 0.0)).unwrap();
         assert_eq!(agg.n_updates(), 1);
         assert!(agg.finalize(&[0.0; 3], &mut SgdServer).is_err());
+    }
+
+    /// The fused decode→fold entry point is bit-identical to decoding
+    /// densely and folding — including the signed-zero edge (stored
+    /// `-0.0`/`0.0` values and unstored coordinates). The broad pin
+    /// across encodings/permutations lives in `prop_invariants`.
+    #[test]
+    fn fold_view_is_bit_identical_to_densify_then_fold() {
+        use crate::compress::{compress, decompress, DecodedView};
+        use crate::config::CompressionConfig;
+        use crate::util::rng::Rng;
+        let p = 1000;
+        let mut rng = Rng::new(3);
+        let cfg = CompressionConfig::PAPER;
+        let mut dense_agg = StreamingAggregator::new(p);
+        let mut view_agg = StreamingAggregator::new(p);
+        for c in 0..5u32 {
+            let mut upd: Vec<f32> = (0..p).map(|_| rng.normal() as f32 * 0.01).collect();
+            upd[10] = -0.0;
+            upd[20] = 0.0;
+            let enc = compress(&upd, &cfg, c as u64);
+            let dense = decompress(&enc, p).unwrap();
+            let w = 1.0 + c as f64;
+            dense_agg.fold(&input(c, dense, 10, 1.0, 0.0), w).unwrap();
+            let view = DecodedView::of(&enc, p).unwrap();
+            view_agg
+                .fold_view(
+                    &ViewInput {
+                        client: c,
+                        view: &view,
+                        n_samples: 10,
+                        train_loss: 1.0,
+                        update_var: 0.0,
+                    },
+                    w,
+                )
+                .unwrap();
+        }
+        let a = dense_agg.finalize().unwrap();
+        let b = view_agg.finalize().unwrap();
+        for (x, y) in a.delta.iter().zip(&b.delta) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.mean_train_loss.to_bits(), b.mean_train_loss.to_bits());
+    }
+
+    #[test]
+    fn fold_view_rejects_bad_lengths_and_weights() {
+        use crate::compress::{DecodedView, Encoded};
+        let enc = Encoded::Dense(vec![1.0; 3]);
+        let view = DecodedView::of(&enc, 3).unwrap();
+        let vi = |view| ViewInput {
+            client: 0,
+            view,
+            n_samples: 1,
+            train_loss: 0.0,
+            update_var: 0.0,
+        };
+        let mut agg = StreamingAggregator::new(2);
+        assert!(agg.fold_view(&vi(&view), 1.0).is_err());
+        assert_eq!(agg.n_updates(), 0);
+        let mut agg = StreamingAggregator::new(3);
+        assert!(agg.fold_view(&vi(&view), f64::NAN).is_err());
+        assert!(agg.fold_view(&vi(&view), -1.0).is_err());
+        assert_eq!(agg.n_updates(), 0);
+        agg.fold_view(&vi(&view), 2.0).unwrap();
+        assert_eq!(agg.n_updates(), 1);
     }
 
     #[test]

@@ -20,7 +20,7 @@ mod selection;
 mod server;
 pub mod strategy;
 
-pub use aggregate::{aggregate, AggDelta, AggInput, AggOutcome, StreamingAggregator};
+pub use aggregate::{aggregate, AggDelta, AggInput, AggOutcome, StreamingAggregator, ViewInput};
 pub use convergence::ConvergenceTracker;
 pub use registry::{ClientRecord, ClientRegistry};
 pub use selection::select_clients;

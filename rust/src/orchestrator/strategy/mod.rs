@@ -24,12 +24,18 @@
 //!   accumulator and frees the decoded delta immediately
 //!   (fold-then-normalize — see [`super::aggregate`] for the
 //!   invariant and its cost model). Collection memory is O(P)
-//!   regardless of how many clients report.
+//!   regardless of how many clients report. On the ingest hot path the
+//!   update is never decoded densely at all:
+//!   [`AggStrategy::fold_view`] folds it straight from its
+//!   [`crate::compress::DecodedView`] — O(nnz) per update for the
+//!   sparse-aware built-ins, with a densifying (pooled-scratch)
+//!   default so custom strategies keep working unchanged.
 //! * **Buffered** (`needs_buffering() == true`): the round keeps every
 //!   decoded delta alive (O(k·P)) and [`AggStrategy::buffered_delta`]
 //!   sees them together at finalize. This is the escape hatch for
 //!   order statistics — [`TrimmedMean`], [`CoordinateMedian`] — which
-//!   cannot be expressed as a weighted sum.
+//!   cannot be expressed as a weighted sum. Views are densified into
+//!   pooled scratch buffers, recycled when the round finalizes.
 //!
 //! # Determinism invariant
 //!
@@ -48,8 +54,9 @@ mod server_opt;
 pub use robust::{CoordinateMedian, TrimmedMean};
 pub use server_opt::{FedAdam, FedAvgM, ServerOpt, SgdServer};
 
-use super::aggregate::{AggDelta, AggInput, AggOutcome, StreamingAggregator};
+use super::aggregate::{AggDelta, AggInput, AggOutcome, StreamingAggregator, ViewInput};
 use crate::config::WeightScheme;
+use crate::util::scratch::ScratchPool;
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
@@ -88,16 +95,63 @@ pub trait AggStrategy: Send + Sync {
             self.name()
         )
     }
+
+    /// Streaming-mode ingest of one update as a zero-materialization
+    /// [`ViewInput`] — the hot path the orchestrator drives.
+    ///
+    /// The default implementation densifies the view into a pooled
+    /// scratch buffer and replays the legacy [`AggStrategy::weight`] +
+    /// dense-fold path, so existing custom strategies (including any
+    /// whose `weight` inspects the delta values) keep working
+    /// unchanged, just with the per-update allocation pooled away.
+    /// Sparse-aware strategies — every built-in streaming strategy —
+    /// override this to fold the view directly: O(nnz) per update and
+    /// no dense vector at any point. Overrides must produce results
+    /// bit-identical to the default (fold the same `w·Δ`); the engine's
+    /// bookkeeping is shared either way.
+    fn fold_view(
+        &self,
+        core: &mut StreamingAggregator,
+        input: &ViewInput<'_>,
+        pool: &ScratchPool,
+    ) -> Result<()> {
+        let mut delta = pool.take(input.view.dense_len());
+        input.view.write_dense(&mut delta);
+        let dense = AggInput {
+            client: input.client,
+            delta,
+            n_samples: input.n_samples,
+            train_loss: input.train_loss,
+            update_var: input.update_var,
+        };
+        let w = self.weight(&dense);
+        let res = core.fold(&dense, w);
+        pool.put(dense.delta);
+        res
+    }
+}
+
+/// Raw weight from the update's scalar stats alone — the shared
+/// implementation behind every built-in streaming strategy's `weight`
+/// and its sparse-aware `fold_view` override (one formula, two entry
+/// points, so the two paths cannot drift apart).
+fn stat_weight(
+    scheme: Option<WeightScheme>,
+    n_samples: u64,
+    train_loss: f32,
+    update_var: f32,
+) -> f64 {
+    let n = n_samples.max(1) as f64;
+    match scheme {
+        None | Some(WeightScheme::DataSize) => n,
+        Some(WeightScheme::InverseLoss) => n / (1.0 + train_loss.max(0.0) as f64),
+        Some(WeightScheme::InverseVariance) => n / (1.0 + update_var.max(0.0) as f64),
+    }
 }
 
 /// FedAvg: `w_c ∝ n_c` (McMahan et al.).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct FedAvg;
-
-/// Sample count with the same floor the engine has always applied.
-fn samples(input: &AggInput) -> f64 {
-    input.n_samples.max(1) as f64
-}
 
 impl AggStrategy for FedAvg {
     fn name(&self) -> &'static str {
@@ -105,7 +159,17 @@ impl AggStrategy for FedAvg {
     }
 
     fn weight(&self, input: &AggInput) -> f64 {
-        samples(input)
+        stat_weight(None, input.n_samples, input.train_loss, input.update_var)
+    }
+
+    fn fold_view(
+        &self,
+        core: &mut StreamingAggregator,
+        input: &ViewInput<'_>,
+        _pool: &ScratchPool,
+    ) -> Result<()> {
+        let w = stat_weight(None, input.n_samples, input.train_loss, input.update_var);
+        core.fold_view(input, w)
     }
 }
 
@@ -127,7 +191,17 @@ impl AggStrategy for FedProx {
     }
 
     fn weight(&self, input: &AggInput) -> f64 {
-        samples(input)
+        stat_weight(None, input.n_samples, input.train_loss, input.update_var)
+    }
+
+    fn fold_view(
+        &self,
+        core: &mut StreamingAggregator,
+        input: &ViewInput<'_>,
+        _pool: &ScratchPool,
+    ) -> Result<()> {
+        let w = stat_weight(None, input.n_samples, input.train_loss, input.update_var);
+        core.fold_view(input, w)
     }
 }
 
@@ -144,12 +218,27 @@ impl AggStrategy for WeightedAgg {
     }
 
     fn weight(&self, input: &AggInput) -> f64 {
-        let n = samples(input);
-        match self.scheme {
-            WeightScheme::DataSize => n,
-            WeightScheme::InverseLoss => n / (1.0 + input.train_loss.max(0.0) as f64),
-            WeightScheme::InverseVariance => n / (1.0 + input.update_var.max(0.0) as f64),
-        }
+        stat_weight(
+            Some(self.scheme),
+            input.n_samples,
+            input.train_loss,
+            input.update_var,
+        )
+    }
+
+    fn fold_view(
+        &self,
+        core: &mut StreamingAggregator,
+        input: &ViewInput<'_>,
+        _pool: &ScratchPool,
+    ) -> Result<()> {
+        let w = stat_weight(
+            Some(self.scheme),
+            input.n_samples,
+            input.train_loss,
+            input.update_var,
+        );
+        core.fold_view(input, w)
     }
 }
 
@@ -161,8 +250,14 @@ impl AggStrategy for WeightedAgg {
 /// (O(k·P)) and defer to [`AggStrategy::buffered_delta`]. Either way
 /// [`RoundAggregator::finalize`] hands Δ_agg to a [`ServerOpt`] for
 /// the model step.
+///
+/// Dense scratch buffers (buffered mode, densifying `fold_view`
+/// defaults) come from a [`ScratchPool`]; pass the orchestrator's
+/// long-lived pool via [`RoundAggregator::with_pool`] to recycle them
+/// across updates *and* rounds.
 pub struct RoundAggregator {
     strategy: Arc<dyn AggStrategy>,
+    pool: Arc<ScratchPool>,
     mode: Mode,
 }
 
@@ -175,8 +270,19 @@ enum Mode {
 }
 
 impl RoundAggregator {
-    /// Begin a round for a model of `n_params` entries.
+    /// Begin a round for a model of `n_params` entries, with a private
+    /// scratch pool (recycles within the round only).
     pub fn new(strategy: Arc<dyn AggStrategy>, n_params: usize) -> Self {
+        Self::with_pool(strategy, n_params, Arc::new(ScratchPool::new()))
+    }
+
+    /// Begin a round backed by a shared, long-lived scratch pool (the
+    /// orchestrator passes its own, so buffers survive across rounds).
+    pub fn with_pool(
+        strategy: Arc<dyn AggStrategy>,
+        n_params: usize,
+        pool: Arc<ScratchPool>,
+    ) -> Self {
         let mode = if strategy.needs_buffering() {
             Mode::Buffered {
                 n_params,
@@ -185,7 +291,11 @@ impl RoundAggregator {
         } else {
             Mode::Streaming(StreamingAggregator::new(n_params))
         };
-        RoundAggregator { strategy, mode }
+        RoundAggregator {
+            strategy,
+            pool,
+            mode,
+        }
     }
 
     /// The strategy this round is running.
@@ -226,6 +336,44 @@ impl RoundAggregator {
         }
     }
 
+    /// Fold one arriving update from its decode view — the
+    /// zero-materialization ingest entry point the orchestrator's
+    /// collect phase drives. Streaming strategies dispatch through
+    /// [`AggStrategy::fold_view`] (sparse-aware built-ins never touch a
+    /// dense vector); buffered strategies densify into a pooled scratch
+    /// buffer they retain until finalize (inherent to order
+    /// statistics), recycled at finalize.
+    pub fn fold_view(&mut self, input: &ViewInput<'_>) -> Result<()> {
+        let RoundAggregator {
+            strategy,
+            pool,
+            mode,
+        } = self;
+        match mode {
+            Mode::Streaming(core) => strategy.fold_view(core, input, pool),
+            Mode::Buffered { n_params, inputs } => {
+                if input.view.dense_len() != *n_params {
+                    bail!(
+                        "aggregate: client {} delta length {} != {}",
+                        input.client,
+                        input.view.dense_len(),
+                        *n_params
+                    );
+                }
+                let mut delta = pool.take(*n_params);
+                input.view.write_dense(&mut delta);
+                inputs.push(AggInput {
+                    client: input.client,
+                    delta,
+                    n_samples: input.n_samples,
+                    train_loss: input.train_loss,
+                    update_var: input.update_var,
+                });
+                Ok(())
+            }
+        }
+    }
+
     /// Finalize the round: normalize (or run the order statistic),
     /// then apply the server optimizer `M_{r+1} = opt(M_r, Δ_agg)`.
     pub fn finalize(self, global: &[f32], opt: &mut dyn ServerOpt) -> Result<AggOutcome> {
@@ -235,7 +383,12 @@ impl RoundAggregator {
                 if inputs.is_empty() {
                     bail!("aggregate: no updates to aggregate");
                 }
-                self.strategy.buffered_delta(n_params, &inputs)?
+                let agg = self.strategy.buffered_delta(n_params, &inputs)?;
+                // hand the round's dense buffers back for the next round
+                for input in inputs {
+                    self.pool.put(input.delta);
+                }
+                agg
             }
         };
         let new_params = opt.apply(global, &agg.delta)?;
@@ -326,5 +479,79 @@ mod tests {
     fn empty_buffered_round_errors() {
         let agg = RoundAggregator::new(Arc::new(CoordinateMedian), 2);
         assert!(agg.finalize(&[0.0, 0.0], &mut SgdServer).is_err());
+    }
+
+    fn view_input<'a>(
+        client: u32,
+        view: &'a crate::compress::DecodedView<'a>,
+    ) -> ViewInput<'a> {
+        ViewInput {
+            client,
+            view,
+            n_samples: 10,
+            train_loss: 1.0,
+            update_var: 0.0,
+        }
+    }
+
+    #[test]
+    fn buffered_fold_view_densifies_and_recycles_via_pool() {
+        use crate::compress::{DecodedView, Encoded};
+        let pool = Arc::new(ScratchPool::new());
+        let mut agg = RoundAggregator::with_pool(Arc::new(CoordinateMedian), 2, pool.clone());
+        for (c, enc) in [
+            Encoded::Dense(vec![1.0, 2.0]),
+            Encoded::Dense(vec![3.0, 4.0]),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let view = DecodedView::of(enc, 2).unwrap();
+            agg.fold_view(&view_input(c as u32, &view)).unwrap();
+        }
+        assert_eq!(agg.n_updates(), 2);
+        let out = agg.finalize(&[0.0, 0.0], &mut SgdServer).unwrap();
+        assert_eq!(out.new_params, vec![2.0, 3.0]);
+        // the round's dense buffers were handed back at finalize
+        assert_eq!(pool.idle(), 2);
+    }
+
+    #[test]
+    fn buffered_fold_view_checks_lengths() {
+        use crate::compress::{DecodedView, Encoded};
+        let mut agg = RoundAggregator::new(Arc::new(CoordinateMedian), 2);
+        let enc = Encoded::Dense(vec![1.0; 3]);
+        let view = DecodedView::of(&enc, 3).unwrap();
+        assert!(agg.fold_view(&view_input(0, &view)).is_err());
+        assert_eq!(agg.n_updates(), 0);
+    }
+
+    /// A custom strategy that only implements `weight` — including one
+    /// that inspects the delta *values* — must keep working through
+    /// the densifying `fold_view` default.
+    #[test]
+    fn default_fold_view_densifies_for_custom_strategies() {
+        use crate::compress::{DecodedView, Encoded, Sparse};
+        struct L1Weight;
+        impl AggStrategy for L1Weight {
+            fn name(&self) -> &'static str {
+                "l1"
+            }
+            fn weight(&self, input: &AggInput) -> f64 {
+                input.delta.iter().map(|x| x.abs() as f64).sum()
+            }
+        }
+        let mut agg = RoundAggregator::new(Arc::new(L1Weight), 2);
+        let enc = Encoded::Sparse(Sparse {
+            idx: vec![1],
+            val: vec![2.0],
+            dense_len: 2,
+        });
+        let view = DecodedView::of(&enc, 2).unwrap();
+        agg.fold_view(&view_input(0, &view)).unwrap();
+        let out = agg.finalize(&[0.0, 0.0], &mut SgdServer).unwrap();
+        // weight normalizes away for a single client; the default path
+        // saw the densified [0.0, 2.0]
+        assert_eq!(out.new_params, vec![0.0, 2.0]);
     }
 }

@@ -10,6 +10,13 @@
 //! `f64::total_cmp`, and the parallel sweep partitions coordinates
 //! (never one coordinate's values), so results are bit-identical
 //! across thread counts.
+//!
+//! Order statistics are the one ingest path that genuinely needs the
+//! round's dense deltas: `needs_buffering()` makes the
+//! [`super::RoundAggregator`] densify each arriving view into a pooled
+//! scratch buffer (recycled at finalize) instead of streaming it —
+//! O(k·P) held memory is inherent here, but the per-update allocation
+//! is not.
 
 use super::{uniform_weights, weighted_mean_loss, AggDelta, AggInput, AggStrategy};
 use crate::util::parallel::par_chunks_mut;

@@ -3,8 +3,48 @@
 //! A tiny, allocation-conscious reader/writer pair. The framework's
 //! protocol (network::message) encodes everything through these, so the
 //! wire format is defined in exactly one place.
+//!
+//! Slice codecs are bulk operations: on little-endian targets (every
+//! deployment target we have) the in-memory representation of
+//! `f32`/`u32`/`i16` arrays *is* the wire representation, so writers
+//! and readers chunk-copy whole payloads (compiling to `memcpy`)
+//! instead of looping element-wise. The element-wise `to_le_bytes`/
+//! `from_le_bytes` path is kept as the big-endian fallback, selected at
+//! compile time, so the wire format stays identical on every target.
+//! The `*_raw` reader methods additionally expose the borrowed payload
+//! bytes without any allocation — the zero-materialization ingest path
+//! (`compress::DecodedView`) decodes values straight out of them.
 
 use anyhow::{bail, Result};
+
+/// View a numeric slice as its raw in-memory bytes — which on an LE
+/// target are exactly the wire encoding, so slice writes become one
+/// `memcpy`. Only instantiated with the padding-free primitive types
+/// the codec carries (`f32`, `u32`, `i16`).
+#[cfg(target_endian = "little")]
+fn pod_bytes<T: Copy>(v: &[T]) -> &[u8] {
+    // SAFETY: T is a padding-free primitive (see above), so every byte
+    // of the slice is initialized; the length is the exact byte size.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+/// Bulk-decode a packed little-endian payload (`raw.len() == n *
+/// size_of::<T>()`) into a typed vector — the reader-side `memcpy`.
+#[cfg(target_endian = "little")]
+fn pod_vec_from_bytes<T: Copy + Default>(raw: &[u8], n: usize) -> Vec<T> {
+    let mut out = vec![T::default(); n];
+    // hard assert: the unsafe copy below is only sound for an exact
+    // byte-count match, and a mismatched future caller must fail loudly
+    // in release too (one compare vs a memcpy-sized operation)
+    assert_eq!(raw.len(), std::mem::size_of_val(out.as_slice()));
+    // SAFETY: `out` owns exactly `raw.len()` writable bytes (asserted
+    // above), T is a padding-free primitive whose LE in-memory layout
+    // is the wire layout, and the two allocations cannot overlap.
+    unsafe {
+        std::ptr::copy_nonoverlapping(raw.as_ptr(), out.as_mut_ptr() as *mut u8, raw.len());
+    }
+    out
+}
 
 /// Append-only byte writer.
 #[derive(Default, Debug)]
@@ -77,26 +117,29 @@ impl Writer {
     /// Length-prefixed f32 slice, bulk-copied as raw LE bytes.
     pub fn f32_slice(&mut self, v: &[f32]) {
         self.u64(v.len() as u64);
-        self.buf.reserve(v.len() * 4);
-        // f32 -> LE bytes; on LE targets this is a straight memcpy
-        for chunk in v {
-            self.buf.extend_from_slice(&chunk.to_le_bytes());
+        #[cfg(target_endian = "little")]
+        self.buf.extend_from_slice(pod_bytes(v));
+        #[cfg(not(target_endian = "little"))]
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
         }
     }
 
     /// Length-prefixed u32 slice.
     pub fn u32_slice(&mut self, v: &[u32]) {
         self.u64(v.len() as u64);
-        self.buf.reserve(v.len() * 4);
-        for chunk in v {
-            self.buf.extend_from_slice(&chunk.to_le_bytes());
+        #[cfg(target_endian = "little")]
+        self.buf.extend_from_slice(pod_bytes(v));
+        #[cfg(not(target_endian = "little"))]
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
         }
     }
 
     /// Length-prefixed i8 slice.
     pub fn i8_slice(&mut self, v: &[i8]) {
         self.u64(v.len() as u64);
-        // i8 -> u8 reinterpret is byte-identical
+        // i8 -> u8 reinterpret is byte-identical on every endianness
         self.buf
             .extend_from_slice(unsafe { &*(v as *const [i8] as *const [u8]) });
     }
@@ -104,9 +147,11 @@ impl Writer {
     /// Length-prefixed i16 slice.
     pub fn i16_slice(&mut self, v: &[i16]) {
         self.u64(v.len() as u64);
-        self.buf.reserve(v.len() * 2);
-        for chunk in v {
-            self.buf.extend_from_slice(&chunk.to_le_bytes());
+        #[cfg(target_endian = "little")]
+        self.buf.extend_from_slice(pod_bytes(v));
+        #[cfg(not(target_endian = "little"))]
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
         }
     }
 }
@@ -191,38 +236,104 @@ impl<'a> Reader<'a> {
     pub fn f32_vec(&mut self) -> Result<Vec<f32>> {
         let n = self.len_prefix()?;
         let raw = self.take(n * 4)?;
-        let mut out = Vec::with_capacity(n);
-        for c in raw.chunks_exact(4) {
-            out.push(f32::from_le_bytes(c.try_into().unwrap()));
+        #[cfg(target_endian = "little")]
+        {
+            Ok(pod_vec_from_bytes(raw, n))
         }
-        Ok(out)
+        #[cfg(not(target_endian = "little"))]
+        {
+            Ok(raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect())
+        }
     }
 
     pub fn u32_vec(&mut self) -> Result<Vec<u32>> {
         let n = self.len_prefix()?;
         let raw = self.take(n * 4)?;
-        let mut out = Vec::with_capacity(n);
-        for c in raw.chunks_exact(4) {
-            out.push(u32::from_le_bytes(c.try_into().unwrap()));
+        #[cfg(target_endian = "little")]
+        {
+            Ok(pod_vec_from_bytes(raw, n))
         }
-        Ok(out)
+        #[cfg(not(target_endian = "little"))]
+        {
+            Ok(raw
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                .collect())
+        }
     }
 
     pub fn i8_vec(&mut self) -> Result<Vec<i8>> {
         let n = self.len_prefix()?;
         let raw = self.take(n)?;
-        Ok(raw.iter().map(|&b| b as i8).collect())
+        // i8 and u8 are layout-identical: one bulk copy, no per-byte map
+        Ok(unsafe { &*(raw as *const [u8] as *const [i8]) }.to_vec())
     }
 
     pub fn i16_vec(&mut self) -> Result<Vec<i16>> {
         let n = self.len_prefix()?;
         let raw = self.take(n * 2)?;
-        let mut out = Vec::with_capacity(n);
-        for c in raw.chunks_exact(2) {
-            out.push(i16::from_le_bytes(c.try_into().unwrap()));
+        #[cfg(target_endian = "little")]
+        {
+            Ok(pod_vec_from_bytes(raw, n))
         }
-        Ok(out)
+        #[cfg(not(target_endian = "little"))]
+        {
+            Ok(raw
+                .chunks_exact(2)
+                .map(|c| i16::from_le_bytes(c.try_into().unwrap()))
+                .collect())
+        }
     }
+
+    /// Borrowed payload of a length-prefixed f32 slice (`4·n` raw LE
+    /// bytes) — no decode, no allocation. The zero-materialization
+    /// ingest path reads values out of this lazily.
+    pub fn f32_raw(&mut self) -> Result<&'a [u8]> {
+        let n = self.len_prefix()?;
+        self.take(n * 4)
+    }
+
+    /// Borrowed payload of a length-prefixed u32 slice (`4·n` bytes).
+    pub fn u32_raw(&mut self) -> Result<&'a [u8]> {
+        let n = self.len_prefix()?;
+        self.take(n * 4)
+    }
+
+    /// Borrowed payload of a length-prefixed i8 slice, reinterpreted.
+    pub fn i8_raw(&mut self) -> Result<&'a [i8]> {
+        let n = self.len_prefix()?;
+        let raw = self.take(n)?;
+        // i8 and u8 are layout-identical
+        Ok(unsafe { &*(raw as *const [u8] as *const [i8]) })
+    }
+
+    /// Borrowed payload of a length-prefixed i16 slice (`2·n` bytes).
+    pub fn i16_raw(&mut self) -> Result<&'a [u8]> {
+        let n = self.len_prefix()?;
+        self.take(n * 2)
+    }
+}
+
+/// Read the `i`-th little-endian f32 from a packed payload (as returned
+/// by [`Reader::f32_raw`]).
+#[inline]
+pub fn f32_le_at(raw: &[u8], i: usize) -> f32 {
+    f32::from_le_bytes(raw[4 * i..4 * i + 4].try_into().unwrap())
+}
+
+/// Read the `i`-th little-endian u32 from a packed payload.
+#[inline]
+pub fn u32_le_at(raw: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes(raw[4 * i..4 * i + 4].try_into().unwrap())
+}
+
+/// Read the `i`-th little-endian i16 from a packed payload.
+#[inline]
+pub fn i16_le_at(raw: &[u8], i: usize) -> i16 {
+    i16::from_le_bytes(raw[2 * i..2 * i + 2].try_into().unwrap())
 }
 
 #[cfg(test)]
@@ -279,6 +390,62 @@ mod tests {
         assert!(r.f32_vec().is_err());
         let mut r2 = Reader::new(&v[..4]);
         assert!(r2.f32_vec().is_err());
+    }
+
+    #[test]
+    fn raw_readers_borrow_exact_payloads() {
+        let f = vec![1.0f32, -2.5, 3.5];
+        let u = vec![7u32, 0, u32::MAX];
+        let i8s = vec![-128i8, 0, 127];
+        let i16s = vec![-32768i16, -1, 32767];
+        let mut w = Writer::new();
+        w.f32_slice(&f);
+        w.u32_slice(&u);
+        w.i8_slice(&i8s);
+        w.i16_slice(&i16s);
+        let v = w.into_vec();
+        let mut r = Reader::new(&v);
+        let fr = r.f32_raw().unwrap();
+        assert_eq!(fr.len(), 12);
+        for (i, &x) in f.iter().enumerate() {
+            assert_eq!(f32_le_at(fr, i).to_bits(), x.to_bits());
+        }
+        let ur = r.u32_raw().unwrap();
+        for (i, &x) in u.iter().enumerate() {
+            assert_eq!(u32_le_at(ur, i), x);
+        }
+        assert_eq!(r.i8_raw().unwrap(), &i8s[..]);
+        let ir = r.i16_raw().unwrap();
+        for (i, &x) in i16s.iter().enumerate() {
+            assert_eq!(i16_le_at(ir, i), x);
+        }
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn bulk_slice_codecs_cover_extreme_bit_patterns() {
+        // the memcpy fast path must agree with the element-wise wire
+        // format for every byte pattern, including NaN/inf/-0.0
+        let f = vec![
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            -0.0,
+            f32::MIN_POSITIVE,
+            f32::from_bits(0xDEAD_BEEF),
+        ];
+        let mut w = Writer::new();
+        w.f32_slice(&f);
+        let v = w.into_vec();
+        // wire layout: u64 length + per-element to_le_bytes
+        assert_eq!(v.len(), 8 + 4 * f.len());
+        for (i, x) in f.iter().enumerate() {
+            assert_eq!(&v[8 + 4 * i..8 + 4 * i + 4], &x.to_le_bytes());
+        }
+        let back = Reader::new(&v).f32_vec().unwrap();
+        for (a, b) in f.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

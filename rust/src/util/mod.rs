@@ -10,6 +10,7 @@ pub mod json;
 pub mod logging;
 pub mod parallel;
 pub mod rng;
+pub mod scratch;
 
 /// Format a byte count as a human-readable string (e.g. "1.25 MB").
 pub fn human_bytes(n: u64) -> String {

@@ -1,0 +1,115 @@
+//! Pooled dense scratch buffers for the decode paths that still need
+//! one (see `compress::DecodedView` for the paths that don't).
+//!
+//! The ingest pipeline folds compressed updates straight from their
+//! encoded form, but three paths still materialize a dense `Vec<f32>`:
+//! buffered (order-statistic) aggregation strategies, custom strategies
+//! that rely on the default densifying `AggStrategy::fold_view`, and
+//! the client-side global-model decode in `client::worker`. Before this
+//! pool each of those allocated (and zeroed) a fresh P-length vector
+//! per update per round; with it, one allocation is recycled across
+//! updates *and* rounds.
+//!
+//! The pool is a plain free-list behind a `Mutex`: `take` pops (or
+//! allocates) a buffer and resizes it to the requested length, `put`
+//! returns it. Contents of a taken buffer are unspecified — every
+//! consumer fully initializes it (`DecodedView::write_dense` zero-fills
+//! before scattering), which is exactly why `take` does not pay for a
+//! zeroing pass. Retention is bounded by a fixed buffer-count cap, not
+//! by capacity: a buffer sized for an old model is kept and simply
+//! re-grown (one realloc) the next time `take` asks for more — pools
+//! are per-federation objects, so request sizes are stable in
+//! practice. Callers must only `put` buffers on paths that also
+//! `take` from the pool, or the cap fills with dead buffers.
+
+use std::sync::Mutex;
+
+/// How many idle buffers a pool retains. Streaming ingest needs one;
+/// buffered strategies need one per in-flight update of a round.
+const MAX_POOLED: usize = 64;
+
+/// Thread-safe free-list of dense `f32` scratch buffers.
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    bufs: Mutex<Vec<Vec<f32>>>,
+}
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pop a pooled buffer (or allocate one) and size it to `n`
+    /// elements. Contents are **unspecified** — the caller must fully
+    /// initialize the buffer before reading it.
+    pub fn take(&self, n: usize) -> Vec<f32> {
+        let mut buf = self
+            .bufs
+            .lock()
+            .expect("scratch pool poisoned")
+            .pop()
+            .unwrap_or_default();
+        buf.resize(n, 0.0);
+        buf
+    }
+
+    /// Return a buffer for reuse. Buffers beyond the retention cap are
+    /// dropped (freed) instead of pooled.
+    pub fn put(&self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut bufs = self.bufs.lock().expect("scratch pool poisoned");
+        if bufs.len() < MAX_POOLED {
+            bufs.push(buf);
+        }
+    }
+
+    /// Idle buffers currently pooled (for tests/metrics).
+    pub fn idle(&self) -> usize {
+        self.bufs.lock().expect("scratch pool poisoned").len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_reuses_returned_allocation() {
+        let pool = ScratchPool::new();
+        let mut a = pool.take(1000);
+        a[0] = 7.0;
+        let ptr = a.as_ptr();
+        let cap = a.capacity();
+        pool.put(a);
+        assert_eq!(pool.idle(), 1);
+        let b = pool.take(1000);
+        assert_eq!(b.as_ptr(), ptr, "allocation must be recycled");
+        assert_eq!(b.capacity(), cap);
+        assert_eq!(b.len(), 1000);
+        assert_eq!(pool.idle(), 0);
+    }
+
+    #[test]
+    fn take_resizes_to_request() {
+        let pool = ScratchPool::new();
+        pool.put(vec![1.0; 10]);
+        let b = pool.take(25);
+        assert_eq!(b.len(), 25);
+        let c = pool.take(5);
+        assert_eq!(c.len(), 5);
+    }
+
+    #[test]
+    fn retention_is_capped() {
+        let pool = ScratchPool::new();
+        for _ in 0..(MAX_POOLED + 10) {
+            pool.put(vec![0.0; 4]);
+        }
+        assert_eq!(pool.idle(), MAX_POOLED);
+        // zero-capacity buffers are not worth pooling
+        pool.put(Vec::new());
+        assert_eq!(pool.idle(), MAX_POOLED);
+    }
+}

@@ -164,6 +164,123 @@ fn prop_aggregation_weights_normalize_and_bound_result() {
     });
 }
 
+/// ISSUE satellite: the fused decode→fold ingest (`DecodedView` →
+/// `fold_view`) must match densify-then-fold (`decompress` → `fold`)
+/// **bit-for-bit** — for Dense, QDense, Sparse, QSparse and Masked
+/// encodings (plus their pre-encoded wire-byte forms), every strategy
+/// mode (streaming and buffered), random arrival-order permutations,
+/// and injected signed zeros.
+#[test]
+fn prop_fused_fold_matches_densify_then_fold_bitwise() {
+    use fedhpc::compress::{DecodedView, Encoded};
+    use fedhpc::network::pre_encode;
+    use fedhpc::orchestrator::strategy::registry::strategy_from_config;
+    use fedhpc::orchestrator::strategy::SgdServer;
+    use fedhpc::orchestrator::{RoundAggregator, ViewInput};
+    check("fused ingest", 150, |g| {
+        let p = g.usize_in(1, 1500);
+        let k = g.usize_in(1, 6);
+        let global: Vec<f32> = (0..p).map(|_| g.f32_in(-1.0, 1.0)).collect();
+        let cfg = any_compression(g);
+        let strat = *g.pick(&[
+            Aggregation::FedAvg,
+            Aggregation::FedProx { mu: 0.1 },
+            Aggregation::Weighted(WeightScheme::InverseLoss),
+            Aggregation::Weighted(WeightScheme::InverseVariance),
+            Aggregation::TrimmedMean { trim_frac: 0.25 },
+            Aggregation::CoordinateMedian,
+        ]);
+        struct Update {
+            enc: Encoded,
+            n_samples: u64,
+            train_loss: f32,
+            update_var: f32,
+        }
+        let updates: Vec<Update> = (0..k)
+            .map(|c| {
+                let mut v: Vec<f32> = (0..p).map(|_| g.f32_in(-1.0, 1.0)).collect();
+                // signed-zero edge: stored and unstored zeros of both
+                // signs must not make the paths diverge
+                for _ in 0..g.usize_in(0, 4) {
+                    let i = g.usize_in(0, p - 1);
+                    v[i] = if g.bool() { 0.0 } else { -0.0 };
+                }
+                let enc = compress(&v, &cfg, g.rng.next_u64() ^ c as u64);
+                let enc = if g.bool() {
+                    // wire-byte form: the borrowed PreEncoded decode
+                    Encoded::PreEncoded(pre_encode(&enc))
+                } else {
+                    enc
+                };
+                Update {
+                    enc,
+                    n_samples: g.usize_in(1, 1000) as u64,
+                    train_loss: g.f32_in(0.0, 10.0),
+                    update_var: g.f32_in(0.0, 5.0),
+                }
+            })
+            .collect();
+        // random arrival order, replayed identically through both paths
+        let mut order: Vec<usize> = (0..k).collect();
+        for i in (1..k).rev() {
+            let j = g.usize_in(0, i);
+            order.swap(i, j);
+        }
+        let strategy = strategy_from_config(&strat);
+        let mut dense_agg = RoundAggregator::new(strategy.clone(), p);
+        let mut view_agg = RoundAggregator::new(strategy, p);
+        for &c in &order {
+            let u = &updates[c];
+            let dense = decompress(&u.enc, p).unwrap();
+            dense_agg
+                .fold(&AggInput {
+                    client: c as u32,
+                    delta: dense,
+                    n_samples: u.n_samples,
+                    train_loss: u.train_loss,
+                    update_var: u.update_var,
+                })
+                .unwrap();
+            let view = DecodedView::of(&u.enc, p).unwrap();
+            view_agg
+                .fold_view(&ViewInput {
+                    client: c as u32,
+                    view: &view,
+                    n_samples: u.n_samples,
+                    train_loss: u.train_loss,
+                    update_var: u.update_var,
+                })
+                .unwrap();
+        }
+        let a = dense_agg.finalize(&global, &mut SgdServer).unwrap();
+        let b = view_agg.finalize(&global, &mut SgdServer).unwrap();
+        for (j, (x, y)) in a.new_params.iter().zip(&b.new_params).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{strat:?}/{cfg:?} diverged at coord {j}"
+            );
+        }
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.mean_train_loss.to_bits(), b.mean_train_loss.to_bits());
+    });
+}
+
+/// The empty-update regression (`k_of` satellite): compression of a
+/// zero-length vector must not panic for any config, and must round-
+/// trip through decompress and the view.
+#[test]
+fn prop_empty_update_never_panics() {
+    use fedhpc::compress::DecodedView;
+    check("empty update", 60, |g| {
+        let cfg = any_compression(g);
+        let enc = compress(&[], &cfg, g.rng.next_u64());
+        assert_eq!(enc.dense_len(), 0);
+        assert!(decompress(&enc, 0).unwrap().is_empty());
+        assert_eq!(DecodedView::of(&enc, 0).unwrap().nnz(), 0);
+    });
+}
+
 #[test]
 fn prop_selection_k_distinct_available() {
     check("selection", 200, |g| {
