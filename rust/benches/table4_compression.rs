@@ -39,6 +39,7 @@ fn main() {
     let stats_of = |delta: Encoded| Msg::Update {
         round: 1,
         client: 0,
+        base_version: 1,
         delta,
         stats: UpdateStats {
             n_samples: 512,

@@ -16,6 +16,7 @@ fn update_msg(p: usize) -> Msg {
     Msg::Update {
         round: 1,
         client: 0,
+        base_version: 1,
         delta: Encoded::Dense(vec![0.5f32; p]),
         stats: UpdateStats {
             n_samples: 100,

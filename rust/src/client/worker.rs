@@ -126,6 +126,7 @@ impl<T: ClientTransport> Worker<T> {
             match msg {
                 Msg::RoundStart {
                     round,
+                    model_version,
                     deadline_ms: _,
                     lr,
                     mu,
@@ -133,7 +134,6 @@ impl<T: ClientTransport> Worker<T> {
                     params,
                     mask_seed,
                     compression,
-                    ..
                 } => {
                     let id = self.transport.id();
                     let is_spot = self.node.sku.preempt_per_hour > 0.0;
@@ -170,9 +170,14 @@ impl<T: ClientTransport> Worker<T> {
                         continue; // compute wasted, nothing reported
                     }
                     let delta = compress(&outcome.delta, &compression, mask_seed);
+                    // report which model this update is relative to —
+                    // under buffered-async rounds the server may have
+                    // committed newer versions while we trained, and it
+                    // weights this update by that staleness
                     self.transport.send(&Msg::Update {
                         round,
                         client: id,
+                        base_version: model_version,
                         delta,
                         stats: UpdateStats {
                             n_samples: outcome.n_samples,
@@ -240,10 +245,10 @@ mod tests {
         }
     }
 
-    fn one_node() -> Node {
+    fn node_of(sku: &str) -> Node {
         Cluster::build(
             &ClusterConfig {
-                nodes: vec![("hpc-rtx6000".into(), 1)],
+                nodes: vec![(sku.into(), 1)],
                 cloud_backend: "inproc".into(),
                 hpc_backend: "inproc".into(),
             },
@@ -252,6 +257,10 @@ mod tests {
         .unwrap()
         .nodes[0]
             .clone()
+    }
+
+    fn one_node() -> Node {
+        node_of("hpc-rtx6000")
     }
 
     #[test]
@@ -378,6 +387,131 @@ mod tests {
         }
         server.send_to(0, &Msg::Shutdown).unwrap();
         assert_eq!(handle.join().unwrap(), 1);
+    }
+
+    /// ISSUE 4 satellite (`reports_update` consistency): a straggling
+    /// worker still reports — late, but with the base model version the
+    /// server needs to weight it — while a preempted worker reports
+    /// nothing, exactly as `FaultAction::reports_update` promises.
+    #[test]
+    fn straggler_reports_update_with_base_version() {
+        let traffic = Arc::new(TrafficLog::new());
+        let hub = InprocHub::new(traffic);
+        let endpoint = hub.add_client(0, LinkShaper::unshaped());
+        let server = hub.server();
+        let rt = MockRuntime::new(8, 2);
+        let global = rt.init(0).unwrap();
+        let injector = FaultInjector::new(
+            crate::config::FaultConfig {
+                straggler_prob: 1.0,
+                straggler_factor: 1.0, // always straggle, but don't slow the test
+                ..Default::default()
+            },
+            0,
+        );
+        assert!(injector.action(2, 0, false).reports_update());
+        let worker = Worker::new(
+            endpoint,
+            Box::new(rt),
+            one_node(),
+            toy_shard(8, 2, 16, 2),
+            injector,
+            WorkerOptions {
+                emulate_speed: false,
+                ..Default::default()
+            },
+        );
+        let handle = std::thread::spawn(move || worker.run().unwrap());
+        server.recv_timeout(Duration::from_secs(5)).unwrap(); // Register
+        server
+            .send_to(
+                0,
+                &Msg::RoundStart {
+                    round: 2,
+                    model_version: 5, // async-style: version ≠ round
+                    deadline_ms: 10_000,
+                    lr: 0.1,
+                    mu: 0.0,
+                    local_epochs: 1,
+                    params: crate::compress::Encoded::Dense(global),
+                    mask_seed: 1,
+                    compression: CompressionConfig::NONE,
+                },
+            )
+            .unwrap();
+        let (_, up) = server
+            .recv_timeout(Duration::from_secs(10))
+            .unwrap()
+            .unwrap();
+        match up {
+            Msg::Update {
+                round,
+                base_version,
+                ..
+            } => {
+                assert_eq!(round, 2);
+                assert_eq!(
+                    base_version, 5,
+                    "update must echo the model version it trained on"
+                );
+            }
+            other => panic!("expected Update, got {}", other.name()),
+        }
+        server.send_to(0, &Msg::Shutdown).unwrap();
+        assert_eq!(handle.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn injected_preemption_suppresses_update() {
+        let traffic = Arc::new(TrafficLog::new());
+        let hub = InprocHub::new(traffic);
+        let endpoint = hub.add_client(0, LinkShaper::unshaped());
+        let server = hub.server();
+        let rt = MockRuntime::new(8, 2);
+        let global = rt.init(0).unwrap();
+        let node = node_of("p3.2xlarge-spot");
+        assert!(node.sku.preempt_per_hour > 0.0, "test needs a spot SKU");
+        let injector = FaultInjector::new(
+            crate::config::FaultConfig {
+                preemption_prob: 1.0,
+                ..Default::default()
+            },
+            0,
+        );
+        assert!(!injector.action(0, 0, true).reports_update());
+        let worker = Worker::new(
+            endpoint,
+            Box::new(rt),
+            node,
+            toy_shard(8, 2, 16, 2),
+            injector,
+            WorkerOptions {
+                emulate_speed: false,
+                ..Default::default()
+            },
+        );
+        let handle = std::thread::spawn(move || worker.run().unwrap());
+        server.recv_timeout(Duration::from_secs(5)).unwrap(); // Register
+        server
+            .send_to(
+                0,
+                &Msg::RoundStart {
+                    round: 0,
+                    model_version: 0,
+                    deadline_ms: 1_000,
+                    lr: 0.1,
+                    mu: 0.0,
+                    local_epochs: 1,
+                    params: crate::compress::Encoded::Dense(global),
+                    mask_seed: 1,
+                    compression: CompressionConfig::NONE,
+                },
+            )
+            .unwrap();
+        let got = server.recv_timeout(Duration::from_millis(600)).unwrap();
+        assert!(got.is_none(), "preempted client sent {got:?}");
+        server.send_to(0, &Msg::Shutdown).unwrap();
+        assert_eq!(handle.join().unwrap(), 0);
     }
 
     #[test]

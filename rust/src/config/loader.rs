@@ -127,6 +127,38 @@ fn decode(v: &Value) -> Result<ExperimentConfig> {
             ),
         },
     };
+    let round_mode = match v.get("round_mode") {
+        None => RoundMode::Sync,
+        Some(m) => match str_of(m, "kind")?.as_str() {
+            "sync" => RoundMode::Sync,
+            "async_fedbuff" => RoundMode::BufferedAsync {
+                buffer_k: m
+                    .get("buffer_k")
+                    .and_then(Value::as_usize)
+                    .unwrap_or(defaults::ASYNC_BUFFER_K),
+                // strict like the CLI path: a present-but-negative /
+                // fractional / oversized value is an error, never a
+                // silent saturation
+                max_staleness: match m.get("max_staleness") {
+                    None => defaults::ASYNC_MAX_STALENESS,
+                    Some(v) => u32::try_from(v.as_usize().ok_or_else(|| {
+                        anyhow!("round_mode.max_staleness must be a non-negative integer")
+                    })?)
+                    .map_err(|_| anyhow!("round_mode.max_staleness exceeds u32"))?,
+                },
+                staleness: match m.get("staleness").and_then(|s| s.as_str()) {
+                    None => StalenessFn::Polynomial {
+                        alpha: defaults::ASYNC_ALPHA,
+                    },
+                    Some(spec) => StalenessFn::parse(spec)?,
+                },
+            },
+            k => bail!(
+                "unknown round_mode kind '{k}' (known: {})",
+                RoundMode::KINDS.join(", ")
+            ),
+        },
+    };
     let selection = {
         let s = v.req("selection")?;
         let policy = match str_of(s, "policy")?.as_str() {
@@ -221,6 +253,7 @@ fn decode(v: &Value) -> Result<ExperimentConfig> {
         train,
         aggregation,
         server_opt,
+        round_mode,
         selection,
         straggler,
         compression,
@@ -277,6 +310,19 @@ pub fn to_json(cfg: &ExperimentConfig) -> String {
             ("beta1", num(beta1 as f64)),
             ("beta2", num(beta2 as f64)),
             ("eps", num(eps as f64)),
+        ]),
+    };
+    let round_mode = match cfg.round_mode {
+        RoundMode::Sync => obj(vec![("kind", s("sync"))]),
+        RoundMode::BufferedAsync {
+            buffer_k,
+            max_staleness,
+            staleness,
+        } => obj(vec![
+            ("kind", s("async_fedbuff")),
+            ("buffer_k", num(buffer_k as f64)),
+            ("max_staleness", num(max_staleness as f64)),
+            ("staleness", s(&staleness.spec())),
         ]),
     };
     let selection = match cfg.selection.policy {
@@ -348,6 +394,7 @@ pub fn to_json(cfg: &ExperimentConfig) -> String {
         ("train", obj(train_fields)),
         ("aggregation", aggregation),
         ("server_opt", server_opt),
+        ("round_mode", round_mode),
         ("selection", selection),
         ("straggler", obj(straggler_fields)),
         (
@@ -440,6 +487,81 @@ mod tests {
             let back = from_json_str(&to_json(&cfg)).unwrap();
             assert_eq!(cfg, back);
         }
+    }
+
+    #[test]
+    fn roundtrip_round_modes() {
+        for mode in [
+            RoundMode::Sync,
+            RoundMode::BufferedAsync {
+                buffer_k: 10,
+                max_staleness: 20,
+                staleness: StalenessFn::Polynomial { alpha: 0.5 },
+            },
+            RoundMode::BufferedAsync {
+                buffer_k: 3,
+                max_staleness: 7,
+                staleness: StalenessFn::Uniform,
+            },
+        ] {
+            let mut cfg = quickstart();
+            cfg.round_mode = mode;
+            let back = from_json_str(&to_json(&cfg)).unwrap();
+            assert_eq!(cfg, back);
+        }
+    }
+
+    #[test]
+    fn missing_round_mode_section_defaults_to_sync() {
+        // configs written before the round_mode axis existed still load
+        let text = to_json(&quickstart());
+        let stripped = {
+            let v = Value::parse(&text).unwrap();
+            let keep: Vec<(&str, Value)> = [
+                "name",
+                "seed",
+                "data",
+                "cluster",
+                "train",
+                "aggregation",
+                "selection",
+            ]
+            .iter()
+            .map(|k| (*k, v.req(k).unwrap().clone()))
+            .collect();
+            json::obj(keep).to_string()
+        };
+        let cfg = from_json_str(&stripped).unwrap();
+        assert_eq!(cfg.round_mode, RoundMode::Sync);
+    }
+
+    #[test]
+    fn unknown_round_mode_kind_errors() {
+        let mut text = to_json(&quickstart());
+        text = text.replace("\"sync\"", "\"semi_sync\"");
+        let err = from_json_str(&text).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("unknown round_mode kind 'semi_sync'"),
+            "got: {err:#}"
+        );
+    }
+
+    #[test]
+    fn negative_max_staleness_errors_instead_of_saturating() {
+        // strict like the CLI path: -5 must not silently become 0
+        let mut cfg = quickstart();
+        cfg.round_mode = RoundMode::BufferedAsync {
+            buffer_k: 2,
+            max_staleness: 7,
+            staleness: StalenessFn::Uniform,
+        };
+        let text = to_json(&cfg).replace("\"max_staleness\":7", "\"max_staleness\":-5");
+        assert!(text.contains("-5"), "replacement failed: {text}");
+        let err = from_json_str(&text).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("max_staleness"),
+            "got: {err:#}"
+        );
     }
 
     #[test]

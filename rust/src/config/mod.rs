@@ -28,6 +28,214 @@ pub mod defaults {
     pub const FEDADAM_BETA1: f32 = 0.9;
     pub const FEDADAM_BETA2: f32 = 0.99;
     pub const FEDADAM_EPS: f32 = 1e-3;
+    pub const ASYNC_BUFFER_K: usize = 10;
+    pub const ASYNC_ALPHA: f32 = 0.5;
+    pub const ASYNC_MAX_STALENESS: u32 = 20;
+}
+
+/// Staleness discount applied to an update that trained on a model
+/// `s` commits behind the current one (buffered-async mode, FedBuff /
+/// Xie et al.). Selected by registry name: `"poly"` / `"poly:0.5"`
+/// (α), `"uniform"`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StalenessFn {
+    /// `1 / (1 + s)^α` — the FedBuff polynomial discount.
+    Polynomial { alpha: f32 },
+    /// No discount (every update weighs as if fresh).
+    Uniform,
+}
+
+impl StalenessFn {
+    pub const KINDS: &'static [&'static str] = &["poly", "uniform"];
+
+    /// Largest accepted polynomial α. Keeps `(1+s)^α` finite for every
+    /// `s: u32` (`(2^32)^30 < f64::MAX`), so the discount can never
+    /// collapse to exactly 0 and zero out a whole commit's weight.
+    pub const MAX_ALPHA: f32 = 30.0;
+
+    /// The multiplicative weight discount for staleness `s` (s = 0 for
+    /// a fresh update). Always finite and in (0, 1] — the positive
+    /// floor is belt-and-braces; [`StalenessFn::check_params`] bounds α
+    /// so the power cannot overflow in the first place.
+    pub fn discount(&self, s: u32) -> f64 {
+        match *self {
+            StalenessFn::Polynomial { alpha } => {
+                (1.0 / (1.0 + s as f64).powf(alpha as f64)).max(f64::MIN_POSITIVE)
+            }
+            StalenessFn::Uniform => 1.0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StalenessFn::Polynomial { .. } => "poly",
+            StalenessFn::Uniform => "uniform",
+        }
+    }
+
+    /// The `"name[:param]"` spec that parses back to this value.
+    pub fn spec(&self) -> String {
+        match *self {
+            StalenessFn::Polynomial { alpha } => format!("poly:{alpha}"),
+            StalenessFn::Uniform => "uniform".into(),
+        }
+    }
+
+    /// Parse by registry name: `"poly"` / `"poly:0.5"` (α),
+    /// `"uniform"`.
+    pub fn parse(spec: &str) -> Result<StalenessFn> {
+        let (kind, arg) = match spec.split_once(':') {
+            Some((k, a)) => (k, Some(a)),
+            None => (spec, None),
+        };
+        let f = match kind {
+            "poly" => {
+                let alpha = match arg {
+                    None => defaults::ASYNC_ALPHA,
+                    Some(a) => a
+                        .parse::<f32>()
+                        .map_err(|_| anyhow::anyhow!("staleness 'poly': bad parameter '{a}'"))?,
+                };
+                StalenessFn::Polynomial { alpha }
+            }
+            "uniform" => {
+                if let Some(a) = arg {
+                    bail!("staleness 'uniform' takes no parameter (got '{a}')");
+                }
+                StalenessFn::Uniform
+            }
+            k => bail!(
+                "unknown staleness fn '{k}' (known: {})",
+                StalenessFn::KINDS.join(", ")
+            ),
+        };
+        f.check_params()?;
+        Ok(f)
+    }
+
+    pub fn check_params(&self) -> Result<()> {
+        if let StalenessFn::Polynomial { alpha } = *self {
+            if alpha.is_nan() || !(0.0..=Self::MAX_ALPHA).contains(&alpha) {
+                bail!(
+                    "config: staleness poly alpha must be in [0, {}], got {alpha}",
+                    Self::MAX_ALPHA
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Round execution semantics: how the orchestrator turns client
+/// updates into model commits.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum RoundMode {
+    /// Synchronous rounds (Algorithm 1): broadcast, collect under the
+    /// deadline / partial-k rule, aggregate, commit. The default.
+    #[default]
+    Sync,
+    /// Buffered asynchronous aggregation (FedBuff, Nguyen et al.): the
+    /// server folds updates as they arrive regardless of round tag,
+    /// discounts each by its staleness (`staleness.discount(s)` where
+    /// `s = current model version − the update's base version`), and
+    /// commits a model version every `buffer_k` folds. Updates staler
+    /// than `max_staleness` are discarded. Stragglers are absorbed as
+    /// stale-but-useful contributions instead of being dropped at a
+    /// deadline.
+    BufferedAsync {
+        /// Folds per commit (FedBuff's K).
+        buffer_k: usize,
+        /// Discard updates with staleness beyond this.
+        max_staleness: u32,
+        /// Staleness discount function.
+        staleness: StalenessFn,
+    },
+}
+
+impl RoundMode {
+    /// Registry names accepted by [`RoundMode::parse`] (and by config
+    /// files as `round_mode.kind`).
+    pub const KINDS: &'static [&'static str] = &["sync", "async_fedbuff"];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoundMode::Sync => "sync",
+            RoundMode::BufferedAsync { .. } => "async_fedbuff",
+        }
+    }
+
+    pub fn is_async(&self) -> bool {
+        matches!(self, RoundMode::BufferedAsync { .. })
+    }
+
+    /// Parse a round mode by registry name with optional `:`-suffixed
+    /// parameters: `"sync"`,
+    /// `"async_fedbuff[:buffer_k[:alpha[:max_staleness]]]"` — e.g.
+    /// `"async_fedbuff:10:0.5"` commits every 10 folds with the
+    /// `1/(1+s)^0.5` polynomial discount. Unknown names and
+    /// out-of-range parameters are errors, never a panic.
+    pub fn parse(spec: &str) -> Result<RoundMode> {
+        let mut parts = spec.split(':');
+        let kind = parts.next().unwrap_or("");
+        let mode = match kind {
+            "sync" => {
+                if let Some(a) = parts.next() {
+                    bail!("round mode 'sync' takes no parameter (got '{a}')");
+                }
+                RoundMode::Sync
+            }
+            "async_fedbuff" => {
+                let buffer_k = match parts.next() {
+                    None | Some("") => defaults::ASYNC_BUFFER_K,
+                    Some(a) => a.parse::<usize>().map_err(|_| {
+                        anyhow::anyhow!("round mode 'async_fedbuff': bad buffer_k '{a}'")
+                    })?,
+                };
+                let alpha = match parts.next() {
+                    None => defaults::ASYNC_ALPHA,
+                    Some(a) => a.parse::<f32>().map_err(|_| {
+                        anyhow::anyhow!("round mode 'async_fedbuff': bad alpha '{a}'")
+                    })?,
+                };
+                let max_staleness = match parts.next() {
+                    None => defaults::ASYNC_MAX_STALENESS,
+                    Some(a) => a.parse::<u32>().map_err(|_| {
+                        anyhow::anyhow!("round mode 'async_fedbuff': bad max_staleness '{a}'")
+                    })?,
+                };
+                if let Some(extra) = parts.next() {
+                    bail!("round mode 'async_fedbuff': stray parameter '{extra}'");
+                }
+                RoundMode::BufferedAsync {
+                    buffer_k,
+                    max_staleness,
+                    staleness: StalenessFn::Polynomial { alpha },
+                }
+            }
+            k => bail!(
+                "unknown round mode '{k}' (known: {})",
+                RoundMode::KINDS.join(", ")
+            ),
+        };
+        mode.check_params()?;
+        Ok(mode)
+    }
+
+    /// Range checks — shared by [`RoundMode::parse`] and [`validate`].
+    pub fn check_params(&self) -> Result<()> {
+        if let RoundMode::BufferedAsync {
+            buffer_k,
+            staleness,
+            ..
+        } = self
+        {
+            if *buffer_k == 0 {
+                bail!("config: async buffer_k must be >= 1");
+            }
+            staleness.check_params()?;
+        }
+        Ok(())
+    }
 }
 
 /// Aggregation strategy (paper §4.4, Table 1). Each variant maps 1:1 to
@@ -491,6 +699,8 @@ pub struct ExperimentConfig {
     pub train: TrainConfig,
     pub aggregation: Aggregation,
     pub server_opt: ServerOptKind,
+    /// Round execution semantics (sync rounds vs buffered async).
+    pub round_mode: RoundMode,
     pub selection: SelectionConfig,
     pub straggler: StragglerConfig,
     pub compression: CompressionConfig,
@@ -576,6 +786,88 @@ mod tests {
         assert!(ServerOptKind::parse("fedavgm:1.5").is_err());
         assert!(ServerOptKind::parse("fedadam:0").is_err());
         assert!(ServerOptKind::parse("sgd:0.1").is_err());
+    }
+
+    #[test]
+    fn round_mode_parse_known_names_and_params() {
+        assert_eq!(RoundMode::parse("sync").unwrap(), RoundMode::Sync);
+        assert_eq!(
+            RoundMode::parse("async_fedbuff").unwrap(),
+            RoundMode::BufferedAsync {
+                buffer_k: defaults::ASYNC_BUFFER_K,
+                max_staleness: defaults::ASYNC_MAX_STALENESS,
+                staleness: StalenessFn::Polynomial {
+                    alpha: defaults::ASYNC_ALPHA
+                },
+            }
+        );
+        // the ISSUE's canonical spelling: buffer_k 10, alpha 0.5
+        assert_eq!(
+            RoundMode::parse("async_fedbuff:10:0.5").unwrap(),
+            RoundMode::BufferedAsync {
+                buffer_k: 10,
+                max_staleness: defaults::ASYNC_MAX_STALENESS,
+                staleness: StalenessFn::Polynomial { alpha: 0.5 },
+            }
+        );
+        assert_eq!(
+            RoundMode::parse("async_fedbuff:4:1:7").unwrap(),
+            RoundMode::BufferedAsync {
+                buffer_k: 4,
+                max_staleness: 7,
+                staleness: StalenessFn::Polynomial { alpha: 1.0 },
+            }
+        );
+        for kind in RoundMode::KINDS {
+            let m = RoundMode::parse(kind).unwrap();
+            assert_eq!(&m.name(), kind);
+        }
+        assert!(RoundMode::parse("semi_sync").is_err());
+        assert!(RoundMode::parse("sync:1").is_err());
+        assert!(RoundMode::parse("async_fedbuff:0").is_err()); // k = 0
+        assert!(RoundMode::parse("async_fedbuff:x").is_err());
+        assert!(RoundMode::parse("async_fedbuff:4:-1").is_err()); // alpha < 0
+        assert!(RoundMode::parse("async_fedbuff:4:400").is_err()); // alpha > max
+        assert!(RoundMode::parse("async_fedbuff:4:1:2:9").is_err()); // stray
+    }
+
+    #[test]
+    fn staleness_fn_parse_and_discount() {
+        assert_eq!(
+            StalenessFn::parse("poly:0.5").unwrap(),
+            StalenessFn::Polynomial { alpha: 0.5 }
+        );
+        assert_eq!(StalenessFn::parse("uniform").unwrap(), StalenessFn::Uniform);
+        assert!(StalenessFn::parse("uniform:1").is_err());
+        assert!(StalenessFn::parse("linear").is_err());
+        assert!(StalenessFn::parse("poly:nan_ish").is_err());
+        // α is bounded so the discount can never collapse to 0 and
+        // zero out a whole commit's aggregate weight
+        assert!(StalenessFn::parse("poly:400").is_err());
+        assert!(StalenessFn::parse("poly:inf").is_err());
+        let max = StalenessFn::Polynomial {
+            alpha: StalenessFn::MAX_ALPHA,
+        };
+        assert!(max.discount(u32::MAX) > 0.0);
+        // every registered kind parses with defaults and round-trips
+        // through its spec string
+        for kind in StalenessFn::KINDS {
+            let f = StalenessFn::parse(kind).unwrap();
+            assert_eq!(&f.name(), kind);
+            assert_eq!(StalenessFn::parse(&f.spec()).unwrap(), f);
+        }
+        // discount semantics: fresh = 1, decays polynomially, (0, 1]
+        let p = StalenessFn::Polynomial { alpha: 1.0 };
+        assert_eq!(p.discount(0), 1.0);
+        assert_eq!(p.discount(1), 0.5);
+        assert_eq!(p.discount(3), 0.25);
+        let sqrt = StalenessFn::Polynomial { alpha: 0.5 };
+        assert!((sqrt.discount(3) - 0.5).abs() < 1e-12);
+        assert_eq!(StalenessFn::Uniform.discount(1000), 1.0);
+        for s in [0u32, 1, 10, 1000] {
+            let d = sqrt.discount(s);
+            assert!(d > 0.0 && d <= 1.0 && d.is_finite());
+        }
     }
 
     #[test]

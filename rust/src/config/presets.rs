@@ -62,6 +62,7 @@ pub fn quickstart() -> ExperimentConfig {
         },
         aggregation: Aggregation::FedAvg,
         server_opt: ServerOptKind::Sgd,
+        round_mode: RoundMode::Sync,
         selection: SelectionConfig {
             policy: SelectionPolicy::default(),
             clients_per_round: 4,
@@ -111,6 +112,7 @@ pub fn paper_testbed() -> ExperimentConfig {
         },
         aggregation: Aggregation::FedProx { mu: 0.01 },
         server_opt: ServerOptKind::Sgd,
+        round_mode: RoundMode::Sync,
         selection: SelectionConfig {
             policy: SelectionPolicy::default(),
             clients_per_round: 20,

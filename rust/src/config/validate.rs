@@ -78,6 +78,29 @@ pub fn validate(cfg: &ExperimentConfig) -> Result<()> {
     // parser so the CLI and config-file paths reject the same inputs
     cfg.aggregation.check_params()?;
     cfg.server_opt.check_params()?;
+    cfg.round_mode.check_params()?;
+    if let RoundMode::BufferedAsync { buffer_k, .. } = cfg.round_mode {
+        if buffer_k > cfg.selection.clients_per_round {
+            bail!(
+                "config: async buffer_k ({buffer_k}) exceeds clients_per_round ({}) — \
+                 a commit could never fill",
+                cfg.selection.clients_per_round
+            );
+        }
+        // order-statistic strategies buffer whole rounds; the async
+        // engine folds continuously with per-update staleness
+        // discounts, which only streaming strategies support
+        if matches!(
+            cfg.aggregation,
+            Aggregation::TrimmedMean { .. } | Aggregation::CoordinateMedian
+        ) {
+            bail!(
+                "config: round mode 'async_fedbuff' requires a streaming aggregation \
+                 strategy (got buffered '{}')",
+                cfg.aggregation.name()
+            );
+        }
+    }
     match cfg.data.partition {
         Partition::LabelShard { classes_per_client } if classes_per_client == 0 => {
             bail!("config: classes_per_client must be >= 1")
@@ -166,6 +189,34 @@ mod tests {
         assert!(validate(&c).is_ok());
         c.aggregation = Aggregation::CoordinateMedian;
         assert!(validate(&c).is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_round_mode_combinations() {
+        let async_mode = |buffer_k| RoundMode::BufferedAsync {
+            buffer_k,
+            max_staleness: 20,
+            staleness: StalenessFn::Polynomial { alpha: 0.5 },
+        };
+        let mut c = quickstart();
+        c.round_mode = async_mode(0);
+        assert!(validate(&c).is_err(), "buffer_k 0");
+        let mut c = quickstart();
+        c.round_mode = async_mode(c.selection.clients_per_round + 1);
+        assert!(validate(&c).is_err(), "buffer_k > cohort");
+        let mut c = quickstart();
+        c.round_mode = async_mode(2);
+        c.aggregation = Aggregation::CoordinateMedian;
+        assert!(validate(&c).is_err(), "buffered strategy in async mode");
+        let mut c = quickstart();
+        c.round_mode = async_mode(2);
+        assert!(validate(&c).is_ok());
+        c.round_mode = RoundMode::BufferedAsync {
+            buffer_k: 2,
+            max_staleness: 20,
+            staleness: StalenessFn::Polynomial { alpha: f32::NAN },
+        };
+        assert!(validate(&c).is_err(), "NaN alpha");
     }
 
     #[test]

@@ -13,7 +13,7 @@ pub mod simrunner;
 pub mod tables;
 
 pub use launcher::run_real;
-pub use simrunner::{run_sim, SimReport, SimTiming};
+pub use simrunner::{run_sim, RoundDetail, SimReport, SimTiming};
 
 use anyhow::{bail, Result};
 

@@ -101,6 +101,9 @@ fn load_config(p: &fedhpc::util::argparse::Parsed) -> Result<ExperimentConfig> {
     if let Some(o) = p.get("server-opt") {
         cfg.server_opt = config::ServerOptKind::parse(o).context("--server-opt")?;
     }
+    if let Some(m) = p.get("round-mode") {
+        cfg.round_mode = config::RoundMode::parse(m).context("--round-mode")?;
+    }
     config::validate(&cfg)?;
     Ok(cfg)
 }
@@ -123,6 +126,11 @@ fn train_args() -> Args {
             "server-opt",
             None,
             "server optimizer: sgd | fedavgm[:beta] | fedadam[:lr]",
+        )
+        .opt(
+            "round-mode",
+            None,
+            "round engine: sync | async_fedbuff[:buffer_k[:alpha[:max_staleness]]]",
         )
         .opt("out", Some("results"), "output directory for reports")
         .flag("mock", "use the pure-Rust mock runtime")
@@ -190,6 +198,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .opt("artifacts", None, "artifacts directory")
         .opt("aggregation", None, "aggregation strategy by registry name")
         .opt("server-opt", None, "server optimizer by registry name")
+        .opt("round-mode", None, "round engine by registry name")
         .opt("out", Some("results"), "output directory")
         .opt("clients", None, "expected worker count (default: cluster size)")
         .flag("mock", "use the mock runtime")
@@ -302,6 +311,12 @@ fn cmd_list() -> Result<()> {
     println!(
         "server optimizers: {}",
         fedhpc::orchestrator::strategy::registry::server_opt_names().join(", ")
+    );
+    println!(
+        "round modes: {} (async: async_fedbuff[:buffer_k[:alpha[:max_staleness]]], \
+         staleness fns: {})",
+        fedhpc::config::RoundMode::KINDS.join(", "),
+        fedhpc::config::StalenessFn::KINDS.join(", ")
     );
     println!("\nSKUs:");
     for sku in fedhpc::cluster::catalog() {

@@ -4,6 +4,17 @@
 //! Layout: `[version u8][tag u8][body …]`, little-endian, length-
 //! prefixed slices. The codec is exercised by both transports and by
 //! round-trip + fuzz-ish tests below.
+//!
+//! # Protocol versions
+//!
+//! * **v1** — the original layout.
+//! * **v2** — [`Msg::Update`] additionally carries `base_version`, the
+//!   model version the client trained on (right after `client`). The
+//!   buffered-async round engine needs it to compute an update's
+//!   staleness; the synchronous engine ignores it. Encoders always emit
+//!   v2; the decoder still accepts v1 frames (every other message is
+//!   layout-identical, and a v1 `Update` defaults `base_version` to its
+//!   round tag — exactly what a synchronous client would have sent).
 
 use crate::cluster::NodeId;
 use crate::compress::{DecodedView, Encoded, PreEncoded, QData, Quantized, Sparse};
@@ -12,7 +23,11 @@ use crate::util::bytes::{Reader, Writer};
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
-pub const PROTOCOL_VERSION: u8 = 1;
+pub const PROTOCOL_VERSION: u8 = 2;
+
+/// Oldest protocol version the decoder still accepts (see the module
+/// docs for the per-version differences).
+pub const MIN_PROTOCOL_VERSION: u8 = 1;
 
 /// What a client reports about itself at registration / profiling
 /// (paper §4.1 resource profiling).
@@ -68,6 +83,10 @@ pub enum Msg {
     Update {
         round: u32,
         client: NodeId,
+        /// Model version the client trained on (the `model_version` of
+        /// the `RoundStart` it answers). The async engine derives the
+        /// update's staleness from it; in sync mode it equals `round`.
+        base_version: u32,
         delta: Encoded,
         stats: UpdateStats,
     },
@@ -125,11 +144,13 @@ impl Msg {
             Msg::Update {
                 round,
                 client,
+                base_version,
                 delta,
                 stats,
             } => {
                 w.u32(*round);
                 w.u32(*client);
+                w.u32(*base_version);
                 w.u64(stats.n_samples);
                 w.f32(stats.train_loss);
                 w.u32(stats.steps);
@@ -157,8 +178,11 @@ impl Msg {
     pub fn decode(buf: &[u8]) -> Result<Msg> {
         let mut r = Reader::new(buf);
         let ver = r.u8()?;
-        if ver != PROTOCOL_VERSION {
-            bail!("protocol version mismatch: got {ver}, want {PROTOCOL_VERSION}");
+        if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&ver) {
+            bail!(
+                "protocol version mismatch: got {ver}, \
+                 want {MIN_PROTOCOL_VERSION}..={PROTOCOL_VERSION}"
+            );
         }
         let tag = r.u8()?;
         let msg = match tag {
@@ -195,6 +219,9 @@ impl Msg {
             4 => {
                 let round = r.u32()?;
                 let client = r.u32()?;
+                // v1 updates carry no base version; a synchronous
+                // client's base is its round's model (version == round)
+                let base_version = if ver >= 2 { r.u32()? } else { round };
                 let stats = UpdateStats {
                     n_samples: r.u64()?,
                     train_loss: r.f32()?,
@@ -205,6 +232,7 @@ impl Msg {
                 Msg::Update {
                     round,
                     client,
+                    base_version,
                     stats,
                     delta: decode_encoded(&mut r)?,
                 }
@@ -288,7 +316,7 @@ impl Msg {
         // double-copy; compute structurally instead
         match self {
             Msg::RoundStart { params, .. } => 40 + 2 + encoded_overhead(params),
-            Msg::Update { delta, .. } => 30 + 2 + encoded_overhead(delta),
+            Msg::Update { delta, .. } => 34 + 2 + encoded_overhead(delta),
             _ => 16,
         }
     }
@@ -581,6 +609,7 @@ mod tests {
             Msg::Update {
                 round: 7,
                 client: 3,
+                base_version: 5,
                 delta: compress(&v, &CC::PAPER, 9),
                 stats: UpdateStats {
                     n_samples: 512,
@@ -639,6 +668,7 @@ mod tests {
             let msg = Msg::Update {
                 round: 1,
                 client: 2,
+                base_version: 1,
                 delta: delta.clone(),
                 stats: UpdateStats {
                     n_samples: 10,
@@ -653,6 +683,52 @@ mod tests {
                 _ => unreachable!(),
             }
         }
+    }
+
+    /// Protocol-version compatibility: v1 frames (no `base_version` on
+    /// Update) must still decode, with the base defaulting to the round
+    /// tag — the synchronous-client semantics.
+    #[test]
+    fn legacy_v1_update_decodes_with_round_as_base() {
+        let delta = vec![1.0f32, -2.0, 0.5];
+        // hand-roll the v1 layout: version 1, tag 4, round, client,
+        // stats, encoded delta (no base_version)
+        let mut w = Writer::with_capacity(64);
+        w.u8(1);
+        w.u8(4);
+        w.u32(9); // round
+        w.u32(3); // client
+        w.u64(128); // n_samples
+        w.f32(0.75); // train_loss
+        w.u32(11); // steps
+        w.f64(42.5); // compute_ms
+        w.f32(0.01); // update_var
+        encode_encoded(&mut w, &Encoded::Dense(delta.clone()));
+        let decoded = Msg::decode(&w.into_vec()).unwrap();
+        assert_eq!(
+            decoded,
+            Msg::Update {
+                round: 9,
+                client: 3,
+                base_version: 9,
+                delta: Encoded::Dense(delta),
+                stats: UpdateStats {
+                    n_samples: 128,
+                    train_loss: 0.75,
+                    steps: 11,
+                    compute_ms: 42.5,
+                    update_var: 0.01,
+                },
+            }
+        );
+        // layout-identical messages decode from a v1 version byte too
+        let mut shutdown_v1 = Msg::Shutdown.encode();
+        shutdown_v1[0] = 1;
+        assert_eq!(Msg::decode(&shutdown_v1).unwrap(), Msg::Shutdown);
+        // versions below the window are still rejected
+        let mut too_old = Msg::Shutdown.encode();
+        too_old[0] = 0;
+        assert!(Msg::decode(&too_old).is_err());
     }
 
     #[test]
@@ -754,6 +830,7 @@ mod tests {
         let dense = Msg::Update {
             round: 0,
             client: 0,
+            base_version: 0,
             delta: Encoded::Dense(v.clone()),
             stats: UpdateStats {
                 n_samples: 1,
@@ -768,6 +845,7 @@ mod tests {
         let compressed = Msg::Update {
             round: 0,
             client: 0,
+            base_version: 0,
             delta: compress(&noisy, &CC::PAPER, 1),
             stats: UpdateStats {
                 n_samples: 1,

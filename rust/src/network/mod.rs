@@ -18,7 +18,7 @@ pub mod transport;
 
 pub use message::{
     decode_payload, pre_encode, pre_encode_dense, ClientProfile, Msg, UpdateStats,
-    PROTOCOL_VERSION,
+    MIN_PROTOCOL_VERSION, PROTOCOL_VERSION,
 };
 pub use shaper::{LinkShaper, TrafficLog};
 pub use transport::{ClientTransport, ServerTransport};

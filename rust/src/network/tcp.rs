@@ -402,6 +402,7 @@ mod tests {
             .send(&Msg::Update {
                 round: 1,
                 client: 1,
+                base_version: 1,
                 delta: crate::compress::Encoded::Dense(params.clone()),
                 stats: super::super::message::UpdateStats {
                     n_samples: 1,

@@ -1,11 +1,37 @@
-//! The orchestrator round loop (Algorithm 1).
+//! The orchestrator round engine: synchronous rounds (Algorithm 1) and
+//! buffered-async aggregation (FedBuff), selected by
+//! [`crate::config::RoundMode`].
 //!
 //! Generic over [`ServerTransport`], so the same loop drives in-process
 //! simulations, multi-thread runs and multi-process TCP deployments.
 //! Orchestrators are assembled with [`OrchestratorBuilder`]
 //! (`Orchestrator::builder(cfg).transport(..).strategy(..)…build()`),
 //! which defaults the aggregation strategy and server optimizer from
-//! the config's registry names.
+//! the config's registry names. [`Orchestrator::run`] dispatches on the
+//! config's round mode; [`Orchestrator::run_round`] is the synchronous
+//! engine's single-round entry point.
+//!
+//! # Buffered-async mode (`--round-mode async_fedbuff[:k[:α[:s_max]]]`)
+//!
+//! In [`crate::config::RoundMode::BufferedAsync`] the server never
+//! waits for a cohort: it keeps every reachable client training, folds
+//! each update the moment it arrives — *regardless of round tag* —
+//! weighted by `w_c · discount(staleness)` where `staleness` is how
+//! many commits the client's base model is behind
+//! ([`crate::config::StalenessFn`]), and commits a new model version
+//! every `buffer_k` folds. After each fold the reporting client is
+//! immediately handed the current model, so stragglers are absorbed as
+//! stale-but-useful contributions instead of being dropped at a
+//! deadline. Updates staler than `max_staleness` are discarded.
+//! `cfg.train.rounds` counts commits; `straggler.deadline_ms` bounds
+//! how long one commit may wait before closing (possibly empty, model
+//! unchanged). Requires a streaming aggregation strategy — order
+//! statistics cannot discount individual updates
+//! ([`crate::config::validate`] enforces this for config-selected
+//! strategies, [`Orchestrator::run`] for injected ones). The fused
+//! O(nnz) decode→fold ingest is the same
+//! [`RoundAggregator::fold_view_scaled`] path the sync engine uses
+//! with scale 1.
 //!
 //! Per round, [`Orchestrator::run_round`] runs three phases:
 //!
@@ -37,7 +63,7 @@ use super::selection::select_clients;
 use super::strategy::{registry as strategy_registry, AggStrategy, RoundAggregator, ServerOpt};
 use crate::cluster::NodeId;
 use crate::compress::{DecodedView, Encoded};
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, RoundMode, StalenessFn};
 use crate::util::scratch::ScratchPool;
 use crate::data::{Batch, Shard};
 use crate::metrics::{RoundMetrics, TrainingReport};
@@ -45,7 +71,7 @@ use crate::network::{pre_encode_dense, Msg, ServerTransport, TrafficLog, UpdateS
 use crate::runtime::{EvalOut, ModelRuntime};
 use crate::util::rng::Rng;
 use anyhow::{anyhow, bail, Result};
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -400,6 +426,9 @@ impl<T: ServerTransport> Orchestrator<T> {
                 Msg::Update {
                     round: r,
                     client,
+                    // sync rounds train on the round's own model, so
+                    // the base version adds nothing over the round tag
+                    base_version: _,
                     delta,
                     stats,
                 } => {
@@ -560,8 +589,10 @@ impl<T: ServerTransport> Orchestrator<T> {
         self.finalize_phase(round, t_round, &selected, collect, agg, tracker)
     }
 
-    /// Full training run (Algorithm 1). Consumes registrations first if
-    /// `wait_for` is given.
+    /// Full training run. Consumes registrations first if `wait_for`
+    /// is given, then drives the engine the config's
+    /// [`RoundMode`] selects: synchronous rounds (Algorithm 1) or
+    /// buffered-async commits (FedBuff — see the module docs).
     pub fn run(
         &mut self,
         wait_for: Option<(usize, Duration)>,
@@ -573,6 +604,19 @@ impl<T: ServerTransport> Orchestrator<T> {
                 bail!("no clients registered");
             }
         }
+        match self.cfg.round_mode {
+            RoundMode::Sync => self.run_sync(hooks),
+            RoundMode::BufferedAsync {
+                buffer_k,
+                max_staleness,
+                staleness,
+            } => self.run_async(buffer_k, max_staleness, staleness, hooks),
+        }
+    }
+
+    /// The synchronous engine: `rounds` iterations of
+    /// [`Orchestrator::run_round`] (Algorithm 1).
+    fn run_sync(&mut self, hooks: &mut dyn OrchestratorHooks) -> Result<TrainingReport> {
         let mut report = TrainingReport::new(&self.cfg.name);
         let mut tracker = ConvergenceTracker::new(
             self.cfg.train.converge_eps,
@@ -604,11 +648,317 @@ impl<T: ServerTransport> Orchestrator<T> {
         if let Some(t) = self.cfg.train.target_accuracy {
             report.target_accuracy_at = report.rounds_to_accuracy(t);
         }
-        // Algorithm 1 done: release the fleet
+        self.release_fleet();
+        Ok(report)
+    }
+
+    /// Hand `client` the current global model for async training.
+    /// `dispatch_no` (a per-run counter) tags the `RoundStart`, so a
+    /// client re-dispatched within one commit window still draws fresh
+    /// training RNG, fault decisions and compression masks — the
+    /// worker keys all three off the round tag / mask seed. Staleness
+    /// is derived from `model_version`, never the tag.
+    fn dispatch_async(&mut self, client: NodeId, dispatch_no: u64, shared: &Encoded) -> Result<()> {
+        let msg = Msg::RoundStart {
+            round: dispatch_no as u32,
+            model_version: self.model_version,
+            deadline_ms: self.round_deadline_ms(),
+            lr: self.cfg.train.lr,
+            mu: self.strategy.mu(),
+            local_epochs: self.cfg.train.local_epochs as u32,
+            params: shared.clone(),
+            mask_seed: mask_seed(self.cfg.seed, dispatch_no as u32, client),
+            compression: self.cfg.compression,
+        };
+        self.transport.send_to(client, &msg)
+    }
+
+    /// The buffered-async engine (FedBuff; see the module docs).
+    /// `cfg.train.rounds` counts commits; each metrics row is one
+    /// commit.
+    fn run_async(
+        &mut self,
+        buffer_k: usize,
+        max_staleness: u32,
+        staleness: StalenessFn,
+        hooks: &mut dyn OrchestratorHooks,
+    ) -> Result<TrainingReport> {
+        // config-selected strategies are validated up front; this
+        // catches builder-injected ones
+        if self.strategy.needs_buffering() {
+            bail!(
+                "async round mode requires a streaming aggregation strategy \
+                 (got buffered '{}')",
+                self.strategy.name()
+            );
+        }
+        let mut report = TrainingReport::new(&self.cfg.name);
+        let mut tracker = ConvergenceTracker::new(
+            self.cfg.train.converge_eps,
+            self.cfg.train.converge_patience,
+            self.cfg.train.target_accuracy,
+        );
+        let total_commits = self.cfg.train.rounds as u32;
+
+        // launch: one concurrency slot per selected client, all on M_0
+        let cohort = self.select_phase(0)?;
+        hooks.on_round_start(0, &cohort);
+        let mut shared = Encoded::PreEncoded(pre_encode_dense(&self.params));
+        let mut dispatch_no: u64 = 0;
+        let mut in_flight: HashSet<NodeId> = HashSet::with_capacity(cohort.len());
+        // when each in-flight client last got a dispatch — non-reporting
+        // clients (crashes, injected dropouts) are re-dispatched after a
+        // deadline so their concurrency slot is never lost for good
+        let mut last_dispatch: HashMap<NodeId, Instant> = HashMap::with_capacity(cohort.len());
+        for &c in &cohort {
+            match self.dispatch_async(c, dispatch_no, &shared) {
+                Ok(()) => {
+                    in_flight.insert(c);
+                    last_dispatch.insert(c, Instant::now());
+                }
+                Err(e) => log::warn!("async launch: dispatch to {c} failed ({e})"),
+            }
+            dispatch_no += 1;
+        }
+        if in_flight.is_empty() {
+            bail!("async launch: no client reachable");
+        }
+
+        let mut commit = 0u32;
+        let mut agg = RoundAggregator::with_pool(
+            self.strategy.clone(),
+            self.params.len(),
+            self.scratch.clone(),
+        );
+        let mut t_commit = Instant::now();
+        let mut stale_drops = 0u32;
+        let mut bad_folds = 0u32;
+        let mut last_traffic = self.traffic.totals();
+        // clients owed a fresh dispatch; flushed at the loop top so a
+        // fold that fills the buffer hands back the *post*-commit model
+        let mut pending: Vec<NodeId> = Vec::new();
+        while commit < total_commits {
+            let now = Instant::now();
+            let deadline = t_commit + Duration::from_millis(self.round_deadline_ms());
+            // a commit may not wait forever: at the deadline it closes
+            // with whatever arrived (possibly nothing — model unchanged)
+            if now >= deadline || agg.n_updates() >= buffer_k {
+                let full = std::mem::replace(
+                    &mut agg,
+                    RoundAggregator::with_pool(
+                        self.strategy.clone(),
+                        self.params.len(),
+                        self.scratch.clone(),
+                    ),
+                );
+                let totals = self.traffic.totals();
+                let traffic_delta = (totals.0 - last_traffic.0, totals.1 - last_traffic.1);
+                last_traffic = totals;
+                let outcome = self.commit_async(
+                    commit,
+                    t_commit,
+                    in_flight.len(),
+                    (stale_drops, bad_folds),
+                    traffic_delta,
+                    full,
+                    &mut tracker,
+                )?;
+                if outcome.metrics.reported > 0 {
+                    // the model moved: share the new version
+                    shared = Encoded::PreEncoded(pre_encode_dense(&self.params));
+                }
+                hooks.on_round(&outcome.metrics);
+                let converged = outcome.converged;
+                report.push(outcome.metrics);
+                commit += 1;
+                t_commit = Instant::now();
+                stale_drops = 0;
+                bad_folds = 0;
+                if converged {
+                    report.converged_at = Some(commit - 1);
+                    log::info!("async: converged at commit {}", commit - 1);
+                    break;
+                }
+                // revive silent clients: anyone whose last dispatch is a
+                // full deadline old reported nothing (dropout, crash,
+                // lost frame) — hand them the fresh model instead of
+                // leaking their concurrency slot
+                let stall = Duration::from_millis(self.round_deadline_ms());
+                for &c in &in_flight {
+                    let stalled = last_dispatch
+                        .get(&c)
+                        .is_none_or(|t| t.elapsed() >= stall);
+                    if stalled && !pending.contains(&c) {
+                        log::debug!("async: re-dispatching silent client {c}");
+                        pending.push(c);
+                    }
+                }
+                continue;
+            }
+            // keep reporters busy on the freshest model
+            for client in pending.drain(..) {
+                if let Err(e) = self.dispatch_async(client, dispatch_no, &shared) {
+                    log::warn!("async: re-dispatch to {client} failed ({e})");
+                    in_flight.remove(&client);
+                } else {
+                    last_dispatch.insert(client, Instant::now());
+                }
+                dispatch_no += 1;
+            }
+            if in_flight.is_empty() {
+                bail!("async: every client became unreachable");
+            }
+            let step = (deadline - now).min(Duration::from_millis(50));
+            let Some((from, msg)) = self.transport.recv_timeout(step)? else {
+                continue;
+            };
+            match msg {
+                Msg::Update {
+                    round: _,
+                    client,
+                    base_version,
+                    delta,
+                    stats,
+                } => {
+                    if !in_flight.contains(&client) {
+                        continue;
+                    }
+                    if base_version > self.model_version {
+                        log::warn!(
+                            "async: client {client} claims future base version \
+                             {base_version} (current {})",
+                            self.model_version
+                        );
+                        stale_drops += 1;
+                    } else {
+                        let s = self.model_version - base_version;
+                        if s > max_staleness {
+                            log::debug!(
+                                "async: dropping update from {client} at staleness {s}"
+                            );
+                            stale_drops += 1;
+                            self.registry.report_failure(client, commit);
+                        } else {
+                            // fused ingest, staleness-discounted: the
+                            // same O(nnz) path as the sync engine, with
+                            // scale = discount(s) instead of 1
+                            let folded =
+                                DecodedView::of(&delta, self.params.len()).and_then(|view| {
+                                    agg.fold_view_scaled(
+                                        &ViewInput {
+                                            client,
+                                            view: &view,
+                                            n_samples: stats.n_samples,
+                                            train_loss: stats.train_loss,
+                                            update_var: stats.update_var,
+                                        },
+                                        staleness.discount(s),
+                                    )
+                                });
+                            match folded {
+                                Ok(()) => {
+                                    hooks.on_update(commit, client, &stats);
+                                    self.registry.report_success(
+                                        client,
+                                        commit,
+                                        t_commit.elapsed().as_secs_f64() * 1e3,
+                                    );
+                                }
+                                Err(e) => {
+                                    log::warn!("async: bad update from {client}: {e}");
+                                    bad_folds += 1;
+                                    self.registry.report_failure(client, commit);
+                                }
+                            }
+                        }
+                    }
+                    pending.push(client);
+                }
+                other => self.handle_control(from, other)?,
+            }
+        }
+        if let Some(t) = self.cfg.train.target_accuracy {
+            report.target_accuracy_at = report.rounds_to_accuracy(t);
+        }
+        self.release_fleet();
+        Ok(report)
+    }
+
+    /// Close one async commit: finalize the buffered folds (if any),
+    /// step the server optimizer, evaluate, and advance the model
+    /// version. An empty commit keeps the model — and the version, so
+    /// in-flight staleness stays truthful — and does *not* advance the
+    /// convergence tracker (an idle deadline is no evidence the model
+    /// stopped moving).
+    ///
+    /// Metric semantics in async mode (shared with the async sim):
+    /// `dropped` counts every discarded update this commit (too stale
+    /// + undecodable/refused), `deadline_misses` the too-stale subset.
+    #[allow(clippy::too_many_arguments)]
+    fn commit_async(
+        &mut self,
+        commit: u32,
+        t_commit: Instant,
+        in_flight: usize,
+        (stale_drops, bad_folds): (u32, u32),
+        (bytes_down, bytes_up): (u64, u64),
+        agg: RoundAggregator,
+        tracker: &mut ConvergenceTracker,
+    ) -> Result<RoundOutcome> {
+        let n_updates = agg.n_updates();
+        let (new_params, mean_loss) = if n_updates == 0 {
+            log::warn!("async commit {commit}: zero folds — keeping model");
+            (None, f64::NAN)
+        } else {
+            let out = agg.finalize(&self.params, self.server_opt.as_mut())?;
+            (Some(out.new_params), out.mean_train_loss)
+        };
+        let current: &[f32] = new_params.as_deref().unwrap_or(&self.params);
+        let (eval_accuracy, eval_loss) = if self.should_eval(commit) {
+            match &self.eval {
+                Some(h) => {
+                    let e = h.evaluate(current)?;
+                    (Some(e.accuracy()), Some(e.mean_loss()))
+                }
+                None => (None, None),
+            }
+        } else {
+            (None, None)
+        };
+        let (converged, model_delta) = if new_params.is_some() {
+            let c = tracker.update(&self.params, current, eval_accuracy);
+            (c, tracker.last_delta())
+        } else {
+            (false, 0.0)
+        };
+        if let Some(p) = new_params {
+            self.params = p;
+            self.model_version += 1;
+        }
+        Ok(RoundOutcome {
+            metrics: RoundMetrics {
+                round: commit,
+                selected: in_flight as u32,
+                reported: n_updates as u32,
+                dropped: stale_drops + bad_folds,
+                deadline_misses: stale_drops,
+                train_loss: mean_loss,
+                eval_accuracy,
+                eval_loss,
+                duration_s: t_commit.elapsed().as_secs_f64(),
+                bytes_down,
+                bytes_up,
+                model_delta,
+            },
+            converged,
+        })
+    }
+
+    /// Training over: release the fleet.
+    fn release_fleet(&mut self) {
         for c in self.transport.connected() {
             let _ = self.transport.send_to(c, &Msg::Shutdown);
         }
-        Ok(report)
     }
 }
 
@@ -687,9 +1037,14 @@ mod tests {
     }
 
     fn update(client: NodeId, round: u32, delta: Vec<f32>) -> Msg {
+        update_based(client, round, round, delta)
+    }
+
+    fn update_based(client: NodeId, round: u32, base_version: u32, delta: Vec<f32>) -> Msg {
         Msg::Update {
             round,
             client,
+            base_version,
             delta: Encoded::Dense(delta),
             stats: UpdateStats {
                 n_samples: 100,
@@ -869,6 +1224,7 @@ mod tests {
             .send(&Msg::Update {
                 round: 0,
                 client: 0,
+                base_version: 0,
                 delta: enc,
                 stats: UpdateStats {
                     n_samples: 100,
@@ -1054,5 +1410,142 @@ mod tests {
         client.send(&update(0, 1, vec![1.0; 3])).unwrap();
         orch.run_round(1, &mut tracker(), &mut NoHooks).unwrap();
         assert_eq!(orch.params(), &[2.5f32; 3][..]);
+    }
+
+    fn async_cfg(k: usize, buffer_k: usize, max_staleness: u32, deadline_ms: u64) -> ExperimentConfig {
+        let mut cfg = test_cfg(k);
+        cfg.straggler.deadline_ms = Some(deadline_ms);
+        cfg.round_mode = crate::config::RoundMode::BufferedAsync {
+            buffer_k,
+            max_staleness,
+            staleness: crate::config::StalenessFn::Polynomial { alpha: 1.0 },
+        };
+        cfg
+    }
+
+    /// The tentpole behaviour: the async engine folds updates as they
+    /// arrive regardless of round tag, discounts them by staleness,
+    /// and commits a model version every `buffer_k` folds.
+    #[test]
+    fn async_engine_commits_every_buffer_k_with_staleness_discounts() {
+        let mut cfg = async_cfg(3, 2, 10, 5_000);
+        cfg.train.rounds = 2; // = commits in async mode
+        let (mut orch, clients) = federation(cfg, 3, vec![0f32; 3]);
+        // commit 0: two fresh updates (staleness 0 each)
+        clients[0].send(&update_based(0, 0, 0, vec![8.0; 3])).unwrap();
+        clients[1].send(&update_based(1, 0, 0, vec![4.0; 3])).unwrap();
+        // commit 1: one update still based on M_0 (staleness 1 after
+        // the first commit) + one fresh update based on M_1
+        clients[2].send(&update_based(2, 0, 0, vec![12.0; 3])).unwrap();
+        clients[0].send(&update_based(0, 1, 1, vec![3.0; 3])).unwrap();
+        let report = orch.run(None, &mut NoHooks).unwrap();
+
+        assert_eq!(report.rounds.len(), 2);
+        assert_eq!(report.rounds[0].reported, 2);
+        assert_eq!(report.rounds[1].reported, 2);
+        assert_eq!(report.rounds[0].dropped + report.rounds[1].dropped, 0);
+        // commit 0: Δ = (100·8 + 100·4) / 200 = 6 → M_1 = 6
+        // commit 1: the stale update weighs discount(1)·100, the fresh
+        // one 100 — same formula as the engine, computed here to stay
+        // robust to libm rounding in powf
+        let d = crate::config::StalenessFn::Polynomial { alpha: 1.0 }.discount(1);
+        let acc = (d * 100.0) * 12.0 + 100.0 * 3.0;
+        let want = (6.0f64 + acc / (d * 100.0 + 100.0)) as f32;
+        for p in orch.params() {
+            assert_eq!(p.to_bits(), want.to_bits(), "got {p}, want {want}");
+        }
+        // and the discount genuinely bit: the undiscounted mean would
+        // have landed at (100·12 + 100·3)/200 + 6 = 13.5
+        assert!(orch.params()[0] < 13.0, "staleness discount not applied");
+    }
+
+    #[test]
+    fn async_engine_drops_updates_beyond_max_staleness() {
+        let mut cfg = async_cfg(2, 1, 0, 300);
+        cfg.train.rounds = 2;
+        let (mut orch, clients) = federation(cfg, 2, vec![0f32; 3]);
+        clients[0].send(&update_based(0, 0, 0, vec![2.0; 3])).unwrap();
+        // base 0 after one commit → staleness 1 > max_staleness 0
+        clients[1].send(&update_based(1, 0, 0, vec![900.0; 3])).unwrap();
+        let report = orch.run(None, &mut NoHooks).unwrap();
+        assert_eq!(report.rounds.len(), 2);
+        assert_eq!(report.rounds[0].reported, 1);
+        // the too-stale update is rejected; the second commit closes
+        // empty at the deadline and keeps the model
+        assert_eq!(report.rounds[1].reported, 0);
+        assert_eq!(report.rounds[1].dropped, 1);
+        assert_eq!(report.rounds[1].deadline_misses, 1);
+        assert_eq!(orch.params(), &[2.0f32; 3][..]);
+    }
+
+    /// Async commits only advance the model version when something
+    /// folded — an empty commit must not inflate in-flight staleness.
+    #[test]
+    fn async_empty_commits_do_not_advance_the_model_version() {
+        let mut cfg = async_cfg(2, 1, 0, 250);
+        cfg.train.rounds = 3;
+        let (mut orch, clients) = federation(cfg, 2, vec![0f32; 3]);
+        clients[0].send(&update_based(0, 0, 0, vec![2.0; 3])).unwrap();
+        // sent up front, still base 0: would be staleness 1 if empty
+        // commits bumped the version — they must not, so after commit 0
+        // (the only non-empty one) this stays droppable, and a fresh
+        // base-1 update keeps folding
+        clients[1].send(&update_based(1, 0, 1, vec![4.0; 3])).unwrap();
+        let report = orch.run(None, &mut NoHooks).unwrap();
+        assert_eq!(report.rounds.len(), 3);
+        assert_eq!(report.rounds[0].reported, 1); // [2.0]
+        assert_eq!(report.rounds[1].reported, 1); // [2.0] + 4 = [6.0]
+        assert_eq!(report.rounds[2].reported, 0); // empty, model kept
+        assert_eq!(orch.params(), &[6.0f32; 3][..]);
+    }
+
+    /// Review fix: a dispatched client that never reports (crash,
+    /// injected dropout, lost frame) must get a fresh dispatch after a
+    /// deadline instead of losing its concurrency slot forever — and
+    /// idle deadline commits must not count as convergence evidence.
+    #[test]
+    fn async_silent_clients_are_redispatched_and_empty_commits_dont_converge() {
+        let mut cfg = async_cfg(2, 2, 10, 250);
+        cfg.train.rounds = 4; // > converge_patience (3) empty commits
+        let (mut orch, clients) = federation(cfg, 2, vec![0f32; 3]);
+        // client 0 reports once; client 1 never reports at all
+        clients[0].send(&update_based(0, 0, 0, vec![2.0; 3])).unwrap();
+        let report = orch.run(None, &mut NoHooks).unwrap();
+        assert_eq!(report.rounds.len(), 4);
+        assert_eq!(report.rounds[0].reported, 1);
+        // three consecutive empty commits kept the model bit-still —
+        // that must not trip the eps/patience convergence tracker
+        assert!(report.converged_at.is_none());
+        assert_eq!(orch.params(), &[2.0f32; 3][..]);
+        // the silent client kept receiving fresh dispatches: the
+        // launch one plus at least one post-deadline revival
+        let mut round_starts = 0;
+        while let Ok(Some(msg)) = clients[1].recv_timeout(Duration::from_millis(50)) {
+            if matches!(msg, Msg::RoundStart { .. }) {
+                round_starts += 1;
+            }
+        }
+        assert!(
+            round_starts >= 2,
+            "silent client got only {round_starts} dispatch(es)"
+        );
+    }
+
+    #[test]
+    fn async_mode_rejects_buffered_strategies() {
+        let mut cfg = async_cfg(1, 1, 10, 300);
+        cfg.train.rounds = 1;
+        let hub = InprocHub::new(Arc::new(TrafficLog::new()));
+        let mut orch = Orchestrator::builder(cfg)
+            .transport(hub.server())
+            .initial_params(vec![0f32; 2])
+            .strategy(Arc::new(crate::orchestrator::strategy::CoordinateMedian))
+            .build()
+            .unwrap();
+        let err = orch.run(None, &mut NoHooks).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("streaming"),
+            "unexpected error: {err:#}"
+        );
     }
 }

@@ -97,7 +97,11 @@ pub trait AggStrategy: Send + Sync {
     }
 
     /// Streaming-mode ingest of one update as a zero-materialization
-    /// [`ViewInput`] — the hot path the orchestrator drives.
+    /// [`ViewInput`] — the hot path the orchestrator drives. `scale`
+    /// multiplies the strategy's raw weight; the engine passes `1.0`
+    /// for synchronous rounds and a staleness discount
+    /// ([`crate::config::StalenessFn::discount`]) in buffered-async
+    /// mode, so strategies stay oblivious to round semantics.
     ///
     /// The default implementation densifies the view into a pooled
     /// scratch buffer and replays the legacy [`AggStrategy::weight`] +
@@ -107,13 +111,14 @@ pub trait AggStrategy: Send + Sync {
     /// Sparse-aware strategies — every built-in streaming strategy —
     /// override this to fold the view directly: O(nnz) per update and
     /// no dense vector at any point. Overrides must produce results
-    /// bit-identical to the default (fold the same `w·Δ`); the engine's
-    /// bookkeeping is shared either way.
+    /// bit-identical to the default (fold the same `scale·w·Δ`); the
+    /// engine's bookkeeping is shared either way.
     fn fold_view(
         &self,
         core: &mut StreamingAggregator,
         input: &ViewInput<'_>,
         pool: &ScratchPool,
+        scale: f64,
     ) -> Result<()> {
         let mut delta = pool.take(input.view.dense_len());
         input.view.write_dense(&mut delta);
@@ -124,7 +129,7 @@ pub trait AggStrategy: Send + Sync {
             train_loss: input.train_loss,
             update_var: input.update_var,
         };
-        let w = self.weight(&dense);
+        let w = scale * self.weight(&dense);
         let res = core.fold(&dense, w);
         pool.put(dense.delta);
         res
@@ -167,9 +172,10 @@ impl AggStrategy for FedAvg {
         core: &mut StreamingAggregator,
         input: &ViewInput<'_>,
         _pool: &ScratchPool,
+        scale: f64,
     ) -> Result<()> {
         let w = stat_weight(None, input.n_samples, input.train_loss, input.update_var);
-        core.fold_view(input, w)
+        core.fold_view(input, scale * w)
     }
 }
 
@@ -199,9 +205,10 @@ impl AggStrategy for FedProx {
         core: &mut StreamingAggregator,
         input: &ViewInput<'_>,
         _pool: &ScratchPool,
+        scale: f64,
     ) -> Result<()> {
         let w = stat_weight(None, input.n_samples, input.train_loss, input.update_var);
-        core.fold_view(input, w)
+        core.fold_view(input, scale * w)
     }
 }
 
@@ -231,6 +238,7 @@ impl AggStrategy for WeightedAgg {
         core: &mut StreamingAggregator,
         input: &ViewInput<'_>,
         _pool: &ScratchPool,
+        scale: f64,
     ) -> Result<()> {
         let w = stat_weight(
             Some(self.scheme),
@@ -238,7 +246,7 @@ impl AggStrategy for WeightedAgg {
             input.train_loss,
             input.update_var,
         );
-        core.fold_view(input, w)
+        core.fold_view(input, scale * w)
     }
 }
 
@@ -316,12 +324,28 @@ impl RoundAggregator {
     /// collection state); the buffered path clones and retains it
     /// until finalize (O(k·P), inherent to order statistics).
     pub fn fold(&mut self, input: &AggInput) -> Result<()> {
+        self.fold_scaled(input, 1.0)
+    }
+
+    /// [`RoundAggregator::fold`] with a weight multiplier — the dense
+    /// entry point of the buffered-async engine, where `scale` is the
+    /// update's staleness discount. Order-statistic (buffered)
+    /// strategies have no per-update weight to discount, so a non-unit
+    /// scale is an error there (the async engine refuses them up front
+    /// — see [`crate::config::validate`]).
+    pub fn fold_scaled(&mut self, input: &AggInput, scale: f64) -> Result<()> {
         match &mut self.mode {
             Mode::Streaming(core) => {
-                let w = self.strategy.weight(input);
+                let w = scale * self.strategy.weight(input);
                 core.fold(input, w)
             }
             Mode::Buffered { n_params, inputs } => {
+                if scale != 1.0 {
+                    bail!(
+                        "strategy '{}' cannot apply a staleness discount (buffered mode)",
+                        self.strategy.name()
+                    );
+                }
                 if input.delta.len() != *n_params {
                     bail!(
                         "aggregate: client {} delta length {} != {}",
@@ -344,14 +368,29 @@ impl RoundAggregator {
     /// buffer they retain until finalize (inherent to order
     /// statistics), recycled at finalize.
     pub fn fold_view(&mut self, input: &ViewInput<'_>) -> Result<()> {
+        self.fold_view_scaled(input, 1.0)
+    }
+
+    /// [`RoundAggregator::fold_view`] with a weight multiplier — the
+    /// fused-ingest entry point of the buffered-async engine (`scale` =
+    /// the update's staleness discount, `1.0` for sync rounds).
+    /// Buffered strategies reject non-unit scales, as in
+    /// [`RoundAggregator::fold_scaled`].
+    pub fn fold_view_scaled(&mut self, input: &ViewInput<'_>, scale: f64) -> Result<()> {
         let RoundAggregator {
             strategy,
             pool,
             mode,
         } = self;
         match mode {
-            Mode::Streaming(core) => strategy.fold_view(core, input, pool),
+            Mode::Streaming(core) => strategy.fold_view(core, input, pool, scale),
             Mode::Buffered { n_params, inputs } => {
+                if scale != 1.0 {
+                    bail!(
+                        "strategy '{}' cannot apply a staleness discount (buffered mode)",
+                        strategy.name()
+                    );
+                }
                 if input.view.dense_len() != *n_params {
                     bail!(
                         "aggregate: client {} delta length {} != {}",
@@ -524,6 +563,79 @@ mod tests {
         let view = DecodedView::of(&enc, 3).unwrap();
         assert!(agg.fold_view(&view_input(0, &view)).is_err());
         assert_eq!(agg.n_updates(), 0);
+    }
+
+    /// The staleness hook: a scaled fold must weigh exactly like a
+    /// fold whose raw weight was pre-multiplied — for both the dense
+    /// and the view entry points, across every streaming built-in.
+    #[test]
+    fn scaled_folds_match_premultiplied_weights() {
+        use crate::compress::{DecodedView, Encoded};
+        for strategy in [
+            Arc::new(FedAvg) as Arc<dyn AggStrategy>,
+            Arc::new(FedProx { mu: 0.1 }),
+            Arc::new(WeightedAgg {
+                scheme: WeightScheme::InverseLoss,
+            }),
+        ] {
+            // reference: raw weights 100 and 0.25·100 folded by hand
+            let w0 = strategy.weight(&input(0, vec![2.0, 0.0], 10));
+            let w1 = strategy.weight(&input(1, vec![0.0, 8.0], 10));
+            let mut reference = StreamingAggregator::new(2);
+            reference
+                .fold(&input(0, vec![2.0, 0.0], 10), w0)
+                .unwrap();
+            reference
+                .fold(&input(1, vec![0.0, 8.0], 10), 0.25 * w1)
+                .unwrap();
+            let want = reference.finalize().unwrap();
+
+            // dense scaled path
+            let mut agg = RoundAggregator::new(strategy.clone(), 2);
+            agg.fold_scaled(&input(0, vec![2.0, 0.0], 10), 1.0).unwrap();
+            agg.fold_scaled(&input(1, vec![0.0, 8.0], 10), 0.25).unwrap();
+            let dense = agg.finalize(&[0.0, 0.0], &mut SgdServer).unwrap();
+
+            // view scaled path
+            let mut agg = RoundAggregator::new(strategy.clone(), 2);
+            let e0 = Encoded::Dense(vec![2.0, 0.0]);
+            let e1 = Encoded::Dense(vec![0.0, 8.0]);
+            let v0 = DecodedView::of(&e0, 2).unwrap();
+            let v1 = DecodedView::of(&e1, 2).unwrap();
+            agg.fold_view_scaled(&view_input(0, &v0), 1.0).unwrap();
+            agg.fold_view_scaled(&view_input(1, &v1), 0.25).unwrap();
+            let viewed = agg.finalize(&[0.0, 0.0], &mut SgdServer).unwrap();
+
+            for j in 0..2 {
+                let w = (want.delta[j]) as f32;
+                assert_eq!(
+                    w.to_bits(),
+                    dense.new_params[j].to_bits(),
+                    "{} dense scaled fold diverged at {j}",
+                    strategy.name()
+                );
+                assert_eq!(
+                    dense.new_params[j].to_bits(),
+                    viewed.new_params[j].to_bits(),
+                    "{} view scaled fold diverged at {j}",
+                    strategy.name()
+                );
+            }
+            assert_eq!(dense.weights, want.weights);
+        }
+    }
+
+    #[test]
+    fn buffered_strategies_reject_staleness_scales() {
+        let mut agg = RoundAggregator::new(Arc::new(CoordinateMedian), 2);
+        assert!(agg.fold_scaled(&input(0, vec![1.0, 2.0], 10), 0.5).is_err());
+        let enc = crate::compress::Encoded::Dense(vec![1.0, 2.0]);
+        let view = crate::compress::DecodedView::of(&enc, 2).unwrap();
+        assert!(agg.fold_view_scaled(&view_input(0, &view), 0.5).is_err());
+        assert_eq!(agg.n_updates(), 0);
+        // unit scale still works
+        agg.fold_scaled(&input(0, vec![1.0, 2.0], 10), 1.0).unwrap();
+        assert_eq!(agg.n_updates(), 1);
     }
 
     /// A custom strategy that only implements `weight` — including one

@@ -3,12 +3,31 @@
 //! any individual update in the clear.
 //!
 //! Mask for pair (i, j), i < j: `m_ij = PRG(pair_seed(i, j))`; client i
-//! adds `m_ij`, client j subtracts it. Deterministic float addition
-//! cancels exactly (x + m - m == x in IEEE 754 when summed pairwise,
-//! which we guarantee by cancelling masks *before* reduction).
+//! adds `m_ij`, client j subtracts it.
+//!
+//! Two domains:
+//!
+//! * **Float** ([`SecureAggregator::mask`] /
+//!   [`SecureAggregator::aggregate`]) — masks applied in f32.
+//!   Cancellation is *approximate*: IEEE-754 addition rounds, so
+//!   `(x₀+m) + (x₁−m)` recovers `x₀+x₁` only to within rounding noise.
+//!   Fine for experiments; not bit-exact.
+//! * **Fixed point** ([`SecureAggregator::mask_fixed`] /
+//!   [`SecureAggregator::aggregate_fixed`]) — the real-SecAgg
+//!   construction (Bonawitz et al.): quantize to `i64` at
+//!   [`FIXED_SCALE`], mask additively in `Z_2^64` (wrapping), sum in
+//!   `Z_2^64`. Modular masks cancel *exactly*, so masked aggregation
+//!   is **bit-identical** to the unmasked fixed-point aggregate
+//!   ([`SecureAggregator::aggregate_fixed_unmasked`]) — pinned by a
+//!   property test in `rust/tests/prop_invariants.rs`.
 
 use crate::cluster::NodeId;
 use crate::util::rng::Rng;
+
+/// Fixed-point quantization scale for the exact-cancellation path:
+/// values are stored as `round(x · 2^24)` in i64, leaving ~2^39 of
+/// headroom before a k-client sum could overflow for |x| ≤ ~1e4.
+pub const FIXED_SCALE: f64 = (1u64 << 24) as f64;
 
 /// A masked update as the server receives it.
 #[derive(Debug, Clone, PartialEq)]
@@ -101,6 +120,110 @@ impl SecureAggregator {
             1.0 / updates.len().max(1) as f64
         };
         sum.iter().map(|&s| (s * scale) as f32).collect()
+    }
+
+    /// One pair's mask in the modular fixed-point domain.
+    fn mask_words_for_pair(&self, a: NodeId, b: NodeId) -> Vec<u64> {
+        let mut rng = Rng::new(self.pair_seed(a, b) ^ 0xF1DE);
+        (0..self.n_params).map(|_| rng.next_u64()).collect()
+    }
+
+    /// Quantize one value into the wrapping fixed-point domain.
+    fn quantize_fixed(x: f32) -> u64 {
+        (x as f64 * FIXED_SCALE).round() as i64 as u64
+    }
+
+    /// Client-side, exact-cancellation domain: quantize `update` to
+    /// fixed point and apply the pairwise masks with wrapping `Z_2^64`
+    /// arithmetic. The result is statistically uniform per coordinate
+    /// (a one-time pad over `Z_2^64`), yet sums — with every
+    /// participant present — to exactly `Σ round(x·2^24)`.
+    pub fn mask_fixed(
+        &self,
+        client: NodeId,
+        update: &[f32],
+        participants: &[NodeId],
+    ) -> Vec<u64> {
+        assert_eq!(update.len(), self.n_params);
+        let mut out: Vec<u64> = update.iter().map(|&x| Self::quantize_fixed(x)).collect();
+        for &peer in participants {
+            if peer == client {
+                continue;
+            }
+            let m = self.mask_words_for_pair(client, peer);
+            if client < peer {
+                for (o, mv) in out.iter_mut().zip(&m) {
+                    *o = o.wrapping_add(*mv);
+                }
+            } else {
+                for (o, mv) in out.iter_mut().zip(&m) {
+                    *o = o.wrapping_sub(*mv);
+                }
+            }
+        }
+        out
+    }
+
+    /// Server-side mean over fixed-point masked updates: wrapping sum
+    /// (masks cancel exactly in `Z_2^64`), then dequantize. With a
+    /// subset-free round this is bit-identical to
+    /// [`SecureAggregator::aggregate_fixed_unmasked`] over the raw
+    /// updates — the modular sums are *equal integers*, not merely
+    /// close floats.
+    pub fn aggregate_fixed(&self, updates: &[&[u64]]) -> Vec<f32> {
+        assert!(!updates.is_empty());
+        let k = updates.len() as f64;
+        (0..self.n_params)
+            .map(|j| {
+                let mut sum = 0u64;
+                for u in updates {
+                    sum = sum.wrapping_add(u[j]);
+                }
+                ((sum as i64 as f64) / (FIXED_SCALE * k)) as f32
+            })
+            .collect()
+    }
+
+    /// The unmasked reference path: quantize each raw update and run
+    /// the identical wrapping-sum + dequantize pipeline. Exists so the
+    /// bit-identity property has a mask-free twin to compare against
+    /// (and so callers can compute the plaintext fixed-point mean).
+    pub fn aggregate_fixed_unmasked(&self, raw: &[&[f32]]) -> Vec<f32> {
+        let quantized: Vec<Vec<u64>> = raw
+            .iter()
+            .map(|u| {
+                assert_eq!(u.len(), self.n_params);
+                u.iter().map(|&x| Self::quantize_fixed(x)).collect()
+            })
+            .collect();
+        let views: Vec<&[u64]> = quantized.iter().map(|v| v.as_slice()).collect();
+        self.aggregate_fixed(&views)
+    }
+
+    /// Fixed-point counterpart of [`SecureAggregator::unmask_dropout`]:
+    /// remove a survivor's mask words toward dropped peers (wrapping),
+    /// restoring exact cancellation for the surviving subset.
+    pub fn unmask_dropout_fixed(
+        &self,
+        client: NodeId,
+        masked: &mut [u64],
+        dropped: &[NodeId],
+    ) {
+        for &peer in dropped {
+            if peer == client {
+                continue;
+            }
+            let m = self.mask_words_for_pair(client, peer);
+            if client < peer {
+                for (o, mv) in masked.iter_mut().zip(&m) {
+                    *o = o.wrapping_sub(*mv);
+                }
+            } else {
+                for (o, mv) in masked.iter_mut().zip(&m) {
+                    *o = o.wrapping_add(*mv);
+                }
+            }
+        }
     }
 
     /// Remove the mask contributions of `dropped` peers from a
@@ -216,6 +339,68 @@ mod tests {
         }
         for (r, e) in result.iter().zip(&expect) {
             assert!((*r as f64 - e).abs() < 1e-4);
+        }
+    }
+
+    /// The exact-cancellation domain: masked fixed-point aggregation
+    /// is bit-identical to the unmasked fixed-point mean (broad random
+    /// coverage lives in `prop_invariants`).
+    #[test]
+    fn fixed_point_masks_cancel_bit_exactly() {
+        let p = 300;
+        let agg = SecureAggregator::new(11, p);
+        let raw = updates(5, p, 4);
+        let participants: Vec<NodeId> = (0..5).collect();
+        let masked: Vec<Vec<u64>> = raw
+            .iter()
+            .enumerate()
+            .map(|(i, u)| agg.mask_fixed(i as NodeId, u, &participants))
+            .collect();
+        // each masked vector differs from its plain quantization
+        for (i, m) in masked.iter().enumerate() {
+            let plain: Vec<u64> = raw[i]
+                .iter()
+                .map(|&x| SecureAggregator::quantize_fixed(x))
+                .collect();
+            assert_ne!(m, &plain, "client {i} update left in the clear");
+        }
+        let views: Vec<&[u64]> = masked.iter().map(|v| v.as_slice()).collect();
+        let got = agg.aggregate_fixed(&views);
+        let raws: Vec<&[f32]> = raw.iter().map(|v| v.as_slice()).collect();
+        let want = agg.aggregate_fixed_unmasked(&raws);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+        // and the fixed-point mean matches the float mean to within
+        // quantization error
+        for (j, w) in want.iter().enumerate() {
+            let float_mean: f64 =
+                raw.iter().map(|u| u[j] as f64).sum::<f64>() / raw.len() as f64;
+            assert!((*w as f64 - float_mean).abs() < 1e-5, "coord {j}");
+        }
+    }
+
+    #[test]
+    fn fixed_point_dropout_recovery_stays_bit_exact() {
+        let p = 120;
+        let agg = SecureAggregator::new(13, p);
+        let raw = updates(4, p, 5);
+        let participants: Vec<NodeId> = (0..4).collect();
+        let mut masked: Vec<Vec<u64>> = raw
+            .iter()
+            .enumerate()
+            .map(|(i, u)| agg.mask_fixed(i as NodeId, u, &participants))
+            .collect();
+        masked.pop(); // client 3 drops
+        for (i, m) in masked.iter_mut().enumerate() {
+            agg.unmask_dropout_fixed(i as NodeId, m, &[3]);
+        }
+        let views: Vec<&[u64]> = masked.iter().map(|v| v.as_slice()).collect();
+        let got = agg.aggregate_fixed(&views);
+        let raws: Vec<&[f32]> = raw[..3].iter().map(|v| v.as_slice()).collect();
+        let want = agg.aggregate_fixed_unmasked(&raws);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits());
         }
     }
 

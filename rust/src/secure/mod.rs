@@ -12,4 +12,4 @@ pub mod dp;
 pub mod masking;
 
 pub use dp::{clip_l2, gaussian_mechanism, DpConfig};
-pub use masking::{MaskedUpdate, SecureAggregator};
+pub use masking::{MaskedUpdate, SecureAggregator, FIXED_SCALE};

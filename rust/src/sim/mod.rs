@@ -6,7 +6,19 @@
 //! orchestrator's deadline / partial-k logic plays out against virtual
 //! time. [`EventQueue`] is a classic min-heap discrete-event core;
 //! [`VirtualClock`] is the shared notion of "now".
+//!
+//! # Determinism contract
+//!
+//! Both types are fully deterministic: [`EventQueue`] breaks equal
+//! timestamps by insertion order (FIFO), so two runs that push the
+//! same events in the same order pop them in the same order — the
+//! foundation of the sim runner's "same seed ⇒ same commit sequence"
+//! guarantee (see `experiments::simrunner`). [`VirtualClock::advance_to`]
+//! returns an error (never panics) on backwards time: in buffered-async
+//! mode event times are derived from wire-carried client state, so a
+//! regression must surface as a recoverable error, not a crash.
 
+use anyhow::{bail, Result};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -25,13 +37,18 @@ impl VirtualClock {
         self.now_s
     }
 
-    pub fn advance_to(&mut self, t_s: f64) {
-        assert!(
-            t_s >= self.now_s - 1e-12,
-            "virtual time went backwards: {} -> {t_s}",
-            self.now_s
-        );
+    /// Advance to `t_s`. Backwards time (beyond a small epsilon) is an
+    /// error — reachable from the wire in async mode, so it must not
+    /// panic; callers decide whether to drop the event or abort.
+    pub fn advance_to(&mut self, t_s: f64) -> Result<()> {
+        if t_s.is_nan() || t_s < self.now_s - 1e-12 {
+            bail!(
+                "virtual time went backwards: {} -> {t_s}",
+                self.now_s
+            );
+        }
         self.now_s = self.now_s.max(t_s);
+        Ok(())
     }
 }
 
@@ -107,12 +124,6 @@ impl<T> EventQueue<T> {
     }
 }
 
-impl<T> Default for EventQueue<T> {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,18 +131,28 @@ mod tests {
     #[test]
     fn clock_monotonic() {
         let mut c = VirtualClock::new();
-        c.advance_to(5.0);
-        c.advance_to(5.0);
-        c.advance_to(7.5);
+        c.advance_to(5.0).unwrap();
+        c.advance_to(5.0).unwrap();
+        c.advance_to(7.5).unwrap();
         assert_eq!(c.now_s(), 7.5);
     }
 
+    /// Regression (ISSUE 4 satellite): backwards time used to panic;
+    /// it is wire-reachable in async mode, so it must be an error the
+    /// caller can handle — and must leave the clock untouched.
     #[test]
-    #[should_panic(expected = "backwards")]
-    fn clock_rejects_regression() {
+    fn clock_rejects_regression_as_error() {
         let mut c = VirtualClock::new();
-        c.advance_to(5.0);
-        c.advance_to(4.0);
+        c.advance_to(5.0).unwrap();
+        let err = c.advance_to(4.0).unwrap_err();
+        assert!(format!("{err}").contains("backwards"), "{err}");
+        assert_eq!(c.now_s(), 5.0, "failed advance must not move the clock");
+        // NaN is also a rejected (non-monotonic) target
+        assert!(c.advance_to(f64::NAN).is_err());
+        assert_eq!(c.now_s(), 5.0);
+        // within-epsilon jitter is tolerated and clamped forward
+        c.advance_to(5.0 - 1e-13).unwrap();
+        assert_eq!(c.now_s(), 5.0);
     }
 
     #[test]
@@ -154,6 +175,29 @@ mod tests {
         q.push(1.0, "second");
         assert_eq!(q.pop().unwrap().1, "first");
         assert_eq!(q.pop().unwrap().1, "second");
+    }
+
+    /// FIFO at equal timestamps must hold for long runs of ties and
+    /// survive interleaved pops — the property async replay leans on.
+    #[test]
+    fn long_tie_runs_stay_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..100u32 {
+            q.push(2.0, i);
+        }
+        // an earlier event pops first regardless of insertion position
+        q.push(1.0, 999);
+        assert_eq!(q.pop(), Some((1.0, 999)));
+        for i in 0..50u32 {
+            assert_eq!(q.pop(), Some((2.0, i)));
+        }
+        // new ties enqueue after the still-pending older ties
+        q.push(2.0, 1000);
+        for i in 50..100u32 {
+            assert_eq!(q.pop(), Some((2.0, i)));
+        }
+        assert_eq!(q.pop(), Some((2.0, 1000)));
+        assert!(q.is_empty());
     }
 
     #[test]

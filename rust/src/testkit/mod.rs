@@ -2,10 +2,14 @@
 //!
 //! [`check`] runs a property over N generated cases; on failure it
 //! reports the case seed so the exact input replays with
-//! `FEDHPC_PROP_SEED=<seed>`. [`Gen`] wraps the in-tree RNG with
-//! generator combinators for the shapes our invariants need (vectors,
-//! ranges, weights). Used by `rust/tests/prop_*.rs` for coordinator
-//! invariants (selection, aggregation, codecs, wire format).
+//! `FEDHPC_PROP_SEED=<seed>`. `FEDHPC_PROP_CASES=<n>` overrides every
+//! property's case count (the `PROPTEST_CASES` convention) — CI pins
+//! it so runs are reproducible and time-bounded; locally leave it
+//! unset for each property's default. [`Gen`] wraps the in-tree RNG
+//! with generator combinators for the shapes our invariants need
+//! (vectors, ranges, weights). Used by `rust/tests/prop_*.rs` for
+//! coordinator invariants (selection, aggregation, codecs, wire
+//! format, faults).
 
 use crate::util::rng::Rng;
 
@@ -63,8 +67,9 @@ impl Gen {
     }
 }
 
-/// Run `prop` over `cases` generated cases. Panics with the failing
-/// seed on the first violation.
+/// Run `prop` over `cases` generated cases (overridden by
+/// `FEDHPC_PROP_CASES` when set). Panics with the failing seed on the
+/// first violation.
 pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
     // replay mode
     if let Ok(seed) = std::env::var("FEDHPC_PROP_SEED") {
@@ -76,6 +81,10 @@ pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
         prop(&mut g);
         return;
     }
+    let cases = match std::env::var("FEDHPC_PROP_CASES") {
+        Ok(n) => n.parse().expect("FEDHPC_PROP_CASES must be a usize"),
+        Err(_) => cases,
+    };
     let base = 0xF00D_0000u64;
     for case in 0..cases {
         let seed = base + case as u64;

@@ -12,6 +12,21 @@ pub mod parallel;
 pub mod rng;
 pub mod scratch;
 
+/// FNV-1a over the exact bit patterns of an f32 slice — the model
+/// fingerprint the deterministic-replay tests pin ("same seed ⇒ same
+/// final model hash"). Bit-level: distinguishes `-0.0` from `0.0` and
+/// every NaN payload, so any divergence in the aggregation path shows.
+pub fn hash_f32_bits(xs: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for x in xs {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
 /// Format a byte count as a human-readable string (e.g. "1.25 MB").
 pub fn human_bytes(n: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
@@ -44,6 +59,15 @@ pub fn human_ms(ms: f64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn hash_is_bit_sensitive_and_stable() {
+        let a = [1.0f32, -2.5, 0.0];
+        assert_eq!(hash_f32_bits(&a), hash_f32_bits(&a));
+        assert_ne!(hash_f32_bits(&a), hash_f32_bits(&[1.0, -2.5, -0.0]));
+        assert_ne!(hash_f32_bits(&a), hash_f32_bits(&[1.0, -2.5]));
+        assert_ne!(hash_f32_bits(&[]), hash_f32_bits(&[0.0]));
+    }
 
     #[test]
     fn human_bytes_units() {

@@ -104,6 +104,28 @@ fn strategies_selectable_by_name_from_config_run_end_to_end() {
     }
 }
 
+/// ISSUE 4 tentpole, end to end over real threads + transport: the
+/// buffered-async engine (`--round-mode async_fedbuff`) drives a full
+/// federation — workers report their base model version, the server
+/// folds regardless of round tag and commits every `buffer_k` folds —
+/// and the selection survives the config-file path.
+#[test]
+fn async_fedbuff_round_mode_runs_a_real_federation() {
+    let mut cfg = base_cfg("it_async_fedbuff");
+    cfg.train.rounds = 5; // commits in async mode
+    cfg.straggler.deadline_ms = Some(30_000); // per-commit guard, never hit
+    cfg.round_mode = fedhpc::config::RoundMode::parse("async_fedbuff:2:0.5:100").unwrap();
+    // prove the mode survives the config-file path
+    let cfg = fedhpc::config::from_json_str(&fedhpc::config::to_json(&cfg)).unwrap();
+    assert!(cfg.round_mode.is_async());
+    let rep = run_real(&cfg).unwrap();
+    assert_eq!(rep.rounds.len(), 5, "async federation died early");
+    for r in &rep.rounds {
+        assert_eq!(r.reported, 2, "every commit closes on buffer_k folds");
+    }
+    assert!(rep.final_accuracy().is_some());
+}
+
 /// FedAvgM momentum across a real federation still learns (momentum
 /// state carried on the orchestrator between rounds).
 #[test]

@@ -1,0 +1,140 @@
+//! Property tests for `faults::FaultInjector` (ISSUE 4 satellite):
+//! the deterministic fault oracle the straggler-resilience story rests
+//! on. Pins (1) replay determinism per (seed, round, client), (2)
+//! calibration — empirical action frequencies over 10k draws match the
+//! configured rates, (3) `reports_update()` consistency with the
+//! severity ordering the worker path applies (the worker-side halves
+//! of (3) — dropout/preempt suppress the Update, straggle still sends
+//! one — are pinned in `client::worker`'s unit tests).
+
+use fedhpc::config::FaultConfig;
+use fedhpc::faults::{FaultAction, FaultInjector};
+use fedhpc::testkit::{check, Gen};
+
+fn any_cfg(g: &mut Gen) -> FaultConfig {
+    FaultConfig {
+        dropout_prob: g.f64_in(0.0, 0.6),
+        preemption_prob: g.f64_in(0.0, 0.6),
+        straggler_prob: g.f64_in(0.0, 0.6),
+        straggler_factor: g.f64_in(1.0, 8.0),
+    }
+}
+
+/// Same (seed, round, client, is_spot) ⇒ identical action — across
+/// repeated calls *and* across freshly constructed injectors (nothing
+/// hides mutable state).
+#[test]
+fn prop_fault_action_is_deterministic() {
+    check("fault determinism", 200, |g| {
+        let cfg = any_cfg(g);
+        let seed = g.rng.next_u64();
+        let inj_a = FaultInjector::new(cfg, seed);
+        let inj_b = FaultInjector::new(cfg, seed);
+        for _ in 0..20 {
+            let round = g.usize_in(0, 10_000) as u32;
+            let client = g.usize_in(0, 10_000) as u32;
+            let spot = g.bool();
+            let first = inj_a.action(round, client, spot);
+            assert_eq!(first, inj_a.action(round, client, spot));
+            assert_eq!(first, inj_b.action(round, client, spot));
+        }
+        // and a different seed decorrelates (not a fixed function of
+        // (round, client) alone) — checked only when faults can fire
+        if cfg.dropout_prob > 0.1 {
+            let inj_c = FaultInjector::new(cfg, seed ^ 0xDEAD_BEEF);
+            let diverged = (0..200).any(|i| {
+                inj_a.action(i, i, true) != inj_c.action(i, i, true)
+            });
+            assert!(diverged, "seed does not influence the oracle");
+        }
+    });
+}
+
+/// Empirical action frequencies over 10k (round, client) draws match
+/// the configured rates. The oracle checks in severity order —
+/// dropout, then preemption (spot only), then straggle — so the
+/// expected marginals are the chained conditionals.
+#[test]
+fn prop_fault_frequencies_match_configured_rates() {
+    check("fault frequencies", 12, |g| {
+        let cfg = FaultConfig {
+            dropout_prob: g.f64_in(0.05, 0.4),
+            preemption_prob: g.f64_in(0.05, 0.4),
+            straggler_prob: g.f64_in(0.05, 0.4),
+            straggler_factor: 4.0,
+        };
+        let seed = g.rng.next_u64();
+        let spot = g.bool();
+        let inj = FaultInjector::new(cfg, seed);
+        let n = 10_000u32;
+        let (mut drops, mut preempts, mut straggles) = (0u32, 0u32, 0u32);
+        for i in 0..n {
+            match inj.action(i / 100, i % 100, spot) {
+                FaultAction::Dropout => drops += 1,
+                FaultAction::Preempt { progress } => {
+                    assert!((0.0..=1.0).contains(&progress));
+                    preempts += 1;
+                }
+                FaultAction::Straggle { factor } => {
+                    assert_eq!(factor, 4.0);
+                    straggles += 1;
+                }
+                FaultAction::None => {}
+            }
+        }
+        // 3σ tolerance for a Bernoulli(p) sample of n=10k is
+        // ~3·√(0.25/10k) < 0.015; allow 0.02
+        let tol = 0.02;
+        let p_drop = cfg.dropout_prob;
+        let p_pre = if spot {
+            (1.0 - p_drop) * cfg.preemption_prob
+        } else {
+            0.0
+        };
+        let p_straggle = (1.0 - p_drop)
+            * (1.0 - if spot { cfg.preemption_prob } else { 0.0 })
+            * cfg.straggler_prob;
+        let rate = |c: u32| c as f64 / n as f64;
+        assert!(
+            (rate(drops) - p_drop).abs() < tol,
+            "dropout rate {} vs {p_drop}",
+            rate(drops)
+        );
+        assert!(
+            (rate(preempts) - p_pre).abs() < tol,
+            "preempt rate {} vs {p_pre} (spot={spot})",
+            rate(preempts)
+        );
+        assert!(
+            (rate(straggles) - p_straggle).abs() < tol,
+            "straggle rate {} vs {p_straggle}",
+            rate(straggles)
+        );
+        if !spot {
+            assert_eq!(preempts, 0, "preemption must only hit spot nodes");
+        }
+    });
+}
+
+/// `reports_update()` is exactly "an Update message reaches the
+/// server": true for None/Straggle, false for Dropout/Preempt — for
+/// every action the oracle can produce.
+#[test]
+fn prop_reports_update_matches_action_kind() {
+    check("reports_update", 100, |g| {
+        let cfg = any_cfg(g);
+        let inj = FaultInjector::new(cfg, g.rng.next_u64());
+        for _ in 0..100 {
+            let action = inj.action(
+                g.usize_in(0, 1000) as u32,
+                g.usize_in(0, 1000) as u32,
+                g.bool(),
+            );
+            let expect = matches!(action, FaultAction::None | FaultAction::Straggle { .. });
+            assert_eq!(action.reports_update(), expect, "{action:?}");
+            if let FaultAction::Straggle { factor } = action {
+                assert!(factor >= 1.0, "straggle must never speed a client up");
+            }
+        }
+    });
+}

@@ -344,6 +344,7 @@ fn prop_message_roundtrip_with_random_compression() {
         let msg = Msg::Update {
             round: g.usize_in(0, 1000) as u32,
             client: g.usize_in(0, 500) as u32,
+            base_version: g.usize_in(0, 1000) as u32,
             delta,
             stats: UpdateStats {
                 n_samples: g.usize_in(0, 100_000) as u64,
@@ -358,6 +359,59 @@ fn prop_message_roundtrip_with_random_compression() {
         // truncations never panic
         let cut = g.usize_in(0, enc.len());
         let _ = Msg::decode(&enc[..cut]);
+    });
+}
+
+/// ISSUE 4 satellite: in the fixed-point domain, pairwise masks cancel
+/// *exactly* under summation for any subset-free (full-participation)
+/// round — the masked aggregate is bit-identical to the unmasked
+/// fixed-point FedAvg over the same updates, for random participant
+/// counts, parameter sizes, session seeds and (nasty) values.
+#[test]
+fn prop_secure_masking_fixed_point_is_bit_identical_to_unmasked() {
+    use fedhpc::secure::SecureAggregator;
+    check("secure masking fixed", 100, |g| {
+        let p = g.usize_in(1, 400);
+        let k = g.usize_in(2, 9);
+        let agg = SecureAggregator::new(g.rng.next_u64(), p);
+        let raw: Vec<Vec<f32>> = (0..k)
+            .map(|_| {
+                // bounded nasty values: the fixed-point domain covers
+                // |x| ≤ ~1e4 with headroom (see FIXED_SCALE docs)
+                let mut v = g.f32_vec_nasty(p);
+                v.resize(p, 0.0);
+                for x in &mut v {
+                    *x = x.clamp(-1e4, 1e4);
+                }
+                v
+            })
+            .collect();
+        let participants: Vec<u32> = (0..k as u32).collect();
+        let masked: Vec<Vec<u64>> = raw
+            .iter()
+            .enumerate()
+            .map(|(i, u)| agg.mask_fixed(i as u32, u, &participants))
+            .collect();
+        let views: Vec<&[u64]> = masked.iter().map(|v| v.as_slice()).collect();
+        let got = agg.aggregate_fixed(&views);
+        let raws: Vec<&[f32]> = raw.iter().map(|v| v.as_slice()).collect();
+        let want = agg.aggregate_fixed_unmasked(&raws);
+        for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "coord {j}: masked {a} != unmasked {b}"
+            );
+        }
+        // and the fixed-point mean tracks the exact mean within the
+        // quantization bound: the sum of k per-client rounding errors
+        // (each ≤ 1/2 ulp at 2^-24), divided by k
+        for j in 0..p {
+            let exact: f64 = raw.iter().map(|u| u[j] as f64).sum::<f64>() / k as f64;
+            let err = (want[j] as f64 - exact).abs();
+            let bound = 0.5 / (1u64 << 24) as f64 + exact.abs() * 1e-6 + 1e-6;
+            assert!(err <= bound, "coord {j}: err {err} > {bound}");
+        }
     });
 }
 

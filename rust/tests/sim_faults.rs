@@ -1,0 +1,165 @@
+//! Deterministic end-to-end sim regressions under injected faults
+//! (ISSUE 4 satellite + acceptance demo).
+//!
+//! Virtual-time scenarios with stragglers/dropouts right at the
+//! deadline boundary, pinned in **both** round engines:
+//!
+//! * sync — exact partial-k cutoff, per-round reporter sets, and the
+//!   final model hash are identical for a fixed seed across runs;
+//! * async (`async_fedbuff`) — the same seed reproduces the identical
+//!   commit sequence (per-commit reporter sets + staleness) and final
+//!   model hash twice, and a 4×-straggler scenario reaches the
+//!   sync-mode eval accuracy in ≤ 60% of the sync virtual wall-clock
+//!   time (the paper's fault-tolerance claim, made measurable).
+//!
+//! These tests deliberately avoid hard-coded magic values: the pin is
+//! run-twice bit-equality (any nondeterminism in selection, fault
+//! draws, event ordering or aggregation breaks it) plus structural
+//! assertions the engines must satisfy for any seed.
+
+use fedhpc::config::{Partition, RoundMode, StalenessFn};
+use fedhpc::config::presets::quickstart;
+use fedhpc::experiments::{run_sim, SimTiming};
+
+/// Homogeneous mock-training base: injected faults are the only
+/// heterogeneity, which keeps the deadline/staleness math legible.
+fn fault_cfg(name: &str) -> fedhpc::config::ExperimentConfig {
+    let mut cfg = quickstart();
+    cfg.name = name.into();
+    cfg.mock_runtime = true;
+    cfg.cluster.nodes = vec![("hpc-rtx6000".into(), 6)];
+    cfg.selection.clients_per_round = 4;
+    cfg.train.rounds = 6;
+    cfg.train.lr = 0.2;
+    cfg.train.local_epochs = 1;
+    cfg.data.samples_per_client = 64;
+    cfg.data.eval_samples = 128;
+    cfg.data.partition = Partition::Iid;
+    cfg.faults.straggler_prob = 0.5;
+    cfg.faults.straggler_factor = 4.0;
+    cfg.faults.dropout_prob = 0.2;
+    cfg
+}
+
+#[test]
+fn sync_sim_with_faults_replays_bit_identically() {
+    let mut cfg = fault_cfg("sim_faults_sync");
+    cfg.faults.straggler_prob = 0.4;
+    cfg.train.rounds = 10;
+    // deadline at the straggler boundary: a normal client finishes in
+    // ~0.07 virtual seconds, a 4× straggler in ~0.27 — the 150 ms
+    // deadline admits the former and cuts the latter
+    cfg.straggler.deadline_ms = Some(150);
+    cfg.straggler.partial_k = Some(2);
+    let a = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+    let b = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+
+    // determinism: identical reporter sets, times and final model
+    assert_eq!(a.details, b.details);
+    assert_eq!(a.model_hash, b.model_hash);
+    assert!(a.model_hash.is_some());
+    assert_eq!(a.total_time_s.to_bits(), b.total_time_s.to_bits());
+
+    // structure: the partial-k cutoff is exact, fault accounting adds up
+    assert_eq!(a.report.rounds.len(), 10);
+    let mut saw_full_cutoff = false;
+    let mut misses = 0u32;
+    for (r, d) in a.report.rounds.iter().zip(&a.details) {
+        assert!(r.reported <= 2, "round {} exceeded partial_k", r.round);
+        assert_eq!(r.reported as usize, d.reporters.len());
+        assert_eq!(r.dropped, r.selected - r.reported);
+        assert!(d.reporters.iter().all(|&(_, s)| s == 0), "sync is stale-free");
+        saw_full_cutoff |= r.reported == 2;
+        misses += r.deadline_misses;
+    }
+    assert!(saw_full_cutoff, "no round hit the partial-k cutoff");
+    assert!(
+        misses > 0,
+        "4x stragglers under a 150 ms deadline must miss sometimes"
+    );
+
+    // a different seed produces a different trajectory
+    cfg.seed += 1;
+    let c = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+    assert_ne!(a.details, c.details);
+}
+
+#[test]
+fn async_sim_with_faults_replays_bit_identically() {
+    let mut cfg = fault_cfg("sim_faults_async");
+    cfg.train.rounds = 10; // commits
+    cfg.round_mode = RoundMode::BufferedAsync {
+        buffer_k: 3,
+        max_staleness: 50,
+        staleness: StalenessFn::Polynomial { alpha: 0.5 },
+    };
+    let a = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+    let b = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+
+    // the acceptance pin: identical commit sequence + final model hash
+    assert_eq!(a.details, b.details);
+    assert_eq!(a.model_hash, b.model_hash);
+    assert!(a.model_hash.is_some());
+
+    // structure: every commit closes on exactly buffer_k folds, and
+    // the 4× stragglers surface as *stale* folds, not drops
+    assert_eq!(a.report.rounds.len(), 10);
+    for (r, d) in a.report.rounds.iter().zip(&a.details) {
+        assert_eq!(r.reported, 3);
+        assert_eq!(d.reporters.len(), 3);
+    }
+    let max_stale = a
+        .details
+        .iter()
+        .flat_map(|d| d.reporters.iter().map(|&(_, s)| s))
+        .max()
+        .unwrap();
+    assert!(max_stale > 0, "stragglers should fold stale, not vanish");
+
+    cfg.seed += 1;
+    let c = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+    assert_ne!(a.details, c.details);
+}
+
+/// Acceptance demo: under 4× stragglers, buffered-async reaches the
+/// synchronous engine's final eval accuracy in ≤ 60% of the virtual
+/// wall-clock time the synchronous engine needed to get there.
+#[test]
+fn async_mode_reaches_sync_accuracy_in_much_less_virtual_time() {
+    let base = {
+        let mut cfg = fault_cfg("async_vs_sync");
+        cfg.cluster.nodes = vec![("hpc-rtx6000".into(), 12)];
+        cfg.selection.clients_per_round = 8;
+        cfg.faults.dropout_prob = 0.0; // isolate the straggler effect
+        cfg
+    };
+
+    // sync baseline: no mitigation (waits for every straggler)
+    let mut sync_cfg = base.clone();
+    sync_cfg.straggler.deadline_ms = None;
+    sync_cfg.straggler.partial_k = None;
+    sync_cfg.train.rounds = 6;
+    let sync = run_sim(&sync_cfg, &SimTiming::default(), true).unwrap();
+    let target = sync.report.final_accuracy().unwrap();
+    let t_sync = sync
+        .time_to_accuracy(target)
+        .expect("sync run must reach its own final accuracy");
+
+    // async: same fleet, same faults, FedBuff commits of 4
+    let mut async_cfg = base;
+    async_cfg.round_mode = RoundMode::BufferedAsync {
+        buffer_k: 4,
+        max_staleness: 50,
+        staleness: StalenessFn::Polynomial { alpha: 0.5 },
+    };
+    async_cfg.train.rounds = 100; // commit budget; stops at the target
+    async_cfg.train.target_accuracy = Some(target);
+    let asynced = run_sim(&async_cfg, &SimTiming::default(), true).unwrap();
+    let t_async = asynced
+        .time_to_accuracy(target)
+        .expect("async run never reached the sync accuracy");
+    assert!(
+        t_async <= 0.6 * t_sync,
+        "async {t_async:.2}s vs sync {t_sync:.2}s — expected ≤ 60%"
+    );
+}
