@@ -1,13 +1,20 @@
-//! Orchestrator selection + registry benchmarks: adaptive selection
-//! must stay negligible next to round compute even at 1000s of clients
-//! (paper §3.1 scalability objective).
+//! Cohort-planning benchmarks: planning must stay negligible next to
+//! round compute even at 1000s of clients (paper §3.1 scalability
+//! objective). Compares every registered planner at a realistic fleet
+//! shape (1k available / 100 selected) plus a 10k stress point, and
+//! emits a machine-readable `BENCH_selection.json` via benchkit so the
+//! perf trajectory is trackable across PRs (`FEDHPC_BENCH_BUDGET_MS`
+//! shrinks the budget for CI smoke runs).
 
-use fedhpc::benchkit::{bench, print_table};
-use fedhpc::config::{SelectionConfig, SelectionPolicy};
+use fedhpc::benchkit::{bench, budget_from_env, json_num_obj, print_table, write_json_report};
+use fedhpc::config::CompressionConfig;
 use fedhpc::network::ClientProfile;
-use fedhpc::orchestrator::{select_clients, ClientRegistry};
+use fedhpc::orchestrator::planner::planner_by_name;
+use fedhpc::orchestrator::{ClientRegistry, DispatchPlan, PlanContext};
 use fedhpc::util::rng::Rng;
-use std::time::Duration;
+
+/// Registered planner specs exercised by this bench.
+const PLANNERS: &[&str] = &["random", "adaptive", "tiered:4", "deadline:2000"];
 
 fn registry(n: u32) -> (ClientRegistry, Vec<u32>) {
     let mut reg = ClientRegistry::new();
@@ -30,33 +37,44 @@ fn registry(n: u32) -> (ClientRegistry, Vec<u32>) {
     (reg, (0..n).collect())
 }
 
-fn main() {
-    let budget = Duration::from_secs(2);
-    let mut stats = Vec::new();
-    for n in [60u32, 1_000, 10_000] {
-        let (mut reg, avail) = registry(n);
-        let k = (n / 3) as usize;
-        let cfg = SelectionConfig {
-            policy: SelectionPolicy::Adaptive {
-                explore_frac: 0.2,
-                exclude_factor: 2.5,
-            },
-            clients_per_round: k,
-        };
-        let mut rng = Rng::new(1);
-        let mut round = 0;
-        stats.push(bench(&format!("adaptive n={n} k={k}"), budget, || {
-            round += 1;
-            std::hint::black_box(select_clients(&mut reg, &avail, &cfg, round, &mut rng));
-        }));
-        let cfg_rand = SelectionConfig {
-            policy: SelectionPolicy::Random,
-            clients_per_round: k,
-        };
-        let (mut reg2, avail2) = registry(n);
-        stats.push(bench(&format!("random   n={n} k={k}"), budget, || {
-            std::hint::black_box(select_clients(&mut reg2, &avail2, &cfg_rand, 0, &mut rng));
-        }));
+fn defaults() -> DispatchPlan {
+    DispatchPlan {
+        deadline_ms: 60_000,
+        local_epochs: 5,
+        compression: CompressionConfig::PAPER,
     }
-    print_table("client selection (paper §4.1; scale target: 10k clients)", &stats);
+}
+
+fn main() {
+    let budget = budget_from_env(2_000);
+    let mut stats = Vec::new();
+    // realistic cohort shape first (1k fleet, 10% cohort), then the
+    // 10k-client scale target
+    for (n, k) in [(1_000u32, 100usize), (10_000, 1_000)] {
+        for spec in PLANNERS {
+            let (mut reg, avail) = registry(n);
+            let mut planner = planner_by_name(spec).unwrap();
+            let mut rng = Rng::new(1);
+            let mut round = 0u32;
+            stats.push(bench(&format!("{spec:<14} n={n} k={k}"), budget, || {
+                round += 1;
+                let ctx = PlanContext {
+                    round,
+                    k,
+                    defaults: defaults(),
+                };
+                std::hint::black_box(planner.plan(&mut reg, &avail, &ctx, &mut rng));
+            }));
+        }
+    }
+    print_table("cohort planning (paper §4.1; scale target: 10k clients)", &stats);
+    let extra = json_num_obj(&[
+        ("fleet_small", 1_000.0),
+        ("cohort_small", 100.0),
+        ("fleet_large", 10_000.0),
+        ("cohort_large", 1_000.0),
+        ("planners", PLANNERS.len() as f64),
+    ]);
+    write_json_report("BENCH_selection.json", "selection", &stats, &[("shape", extra)])
+        .expect("writing BENCH_selection.json");
 }

@@ -175,8 +175,18 @@ fn decode(v: &Value) -> Result<ExperimentConfig> {
             },
             p => bail!("unknown selection policy '{p}'"),
         };
+        // optional planner spec string ("tiered:4", "deadline:2000",
+        // …); pre-planner configs without the field still load and
+        // derive their planner from `policy`
+        let planner = match s.get("planner") {
+            None => None,
+            Some(p) => Some(PlannerKind::parse(
+                p.as_str().ok_or_else(|| anyhow!("selection.planner must be a spec string"))?,
+            )?),
+        };
         SelectionConfig {
             policy,
+            planner,
             clients_per_round: usize_of(s, "clients_per_round")?,
         }
     };
@@ -325,26 +335,27 @@ pub fn to_json(cfg: &ExperimentConfig) -> String {
             ("staleness", s(&staleness.spec())),
         ]),
     };
-    let selection = match cfg.selection.policy {
-        SelectionPolicy::Random => obj(vec![
-            ("policy", s("random")),
-            (
-                "clients_per_round",
-                num(cfg.selection.clients_per_round as f64),
-            ),
-        ]),
-        SelectionPolicy::Adaptive {
-            explore_frac,
-            exclude_factor,
-        } => obj(vec![
-            ("policy", s("adaptive")),
-            ("explore_frac", num(explore_frac)),
-            ("exclude_factor", num(exclude_factor)),
-            (
-                "clients_per_round",
-                num(cfg.selection.clients_per_round as f64),
-            ),
-        ]),
+    let selection = {
+        let mut fields = match cfg.selection.policy {
+            SelectionPolicy::Random => vec![("policy", s("random"))],
+            SelectionPolicy::Adaptive {
+                explore_frac,
+                exclude_factor,
+            } => vec![
+                ("policy", s("adaptive")),
+                ("explore_frac", num(explore_frac)),
+                ("exclude_factor", num(exclude_factor)),
+            ],
+        };
+        let planner_spec = cfg.selection.planner.as_ref().map(|p| p.spec());
+        if let Some(spec) = &planner_spec {
+            fields.push(("planner", s(spec)));
+        }
+        fields.push((
+            "clients_per_round",
+            num(cfg.selection.clients_per_round as f64),
+        ));
+        obj(fields)
     };
     let mut straggler_fields = vec![];
     if let Some(d) = cfg.straggler.deadline_ms {
@@ -509,6 +520,55 @@ mod tests {
             let back = from_json_str(&to_json(&cfg)).unwrap();
             assert_eq!(cfg, back);
         }
+    }
+
+    #[test]
+    fn roundtrip_planners() {
+        for planner in [
+            None,
+            Some(PlannerKind::Random),
+            Some(PlannerKind::Adaptive {
+                explore_frac: 0.3,
+                exclude_factor: 4.0,
+            }),
+            Some(PlannerKind::Tiered { tiers: 3 }),
+            Some(PlannerKind::Deadline { target_ms: None }),
+            Some(PlannerKind::Deadline {
+                target_ms: Some(2500),
+            }),
+        ] {
+            let mut cfg = quickstart();
+            cfg.selection.planner = planner;
+            let back = from_json_str(&to_json(&cfg)).unwrap();
+            assert_eq!(cfg, back);
+        }
+    }
+
+    #[test]
+    fn missing_planner_field_derives_from_policy() {
+        // pre-planner configs (no selection.planner key) still load
+        let mut cfg = quickstart();
+        cfg.selection.planner = None;
+        let text = to_json(&cfg);
+        assert!(!text.contains("planner"), "None must not serialize");
+        let back = from_json_str(&text).unwrap();
+        assert_eq!(back.selection.planner, None);
+        assert_eq!(
+            back.selection.planner_kind(),
+            PlannerKind::from_policy(cfg.selection.policy)
+        );
+    }
+
+    #[test]
+    fn unknown_planner_spec_errors() {
+        let mut cfg = quickstart();
+        cfg.selection.planner = Some(PlannerKind::Tiered { tiers: 4 });
+        let text = to_json(&cfg).replace("\"tiered:4\"", "\"oracle:9\"");
+        let err = from_json_str(&text).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("unknown planner 'oracle'"),
+            "got: {err:#}"
+        );
     }
 
     #[test]

@@ -509,6 +509,185 @@ impl ServerOptKind {
     }
 }
 
+/// Cohort planner (paper §4.1 resource-aware scheduling). Each variant
+/// maps 1:1 to a [`crate::orchestrator::planner::CohortPlanner`]
+/// implementation via the planner registry; [`PlannerKind::parse`] is
+/// the name-keyed axis the CLI (`--planner`), config files
+/// (`selection.planner`) and benches share. `random` / `adaptive`
+/// reproduce the historical [`SelectionPolicy`] cohorts bit-identically
+/// for the same seed; `tiered` / `deadline` additionally vary the
+/// per-client [`crate::orchestrator::planner::DispatchPlan`]
+/// (deadline, local epochs, compression) by observed heterogeneity.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlannerKind {
+    /// Uniform random cohort, identical dispatch for everyone.
+    Random,
+    /// Score-based exploitation + exploration floor + straggler
+    /// benching (the historical adaptive policy).
+    Adaptive {
+        explore_frac: f64,
+        exclude_factor: f64,
+    },
+    /// Bucket the cohort into `tiers` tiers by EWMA round time; slower
+    /// tiers get proportionally fewer local epochs and a sparser
+    /// top-k uplink hint so they make the round deadline.
+    Tiered { tiers: usize },
+    /// Fit each client's local-epoch budget to a target round deadline
+    /// from its profiled round-time estimate and link bandwidth.
+    /// `None` targets the config's `straggler.deadline_ms`.
+    Deadline { target_ms: Option<u64> },
+}
+
+impl PlannerKind {
+    /// Registry names accepted by [`PlannerKind::parse`] (and by config
+    /// files as `selection.planner`).
+    pub const KINDS: &'static [&'static str] = &["random", "adaptive", "tiered", "deadline"];
+
+    /// Most tiers a tiered planner may use (more would leave sub-client
+    /// buckets at any realistic cohort size).
+    pub const MAX_TIERS: usize = 64;
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlannerKind::Random => "random",
+            PlannerKind::Adaptive { .. } => "adaptive",
+            PlannerKind::Tiered { .. } => "tiered",
+            PlannerKind::Deadline { .. } => "deadline",
+        }
+    }
+
+    /// The `"name[:params]"` spec that parses back to this value.
+    pub fn spec(&self) -> String {
+        match *self {
+            PlannerKind::Random => "random".into(),
+            PlannerKind::Adaptive {
+                explore_frac,
+                exclude_factor,
+            } => format!("adaptive:{explore_frac}:{exclude_factor}"),
+            PlannerKind::Tiered { tiers } => format!("tiered:{tiers}"),
+            PlannerKind::Deadline { target_ms: None } => "deadline".into(),
+            PlannerKind::Deadline {
+                target_ms: Some(ms),
+            } => format!("deadline:{ms}"),
+        }
+    }
+
+    /// The planner a legacy [`SelectionPolicy`] maps to — the
+    /// back-compat bridge for configs that only set `policy`.
+    pub fn from_policy(policy: SelectionPolicy) -> PlannerKind {
+        match policy {
+            SelectionPolicy::Random => PlannerKind::Random,
+            SelectionPolicy::Adaptive {
+                explore_frac,
+                exclude_factor,
+            } => PlannerKind::Adaptive {
+                explore_frac,
+                exclude_factor,
+            },
+        }
+    }
+
+    /// Parse a planner by registry name with optional `:`-suffixed
+    /// parameters: `"random"`, `"adaptive[:explore[:exclude]]"`,
+    /// `"tiered[:n]"`, `"deadline[:ms]"`. Unknown names, out-of-range
+    /// parameters and stray parameters are errors, never a panic.
+    pub fn parse(spec: &str) -> Result<PlannerKind> {
+        let mut parts = spec.split(':');
+        let kind = parts.next().unwrap_or("");
+        let planner = match kind {
+            "random" => {
+                if let Some(a) = parts.next() {
+                    bail!("planner 'random' takes no parameter (got '{a}')");
+                }
+                PlannerKind::Random
+            }
+            "adaptive" => {
+                let explore_frac = match parts.next() {
+                    None | Some("") => 0.2,
+                    Some(a) => a.parse::<f64>().map_err(|_| {
+                        anyhow::anyhow!("planner 'adaptive': bad explore_frac '{a}'")
+                    })?,
+                };
+                let exclude_factor = match parts.next() {
+                    None => 2.5,
+                    Some(a) => a.parse::<f64>().map_err(|_| {
+                        anyhow::anyhow!("planner 'adaptive': bad exclude_factor '{a}'")
+                    })?,
+                };
+                if let Some(extra) = parts.next() {
+                    bail!("planner 'adaptive': stray parameter '{extra}'");
+                }
+                PlannerKind::Adaptive {
+                    explore_frac,
+                    exclude_factor,
+                }
+            }
+            "tiered" => {
+                let tiers = match parts.next() {
+                    None | Some("") => 4,
+                    Some(a) => a
+                        .parse::<usize>()
+                        .map_err(|_| anyhow::anyhow!("planner 'tiered': bad tier count '{a}'"))?,
+                };
+                if let Some(extra) = parts.next() {
+                    bail!("planner 'tiered': stray parameter '{extra}'");
+                }
+                PlannerKind::Tiered { tiers }
+            }
+            "deadline" => {
+                let target_ms = match parts.next() {
+                    None | Some("") => None,
+                    Some(a) => Some(a.parse::<u64>().map_err(|_| {
+                        anyhow::anyhow!("planner 'deadline': bad target_ms '{a}'")
+                    })?),
+                };
+                if let Some(extra) = parts.next() {
+                    bail!("planner 'deadline': stray parameter '{extra}'");
+                }
+                PlannerKind::Deadline { target_ms }
+            }
+            k => bail!(
+                "unknown planner '{k}' (known: {})",
+                PlannerKind::KINDS.join(", ")
+            ),
+        };
+        planner.check_params()?;
+        Ok(planner)
+    }
+
+    /// Range checks — shared by [`PlannerKind::parse`] and [`validate`].
+    pub fn check_params(&self) -> Result<()> {
+        match *self {
+            PlannerKind::Random => {}
+            PlannerKind::Adaptive {
+                explore_frac,
+                exclude_factor,
+            } => {
+                if explore_frac.is_nan() || !(0.0..=1.0).contains(&explore_frac) {
+                    bail!("config: planner explore_frac must be in [0,1], got {explore_frac}");
+                }
+                if exclude_factor.is_nan() || exclude_factor <= 1.0 {
+                    bail!("config: planner exclude_factor must be > 1, got {exclude_factor}");
+                }
+            }
+            PlannerKind::Tiered { tiers } => {
+                if !(2..=Self::MAX_TIERS).contains(&tiers) {
+                    bail!(
+                        "config: planner tiered tiers must be in [2, {}], got {tiers}",
+                        Self::MAX_TIERS
+                    );
+                }
+            }
+            PlannerKind::Deadline { target_ms } => {
+                if target_ms == Some(0) {
+                    bail!("config: planner deadline target_ms must be positive");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Client-selection policy (paper §4.1).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum SelectionPolicy {
@@ -536,11 +715,27 @@ impl Default for SelectionPolicy {
     }
 }
 
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SelectionConfig {
     pub policy: SelectionPolicy,
+    /// Cohort planner override by registry kind. `None` (the default,
+    /// and what pre-planner configs load as) derives the planner from
+    /// `policy`, so existing configs and tests keep their exact
+    /// behavior; `Some(..)` selects a heterogeneity-aware planner
+    /// (`tiered`, `deadline`, …) regardless of `policy`.
+    pub planner: Option<PlannerKind>,
     /// Clients sampled per round (paper §5.1: 20).
     pub clients_per_round: usize,
+}
+
+impl SelectionConfig {
+    /// The planner this config resolves to: the explicit `planner`
+    /// field when set, else the [`PlannerKind`] equivalent of `policy`.
+    pub fn planner_kind(&self) -> PlannerKind {
+        self.planner
+            .clone()
+            .unwrap_or_else(|| PlannerKind::from_policy(self.policy))
+    }
 }
 
 /// Straggler mitigation (paper §4.2).
@@ -797,7 +992,7 @@ mod tests {
                 buffer_k: defaults::ASYNC_BUFFER_K,
                 max_staleness: defaults::ASYNC_MAX_STALENESS,
                 staleness: StalenessFn::Polynomial {
-                    alpha: defaults::ASYNC_ALPHA
+                    alpha: defaults::ASYNC_ALPHA,
                 },
             }
         );
@@ -868,6 +1063,80 @@ mod tests {
             let d = sqrt.discount(s);
             assert!(d > 0.0 && d <= 1.0 && d.is_finite());
         }
+    }
+
+    #[test]
+    fn planner_parse_known_names_and_params() {
+        assert_eq!(PlannerKind::parse("random").unwrap(), PlannerKind::Random);
+        assert_eq!(
+            PlannerKind::parse("adaptive:0.3:4.0").unwrap(),
+            PlannerKind::Adaptive {
+                explore_frac: 0.3,
+                exclude_factor: 4.0,
+            }
+        );
+        assert_eq!(
+            PlannerKind::parse("adaptive").unwrap(),
+            PlannerKind::Adaptive {
+                explore_frac: 0.2,
+                exclude_factor: 2.5,
+            }
+        );
+        assert_eq!(
+            PlannerKind::parse("tiered:3").unwrap(),
+            PlannerKind::Tiered { tiers: 3 }
+        );
+        assert_eq!(
+            PlannerKind::parse("deadline:2000").unwrap(),
+            PlannerKind::Deadline {
+                target_ms: Some(2000),
+            }
+        );
+        assert_eq!(
+            PlannerKind::parse("deadline").unwrap(),
+            PlannerKind::Deadline { target_ms: None }
+        );
+        // every registered kind parses with defaults and round-trips
+        // through its spec string
+        for kind in PlannerKind::KINDS {
+            let p = PlannerKind::parse(kind).unwrap();
+            assert_eq!(&p.name(), kind);
+            assert_eq!(PlannerKind::parse(&p.spec()).unwrap(), p);
+        }
+        assert!(PlannerKind::parse("oracle").is_err());
+        assert!(PlannerKind::parse("random:1").is_err());
+        assert!(PlannerKind::parse("adaptive:x").is_err());
+        assert!(PlannerKind::parse("adaptive:0.2:2.5:9").is_err()); // stray
+        assert!(PlannerKind::parse("adaptive:1.5").is_err()); // explore > 1
+        assert!(PlannerKind::parse("adaptive:0.2:0.5").is_err()); // exclude <= 1
+        assert!(PlannerKind::parse("tiered:1").is_err()); // < 2 tiers
+        assert!(PlannerKind::parse("tiered:1000").is_err()); // > max
+        assert!(PlannerKind::parse("deadline:0").is_err());
+        assert!(PlannerKind::parse("deadline:soon").is_err());
+    }
+
+    #[test]
+    fn selection_config_derives_planner_from_policy() {
+        let mut sel = SelectionConfig {
+            policy: SelectionPolicy::Random,
+            planner: None,
+            clients_per_round: 4,
+        };
+        assert_eq!(sel.planner_kind(), PlannerKind::Random);
+        sel.policy = SelectionPolicy::Adaptive {
+            explore_frac: 0.3,
+            exclude_factor: 3.0,
+        };
+        assert_eq!(
+            sel.planner_kind(),
+            PlannerKind::Adaptive {
+                explore_frac: 0.3,
+                exclude_factor: 3.0,
+            }
+        );
+        // explicit planner wins over the legacy policy
+        sel.planner = Some(PlannerKind::Tiered { tiers: 2 });
+        assert_eq!(sel.planner_kind(), PlannerKind::Tiered { tiers: 2 });
     }
 
     #[test]

@@ -65,6 +65,7 @@ pub fn quickstart() -> ExperimentConfig {
         round_mode: RoundMode::Sync,
         selection: SelectionConfig {
             policy: SelectionPolicy::default(),
+            planner: None,
             clients_per_round: 4,
         },
         straggler: StragglerConfig::default(),
@@ -115,6 +116,7 @@ pub fn paper_testbed() -> ExperimentConfig {
         round_mode: RoundMode::Sync,
         selection: SelectionConfig {
             policy: SelectionPolicy::default(),
+            planner: None,
             clients_per_round: 20,
         },
         straggler: StragglerConfig {

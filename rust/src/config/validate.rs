@@ -33,6 +33,9 @@ pub fn validate(cfg: &ExperimentConfig) -> Result<()> {
             bail!("config: exclude_factor must be > 1, got {exclude_factor}");
         }
     }
+    // the effective planner's own parameter ranges (covers the explicit
+    // `planner` override; the legacy policy fields were checked above)
+    cfg.selection.planner_kind().check_params()?;
     if let Some(k) = cfg.straggler.partial_k {
         if k == 0 {
             bail!("config: partial_k must be >= 1");
@@ -139,6 +142,24 @@ mod tests {
         assert!(validate(&c).is_err());
         c.selection.clients_per_round = 10_000;
         assert!(validate(&c).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_planner_params() {
+        let mut c = quickstart();
+        c.selection.planner = Some(PlannerKind::Tiered { tiers: 1 });
+        assert!(validate(&c).is_err());
+        c.selection.planner = Some(PlannerKind::Deadline { target_ms: Some(0) });
+        assert!(validate(&c).is_err());
+        c.selection.planner = Some(PlannerKind::Adaptive {
+            explore_frac: 2.0,
+            exclude_factor: 2.5,
+        });
+        assert!(validate(&c).is_err());
+        c.selection.planner = Some(PlannerKind::Tiered { tiers: 4 });
+        assert!(validate(&c).is_ok());
+        c.selection.planner = Some(PlannerKind::Deadline { target_ms: None });
+        assert!(validate(&c).is_ok());
     }
 
     #[test]

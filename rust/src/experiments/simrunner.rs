@@ -42,8 +42,11 @@ use crate::data::FederatedDataset;
 use crate::faults::{FaultAction, FaultInjector};
 use crate::metrics::{RoundMetrics, TrainingReport};
 use crate::network::ClientProfile;
+use crate::orchestrator::planner::planner_from_selection;
 use crate::orchestrator::strategy::registry as strategy_registry;
-use crate::orchestrator::{select_clients, AggInput, ClientRegistry, EvalHarness, RoundAggregator};
+use crate::orchestrator::{
+    AggInput, ClientRegistry, DispatchPlan, EvalHarness, PlanContext, RoundAggregator,
+};
 use crate::runtime::{MockRuntime, ModelRuntime};
 use crate::sim::{EventQueue, VirtualClock};
 use crate::util::rng::Rng;
@@ -133,9 +136,14 @@ struct SimSetup {
     eval: Option<EvalHarness>,
     registry: ClientRegistry,
     injector: FaultInjector,
-    steps_per_round: usize,
+    /// Local train steps for ONE epoch; a client's per-round step count
+    /// is this × its planned epoch budget.
+    steps_per_epoch: usize,
     down_bytes: u64,
-    up_bytes: u64,
+    /// Config-default dispatch terms (what every planner hands a client
+    /// it doesn't tune). `deadline_ms` is `u64::MAX` when the config
+    /// disables the cutoff.
+    defaults: DispatchPlan,
 }
 
 fn setup(cfg: &ExperimentConfig, with_training: bool) -> Result<SimSetup> {
@@ -176,13 +184,17 @@ fn setup(cfg: &ExperimentConfig, with_training: bool) -> Result<SimSetup> {
     for node in &cluster.nodes {
         registry.register(node.id, profile_of(node, samples));
     }
-    let steps_per_round = {
-        // ceil(samples / batch) × epochs, batch 16 (mock) or artifact
+    let steps_per_epoch = {
+        // ceil(samples / batch), batch 16 (mock) or artifact
         let batch = runtime.as_ref().map_or(16, |r| r.train_batch());
-        cfg.data.samples_per_client.div_ceil(batch) * cfg.train.local_epochs
+        cfg.data.samples_per_client.div_ceil(batch)
     };
     let down_bytes = 4 * params.len() as u64;
-    let up_bytes = expected_wire_bytes(params.len(), &cfg.compression);
+    let defaults = DispatchPlan {
+        deadline_ms: cfg.straggler.deadline_ms.unwrap_or(u64::MAX),
+        local_epochs: cfg.train.local_epochs as u32,
+        compression: cfg.compression,
+    };
     Ok(SimSetup {
         cluster,
         dataset,
@@ -191,9 +203,9 @@ fn setup(cfg: &ExperimentConfig, with_training: bool) -> Result<SimSetup> {
         eval,
         registry,
         injector: FaultInjector::new(cfg.faults, cfg.seed),
-        steps_per_round,
+        steps_per_epoch,
         down_bytes,
-        up_bytes,
+        defaults,
     })
 }
 
@@ -230,14 +242,16 @@ fn run_sim_sync(
         eval,
         mut registry,
         injector,
-        steps_per_round,
+        steps_per_epoch,
         down_bytes,
-        up_bytes,
+        defaults,
     } = setup(cfg, with_training)?;
-    // same strategy/server-opt plumbing as the real loop; optimizer
-    // state (momentum etc.) carries across virtual rounds
+    // same strategy/server-opt/planner plumbing as the real loop;
+    // optimizer state and planner state (bench counters, learned
+    // tiers) carry across virtual rounds
     let strategy = strategy_registry::strategy_from_config(&cfg.aggregation);
     let mut server_opt = strategy_registry::server_opt_from_config(&cfg.server_opt);
+    let mut planner = planner_from_selection(&cfg.selection);
     let mut rng = Rng::new(cfg.seed ^ 0x51312);
     let mut now_s = 0.0f64;
     let mut report = TrainingReport::new(&cfg.name);
@@ -260,45 +274,54 @@ fn run_sim_sync(
             bail!("round {round}: every node is down");
         }
         let mut round_rng = rng.fork(round as u64);
-        let selected = select_clients(
-            &mut registry,
-            &available,
-            &cfg.selection,
+        let ctx = PlanContext {
             round,
-            &mut round_rng,
-        );
+            k: cfg.selection.clients_per_round,
+            defaults,
+        };
+        let plan = planner.plan(&mut registry, &available, &ctx, &mut round_rng);
+        let selected = plan.len();
 
-        // per-client virtual finish times
+        // per-client virtual finish times under per-client dispatch
+        // terms: a client's step count follows its planned epoch
+        // budget, its upload its planned compression
         struct Arrival {
             client: u32,
             finish_s: f64,
+            epochs: u32,
+            up_bytes: u64,
             reports: bool,
         }
-        let mut arrivals: Vec<Arrival> = Vec::with_capacity(selected.len());
-        for &c in &selected {
+        let mut arrivals: Vec<Arrival> = Vec::with_capacity(selected);
+        for (c, p) in plan.iter() {
             let node = cluster.node(c).unwrap();
             let action = injector.action(round, c, node.sku.preempt_per_hour > 0.0);
             let t_down = node.transfer_time_s(down_bytes);
-            let work_s = steps_per_round as f64 * timing.ref_step_s;
+            let steps = steps_per_epoch * p.local_epochs as usize;
+            let work_s = steps as f64 * timing.ref_step_s;
             let mut t_compute = node.compute_time_s(work_s, &mut round_rng);
             if let FaultAction::Straggle { factor } = action {
                 t_compute *= factor;
             }
-            let t_up = node.transfer_time_s(up_bytes);
+            let client_up = expected_wire_bytes(params.len(), &p.compression);
+            let t_up = node.transfer_time_s(client_up);
             arrivals.push(Arrival {
                 client: c,
                 finish_s: t_down + t_compute + t_up,
+                epochs: p.local_epochs,
+                up_bytes: client_up,
                 reports: action.reports_update(),
             });
         }
         arrivals.sort_by(|a, b| a.finish_s.total_cmp(&b.finish_s));
 
-        // stopping rule: deadline + partial-k over *reporting* arrivals
-        let deadline_s = cfg
-            .straggler
-            .deadline_ms
-            .map(|d| d as f64 / 1e3)
-            .unwrap_or(f64::INFINITY);
+        // stopping rule: deadline + partial-k over *reporting*
+        // arrivals. Exactly like the real collect phase, the server's
+        // cutoff is the *latest* deadline it handed out — per-client
+        // deadlines below the max are advisory wire hints (the worker
+        // ignores them), so an "early-deadline" client arriving before
+        // the cohort max still folds, in sim and real alike.
+        let deadline_s = plan.max_deadline_ms() as f64 / 1e3;
         let partial_k = cfg.straggler.partial_k.unwrap_or(usize::MAX);
         let mut reporters: Vec<&Arrival> = Vec::new();
         let mut round_ends_s: f64 = 0.0;
@@ -309,7 +332,7 @@ fn run_sim_sync(
             if a.reports {
                 reporters.push(a);
                 round_ends_s = a.finish_s;
-                if reporters.len() >= partial_k.min(selected.len()) {
+                if reporters.len() >= partial_k.min(selected) {
                     break;
                 }
             }
@@ -322,7 +345,7 @@ fn run_sim_sync(
                     .map(|a| a.finish_s)
                     .unwrap_or(deadline_s),
             );
-        } else if reporters.len() < partial_k.min(selected.len()) {
+        } else if reporters.len() < partial_k.min(selected) {
             // waited until deadline for the rest
             let last_wait = arrivals
                 .iter()
@@ -333,12 +356,13 @@ fn run_sim_sync(
         }
         let duration_s = round_ends_s + timing.orchestrator_overhead_s;
 
-        // registry feedback — the adaptive policy learns from virtual time
+        // planner feedback — adaptive/tiered planners learn from
+        // virtual round times exactly like the real loop
         for a in &arrivals {
             if a.reports && a.finish_s <= round_ends_s + 1e-9 {
-                registry.report_success(a.client, round, a.finish_s * 1e3);
+                planner.report_success(&mut registry, a.client, round, a.finish_s * 1e3);
             } else {
-                registry.report_failure(a.client, round);
+                planner.report_failure(&mut registry, a.client, round);
             }
         }
 
@@ -355,7 +379,7 @@ fn run_sim_sync(
                     rt,
                     shard,
                     &params,
-                    cfg.train.local_epochs,
+                    a.epochs as usize,
                     cfg.train.lr,
                     strategy.mu(),
                     cfg.seed ^ (((round as u64) << 20) | a.client as u64),
@@ -394,6 +418,7 @@ fn run_sim_sync(
 
         now_s += duration_s;
         let n_rep = reporters.len() as u32;
+        let bytes_up_round: u64 = reporters.iter().map(|a| a.up_bytes).sum();
         details.push(RoundDetail {
             round,
             reporters: reporters.iter().map(|a| (a.client, 0)).collect(),
@@ -401,9 +426,9 @@ fn run_sim_sync(
         });
         report.push(RoundMetrics {
             round,
-            selected: selected.len() as u32,
+            selected: selected as u32,
             reported: n_rep,
-            dropped: selected.len() as u32 - n_rep,
+            dropped: selected as u32 - n_rep,
             deadline_misses: arrivals
                 .iter()
                 .filter(|a| a.finish_s > deadline_s)
@@ -412,8 +437,8 @@ fn run_sim_sync(
             eval_accuracy,
             eval_loss,
             duration_s,
-            bytes_down: down_bytes * selected.len() as u64,
-            bytes_up: up_bytes * n_rep as u64,
+            bytes_down: down_bytes * selected as u64,
+            bytes_up: bytes_up_round,
             model_delta,
         });
 
@@ -446,6 +471,8 @@ struct AsyncArrival {
     /// False for injected dropouts/preemptions: the slot comes back,
     /// but nothing folds.
     reports: bool,
+    /// Upload size under this client's planned compression.
+    up_bytes: u64,
     /// The locally-trained update (`with_training` only) — computed at
     /// dispatch against the then-current model, exactly what a real
     /// client would have produced from that broadcast.
@@ -472,12 +499,13 @@ fn run_sim_async(
         eval,
         mut registry,
         injector,
-        steps_per_round,
+        steps_per_epoch,
         down_bytes,
-        up_bytes,
+        defaults,
     } = setup(cfg, with_training)?;
     let strategy = strategy_registry::strategy_from_config(&cfg.aggregation);
     let mut server_opt = strategy_registry::server_opt_from_config(&cfg.server_opt);
+    let mut planner = planner_from_selection(&cfg.selection);
     let mut rng = Rng::new(cfg.seed ^ 0x51312);
     let mut clock = VirtualClock::new();
     let mut queue: EventQueue<AsyncArrival> = EventQueue::new();
@@ -494,11 +522,13 @@ fn run_sim_async(
 
     // one dispatch: fault decision, virtual finish time, optional
     // local training against the *current* model (the broadcast the
-    // client would have received)
+    // client would have received), all under the client's planned
+    // dispatch terms (epoch budget, uplink compression)
     let dispatch = |c: u32,
                         now_s: f64,
                         commit: u32,
                         params: &[f32],
+                        plan: &DispatchPlan,
                         dispatch_seq: &mut u64,
                         jitter_rng: &mut Rng,
                         queue: &mut EventQueue<AsyncArrival>,
@@ -513,7 +543,9 @@ fn run_sim_async(
         // fresh (deterministic) draw, like a fresh round in sync mode
         let action = injector.action(seq as u32, c, node.sku.preempt_per_hour > 0.0);
         let t_down = node.transfer_time_s(down_bytes);
-        let work_s = steps_per_round as f64 * timing.ref_step_s;
+        let steps = steps_per_epoch * plan.local_epochs as usize;
+        let work_s = steps as f64 * timing.ref_step_s;
+        let up_bytes = expected_wire_bytes(params.len(), &plan.compression);
         let mut t_compute = node.compute_time_s(work_s, jitter_rng);
         let finish_s;
         match action {
@@ -537,7 +569,7 @@ fn run_sim_async(
                     rt,
                     shard,
                     params,
-                    cfg.train.local_epochs,
+                    plan.local_epochs as usize,
                     cfg.train.lr,
                     strategy.mu(),
                     cfg.seed ^ ((seq << 20) | c as u64),
@@ -559,6 +591,7 @@ fn run_sim_async(
                 client: c,
                 base_version: commit,
                 reports: action.reports_update(),
+                up_bytes,
                 input,
             },
         );
@@ -577,16 +610,26 @@ fn run_sim_async(
         bail!("async sim: every node is down at launch");
     }
     let mut round_rng = rng.fork(0);
-    let selected = select_clients(&mut registry, &available, &cfg.selection, 0, &mut round_rng);
-    if selected.is_empty() {
-        bail!("async sim: selection returned no clients");
+    let ctx = PlanContext {
+        round: 0,
+        k: cfg.selection.clients_per_round,
+        defaults,
+    };
+    let launch_plan = planner.plan(&mut registry, &available, &ctx, &mut round_rng);
+    if launch_plan.is_empty() {
+        bail!("async sim: planner returned no clients");
     }
-    for &c in &selected {
+    // the launch plan's per-client dispatch terms stay with each
+    // client for the whole run, exactly like the real async engine
+    let plans = launch_plan.to_map();
+    let selected: Vec<u32> = launch_plan.cohort().to_vec();
+    for (c, p) in launch_plan.iter() {
         dispatch(
             c,
             0.0,
             0,
             &params,
+            p,
             &mut dispatch_seq,
             &mut jitter_rng,
             &mut queue,
@@ -622,18 +665,19 @@ fn run_sim_async(
         };
         clock.advance_to(t)?;
         if arr.reports {
-            bytes_up_total += up_bytes;
+            bytes_up_total += arr.up_bytes;
             // staleness: commits finished since this client's dispatch
             let s = commit - arr.base_version;
             if s > max_staleness {
                 stale_drops += 1;
-                registry.report_failure(arr.client, commit);
+                planner.report_failure(&mut registry, arr.client, commit);
             } else {
                 if let Some(input) = &arr.input {
                     agg.fold_scaled(input, staleness.discount(s))?;
                 }
                 folds.push((arr.client, s));
-                registry.report_success(
+                planner.report_success(
+                    &mut registry,
                     arr.client,
                     commit,
                     (t - last_commit_end_s).max(0.0) * 1e3,
@@ -641,7 +685,7 @@ fn run_sim_async(
             }
         } else {
             silent += 1;
-            registry.report_failure(arr.client, commit);
+            planner.report_failure(&mut registry, arr.client, commit);
         }
 
         if folds.len() >= buffer_k {
@@ -712,11 +756,13 @@ fn run_sim_async(
         // Deliberately *after* the commit block, mirroring the real
         // engine's pending-drain ordering — the arrival that fills the
         // buffer is re-dispatched on the post-commit model
+        let p = plans.get(&arr.client).copied().unwrap_or(defaults);
         dispatch(
             arr.client,
             t,
             commit,
             &params,
+            &p,
             &mut dispatch_seq,
             &mut jitter_rng,
             &mut queue,

@@ -104,6 +104,9 @@ fn load_config(p: &fedhpc::util::argparse::Parsed) -> Result<ExperimentConfig> {
     if let Some(m) = p.get("round-mode") {
         cfg.round_mode = config::RoundMode::parse(m).context("--round-mode")?;
     }
+    if let Some(pl) = p.get("planner") {
+        cfg.selection.planner = Some(config::PlannerKind::parse(pl).context("--planner")?);
+    }
     config::validate(&cfg)?;
     Ok(cfg)
 }
@@ -131,6 +134,12 @@ fn train_args() -> Args {
             "round-mode",
             None,
             "round engine: sync | async_fedbuff[:buffer_k[:alpha[:max_staleness]]]",
+        )
+        .opt(
+            "planner",
+            None,
+            "cohort planner: random | adaptive[:explore[:exclude]] | tiered[:n] | \
+             deadline[:ms]",
         )
         .opt("out", Some("results"), "output directory for reports")
         .flag("mock", "use the pure-Rust mock runtime")
@@ -199,6 +208,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .opt("aggregation", None, "aggregation strategy by registry name")
         .opt("server-opt", None, "server optimizer by registry name")
         .opt("round-mode", None, "round engine by registry name")
+        .opt("planner", None, "cohort planner by registry name")
         .opt("out", Some("results"), "output directory")
         .opt("clients", None, "expected worker count (default: cluster size)")
         .flag("mock", "use the mock runtime")
@@ -311,6 +321,10 @@ fn cmd_list() -> Result<()> {
     println!(
         "server optimizers: {}",
         fedhpc::orchestrator::strategy::registry::server_opt_names().join(", ")
+    );
+    println!(
+        "cohort planners: {} (adaptive[:explore[:exclude]], tiered[:n], deadline[:ms])",
+        fedhpc::orchestrator::planner::planner_names().join(", ")
     );
     println!(
         "round modes: {} (async: async_fedbuff[:buffer_k[:alpha[:max_staleness]]], \

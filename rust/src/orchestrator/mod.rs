@@ -4,7 +4,9 @@
 //! convergence (Algorithm 1).
 //!
 //! * [`registry`] — client profiles + reliability/timing history.
-//! * [`selection`] — adaptive client selection (paper §4.1).
+//! * [`planner`] — pluggable cohort planning (paper §4.1): who trains
+//!   each round and on what per-client terms (deadline, epoch budget,
+//!   uplink compression), selected by registry name like strategies.
 //! * [`aggregate`] — the streaming fold-then-normalize core (§4.2, §4.4).
 //! * [`strategy`] — pluggable aggregation strategies (FedAvg/FedProx/
 //!   weighted/robust), server optimizers (FedAvgM/FedAdam) and the
@@ -15,15 +17,15 @@
 
 pub mod aggregate;
 mod convergence;
+pub mod planner;
 mod registry;
-mod selection;
 mod server;
 pub mod strategy;
 
 pub use aggregate::{aggregate, AggDelta, AggInput, AggOutcome, StreamingAggregator, ViewInput};
 pub use convergence::ConvergenceTracker;
+pub use planner::{CohortPlanner, DispatchPlan, PlanContext, RoundPlan};
 pub use registry::{ClientRecord, ClientRegistry};
-pub use selection::select_clients;
 pub use server::{
     mask_seed, EvalHarness, NoHooks, Orchestrator, OrchestratorBuilder, OrchestratorHooks,
     RoundOutcome,

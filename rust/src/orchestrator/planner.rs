@@ -1,0 +1,1206 @@
+//! Pluggable cohort planning (paper §4.1 resource-aware scheduling).
+//!
+//! A [`CohortPlanner`] owns the per-round question the orchestrator
+//! used to hard-code: *who* trains this round and *on what terms*.
+//! [`CohortPlanner::plan`] returns a [`RoundPlan`] — the cohort plus a
+//! per-client [`DispatchPlan`] (round deadline, local-epoch budget,
+//! uplink compression) — so heterogeneity-aware planners can give a
+//! slow client fewer epochs or a sparser uplink instead of watching it
+//! miss the deadline. The per-client fields ride in the existing
+//! `Msg::RoundStart` fields, so the wire protocol is untouched.
+//!
+//! Planners are a configuration axis like aggregation strategies
+//! (PR 2): [`crate::config::PlannerKind::parse`] owns the
+//! `"name[:params]"` grammar shared by the CLI (`--planner`), config
+//! files (`selection.planner`) and benches; [`planner_by_name`] /
+//! [`planner_from_config`] own instantiation. Registered planners:
+//!
+//! * `random` — uniform cohort, identical dispatch for everyone (the
+//!   ablation baseline). Bit-identical cohorts to the historical
+//!   `SelectionPolicy::Random` for the same seed (pinned by test).
+//! * `adaptive[:explore[:exclude]]` — score = capability × reliability
+//!   × bandwidth with an exploration floor; chronic stragglers (EWMA
+//!   round time > `exclude` × median) are benched for
+//!   [`AdaptivePlanner::bench_rounds`] rounds. Bit-identical cohorts to
+//!   the historical `SelectionPolicy::Adaptive` (pinned by test).
+//! * `tiered[:n]` — cohort sampled uniformly (so ablations against
+//!   `random` differ only in dispatch), then bucketed into `n` tiers
+//!   by EWMA round time normalized per observed epoch budget (see
+//!   `EpochLedger::est_epoch_ms` for why the normalization matters).
+//!   Each tier's epoch budget and top-k fraction shrink by the tier's
+//!   slowdown ratio versus the fastest tier, so slow clients finish
+//!   inside the same deadline fast ones do.
+//! * `deadline[:ms]` — fits each client's epoch budget to a target
+//!   round deadline from its profiled round-time estimate (seeded by
+//!   `bench_step_ms`) and link bandwidth; low-bandwidth links keep
+//!   extra transfer headroom. Without `:ms` the config's
+//!   `straggler.deadline_ms` is the target.
+//!
+//! Registry feedback ([`CohortPlanner::report_success`] /
+//! [`CohortPlanner::report_failure`]) also flows through the trait, so
+//! a planner owns its own learning signal the way a `ServerOpt` owns
+//! its optimizer state — the default implementations forward to the
+//! shared [`ClientRegistry`].
+//!
+//! # Determinism
+//!
+//! `plan` draws only from the caller's [`Rng`]: the same seed produces
+//! the same cohorts *and* the same per-client plans, in the real
+//! engines and the virtual-time sim alike.
+
+use super::registry::ClientRegistry;
+use crate::cluster::NodeId;
+use crate::config::{CompressionConfig, PlannerKind, SelectionConfig};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::collections::{HashMap, HashSet};
+
+/// Per-client dispatch terms for one round. These are exactly the
+/// `Msg::RoundStart` fields a planner may vary per client; everything
+/// else in the broadcast (learning rate, μ, model payload) is global.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DispatchPlan {
+    /// Round deadline handed to this client (advisory on the wire; the
+    /// collect phase waits out the cohort's maximum).
+    pub deadline_ms: u64,
+    /// Local-epoch budget for this client.
+    pub local_epochs: u32,
+    /// Uplink compression this client must apply to its update.
+    pub compression: CompressionConfig,
+}
+
+/// Everything the orchestrator hands the planner besides the registry:
+/// the round number, the cohort size target and the config-derived
+/// default dispatch terms.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanContext {
+    pub round: u32,
+    /// Cohort size target (`selection.clients_per_round`).
+    pub k: usize,
+    /// Dispatch terms for a client the planner doesn't tune.
+    pub defaults: DispatchPlan,
+}
+
+/// A planned round: the cohort in dispatch order, one
+/// [`DispatchPlan`] per member.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundPlan {
+    cohort: Vec<NodeId>,
+    /// Parallel to `cohort`.
+    plans: Vec<DispatchPlan>,
+}
+
+impl RoundPlan {
+    pub fn empty() -> RoundPlan {
+        RoundPlan {
+            cohort: Vec::new(),
+            plans: Vec::new(),
+        }
+    }
+
+    /// Every cohort member gets the same dispatch terms.
+    pub fn uniform(cohort: Vec<NodeId>, plan: DispatchPlan) -> RoundPlan {
+        let plans = vec![plan; cohort.len()];
+        RoundPlan { cohort, plans }
+    }
+
+    pub fn from_entries(entries: Vec<(NodeId, DispatchPlan)>) -> RoundPlan {
+        let (cohort, plans) = entries.into_iter().unzip();
+        RoundPlan { cohort, plans }
+    }
+
+    /// The cohort in dispatch order.
+    pub fn cohort(&self) -> &[NodeId] {
+        &self.cohort
+    }
+
+    pub fn len(&self) -> usize {
+        self.cohort.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cohort.is_empty()
+    }
+
+    /// `(client, plan)` pairs in dispatch order.
+    pub fn iter(&self) -> impl Iterator<Item = (NodeId, &DispatchPlan)> {
+        self.cohort.iter().copied().zip(self.plans.iter())
+    }
+
+    /// This round's dispatch terms for `id` (a cohort member). Linear
+    /// scan — fine for one-off lookups; callers doing per-client
+    /// lookups in a loop should build [`RoundPlan::to_map`] once.
+    pub fn get(&self, id: NodeId) -> Option<&DispatchPlan> {
+        self.cohort
+            .iter()
+            .position(|&c| c == id)
+            .map(|i| &self.plans[i])
+    }
+
+    /// The plan as a by-client lookup table (what the async engines
+    /// keep for per-report re-dispatch).
+    pub fn to_map(&self) -> HashMap<NodeId, DispatchPlan> {
+        self.iter().map(|(c, p)| (c, *p)).collect()
+    }
+
+    /// The latest deadline any cohort member was given — the round's
+    /// collect-phase wait bound.
+    pub fn max_deadline_ms(&self) -> u64 {
+        self.plans.iter().map(|p| p.deadline_ms).max().unwrap_or(0)
+    }
+}
+
+/// The cohort-planning strategy interface. One instance lives on the
+/// orchestrator for the whole run, so implementations may carry state
+/// across rounds (bench counters, learned tiers, …) the way a
+/// `ServerOpt` carries optimizer state.
+pub trait CohortPlanner: Send {
+    /// Registry name (matches [`crate::config::PlannerKind::name`]).
+    fn name(&self) -> &'static str;
+
+    /// Pick this round's cohort from `available` and assign each
+    /// member its dispatch terms. Deterministic in `rng`; returns at
+    /// most `ctx.k` clients (fewer only if `available` is short).
+    fn plan(
+        &mut self,
+        registry: &mut ClientRegistry,
+        available: &[NodeId],
+        ctx: &PlanContext,
+        rng: &mut Rng,
+    ) -> RoundPlan;
+
+    /// Feedback: a planned client reported a usable update `round_ms`
+    /// into the round. Default: update the shared registry's EWMA /
+    /// reliability history.
+    fn report_success(
+        &mut self,
+        registry: &mut ClientRegistry,
+        id: NodeId,
+        round: u32,
+        round_ms: f64,
+    ) {
+        registry.report_success(id, round, round_ms);
+    }
+
+    /// Feedback: a planned client dropped out, missed its deadline or
+    /// sent a rejected update. Default: registry failure count.
+    fn report_failure(&mut self, registry: &mut ClientRegistry, id: NodeId, round: u32) {
+        registry.report_failure(id, round);
+    }
+}
+
+/// Uniform random cohort (the ablation baseline).
+pub struct RandomPlanner;
+
+impl CohortPlanner for RandomPlanner {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn plan(
+        &mut self,
+        _registry: &mut ClientRegistry,
+        available: &[NodeId],
+        ctx: &PlanContext,
+        rng: &mut Rng,
+    ) -> RoundPlan {
+        let k = ctx.k.min(available.len());
+        if k == 0 {
+            return RoundPlan::empty();
+        }
+        let picks = rng.sample_indices(available.len(), k);
+        RoundPlan::uniform(
+            picks.into_iter().map(|i| available[i]).collect(),
+            ctx.defaults,
+        )
+    }
+}
+
+/// Score-based selection with an exploration floor and straggler
+/// benching — the historical adaptive policy behind the trait, with
+/// the O(k²) `Vec::contains` scans replaced by a `HashSet` (the same
+/// smell PR 1 fixed in round collection; pure lookup change, cohort
+/// order is untouched).
+pub struct AdaptivePlanner {
+    pub explore_frac: f64,
+    pub exclude_factor: f64,
+    /// Rounds a detected straggler sits out (was a hard-coded 3 in the
+    /// old free function; now planner-owned state).
+    pub bench_rounds: u32,
+}
+
+impl AdaptivePlanner {
+    pub fn new(explore_frac: f64, exclude_factor: f64) -> AdaptivePlanner {
+        AdaptivePlanner {
+            explore_frac,
+            exclude_factor,
+            bench_rounds: 3,
+        }
+    }
+}
+
+impl CohortPlanner for AdaptivePlanner {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn plan(
+        &mut self,
+        registry: &mut ClientRegistry,
+        available: &[NodeId],
+        ctx: &PlanContext,
+        rng: &mut Rng,
+    ) -> RoundPlan {
+        let k = ctx.k.min(available.len());
+        if k == 0 {
+            return RoundPlan::empty();
+        }
+        registry.tick_round();
+        // bench chronic stragglers: EWMA round time far above the median
+        let median = registry.median_round_ms();
+        if median > 0.0 && ctx.round > 0 {
+            let stragglers: Vec<NodeId> = available
+                .iter()
+                .copied()
+                .filter(|&id| {
+                    registry
+                        .get(id)
+                        .is_some_and(|r| r.ewma_round_ms > self.exclude_factor * median)
+                })
+                .collect();
+            for id in stragglers {
+                registry.bench(id, self.bench_rounds);
+                log::debug!(
+                    "planner: benching straggler {id} for {} rounds",
+                    self.bench_rounds
+                );
+            }
+        }
+        // eligible = available and not benched
+        let eligible: Vec<NodeId> = available
+            .iter()
+            .copied()
+            .filter(|&id| registry.get(id).map_or(true, |r| r.benched_for == 0))
+            .collect();
+        // if benching ate too much of the pool, fall back to all available
+        let pool: &[NodeId] = if eligible.len() >= k {
+            &eligible
+        } else {
+            available
+        };
+
+        let n_explore = (((k as f64) * self.explore_frac).round() as usize).min(k);
+        let n_exploit = k - n_explore;
+
+        // exploit: top-scoring clients
+        let mut scored: Vec<(f64, NodeId)> = pool
+            .iter()
+            .map(|&id| {
+                let s = registry.get(id).map_or(0.0, |r| r.score());
+                (s, id)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut selected: Vec<NodeId> = scored.iter().take(n_exploit).map(|&(_, id)| id).collect();
+        let mut chosen: HashSet<NodeId> = selected.iter().copied().collect();
+
+        // explore: uniform among the rest
+        let rest: Vec<NodeId> = pool
+            .iter()
+            .copied()
+            .filter(|id| !chosen.contains(id))
+            .collect();
+        let picks = rng.sample_indices(rest.len(), n_explore.min(rest.len()));
+        for i in picks {
+            let id = rest[i];
+            selected.push(id);
+            chosen.insert(id);
+        }
+
+        // top up if exploration pool was short
+        if selected.len() < k {
+            for &(_, id) in scored.iter() {
+                if selected.len() >= k {
+                    break;
+                }
+                if chosen.insert(id) {
+                    selected.push(id);
+                }
+            }
+        }
+        selected.truncate(k);
+        RoundPlan::uniform(selected, ctx.defaults)
+    }
+}
+
+/// Planner-owned record of which epoch budget each client's EWMA was
+/// observed under. `dispatch` notes the budget handed out at plan
+/// time; only a *success* promotes it to the observed budget — a
+/// client that never reports under a new budget keeps its last honest
+/// divisor (its EWMA never saw the new budget either).
+#[derive(Debug, Default)]
+struct EpochLedger {
+    dispatched: HashMap<NodeId, u32>,
+    observed: HashMap<NodeId, u32>,
+}
+
+impl EpochLedger {
+    fn dispatch(&mut self, id: NodeId, epochs: u32) {
+        self.dispatched.insert(id, epochs);
+    }
+
+    /// The client reported: its EWMA now reflects the last dispatched
+    /// budget.
+    fn observe(&mut self, id: NodeId) {
+        if let Some(&b) = self.dispatched.get(&id) {
+            self.observed.insert(id, b);
+        }
+    }
+
+    /// Per-epoch round-time estimate for `id`: the registry's EWMA
+    /// round time divided by the budget it was observed under.
+    /// Normalizing by that budget is what keeps the feedback loop
+    /// stable: without it, cutting a slow client's epochs shrinks its
+    /// EWMA, which shrinks its apparent slowdown, which hands it a
+    /// bigger budget again — and it flips back to missing deadlines.
+    /// Falls back to `default_epochs` for never-observed clients
+    /// (their EWMA is the registration prior, a full default-budget
+    /// round estimate) and to a neutral prior when the client never
+    /// registered at all (test rigs, races at startup).
+    fn est_epoch_ms(&self, registry: &ClientRegistry, default_epochs: u32, id: NodeId) -> f64 {
+        let est_round = registry.get(id).map_or(1.0, |r| r.ewma_round_ms.max(1e-3));
+        let epochs = self.observed.get(&id).copied().unwrap_or(default_epochs).max(1);
+        est_round / epochs as f64
+    }
+}
+
+/// Tier-bucketed dispatch: cohort sampled uniformly (identical picks
+/// to [`RandomPlanner`] for the same seed, so tiered-vs-random
+/// ablations isolate the dispatch effect), then bucketed into
+/// `tiers` contiguous tiers by ascending per-epoch round time
+/// (`EpochLedger::est_epoch_ms`). Tier `t`'s members get their epoch
+/// budget and top-k fraction divided by the tier's median slowdown
+/// versus the fastest tier — a client ~4× slower trains ~¼ the epochs
+/// and uploads a sparser update, so it lands inside the same deadline
+/// the fast tier meets.
+pub struct TieredPlanner {
+    pub tiers: usize,
+    /// Which budget each client's EWMA was observed under
+    /// (planner-owned state; see [`EpochLedger`]).
+    ledger: EpochLedger,
+}
+
+impl TieredPlanner {
+    pub fn new(tiers: usize) -> TieredPlanner {
+        TieredPlanner {
+            tiers,
+            ledger: EpochLedger::default(),
+        }
+    }
+}
+
+impl CohortPlanner for TieredPlanner {
+    fn name(&self) -> &'static str {
+        "tiered"
+    }
+
+    fn plan(
+        &mut self,
+        registry: &mut ClientRegistry,
+        available: &[NodeId],
+        ctx: &PlanContext,
+        rng: &mut Rng,
+    ) -> RoundPlan {
+        let k = ctx.k.min(available.len());
+        if k == 0 {
+            return RoundPlan::empty();
+        }
+        let picks = rng.sample_indices(available.len(), k);
+        let cohort: Vec<NodeId> = picks.into_iter().map(|i| available[i]).collect();
+        let d = ctx.defaults;
+
+        // rank the cohort fast → slow (deterministic tie-break on id)
+        let mut ranked: Vec<(f64, NodeId)> = cohort
+            .iter()
+            .map(|&id| (self.ledger.est_epoch_ms(registry, d.local_epochs, id), id))
+            .collect();
+        ranked.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+
+        // contiguous buckets; ratio = tier median / fastest-tier median
+        let tiers = self.tiers.clamp(1, k);
+        let bucket = k.div_ceil(tiers);
+        let tier_of = |pos: usize| pos / bucket;
+        let median_of = |t: usize| -> f64 {
+            let lo = t * bucket;
+            let hi = ((t + 1) * bucket).min(k);
+            ranked[lo + (hi - lo) / 2].0
+        };
+        let fastest = median_of(0).max(1e-3);
+        let mut entries: Vec<(NodeId, DispatchPlan)> = Vec::with_capacity(k);
+        for (pos, &(_, id)) in ranked.iter().enumerate() {
+            let ratio = (median_of(tier_of(pos)) / fastest).max(1.0);
+            // max(1) guards a zero-epoch default from inverting the clamp
+            let local_epochs =
+                ((d.local_epochs as f64 / ratio).round() as u32).clamp(1, d.local_epochs.max(1));
+            // sparser uplink hint for slow tiers; floored so hostile
+            // ratios can never zero out the update
+            let topk = (d.compression.topk_frac as f64 / ratio)
+                .max(0.05f64.min(d.compression.topk_frac as f64))
+                as f32;
+            self.ledger.dispatch(id, local_epochs);
+            entries.push((
+                id,
+                DispatchPlan {
+                    deadline_ms: d.deadline_ms,
+                    local_epochs,
+                    compression: CompressionConfig {
+                        topk_frac: topk,
+                        ..d.compression
+                    },
+                },
+            ));
+        }
+        RoundPlan::from_entries(entries)
+    }
+
+    fn report_success(
+        &mut self,
+        registry: &mut ClientRegistry,
+        id: NodeId,
+        round: u32,
+        round_ms: f64,
+    ) {
+        // the EWMA about to absorb `round_ms` was produced under the
+        // last dispatched budget — record that pairing
+        self.ledger.observe(id);
+        registry.report_success(id, round, round_ms);
+    }
+}
+
+/// Deadline-fitted dispatch: cohort sampled uniformly, then each
+/// member's epoch budget is fitted to a target round deadline from its
+/// per-epoch round-time estimate (`EpochLedger::est_epoch_ms`, seeded
+/// by the profiled `bench_step_ms` prior before any history exists)
+/// and link bandwidth — clients on sub-GB/s links keep 20% of the
+/// budget as transfer headroom, fast links 5%.
+pub struct DeadlinePlanner {
+    /// Target round deadline; `None` uses the config default
+    /// (`ctx.defaults.deadline_ms`).
+    pub target_ms: Option<u64>,
+    /// Which budget each client's EWMA was observed under
+    /// (planner-owned state; see [`EpochLedger`]).
+    ledger: EpochLedger,
+}
+
+impl DeadlinePlanner {
+    pub fn new(target_ms: Option<u64>) -> DeadlinePlanner {
+        DeadlinePlanner {
+            target_ms,
+            ledger: EpochLedger::default(),
+        }
+    }
+}
+
+impl CohortPlanner for DeadlinePlanner {
+    fn name(&self) -> &'static str {
+        "deadline"
+    }
+
+    fn plan(
+        &mut self,
+        registry: &mut ClientRegistry,
+        available: &[NodeId],
+        ctx: &PlanContext,
+        rng: &mut Rng,
+    ) -> RoundPlan {
+        let k = ctx.k.min(available.len());
+        if k == 0 {
+            return RoundPlan::empty();
+        }
+        let picks = rng.sample_indices(available.len(), k);
+        let cohort: Vec<NodeId> = picks.into_iter().map(|i| available[i]).collect();
+        let d = ctx.defaults;
+        let target_ms = self.target_ms.unwrap_or(d.deadline_ms);
+        let mut entries: Vec<(NodeId, DispatchPlan)> = Vec::with_capacity(k);
+        for id in cohort {
+            let per_epoch_ms = self.ledger.est_epoch_ms(registry, d.local_epochs, id).max(1e-3);
+            let link_bw = registry.get(id).map_or(1e9, |r| r.profile.link_bw);
+            let headroom = if link_bw < 1e9 { 0.8 } else { 0.95 };
+            let budget = (target_ms as f64 * headroom / per_epoch_ms).floor();
+            let local_epochs = (budget as u32).clamp(1, d.local_epochs.max(1));
+            self.ledger.dispatch(id, local_epochs);
+            entries.push((
+                id,
+                DispatchPlan {
+                    deadline_ms: target_ms,
+                    local_epochs,
+                    compression: d.compression,
+                },
+            ));
+        }
+        RoundPlan::from_entries(entries)
+    }
+
+    fn report_success(
+        &mut self,
+        registry: &mut ClientRegistry,
+        id: NodeId,
+        round: u32,
+        round_ms: f64,
+    ) {
+        self.ledger.observe(id);
+        registry.report_success(id, round, round_ms);
+    }
+}
+
+/// All registered planner names.
+pub fn planner_names() -> &'static [&'static str] {
+    PlannerKind::KINDS
+}
+
+/// Instantiate the planner a config value describes.
+pub fn planner_from_config(kind: &PlannerKind) -> Box<dyn CohortPlanner> {
+    match *kind {
+        PlannerKind::Random => Box::new(RandomPlanner),
+        PlannerKind::Adaptive {
+            explore_frac,
+            exclude_factor,
+        } => Box::new(AdaptivePlanner::new(explore_frac, exclude_factor)),
+        PlannerKind::Tiered { tiers } => Box::new(TieredPlanner::new(tiers)),
+        PlannerKind::Deadline { target_ms } => Box::new(DeadlinePlanner::new(target_ms)),
+    }
+}
+
+/// Instantiate a planner by registry name (`"random"`,
+/// `"adaptive:0.2:2.5"`, `"tiered:4"`, `"deadline:2000"`, …). Unknown
+/// names error.
+pub fn planner_by_name(spec: &str) -> Result<Box<dyn CohortPlanner>> {
+    Ok(planner_from_config(&PlannerKind::parse(spec)?))
+}
+
+/// The planner a [`SelectionConfig`] resolves to (explicit `planner`
+/// spec, else the legacy `policy`). Fresh state every call — bench
+/// counters and any learned planner state belong to one training run.
+pub fn planner_from_selection(sel: &SelectionConfig) -> Box<dyn CohortPlanner> {
+    planner_from_config(&sel.planner_kind())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::registry::test_profile;
+    use super::*;
+    use crate::network::ClientProfile;
+
+    /// Verbatim port of the pre-planner `selection::select_clients`
+    /// free function (O(k²) `Vec::contains` and all) — the reference
+    /// the acceptance criterion pins `random` / `adaptive` against.
+    mod legacy {
+        use crate::cluster::NodeId;
+        use crate::orchestrator::ClientRegistry;
+        use crate::util::rng::Rng;
+
+        pub enum Policy {
+            Random,
+            Adaptive {
+                explore_frac: f64,
+                exclude_factor: f64,
+            },
+        }
+
+        pub fn select_clients(
+            registry: &mut ClientRegistry,
+            available: &[NodeId],
+            policy: &Policy,
+            clients_per_round: usize,
+            round: u32,
+            rng: &mut Rng,
+        ) -> Vec<NodeId> {
+            let k = clients_per_round.min(available.len());
+            if k == 0 {
+                return vec![];
+            }
+            match *policy {
+                Policy::Random => {
+                    let picks = rng.sample_indices(available.len(), k);
+                    picks.into_iter().map(|i| available[i]).collect()
+                }
+                Policy::Adaptive {
+                    explore_frac,
+                    exclude_factor,
+                } => adaptive(registry, available, k, explore_frac, exclude_factor, round, rng),
+            }
+        }
+
+        fn adaptive(
+            registry: &mut ClientRegistry,
+            available: &[NodeId],
+            k: usize,
+            explore_frac: f64,
+            exclude_factor: f64,
+            round: u32,
+            rng: &mut Rng,
+        ) -> Vec<NodeId> {
+            registry.tick_round();
+            let median = registry.median_round_ms();
+            if median > 0.0 && round > 0 {
+                let stragglers: Vec<NodeId> = available
+                    .iter()
+                    .copied()
+                    .filter(|&id| {
+                        registry
+                            .get(id)
+                            .is_some_and(|r| r.ewma_round_ms > exclude_factor * median)
+                    })
+                    .collect();
+                for id in stragglers {
+                    registry.bench(id, 3);
+                }
+            }
+            let eligible: Vec<NodeId> = available
+                .iter()
+                .copied()
+                .filter(|&id| registry.get(id).map_or(true, |r| r.benched_for == 0))
+                .collect();
+            let pool: &[NodeId] = if eligible.len() >= k {
+                &eligible
+            } else {
+                available
+            };
+            let n_explore = ((k as f64) * explore_frac).round() as usize;
+            let n_exploit = k - n_explore;
+            let mut scored: Vec<(f64, NodeId)> = pool
+                .iter()
+                .map(|&id| {
+                    let s = registry.get(id).map_or(0.0, |r| r.score());
+                    (s, id)
+                })
+                .collect();
+            scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+            let mut selected: Vec<NodeId> =
+                scored.iter().take(n_exploit).map(|&(_, id)| id).collect();
+            let rest: Vec<NodeId> = pool
+                .iter()
+                .copied()
+                .filter(|id| !selected.contains(id))
+                .collect();
+            let picks = rng.sample_indices(rest.len(), n_explore.min(rest.len()));
+            selected.extend(picks.into_iter().map(|i| rest[i]));
+            if selected.len() < k {
+                for &(_, id) in scored.iter() {
+                    if selected.len() >= k {
+                        break;
+                    }
+                    if !selected.contains(&id) {
+                        selected.push(id);
+                    }
+                }
+            }
+            selected.truncate(k);
+            selected
+        }
+    }
+
+    fn defaults() -> DispatchPlan {
+        DispatchPlan {
+            deadline_ms: 60_000,
+            local_epochs: 5,
+            compression: CompressionConfig::NONE,
+        }
+    }
+
+    fn ctx(round: u32, k: usize) -> PlanContext {
+        PlanContext {
+            round,
+            k,
+            defaults: defaults(),
+        }
+    }
+
+    fn registry_with(n: u32) -> (ClientRegistry, Vec<NodeId>) {
+        let mut reg = ClientRegistry::new();
+        for i in 0..n {
+            reg.register(i, test_profile(1.0, 1e9));
+        }
+        (reg, (0..n).collect())
+    }
+
+    /// A heterogeneous registry with mixed history, shared by the
+    /// legacy-equivalence grid.
+    fn heterogeneous_registry(n: u32, seed: u64) -> (ClientRegistry, Vec<NodeId>) {
+        let mut reg = ClientRegistry::new();
+        let mut rng = Rng::new(seed);
+        for i in 0..n {
+            reg.register(
+                i,
+                ClientProfile {
+                    speed_factor: 0.05 + rng.f64() * 2.0,
+                    mem_gb: 16.0,
+                    link_bw: 1e8 + rng.f64() * 1e10,
+                    n_samples: 100,
+                    bench_step_ms: 1.0 + rng.f64() * 100.0,
+                },
+            );
+            for r in 0..5 {
+                if rng.chance(0.8) {
+                    reg.report_success(i, r, 20.0 + rng.f64() * 5_000.0);
+                } else {
+                    reg.report_failure(i, r);
+                }
+            }
+        }
+        (reg, (0..n).collect())
+    }
+
+    /// The acceptance pin: `random` and `adaptive` planners reproduce
+    /// the pre-planner cohorts bit-identically — same seed, same
+    /// registry history, same cohort, across multi-round sequences
+    /// (which exercise benching + tick + fallback paths).
+    #[test]
+    fn random_and_adaptive_reproduce_legacy_cohorts_bit_identically() {
+        for seed in 0..12u64 {
+            for &k in &[1usize, 7, 10, 29, 40] {
+                for &explore in &[0.0f64, 0.2, 0.5, 1.0] {
+                    let (mut legacy_reg, avail) = heterogeneous_registry(30, seed);
+                    let (mut new_reg, _) = heterogeneous_registry(30, seed);
+                    let mut legacy_rng = Rng::new(seed ^ 0xBEEF);
+                    let mut new_rng = Rng::new(seed ^ 0xBEEF);
+                    let mut planner = AdaptivePlanner::new(explore, 2.5);
+                    for round in 0..4u32 {
+                        let want = legacy::select_clients(
+                            &mut legacy_reg,
+                            &avail,
+                            &legacy::Policy::Adaptive {
+                                explore_frac: explore,
+                                exclude_factor: 2.5,
+                            },
+                            k,
+                            round,
+                            &mut legacy_rng,
+                        );
+                        let got = planner.plan(&mut new_reg, &avail, &ctx(round, k), &mut new_rng);
+                        assert_eq!(
+                            got.cohort(),
+                            &want[..],
+                            "adaptive diverged: seed {seed} k {k} explore {explore} round {round}"
+                        );
+                        // identical feedback keeps the registries in lockstep
+                        for &id in &want {
+                            legacy_reg.report_success(id, round, 40.0 * (id as f64 + 1.0));
+                            planner.report_success(
+                                &mut new_reg,
+                                id,
+                                round,
+                                40.0 * (id as f64 + 1.0),
+                            );
+                        }
+                    }
+
+                    let want = legacy::select_clients(
+                        &mut legacy_reg,
+                        &avail,
+                        &legacy::Policy::Random,
+                        k,
+                        0,
+                        &mut Rng::new(seed),
+                    );
+                    let got = RandomPlanner.plan(
+                        &mut new_reg,
+                        &avail,
+                        &ctx(0, k),
+                        &mut Rng::new(seed),
+                    );
+                    assert_eq!(got.cohort(), &want[..], "random diverged: seed {seed} k {k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_registered_name_instantiates_with_matching_name() {
+        for name in planner_names() {
+            let p = planner_by_name(name).unwrap();
+            assert_eq!(&p.name(), name);
+        }
+        assert!(planner_by_name("no_such_planner").is_err());
+    }
+
+    #[test]
+    fn params_flow_through_by_name_selection() {
+        let mut p = planner_by_name("deadline:1234").unwrap();
+        let (mut reg, avail) = registry_with(4);
+        let plan = p.plan(&mut reg, &avail, &ctx(0, 2), &mut Rng::new(0));
+        assert!(plan.iter().all(|(_, d)| d.deadline_ms == 1234));
+    }
+
+    #[test]
+    fn planner_from_selection_honours_override_and_policy() {
+        use crate::config::SelectionPolicy;
+        let mut sel = SelectionConfig {
+            policy: SelectionPolicy::Random,
+            planner: None,
+            clients_per_round: 4,
+        };
+        assert_eq!(planner_from_selection(&sel).name(), "random");
+        sel.policy = SelectionPolicy::default();
+        assert_eq!(planner_from_selection(&sel).name(), "adaptive");
+        sel.planner = Some(PlannerKind::Tiered { tiers: 2 });
+        assert_eq!(planner_from_selection(&sel).name(), "tiered");
+    }
+
+    #[test]
+    fn random_selects_k_distinct_with_default_plans() {
+        let (mut reg, avail) = registry_with(30);
+        let plan = RandomPlanner.plan(&mut reg, &avail, &ctx(0, 10), &mut Rng::new(0));
+        assert_eq!(plan.len(), 10);
+        let mut s = plan.cohort().to_vec();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 10);
+        for (_, p) in plan.iter() {
+            assert_eq!(*p, defaults());
+        }
+    }
+
+    #[test]
+    fn k_larger_than_pool_takes_all() {
+        let (mut reg, avail) = registry_with(5);
+        let mut rng = Rng::new(1);
+        for spec in ["random", "adaptive", "tiered:2", "deadline"] {
+            let mut p = planner_by_name(spec).unwrap();
+            let plan = p.plan(&mut reg, &avail, &ctx(0, 20), &mut rng);
+            assert_eq!(plan.len(), 5, "{spec}");
+        }
+    }
+
+    #[test]
+    fn adaptive_prefers_fast_reliable_clients() {
+        let mut reg = ClientRegistry::new();
+        // 0..5 fast, 5..10 slow
+        for i in 0..10u32 {
+            let speed = if i < 5 { 1.0 } else { 0.02 };
+            reg.register(i, test_profile(speed, 1e9));
+        }
+        for r in 0..10 {
+            for i in 0..10u32 {
+                let t = if i < 5 { 100.0 } else { 5_000.0 };
+                reg.report_success(i, r, t);
+            }
+        }
+        let avail: Vec<NodeId> = (0..10).collect();
+        // no exploration → pure exploitation for determinism
+        let mut planner = AdaptivePlanner::new(0.0, 100.0);
+        let plan = planner.plan(&mut reg, &avail, &ctx(5, 5), &mut Rng::new(2));
+        assert_eq!(plan.len(), 5);
+        assert!(
+            plan.cohort().iter().all(|&id| id < 5),
+            "picked slow clients: {:?}",
+            plan.cohort()
+        );
+    }
+
+    #[test]
+    fn adaptive_benches_extreme_stragglers() {
+        let mut reg = ClientRegistry::new();
+        for i in 0..10u32 {
+            reg.register(i, test_profile(1.0, 1e9));
+        }
+        for r in 0..5 {
+            for i in 0..10u32 {
+                let t = if i == 9 { 100_000.0 } else { 100.0 };
+                reg.report_success(i, r, t);
+            }
+        }
+        let avail: Vec<NodeId> = (0..10).collect();
+        let mut planner = AdaptivePlanner::new(0.0, 2.5);
+        let plan = planner.plan(&mut reg, &avail, &ctx(5, 9), &mut Rng::new(3));
+        assert!(
+            !plan.cohort().contains(&9),
+            "straggler 9 selected: {:?}",
+            plan.cohort()
+        );
+        assert!(reg.get(9).unwrap().benched_for > 0);
+    }
+
+    #[test]
+    fn exploration_reaches_cold_clients() {
+        let mut reg = ClientRegistry::new();
+        for i in 0..20u32 {
+            reg.register(i, test_profile(1.0, 1e9));
+        }
+        // clients 0..10 have glowing history; 10..20 are cold
+        for r in 0..10 {
+            for i in 0..10u32 {
+                reg.report_success(i, r, 50.0);
+            }
+        }
+        let avail: Vec<NodeId> = (0..20).collect();
+        let mut hit_cold = false;
+        for seed in 0..20 {
+            let mut planner = AdaptivePlanner::new(0.4, 100.0);
+            let plan = planner.plan(&mut reg, &avail, &ctx(1, 10), &mut Rng::new(seed));
+            if plan.cohort().iter().any(|&id| id >= 10) {
+                hit_cold = true;
+                break;
+            }
+        }
+        assert!(hit_cold, "exploration never sampled cold clients");
+    }
+
+    /// ISSUE satellite: `explore_frac == 1.0` means every slot is an
+    /// exploration slot — still exactly `k` distinct clients.
+    #[test]
+    fn adaptive_all_explore_fills_the_cohort() {
+        let (mut reg, avail) = registry_with(25);
+        let mut planner = AdaptivePlanner::new(1.0, 2.5);
+        let plan = planner.plan(&mut reg, &avail, &ctx(0, 10), &mut Rng::new(4));
+        assert_eq!(plan.len(), 10);
+        let mut s = plan.cohort().to_vec();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 10, "duplicate ids in all-explore cohort");
+    }
+
+    /// ISSUE satellite: when benching shrinks the eligible pool below
+    /// `k`, the planner falls back to the full available set.
+    #[test]
+    fn adaptive_falls_back_when_cohort_exceeds_unbenched_pool() {
+        let (mut reg, avail) = registry_with(10);
+        for i in 0..8u32 {
+            reg.bench(i, 5);
+        }
+        // k = 6 > the 2 unbenched clients → fallback to all 10
+        let mut planner = AdaptivePlanner::new(0.0, 100.0);
+        let plan = planner.plan(&mut reg, &avail, &ctx(0, 6), &mut Rng::new(5));
+        assert_eq!(plan.len(), 6);
+        let mut s = plan.cohort().to_vec();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 6);
+    }
+
+    /// ISSUE satellite: a single-client cluster works under every
+    /// planner (cohort = that client, with a plan).
+    #[test]
+    fn single_client_cluster_plans_under_every_planner() {
+        for spec in ["random", "adaptive", "tiered:4", "deadline:500"] {
+            let (mut reg, avail) = registry_with(1);
+            let mut p = planner_by_name(spec).unwrap();
+            let plan = p.plan(&mut reg, &avail, &ctx(0, 3), &mut Rng::new(6));
+            assert_eq!(plan.cohort(), &[0], "{spec}");
+            assert!(plan.get(0).is_some(), "{spec}: member without a plan");
+            assert!(plan.get(0).unwrap().local_epochs >= 1, "{spec}");
+        }
+    }
+
+    #[test]
+    fn empty_pool_returns_empty_plan() {
+        let (mut reg, _) = registry_with(5);
+        for spec in ["random", "adaptive", "tiered:2", "deadline"] {
+            let mut p = planner_by_name(spec).unwrap();
+            let plan = p.plan(&mut reg, &[], &ctx(0, 3), &mut Rng::new(0));
+            assert!(plan.is_empty(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        for spec in ["random", "adaptive", "tiered:3", "deadline:900"] {
+            let (mut r1, avail) = heterogeneous_registry(30, 3);
+            let (mut r2, _) = heterogeneous_registry(30, 3);
+            let a = planner_by_name(spec).unwrap().plan(
+                &mut r1,
+                &avail,
+                &ctx(0, 10),
+                &mut Rng::new(9),
+            );
+            let b = planner_by_name(spec).unwrap().plan(
+                &mut r2,
+                &avail,
+                &ctx(0, 10),
+                &mut Rng::new(9),
+            );
+            assert_eq!(a, b, "{spec}: same seed must give same cohort and plans");
+        }
+    }
+
+    #[test]
+    fn tiered_gives_slow_clients_fewer_epochs_and_sparser_uplink() {
+        let mut reg = ClientRegistry::new();
+        // 0..4 fast (≈100 ms rounds), 4..8 slow (≈1600 ms rounds)
+        for i in 0..8u32 {
+            reg.register(i, test_profile(1.0, 1e9));
+        }
+        for r in 0..10 {
+            for i in 0..8u32 {
+                let t = if i < 4 { 100.0 } else { 1_600.0 };
+                reg.report_success(i, r, t);
+            }
+        }
+        let avail: Vec<NodeId> = (0..8).collect();
+        let mut planner = TieredPlanner::new(2);
+        let mut c = ctx(0, 8);
+        c.defaults.local_epochs = 8;
+        c.defaults.compression = CompressionConfig {
+            quant_bits: 32,
+            topk_frac: 1.0,
+            dropout_keep: 1.0,
+        };
+        let plan = planner.plan(&mut reg, &avail, &c, &mut Rng::new(7));
+        assert_eq!(plan.len(), 8);
+        for (id, p) in plan.iter() {
+            if id < 4 {
+                // fastest tier keeps the full budget
+                assert_eq!(p.local_epochs, 8, "fast client {id}");
+                assert_eq!(p.compression.topk_frac, 1.0);
+            } else {
+                // ~16× slower tier: epochs cut to the floor, uplink sparser
+                assert!(p.local_epochs <= 2, "slow client {id}: {}", p.local_epochs);
+                assert!(p.local_epochs >= 1);
+                assert!(
+                    p.compression.topk_frac < 0.5,
+                    "slow client {id}: topk {}",
+                    p.compression.topk_frac
+                );
+                assert!(p.compression.topk_frac >= 0.05);
+            }
+            assert_eq!(p.deadline_ms, c.defaults.deadline_ms);
+        }
+    }
+
+    /// Review fix: a client that never reports under a newly
+    /// dispatched budget keeps its last *observed* estimate divisor —
+    /// its EWMA never saw the new budget either. (Promoting at plan
+    /// time inflated a non-reporting client's per-epoch estimate
+    /// budget-fold, pinning it to the floor even after it recovered.)
+    #[test]
+    fn tiered_failed_dispatch_does_not_switch_the_epoch_divisor() {
+        let mut reg = ClientRegistry::new();
+        reg.register(0, test_profile(1.0, 1e9));
+        reg.register(1, test_profile(1.0, 1e9));
+        for r in 0..10 {
+            reg.report_success(0, r, 100.0);
+            reg.report_success(1, r, 400.0);
+        }
+        let mut planner = TieredPlanner::new(2);
+        let mut c = ctx(0, 2);
+        c.defaults.local_epochs = 8;
+        // per-epoch estimates ≈ 100/8 vs 400/8 → ratio ≈ 4 → the slow
+        // client's budget is halved twice: round(8/4) = 2
+        let plan = planner.plan(&mut reg, &[0, 1], &c, &mut Rng::new(0));
+        assert_eq!(plan.get(1).unwrap().local_epochs, 2);
+        // the slow client misses the round entirely: its EWMA is
+        // untouched, so the 2-epoch dispatch must NOT become its
+        // estimate divisor — the next plan is unchanged, not floored
+        planner.report_success(&mut reg, 0, 0, 100.0);
+        planner.report_failure(&mut reg, 1, 0);
+        let plan = planner.plan(&mut reg, &[0, 1], &c, &mut Rng::new(1));
+        assert_eq!(
+            plan.get(1).unwrap().local_epochs,
+            2,
+            "estimate divisor switched on a failed dispatch"
+        );
+    }
+
+    #[test]
+    fn tiered_homogeneous_fleet_keeps_default_dispatch() {
+        let mut reg = ClientRegistry::new();
+        for i in 0..6u32 {
+            reg.register(i, test_profile(1.0, 1e9));
+            for r in 0..5 {
+                reg.report_success(i, r, 200.0);
+            }
+        }
+        let avail: Vec<NodeId> = (0..6).collect();
+        let mut planner = TieredPlanner::new(3);
+        let plan = planner.plan(&mut reg, &avail, &ctx(0, 6), &mut Rng::new(8));
+        for (_, p) in plan.iter() {
+            assert_eq!(p.local_epochs, defaults().local_epochs);
+            assert_eq!(p.compression, defaults().compression);
+        }
+    }
+
+    #[test]
+    fn tiered_cohort_matches_random_cohort_for_same_seed() {
+        // tiered-vs-random ablations must isolate the dispatch effect:
+        // the cohort itself is the same uniform sample
+        let (mut r1, avail) = heterogeneous_registry(40, 11);
+        let (mut r2, _) = heterogeneous_registry(40, 11);
+        let a = RandomPlanner.plan(&mut r1, &avail, &ctx(0, 12), &mut Rng::new(13));
+        let b = TieredPlanner::new(4).plan(&mut r2, &avail, &ctx(0, 12), &mut Rng::new(13));
+        let mut sa = a.cohort().to_vec();
+        let mut sb = b.cohort().to_vec();
+        sa.sort_unstable();
+        sb.sort_unstable();
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn deadline_fits_epoch_budget_to_target() {
+        let mut reg = ClientRegistry::new();
+        // client 0: ~100 ms rounds at 5 epochs (20 ms/epoch);
+        // client 1: ~2000 ms rounds (400 ms/epoch)
+        for i in 0..2u32 {
+            reg.register(i, test_profile(1.0, 1e10));
+            for r in 0..10 {
+                reg.report_success(i, r, if i == 0 { 100.0 } else { 2_000.0 });
+            }
+        }
+        let avail = vec![0, 1];
+        let mut planner = DeadlinePlanner::new(Some(800));
+        let plan = planner.plan(&mut reg, &avail, &ctx(0, 2), &mut Rng::new(0));
+        let fast = plan.get(0).unwrap();
+        let slow = plan.get(1).unwrap();
+        // fast client: 800·0.95 / 20 = 38 → clamped to the default 5
+        assert_eq!(fast.local_epochs, 5);
+        // slow client: 800·0.95 / 400 = 1.9 → 1 epoch
+        assert_eq!(slow.local_epochs, 1);
+        assert_eq!(fast.deadline_ms, 800);
+        assert_eq!(slow.deadline_ms, 800);
+    }
+
+    #[test]
+    fn deadline_low_bandwidth_links_keep_more_headroom() {
+        let mut reg = ClientRegistry::new();
+        // identical compute history, different link classes
+        reg.register(0, test_profile(1.0, 1e10));
+        reg.register(1, test_profile(1.0, 1e8));
+        for r in 0..10 {
+            reg.report_success(0, r, 500.0);
+            reg.report_success(1, r, 500.0);
+        }
+        // 100 ms/epoch estimate: at a 350 ms target the fast link fits
+        // floor(350·0.95/100) = 3 epochs, the slow link only
+        // floor(350·0.8/100) = 2 — the 20% transfer headroom bites
+        let mut planner = DeadlinePlanner::new(Some(350));
+        let plan = planner.plan(&mut reg, &[0, 1], &ctx(0, 2), &mut Rng::new(0));
+        assert_eq!(plan.get(0).unwrap().local_epochs, 3);
+        assert_eq!(plan.get(1).unwrap().local_epochs, 2);
+    }
+
+    #[test]
+    fn round_plan_lookup_and_deadline_bound() {
+        let plan = RoundPlan::from_entries(vec![
+            (
+                7,
+                DispatchPlan {
+                    deadline_ms: 100,
+                    local_epochs: 2,
+                    compression: CompressionConfig::NONE,
+                },
+            ),
+            (
+                3,
+                DispatchPlan {
+                    deadline_ms: 900,
+                    local_epochs: 1,
+                    compression: CompressionConfig::NONE,
+                },
+            ),
+        ]);
+        assert_eq!(plan.cohort(), &[7, 3]);
+        assert_eq!(plan.get(3).unwrap().deadline_ms, 900);
+        assert!(plan.get(4).is_none());
+        assert_eq!(plan.max_deadline_ms(), 900);
+        assert_eq!(RoundPlan::empty().max_deadline_ms(), 0);
+    }
+}

@@ -58,18 +58,18 @@
 
 use super::aggregate::ViewInput;
 use super::convergence::ConvergenceTracker;
+use super::planner::{self, CohortPlanner, DispatchPlan, PlanContext, RoundPlan};
 use super::registry::ClientRegistry;
-use super::selection::select_clients;
 use super::strategy::{registry as strategy_registry, AggStrategy, RoundAggregator, ServerOpt};
 use crate::cluster::NodeId;
 use crate::compress::{DecodedView, Encoded};
 use crate::config::{ExperimentConfig, RoundMode, StalenessFn};
-use crate::util::scratch::ScratchPool;
 use crate::data::{Batch, Shard};
 use crate::metrics::{RoundMetrics, TrainingReport};
 use crate::network::{pre_encode_dense, Msg, ServerTransport, TrafficLog, UpdateStats};
 use crate::runtime::{EvalOut, ModelRuntime};
 use crate::util::rng::Rng;
+use crate::util::scratch::ScratchPool;
 use anyhow::{anyhow, bail, Result};
 use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
@@ -145,6 +145,7 @@ pub struct OrchestratorBuilder<T: ServerTransport> {
     eval_every: u32,
     strategy: Option<Arc<dyn AggStrategy>>,
     server_opt: Option<Box<dyn ServerOpt>>,
+    planner: Option<Box<dyn CohortPlanner>>,
 }
 
 impl<T: ServerTransport> OrchestratorBuilder<T> {
@@ -158,6 +159,7 @@ impl<T: ServerTransport> OrchestratorBuilder<T> {
             eval_every: 1,
             strategy: None,
             server_opt: None,
+            planner: None,
         }
     }
 
@@ -211,6 +213,14 @@ impl<T: ServerTransport> OrchestratorBuilder<T> {
         self
     }
 
+    /// Override the cohort planner (defaults to the registry instance
+    /// for `cfg.selection` — the explicit `planner` spec when set,
+    /// else the legacy `policy`).
+    pub fn planner(mut self, planner: Box<dyn CohortPlanner>) -> Self {
+        self.planner = Some(planner);
+        self
+    }
+
     pub fn build(self) -> Result<Orchestrator<T>> {
         let transport = self
             .transport
@@ -224,6 +234,9 @@ impl<T: ServerTransport> OrchestratorBuilder<T> {
         let server_opt = self
             .server_opt
             .unwrap_or_else(|| strategy_registry::server_opt_from_config(&self.cfg.server_opt));
+        let planner = self
+            .planner
+            .unwrap_or_else(|| planner::planner_from_selection(&self.cfg.selection));
         let traffic = self.traffic.unwrap_or_else(|| Arc::new(TrafficLog::new()));
         let rng = Rng::new(self.cfg.seed ^ 0x0C5);
         Ok(Orchestrator {
@@ -237,6 +250,7 @@ impl<T: ServerTransport> OrchestratorBuilder<T> {
             model_version: 0,
             strategy,
             server_opt,
+            planner,
             eval_every: self.eval_every,
             scratch: Arc::new(ScratchPool::new()),
         })
@@ -255,6 +269,9 @@ pub struct Orchestrator<T: ServerTransport> {
     model_version: u32,
     strategy: Arc<dyn AggStrategy>,
     server_opt: Box<dyn ServerOpt>,
+    /// Cohort planning + registry feedback (see
+    /// [`crate::orchestrator::planner`]).
+    planner: Box<dyn CohortPlanner>,
     eval_every: u32,
     /// Dense scratch buffers recycled across updates and rounds (used
     /// only by the ingest paths that must densify — see
@@ -339,49 +356,63 @@ impl<T: ServerTransport> Orchestrator<T> {
         self.cfg.straggler.deadline_ms.unwrap_or(3_600_000)
     }
 
-    /// Select this round's cohort (Algorithm 1 line 4).
-    fn select_phase(&mut self, round: u32) -> Result<Vec<NodeId>> {
+    /// Dispatch terms for a client the planner doesn't tune — the
+    /// config's global deadline / epochs / compression.
+    fn dispatch_defaults(&self) -> DispatchPlan {
+        DispatchPlan {
+            deadline_ms: self.round_deadline_ms(),
+            local_epochs: self.cfg.train.local_epochs as u32,
+            compression: self.cfg.compression,
+        }
+    }
+
+    /// Plan this round's cohort + per-client dispatch terms
+    /// (Algorithm 1 line 4, generalized to heterogeneity-aware
+    /// planners).
+    fn select_phase(&mut self, round: u32) -> Result<RoundPlan> {
         let available = self.registry.ids();
         if available.is_empty() {
             bail!("round {round}: no clients registered");
         }
-        let mut round_rng = self.rng.fork(round as u64);
-        let selected = select_clients(
-            &mut self.registry,
-            &available,
-            &self.cfg.selection,
+        let ctx = PlanContext {
             round,
-            &mut round_rng,
-        );
-        if selected.is_empty() {
-            bail!("round {round}: selection returned no clients");
+            k: self.cfg.selection.clients_per_round,
+            defaults: self.dispatch_defaults(),
+        };
+        let mut round_rng = self.rng.fork(round as u64);
+        let plan = self
+            .planner
+            .plan(&mut self.registry, &available, &ctx, &mut round_rng);
+        if plan.is_empty() {
+            bail!("round {round}: planner returned no clients");
         }
-        log::debug!("round {round}: selected {selected:?}");
-        Ok(selected)
+        log::debug!("round {round}: planned cohort {:?}", plan.cohort());
+        Ok(plan)
     }
 
     /// Phase 1 (Algorithm 1 line 5): broadcast the global model. The
     /// payload is serialized exactly once per round; each send only
-    /// clones the Arc (inproc) or re-writes the shared bytes (tcp).
+    /// clones the Arc (inproc) or re-writes the shared bytes (tcp),
+    /// while the planner's per-client dispatch terms (deadline, epoch
+    /// budget, compression) ride in each client's `RoundStart` fields.
     /// Returns the clients the model actually reached — a failed send
     /// is excluded from the expected-reporter count so collection
     /// never waits out the deadline for a client that never got the
     /// model (it still counts in `dropped`).
-    fn broadcast_phase(&mut self, round: u32, selected: &[NodeId]) -> Vec<NodeId> {
-        let deadline_ms = self.round_deadline_ms();
+    fn broadcast_phase(&mut self, round: u32, plan: &RoundPlan) -> Vec<NodeId> {
         let shared_params = Encoded::PreEncoded(pre_encode_dense(&self.params));
-        let mut reached = Vec::with_capacity(selected.len());
-        for &c in selected {
+        let mut reached = Vec::with_capacity(plan.len());
+        for (c, p) in plan.iter() {
             let msg = Msg::RoundStart {
                 round,
                 model_version: self.model_version,
-                deadline_ms,
+                deadline_ms: p.deadline_ms,
                 lr: self.cfg.train.lr,
                 mu: self.strategy.mu(),
-                local_epochs: self.cfg.train.local_epochs as u32,
+                local_epochs: p.local_epochs,
                 params: shared_params.clone(),
                 mask_seed: mask_seed(self.cfg.seed, round, c),
-                compression: self.cfg.compression,
+                compression: p.compression,
             };
             match self.transport.send_to(c, &msg) {
                 Ok(()) => reached.push(c),
@@ -395,11 +426,14 @@ impl<T: ServerTransport> Orchestrator<T> {
 
     /// Phase 2 (Algorithm 1 lines 6–10): collect updates under the
     /// deadline / partial-k stopping rule, folding each one into the
-    /// aggregator as it arrives.
+    /// aggregator as it arrives. `deadline_ms` is the cohort's maximum
+    /// planned deadline — per-client deadlines are advisory on the
+    /// wire, the server waits for the slowest budget it handed out.
     fn collect_phase(
         &mut self,
         round: u32,
         t_round: Instant,
+        deadline_ms: u64,
         reached: Vec<NodeId>,
         agg: &mut RoundAggregator,
         hooks: &mut dyn OrchestratorHooks,
@@ -410,7 +444,7 @@ impl<T: ServerTransport> Orchestrator<T> {
             .partial_k
             .unwrap_or(usize::MAX)
             .min(reached.len());
-        let deadline = t_round + Duration::from_millis(self.round_deadline_ms());
+        let deadline = t_round + Duration::from_millis(deadline_ms);
         let reached_set: HashSet<NodeId> = reached.iter().copied().collect();
         let mut reported: HashSet<NodeId> = HashSet::with_capacity(reached.len());
         while reported.len() < reached.len() && agg.n_updates() < partial_k {
@@ -458,7 +492,8 @@ impl<T: ServerTransport> Orchestrator<T> {
                         Ok(()) => {
                             hooks.on_update(round, client, &stats);
                             reported.insert(client);
-                            self.registry.report_success(
+                            self.planner.report_success(
+                                &mut self.registry,
                                 client,
                                 round,
                                 t_round.elapsed().as_secs_f64() * 1e3,
@@ -466,7 +501,7 @@ impl<T: ServerTransport> Orchestrator<T> {
                         }
                         Err(e) => {
                             log::warn!("round {round}: bad update from {client}: {e}");
-                            self.registry.report_failure(client, round);
+                            self.planner.report_failure(&mut self.registry, client, round);
                             reported.insert(client);
                         }
                     }
@@ -496,7 +531,7 @@ impl<T: ServerTransport> Orchestrator<T> {
         let mut deadline_misses = 0u32;
         for &c in selected {
             if !reported.contains(&c) {
-                self.registry.report_failure(c, round);
+                self.planner.report_failure(&mut self.registry, c, round);
                 if reached_set.contains(&c) {
                     deadline_misses += 1;
                 }
@@ -577,16 +612,23 @@ impl<T: ServerTransport> Orchestrator<T> {
         hooks: &mut dyn OrchestratorHooks,
     ) -> Result<RoundOutcome> {
         let t_round = Instant::now();
-        let selected = self.select_phase(round)?;
-        hooks.on_round_start(round, &selected);
-        let reached = self.broadcast_phase(round, &selected);
+        let plan = self.select_phase(round)?;
+        hooks.on_round_start(round, plan.cohort());
+        let reached = self.broadcast_phase(round, &plan);
         let mut agg = RoundAggregator::with_pool(
             self.strategy.clone(),
             self.params.len(),
             self.scratch.clone(),
         );
-        let collect = self.collect_phase(round, t_round, reached, &mut agg, hooks)?;
-        self.finalize_phase(round, t_round, &selected, collect, agg, tracker)
+        let collect = self.collect_phase(
+            round,
+            t_round,
+            plan.max_deadline_ms(),
+            reached,
+            &mut agg,
+            hooks,
+        )?;
+        self.finalize_phase(round, t_round, plan.cohort(), collect, agg, tracker)
     }
 
     /// Full training run. Consumes registrations first if `wait_for`
@@ -652,23 +694,30 @@ impl<T: ServerTransport> Orchestrator<T> {
         Ok(report)
     }
 
-    /// Hand `client` the current global model for async training.
+    /// Hand `client` the current global model for async training,
+    /// under the dispatch terms its launch plan assigned.
     /// `dispatch_no` (a per-run counter) tags the `RoundStart`, so a
     /// client re-dispatched within one commit window still draws fresh
     /// training RNG, fault decisions and compression masks — the
     /// worker keys all three off the round tag / mask seed. Staleness
     /// is derived from `model_version`, never the tag.
-    fn dispatch_async(&mut self, client: NodeId, dispatch_no: u64, shared: &Encoded) -> Result<()> {
+    fn dispatch_async(
+        &mut self,
+        client: NodeId,
+        dispatch_no: u64,
+        shared: &Encoded,
+        plan: DispatchPlan,
+    ) -> Result<()> {
         let msg = Msg::RoundStart {
             round: dispatch_no as u32,
             model_version: self.model_version,
-            deadline_ms: self.round_deadline_ms(),
+            deadline_ms: plan.deadline_ms,
             lr: self.cfg.train.lr,
             mu: self.strategy.mu(),
-            local_epochs: self.cfg.train.local_epochs as u32,
+            local_epochs: plan.local_epochs,
             params: shared.clone(),
             mask_seed: mask_seed(self.cfg.seed, dispatch_no as u32, client),
-            compression: self.cfg.compression,
+            compression: plan.compression,
         };
         self.transport.send_to(client, &msg)
     }
@@ -700,9 +749,13 @@ impl<T: ServerTransport> Orchestrator<T> {
         );
         let total_commits = self.cfg.train.rounds as u32;
 
-        // launch: one concurrency slot per selected client, all on M_0
-        let cohort = self.select_phase(0)?;
-        hooks.on_round_start(0, &cohort);
+        // launch: one concurrency slot per planned client, all on M_0.
+        // The launch plan's per-client dispatch terms stay with each
+        // client for the whole run (every re-dispatch reuses them).
+        let launch_plan = self.select_phase(0)?;
+        hooks.on_round_start(0, launch_plan.cohort());
+        let plans: HashMap<NodeId, DispatchPlan> = launch_plan.to_map();
+        let cohort: Vec<NodeId> = launch_plan.cohort().to_vec();
         let mut shared = Encoded::PreEncoded(pre_encode_dense(&self.params));
         let mut dispatch_no: u64 = 0;
         let mut in_flight: HashSet<NodeId> = HashSet::with_capacity(cohort.len());
@@ -710,8 +763,8 @@ impl<T: ServerTransport> Orchestrator<T> {
         // clients (crashes, injected dropouts) are re-dispatched after a
         // deadline so their concurrency slot is never lost for good
         let mut last_dispatch: HashMap<NodeId, Instant> = HashMap::with_capacity(cohort.len());
-        for &c in &cohort {
-            match self.dispatch_async(c, dispatch_no, &shared) {
+        for (c, p) in launch_plan.iter() {
+            match self.dispatch_async(c, dispatch_no, &shared, *p) {
                 Ok(()) => {
                     in_flight.insert(c);
                     last_dispatch.insert(c, Instant::now());
@@ -795,9 +848,11 @@ impl<T: ServerTransport> Orchestrator<T> {
                 }
                 continue;
             }
-            // keep reporters busy on the freshest model
+            // keep reporters busy on the freshest model, each under its
+            // launch-plan dispatch terms
             for client in pending.drain(..) {
-                if let Err(e) = self.dispatch_async(client, dispatch_no, &shared) {
+                let p = plans.get(&client).copied().unwrap_or_else(|| self.dispatch_defaults());
+                if let Err(e) = self.dispatch_async(client, dispatch_no, &shared, p) {
                     log::warn!("async: re-dispatch to {client} failed ({e})");
                     in_flight.remove(&client);
                 } else {
@@ -837,7 +892,7 @@ impl<T: ServerTransport> Orchestrator<T> {
                                 "async: dropping update from {client} at staleness {s}"
                             );
                             stale_drops += 1;
-                            self.registry.report_failure(client, commit);
+                            self.planner.report_failure(&mut self.registry, client, commit);
                         } else {
                             // fused ingest, staleness-discounted: the
                             // same O(nnz) path as the sync engine, with
@@ -858,7 +913,8 @@ impl<T: ServerTransport> Orchestrator<T> {
                             match folded {
                                 Ok(()) => {
                                     hooks.on_update(commit, client, &stats);
-                                    self.registry.report_success(
+                                    self.planner.report_success(
+                                        &mut self.registry,
                                         client,
                                         commit,
                                         t_commit.elapsed().as_secs_f64() * 1e3,
@@ -867,7 +923,7 @@ impl<T: ServerTransport> Orchestrator<T> {
                                 Err(e) => {
                                     log::warn!("async: bad update from {client}: {e}");
                                     bad_folds += 1;
-                                    self.registry.report_failure(client, commit);
+                                    self.planner.report_failure(&mut self.registry, client, commit);
                                 }
                             }
                         }
@@ -1252,6 +1308,119 @@ mod tests {
         for (a, b) in orch.params().iter().zip(&want.new_params) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    /// Tentpole regression: a planner's per-client dispatch terms ride
+    /// in each client's `RoundStart` fields — same round, same shared
+    /// payload, different deadline / epoch budget / compression.
+    #[test]
+    fn planner_dispatch_terms_are_per_client_on_the_wire() {
+        /// Gives client `id` a plan with `deadline = 1000·(id+1)`,
+        /// `epochs = id+1`, and top-k = 1/(id+1).
+        struct PerClientStub;
+        impl CohortPlanner for PerClientStub {
+            fn name(&self) -> &'static str {
+                "per_client_stub"
+            }
+            fn plan(
+                &mut self,
+                _registry: &mut ClientRegistry,
+                available: &[NodeId],
+                ctx: &PlanContext,
+                _rng: &mut crate::util::rng::Rng,
+            ) -> RoundPlan {
+                RoundPlan::from_entries(
+                    available
+                        .iter()
+                        .take(ctx.k)
+                        .map(|&id| {
+                            (
+                                id,
+                                DispatchPlan {
+                                    deadline_ms: 1000 * (id as u64 + 1),
+                                    local_epochs: id + 1,
+                                    compression: crate::config::CompressionConfig {
+                                        quant_bits: 32,
+                                        topk_frac: 1.0 / (id as f32 + 1.0),
+                                        dropout_keep: 1.0,
+                                    },
+                                },
+                            )
+                        })
+                        .collect(),
+                )
+            }
+        }
+
+        let traffic = Arc::new(TrafficLog::new());
+        let hub = InprocHub::new(traffic.clone());
+        let clients: Vec<InprocClient> =
+            (0..3).map(|i| hub.add_client(i, LinkShaper::unshaped())).collect();
+        let mut orch = Orchestrator::builder(test_cfg(3))
+            .transport(hub.server())
+            .traffic(traffic)
+            .initial_params(vec![0.5f32; 3])
+            .planner(Box::new(PerClientStub))
+            .build()
+            .unwrap();
+        for c in &clients {
+            c.send(&Msg::Register {
+                client: c.id(),
+                profile: test_profile(1.0, 1e9),
+            })
+            .unwrap();
+        }
+        orch.wait_for_clients(3, Duration::from_secs(5)).unwrap();
+        for c in &clients {
+            c.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        }
+        for c in &clients {
+            c.send(&update(c.id(), 0, vec![1.0; 3])).unwrap();
+        }
+        let out = orch.run_round(0, &mut tracker(), &mut NoHooks).unwrap();
+        assert_eq!(out.metrics.selected, 3);
+        assert_eq!(out.metrics.reported, 3);
+        let mut payloads = Vec::new();
+        for c in &clients {
+            match c.recv_timeout(Duration::from_secs(1)).unwrap().unwrap() {
+                Msg::RoundStart {
+                    round,
+                    deadline_ms,
+                    local_epochs,
+                    compression,
+                    params,
+                    ..
+                } => {
+                    assert_eq!(round, 0);
+                    let id = c.id();
+                    assert_eq!(deadline_ms, 1000 * (id as u64 + 1));
+                    assert_eq!(local_epochs, id + 1);
+                    assert_eq!(compression.topk_frac, 1.0 / (id as f32 + 1.0));
+                    if let Encoded::PreEncoded(p) = params {
+                        payloads.push(p.bytes);
+                    }
+                }
+                other => panic!("expected RoundStart, got {}", other.name()),
+            }
+        }
+        // per-client terms never cost extra serializations: the model
+        // payload is still encoded once and Arc-shared
+        assert_eq!(payloads.len(), 3);
+        assert!(Arc::ptr_eq(&payloads[0], &payloads[1]));
+        assert!(Arc::ptr_eq(&payloads[1], &payloads[2]));
+    }
+
+    #[test]
+    fn builder_defaults_planner_from_selection_config() {
+        let mut cfg = test_cfg(1);
+        cfg.selection.planner = Some(crate::config::PlannerKind::Tiered { tiers: 2 });
+        let hub = InprocHub::new(Arc::new(TrafficLog::new()));
+        let orch = Orchestrator::builder(cfg)
+            .transport(hub.server())
+            .initial_params(vec![0f32; 2])
+            .build()
+            .unwrap();
+        assert_eq!(orch.planner.name(), "tiered");
     }
 
     #[test]

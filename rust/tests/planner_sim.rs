@@ -1,0 +1,161 @@
+//! Planner acceptance regressions (ISSUE 5): deterministic virtual-time
+//! evidence that heterogeneity-aware cohort planning pays off.
+//!
+//! The scenario is the PR 4 straggler setup (50% of dispatches straggle
+//! 4×) on a genuinely heterogeneous fleet — half `hpc-rtx6000`
+//! (speed 1.0), half `hpc-cpu` (speed 0.08, ~12× slower) — under a
+//! round deadline that fast clients always make and slow clients at
+//! the full epoch budget never do:
+//!
+//! * `random` dispatches everyone identically → every slow client
+//!   misses the deadline every round (dropped work, wasted downlink);
+//! * `tiered:2` gives the slow tier ~¼-to-floor epoch budgets from its
+//!   EWMA slowdown → slow clients land inside the same deadline and
+//!   contribute, so deadline misses collapse while final accuracy
+//!   stays equal-or-better (more of the fleet's data participates).
+//!
+//! Determinism is pinned run-twice: same seed ⇒ identical per-round
+//! reporter sets, durations and final model hash for every planner.
+
+use fedhpc::config::presets::quickstart;
+use fedhpc::config::{Partition, PlannerKind};
+use fedhpc::experiments::{run_sim, SimTiming};
+
+/// Heterogeneous straggler scenario: see the module docs for the
+/// timing budget that makes 1.8 s the fast/slow discriminator.
+fn hetero_cfg(name: &str) -> fedhpc::config::ExperimentConfig {
+    let mut cfg = quickstart();
+    cfg.name = name.into();
+    cfg.mock_runtime = true;
+    cfg.cluster.nodes = vec![("hpc-rtx6000".into(), 4), ("hpc-cpu".into(), 4)];
+    cfg.selection.clients_per_round = 8;
+    cfg.train.rounds = 12;
+    cfg.train.lr = 0.2;
+    cfg.train.local_epochs = 4;
+    cfg.data.samples_per_client = 64;
+    cfg.data.eval_samples = 128;
+    cfg.data.partition = Partition::Iid;
+    // the PR 4 straggler scenario
+    cfg.faults.straggler_prob = 0.5;
+    cfg.faults.straggler_factor = 4.0;
+    cfg.straggler.deadline_ms = Some(1_800);
+    cfg.straggler.partial_k = None;
+    cfg
+}
+
+/// ISSUE 5 acceptance: `tiered` cuts deadline misses versus `random`
+/// under 4× stragglers on a heterogeneous fleet, at equal-or-better
+/// final accuracy.
+#[test]
+fn tiered_cuts_deadline_misses_vs_random_without_losing_accuracy() {
+    let mut random_cfg = hetero_cfg("planner_random");
+    random_cfg.selection.planner = Some(PlannerKind::Random);
+    let random = run_sim(&random_cfg, &SimTiming::default(), true).unwrap();
+
+    let mut tiered_cfg = hetero_cfg("planner_tiered");
+    tiered_cfg.selection.planner = Some(PlannerKind::Tiered { tiers: 2 });
+    let tiered = run_sim(&tiered_cfg, &SimTiming::default(), true).unwrap();
+
+    let misses = |r: &fedhpc::experiments::SimReport| -> u32 {
+        r.report.rounds.iter().map(|m| m.deadline_misses).sum()
+    };
+    let (m_random, m_tiered) = (misses(&random), misses(&tiered));
+    // sanity: the scenario genuinely stresses the deadline under random
+    assert!(
+        m_random >= random_cfg.train.rounds as u32,
+        "random should be missing deadlines constantly, got {m_random}"
+    );
+    // the claim: tiered dispatch absorbs the slow tier instead of
+    // dropping it
+    assert!(
+        m_tiered < m_random,
+        "tiered did not reduce deadline misses ({m_tiered} vs {m_random})"
+    );
+    assert!(
+        (m_tiered as f64) <= 0.8 * (m_random as f64),
+        "tiered only marginally reduced misses ({m_tiered} vs {m_random})"
+    );
+    // slow clients now actually contribute updates
+    let reported = |r: &fedhpc::experiments::SimReport| -> u32 {
+        r.report.rounds.iter().map(|m| m.reported).sum()
+    };
+    assert!(
+        reported(&tiered) > reported(&random),
+        "tiered should aggregate more of the fleet ({} vs {})",
+        reported(&tiered),
+        reported(&random)
+    );
+    // ...without losing final accuracy (more data in, fewer epochs on
+    // the slow half)
+    let acc_random = random.report.final_accuracy().unwrap();
+    let acc_tiered = tiered.report.final_accuracy().unwrap();
+    assert!(
+        acc_tiered >= acc_random - 0.05,
+        "tiered lost accuracy: {acc_tiered:.3} vs random {acc_random:.3}"
+    );
+}
+
+/// Same seed ⇒ identical cohorts, per-client plans, reporter sets,
+/// virtual times and final model hash — for every planner that ships.
+#[test]
+fn planner_sims_replay_bit_identically() {
+    for (tag, planner) in [
+        ("random", PlannerKind::Random),
+        ("tiered", PlannerKind::Tiered { tiers: 2 }),
+        (
+            "deadline",
+            PlannerKind::Deadline {
+                target_ms: Some(1_800),
+            },
+        ),
+        (
+            "adaptive",
+            PlannerKind::Adaptive {
+                explore_frac: 0.2,
+                exclude_factor: 2.5,
+            },
+        ),
+    ] {
+        let mut cfg = hetero_cfg(&format!("planner_det_{tag}"));
+        cfg.train.rounds = 6;
+        cfg.selection.planner = Some(planner);
+        let a = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+        let b = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+        assert_eq!(a.details, b.details, "{tag}: reporter sets diverged");
+        assert_eq!(a.model_hash, b.model_hash, "{tag}: model hash diverged");
+        assert!(a.model_hash.is_some());
+        assert_eq!(
+            a.total_time_s.to_bits(),
+            b.total_time_s.to_bits(),
+            "{tag}: durations diverged"
+        );
+        // a different seed produces a different trajectory
+        cfg.seed += 1;
+        let c = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+        assert_ne!(a.details, c.details, "{tag}: seed had no effect");
+    }
+}
+
+/// The tiered planner also drives the buffered-async virtual engine:
+/// per-client epoch budgets ride along dispatches, the run stays
+/// deterministic, and every commit still closes on `buffer_k` folds.
+#[test]
+fn tiered_planner_drives_the_async_engine_deterministically() {
+    let mut cfg = hetero_cfg("planner_async_tiered");
+    cfg.train.rounds = 8; // commits
+    cfg.selection.planner = Some(PlannerKind::Tiered { tiers: 2 });
+    cfg.round_mode = fedhpc::config::RoundMode::BufferedAsync {
+        buffer_k: 3,
+        max_staleness: 50,
+        staleness: fedhpc::config::StalenessFn::Polynomial { alpha: 0.5 },
+    };
+    let a = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+    let b = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+    assert_eq!(a.details, b.details);
+    assert_eq!(a.model_hash, b.model_hash);
+    assert_eq!(a.report.rounds.len(), 8);
+    for (r, d) in a.report.rounds.iter().zip(&a.details) {
+        assert_eq!(r.reported, 3, "commit {} did not close on buffer_k", r.round);
+        assert_eq!(d.reporters.len(), 3);
+    }
+}

@@ -8,11 +8,10 @@
 use fedhpc::compress::{
     compress, decompress, dropout_mask_indices, quantize, sparsify_topk, QuantBits,
 };
-use fedhpc::config::{
-    Aggregation, CompressionConfig, SelectionConfig, SelectionPolicy, WeightScheme,
-};
+use fedhpc::config::{Aggregation, CompressionConfig, WeightScheme};
 use fedhpc::network::{ClientProfile, Msg, UpdateStats};
-use fedhpc::orchestrator::{aggregate, select_clients, AggInput, ClientRegistry};
+use fedhpc::orchestrator::planner::planner_by_name;
+use fedhpc::orchestrator::{aggregate, AggInput, ClientRegistry, DispatchPlan, PlanContext};
 use fedhpc::testkit::{check, Gen};
 
 fn any_compression(g: &mut Gen) -> CompressionConfig {
@@ -281,9 +280,14 @@ fn prop_empty_update_never_panics() {
     });
 }
 
+/// ISSUE 5 satellite property: every registered planner returns
+/// `k.min(available)` *distinct* ids drawn from `available`, with a
+/// per-client [`DispatchPlan`] for exactly the cohort — plans within
+/// the defaults' bounds (epochs in [1, default], positive deadline,
+/// top-k in (0, 1]).
 #[test]
-fn prop_selection_k_distinct_available() {
-    check("selection", 200, |g| {
+fn prop_every_planner_returns_k_distinct_planned_clients() {
+    check("planner", 200, |g| {
         let n = g.usize_in(1, 80) as u32;
         let mut reg = ClientRegistry::new();
         for i in 0..n {
@@ -308,29 +312,50 @@ fn prop_selection_k_distinct_available() {
         }
         let avail: Vec<u32> = (0..n).filter(|_| g.bool()).collect();
         let k = g.usize_in(1, 40);
-        let policy = if g.bool() {
-            SelectionPolicy::Random
+        let explore = g.f64_in(0.0, 1.0);
+        let exclude = g.f64_in(1.5, 10.0);
+        let specs = ["random", "adaptive", "tiered:2", "tiered:5", "deadline", "deadline:750"];
+        let spec = (*g.pick(&specs)).to_string();
+        let spec = if spec == "adaptive" {
+            format!("adaptive:{explore}:{exclude}")
         } else {
-            SelectionPolicy::Adaptive {
-                explore_frac: g.f64_in(0.0, 1.0),
-                exclude_factor: g.f64_in(1.5, 10.0),
-            }
+            spec
         };
-        let cfg = SelectionConfig {
-            policy,
-            clients_per_round: k,
+        let defaults = DispatchPlan {
+            deadline_ms: *g.pick(&[500u64, 5_000, 60_000]),
+            local_epochs: g.usize_in(1, 8) as u32,
+            compression: any_compression(g),
         };
-        let round = g.usize_in(0, 50) as u32;
-        let sel = select_clients(&mut reg, &avail, &cfg, round, &mut g.rng);
-        // invariants: ≤ k, distinct, all from available
-        assert!(sel.len() <= k);
-        assert_eq!(sel.len(), k.min(avail.len()));
+        let ctx = PlanContext {
+            round: g.usize_in(0, 50) as u32,
+            k,
+            defaults,
+        };
+        let mut planner = planner_by_name(&spec).unwrap();
+        let plan = planner.plan(&mut reg, &avail, &ctx, &mut g.rng);
+        // invariants: exactly k.min(avail) members, distinct, all from
+        // available, each with a plan inside the defaults' bounds
+        assert_eq!(plan.len(), k.min(avail.len()), "{spec}");
+        let sel = plan.cohort().to_vec();
         let mut sorted = sel.clone();
         sorted.sort_unstable();
         sorted.dedup();
-        assert_eq!(sorted.len(), sel.len(), "duplicate selection");
-        for id in &sel {
-            assert!(avail.contains(id), "selected unavailable client {id}");
+        assert_eq!(sorted.len(), sel.len(), "{spec}: duplicate selection");
+        for &id in &sel {
+            assert!(avail.contains(&id), "{spec}: unavailable client {id}");
+            let p = plan.get(id).unwrap_or_else(|| panic!("{spec}: member {id} without a plan"));
+            assert!(
+                (1..=defaults.local_epochs).contains(&p.local_epochs),
+                "{spec}: epochs {} outside [1, {}]",
+                p.local_epochs,
+                defaults.local_epochs
+            );
+            assert!(p.deadline_ms > 0, "{spec}: zero deadline");
+            assert!(
+                p.compression.topk_frac > 0.0 && p.compression.topk_frac <= 1.0,
+                "{spec}: topk {}",
+                p.compression.topk_frac
+            );
         }
     });
 }
