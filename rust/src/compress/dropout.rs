@@ -8,7 +8,13 @@ use crate::util::rng::Rng;
 /// Deterministic kept-coordinate set for (len, keep_frac, seed).
 /// Sorted ascending.
 pub fn dropout_mask_indices(len: usize, keep_frac: f32, seed: u64) -> Vec<u32> {
-    assert!((0.0..=1.0).contains(&keep_frac));
+    // callers validate the wire-carried fraction; clamp (NaN → 1.0)
+    // instead of asserting so a bad value can never panic this path
+    let keep_frac = if keep_frac.is_nan() {
+        1.0
+    } else {
+        keep_frac.clamp(0.0, 1.0)
+    };
     if keep_frac >= 1.0 || len == 0 {
         // len == 0: nothing to keep — the old `.clamp(1, 0)` panicked
         return (0..len as u32).collect();
@@ -36,15 +42,22 @@ impl DropoutMask {
     }
 
     /// Gather the kept coordinates of `dense`.
+    ///
+    /// Callers pass a `dense` of length `dense_len`; `generate` only
+    /// emits indices `< dense_len`, so the indexing is infallible.
     pub fn gather(&self, dense: &[f32]) -> Vec<f32> {
+        // lint:allow(panic_safety) kept indices are < dense_len by construction (generate samples in 0..dense_len)
         self.kept.iter().map(|&i| dense[i as usize]).collect()
     }
 
     /// Scatter `vals` back into a zero vector of the dense length.
+    /// `vals` must be a `gather` result for this mask.
     pub fn scatter(&self, vals: &[f32]) -> Vec<f32> {
+        // lint:allow(panic_safety) local-only helper (compress-side + tests); arity is the gather contract, not wire input
         assert_eq!(vals.len(), self.kept.len());
         let mut out = vec![0f32; self.dense_len];
         for (&i, &v) in self.kept.iter().zip(vals) {
+            // lint:allow(panic_safety) kept indices are < dense_len by construction
             out[i as usize] = v;
         }
         out
@@ -52,6 +65,7 @@ impl DropoutMask {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests may panic freely
 mod tests {
     use super::*;
 

@@ -37,6 +37,12 @@
 //! on duplicates cannot be reproduced by a fold, so such updates are
 //! refused rather than silently aggregated differently).
 
+// Wire-reachable tree: corrupt payloads must produce an `Err`, never a
+// panic. `fedhpc-lint` enforces the wider panic-safety rule (indexing,
+// assert!, unreachable!); these attributes make the unwrap/expect
+// subclass unwriteable even under plain clippy.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 mod dropout;
 mod quantize;
 mod sparsify;
@@ -152,6 +158,7 @@ impl<'a> ValSlice<'a> {
     fn for_each_range(&self, lo: usize, hi: usize, mut f: impl FnMut(usize, f32)) {
         match self {
             ValSlice::F32(v) => {
+                // lint:allow(panic_safety) callers pass lo <= hi <= self.len(), validated by the from_parts_* constructors
                 for (i, &x) in v[lo..hi].iter().enumerate() {
                     f(lo + i, x);
                 }
@@ -162,11 +169,13 @@ impl<'a> ValSlice<'a> {
                 }
             }
             ValSlice::Q8 { v, scale } => {
+                // lint:allow(panic_safety) callers pass lo <= hi <= self.len(), validated by the from_parts_* constructors
                 for (i, &x) in v[lo..hi].iter().enumerate() {
                     f(lo + i, x as f32 * scale);
                 }
             }
             ValSlice::Q16 { v, scale } => {
+                // lint:allow(panic_safety) callers pass lo <= hi <= self.len(), validated by the from_parts_* constructors
                 for (i, &x) in v[lo..hi].iter().enumerate() {
                     f(lo + i, x as f32 * scale);
                 }
@@ -199,6 +208,7 @@ impl<'a> IdxSlice<'a> {
     #[inline]
     fn get(&self, i: usize) -> u32 {
         match self {
+            // lint:allow(panic_safety) every caller iterates j in 0..self.len(); arity is constructor-validated
             IdxSlice::U32(v) => v[i],
             IdxSlice::U32Le(v) => u32_le_at(v, i),
         }
@@ -321,6 +331,7 @@ impl<'a> DecodedView<'a> {
         // once indices strictly increase, only the last needs a bounds
         // check
         let increasing = match idx {
+            // lint:allow(panic_safety) windows(2) yields exactly-2-element slices
             IdxSlice::U32(v) => v.windows(2).all(|w| w[0] < w[1]),
             IdxSlice::U32Le(raw) => (1..len).all(|j| u32_le_at(raw, j - 1) < u32_le_at(raw, j)),
         };
@@ -398,6 +409,7 @@ impl<'a> DecodedView<'a> {
                 vals.for_each_range(0, vals.len(), |j, v| f(idx.get(j) as usize, v))
             }
             ViewKind::Kept { kept, vals } => {
+                // lint:allow(panic_safety) from_parts_masked validated vals.len() == kept.len()
                 vals.for_each_range(0, vals.len(), |j, v| f(kept[j] as usize, v))
             }
         }
@@ -410,12 +422,15 @@ impl<'a> DecodedView<'a> {
     /// [`crate::util::scratch::ScratchPool`] buffer to avoid the
     /// per-update allocation.
     pub fn write_dense(&self, out: &mut [f32]) {
+        // lint:allow(panic_safety) caller-contract arity (scratch buffers sized to dense_len), not wire input
         assert_eq!(out.len(), self.n, "write_dense length mismatch");
         match &self.kind {
             ViewKind::Dense(ValSlice::F32(v)) => out.copy_from_slice(v),
+            // lint:allow(panic_safety) stored index < n validated by the from_parts_* constructors; out.len() == n asserted above
             ViewKind::Dense(vals) => vals.for_each_range(0, vals.len(), |i, v| out[i] = v),
             _ => {
                 out.fill(0.0);
+                // lint:allow(panic_safety) stored index < n validated by the from_parts_* constructors; out.len() == n asserted above
                 self.for_each_nonzero(|i, v| out[i] = v);
             }
         }
@@ -428,11 +443,13 @@ impl<'a> DecodedView<'a> {
     /// thread count — the same argument as the dense fold in
     /// `orchestrator::aggregate`).
     pub fn fold_scaled_into(&self, acc: &mut [f64], w: f64) {
+        // lint:allow(panic_safety) caller-contract arity (accumulators sized to dense_len), not wire input
         assert_eq!(acc.len(), self.n, "fold_scaled_into length mismatch");
         match &self.kind {
             ViewKind::Dense(vals) => {
                 crate::util::parallel::par_chunks_mut(acc, FOLD_CHUNK, |offset, chunk| {
                     vals.for_each_range(offset, offset + chunk.len(), |i, v| {
+                        // lint:allow(panic_safety) for_each_range yields i in offset..offset+chunk.len()
                         chunk[i - offset] += w * v as f64;
                     });
                 });
@@ -440,6 +457,7 @@ impl<'a> DecodedView<'a> {
             ViewKind::Indexed { idx, vals } => {
                 if idx.len() < PAR_MIN_NNZ {
                     vals.for_each_range(0, vals.len(), |j, v| {
+                        // lint:allow(panic_safety) indices < n validated by from_parts_indexed; acc.len() == n asserted above
                         acc[idx.get(j) as usize] += w * v as f64;
                     });
                 } else {
@@ -450,6 +468,7 @@ impl<'a> DecodedView<'a> {
                         let lo = idx.lower_bound(offset as u32);
                         let hi = idx.lower_bound((offset + chunk.len()) as u32);
                         vals.for_each_range(lo, hi, |j, v| {
+                            // lint:allow(panic_safety) lower_bound brackets the chunk's index subrange; indices validated < n
                             chunk[idx.get(j) as usize - offset] += w * v as f64;
                         });
                     });
@@ -458,6 +477,7 @@ impl<'a> DecodedView<'a> {
             ViewKind::Kept { kept, vals } => {
                 if kept.len() < PAR_MIN_NNZ {
                     vals.for_each_range(0, vals.len(), |j, v| {
+                        // lint:allow(panic_safety) kept indices < n by mask construction; arity validated by from_parts_masked
                         acc[kept[j] as usize] += w * v as f64;
                     });
                 } else {
@@ -466,6 +486,7 @@ impl<'a> DecodedView<'a> {
                         let lo = kept.partition_point(|&i| (i as usize) < offset);
                         let hi = kept.partition_point(|&i| (i as usize) < offset + chunk.len());
                         vals.for_each_range(lo, hi, |j, v| {
+                            // lint:allow(panic_safety) partition_point brackets the chunk's index subrange; kept indices < n
                             chunk[kept[j] as usize - offset] += w * v as f64;
                         });
                     });
@@ -493,6 +514,7 @@ pub fn compress(update: &[f32], cfg: &CompressionConfig, mask_seed: u64) -> Enco
     // 1. federated dropout: keep a seeded coordinate subset
     let dropped: Option<(Vec<u32>, Vec<f32>)> = if cfg.dropout_keep < 1.0 {
         let keep = dropout_mask_indices(update.len(), cfg.dropout_keep, mask_seed);
+        // lint:allow(panic_safety) mask indices are < update.len() by construction
         let vals = keep.iter().map(|&i| update[i as usize]).collect();
         Some((keep, vals))
     } else {
@@ -505,6 +527,7 @@ pub fn compress(update: &[f32], cfg: &CompressionConfig, mask_seed: u64) -> Enco
             Some((idx, vals)) => {
                 let k = k_of(vals.len(), cfg.topk_frac);
                 let s = sparsify_topk(vals, k);
+                // lint:allow(panic_safety) top-k positions index the kept-vals vector they were selected from
                 let gidx: Vec<u32> = s.idx.iter().map(|&i| idx[i as usize]).collect();
                 Some((gidx, s.val))
             }
@@ -580,6 +603,7 @@ pub fn decompress(enc: &Encoded, n: usize) -> Result<Vec<f32>> {
                 if i >= n {
                     bail!("sparse index {i} out of bounds {n}");
                 }
+                // lint:allow(panic_safety) bounds-checked against n just above
                 out[i] = v;
             }
             Ok(out)
@@ -595,6 +619,7 @@ pub fn decompress(enc: &Encoded, n: usize) -> Result<Vec<f32>> {
                 if i >= n {
                     bail!("qsparse index {i} out of bounds {n}");
                 }
+                // lint:allow(panic_safety) bounds-checked against n just above
                 out[i] = v;
             }
             Ok(out)
@@ -628,6 +653,7 @@ pub fn decompress(enc: &Encoded, n: usize) -> Result<Vec<f32>> {
             }
             let mut out = vec![0f32; n];
             for (&i, v) in kept.iter().zip(vals) {
+                // lint:allow(panic_safety) mask indices are < n by construction (regenerated locally, not wire data)
                 out[i as usize] = v;
             }
             Ok(out)
@@ -737,6 +763,7 @@ impl CompressionStats {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests may panic freely
 mod tests {
     use super::*;
     use crate::util::rng::Rng;

@@ -89,6 +89,7 @@ pub fn quantize(g: &[f32], bits: QuantBits) -> Quantized {
         QuantBits::B8 => {
             let mut out = vec![0i8; g.len()];
             crate::util::parallel::par_chunks_mut(&mut out, MIN_CHUNK, |offset, chunk| {
+                // lint:allow(panic_safety) out.len() == g.len(), so every chunk subrange is in bounds
                 let src = &g[offset..offset + chunk.len()];
                 for (o, &x) in chunk.iter_mut().zip(src) {
                     *o = (x / scale).round_ties_even().clamp(-qmax, qmax) as i8;
@@ -99,6 +100,7 @@ pub fn quantize(g: &[f32], bits: QuantBits) -> Quantized {
         QuantBits::B16 => {
             let mut out = vec![0i16; g.len()];
             crate::util::parallel::par_chunks_mut(&mut out, MIN_CHUNK, |offset, chunk| {
+                // lint:allow(panic_safety) out.len() == g.len(), so every chunk subrange is in bounds
                 let src = &g[offset..offset + chunk.len()];
                 for (o, &x) in chunk.iter_mut().zip(src) {
                     *o = (x / scale).round_ties_even().clamp(-qmax, qmax) as i16;
@@ -123,6 +125,7 @@ pub fn dequantize(q: &Quantized) -> Vec<f32> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests may panic freely
 mod tests {
     use super::*;
     use crate::util::rng::Rng;

@@ -51,6 +51,7 @@ pub fn sparsify_topk(g: &[f32], k: usize) -> Sparse {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests may panic freely
 mod tests {
     use super::*;
     use crate::util::rng::Rng;

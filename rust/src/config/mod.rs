@@ -379,6 +379,10 @@ pub enum WeightScheme {
 }
 
 impl WeightScheme {
+    /// Parseable scheme names, in `parse` order (registry-completeness
+    /// contract: every arm here, in `fedhpc list`, and in README).
+    pub const KINDS: &'static [&'static str] = &["data_size", "inverse_loss", "inverse_variance"];
+
     pub fn name(&self) -> &'static str {
         match self {
             WeightScheme::DataSize => "data_size",

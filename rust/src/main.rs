@@ -327,6 +327,10 @@ fn cmd_list() -> Result<()> {
         fedhpc::orchestrator::planner::planner_names().join(", ")
     );
     println!(
+        "weight schemes (weighted[:scheme]): {}",
+        fedhpc::config::WeightScheme::KINDS.join(", ")
+    );
+    println!(
         "round modes: {} (async: async_fedbuff[:buffer_k[:alpha[:max_staleness]]], \
          staleness fns: {})",
         fedhpc::config::RoundMode::KINDS.join(", "),

@@ -73,12 +73,15 @@ impl<T> ShapedReceiver<T> {
             self.drain_channel();
             let now = Instant::now();
             if let Some(Reverse((due, _, _))) = self.pending.peek() {
-                if *due <= now {
-                    let Reverse((_, _, slot)) = self.pending.pop().unwrap();
-                    return Some(slot.0);
+                let due = *due;
+                if due <= now {
+                    if let Some(Reverse((_, _, slot))) = self.pending.pop() {
+                        return Some(slot.0);
+                    }
+                    continue;
                 }
                 // wait until the earliest of: message due, caller deadline
-                let wait = (*due).min(deadline).saturating_duration_since(now);
+                let wait = due.min(deadline).saturating_duration_since(now);
                 if wait.is_zero() && deadline <= now {
                     return None;
                 }
@@ -140,8 +143,8 @@ impl InprocHub {
     /// Register a client with its link shaper; returns its endpoint.
     pub fn add_client(&self, id: NodeId, shaper: LinkShaper) -> InprocClient {
         let (tx, rx) = channel();
-        self.client_txs.lock().unwrap().insert(id, tx);
-        self.shapers.lock().unwrap().insert(id, shaper);
+        crate::util::lock_unpoisoned(&self.client_txs).insert(id, tx);
+        crate::util::lock_unpoisoned(&self.shapers).insert(id, shaper);
         InprocClient {
             id,
             shaper,
@@ -179,15 +182,12 @@ impl ServerTransport for InprocServer {
         // Arc of the round's serialized model instead of the O(P)
         // parameter vector, so all k sends share one buffer.
         let bytes = msg.wire_bytes();
-        let shaper = self
-            .shapers
-            .lock()
-            .unwrap()
+        let shaper = crate::util::lock_unpoisoned(&self.shapers)
             .get(&to)
             .copied()
             .unwrap_or_else(LinkShaper::unshaped);
         self.traffic.record_down(round_of(msg), bytes);
-        let mut s = self.seq.lock().unwrap();
+        let mut s = crate::util::lock_unpoisoned(&self.seq);
         *s += 1;
         let seq = *s;
         drop(s);
@@ -196,9 +196,7 @@ impl ServerTransport for InprocServer {
             seq,
             payload: msg.clone(),
         };
-        self.client_txs
-            .lock()
-            .unwrap()
+        crate::util::lock_unpoisoned(&self.client_txs)
             .get(&to)
             .ok_or_else(|| anyhow!("inproc: unknown client {to}"))?
             .send(env)
@@ -206,11 +204,14 @@ impl ServerTransport for InprocServer {
     }
 
     fn recv_timeout(&self, timeout: Duration) -> Result<Option<(NodeId, Msg)>> {
-        Ok(self.rx.lock().unwrap().recv_timeout(timeout))
+        Ok(crate::util::lock_unpoisoned(&self.rx).recv_timeout(timeout))
     }
 
     fn connected(&self) -> Vec<NodeId> {
-        let mut v: Vec<NodeId> = self.client_txs.lock().unwrap().keys().copied().collect();
+        let mut v: Vec<NodeId> = crate::util::lock_unpoisoned(&self.client_txs)
+            .keys()
+            .copied()
+            .collect();
         v.sort_unstable();
         v
     }
@@ -229,7 +230,7 @@ impl ClientTransport for InprocClient {
     fn send(&self, msg: &Msg) -> Result<()> {
         let bytes = msg.wire_bytes();
         self.traffic.record_up(round_of(msg), bytes);
-        let mut s = self.seq.lock().unwrap();
+        let mut s = crate::util::lock_unpoisoned(&self.seq);
         *s += 1;
         let seq = *s;
         drop(s);
@@ -244,7 +245,7 @@ impl ClientTransport for InprocClient {
     }
 
     fn recv_timeout(&self, timeout: Duration) -> Result<Option<Msg>> {
-        Ok(self.rx.lock().unwrap().recv_timeout(timeout))
+        Ok(crate::util::lock_unpoisoned(&self.rx).recv_timeout(timeout))
     }
 
     fn id(&self) -> NodeId {
@@ -253,6 +254,7 @@ impl ClientTransport for InprocClient {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests may panic freely
 mod tests {
     use super::*;
 

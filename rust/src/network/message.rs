@@ -271,6 +271,7 @@ impl Msg {
             compression,
         } = self
         else {
+            // lint:allow(panic_safety) encode-side only: private helper, both callers match RoundStart first; no wire input reaches it
             unreachable!("encode_round_start_header on {}", self.name());
         };
         w.u32(*round);
@@ -570,6 +571,7 @@ fn decode_encoded(r: &mut Reader) -> Result<Encoded> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests may panic freely
 mod tests {
     use super::*;
     use crate::compress::compress;

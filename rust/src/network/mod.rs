@@ -10,6 +10,12 @@
 //! * [`shaper`] — per-link bandwidth/latency shaping + byte accounting,
 //!   applied uniformly to either transport.
 
+// Wire-reachable tree: a hostile or corrupt peer must produce an `Err`,
+// never a panic. `fedhpc-lint` enforces the wider panic-safety rule
+// (indexing, assert!, unreachable!); these attributes make the
+// unwrap/expect subclass unwriteable even under plain clippy.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod inproc;
 pub mod message;
 pub mod shaper;

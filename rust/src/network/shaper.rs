@@ -75,22 +75,20 @@ impl TrafficLog {
     }
 
     pub fn record_down(&self, round: u32, bytes: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = crate::util::lock_unpoisoned(&self.inner);
         g.per_round.entry(round).or_default().0 += bytes;
         g.total_down += bytes;
     }
 
     pub fn record_up(&self, round: u32, bytes: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = crate::util::lock_unpoisoned(&self.inner);
         g.per_round.entry(round).or_default().1 += bytes;
         g.total_up += bytes;
     }
 
     /// (down, up) bytes for a round.
     pub fn round(&self, round: u32) -> (u64, u64) {
-        self.inner
-            .lock()
-            .unwrap()
+        crate::util::lock_unpoisoned(&self.inner)
             .per_round
             .get(&round)
             .copied()
@@ -98,15 +96,13 @@ impl TrafficLog {
     }
 
     pub fn totals(&self) -> (u64, u64) {
-        let g = self.inner.lock().unwrap();
+        let g = crate::util::lock_unpoisoned(&self.inner);
         (g.total_down, g.total_up)
     }
 
     /// All rounds in order: (round, down, up).
     pub fn rounds(&self) -> Vec<(u32, u64, u64)> {
-        self.inner
-            .lock()
-            .unwrap()
+        crate::util::lock_unpoisoned(&self.inner)
             .per_round
             .iter()
             .map(|(&r, &(d, u))| (r, d, u))
@@ -115,6 +111,7 @@ impl TrafficLog {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests may panic freely
 mod tests {
     use super::*;
 

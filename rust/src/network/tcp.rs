@@ -98,7 +98,7 @@ impl TcpServer {
                                 }
                             };
                             if let Ok(w) = stream.try_clone() {
-                                peers.lock().unwrap().insert(id, w);
+                                crate::util::lock_unpoisoned(&peers).insert(id, w);
                             }
                             if tx.send((id, msg)).is_err() {
                                 return;
@@ -119,7 +119,7 @@ impl TcpServer {
                                     Err(_) => break, // peer closed
                                 }
                             }
-                            peers.lock().unwrap().remove(&id);
+                            crate::util::lock_unpoisoned(&peers).remove(&id);
                         })
                         .ok();
                 }
@@ -141,7 +141,7 @@ impl ServerTransport for TcpServer {
         let (head, shared) = msg.encode_split();
         let total = head.len() + shared.as_ref().map_or(0, |p| p.len());
         self.traffic.record_down(super::round_of(msg), total as u64);
-        let mut peers = self.peers.lock().unwrap();
+        let mut peers = crate::util::lock_unpoisoned(&self.peers);
         let stream = peers
             .get_mut(&to)
             .ok_or_else(|| anyhow!("tcp: client {to} not connected"))?;
@@ -152,7 +152,7 @@ impl ServerTransport for TcpServer {
     }
 
     fn recv_timeout(&self, timeout: Duration) -> Result<Option<(NodeId, Msg)>> {
-        match self.rx.lock().unwrap().recv_timeout(timeout) {
+        match crate::util::lock_unpoisoned(&self.rx).recv_timeout(timeout) {
             Ok(v) => Ok(Some(v)),
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Ok(None),
@@ -160,7 +160,10 @@ impl ServerTransport for TcpServer {
     }
 
     fn connected(&self) -> Vec<NodeId> {
-        let mut v: Vec<NodeId> = self.peers.lock().unwrap().keys().copied().collect();
+        let mut v: Vec<NodeId> = crate::util::lock_unpoisoned(&self.peers)
+            .keys()
+            .copied()
+            .collect();
         v.sort_unstable();
         v
     }
@@ -238,11 +241,11 @@ impl ClientTransport for TcpClient {
         if !delay.is_zero() {
             std::thread::sleep(delay);
         }
-        write_frame(&mut self.writer.lock().unwrap(), &payload)
+        write_frame(&mut crate::util::lock_unpoisoned(&self.writer), &payload)
     }
 
     fn recv_timeout(&self, timeout: Duration) -> Result<Option<Msg>> {
-        match self.rx.lock().unwrap().recv_timeout(timeout) {
+        match crate::util::lock_unpoisoned(&self.rx).recv_timeout(timeout) {
             Ok(v) => Ok(Some(v)),
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Ok(None),
@@ -255,6 +258,7 @@ impl ClientTransport for TcpClient {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests may panic freely
 mod tests {
     use super::*;
     use crate::network::message::ClientProfile;

@@ -53,7 +53,7 @@ use crate::cluster::NodeId;
 use crate::config::{CompressionConfig, PlannerKind, SelectionConfig};
 use crate::util::rng::Rng;
 use anyhow::Result;
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Per-client dispatch terms for one round. These are exactly the
 /// `Msg::RoundStart` fields a planner may vary per client; everything
@@ -138,8 +138,9 @@ impl RoundPlan {
     }
 
     /// The plan as a by-client lookup table (what the async engines
-    /// keep for per-report re-dispatch).
-    pub fn to_map(&self) -> HashMap<NodeId, DispatchPlan> {
+    /// keep for per-report re-dispatch). `BTreeMap` so iterating the
+    /// table is NodeId-ordered — re-dispatch sweeps stay deterministic.
+    pub fn to_map(&self) -> BTreeMap<NodeId, DispatchPlan> {
         self.iter().map(|(c, p)| (c, *p)).collect()
     }
 
@@ -218,7 +219,7 @@ impl CohortPlanner for RandomPlanner {
 
 /// Score-based selection with an exploration floor and straggler
 /// benching — the historical adaptive policy behind the trait, with
-/// the O(k²) `Vec::contains` scans replaced by a `HashSet` (the same
+/// the O(k²) `Vec::contains` scans replaced by a `BTreeSet` (the same
 /// smell PR 1 fixed in round collection; pure lookup change, cohort
 /// order is untouched).
 pub struct AdaptivePlanner {
@@ -302,7 +303,7 @@ impl CohortPlanner for AdaptivePlanner {
             .collect();
         scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
         let mut selected: Vec<NodeId> = scored.iter().take(n_exploit).map(|&(_, id)| id).collect();
-        let mut chosen: HashSet<NodeId> = selected.iter().copied().collect();
+        let mut chosen: BTreeSet<NodeId> = selected.iter().copied().collect();
 
         // explore: uniform among the rest
         let rest: Vec<NodeId> = pool
@@ -340,8 +341,8 @@ impl CohortPlanner for AdaptivePlanner {
 /// divisor (its EWMA never saw the new budget either).
 #[derive(Debug, Default)]
 struct EpochLedger {
-    dispatched: HashMap<NodeId, u32>,
-    observed: HashMap<NodeId, u32>,
+    dispatched: BTreeMap<NodeId, u32>,
+    observed: BTreeMap<NodeId, u32>,
 }
 
 impl EpochLedger {
@@ -1020,6 +1021,37 @@ mod tests {
                 &mut Rng::new(9),
             );
             assert_eq!(a, b, "{spec}: same seed must give same cohort and plans");
+        }
+    }
+
+    /// Regression for the HashMap/HashSet → BTree conversion: two
+    /// identically-seeded multi-round runs must emit identical cohorts
+    /// in identical dispatch order (stateful planners included), and
+    /// the re-dispatch lookup table must iterate NodeId-ordered —
+    /// nothing left depends on hasher seeds.
+    #[test]
+    fn run_twice_cohorts_and_plan_maps_are_identical() {
+        for spec in ["random", "adaptive", "tiered:3", "deadline:900"] {
+            let run = || {
+                let (mut reg, avail) = heterogeneous_registry(40, 11);
+                let mut planner = planner_by_name(spec).unwrap();
+                let mut rng = Rng::new(77);
+                let mut cohorts: Vec<Vec<NodeId>> = Vec::new();
+                for round in 0..5 {
+                    let plan = planner.plan(&mut reg, &avail, &ctx(round, 12), &mut rng);
+                    let map = plan.to_map();
+                    let keys: Vec<NodeId> = map.keys().copied().collect();
+                    let mut sorted = keys.clone();
+                    sorted.sort_unstable();
+                    assert_eq!(keys, sorted, "{spec}: to_map must iterate NodeId-ordered");
+                    for (c, p) in plan.iter() {
+                        assert_eq!(map.get(&c), Some(p), "{spec}: map/plan disagree for {c}");
+                    }
+                    cohorts.push(plan.cohort().to_vec());
+                }
+                cohorts
+            };
+            assert_eq!(run(), run(), "{spec}: run-twice cohort sequences diverged");
         }
     }
 

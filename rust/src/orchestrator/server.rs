@@ -71,7 +71,7 @@ use crate::runtime::{EvalOut, ModelRuntime};
 use crate::util::rng::Rng;
 use crate::util::scratch::ScratchPool;
 use anyhow::{anyhow, bail, Result};
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -284,7 +284,7 @@ struct CollectOutcome {
     /// Clients the broadcast actually reached (send succeeded).
     reached: Vec<NodeId>,
     /// Clients that reported (good or bad update) before cutoff.
-    reported: HashSet<NodeId>,
+    reported: BTreeSet<NodeId>,
 }
 
 impl<T: ServerTransport> Orchestrator<T> {
@@ -445,8 +445,8 @@ impl<T: ServerTransport> Orchestrator<T> {
             .unwrap_or(usize::MAX)
             .min(reached.len());
         let deadline = t_round + Duration::from_millis(deadline_ms);
-        let reached_set: HashSet<NodeId> = reached.iter().copied().collect();
-        let mut reported: HashSet<NodeId> = HashSet::with_capacity(reached.len());
+        let reached_set: BTreeSet<NodeId> = reached.iter().copied().collect();
+        let mut reported: BTreeSet<NodeId> = BTreeSet::new();
         while reported.len() < reached.len() && agg.n_updates() < partial_k {
             let now = Instant::now();
             if now >= deadline {
@@ -527,7 +527,7 @@ impl<T: ServerTransport> Orchestrator<T> {
         // fault accounting: a reached client that never reported is a
         // deadline miss; every selected non-reporter (including failed
         // broadcasts) feeds the registry's reliability signal
-        let reached_set: HashSet<NodeId> = reached.iter().copied().collect();
+        let reached_set: BTreeSet<NodeId> = reached.iter().copied().collect();
         let mut deadline_misses = 0u32;
         for &c in selected {
             if !reported.contains(&c) {
@@ -754,15 +754,17 @@ impl<T: ServerTransport> Orchestrator<T> {
         // client for the whole run (every re-dispatch reuses them).
         let launch_plan = self.select_phase(0)?;
         hooks.on_round_start(0, launch_plan.cohort());
-        let plans: HashMap<NodeId, DispatchPlan> = launch_plan.to_map();
+        let plans: BTreeMap<NodeId, DispatchPlan> = launch_plan.to_map();
         let cohort: Vec<NodeId> = launch_plan.cohort().to_vec();
         let mut shared = Encoded::PreEncoded(pre_encode_dense(&self.params));
         let mut dispatch_no: u64 = 0;
-        let mut in_flight: HashSet<NodeId> = HashSet::with_capacity(cohort.len());
+        // BTree keeps the stalled-client sweep below NodeId-ordered, so
+        // re-dispatch order is a function of state, not hasher seed
+        let mut in_flight: BTreeSet<NodeId> = BTreeSet::new();
         // when each in-flight client last got a dispatch — non-reporting
         // clients (crashes, injected dropouts) are re-dispatched after a
         // deadline so their concurrency slot is never lost for good
-        let mut last_dispatch: HashMap<NodeId, Instant> = HashMap::with_capacity(cohort.len());
+        let mut last_dispatch: BTreeMap<NodeId, Instant> = BTreeMap::new();
         for (c, p) in launch_plan.iter() {
             match self.dispatch_async(c, dispatch_no, &shared, *p) {
                 Ok(()) => {

@@ -12,6 +12,15 @@ pub mod parallel;
 pub mod rng;
 pub mod scratch;
 
+/// Lock a mutex, recovering the guard even if a previous holder
+/// panicked. Every protected structure in this codebase is valid after
+/// any partial mutation (queues, counters, logs), so continuing with
+/// the poisoned state is strictly better than cascading the panic into
+/// wire-facing threads.
+pub fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// FNV-1a over the exact bit patterns of an f32 slice — the model
 /// fingerprint the deterministic-replay tests pin ("same seed ⇒ same
 /// final model hash"). Bit-level: distinguishes `-0.0` from `0.0` and

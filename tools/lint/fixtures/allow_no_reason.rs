@@ -1,0 +1,12 @@
+// Known-bad fixture for the lint_allow rule: an escape comment without
+// a reason is itself a violation and suppresses nothing.
+
+fn decode(buf: &[u8]) -> u8 {
+    // lint:allow(panic_safety)
+    buf[0]
+}
+
+fn other(buf: &[u8]) -> u8 {
+    // lint:allow(made_up_rule) a reason that cannot save an unknown rule
+    buf[1]
+}

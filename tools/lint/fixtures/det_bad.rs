@@ -1,0 +1,18 @@
+// Known-bad fixture for the determinism rule: hash-ordered collections
+// and ambient time/entropy in a cohort-order-critical module.
+
+use std::collections::HashMap;
+use std::collections::HashSet;
+use std::time::Instant;
+
+fn plan(ids: &[u32]) -> Vec<u32> {
+    let mut chosen: HashSet<u32> = HashSet::new();
+    let scores: HashMap<u32, f64> = HashMap::new();
+    let t = Instant::now();
+    let wall = std::time::SystemTime::now();
+    let _ = (t, wall, scores);
+    for &id in ids {
+        chosen.insert(id);
+    }
+    chosen.into_iter().collect()
+}

@@ -1,0 +1,17 @@
+// Known-good fixture for the determinism rule: ordered collections and
+// seeded randomness only. Zero findings expected.
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+
+fn plan(ids: &[u32], seed: u64) -> Vec<u32> {
+    let mut chosen: BTreeSet<u32> = BTreeSet::new();
+    let scores: BTreeMap<u32, f64> = BTreeMap::new();
+    let _ = (scores, seed); // a seeded Rng would be constructed here
+    for &id in ids {
+        chosen.insert(id);
+    }
+    let mut out: Vec<u32> = chosen.into_iter().collect();
+    out.sort_unstable();
+    out
+}

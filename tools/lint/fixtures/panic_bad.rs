@@ -1,0 +1,18 @@
+// Known-bad fixture for the panic_safety rule: every construct below
+// must be flagged when scanned as a wire-reachable module.
+
+fn decode(buf: &[u8], opt: Option<u32>) -> u32 {
+    let tag = buf[0]; // indexing
+    let head = &buf[..4]; // range slice
+    let v = opt.unwrap(); // unwrap
+    let w = opt.expect("missing"); // expect
+    assert!(tag < 7); // assert!
+    assert_eq!(v, w); // assert_eq!
+    if tag == 5 {
+        panic!("bad tag"); // panic!
+    }
+    match tag {
+        0 => v,
+        _ => unreachable!(), // unreachable!
+    }
+}

@@ -1,0 +1,27 @@
+// Known-good fixture for the panic_safety rule: fallible decode done
+// right, plus every legitimate escape the rule recognises. Zero
+// unallowed findings expected.
+
+fn decode(buf: &[u8], opt: Option<u32>) -> Result<u32, String> {
+    let tag = *buf.first().ok_or("empty buffer")?; // get, not index
+    let all = &buf[..]; // full-range slice is infallible
+    let v = opt.ok_or("missing")?;
+    debug_assert!(tag < 7); // compiled out in release: not flagged
+    // the token inside a string is data, not code:
+    let s = "never .unwrap() here";
+    // lint:allow(panic_safety) tag already validated against the frame header above
+    let first = buf[0];
+    let _ = (all, s, first);
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_panic_freely() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+        let b = [1u8, 2];
+        assert!(b[1] == 2);
+    }
+}

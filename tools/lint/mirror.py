@@ -1,0 +1,520 @@
+#!/usr/bin/env python3
+"""Python mirror of fedhpc-lint (tools/lint/src/lib.rs).
+
+The dev container for this repo has no Rust toolchain; CI builds and
+runs the Rust binary, but locally this mirror lets you check a change
+without cargo:
+
+    python3 tools/lint/mirror.py [--deny] [--root .] [--report LINT_report.json]
+
+The Rust implementation is authoritative. The two implementations share
+one detector spec (documented in tools/lint/src/lib.rs); if they ever
+disagree, fix the mirror to match the Rust tool.
+"""
+
+import json
+import os
+import sys
+
+IDENT = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_")
+
+PANIC_SCOPE = [
+    "network/",
+    "compress/",
+    "orchestrator/server.rs",
+    "client/worker.rs",
+    "util/logging.rs",
+]
+DET_SCOPE = [
+    "orchestrator/planner.rs",
+    "orchestrator/aggregate.rs",
+    "orchestrator/strategy/",
+    "sim/",
+    "experiments/simrunner.rs",
+]
+PANIC_TOKENS = [".unwrap()", ".expect("]
+PANIC_MACROS = ["panic!", "unreachable!", "todo!", "unimplemented!",
+                "assert!(", "assert_eq!", "assert_ne!"]
+DET_TOKENS = ["Instant::now", "SystemTime::now", "thread_rng",
+              "from_entropy", "rand::random"]
+DET_TYPES = ["HashMap", "HashSet"]
+REGISTRY_GROUPS = [
+    ("Aggregation", "aggregation"),
+    ("ServerOptKind", "server_opt"),
+    ("PlannerKind", "planner"),
+    ("RoundMode", "round_mode"),
+    ("StalenessFn", "staleness"),
+    ("WeightScheme", "weight_scheme"),
+]
+# Parse-only aliases: accepted by the grammar, intentionally not listed.
+REGISTRY_ALIASES = ["none"]
+MAIN_TOKENS = ["strategy_names()", "server_opt_names()", "planner_names()",
+               "RoundMode::KINDS", "StalenessFn::KINDS", "WeightScheme::KINDS"]
+
+
+def strip_source(src, keep_strings=False):
+    """Remove comments (and string/char literals unless keep_strings).
+
+    Returns (code_lines, comments) where comments is a list of
+    (1-based line, text) — block comments are flushed per line.
+    """
+    chars = list(src)
+    n = len(chars)
+    code_lines, comments = [], []
+    cur, comment_buf = [], []
+    line_no = 1
+    mode = "normal"  # normal | line | block | str | rawstr
+    block_depth = 0
+    raw_hashes = 0
+    i = 0
+    while i < n:
+        c = chars[i]
+        if c == "\n":
+            if mode == "line":
+                comments.append((line_no, "".join(comment_buf)))
+                comment_buf = []
+                mode = "normal"
+            elif mode == "block":
+                comments.append((line_no, "".join(comment_buf)))
+                comment_buf = []
+            code_lines.append("".join(cur))
+            cur = []
+            line_no += 1
+            i += 1
+            continue
+        if mode == "line":
+            comment_buf.append(c)
+            i += 1
+        elif mode == "block":
+            if c == "/" and i + 1 < n and chars[i + 1] == "*":
+                block_depth += 1
+                i += 2
+            elif c == "*" and i + 1 < n and chars[i + 1] == "/":
+                block_depth -= 1
+                i += 2
+                if block_depth == 0:
+                    comments.append((line_no, "".join(comment_buf)))
+                    comment_buf = []
+                    mode = "normal"
+            else:
+                comment_buf.append(c)
+                i += 1
+        elif mode == "str":
+            if c == "\\":
+                if keep_strings:
+                    cur.append(c)
+                    if i + 1 < n and chars[i + 1] != "\n":
+                        cur.append(chars[i + 1])
+                i += 2
+            elif c == '"':
+                if keep_strings:
+                    cur.append(c)
+                mode = "normal"
+                i += 1
+            else:
+                if keep_strings:
+                    cur.append(c)
+                i += 1
+        elif mode == "rawstr":
+            if c == '"' and all(
+                j < n and chars[j] == "#"
+                for j in range(i + 1, i + 1 + raw_hashes)
+            ) and i + raw_hashes < n:
+                if keep_strings:
+                    cur.append('"')
+                mode = "normal"
+                i += 1 + raw_hashes
+            else:
+                if keep_strings:
+                    cur.append(c)
+                i += 1
+        else:  # normal
+            prev_ident = i > 0 and chars[i - 1] in IDENT
+            if c == "/" and i + 1 < n and chars[i + 1] == "/":
+                mode = "line"
+                i += 2
+            elif c == "/" and i + 1 < n and chars[i + 1] == "*":
+                mode = "block"
+                block_depth = 1
+                i += 2
+            elif c == '"':
+                cur.append('"')
+                if not keep_strings:
+                    cur.append('"')
+                mode = "str"
+                i += 1
+            elif c in "rb" and not prev_ident and _raw_start(chars, i):
+                j, h = _raw_start(chars, i)
+                cur.append('"')
+                if not keep_strings:
+                    cur.append('"')
+                mode = "rawstr"
+                raw_hashes = h
+                i = j + 1
+            elif c == "b" and not prev_ident and i + 1 < n and chars[i + 1] == '"':
+                cur.append('"')
+                if not keep_strings:
+                    cur.append('"')
+                mode = "str"
+                i += 2
+            elif c == "b" and not prev_ident and i + 1 < n and chars[i + 1] == "'":
+                i += 1  # byte char literal: defer to the ' handler below
+                cur.append(" ")
+            elif c == "'":
+                if i + 1 < n and chars[i + 1] == "\\":
+                    j = i + 2
+                    while j < n and chars[j] != "'" and chars[j] != "\n":
+                        j += 1
+                    i = j + 1
+                elif i + 2 < n and chars[i + 2] == "'" and chars[i + 1] != "'":
+                    i += 3
+                else:
+                    cur.append(c)  # lifetime
+                    i += 1
+            else:
+                cur.append(c)
+                i += 1
+    if mode == "line" and comment_buf:
+        comments.append((line_no, "".join(comment_buf)))
+    if cur:
+        code_lines.append("".join(cur))
+    return code_lines, comments
+
+
+def _raw_start(chars, i):
+    """If chars[i] begins r"…", r#"…", br#"…", return (index of opening
+    quote, hash count); else None."""
+    n = len(chars)
+    j = i + 1
+    if chars[i] == "b":
+        if j < n and chars[j] == "r":
+            j += 1
+        else:
+            return None
+    h = 0
+    while j < n and chars[j] == "#":
+        h += 1
+        j += 1
+    if j < n and chars[j] == '"':
+        return (j, h)
+    return None
+
+
+def cfg_test_mask(code_lines):
+    """True for every line inside a #[cfg(test)]-gated brace block."""
+    mask = [False] * len(code_lines)
+    armed = False
+    in_exempt = False
+    exempt_depth = 0
+    depth = 0
+    for ln, line in enumerate(code_lines):
+        line_exempt = in_exempt
+        for idx, ch in enumerate(line):
+            if not in_exempt and line.startswith("#[cfg(test)]", idx):
+                armed = True
+            if ch == "{":
+                if armed and not in_exempt:
+                    in_exempt = True
+                    exempt_depth = depth
+                    armed = False
+                    line_exempt = True
+                depth += 1
+            elif ch == "}":
+                depth -= 1
+                if in_exempt and depth == exempt_depth:
+                    in_exempt = False
+                    line_exempt = True
+            elif ch == ";":
+                if armed and not in_exempt:
+                    armed = False
+            if in_exempt:
+                line_exempt = True
+        mask[ln] = line_exempt
+    return mask
+
+
+def token_at(line, i, tok):
+    if not line.startswith(tok, i):
+        return False
+    if i > 0 and line[i - 1] in IDENT:
+        return False
+    return True
+
+
+def word_at(line, i, tok):
+    if not token_at(line, i, tok):
+        return False
+    end = i + len(tok)
+    if end < len(line) and line[end] in IDENT:
+        return False
+    return True
+
+
+def indexing_sites(line):
+    """Positions of panicking `expr[...]` index/slice expressions."""
+    out = []
+    for i, ch in enumerate(line):
+        if ch != "[" or i == 0:
+            continue
+        p = line[i - 1]
+        if p not in IDENT and p not in ")]":
+            continue
+        d = 1
+        j = i + 1
+        while j < len(line) and d > 0:
+            if line[j] == "[":
+                d += 1
+            elif line[j] == "]":
+                d -= 1
+            j += 1
+        inner = line[i + 1:j - 1] if d == 0 else line[i + 1:]
+        if d == 0 and inner.strip() == "..":
+            continue  # full-range slice: infallible
+        out.append(i)
+    return out
+
+
+def parse_allows(comments):
+    """-> (allows {line: set(rule)}, violations for malformed allows)."""
+    allows = {}
+    bad = []
+    for ln, text in comments:
+        k = text.find("lint:allow(")
+        if k < 0:
+            continue
+        rest = text[k + len("lint:allow("):]
+        close = rest.find(")")
+        if close < 0:
+            bad.append((ln, "lint_allow", "malformed lint:allow (no closing paren)"))
+            continue
+        rule = rest[:close].strip()
+        reason = rest[close + 1:].strip()
+        if rule not in ("panic_safety", "determinism"):
+            bad.append((ln, "lint_allow", f"lint:allow of unknown rule '{rule}'"))
+            continue
+        if not reason:
+            bad.append((ln, "lint_allow",
+                        f"lint:allow({rule}) requires a reason"))
+            continue
+        allows.setdefault(ln, set()).add(rule)
+    return allows, bad
+
+
+def scan_snippet(src, panic_scope, det_scope):
+    """-> list of dicts {line, rule, msg, allowed}."""
+    code, comments = strip_source(src)
+    mask = cfg_test_mask(code)
+    allows, bad = parse_allows(comments)
+    out = [
+        {"line": ln, "rule": rule, "msg": msg, "allowed": False}
+        for (ln, rule, msg) in bad
+    ]
+
+    def allowed(ln, rule):
+        return rule in allows.get(ln, ()) or rule in allows.get(ln - 1, ())
+
+    def push(ln, rule, msg):
+        out.append({"line": ln, "rule": rule, "msg": msg,
+                    "allowed": allowed(ln, rule)})
+
+    for idx, line in enumerate(code):
+        ln = idx + 1
+        if mask[idx]:
+            continue
+        if panic_scope:
+            for tok in PANIC_TOKENS:
+                for i in range(len(line)):
+                    if line.startswith(tok, i):
+                        push(ln, "panic_safety", f"`{tok}` on a wire-reachable path")
+            for tok in PANIC_MACROS:
+                for i in range(len(line)):
+                    if token_at(line, i, tok):
+                        push(ln, "panic_safety", f"`{tok.rstrip('(')}` on a wire-reachable path")
+            for _ in indexing_sites(line):
+                push(ln, "panic_safety",
+                     "slice/array indexing can panic (use get()/iterators)")
+        if det_scope:
+            for tok in DET_TYPES:
+                for i in range(len(line)):
+                    if word_at(line, i, tok):
+                        push(ln, "determinism",
+                             f"`{tok}` in a determinism-critical module (use BTreeMap/BTreeSet/sorted Vec)")
+            for tok in DET_TOKENS:
+                for i in range(len(line)):
+                    if token_at(line, i, tok):
+                        push(ln, "determinism",
+                             f"`{tok}` in a determinism-critical module (virtual time / seeded RNG only)")
+    return out
+
+
+def in_scope(rel, scope):
+    return any(rel == s or (s.endswith("/") and rel.startswith(s)) for s in scope)
+
+
+def extract_strings(text):
+    out = []
+    i = 0
+    while i < len(text):
+        if text[i] == '"':
+            j = i + 1
+            buf = []
+            while j < len(text) and text[j] != '"':
+                if text[j] == "\\":
+                    j += 1
+                else:
+                    buf.append(text[j])
+                j += 1
+            out.append("".join(buf))
+            i = j + 1
+        else:
+            i += 1
+    return out
+
+
+def extract_kinds(config_src, impl_name):
+    start = config_src.find(f"impl {impl_name}")
+    if start < 0:
+        return None
+    k = config_src.find("const KINDS", start)
+    if k < 0:
+        return None
+    eq = config_src.find("=", k)
+    open_b = config_src.find("[", eq)
+    close_b = config_src.find("]", open_b)
+    if min(eq, open_b, close_b) < 0:
+        return None
+    return extract_strings(config_src[open_b:close_b])
+
+
+def arm_literals(config_src):
+    code, _ = strip_source(config_src, keep_strings=True)
+    lits = []
+    for line in code:
+        t = line.strip()
+        if not t.startswith('"') or "=>" not in t:
+            continue
+        head = t.split("=>", 1)[0]
+        # only pure `"a" | "b"` patterns
+        residue = head
+        for s in extract_strings(head):
+            residue = residue.replace(f'"{s}"', "", 1)
+        if residue.strip().replace("|", "").strip():
+            continue
+        lits.extend(extract_strings(head))
+    return lits
+
+
+def check_registry(config_src, main_src, readme_src):
+    out = []
+
+    def push(msg):
+        out.append({"line": 0, "rule": "registry", "msg": msg, "allowed": False})
+
+    union = set(REGISTRY_ALIASES)
+    arms = arm_literals(config_src)
+    for impl_name, label in REGISTRY_GROUPS:
+        kinds = extract_kinds(config_src, impl_name)
+        if kinds is None:
+            push(f"{label}: no `impl {impl_name}` KINDS array found in config")
+            continue
+        union.update(kinds)
+        for kind in kinds:
+            if kind not in arms:
+                push(f"{label}: '{kind}' is in KINDS but has no parse arm")
+            if kind not in readme_src:
+                push(f"{label}: '{kind}' is not documented in README.md")
+    for arm in arms:
+        if arm not in union:
+            push(f"config parses '{arm}' but no KINDS registry lists it")
+    for tok in MAIN_TOKENS:
+        if tok not in main_src:
+            push(f"`fedhpc list` (main.rs) does not print {tok}")
+    return out
+
+
+def scan_tree(root):
+    src_root = os.path.join(root, "rust", "src")
+    violations = []
+    files = 0
+    for dirpath, _dirnames, filenames in sorted(os.walk(src_root)):
+        for fname in sorted(filenames):
+            if not fname.endswith(".rs"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, src_root).replace(os.sep, "/")
+            with open(path, encoding="utf-8") as f:
+                src = f.read()
+            files += 1
+            ps = in_scope(rel, PANIC_SCOPE)
+            ds = in_scope(rel, DET_SCOPE)
+            for v in scan_snippet(src, ps, ds):
+                v["file"] = f"rust/src/{rel}"
+                violations.append(v)
+    with open(os.path.join(root, "rust", "src", "config", "mod.rs"),
+              encoding="utf-8") as f:
+        config_src = f.read()
+    with open(os.path.join(root, "rust", "src", "main.rs"), encoding="utf-8") as f:
+        main_src = f.read()
+    with open(os.path.join(root, "README.md"), encoding="utf-8") as f:
+        readme_src = f.read()
+    for v in check_registry(config_src, main_src, readme_src):
+        v["file"] = "rust/src/config/mod.rs"
+        violations.append(v)
+    return violations, files
+
+
+def main(argv):
+    root = "."
+    deny = False
+    report = "LINT_report.json"
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--deny":
+            deny = True
+        elif a == "--root":
+            i += 1
+            root = argv[i]
+        elif a == "--report":
+            i += 1
+            report = argv[i]
+        else:
+            print(f"unknown arg {a}", file=sys.stderr)
+            return 2
+        i += 1
+    violations, files = scan_tree(root)
+    unallowed = [v for v in violations if not v["allowed"]]
+    allowed = [v for v in violations if v["allowed"]]
+    for v in unallowed:
+        print(f"{v['file']}:{v['line']}: [{v['rule']}] {v['msg']}")
+    rules = {}
+    for name in ("panic_safety", "determinism", "registry", "lint_allow"):
+        rules[name] = {
+            "violations": sum(1 for v in unallowed if v["rule"] == name),
+            "allowed": sum(1 for v in allowed if v["rule"] == name),
+        }
+    ok = not unallowed
+    with open(os.path.join(root, report), "w", encoding="utf-8") as f:
+        json.dump({
+            "tool": "fedhpc-lint-mirror",
+            "version": 1,
+            "files_scanned": files,
+            "rules": rules,
+            "violations": [
+                {k: v[k] for k in ("file", "line", "rule", "msg")}
+                for v in unallowed
+            ],
+            "allowed": [
+                {k: v[k] for k in ("file", "line", "rule", "msg")}
+                for v in allowed
+            ],
+            "ok": ok,
+        }, f, indent=1)
+        f.write("\n")
+    print(f"fedhpc-lint (mirror): {files} files, "
+          f"{len(unallowed)} violations, {len(allowed)} allowed")
+    return 1 if (deny and not ok) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

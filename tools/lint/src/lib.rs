@@ -1,0 +1,1057 @@
+//! `fedhpc-lint`: source-level static analysis for the fedhpc tree.
+//!
+//! Three rule families, enforced over `rust/src`:
+//!
+//! * **panic_safety** — no `.unwrap()` / `.expect(` / `panic!` /
+//!   `unreachable!` / `todo!` / `unimplemented!` / `assert!` family /
+//!   panicking slice indexing in wire-reachable modules
+//!   ([`PANIC_SCOPE`]) outside `#[cfg(test)]` blocks. A hostile or
+//!   corrupt peer must produce an `Err`, never a panic.
+//! * **determinism** — no `HashMap`/`HashSet` and no `Instant::now` /
+//!   `SystemTime::now` / ambient RNG in the modules that decide cohort
+//!   order, fold order, or virtual time ([`DET_SCOPE`]). Seeded RNG and
+//!   `BTreeMap`/sorted-`Vec` only — the paper's reproducible-convergence
+//!   claim ("same seed ⇒ same final model hash") rests on this.
+//! * **registry** — every spec name the config grammar parses is listed
+//!   in a `KINDS` array, printed by `fedhpc list` (main.rs), and named
+//!   in README.md, cross-checked mechanically.
+//!
+//! Escape hatch: a `// lint:allow(<rule>) <reason>` comment suppresses
+//! matching-rule findings on its own line and the next line. An allow
+//! without a reason, or naming an unknown rule, is itself a violation
+//! (`lint_allow`).
+//!
+//! # Detector spec
+//!
+//! The scanner is a line/char hybrid, not a full parser:
+//!
+//! 1. [`strip_source`] removes comments and (by default) string/char
+//!    literals with a char state machine that understands nested block
+//!    comments, raw strings (`r"…"`, `r#"…"#`, `br#"…"#`), byte
+//!    strings, char literals vs. lifetimes. Strings collapse to `""`;
+//!    comment text is captured per line for `lint:allow` parsing.
+//! 2. [`cfg_test_mask`] exempts every line inside a `#[cfg(test)]`-gated
+//!    brace block (the attribute arms; the next `{` opens the exempt
+//!    region, a `;` first disarms — `#[cfg(test)] use …;` items).
+//! 3. Token rules run on the stripped lines: panic tokens are plain
+//!    substrings, macros require a non-identifier left boundary
+//!    (excludes `debug_assert!`), collection types require word
+//!    boundaries on both sides. Indexing flags `[` immediately preceded
+//!    by an identifier char, `)` or `]`, except the infallible
+//!    full-range slice `[..]`.
+//!
+//! `tools/lint/mirror.py` is a line-for-line Python mirror of this spec
+//! so the tree can be checked locally without cargo; this Rust
+//! implementation is authoritative.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Wire-reachable modules (paths relative to `rust/src`, `/`-separated;
+/// a trailing `/` means the whole subtree).
+pub const PANIC_SCOPE: &[&str] = &[
+    "network/",
+    "compress/",
+    "orchestrator/server.rs",
+    "client/worker.rs",
+    "util/logging.rs",
+];
+
+/// Determinism-critical modules: cohort order, fold order, virtual time.
+pub const DET_SCOPE: &[&str] = &[
+    "orchestrator/planner.rs",
+    "orchestrator/aggregate.rs",
+    "orchestrator/strategy/",
+    "sim/",
+    "experiments/simrunner.rs",
+];
+
+/// Plain-substring panic tokens (method calls).
+pub const PANIC_TOKENS: &[&str] = &[".unwrap()", ".expect("];
+
+/// Panicking macros; matched with a non-identifier left boundary so
+/// `debug_assert!` (compiled out in release) is not flagged.
+pub const PANIC_MACROS: &[&str] = &[
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+    "assert!(",
+    "assert_eq!",
+    "assert_ne!",
+];
+
+/// Wall-clock / ambient-entropy tokens banned in [`DET_SCOPE`].
+pub const DET_TOKENS: &[&str] = &[
+    "Instant::now",
+    "SystemTime::now",
+    "thread_rng",
+    "from_entropy",
+    "rand::random",
+];
+
+/// Hash-order collections banned in [`DET_SCOPE`] (word-bounded).
+pub const DET_TYPES: &[&str] = &["HashMap", "HashSet"];
+
+/// `(impl name, diagnostic label)` for each spec registry in
+/// `rust/src/config/mod.rs` that must carry a `KINDS` array.
+pub const REGISTRY_GROUPS: &[(&str, &str)] = &[
+    ("Aggregation", "aggregation"),
+    ("ServerOptKind", "server_opt"),
+    ("PlannerKind", "planner"),
+    ("RoundMode", "round_mode"),
+    ("StalenessFn", "staleness"),
+    ("WeightScheme", "weight_scheme"),
+];
+
+/// Parse-only aliases: accepted by the grammar, intentionally unlisted.
+pub const REGISTRY_ALIASES: &[&str] = &["none"];
+
+/// Tokens `fedhpc list` (main.rs) must reference so every registry is
+/// user-discoverable.
+pub const MAIN_TOKENS: &[&str] = &[
+    "strategy_names()",
+    "server_opt_names()",
+    "planner_names()",
+    "RoundMode::KINDS",
+    "StalenessFn::KINDS",
+    "WeightScheme::KINDS",
+];
+
+/// One diagnostic. `line` is 1-based; registry findings use line 0.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+    pub allowed: bool,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn starts_with_at(chars: &[char], i: usize, tok: &str) -> bool {
+    let mut j = i;
+    for tc in tok.chars() {
+        if chars.get(j) != Some(&tc) {
+            return false;
+        }
+        j += 1;
+    }
+    true
+}
+
+/// If `chars[i]` begins `r"…"`, `r#"…"#` or `br#"…"#`, return
+/// `(index of the opening quote, hash count)`.
+fn raw_start(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let n = chars.len();
+    let mut j = i + 1;
+    if chars[i] == 'b' {
+        if j < n && chars[j] == 'r' {
+            j += 1;
+        } else {
+            return None;
+        }
+    }
+    let mut h = 0;
+    while j < n && chars[j] == '#' {
+        h += 1;
+        j += 1;
+    }
+    if j < n && chars[j] == '"' {
+        Some((j, h))
+    } else {
+        None
+    }
+}
+
+/// Remove comments (and string/char literals unless `keep_strings`).
+///
+/// Returns `(code_lines, comments)` where each comment is
+/// `(1-based line, text)`; block comments are flushed per line.
+/// Strings collapse to `""` unless kept; char literals and byte
+/// strings are handled; lifetimes survive.
+pub fn strip_source(src: &str, keep_strings: bool) -> (Vec<String>, Vec<(usize, String)>) {
+    #[derive(Clone, Copy, PartialEq)]
+    enum Mode {
+        Normal,
+        Line,
+        Block,
+        Str,
+        RawStr,
+    }
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut code_lines: Vec<String> = Vec::new();
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut cur = String::new();
+    let mut comment_buf = String::new();
+    let mut line_no = 1usize;
+    let mut mode = Mode::Normal;
+    let mut block_depth = 0i32;
+    let mut raw_hashes = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            match mode {
+                Mode::Line => {
+                    comments.push((line_no, std::mem::take(&mut comment_buf)));
+                    mode = Mode::Normal;
+                }
+                Mode::Block => {
+                    comments.push((line_no, std::mem::take(&mut comment_buf)));
+                }
+                _ => {}
+            }
+            code_lines.push(std::mem::take(&mut cur));
+            line_no += 1;
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Line => {
+                comment_buf.push(c);
+                i += 1;
+            }
+            Mode::Block => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    block_depth += 1;
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    block_depth -= 1;
+                    i += 2;
+                    if block_depth == 0 {
+                        comments.push((line_no, std::mem::take(&mut comment_buf)));
+                        mode = Mode::Normal;
+                    }
+                } else {
+                    comment_buf.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    if keep_strings {
+                        cur.push(c);
+                        if let Some(&nc) = chars.get(i + 1) {
+                            if nc != '\n' {
+                                cur.push(nc);
+                            }
+                        }
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    if keep_strings {
+                        cur.push(c);
+                    }
+                    mode = Mode::Normal;
+                    i += 1;
+                } else {
+                    if keep_strings {
+                        cur.push(c);
+                    }
+                    i += 1;
+                }
+            }
+            Mode::RawStr => {
+                let closes = c == '"'
+                    && i + raw_hashes < n
+                    && (1..=raw_hashes).all(|k| chars[i + k] == '#');
+                if closes {
+                    if keep_strings {
+                        cur.push('"');
+                    }
+                    mode = Mode::Normal;
+                    i += 1 + raw_hashes;
+                } else {
+                    if keep_strings {
+                        cur.push(c);
+                    }
+                    i += 1;
+                }
+            }
+            Mode::Normal => {
+                let prev_ident = i > 0 && is_ident(chars[i - 1]);
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    mode = Mode::Line;
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    mode = Mode::Block;
+                    block_depth = 1;
+                    i += 2;
+                } else if c == '"' {
+                    cur.push('"');
+                    if !keep_strings {
+                        cur.push('"');
+                    }
+                    mode = Mode::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_ident && raw_start(&chars, i).is_some() {
+                    let (j, h) = match raw_start(&chars, i) {
+                        Some(v) => v,
+                        None => unreachable!(),
+                    };
+                    cur.push('"');
+                    if !keep_strings {
+                        cur.push('"');
+                    }
+                    mode = Mode::RawStr;
+                    raw_hashes = h;
+                    i = j + 1;
+                } else if c == 'b' && !prev_ident && chars.get(i + 1) == Some(&'"') {
+                    cur.push('"');
+                    if !keep_strings {
+                        cur.push('"');
+                    }
+                    mode = Mode::Str;
+                    i += 2;
+                } else if c == 'b' && !prev_ident && chars.get(i + 1) == Some(&'\'') {
+                    // byte char literal: defer to the ' handler below
+                    i += 1;
+                    cur.push(' ');
+                } else if c == '\'' {
+                    if chars.get(i + 1) == Some(&'\\') {
+                        let mut j = i + 2;
+                        while j < n && chars[j] != '\'' && chars[j] != '\n' {
+                            j += 1;
+                        }
+                        i = j + 1;
+                    } else if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' {
+                        // 'x' char literal (vs 'a lifetime)
+                        i += 3;
+                    } else {
+                        cur.push(c); // lifetime
+                        i += 1;
+                    }
+                } else {
+                    cur.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if mode == Mode::Line && !comment_buf.is_empty() {
+        comments.push((line_no, comment_buf));
+    }
+    if !cur.is_empty() {
+        code_lines.push(cur);
+    }
+    (code_lines, comments)
+}
+
+/// True for every line inside a `#[cfg(test)]`-gated brace block.
+pub fn cfg_test_mask(code_lines: &[String]) -> Vec<bool> {
+    let mut mask = vec![false; code_lines.len()];
+    let mut armed = false;
+    let mut in_exempt = false;
+    let mut exempt_depth = 0i64;
+    let mut depth = 0i64;
+    for (ln, line) in code_lines.iter().enumerate() {
+        let chars: Vec<char> = line.chars().collect();
+        let mut line_exempt = in_exempt;
+        for (idx, &ch) in chars.iter().enumerate() {
+            if !in_exempt && starts_with_at(&chars, idx, "#[cfg(test)]") {
+                armed = true;
+            }
+            match ch {
+                '{' => {
+                    if armed && !in_exempt {
+                        in_exempt = true;
+                        exempt_depth = depth;
+                        armed = false;
+                        line_exempt = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if in_exempt && depth == exempt_depth {
+                        in_exempt = false;
+                        line_exempt = true;
+                    }
+                }
+                ';' => {
+                    if armed && !in_exempt {
+                        armed = false;
+                    }
+                }
+                _ => {}
+            }
+            if in_exempt {
+                line_exempt = true;
+            }
+        }
+        mask[ln] = line_exempt;
+    }
+    mask
+}
+
+/// `tok` at `i` with a non-identifier char (or line start) to its left.
+fn token_at(chars: &[char], i: usize, tok: &str) -> bool {
+    if !starts_with_at(chars, i, tok) {
+        return false;
+    }
+    if i > 0 && is_ident(chars[i - 1]) {
+        return false;
+    }
+    true
+}
+
+/// [`token_at`] plus a non-identifier right boundary.
+fn word_at(chars: &[char], i: usize, tok: &str) -> bool {
+    if !token_at(chars, i, tok) {
+        return false;
+    }
+    let end = i + tok.chars().count();
+    if end < chars.len() && is_ident(chars[end]) {
+        return false;
+    }
+    true
+}
+
+/// Positions of panicking `expr[...]` index/slice expressions: `[`
+/// immediately preceded by an identifier char, `)` or `]` — excluding
+/// the infallible full-range slice `[..]`.
+fn indexing_sites(chars: &[char]) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (i, &ch) in chars.iter().enumerate() {
+        if ch != '[' || i == 0 {
+            continue;
+        }
+        let p = chars[i - 1];
+        if !is_ident(p) && p != ')' && p != ']' {
+            continue;
+        }
+        let mut d = 1i64;
+        let mut j = i + 1;
+        while j < chars.len() && d > 0 {
+            match chars[j] {
+                '[' => d += 1,
+                ']' => d -= 1,
+                _ => {}
+            }
+            j += 1;
+        }
+        if d == 0 {
+            let inner: String = chars[i + 1..j - 1].iter().collect();
+            if inner.trim() == ".." {
+                continue; // full-range slice: infallible
+            }
+        }
+        out.push(i);
+    }
+    out
+}
+
+/// Parse `lint:allow(<rule>) <reason>` escapes out of the captured
+/// comments. Returns `(allows per line, violations for malformed ones)`.
+fn parse_allows(
+    comments: &[(usize, String)],
+) -> (Vec<(usize, &'static str)>, Vec<(usize, String)>) {
+    let mut allows = Vec::new();
+    let mut bad = Vec::new();
+    for (ln, text) in comments {
+        let Some(k) = text.find("lint:allow(") else {
+            continue;
+        };
+        let rest = &text[k + "lint:allow(".len()..];
+        let Some(close) = rest.find(')') else {
+            bad.push((*ln, "malformed lint:allow (no closing paren)".to_string()));
+            continue;
+        };
+        let rule = rest[..close].trim();
+        let reason = rest[close + 1..].trim();
+        let rule = match rule {
+            "panic_safety" => "panic_safety",
+            "determinism" => "determinism",
+            other => {
+                bad.push((*ln, format!("lint:allow of unknown rule '{other}'")));
+                continue;
+            }
+        };
+        if reason.is_empty() {
+            bad.push((*ln, format!("lint:allow({rule}) requires a reason")));
+            continue;
+        }
+        allows.push((*ln, rule));
+    }
+    (allows, bad)
+}
+
+/// Scan one source snippet under the given rule scopes. `file` is left
+/// empty; [`scan_tree`] fills it.
+pub fn scan_snippet(src: &str, panic_scope: bool, det_scope: bool) -> Vec<Violation> {
+    let (code, comments) = strip_source(src, false);
+    let mask = cfg_test_mask(&code);
+    let (allows, bad) = parse_allows(&comments);
+    let mut out: Vec<Violation> = bad
+        .into_iter()
+        .map(|(ln, msg)| Violation {
+            file: String::new(),
+            line: ln,
+            rule: "lint_allow",
+            msg,
+            allowed: false,
+        })
+        .collect();
+    let allowed = |ln: usize, rule: &str| {
+        allows
+            .iter()
+            .any(|&(al, ar)| ar == rule && (al == ln || al + 1 == ln))
+    };
+    let push = |out: &mut Vec<Violation>, ln: usize, rule: &'static str, msg: String| {
+        let allowed = allowed(ln, rule);
+        out.push(Violation {
+            file: String::new(),
+            line: ln,
+            rule,
+            msg,
+            allowed,
+        });
+    };
+    for (idx, line) in code.iter().enumerate() {
+        let ln = idx + 1;
+        if mask[idx] {
+            continue;
+        }
+        let chars: Vec<char> = line.chars().collect();
+        if panic_scope {
+            for tok in PANIC_TOKENS {
+                for i in 0..chars.len() {
+                    if starts_with_at(&chars, i, tok) {
+                        push(
+                            &mut out,
+                            ln,
+                            "panic_safety",
+                            format!("`{tok}` on a wire-reachable path"),
+                        );
+                    }
+                }
+            }
+            for tok in PANIC_MACROS {
+                for i in 0..chars.len() {
+                    if token_at(&chars, i, tok) {
+                        let name = tok.trim_end_matches('(');
+                        push(
+                            &mut out,
+                            ln,
+                            "panic_safety",
+                            format!("`{name}` on a wire-reachable path"),
+                        );
+                    }
+                }
+            }
+            for _ in indexing_sites(&chars) {
+                push(
+                    &mut out,
+                    ln,
+                    "panic_safety",
+                    "slice/array indexing can panic (use get()/iterators)".to_string(),
+                );
+            }
+        }
+        if det_scope {
+            for tok in DET_TYPES {
+                for i in 0..chars.len() {
+                    if word_at(&chars, i, tok) {
+                        push(
+                            &mut out,
+                            ln,
+                            "determinism",
+                            format!(
+                                "`{tok}` in a determinism-critical module \
+                                 (use BTreeMap/BTreeSet/sorted Vec)"
+                            ),
+                        );
+                    }
+                }
+            }
+            for tok in DET_TOKENS {
+                for i in 0..chars.len() {
+                    if token_at(&chars, i, tok) {
+                        push(
+                            &mut out,
+                            ln,
+                            "determinism",
+                            format!(
+                                "`{tok}` in a determinism-critical module \
+                                 (virtual time / seeded RNG only)"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Is `rel` (a `/`-separated path relative to `rust/src`) in `scope`?
+pub fn in_scope(rel: &str, scope: &[&str]) -> bool {
+    scope
+        .iter()
+        .any(|s| rel == *s || (s.ends_with('/') && rel.starts_with(s)))
+}
+
+/// Extract the contents of every `"…"` literal in `text` (escapes
+/// dropped, matching the mirror).
+fn extract_strings(text: &str) -> Vec<String> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < chars.len() {
+        if chars[i] == '"' {
+            let mut j = i + 1;
+            let mut buf = String::new();
+            while j < chars.len() && chars[j] != '"' {
+                if chars[j] == '\\' {
+                    j += 1;
+                } else {
+                    buf.push(chars[j]);
+                }
+                j += 1;
+            }
+            out.push(buf);
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// The `KINDS` string array of `impl <impl_name>` in the config source,
+/// or `None` if the impl or the array is missing.
+pub fn extract_kinds(config_src: &str, impl_name: &str) -> Option<Vec<String>> {
+    let start = config_src.find(&format!("impl {impl_name}"))?;
+    let k = start + config_src[start..].find("const KINDS")?;
+    let eq = k + config_src[k..].find('=')?;
+    let open_b = eq + config_src[eq..].find('[')?;
+    let close_b = open_b + config_src[open_b..].find(']')?;
+    Some(extract_strings(&config_src[open_b..close_b]))
+}
+
+/// Every string literal used as a pure `"a" | "b" => …` match-arm
+/// pattern in the config source — the names the grammar accepts.
+pub fn arm_literals(config_src: &str) -> Vec<String> {
+    let (code, _) = strip_source(config_src, true);
+    let mut lits = Vec::new();
+    for line in &code {
+        let t = line.trim();
+        if !t.starts_with('"') || !t.contains("=>") {
+            continue;
+        }
+        let head = match t.split_once("=>") {
+            Some((h, _)) => h,
+            None => continue,
+        };
+        // only pure `"a" | "b"` patterns: remove each literal once and
+        // require nothing but `|` and whitespace to remain
+        let mut residue = head.to_string();
+        for s in extract_strings(head) {
+            let quoted = format!("\"{s}\"");
+            if let Some(p) = residue.find(&quoted) {
+                residue.replace_range(p..p + quoted.len(), "");
+            }
+        }
+        if !residue.trim().replace('|', "").trim().is_empty() {
+            continue;
+        }
+        lits.extend(extract_strings(head));
+    }
+    lits
+}
+
+/// Cross-check the config grammar against the KINDS registries, the
+/// `fedhpc list` command and the README.
+pub fn check_registry(config_src: &str, main_src: &str, readme_src: &str) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let mut push = |msg: String| {
+        out.push(Violation {
+            file: String::new(),
+            line: 0,
+            rule: "registry",
+            msg,
+            allowed: false,
+        });
+    };
+    let mut union: Vec<String> = REGISTRY_ALIASES.iter().map(|s| s.to_string()).collect();
+    let arms = arm_literals(config_src);
+    for (impl_name, label) in REGISTRY_GROUPS {
+        let Some(kinds) = extract_kinds(config_src, impl_name) else {
+            push(format!(
+                "{label}: no `impl {impl_name}` KINDS array found in config"
+            ));
+            continue;
+        };
+        for kind in kinds {
+            if !arms.contains(&kind) {
+                push(format!("{label}: '{kind}' is in KINDS but has no parse arm"));
+            }
+            if !readme_src.contains(&kind) {
+                push(format!("{label}: '{kind}' is not documented in README.md"));
+            }
+            union.push(kind);
+        }
+    }
+    for arm in &arms {
+        if !union.contains(arm) {
+            push(format!(
+                "config parses '{arm}' but no KINDS registry lists it"
+            ));
+        }
+    }
+    for tok in MAIN_TOKENS {
+        if !main_src.contains(tok) {
+            push(format!("`fedhpc list` (main.rs) does not print {tok}"));
+        }
+    }
+    out
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<io::Result<_>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().and_then(|s| s.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Scan the whole tree under `root` (the repo root). Returns all
+/// findings (allowed and not) plus the number of files scanned.
+pub fn scan_tree(root: &Path) -> io::Result<(Vec<Violation>, usize)> {
+    let src_root = root.join("rust").join("src");
+    let mut paths = Vec::new();
+    collect_rs(&src_root, &mut paths)?;
+    let mut violations = Vec::new();
+    for path in &paths {
+        let rel: String = path
+            .strip_prefix(&src_root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = fs::read_to_string(path)?;
+        let ps = in_scope(&rel, PANIC_SCOPE);
+        let ds = in_scope(&rel, DET_SCOPE);
+        for mut v in scan_snippet(&src, ps, ds) {
+            v.file = format!("rust/src/{rel}");
+            violations.push(v);
+        }
+    }
+    let config_src = fs::read_to_string(src_root.join("config").join("mod.rs"))?;
+    let main_src = fs::read_to_string(src_root.join("main.rs"))?;
+    let readme_src = fs::read_to_string(root.join("README.md"))?;
+    for mut v in check_registry(&config_src, &main_src, &readme_src) {
+        v.file = "rust/src/config/mod.rs".to_string();
+        violations.push(v);
+    }
+    Ok((violations, paths.len()))
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render the machine-readable report (benchkit-style JSON).
+pub fn render_report(violations: &[Violation], files_scanned: usize, tool: &str) -> String {
+    let unallowed: Vec<&Violation> = violations.iter().filter(|v| !v.allowed).collect();
+    let allowed: Vec<&Violation> = violations.iter().filter(|v| v.allowed).collect();
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!(" \"tool\": \"{}\",\n", json_escape(tool)));
+    s.push_str(" \"version\": 1,\n");
+    s.push_str(&format!(" \"files_scanned\": {files_scanned},\n"));
+    s.push_str(" \"rules\": {\n");
+    let rule_names = ["panic_safety", "determinism", "registry", "lint_allow"];
+    for (i, name) in rule_names.iter().enumerate() {
+        let nv = unallowed.iter().filter(|v| v.rule == *name).count();
+        let na = allowed.iter().filter(|v| v.rule == *name).count();
+        s.push_str(&format!(
+            "  \"{name}\": {{\"violations\": {nv}, \"allowed\": {na}}}{}\n",
+            if i + 1 < rule_names.len() { "," } else { "" }
+        ));
+    }
+    s.push_str(" },\n");
+    for (key, list) in [("violations", &unallowed), ("allowed", &allowed)] {
+        s.push_str(&format!(" \"{key}\": [\n"));
+        for (i, v) in list.iter().enumerate() {
+            s.push_str(&format!(
+                "  {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"msg\": \"{}\"}}{}\n",
+                json_escape(&v.file),
+                v.line,
+                v.rule,
+                json_escape(&v.msg),
+                if i + 1 < list.len() { "," } else { "" }
+            ));
+        }
+        s.push_str(" ],\n");
+    }
+    s.push_str(&format!(
+        " \"ok\": {}\n}}\n",
+        if unallowed.is_empty() { "true" } else { "false" }
+    ));
+    s
+}
+
+/// Full run: scan, print human diagnostics to stdout, write the JSON
+/// report at `root/<report>`. Returns `Ok(true)` iff the tree is clean.
+pub fn run(root: &Path, report: &str) -> io::Result<bool> {
+    let (violations, files) = scan_tree(root)?;
+    let unallowed: Vec<&Violation> = violations.iter().filter(|v| !v.allowed).collect();
+    let n_allowed = violations.len() - unallowed.len();
+    for v in &unallowed {
+        println!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+    }
+    fs::write(
+        root.join(report),
+        render_report(&violations, files, "fedhpc-lint"),
+    )?;
+    println!(
+        "fedhpc-lint: {files} files, {} violations, {n_allowed} allowed",
+        unallowed.len()
+    );
+    Ok(unallowed.is_empty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(vs: &[Violation]) -> Vec<(&'static str, usize, bool)> {
+        vs.iter().map(|v| (v.rule, v.line, v.allowed)).collect()
+    }
+
+    #[test]
+    fn strip_removes_comments_and_strings() {
+        let src = "let a = \"x.unwrap()\"; // c1 .unwrap()\nlet b = 1; /* block\n.unwrap() */ let c = 2;\n";
+        let (code, comments) = strip_source(src, false);
+        assert_eq!(code[0], "let a = \"\"; ");
+        assert!(!code.concat().contains(".unwrap()"));
+        assert_eq!(comments.len(), 3); // line comment + 2 block-flushed lines
+        assert!(comments[0].1.contains(".unwrap()"));
+    }
+
+    #[test]
+    fn strip_handles_raw_strings_char_literals_lifetimes() {
+        let src = "let r = r#\"raw \" [i] \"#; let c = '['; let b = b'\\n';\nfn f<'a>(x: &'a [u8]) {}\n";
+        let (code, _) = strip_source(src, false);
+        assert!(!code[0].contains("raw"));
+        assert!(!code[0].contains('['), "char literal '[' must be stripped: {}", code[0]);
+        assert!(code[1].contains("<'a>"), "lifetime survives: {}", code[1]);
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_exempt() {
+        let src = "fn a() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn b() { y.unwrap(); }\n}\nfn c() { z.unwrap(); }\n";
+        let vs = scan_snippet(src, true, false);
+        let lines: Vec<usize> = vs.iter().map(|v| v.line).collect();
+        assert_eq!(lines, vec![1, 6], "only non-test unwraps flagged: {vs:?}");
+    }
+
+    #[test]
+    fn cfg_test_on_item_statement_does_not_arm() {
+        // a `;` before any `{` disarms: `#[cfg(test)] use …;`
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn a() { x.unwrap(); }\n";
+        let vs = scan_snippet(src, true, false);
+        assert_eq!(rules_of(&vs), vec![("panic_safety", 3, false)]);
+    }
+
+    #[test]
+    fn full_range_slice_is_not_flagged() {
+        let src = "fn a(v: &[u8]) { let x = &v[..]; let y = &v[1..]; }\n";
+        let vs = scan_snippet(src, true, false);
+        assert_eq!(vs.len(), 1, "only v[1..] flagged: {vs:?}");
+    }
+
+    #[test]
+    fn debug_assert_is_not_flagged() {
+        let src = "fn a() { debug_assert!(x > 0); debug_assert_eq!(a, b); }\n";
+        assert!(scan_snippet(src, true, false).is_empty());
+    }
+
+    #[test]
+    fn allow_with_reason_suppresses_same_and_next_line() {
+        let src = "fn a(v: &[u8]) {\n    // lint:allow(panic_safety) index < len by construction\n    let x = v[0];\n}\n";
+        let vs = scan_snippet(src, true, false);
+        assert_eq!(rules_of(&vs), vec![("panic_safety", 3, true)]);
+    }
+
+    #[test]
+    fn allow_without_reason_is_a_violation() {
+        let src = "fn a(v: &[u8]) {\n    // lint:allow(panic_safety)\n    let x = v[0];\n}\n";
+        let vs = scan_snippet(src, true, false);
+        assert!(
+            vs.iter()
+                .any(|v| v.rule == "lint_allow" && v.msg.contains("requires a reason")),
+            "{vs:?}"
+        );
+        assert!(
+            vs.iter().any(|v| v.rule == "panic_safety" && !v.allowed),
+            "reasonless allow must not suppress: {vs:?}"
+        );
+    }
+
+    #[test]
+    fn allow_of_unknown_rule_is_a_violation() {
+        let src = "// lint:allow(bogus) because\nfn a() {}\n";
+        let vs = scan_snippet(src, true, false);
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].rule, "lint_allow");
+        assert!(vs[0].msg.contains("unknown rule"));
+    }
+
+    #[test]
+    fn allow_does_not_cross_rules() {
+        let src = "// lint:allow(determinism) reason here\nlet x = y.unwrap();\n";
+        let vs = scan_snippet(src, true, false);
+        assert_eq!(rules_of(&vs), vec![("panic_safety", 2, false)]);
+    }
+
+    #[test]
+    fn determinism_tokens_word_bounded() {
+        let src = "use std::collections::HashMap;\nstruct MyHashMapLike;\nlet t = Instant::now();\n";
+        let vs = scan_snippet(src, false, true);
+        assert_eq!(
+            rules_of(&vs),
+            vec![("determinism", 1, false), ("determinism", 3, false)],
+            "HashMapLike must not match: {vs:?}"
+        );
+    }
+
+    #[test]
+    fn scope_matching() {
+        assert!(in_scope("network/tcp.rs", PANIC_SCOPE));
+        assert!(in_scope("compress/mod.rs", PANIC_SCOPE));
+        assert!(in_scope("orchestrator/server.rs", PANIC_SCOPE));
+        assert!(!in_scope("orchestrator/planner.rs", PANIC_SCOPE));
+        assert!(in_scope("orchestrator/planner.rs", DET_SCOPE));
+        assert!(in_scope("sim/mod.rs", DET_SCOPE));
+        assert!(!in_scope("network/tcp.rs", DET_SCOPE));
+        assert!(!in_scope("simulator.rs", DET_SCOPE), "prefix needs the slash");
+    }
+
+    const GOOD_CFG: &str = r#"
+impl Aggregation { pub const KINDS: &'static [&'static str] = &["fedavg"]; }
+impl ServerOptKind { pub const KINDS: &'static [&'static str] = &["sgd"]; }
+impl PlannerKind { pub const KINDS: &'static [&'static str] = &["random"]; }
+impl RoundMode { pub const KINDS: &'static [&'static str] = &["sync"]; }
+impl StalenessFn { pub const KINDS: &'static [&'static str] = &["poly"]; }
+impl WeightScheme { pub const KINDS: &'static [&'static str] = &["data_size"]; }
+fn parse(s: &str) -> u8 {
+    match s {
+        "fedavg" => 1,
+        "sgd" | "none" => 2,
+        "random" => 3,
+        "sync" => 4,
+        "poly" => 5,
+        "data_size" => 6,
+        _ => 0,
+    }
+}
+"#;
+    const GOOD_MAIN: &str = "strategy_names() server_opt_names() planner_names() \
+                             RoundMode::KINDS StalenessFn::KINDS WeightScheme::KINDS";
+    const GOOD_README: &str = "fedavg sgd random sync poly data_size";
+
+    #[test]
+    fn registry_clean_config_passes() {
+        assert!(check_registry(GOOD_CFG, GOOD_MAIN, GOOD_README).is_empty());
+    }
+
+    #[test]
+    fn registry_flags_arm_missing_from_kinds() {
+        let cfg = GOOD_CFG.replace("\"sync\" => 4,", "\"sync\" | \"extra_mode\" => 4,");
+        let vs = check_registry(&cfg, GOOD_MAIN, GOOD_README);
+        assert!(
+            vs.iter().any(|v| v.msg.contains("'extra_mode'")),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn registry_flags_kind_without_parse_arm() {
+        let cfg = GOOD_CFG.replace("&[\"sync\"]", "&[\"sync\", \"ghost\"]");
+        let vs = check_registry(&cfg, GOOD_MAIN, GOOD_README);
+        assert!(
+            vs.iter().any(|v| v.msg.contains("no parse arm")),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn registry_flags_undocumented_kind_and_missing_list_token() {
+        let vs = check_registry(GOOD_CFG, GOOD_MAIN, "everything but the weight scheme");
+        assert!(
+            vs.iter()
+                .any(|v| v.msg.contains("not documented in README")),
+            "{vs:?}"
+        );
+        let vs = check_registry(GOOD_CFG, "strategy_names()", GOOD_README);
+        assert!(
+            vs.iter()
+                .any(|v| v.msg.contains("does not print WeightScheme::KINDS")),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn registry_flags_missing_kinds_array() {
+        let cfg = GOOD_CFG.replace("impl WeightScheme", "impl Unrelated");
+        let vs = check_registry(&cfg, GOOD_MAIN, GOOD_README);
+        assert!(
+            vs.iter()
+                .any(|v| v.msg.contains("no `impl WeightScheme` KINDS array")),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn report_counts_and_ok_flag() {
+        let vs = vec![
+            Violation {
+                file: "a.rs".into(),
+                line: 3,
+                rule: "panic_safety",
+                msg: "`.unwrap()` on a wire-reachable path".into(),
+                allowed: false,
+            },
+            Violation {
+                file: "b.rs".into(),
+                line: 7,
+                rule: "panic_safety",
+                msg: "ok".into(),
+                allowed: true,
+            },
+        ];
+        let r = render_report(&vs, 2, "fedhpc-lint");
+        assert!(r.contains("\"panic_safety\": {\"violations\": 1, \"allowed\": 1}"));
+        assert!(r.contains("\"ok\": false"));
+        let r = render_report(&vs[1..], 2, "fedhpc-lint");
+        assert!(r.contains("\"ok\": true"));
+    }
+}

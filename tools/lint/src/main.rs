@@ -1,0 +1,58 @@
+//! CLI for the fedhpc repo-invariant linter.
+//!
+//! ```text
+//! fedhpc-lint [--deny] [--root <repo-root>] [--report <path>]
+//! ```
+//!
+//! Prints one human diagnostic per unallowed violation, writes the
+//! machine-readable report (default `LINT_report.json`, relative to the
+//! root), and — under `--deny` — exits 1 if the tree is not clean.
+//! Exit 2 is an operational error (bad flag, unreadable tree).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut deny = false;
+    let mut report = String::from("LINT_report.json");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--deny" => deny = true,
+            "--root" => match args.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => return usage_err("--root needs a value"),
+            },
+            "--report" => match args.next() {
+                Some(v) => report = v,
+                None => return usage_err("--report needs a value"),
+            },
+            "--help" | "-h" => {
+                println!("usage: fedhpc-lint [--deny] [--root <repo-root>] [--report <path>]");
+                return ExitCode::SUCCESS;
+            }
+            other => return usage_err(&format!("unknown arg '{other}'")),
+        }
+    }
+    match fedhpc_lint::run(&root, &report) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => {
+            if deny {
+                ExitCode::FAILURE
+            } else {
+                ExitCode::SUCCESS
+            }
+        }
+        Err(e) => {
+            eprintln!("fedhpc-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn usage_err(msg: &str) -> ExitCode {
+    eprintln!("fedhpc-lint: {msg}");
+    eprintln!("usage: fedhpc-lint [--deny] [--root <repo-root>] [--report <path>]");
+    ExitCode::from(2)
+}

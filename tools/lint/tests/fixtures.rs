@@ -1,0 +1,107 @@
+//! Fixture-driven proof that each rule family actually fires: every
+//! known-bad fixture must produce findings, every known-good fixture
+//! must scan clean, and a reasonless `lint:allow` is itself an error.
+
+use fedhpc_lint::{scan_snippet, Violation};
+
+const PANIC_BAD: &str = include_str!("../fixtures/panic_bad.rs");
+const PANIC_GOOD: &str = include_str!("../fixtures/panic_good.rs");
+const DET_BAD: &str = include_str!("../fixtures/det_bad.rs");
+const DET_GOOD: &str = include_str!("../fixtures/det_good.rs");
+const ALLOW_NO_REASON: &str = include_str!("../fixtures/allow_no_reason.rs");
+
+fn unallowed(vs: &[Violation]) -> Vec<&Violation> {
+    vs.iter().filter(|v| !v.allowed).collect()
+}
+
+#[test]
+fn panic_bad_fixture_trips_every_construct() {
+    let vs = scan_snippet(PANIC_BAD, true, false);
+    let msgs: Vec<&str> = vs.iter().map(|v| v.msg.as_str()).collect();
+    for needle in [
+        "`.unwrap()`",
+        "`.expect(`",
+        "`panic!`",
+        "`unreachable!`",
+        "`assert!`",
+        "`assert_eq!`",
+        "slice/array indexing",
+    ] {
+        assert!(
+            msgs.iter().any(|m| m.contains(needle)),
+            "expected a {needle} finding, got {msgs:?}"
+        );
+    }
+    assert!(vs.iter().all(|v| !v.allowed), "nothing is allowlisted here");
+    // `&buf[..4]` and `buf[0]` are two distinct indexing findings
+    assert!(
+        vs.iter()
+            .filter(|v| v.msg.contains("slice/array indexing"))
+            .count()
+            >= 2
+    );
+}
+
+#[test]
+fn panic_good_fixture_scans_clean() {
+    let vs = scan_snippet(PANIC_GOOD, true, false);
+    let bad = unallowed(&vs);
+    assert!(bad.is_empty(), "known-good fixture flagged: {bad:?}");
+    // the reasoned allow is recorded as allowed, not silently dropped
+    assert_eq!(vs.iter().filter(|v| v.allowed).count(), 1);
+}
+
+#[test]
+fn det_bad_fixture_trips_collections_and_clocks() {
+    let vs = scan_snippet(DET_BAD, false, true);
+    let msgs: Vec<&str> = vs.iter().map(|v| v.msg.as_str()).collect();
+    for needle in [
+        "`HashMap`",
+        "`HashSet`",
+        "`Instant::now`",
+        "`SystemTime::now`",
+    ] {
+        assert!(
+            msgs.iter().any(|m| m.contains(needle)),
+            "expected a {needle} finding, got {msgs:?}"
+        );
+    }
+    assert!(vs.iter().all(|v| v.rule == "determinism"));
+}
+
+#[test]
+fn det_good_fixture_scans_clean() {
+    let vs = scan_snippet(DET_GOOD, false, true);
+    assert!(vs.is_empty(), "known-good fixture flagged: {vs:?}");
+}
+
+#[test]
+fn reasonless_or_unknown_allow_is_an_error_and_suppresses_nothing() {
+    let vs = scan_snippet(ALLOW_NO_REASON, true, false);
+    assert!(
+        vs.iter()
+            .any(|v| v.rule == "lint_allow" && v.msg.contains("requires a reason")),
+        "{vs:?}"
+    );
+    assert!(
+        vs.iter()
+            .any(|v| v.rule == "lint_allow" && v.msg.contains("unknown rule")),
+        "{vs:?}"
+    );
+    // both indexing sites must still be live violations
+    assert_eq!(
+        unallowed(&vs)
+            .iter()
+            .filter(|v| v.rule == "panic_safety")
+            .count(),
+        2
+    );
+}
+
+#[test]
+fn fixtures_are_rule_scoped() {
+    // panic fixtures scanned under the determinism rule only: the bad
+    // panic fixture is determinism-clean, and vice versa
+    assert!(scan_snippet(PANIC_BAD, false, true).is_empty());
+    assert!(unallowed(&scan_snippet(DET_BAD, true, false)).is_empty());
+}
