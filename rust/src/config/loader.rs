@@ -273,6 +273,14 @@ fn decode(v: &Value) -> Result<ExperimentConfig> {
             .get("mock_runtime")
             .and_then(Value::as_bool)
             .unwrap_or(false),
+        // optional section: absent (old configs) means disabled
+        telemetry: TelemetryConfig {
+            addr: v
+                .get("telemetry")
+                .and_then(|t| t.get("addr"))
+                .and_then(Value::as_str)
+                .map(str::to_string),
+        },
     })
 }
 
@@ -374,6 +382,10 @@ pub fn to_json(cfg: &ExperimentConfig) -> String {
     if let Some(t) = cfg.train.target_accuracy {
         train_fields.push(("target_accuracy", num(t)));
     }
+    let mut telemetry_fields = vec![];
+    if let Some(addr) = &cfg.telemetry.addr {
+        telemetry_fields.push(("addr", s(addr)));
+    }
     obj(vec![
         ("name", s(&cfg.name)),
         ("seed", num(cfg.seed as f64)),
@@ -430,6 +442,7 @@ pub fn to_json(cfg: &ExperimentConfig) -> String {
             "mock_runtime",
             V::Bool(cfg.mock_runtime),
         ),
+        ("telemetry", obj(telemetry_fields)),
     ])
     .to_string()
 }
@@ -665,6 +678,40 @@ mod tests {
             format!("{err:#}").contains("unknown server_opt kind 'lamb'"),
             "got: {err:#}"
         );
+    }
+
+    #[test]
+    fn roundtrip_telemetry_addr() {
+        let mut cfg = quickstart();
+        cfg.telemetry.addr = Some("127.0.0.1:9469".into());
+        let back = from_json_str(&to_json(&cfg)).unwrap();
+        assert_eq!(back.telemetry.addr.as_deref(), Some("127.0.0.1:9469"));
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn missing_telemetry_section_defaults_to_disabled() {
+        // configs written before the telemetry axis existed still load
+        let text = to_json(&quickstart());
+        let stripped = {
+            let v = Value::parse(&text).unwrap();
+            let keep: Vec<(&str, Value)> = [
+                "name",
+                "seed",
+                "data",
+                "cluster",
+                "train",
+                "aggregation",
+                "selection",
+            ]
+            .iter()
+            .map(|k| (*k, v.req(k).unwrap().clone()))
+            .collect();
+            json::obj(keep).to_string()
+        };
+        let cfg = from_json_str(&stripped).unwrap();
+        assert_eq!(cfg.telemetry, TelemetryConfig::default());
+        assert_eq!(cfg.telemetry.addr, None);
     }
 
     #[test]

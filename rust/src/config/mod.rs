@@ -888,6 +888,16 @@ impl Default for TrainConfig {
     }
 }
 
+/// Operations endpoint: live /metrics exposition + control plane
+/// (`telemetry::http`). `addr` is a bind address like
+/// "127.0.0.1:9469"; `None` (the default) disables the listener
+/// entirely — zero threads, zero sockets. The CLI flag
+/// `--telemetry-addr` overrides whatever the config file says.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct TelemetryConfig {
+    pub addr: Option<String>,
+}
+
 /// Root experiment description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
@@ -909,6 +919,8 @@ pub struct ExperimentConfig {
     /// Use the pure-Rust mock runtime instead of PJRT (tests / timing
     /// sims that don't need real learning).
     pub mock_runtime: bool,
+    /// Optional live-operations endpoint (off by default).
+    pub telemetry: TelemetryConfig,
 }
 
 #[cfg(test)]

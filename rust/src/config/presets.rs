@@ -73,6 +73,7 @@ pub fn quickstart() -> ExperimentConfig {
         faults: FaultConfig::default(),
         artifacts_dir: "artifacts".into(),
         mock_runtime: false,
+        telemetry: TelemetryConfig::default(),
     }
 }
 
@@ -127,6 +128,7 @@ pub fn paper_testbed() -> ExperimentConfig {
         faults: FaultConfig::default(),
         artifacts_dir: "artifacts".into(),
         mock_runtime: false,
+        telemetry: TelemetryConfig::default(),
     }
 }
 

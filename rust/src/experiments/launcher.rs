@@ -48,13 +48,25 @@ fn build_runtime(
 
 /// Run a full federated training experiment in-process.
 pub fn run_real(cfg: &ExperimentConfig) -> Result<TrainingReport> {
-    run_real_with_hooks(cfg, &mut NoHooks)
+    run_real_with_control(cfg, &mut NoHooks, None)
 }
 
 /// Like [`run_real`] but with per-round hooks for harnesses.
 pub fn run_real_with_hooks(
     cfg: &ExperimentConfig,
     hooks: &mut dyn OrchestratorHooks,
+) -> Result<TrainingReport> {
+    run_real_with_control(cfg, hooks, None)
+}
+
+/// Like [`run_real_with_hooks`] but attaching an operator control
+/// plane ([`crate::telemetry::ControlPlane`]): the orchestrator drains
+/// its mailbox at round/commit boundaries and publishes readiness +
+/// status through it. `None` behaves exactly like plain hooks.
+pub fn run_real_with_control(
+    cfg: &ExperimentConfig,
+    hooks: &mut dyn OrchestratorHooks,
+    control: Option<Arc<crate::telemetry::ControlPlane>>,
 ) -> Result<TrainingReport> {
     crate::config::validate(cfg)?;
     let cluster = Cluster::build(&cfg.cluster, cfg.seed)?;
@@ -120,12 +132,15 @@ pub fn run_real_with_hooks(
 
     // run the orchestrator on this thread; strategy + server optimizer
     // come from the config's registry names
-    let mut orch = Orchestrator::builder(cfg.clone())
+    let mut builder = Orchestrator::builder(cfg.clone())
         .transport(hub.server())
         .traffic(traffic)
         .initial_params(initial)
-        .eval(eval)
-        .build()?;
+        .eval(eval);
+    if let Some(cp) = control {
+        builder = builder.control(cp);
+    }
+    let mut orch = builder.build()?;
     let report = orch.run(Some((n_clients, Duration::from_secs(60))), hooks)?;
 
     for h in handles {

@@ -12,7 +12,7 @@ pub mod launcher;
 pub mod simrunner;
 pub mod tables;
 
-pub use launcher::run_real;
+pub use launcher::{run_real, run_real_with_control, run_real_with_hooks};
 pub use simrunner::{run_sim, RoundDetail, SimReport, SimTiming};
 
 use anyhow::{bail, Result};

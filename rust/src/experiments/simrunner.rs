@@ -440,6 +440,9 @@ fn run_sim_sync(
             bytes_down: down_bytes * selected as u64,
             bytes_up: bytes_up_round,
             model_delta,
+            staleness_min: 0,
+            staleness_mean: 0.0,
+            staleness_max: 0,
         });
 
         if with_training {
@@ -716,6 +719,10 @@ fn run_sim_async(
                 agg = RoundAggregator::new(strategy.clone(), params.len());
                 (f64::NAN, None, None, 0.0)
             };
+            let (staleness_min, staleness_mean, staleness_max) =
+                crate::metrics::staleness_summary(
+                    &folds.iter().map(|&(_, s)| s).collect::<Vec<u32>>(),
+                );
             details.push(RoundDetail {
                 round: commit,
                 reporters: std::mem::take(&mut folds),
@@ -738,6 +745,9 @@ fn run_sim_async(
                 bytes_down: bytes_down_total - last_down,
                 bytes_up: bytes_up_total - last_up,
                 model_delta,
+                staleness_min,
+                staleness_mean,
+                staleness_max,
             });
             commit += 1;
             stale_drops = 0;

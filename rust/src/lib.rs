@@ -32,6 +32,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod secure;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 
 pub mod benchkit;

@@ -19,6 +19,7 @@ use fedhpc::network::tcp::{TcpClient, TcpServer};
 use fedhpc::network::{LinkShaper, Msg, TrafficLog};
 use fedhpc::orchestrator::{EvalHarness, NoHooks, Orchestrator};
 use fedhpc::runtime::{Manifest, MockRuntime, ModelRuntime, PjrtRuntime};
+use fedhpc::telemetry::{ControlPlane, TelemetryServer};
 use fedhpc::util::argparse::Args;
 use std::sync::Arc;
 use std::time::Duration;
@@ -107,8 +108,26 @@ fn load_config(p: &fedhpc::util::argparse::Parsed) -> Result<ExperimentConfig> {
     if let Some(pl) = p.get("planner") {
         cfg.selection.planner = Some(config::PlannerKind::parse(pl).context("--planner")?);
     }
+    if let Some(addr) = p.get("telemetry-addr") {
+        cfg.telemetry.addr = Some(addr.to_string());
+    }
     config::validate(&cfg)?;
     Ok(cfg)
+}
+
+/// If the config enables telemetry, bind the operations endpoint and
+/// return it with its control plane; `None` means disabled.
+fn start_telemetry(
+    cfg: &ExperimentConfig,
+) -> Result<Option<(TelemetryServer, Arc<ControlPlane>)>> {
+    let Some(addr) = &cfg.telemetry.addr else {
+        return Ok(None);
+    };
+    let control = Arc::new(ControlPlane::new());
+    let server = TelemetryServer::bind(addr, fedhpc::telemetry::global().clone(), control.clone())
+        .with_context(|| format!("binding telemetry endpoint {addr}"))?;
+    println!("telemetry listening on http://{}", server.local_addr());
+    Ok(Some((server, control)))
 }
 
 fn train_args() -> Args {
@@ -142,6 +161,11 @@ fn train_args() -> Args {
              deadline[:ms]",
         )
         .opt("out", Some("results"), "output directory for reports")
+        .opt(
+            "telemetry-addr",
+            None,
+            "bind live /metrics + control endpoint (e.g. 127.0.0.1:9469)",
+        )
         .flag("mock", "use the pure-Rust mock runtime")
 }
 
@@ -155,7 +179,16 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         cfg.cluster.total_nodes(),
         cfg.train.rounds
     );
-    let report = experiments::run_real(&cfg)?;
+    let telemetry = start_telemetry(&cfg)?;
+    let report = experiments::run_real_with_control(
+        &cfg,
+        &mut NoHooks,
+        telemetry.as_ref().map(|(_, cp)| cp.clone()),
+    )?;
+    if let Some((server, control)) = telemetry {
+        control.set_status("state=done".to_string());
+        server.shutdown();
+    }
     report.save(p.get("out").unwrap_or("results"))?;
     println!(
         "done: final acc {} | best {} | total {:.1}s | up {} down {}",
@@ -185,7 +218,18 @@ fn cmd_experiment(rest: &[String]) -> Result<()> {
 fn cmd_sim(rest: &[String]) -> Result<()> {
     let p = train_args().parse(rest)?;
     let cfg = load_config(&p)?;
+    // sim is virtual-time: the endpoint is exposition-only (control
+    // verbs are accepted but there is no round loop to drain them)
+    let telemetry = start_telemetry(&cfg)?;
+    if let Some((_, cp)) = &telemetry {
+        cp.set_status("state=sim".to_string());
+        cp.mark_ready();
+    }
     let sim = experiments::run_sim(&cfg, &experiments::SimTiming::default(), false)?;
+    if let Some((server, control)) = telemetry {
+        control.set_status("state=done".to_string());
+        server.shutdown();
+    }
     println!(
         "virtual time: {:.1}s over {} rounds ({:.2}s/round)",
         sim.total_time_s,
@@ -211,6 +255,11 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .opt("planner", None, "cohort planner by registry name")
         .opt("out", Some("results"), "output directory")
         .opt("clients", None, "expected worker count (default: cluster size)")
+        .opt(
+            "telemetry-addr",
+            None,
+            "bind live /metrics + control endpoint (e.g. 127.0.0.1:9469)",
+        )
         .flag("mock", "use the mock runtime")
         .parse(rest)?;
     let cfg = load_config(&p)?;
@@ -234,13 +283,21 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         runtime,
         shard: dataset.eval.clone(),
     };
-    let mut orch = Orchestrator::builder(cfg.clone())
+    let telemetry = start_telemetry(&cfg)?;
+    let mut builder = Orchestrator::builder(cfg.clone())
         .transport(server)
         .traffic(traffic)
         .initial_params(initial)
-        .eval(eval)
-        .build()?;
+        .eval(eval);
+    if let Some((_, cp)) = &telemetry {
+        builder = builder.control(cp.clone());
+    }
+    let mut orch = builder.build()?;
     let report = orch.run(Some((expected, Duration::from_secs(120))), &mut NoHooks)?;
+    if let Some((tsrv, control)) = telemetry {
+        control.set_status("state=done".to_string());
+        tsrv.shutdown();
+    }
     report.save(p.get("out").unwrap_or("results"))?;
     println!(
         "done: final acc {}",

@@ -29,6 +29,31 @@ pub struct RoundMetrics {
     pub bytes_up: u64,
     /// Relative model movement ‖ΔM‖/‖M‖ (convergence tracking).
     pub model_delta: f64,
+    /// Staleness of the updates folded this round/commit, in model
+    /// versions behind at fold time. Always 0 in sync rounds (every
+    /// update trains on the version it is folded into); meaningful in
+    /// async_fedbuff commits. Min/max are 0 when nothing folded.
+    pub staleness_min: u32,
+    pub staleness_mean: f64,
+    pub staleness_max: u32,
+}
+
+/// Summarize the staleness values of one commit's folded updates into
+/// the `(min, mean, max)` triple `RoundMetrics` records. Empty input
+/// (an empty commit) yields `(0, 0.0, 0)`.
+pub fn staleness_summary(staleness: &[u32]) -> (u32, f64, u32) {
+    if staleness.is_empty() {
+        return (0, 0.0, 0);
+    }
+    let mut min = u32::MAX;
+    let mut max = 0u32;
+    let mut sum = 0u64;
+    for &s in staleness {
+        min = min.min(s);
+        max = max.max(s);
+        sum += u64::from(s);
+    }
+    (min, sum as f64 / staleness.len() as f64, max)
 }
 
 impl RoundMetrics {
@@ -44,6 +69,9 @@ impl RoundMetrics {
             ("bytes_down", num(self.bytes_down as f64)),
             ("bytes_up", num(self.bytes_up as f64)),
             ("model_delta", num(self.model_delta)),
+            ("staleness_min", num(self.staleness_min as f64)),
+            ("staleness_mean", num(self.staleness_mean)),
+            ("staleness_max", num(self.staleness_max as f64)),
         ];
         if let Some(a) = self.eval_accuracy {
             fields.push(("eval_accuracy", num(a)));
@@ -54,11 +82,14 @@ impl RoundMetrics {
         obj(fields)
     }
 
-    pub const CSV_HEADER: &'static str = "round,selected,reported,dropped,deadline_misses,train_loss,eval_accuracy,eval_loss,duration_s,bytes_down,bytes_up,model_delta";
+    // Staleness columns are appended at the end so the first 12
+    // columns stay byte-identical to pre-staleness reports (pinned by
+    // `sync_csv_prefix_is_stable` below).
+    pub const CSV_HEADER: &'static str = "round,selected,reported,dropped,deadline_misses,train_loss,eval_accuracy,eval_loss,duration_s,bytes_down,bytes_up,model_delta,staleness_min,staleness_mean,staleness_max";
 
     pub fn to_csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{:.6},{},{},{:.3},{},{},{:.3e}",
+            "{},{},{},{},{},{:.6},{},{},{:.3},{},{},{:.3e},{},{:.3},{}",
             self.round,
             self.selected,
             self.reported,
@@ -71,6 +102,9 @@ impl RoundMetrics {
             self.bytes_down,
             self.bytes_up,
             self.model_delta,
+            self.staleness_min,
+            self.staleness_mean,
+            self.staleness_max,
         )
     }
 }
@@ -198,6 +232,9 @@ mod tests {
             bytes_down: 100,
             bytes_up: 50,
             model_delta: 0.01,
+            staleness_min: 0,
+            staleness_mean: 0.0,
+            staleness_max: 0,
         }
     }
 
@@ -232,6 +269,52 @@ mod tests {
             lines[1].split(',').count(),
             "header/row column mismatch"
         );
+    }
+
+    /// Regression pin for the staleness-column addition: the first 12
+    /// CSV columns (the whole pre-staleness schema) must stay
+    /// byte-identical, and a sync round's staleness triple is 0,0.000,0.
+    #[test]
+    fn sync_csv_prefix_is_stable() {
+        let row = rm(3, Some(0.5), 1.0).to_csv_row();
+        let cols: Vec<&str> = row.split(',').collect();
+        assert_eq!(
+            cols.get(..12),
+            Some(
+                &[
+                    "3", "4", "4", "0", "0", "0.250000", "0.5000", "0.5000", "1.000", "100",
+                    "50", "1.000e-2"
+                ][..]
+            )
+        );
+        assert_eq!(cols.get(12..), Some(&["0", "0.000", "0"][..]));
+        assert_eq!(
+            RoundMetrics::CSV_HEADER
+                .split(',')
+                .take(12)
+                .collect::<Vec<_>>()
+                .join(","),
+            "round,selected,reported,dropped,deadline_misses,train_loss,eval_accuracy,\
+             eval_loss,duration_s,bytes_down,bytes_up,model_delta"
+        );
+    }
+
+    #[test]
+    fn staleness_summary_triple() {
+        assert_eq!(staleness_summary(&[]), (0, 0.0, 0));
+        assert_eq!(staleness_summary(&[2]), (2, 2.0, 2));
+        assert_eq!(staleness_summary(&[0, 1, 5]), (0, 2.0, 5));
+    }
+
+    #[test]
+    fn json_includes_staleness_fields() {
+        let mut m = rm(0, None, 1.0);
+        m.staleness_min = 1;
+        m.staleness_mean = 2.5;
+        m.staleness_max = 4;
+        let v = crate::util::json::Value::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(v.get("staleness_min").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("staleness_max").unwrap().as_usize(), Some(4));
     }
 
     #[test]

@@ -69,13 +69,26 @@ impl TcpServer {
         let (tx, rx) = channel::<(NodeId, Msg)>();
         let peers: Arc<Mutex<HashMap<NodeId, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
         let peers_accept = peers.clone();
+        // telemetry handles resolved once at bind; per-event cost is a
+        // relaxed atomic op (see crate::telemetry accuracy contract)
+        let g = crate::telemetry::global();
+        let accepts = g.counter(
+            crate::telemetry::names::TCP_ACCEPTS_TOTAL,
+            "TCP connections accepted since process start.",
+        );
+        let active = g.gauge(
+            crate::telemetry::names::TCP_ACTIVE_CONNECTIONS,
+            "Registered TCP peers currently connected.",
+        );
         std::thread::Builder::new()
             .name("tcp-accept".into())
             .spawn(move || {
                 for conn in listener.incoming() {
                     let Ok(mut stream) = conn else { continue };
+                    accepts.inc();
                     let tx = tx.clone();
                     let peers = peers_accept.clone();
+                    let active = active.clone();
                     std::thread::Builder::new()
                         .name("tcp-read".into())
                         .spawn(move || {
@@ -98,7 +111,14 @@ impl TcpServer {
                                 }
                             };
                             if let Ok(w) = stream.try_clone() {
-                                crate::util::lock_unpoisoned(&peers).insert(id, w);
+                                // a re-registering peer replaces its old
+                                // stream — the gauge counts distinct ids
+                                if crate::util::lock_unpoisoned(&peers)
+                                    .insert(id, w)
+                                    .is_none()
+                                {
+                                    active.inc();
+                                }
                             }
                             if tx.send((id, msg)).is_err() {
                                 return;
@@ -119,7 +139,9 @@ impl TcpServer {
                                     Err(_) => break, // peer closed
                                 }
                             }
-                            crate::util::lock_unpoisoned(&peers).remove(&id);
+                            if crate::util::lock_unpoisoned(&peers).remove(&id).is_some() {
+                                active.dec();
+                            }
                         })
                         .ok();
                 }

@@ -559,6 +559,31 @@ pub fn planner_names() -> &'static [&'static str] {
     PlannerKind::KINDS
 }
 
+/// Record one planned cohort into the global telemetry registry
+/// (cohorts-planned counter + last-cohort-size gauge). Handles are
+/// resolved once per process behind a `OnceLock`, so the per-round
+/// cost is two relaxed atomic stores. Strictly write-only telemetry:
+/// nothing here reads planner state, the client registry or the RNG,
+/// so planning stays bit-deterministic with or without a scraper
+/// attached (pinned by `rust/tests/telemetry_determinism.rs`).
+pub fn record_plan_telemetry(plan: &RoundPlan) {
+    use crate::telemetry::{self, names, Counter, Gauge};
+    use std::sync::{Arc, OnceLock};
+    static HANDLES: OnceLock<(Arc<Counter>, Arc<Gauge>)> = OnceLock::new();
+    let (planned, size) = HANDLES.get_or_init(|| {
+        let g = telemetry::global();
+        (
+            g.counter(
+                names::COHORTS_PLANNED_TOTAL,
+                "Cohorts planned since process start.",
+            ),
+            g.gauge(names::COHORT_SIZE, "Size of the most recently planned cohort."),
+        )
+    });
+    planned.inc();
+    size.set(plan.len() as u64);
+}
+
 /// Instantiate the planner a config value describes.
 pub fn planner_from_config(kind: &PlannerKind) -> Box<dyn CohortPlanner> {
     match *kind {

@@ -65,13 +65,14 @@ use crate::cluster::NodeId;
 use crate::compress::{DecodedView, Encoded};
 use crate::config::{ExperimentConfig, RoundMode, StalenessFn};
 use crate::data::{Batch, Shard};
-use crate::metrics::{RoundMetrics, TrainingReport};
+use crate::metrics::{staleness_summary, RoundMetrics, TrainingReport};
 use crate::network::{pre_encode_dense, Msg, ServerTransport, TrafficLog, UpdateStats};
 use crate::runtime::{EvalOut, ModelRuntime};
+use crate::telemetry::{self, ControlCmd, ControlPlane, Counter, Gauge, Histogram};
 use crate::util::rng::Rng;
 use crate::util::scratch::ScratchPool;
 use anyhow::{anyhow, bail, Result};
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -146,6 +147,7 @@ pub struct OrchestratorBuilder<T: ServerTransport> {
     strategy: Option<Arc<dyn AggStrategy>>,
     server_opt: Option<Box<dyn ServerOpt>>,
     planner: Option<Box<dyn CohortPlanner>>,
+    control: Option<Arc<ControlPlane>>,
 }
 
 impl<T: ServerTransport> OrchestratorBuilder<T> {
@@ -160,6 +162,7 @@ impl<T: ServerTransport> OrchestratorBuilder<T> {
             strategy: None,
             server_opt: None,
             planner: None,
+            control: None,
         }
     }
 
@@ -221,6 +224,16 @@ impl<T: ServerTransport> OrchestratorBuilder<T> {
         self
     }
 
+    /// Attach an operator control plane (see [`crate::telemetry`]).
+    /// The orchestrator drains its mailbox at round/commit boundaries,
+    /// flips `/readyz` after the first dispatch and publishes a status
+    /// line each boundary. Without one, the run is uncontrolled
+    /// (pre-telemetry behavior).
+    pub fn control(mut self, control: Arc<ControlPlane>) -> Self {
+        self.control = Some(control);
+        self
+    }
+
     pub fn build(self) -> Result<Orchestrator<T>> {
         let transport = self
             .transport
@@ -253,8 +266,85 @@ impl<T: ServerTransport> OrchestratorBuilder<T> {
             planner,
             eval_every: self.eval_every,
             scratch: Arc::new(ScratchPool::new()),
+            control: self.control,
+            om: OrchMetrics::new(),
         })
     }
+}
+
+/// Handles into the global telemetry registry, resolved once at build
+/// time so the per-update path is a single relaxed atomic op (see the
+/// accuracy contract in [`crate::telemetry`]).
+struct OrchMetrics {
+    rounds_total: Arc<Counter>,
+    round_seconds: Arc<Histogram>,
+    staleness: Arc<Histogram>,
+    stale_drops: Arc<Counter>,
+    /// Deadline misses keyed by client speed tier (fast, mid, slow).
+    deadline_miss: [Arc<Counter>; 3],
+    ingest_bytes: Arc<Counter>,
+    ingest_updates: Arc<Counter>,
+    model_version: Arc<Gauge>,
+}
+
+impl OrchMetrics {
+    fn new() -> Self {
+        use crate::telemetry::names;
+        let g = telemetry::global();
+        let miss_help = "Deadline misses, by client speed tier.";
+        OrchMetrics {
+            rounds_total: g.counter(
+                names::ROUNDS_TOTAL,
+                "Rounds (sync) / commits (async) finalized.",
+            ),
+            round_seconds: g.histogram(
+                names::ROUND_SECONDS,
+                "Round/commit duration, seconds.",
+                telemetry::ROUND_SECONDS_BUCKETS,
+            ),
+            staleness: g.histogram(
+                names::STALENESS,
+                "Staleness of folded updates, model versions behind.",
+                telemetry::STALENESS_BUCKETS,
+            ),
+            stale_drops: g.counter(
+                names::STALE_DROPS_TOTAL,
+                "Updates discarded for exceeding max_staleness.",
+            ),
+            deadline_miss: [
+                g.counter_with(names::DEADLINE_MISSES_TOTAL, miss_help, "tier", "fast"),
+                g.counter_with(names::DEADLINE_MISSES_TOTAL, miss_help, "tier", "mid"),
+                g.counter_with(names::DEADLINE_MISSES_TOTAL, miss_help, "tier", "slow"),
+            ],
+            ingest_bytes: g.counter(
+                names::INGEST_BYTES_TOTAL,
+                "Encoded update bytes folded by the server.",
+            ),
+            ingest_updates: g.counter(
+                names::INGEST_UPDATES_TOTAL,
+                "Updates folded by the server.",
+            ),
+            model_version: g.gauge(names::MODEL_VERSION, "Current global model version."),
+        }
+    }
+
+    fn miss_for(&self, speed_factor: f64) -> &Counter {
+        let [fast, mid, slow] = &self.deadline_miss;
+        match telemetry::tier_of(speed_factor) {
+            "fast" => fast,
+            "mid" => mid,
+            _ => slow,
+        }
+    }
+}
+
+/// What a boundary's control-mailbox sweep decided.
+#[derive(Debug, PartialEq, Eq)]
+enum ControlAction {
+    Continue,
+    /// Stop cleanly after the work already finalized — the report
+    /// stays complete.
+    Drain,
 }
 
 /// The central orchestrator. Assemble with [`Orchestrator::builder`].
@@ -277,6 +367,11 @@ pub struct Orchestrator<T: ServerTransport> {
     /// only by the ingest paths that must densify — see
     /// [`crate::util::scratch`]).
     scratch: Arc<ScratchPool>,
+    /// Operator mailbox + readiness/status surface, when a telemetry
+    /// endpoint is attached (see [`OrchestratorBuilder::control`]).
+    control: Option<Arc<ControlPlane>>,
+    /// Always-on counters into the global telemetry registry.
+    om: OrchMetrics,
 }
 
 /// What the collect phase hands to finalize.
@@ -345,6 +440,97 @@ impl<T: ServerTransport> Orchestrator<T> {
         Ok(())
     }
 
+    /// Publish the operator-visible state line (served by `GET
+    /// /status` and the `status` verb).
+    fn publish_status(&self, cp: &ControlPlane, boundary: u32, state: &str) {
+        cp.set_status(format!(
+            "state={state} round={boundary} model_version={} planner={} strategy={} clients={}",
+            self.model_version,
+            self.planner.name(),
+            self.strategy.name(),
+            self.registry.len(),
+        ));
+    }
+
+    /// Drain the operator mailbox at a round/commit boundary and apply
+    /// every queued verb. `quiesce` parks right here — clients stay
+    /// connected, nothing is dispatched or folded — until `resume` or
+    /// `drain` arrives. `set-planner` / `set-strategy` swap the live
+    /// instances (specs were validated at submission; in async mode the
+    /// cohort is fixed at launch, so a planner swap redirects
+    /// success/failure feedback rather than changing membership, and a
+    /// buffering strategy is refused because the async engine needs
+    /// streaming folds).
+    fn apply_control(&mut self, boundary: u32) -> ControlAction {
+        let Some(cp) = self.control.clone() else {
+            return ControlAction::Continue;
+        };
+        let is_async = matches!(self.cfg.round_mode, RoundMode::BufferedAsync { .. });
+        let mut cmds: VecDeque<ControlCmd> = cp.drain_mailbox().into();
+        let mut quiesced = false;
+        loop {
+            while let Some(cmd) = cmds.pop_front() {
+                match cmd {
+                    ControlCmd::Drain => {
+                        log::info!("control: drain at boundary {boundary} — stopping cleanly");
+                        self.publish_status(&cp, boundary, "draining");
+                        return ControlAction::Drain;
+                    }
+                    ControlCmd::Quiesce => quiesced = true,
+                    ControlCmd::Resume => quiesced = false,
+                    ControlCmd::SetPlanner(spec) => {
+                        match planner::planner_by_name(&spec) {
+                            Ok(p) => {
+                                log::info!(
+                                    "control: planner {} -> {spec} at boundary {boundary}",
+                                    self.planner.name()
+                                );
+                                self.planner = p;
+                            }
+                            // unreachable for mailbox-delivered specs
+                            // (validated at submission) — logged, not fatal
+                            Err(e) => log::warn!("control: set-planner {spec:?} refused: {e}"),
+                        }
+                    }
+                    ControlCmd::SetStrategy(spec) => {
+                        match strategy_registry::strategy_by_name(&spec) {
+                            Ok(s) if is_async && s.needs_buffering() => log::warn!(
+                                "control: set-strategy {spec:?} refused — async mode \
+                                 needs a streaming strategy"
+                            ),
+                            Ok(s) => {
+                                log::info!(
+                                    "control: strategy {} -> {spec} at boundary {boundary}",
+                                    self.strategy.name()
+                                );
+                                self.strategy = s;
+                            }
+                            Err(e) => log::warn!("control: set-strategy {spec:?} refused: {e}"),
+                        }
+                    }
+                    // answered inline by the HTTP layer; nothing to do
+                    ControlCmd::Status => {}
+                }
+            }
+            if !quiesced {
+                break;
+            }
+            self.publish_status(&cp, boundary, "quiesced");
+            std::thread::sleep(Duration::from_millis(25));
+            cmds = cp.drain_mailbox().into();
+        }
+        self.publish_status(&cp, boundary, "running");
+        ControlAction::Continue
+    }
+
+    /// `/readyz` gate: listening is not enough — ready means the first
+    /// round/launch actually went out to clients.
+    fn mark_ready(&self) {
+        if let Some(cp) = &self.control {
+            cp.mark_ready();
+        }
+    }
+
     /// Whether round `round` gets a centralized evaluation
     /// (`eval_every == 0` = never — see
     /// [`OrchestratorBuilder::eval_every`]).
@@ -387,6 +573,7 @@ impl<T: ServerTransport> Orchestrator<T> {
             bail!("round {round}: planner returned no clients");
         }
         log::debug!("round {round}: planned cohort {:?}", plan.cohort());
+        planner::record_plan_telemetry(&plan);
         Ok(plan)
     }
 
@@ -421,6 +608,7 @@ impl<T: ServerTransport> Orchestrator<T> {
                 ),
             }
         }
+        self.mark_ready();
         reached
     }
 
@@ -491,6 +679,9 @@ impl<T: ServerTransport> Orchestrator<T> {
                     match folded {
                         Ok(()) => {
                             hooks.on_update(round, client, &stats);
+                            // sync rounds fold only same-version updates
+                            self.om.staleness.observe(0.0);
+                            self.om.ingest_updates.inc();
                             reported.insert(client);
                             self.planner.report_success(
                                 &mut self.registry,
@@ -531,9 +722,14 @@ impl<T: ServerTransport> Orchestrator<T> {
         let mut deadline_misses = 0u32;
         for &c in selected {
             if !reported.contains(&c) {
+                let speed = self
+                    .registry
+                    .get(c)
+                    .map_or(1.0, |r| r.profile.speed_factor);
                 self.planner.report_failure(&mut self.registry, c, round);
                 if reached_set.contains(&c) {
                     deadline_misses += 1;
+                    self.om.miss_for(speed).inc();
                 }
             }
         }
@@ -584,6 +780,11 @@ impl<T: ServerTransport> Orchestrator<T> {
         }
 
         let (bytes_down, bytes_up) = self.traffic.round(round);
+        let duration_s = t_round.elapsed().as_secs_f64();
+        self.om.rounds_total.inc();
+        self.om.round_seconds.observe(duration_s);
+        self.om.ingest_bytes.add(bytes_up);
+        self.om.model_version.set(u64::from(self.model_version));
         Ok(RoundOutcome {
             metrics: RoundMetrics {
                 round,
@@ -594,10 +795,14 @@ impl<T: ServerTransport> Orchestrator<T> {
                 train_loss: mean_loss,
                 eval_accuracy,
                 eval_loss,
-                duration_s: t_round.elapsed().as_secs_f64(),
+                duration_s,
                 bytes_down,
                 bytes_up,
                 model_delta,
+                // sync: every fold is version-current by construction
+                staleness_min: 0,
+                staleness_mean: 0.0,
+                staleness_max: 0,
             },
             converged,
         })
@@ -666,6 +871,11 @@ impl<T: ServerTransport> Orchestrator<T> {
             self.cfg.train.target_accuracy,
         );
         for round in 0..self.cfg.train.rounds as u32 {
+            // operator verbs apply between rounds, never mid-round —
+            // a drain leaves every pushed RoundMetrics complete
+            if self.apply_control(round) == ControlAction::Drain {
+                break;
+            }
             let outcome = self.run_round(round, &mut tracker, hooks)?;
             log::info!(
                 "round {round}: loss={:.4} acc={} reported={}/{} dur={:.2}s",
@@ -778,6 +988,7 @@ impl<T: ServerTransport> Orchestrator<T> {
         if in_flight.is_empty() {
             bail!("async launch: no client reachable");
         }
+        self.mark_ready();
 
         let mut commit = 0u32;
         let mut agg = RoundAggregator::with_pool(
@@ -788,6 +999,9 @@ impl<T: ServerTransport> Orchestrator<T> {
         let mut t_commit = Instant::now();
         let mut stale_drops = 0u32;
         let mut bad_folds = 0u32;
+        // staleness of each update folded into the open window, for
+        // the commit's RoundMetrics triple
+        let mut fold_staleness: Vec<u32> = Vec::new();
         let mut last_traffic = self.traffic.totals();
         // clients owed a fresh dispatch; flushed at the loop top so a
         // fold that fills the buffer hands back the *post*-commit model
@@ -809,12 +1023,15 @@ impl<T: ServerTransport> Orchestrator<T> {
                 let totals = self.traffic.totals();
                 let traffic_delta = (totals.0 - last_traffic.0, totals.1 - last_traffic.1);
                 last_traffic = totals;
+                let staleness_stats = staleness_summary(&fold_staleness);
+                fold_staleness.clear();
                 let outcome = self.commit_async(
                     commit,
                     t_commit,
                     in_flight.len(),
                     (stale_drops, bad_folds),
                     traffic_delta,
+                    staleness_stats,
                     full,
                     &mut tracker,
                 )?;
@@ -834,6 +1051,20 @@ impl<T: ServerTransport> Orchestrator<T> {
                     log::info!("async: converged at commit {}", commit - 1);
                     break;
                 }
+                if self.apply_control(commit) == ControlAction::Drain {
+                    break;
+                }
+                // a set-strategy at this boundary must govern the
+                // window that opens now; the replacement aggregator is
+                // still empty, so rebuilding it is free and safe
+                agg = RoundAggregator::with_pool(
+                    self.strategy.clone(),
+                    self.params.len(),
+                    self.scratch.clone(),
+                );
+                // a long quiesce park must not expire the next window
+                // before it folds anything
+                t_commit = Instant::now();
                 // revive silent clients: anyone whose last dispatch is a
                 // full deadline old reported nothing (dropout, crash,
                 // lost frame) — hand them the fresh model instead of
@@ -887,6 +1118,7 @@ impl<T: ServerTransport> Orchestrator<T> {
                             self.model_version
                         );
                         stale_drops += 1;
+                        self.om.stale_drops.inc();
                     } else {
                         let s = self.model_version - base_version;
                         if s > max_staleness {
@@ -894,6 +1126,12 @@ impl<T: ServerTransport> Orchestrator<T> {
                                 "async: dropping update from {client} at staleness {s}"
                             );
                             stale_drops += 1;
+                            self.om.stale_drops.inc();
+                            let speed = self
+                                .registry
+                                .get(client)
+                                .map_or(1.0, |r| r.profile.speed_factor);
+                            self.om.miss_for(speed).inc();
                             self.planner.report_failure(&mut self.registry, client, commit);
                         } else {
                             // fused ingest, staleness-discounted: the
@@ -915,6 +1153,9 @@ impl<T: ServerTransport> Orchestrator<T> {
                             match folded {
                                 Ok(()) => {
                                     hooks.on_update(commit, client, &stats);
+                                    fold_staleness.push(s);
+                                    self.om.staleness.observe(f64::from(s));
+                                    self.om.ingest_updates.inc();
                                     self.planner.report_success(
                                         &mut self.registry,
                                         client,
@@ -960,6 +1201,7 @@ impl<T: ServerTransport> Orchestrator<T> {
         in_flight: usize,
         (stale_drops, bad_folds): (u32, u32),
         (bytes_down, bytes_up): (u64, u64),
+        (staleness_min, staleness_mean, staleness_max): (u32, f64, u32),
         agg: RoundAggregator,
         tracker: &mut ConvergenceTracker,
     ) -> Result<RoundOutcome> {
@@ -993,6 +1235,11 @@ impl<T: ServerTransport> Orchestrator<T> {
             self.params = p;
             self.model_version += 1;
         }
+        let duration_s = t_commit.elapsed().as_secs_f64();
+        self.om.rounds_total.inc();
+        self.om.round_seconds.observe(duration_s);
+        self.om.ingest_bytes.add(bytes_up);
+        self.om.model_version.set(u64::from(self.model_version));
         Ok(RoundOutcome {
             metrics: RoundMetrics {
                 round: commit,
@@ -1003,10 +1250,13 @@ impl<T: ServerTransport> Orchestrator<T> {
                 train_loss: mean_loss,
                 eval_accuracy,
                 eval_loss,
-                duration_s: t_commit.elapsed().as_secs_f64(),
+                duration_s,
                 bytes_down,
                 bytes_up,
                 model_delta,
+                staleness_min,
+                staleness_mean,
+                staleness_max,
             },
             converged,
         })

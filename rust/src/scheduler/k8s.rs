@@ -122,6 +122,31 @@ impl K8sSim {
     }
 }
 
+/// Kubernetes probe wiring for an orchestrator pod exposing the
+/// telemetry endpoint (`--telemetry-addr`): liveness hits `/healthz`
+/// (process up), readiness hits `/readyz` (first round dispatched —
+/// workers pointed at a Service stay out of rotation until the round
+/// loop is actually live). `telemetry_addr` is the bind address the
+/// orchestrator was started with, e.g. "0.0.0.0:9469"; only its port
+/// lands in the manifest.
+pub fn probe_manifest_snippet(telemetry_addr: &str) -> String {
+    let port = telemetry_addr.rsplit(':').next().unwrap_or("9469");
+    format!(
+        "livenessProbe:\n\
+         \x20 httpGet:\n\
+         \x20   path: /healthz\n\
+         \x20   port: {port}\n\
+         \x20 initialDelaySeconds: 5\n\
+         \x20 periodSeconds: 10\n\
+         readinessProbe:\n\
+         \x20 httpGet:\n\
+         \x20   path: /readyz\n\
+         \x20   port: {port}\n\
+         \x20 initialDelaySeconds: 2\n\
+         \x20 periodSeconds: 5\n"
+    )
+}
+
 impl SchedulerAdapter for K8sSim {
     fn submit(&mut self, job: Job) -> Result<JobId> {
         if !self.pools.contains_key(&job.partition) {
@@ -242,6 +267,16 @@ impl SchedulerAdapter for K8sSim {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn probe_manifest_uses_port_and_both_endpoints() {
+        let y = probe_manifest_snippet("0.0.0.0:9469");
+        assert!(y.contains("path: /healthz"));
+        assert!(y.contains("path: /readyz"));
+        assert_eq!(y.matches("port: 9469").count(), 2);
+        // parses as indented YAML-ish lines, not one blob
+        assert!(y.lines().count() >= 10);
+    }
 
     fn pod(client: NodeId, pool: &str) -> Job {
         Job {

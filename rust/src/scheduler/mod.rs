@@ -21,9 +21,9 @@ mod slurm;
 
 pub use hybrid::HybridScheduler;
 pub use job::{Job, JobId, JobState, Placement};
-pub use k8s::{K8sSim, Pool};
+pub use k8s::{probe_manifest_snippet, K8sSim, Pool};
 pub use local::LocalAdapter;
-pub use slurm::SlurmSim;
+pub use slurm::{health_check_script, SlurmSim};
 
 use crate::cluster::NodeId;
 use anyhow::Result;

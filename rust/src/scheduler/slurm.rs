@@ -205,9 +205,33 @@ impl SchedulerAdapter for SlurmSim {
     }
 }
 
+/// SLURM-side probe wiring for the orchestrator's telemetry endpoint:
+/// a shell fragment for the batch script that (a) blocks worker
+/// startup until `/readyz` answers 200 — queue-delayed workers would
+/// otherwise connect before the first round is dispatched and idle
+/// against a warming server — and (b) polls `/healthz` in the
+/// background, scancel-ing the job if the orchestrator dies so the
+/// allocation is released instead of burning walltime.
+pub fn health_check_script(telemetry_addr: &str) -> String {
+    format!(
+        "# fedhpc telemetry probes (orchestrator at {telemetry_addr})\n\
+         until curl -sf http://{telemetry_addr}/readyz; do sleep 2; done\n\
+         (while curl -sf http://{telemetry_addr}/healthz >/dev/null; do sleep 10; done; \
+         scancel \"$SLURM_JOB_ID\") &\n"
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn health_check_script_targets_both_probes() {
+        let s = health_check_script("10.0.0.5:9469");
+        assert!(s.contains("http://10.0.0.5:9469/readyz"));
+        assert!(s.contains("http://10.0.0.5:9469/healthz"));
+        assert!(s.contains("scancel"), "must release the allocation");
+    }
 
     fn job(client: NodeId, partition: &str, prio: i32, wall: f64) -> Job {
         Job {

@@ -1,0 +1,269 @@
+//! Operator control plane: a command mailbox between the HTTP
+//! responder and the orchestrator.
+//!
+//! The HTTP side ([`super::http`]) parses and *validates* a verb (bad
+//! specs are rejected with `400` before they ever reach the training
+//! loop), then enqueues a [`ControlCmd`]. The orchestrator drains the
+//! mailbox at round boundaries (sync engine) and commit boundaries
+//! (async_fedbuff engine) — never mid-aggregation — so a control verb
+//! is always observed at a consistent point in the round state machine.
+//!
+//! Verb grammar (one command per request body, whitespace-separated):
+//!
+//! ```text
+//! drain                    # finish the in-flight round, then stop cleanly
+//! quiesce                  # pause at the next boundary (clients stay connected)
+//! resume                   # leave quiesce
+//! set-planner <spec>       # e.g. set-planner tiered:4   (PlannerKind grammar)
+//! set-strategy <spec>      # e.g. set-strategy fedprox:0.1 (Aggregation grammar)
+//! status                   # read-only: current state line, nothing enqueued
+//! ```
+//!
+//! `set-planner` / `set-strategy` specs reuse the exact name-keyed
+//! registries the CLI uses ([`crate::orchestrator::planner::planner_by_name`],
+//! [`crate::orchestrator::strategy::registry::strategy_by_name`]), so an
+//! operator can only install something `fedhpc list` advertises.
+
+use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// The verbs an operator can issue (label values for
+/// `fedhpc_control_commands_total{verb=...}`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verb {
+    Drain,
+    Quiesce,
+    Resume,
+    SetPlanner,
+    SetStrategy,
+    Status,
+}
+
+impl Verb {
+    /// Every verb, in exposition/label order.
+    pub const ALL: &'static [Verb] = &[
+        Verb::Drain,
+        Verb::Quiesce,
+        Verb::Resume,
+        Verb::SetPlanner,
+        Verb::SetStrategy,
+        Verb::Status,
+    ];
+
+    /// The wire spelling (also the metric label value).
+    pub fn name(self) -> &'static str {
+        match self {
+            Verb::Drain => "drain",
+            Verb::Quiesce => "quiesce",
+            Verb::Resume => "resume",
+            Verb::SetPlanner => "set-planner",
+            Verb::SetStrategy => "set-strategy",
+            Verb::Status => "status",
+        }
+    }
+}
+
+/// A validated operator command. `Status` is answered directly by the
+/// HTTP layer and never enqueued; everything else waits in the mailbox
+/// for the next round/commit boundary.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ControlCmd {
+    Drain,
+    Quiesce,
+    Resume,
+    /// Planner spec, already validated against the planner registry.
+    SetPlanner(String),
+    /// Strategy spec, already validated against the strategy registry.
+    SetStrategy(String),
+    Status,
+}
+
+impl ControlCmd {
+    pub fn verb(&self) -> Verb {
+        match self {
+            ControlCmd::Drain => Verb::Drain,
+            ControlCmd::Quiesce => Verb::Quiesce,
+            ControlCmd::Resume => Verb::Resume,
+            ControlCmd::SetPlanner(_) => Verb::SetPlanner,
+            ControlCmd::SetStrategy(_) => Verb::SetStrategy,
+            ControlCmd::Status => Verb::Status,
+        }
+    }
+}
+
+/// Parse + validate one operator command line. Spec arguments are
+/// checked against the name-keyed registries here, so an accepted
+/// command can always be applied at the boundary.
+pub fn parse_verb(line: &str) -> Result<ControlCmd> {
+    let mut words = line.split_whitespace();
+    let verb = words.next().ok_or_else(|| anyhow!("empty command"))?;
+    let arg = words.next();
+    if let Some(extra) = words.next() {
+        return Err(anyhow!("unexpected trailing token {extra:?}"));
+    }
+    let no_arg = |cmd: ControlCmd| match arg {
+        None => Ok(cmd),
+        Some(a) => Err(anyhow!("verb {verb:?} takes no argument, got {a:?}")),
+    };
+    match verb {
+        "drain" => no_arg(ControlCmd::Drain),
+        "quiesce" => no_arg(ControlCmd::Quiesce),
+        "resume" => no_arg(ControlCmd::Resume),
+        "status" => no_arg(ControlCmd::Status),
+        "set-planner" => {
+            let spec = arg.ok_or_else(|| anyhow!("set-planner requires a spec argument"))?;
+            // Validate eagerly: unknown/ill-formed specs never enter
+            // the mailbox.
+            crate::orchestrator::planner::planner_by_name(spec)
+                .map_err(|e| anyhow!("invalid planner spec {spec:?}: {e}"))?;
+            Ok(ControlCmd::SetPlanner(spec.to_string()))
+        }
+        "set-strategy" => {
+            let spec = arg.ok_or_else(|| anyhow!("set-strategy requires a spec argument"))?;
+            crate::orchestrator::strategy::registry::strategy_by_name(spec)
+                .map_err(|e| anyhow!("invalid strategy spec {spec:?}: {e}"))?;
+            Ok(ControlCmd::SetStrategy(spec.to_string()))
+        }
+        other => Err(anyhow!(
+            "unknown verb {other:?} (expected one of drain, quiesce, resume, \
+             set-planner, set-strategy, status)"
+        )),
+    }
+}
+
+/// Shared state between the HTTP responder (producer) and the
+/// orchestrator (consumer). All methods are cheap and lock-scoped;
+/// nothing here is on the per-update hot path.
+#[derive(Default)]
+pub struct ControlPlane {
+    mailbox: Mutex<VecDeque<ControlCmd>>,
+    ready: AtomicBool,
+    /// Last state line published by the orchestrator at a boundary.
+    status: Mutex<String>,
+}
+
+impl ControlPlane {
+    pub fn new() -> Self {
+        ControlPlane {
+            mailbox: Mutex::new(VecDeque::new()),
+            ready: AtomicBool::new(false),
+            status: Mutex::new("state=starting".to_string()),
+        }
+    }
+
+    /// Enqueue a validated command for the next boundary.
+    pub fn submit(&self, cmd: ControlCmd) {
+        crate::util::lock_unpoisoned(&self.mailbox).push_back(cmd);
+    }
+
+    /// Take every queued command, FIFO. Called by the orchestrator at
+    /// round/commit boundaries (and while parked in quiesce).
+    pub fn drain_mailbox(&self) -> Vec<ControlCmd> {
+        crate::util::lock_unpoisoned(&self.mailbox).drain(..).collect()
+    }
+
+    /// `/readyz` flips true once the server is listening *and* the
+    /// first round/plan has been dispatched.
+    pub fn mark_ready(&self) {
+        self.ready.store(true, Ordering::Release);
+    }
+
+    pub fn is_ready(&self) -> bool {
+        self.ready.load(Ordering::Acquire)
+    }
+
+    /// Publish the operator-visible state line (shown by `status` and
+    /// `GET /status`).
+    pub fn set_status(&self, line: String) {
+        *crate::util::lock_unpoisoned(&self.status) = line;
+    }
+
+    pub fn status_line(&self) -> String {
+        crate::util::lock_unpoisoned(&self.status).clone()
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests may panic freely
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_verbs_parse() {
+        assert_eq!(parse_verb("drain").unwrap(), ControlCmd::Drain);
+        assert_eq!(parse_verb("  quiesce ").unwrap(), ControlCmd::Quiesce);
+        assert_eq!(parse_verb("resume").unwrap(), ControlCmd::Resume);
+        assert_eq!(parse_verb("status").unwrap(), ControlCmd::Status);
+    }
+
+    #[test]
+    fn bare_verbs_reject_arguments() {
+        assert!(parse_verb("drain now").is_err());
+        assert!(parse_verb("status please").is_err());
+    }
+
+    #[test]
+    fn set_planner_validates_against_registry() {
+        let cmd = parse_verb("set-planner tiered:4").unwrap();
+        assert_eq!(cmd, ControlCmd::SetPlanner("tiered:4".to_string()));
+        assert_eq!(cmd.verb().name(), "set-planner");
+        assert!(parse_verb("set-planner no-such-planner").is_err());
+        assert!(parse_verb("set-planner").is_err());
+    }
+
+    #[test]
+    fn set_strategy_validates_against_registry() {
+        let cmd = parse_verb("set-strategy fedprox:0.1").unwrap();
+        assert_eq!(cmd, ControlCmd::SetStrategy("fedprox:0.1".to_string()));
+        assert!(parse_verb("set-strategy bogus").is_err());
+        assert!(parse_verb("set-strategy").is_err());
+    }
+
+    #[test]
+    fn unknown_and_empty_verbs_error() {
+        assert!(parse_verb("").is_err());
+        assert!(parse_verb("explode").is_err());
+    }
+
+    #[test]
+    fn mailbox_is_fifo_and_drains() {
+        let cp = ControlPlane::new();
+        assert!(cp.drain_mailbox().is_empty());
+        cp.submit(ControlCmd::Quiesce);
+        cp.submit(ControlCmd::Resume);
+        assert_eq!(
+            cp.drain_mailbox(),
+            vec![ControlCmd::Quiesce, ControlCmd::Resume]
+        );
+        assert!(cp.drain_mailbox().is_empty());
+    }
+
+    #[test]
+    fn ready_and_status() {
+        let cp = ControlPlane::new();
+        assert!(!cp.is_ready());
+        cp.mark_ready();
+        assert!(cp.is_ready());
+        assert_eq!(cp.status_line(), "state=starting");
+        cp.set_status("state=running round=3".to_string());
+        assert_eq!(cp.status_line(), "state=running round=3");
+    }
+
+    #[test]
+    fn every_verb_has_a_stable_name() {
+        let names: Vec<_> = Verb::ALL.iter().map(|v| v.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "drain",
+                "quiesce",
+                "resume",
+                "set-planner",
+                "set-strategy",
+                "status"
+            ]
+        );
+    }
+}

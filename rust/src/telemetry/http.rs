@@ -1,0 +1,353 @@
+//! Hand-rolled HTTP/1.1 responder for metrics exposition and operator
+//! control. std-only (`TcpListener` + threads): the dependency posture
+//! stays anyhow + log, and the surface is deliberately tiny — five
+//! routes, `Connection: close`, no keep-alive, no chunking.
+//!
+//! Routes:
+//!
+//! | route            | method | reply                                          |
+//! |------------------|--------|------------------------------------------------|
+//! | `/metrics`       | GET    | Prometheus text exposition 0.0.4               |
+//! | `/healthz`       | GET    | `200 ok` while the process is alive            |
+//! | `/readyz`        | GET    | `200 ready` after the first round dispatched, `503` before |
+//! | `/status`        | GET    | current orchestrator state line                |
+//! | `/control`       | POST   | body = one verb line (see [`super::control`])  |
+//!
+//! This port parses network input, so the whole module is in the
+//! fedhpc-lint panic-safety scope: malformed requests produce error
+//! responses, never panics.
+
+use super::control::{parse_verb, ControlCmd, ControlPlane};
+use super::registry::{names, Registry};
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Upper bound on a request (request line + headers + body). The
+/// largest legitimate request is a short control verb; anything bigger
+/// is garbage and gets `400`.
+const MAX_REQUEST_BYTES: usize = 8 * 1024;
+
+/// How often the accept loop checks the stop flag.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// Per-connection socket timeout: an operator port must never let a
+/// stalled peer pin a thread.
+const IO_TIMEOUT: Duration = Duration::from_millis(2000);
+
+/// The exposition + control listener. Binding spawns one accept
+/// thread; each connection is answered on a short-lived handler
+/// thread and closed. Dropping the server (or calling
+/// [`TelemetryServer::shutdown`]) stops the accept loop.
+pub struct TelemetryServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl TelemetryServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:9090"`, port 0 for ephemeral) and
+    /// start serving `registry` / `control`.
+    pub fn bind(addr: &str, registry: Arc<Registry>, control: Arc<ControlPlane>) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("telemetry bind {addr}"))?;
+        let local_addr = listener
+            .local_addr()
+            .context("telemetry local_addr")?;
+        listener
+            .set_nonblocking(true)
+            .context("telemetry set_nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("telemetry-http".to_string())
+            .spawn(move || {
+                while !stop2.load(Ordering::Acquire) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let reg = registry.clone();
+                            let cp = control.clone();
+                            let spawned = std::thread::Builder::new()
+                                .name("telemetry-conn".to_string())
+                                .spawn(move || handle_conn(stream, &reg, &cp));
+                            if let Err(e) = spawned {
+                                log::warn!("telemetry: handler spawn failed: {e}");
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(ACCEPT_POLL);
+                        }
+                        Err(e) => {
+                            log::warn!("telemetry: accept error: {e}");
+                            std::thread::sleep(ACCEPT_POLL);
+                        }
+                    }
+                }
+            })
+            .context("telemetry accept thread spawn")?;
+        log::info!("telemetry: serving /metrics on {local_addr}");
+        Ok(TelemetryServer {
+            local_addr,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop the accept loop and join the accept thread. In-flight
+    /// connection handlers finish on their own (they are bounded by
+    /// [`IO_TIMEOUT`]).
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept_thread.take() {
+            if h.join().is_err() {
+                log::warn!("telemetry: accept thread panicked");
+            }
+        }
+    }
+}
+
+impl Drop for TelemetryServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// One request → one response → close. All parse failures answer 400.
+fn handle_conn(mut stream: TcpStream, registry: &Registry, control: &ControlPlane) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let response = match read_request(&mut stream) {
+        Ok(req) => route(&req, registry, control),
+        Err(e) => Response::text(400, "Bad Request", &format!("bad request: {e}\n")),
+    };
+    if let Err(e) = response.write_to(&mut stream) {
+        log::debug!("telemetry: response write failed: {e}");
+    }
+}
+
+struct Request {
+    method: String,
+    path: String,
+    body: String,
+}
+
+/// Read one HTTP/1.1 request (headers + optional body) off the stream.
+/// Size-capped, timeout-bounded, index-free.
+fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut buf: Vec<u8> = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    let header_end = loop {
+        if let Some(pos) = find_header_end(&buf) {
+            break pos;
+        }
+        if buf.len() >= MAX_REQUEST_BYTES {
+            anyhow::bail!("request exceeds {MAX_REQUEST_BYTES} bytes");
+        }
+        let n = stream.read(&mut chunk).context("read")?;
+        if n == 0 {
+            anyhow::bail!("connection closed mid-request");
+        }
+        buf.extend_from_slice(chunk.get(..n).unwrap_or(&[]));
+    };
+    let head = buf.get(..header_end).unwrap_or(&[]);
+    let head = String::from_utf8_lossy(head).into_owned();
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        anyhow::bail!("malformed request line {request_line:?}");
+    }
+    let content_length = lines
+        .filter_map(|l| l.split_once(':'))
+        .find(|(k, _)| k.trim().eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.trim().parse::<usize>().ok())
+        .unwrap_or(0);
+    if content_length > MAX_REQUEST_BYTES {
+        anyhow::bail!("content-length {content_length} exceeds cap");
+    }
+    let body_start = header_end + 4; // past \r\n\r\n
+    let mut body: Vec<u8> = buf.get(body_start..).unwrap_or(&[]).to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk).context("read body")?;
+        if n == 0 {
+            break;
+        }
+        body.extend_from_slice(chunk.get(..n).unwrap_or(&[]));
+    }
+    body.truncate(content_length);
+    Ok(Request {
+        method,
+        path,
+        body: String::from_utf8_lossy(&body).into_owned(),
+    })
+}
+
+/// Byte offset of the first `\r\n\r\n`, if complete headers arrived.
+fn find_header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn route(req: &Request, registry: &Registry, control: &ControlPlane) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/metrics") => Response {
+            code: 200,
+            reason: "OK",
+            content_type: "text/plain; version=0.0.4; charset=utf-8",
+            body: registry.render(),
+        },
+        ("GET", "/healthz") => Response::text(200, "OK", "ok\n"),
+        ("GET", "/readyz") => {
+            if control.is_ready() {
+                Response::text(200, "OK", "ready\n")
+            } else {
+                Response::text(503, "Service Unavailable", "starting\n")
+            }
+        }
+        ("GET", "/status") => {
+            let mut line = control.status_line();
+            line.push('\n');
+            Response::text(200, "OK", &line)
+        }
+        ("POST", "/control") => handle_control(req.body.trim(), registry, control),
+        ("GET", "/") => Response::text(
+            200,
+            "OK",
+            "fedhpc telemetry: /metrics /healthz /readyz /status, POST /control\n",
+        ),
+        _ => Response::text(404, "Not Found", "not found\n"),
+    }
+}
+
+fn handle_control(body: &str, registry: &Registry, control: &ControlPlane) -> Response {
+    let cmd = match parse_verb(body) {
+        Ok(cmd) => cmd,
+        Err(e) => return Response::text(400, "Bad Request", &format!("rejected: {e}\n")),
+    };
+    registry
+        .counter_with(
+            names::CONTROL_COMMANDS_TOTAL,
+            "Operator control verbs accepted, by verb.",
+            "verb",
+            cmd.verb().name(),
+        )
+        .inc();
+    match cmd {
+        ControlCmd::Status => {
+            let mut line = control.status_line();
+            line.push('\n');
+            Response::text(200, "OK", &line)
+        }
+        other => {
+            let verb = other.verb().name();
+            control.submit(other);
+            Response::text(202, "Accepted", &format!("accepted: {verb}\n"))
+        }
+    }
+}
+
+struct Response {
+    code: u16,
+    reason: &'static str,
+    content_type: &'static str,
+    body: String,
+}
+
+impl Response {
+    fn text(code: u16, reason: &'static str, body: &str) -> Self {
+        Response {
+            code,
+            reason,
+            content_type: "text/plain; charset=utf-8",
+            body: body.to_string(),
+        }
+    }
+
+    fn write_to(&self, stream: &mut TcpStream) -> Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.code,
+            self.reason,
+            self.content_type,
+            self.body.len()
+        );
+        stream.write_all(head.as_bytes()).context("write head")?;
+        stream
+            .write_all(self.body.as_bytes())
+            .context("write body")?;
+        stream.flush().context("flush")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests may panic freely
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_end_detection() {
+        assert_eq!(find_header_end(b"GET / HTTP/1.1\r\n\r\n"), Some(16));
+        assert_eq!(find_header_end(b"GET / HTTP/1.1\r\n"), None);
+        assert_eq!(find_header_end(b""), None);
+    }
+
+    fn req(method: &str, path: &str, body: &str) -> Request {
+        Request {
+            method: method.to_string(),
+            path: path.to_string(),
+            body: body.to_string(),
+        }
+    }
+
+    #[test]
+    fn routes_respond() {
+        let reg = Registry::new();
+        reg.counter("t_total", "t").inc();
+        let cp = ControlPlane::new();
+        let r = route(&req("GET", "/metrics", ""), &reg, &cp);
+        assert_eq!(r.code, 200);
+        assert!(r.content_type.contains("version=0.0.4"));
+        assert!(r.body.contains("t_total 1"));
+        assert_eq!(route(&req("GET", "/healthz", ""), &reg, &cp).code, 200);
+        assert_eq!(route(&req("GET", "/readyz", ""), &reg, &cp).code, 503);
+        cp.mark_ready();
+        assert_eq!(route(&req("GET", "/readyz", ""), &reg, &cp).code, 200);
+        assert_eq!(route(&req("GET", "/nope", ""), &reg, &cp).code, 404);
+        assert_eq!(route(&req("PUT", "/metrics", ""), &reg, &cp).code, 404);
+    }
+
+    #[test]
+    fn control_route_enqueues_and_counts() {
+        let reg = Registry::new();
+        let cp = ControlPlane::new();
+        let r = route(&req("POST", "/control", "quiesce"), &reg, &cp);
+        assert_eq!(r.code, 202);
+        assert_eq!(cp.drain_mailbox(), vec![ControlCmd::Quiesce]);
+        // status answers inline, enqueues nothing
+        let r = route(&req("POST", "/control", "status"), &reg, &cp);
+        assert_eq!(r.code, 200);
+        assert!(cp.drain_mailbox().is_empty());
+        // bad spec rejected before the mailbox
+        let r = route(&req("POST", "/control", "set-planner bogus"), &reg, &cp);
+        assert_eq!(r.code, 400);
+        assert!(cp.drain_mailbox().is_empty());
+        let text = reg.render();
+        assert!(text.contains("fedhpc_control_commands_total{verb=\"quiesce\"} 1"));
+        assert!(text.contains("fedhpc_control_commands_total{verb=\"status\"} 1"));
+    }
+}

@@ -1,0 +1,59 @@
+//! Live observability + operator control plane (ROADMAP: "Observability
+//! and operator control plane").
+//!
+//! Everything in `metrics::TrainingReport` is post-hoc — it exists only
+//! after the run ends. This module makes a *running* fleet server
+//! observable and steerable:
+//!
+//! * [`registry`] — a registry of atomic counters, gauges and
+//!   fixed-bucket histograms. One process-wide instance
+//!   ([`global()`]) backs the always-on instrumentation in the
+//!   orchestrator, TCP transport, scratch pool and planner; tests and
+//!   embedders can build private [`Registry`] instances.
+//! * [`http`] — a hand-rolled HTTP/1.1 responder on
+//!   `std::net::TcpListener` serving `GET /metrics` (Prometheus text
+//!   exposition format 0.0.4), `/healthz`, `/readyz` and the operator
+//!   control endpoint (`POST /control`, `GET /status`). No HTTP crate:
+//!   the dependency posture stays anyhow + log.
+//! * [`control`] — operator verbs (`drain`, `quiesce`, `resume`,
+//!   `set-planner <spec>`, `set-strategy <spec>`, `status`) delivered
+//!   through a command mailbox that the orchestrator drains at
+//!   round/commit boundaries in both the sync and async_fedbuff
+//!   engines. Specs are validated against the same name-keyed config
+//!   registries the CLI uses *before* they are accepted.
+//!
+//! # Accuracy contract (relaxed ordering)
+//!
+//! Every hot-path increment is a single `AtomicU64` op with
+//! `Ordering::Relaxed` — near-zero cost, no fence, no lock. The
+//! trade-off is *point-in-time consistency, not accuracy*: each
+//! individual counter is exact (no increment is ever lost), but one
+//! `/metrics` scrape may observe metric A after an event and metric B
+//! before it, because relaxed ops carry no cross-metric ordering. Rates
+//! and totals are therefore trustworthy; exact cross-metric identities
+//! (e.g. `hits + misses == takes`) hold only once the instrumented code
+//! quiesces. Histograms follow the same contract per bucket: `_count`,
+//! `_sum` and each `_bucket` are individually exact, momentarily
+//! mutually skewed under concurrent writes.
+//!
+//! Telemetry is strictly read-only with respect to training state: no
+//! scrape or `status` poll touches RNG streams, cohort state or model
+//! bytes, so a seeded run is bit-identical with and without a live
+//! scraper (pinned by `rust/tests/telemetry_determinism.rs`).
+
+// Wire-reachable tree: the HTTP responder parses hostile network input,
+// and the registry renders into those responses. Must produce `Err`,
+// never a panic (fedhpc-lint enforces the wider rule; these attributes
+// make the unwrap/expect subclass unwriteable even under plain clippy).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+pub mod control;
+pub mod http;
+pub mod registry;
+
+pub use control::{parse_verb, ControlCmd, ControlPlane, Verb};
+pub use http::TelemetryServer;
+pub use registry::{
+    global, names, tier_of, Counter, Gauge, Histogram, Registry, ROUND_SECONDS_BUCKETS,
+    STALENESS_BUCKETS,
+};

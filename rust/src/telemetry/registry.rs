@@ -1,0 +1,472 @@
+//! Metric registry: atomic counters/gauges + fixed-bucket histograms,
+//! BTreeMap-ordered so the `/metrics` exposition is byte-stable for a
+//! given set of values (golden-file tested).
+//!
+//! Hot-path cost: one relaxed `AtomicU64` op per event — see the module
+//! docs on [`crate::telemetry`] for the exact accuracy contract, and
+//! `rust/benches/telemetry.rs` for the measured overhead on the ingest
+//! path (<1% of round time is the acceptance bar).
+//!
+//! Handles ([`Arc<Counter>`] etc.) are resolved once — at construction
+//! of the instrumented object or behind a `OnceLock` — so the registry
+//! mutex is never on a per-event path.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Canonical metric names — the single inventory shared by the
+/// instrumentation sites, the README "Operations" table and the tests.
+pub mod names {
+    /// Rounds (sync) / commits (async) finalized, including empty ones.
+    pub const ROUNDS_TOTAL: &str = "fedhpc_rounds_total";
+    /// Wall-clock (or virtual, in sims) seconds per round/commit.
+    pub const ROUND_SECONDS: &str = "fedhpc_round_duration_seconds";
+    /// Per-folded-update staleness in commits (always 0 in sync mode).
+    pub const STALENESS: &str = "fedhpc_update_staleness";
+    /// Updates discarded for exceeding `max_staleness`.
+    pub const STALE_DROPS_TOTAL: &str = "fedhpc_stale_drops_total";
+    /// Deadline misses, labelled by client speed tier ([`super::tier_of`]).
+    pub const DEADLINE_MISSES_TOTAL: &str = "fedhpc_deadline_misses_total";
+    /// Encoded update bytes folded by the server (ingest volume;
+    /// divide by time for throughput).
+    pub const INGEST_BYTES_TOTAL: &str = "fedhpc_ingest_bytes_total";
+    /// Updates folded by the server.
+    pub const INGEST_UPDATES_TOTAL: &str = "fedhpc_ingest_updates_total";
+    /// ScratchPool takes served from the free-list.
+    pub const SCRATCH_HITS_TOTAL: &str = "fedhpc_scratch_hits_total";
+    /// ScratchPool takes that had to allocate.
+    pub const SCRATCH_MISSES_TOTAL: &str = "fedhpc_scratch_misses_total";
+    /// TCP connections accepted since process start.
+    pub const TCP_ACCEPTS_TOTAL: &str = "fedhpc_tcp_accepts_total";
+    /// Registered TCP peers currently connected.
+    pub const TCP_ACTIVE_CONNECTIONS: &str = "fedhpc_tcp_active_connections";
+    /// Current global model version (commits applied).
+    pub const MODEL_VERSION: &str = "fedhpc_model_version";
+    /// Cohorts planned since process start.
+    pub const COHORTS_PLANNED_TOTAL: &str = "fedhpc_cohorts_planned_total";
+    /// Size of the most recently planned cohort.
+    pub const COHORT_SIZE: &str = "fedhpc_cohort_size";
+    /// Operator control verbs accepted, labelled by verb.
+    pub const CONTROL_COMMANDS_TOTAL: &str = "fedhpc_control_commands_total";
+}
+
+/// Round/commit latency buckets, seconds.
+pub const ROUND_SECONDS_BUCKETS: &[f64] =
+    &[0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0];
+
+/// Update staleness buckets, commits behind.
+pub const STALENESS_BUCKETS: &[f64] = &[0.0, 1.0, 2.0, 3.0, 5.0, 8.0, 13.0, 21.0, 34.0];
+
+/// Client speed tier for per-tier metric labels, derived from the
+/// registered profile's `speed_factor` (1.0 = the reference node).
+pub fn tier_of(speed_factor: f64) -> &'static str {
+    if speed_factor >= 0.9 {
+        "fast"
+    } else if speed_factor >= 0.45 {
+        "mid"
+    } else {
+        "slow"
+    }
+}
+
+/// Monotonically increasing event count. All ops relaxed.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous value (may go down). All ops relaxed; `dec` saturates
+/// at zero so a spurious extra decrement can never wrap to 2^64-1.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(1))
+            });
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket histogram. Buckets are stored non-cumulative and
+/// accumulated at exposition; the sum is kept in integer microunits
+/// (1e-6 of the observed value) so it stays a relaxed `fetch_add`.
+#[derive(Debug)]
+pub struct Histogram {
+    /// Ascending inclusive upper bounds; an implicit +Inf bucket
+    /// follows the last.
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_micro: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Self {
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_micro: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation. Negative / non-finite values clamp to 0
+    /// for the sum (the count and bucket still move, so nothing is
+    /// silently lost).
+    pub fn observe(&self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(self.bounds.len());
+        if let Some(b) = self.buckets.get(idx) {
+            b.fetch_add(1, Ordering::Relaxed);
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let micro = if v.is_finite() && v > 0.0 {
+            (v * 1e6).round() as u64
+        } else {
+            0
+        };
+        self.sum_micro.fetch_add(micro, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Observed sum (reconstructed from microunits).
+    pub fn sum(&self) -> f64 {
+        self.sum_micro.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Non-cumulative bucket counts (one extra +Inf bucket at the end).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect()
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<Histogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Hist(_) => "histogram",
+        }
+    }
+}
+
+struct Family {
+    help: String,
+    /// Label suffix (`""` or `{k="v"}`) → series. BTreeMap keeps the
+    /// exposition order stable.
+    series: BTreeMap<String, Metric>,
+}
+
+/// A set of metric families. `Registry::default()`/`new()` builds an
+/// empty private instance (tests, embedders); production
+/// instrumentation shares [`global()`].
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+/// The process-wide registry every always-on instrumentation site
+/// records into. Returned as an `Arc` so the exposition server can
+/// hold the same handle it would hold for a private test registry.
+pub fn global() -> &'static Arc<Registry> {
+    static GLOBAL: OnceLock<Arc<Registry>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Arc::new(Registry::default()))
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn get_or_insert<M, F, G>(&self, name: &str, series: &str, help: &str, make: F, pick: G) -> M
+    where
+        M: Clone,
+        F: FnOnce() -> (M, Metric),
+        G: Fn(&Metric) -> Option<M>,
+    {
+        let mut fams = crate::util::lock_unpoisoned(&self.families);
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            series: BTreeMap::new(),
+        });
+        if let Some(existing) = fam.series.get(series) {
+            if let Some(m) = pick(existing) {
+                return m;
+            }
+            // Kind clash: never panic on a telemetry path — hand back a
+            // detached instance so the caller still works, and say so.
+            log::warn!(
+                "telemetry: {name}{series} re-registered as a different kind \
+                 (was {}); returning a detached metric",
+                existing.kind()
+            );
+            return make().0;
+        }
+        let (handle, metric) = make();
+        fam.series.insert(series.to_string(), metric);
+        handle
+    }
+
+    /// Get or register the counter `name` (no labels).
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        self.counter_with(name, help, "", "")
+    }
+
+    /// Get or register the counter `name{label="value"}`. An empty
+    /// `label` means no labels.
+    pub fn counter_with(&self, name: &str, help: &str, label: &str, value: &str) -> Arc<Counter> {
+        let series = series_suffix(label, value);
+        self.get_or_insert(
+            name,
+            &series,
+            help,
+            || {
+                let c = Arc::new(Counter::default());
+                (c.clone(), Metric::Counter(c))
+            },
+            |m| match m {
+                Metric::Counter(c) => Some(c.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Get or register the gauge `name`.
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        self.get_or_insert(
+            name,
+            "",
+            help,
+            || {
+                let g = Arc::new(Gauge::default());
+                (g.clone(), Metric::Gauge(g))
+            },
+            |m| match m {
+                Metric::Gauge(g) => Some(g.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Get or register the histogram `name` over `bounds` (ascending
+    /// upper bounds; +Inf is implicit). Bounds are fixed at first
+    /// registration.
+    pub fn histogram(&self, name: &str, help: &str, bounds: &[f64]) -> Arc<Histogram> {
+        self.get_or_insert(
+            name,
+            "",
+            help,
+            || {
+                let h = Arc::new(Histogram::new(bounds));
+                (h.clone(), Metric::Hist(h))
+            },
+            |m| match m {
+                Metric::Hist(h) => Some(h.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Render the whole registry in Prometheus text exposition format
+    /// 0.0.4. Family and series order is BTreeMap (byte-stable).
+    pub fn render(&self) -> String {
+        let fams = crate::util::lock_unpoisoned(&self.families);
+        let mut out = String::new();
+        for (name, fam) in fams.iter() {
+            let kind = fam
+                .series
+                .values()
+                .next()
+                .map(Metric::kind)
+                .unwrap_or("untyped");
+            out.push_str(&format!("# HELP {name} {}\n", fam.help));
+            out.push_str(&format!("# TYPE {name} {kind}\n"));
+            for (suffix, metric) in fam.series.iter() {
+                match metric {
+                    Metric::Counter(c) => {
+                        out.push_str(&format!("{name}{suffix} {}\n", c.get()));
+                    }
+                    Metric::Gauge(g) => {
+                        out.push_str(&format!("{name}{suffix} {}\n", g.get()));
+                    }
+                    Metric::Hist(h) => {
+                        let counts = h.bucket_counts();
+                        let mut cum = 0u64;
+                        for (bound, n) in h.bounds.iter().zip(counts.iter()) {
+                            cum += n;
+                            out.push_str(&format!(
+                                "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                                fmt_f64(*bound)
+                            ));
+                        }
+                        cum += counts.last().copied().unwrap_or(0);
+                        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+                        out.push_str(&format!("{name}_sum {}\n", fmt_f64(h.sum())));
+                        out.push_str(&format!("{name}_count {}\n", h.count()));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn series_suffix(label: &str, value: &str) -> String {
+    if label.is_empty() {
+        String::new()
+    } else {
+        format!("{{{label}=\"{value}\"}}")
+    }
+}
+
+/// Stable float formatting for exposition: integral values print
+/// without a fractional part (`1`, not `1.0`), everything else uses
+/// Rust's shortest-roundtrip default.
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() && v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests may panic freely
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_roundtrip() {
+        let reg = Registry::new();
+        let c = reg.counter("t_total", "a counter");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same name → same underlying series
+        let c2 = reg.counter("t_total", "a counter");
+        c2.inc();
+        assert_eq!(c.get(), 6);
+        let g = reg.gauge("t_gauge", "a gauge");
+        g.set(9);
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 9);
+    }
+
+    #[test]
+    fn gauge_dec_saturates_at_zero() {
+        let g = Gauge::default();
+        g.dec();
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_sum() {
+        let reg = Registry::new();
+        let h = reg.histogram("t_lat", "latency", &[1.0, 2.0]);
+        for v in [0.5, 1.5, 3.0, 2.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.bucket_counts(), vec![1, 2, 1]);
+        assert!((h.sum() - 7.0).abs() < 1e-9);
+        // negative / non-finite observations count but add 0 to sum
+        h.observe(-4.0);
+        h.observe(f64::NAN);
+        assert_eq!(h.count(), 6);
+        assert!((h.sum() - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn labelled_series_expose_separately() {
+        let reg = Registry::new();
+        reg.counter_with("t_miss_total", "misses", "tier", "slow").add(2);
+        reg.counter_with("t_miss_total", "misses", "tier", "fast").inc();
+        let text = reg.render();
+        assert!(text.contains("t_miss_total{tier=\"fast\"} 1"));
+        assert!(text.contains("t_miss_total{tier=\"slow\"} 2"));
+        // one HELP/TYPE pair for the family
+        assert_eq!(text.matches("# TYPE t_miss_total").count(), 1);
+    }
+
+    #[test]
+    fn kind_clash_returns_detached_metric_not_panic() {
+        let reg = Registry::new();
+        let c = reg.counter("t_clash", "first");
+        c.inc();
+        let g = reg.gauge("t_clash", "second");
+        g.set(99);
+        // the registered series is untouched by the detached handle
+        assert!(reg.render().contains("t_clash 1"));
+    }
+
+    #[test]
+    fn render_order_is_stable() {
+        let reg = Registry::new();
+        reg.counter("t_b_total", "b").inc();
+        reg.counter("t_a_total", "a").inc();
+        let a = reg.render();
+        let b = reg.render();
+        assert_eq!(a, b);
+        let pos_a = a.find("t_a_total").unwrap();
+        let pos_b = a.find("t_b_total").unwrap();
+        assert!(pos_a < pos_b, "families must render name-ordered");
+    }
+
+    #[test]
+    fn tier_boundaries() {
+        assert_eq!(tier_of(1.0), "fast");
+        assert_eq!(tier_of(0.6), "mid");
+        assert_eq!(tier_of(0.2), "slow");
+    }
+
+    #[test]
+    fn fmt_f64_stable() {
+        assert_eq!(fmt_f64(1.0), "1");
+        assert_eq!(fmt_f64(0.25), "0.25");
+        assert_eq!(fmt_f64(0.0), "0");
+    }
+}

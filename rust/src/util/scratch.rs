@@ -22,11 +22,38 @@
 //! practice. Callers must only `put` buffers on paths that also
 //! `take` from the pool, or the cap fills with dead buffers.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// How many idle buffers a pool retains. Streaming ingest needs one;
 /// buffered strategies need one per in-flight update of a round.
 const MAX_POOLED: usize = 64;
+
+/// Global hit/miss counters shared by every pool instance (resolved
+/// once — `take` pays one extra relaxed atomic increment, see the
+/// accuracy contract in [`crate::telemetry`]).
+fn pool_counters() -> &'static (
+    Arc<crate::telemetry::Counter>,
+    Arc<crate::telemetry::Counter>,
+) {
+    static COUNTERS: OnceLock<(
+        Arc<crate::telemetry::Counter>,
+        Arc<crate::telemetry::Counter>,
+    )> = OnceLock::new();
+    COUNTERS.get_or_init(|| {
+        use crate::telemetry::names;
+        let g = crate::telemetry::global();
+        (
+            g.counter(
+                names::SCRATCH_HITS_TOTAL,
+                "ScratchPool takes served from the free-list.",
+            ),
+            g.counter(
+                names::SCRATCH_MISSES_TOTAL,
+                "ScratchPool takes that had to allocate.",
+            ),
+        )
+    })
+}
 
 /// Thread-safe free-list of dense `f32` scratch buffers.
 #[derive(Debug, Default)]
@@ -43,12 +70,18 @@ impl ScratchPool {
     /// elements. Contents are **unspecified** — the caller must fully
     /// initialize the buffer before reading it.
     pub fn take(&self, n: usize) -> Vec<f32> {
-        let mut buf = self
-            .bufs
-            .lock()
-            .expect("scratch pool poisoned")
-            .pop()
-            .unwrap_or_default();
+        let pooled = self.bufs.lock().expect("scratch pool poisoned").pop();
+        let (hits, misses) = pool_counters();
+        let mut buf = match pooled {
+            Some(b) => {
+                hits.inc();
+                b
+            }
+            None => {
+                misses.inc();
+                Vec::new()
+            }
+        };
         buf.resize(n, 0.0);
         buf
     }

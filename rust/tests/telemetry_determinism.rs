@@ -1,0 +1,111 @@
+//! PR 7 acceptance: a live scraper must be pure observation. Running
+//! the same seeded virtual-time sim with and without a concurrent
+//! `/metrics` + `/status` poller has to produce bit-identical results —
+//! same final model hash, same replay log, same CSV rows.
+//!
+//! The instrumentation sites write to the global registry in both runs;
+//! what this test pins is that *reading* it (render + status under
+//! load) never feeds back into the training path.
+
+use fedhpc::config::{presets::quickstart, ExperimentConfig, RoundMode, StalenessFn};
+use fedhpc::experiments::{run_sim, SimReport, SimTiming};
+use fedhpc::telemetry::{global, ControlPlane, TelemetryServer};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn small_cfg(name: &str) -> ExperimentConfig {
+    let mut cfg = quickstart();
+    cfg.name = name.to_string();
+    cfg.mock_runtime = true;
+    cfg.train.rounds = 5;
+    cfg.train.local_epochs = 1;
+    cfg.data.samples_per_client = 64;
+    cfg.data.eval_samples = 128;
+    cfg
+}
+
+/// The replay-relevant projection of a [`SimReport`]: everything the
+/// deterministic-regression suite pins, plus the serialized CSV rows.
+fn fingerprint(sim: &SimReport) -> (Option<u64>, Vec<String>, String) {
+    let csv: String = sim.report.rounds.iter().map(|r| r.to_csv_row() + "\n").collect();
+    let details: Vec<String> = sim.details.iter().map(|d| format!("{d:?}")).collect();
+    (sim.model_hash, details, csv)
+}
+
+fn scrape(addr: &str, path: &str) -> String {
+    let mut stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(_) => return String::new(),
+    };
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let req = format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n");
+    if stream.write_all(req.as_bytes()).is_err() {
+        return String::new();
+    }
+    let mut text = String::new();
+    let _ = stream.read_to_string(&mut text);
+    text
+}
+
+/// Run `cfg` while a scraper thread hammers the live endpoint backed
+/// by the GLOBAL registry (the one the sim's instrumentation writes
+/// to). Returns the sim result and the number of successful scrapes.
+fn run_with_scraper(cfg: &ExperimentConfig) -> (SimReport, u64) {
+    let cp = Arc::new(ControlPlane::new());
+    cp.set_status("state=sim".to_string());
+    cp.mark_ready();
+    let srv = TelemetryServer::bind("127.0.0.1:0", global().clone(), cp).unwrap();
+    let addr = srv.local_addr().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let scraper = {
+        let (addr, stop) = (addr.clone(), stop.clone());
+        std::thread::spawn(move || {
+            let mut ok = 0u64;
+            while !stop.load(Ordering::Acquire) {
+                if scrape(&addr, "/metrics").contains("HTTP/1.1 200") {
+                    ok += 1;
+                }
+                let _ = scrape(&addr, "/status");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            ok
+        })
+    };
+    // one scrape is guaranteed before the run even starts, so the
+    // "concurrent observer" claim can't vacuously pass on a fast sim
+    let warmup = scrape(&addr, "/metrics");
+    assert!(warmup.contains("HTTP/1.1 200"), "warmup scrape failed: {warmup:?}");
+    let sim = run_sim(cfg, &SimTiming::default(), true).unwrap();
+    stop.store(true, Ordering::Release);
+    let ok = scraper.join().unwrap();
+    srv.shutdown();
+    (sim, ok + 1)
+}
+
+#[test]
+fn sync_sim_is_bit_identical_under_live_scraping() {
+    let cfg = small_cfg("det_sync");
+    let quiet = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+    let (scraped, ok) = run_with_scraper(&cfg);
+    assert!(ok >= 1, "the scraper never completed a request");
+    assert!(quiet.model_hash.is_some(), "with_training sims carry a hash");
+    assert_eq!(fingerprint(&quiet), fingerprint(&scraped));
+    assert_eq!(quiet.total_time_s, scraped.total_time_s);
+}
+
+#[test]
+fn async_sim_is_bit_identical_under_live_scraping() {
+    let mut cfg = small_cfg("det_async");
+    cfg.round_mode = RoundMode::BufferedAsync {
+        buffer_k: 3,
+        max_staleness: 20,
+        staleness: StalenessFn::Polynomial { alpha: 0.5 },
+    };
+    let quiet = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+    let (scraped, ok) = run_with_scraper(&cfg);
+    assert!(ok >= 1, "the scraper never completed a request");
+    assert_eq!(fingerprint(&quiet), fingerprint(&scraped));
+}

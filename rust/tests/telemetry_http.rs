@@ -1,0 +1,318 @@
+//! Telemetry subsystem integration tests (PR 7): golden-file /metrics
+//! exposition, a live HTTP server exercised over real sockets, exact
+//! totals under multi-threaded hammering, and drain-mid-run against
+//! both round engines.
+//!
+//! All tests build PRIVATE `Registry` instances where values are
+//! asserted exactly — the global registry is shared by every test in
+//! the process, so its values are never pinned here.
+
+use fedhpc::config::{presets::quickstart, Partition, RoundMode, StalenessFn};
+use fedhpc::experiments::run_real_with_control;
+use fedhpc::metrics::RoundMetrics;
+use fedhpc::orchestrator::OrchestratorHooks;
+use fedhpc::telemetry::{
+    ControlCmd, ControlPlane, Registry, TelemetryServer, ROUND_SECONDS_BUCKETS,
+    STALENESS_BUCKETS,
+};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+const GOLDEN: &str = include_str!("golden/metrics_exposition.txt");
+
+/// A registry with one exemplar of every metric shape the production
+/// inventory uses, set to fixed values.
+fn golden_registry() -> Registry {
+    let reg = Registry::new();
+    reg.counter("fedhpc_rounds_total", "Rounds finalized.").add(3);
+    reg.counter(
+        "fedhpc_ingest_bytes_total",
+        "Encoded update bytes folded by the server.",
+    )
+    .add(4096);
+    for (tier, n) in [("fast", 0u64), ("mid", 1), ("slow", 2)] {
+        reg.counter_with(
+            "fedhpc_deadline_misses_total",
+            "Deadline misses by client speed tier.",
+            "tier",
+            tier,
+        )
+        .add(n);
+    }
+    reg.gauge(
+        "fedhpc_tcp_active_connections",
+        "Registered TCP peers currently connected.",
+    )
+    .set(4);
+    let rounds = reg.histogram(
+        "fedhpc_round_duration_seconds",
+        "Seconds per round.",
+        ROUND_SECONDS_BUCKETS,
+    );
+    for v in [0.05, 0.3, 2.0] {
+        rounds.observe(v);
+    }
+    let staleness = reg.histogram(
+        "fedhpc_update_staleness",
+        "Per-folded-update staleness in commits.",
+        STALENESS_BUCKETS,
+    );
+    for v in [0.0, 0.0, 1.0, 3.0] {
+        staleness.observe(v);
+    }
+    reg
+}
+
+#[test]
+fn metrics_exposition_matches_golden_file() {
+    assert_eq!(
+        golden_registry().render(),
+        GOLDEN,
+        "exposition format drifted — if intentional, regenerate \
+         rust/tests/golden/metrics_exposition.txt"
+    );
+}
+
+#[test]
+fn exposition_is_byte_stable_across_renders() {
+    let reg = golden_registry();
+    assert_eq!(reg.render(), reg.render());
+}
+
+// ---------------------------------------------------------------- //
+// live server over real sockets
+
+/// Minimal HTTP/1.1 client: one request, read to EOF (the server
+/// always closes). Returns (status_code, full_response_text).
+fn http(addr: &str, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect telemetry");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).expect("write request");
+    let mut text = String::new();
+    stream.read_to_string(&mut text).expect("read response");
+    let code: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable response: {text:?}"));
+    (code, text)
+}
+
+#[test]
+fn live_server_serves_metrics_health_ready_and_status() {
+    let reg = Arc::new(Registry::new());
+    reg.counter("t_live_total", "live test counter").add(7);
+    let cp = Arc::new(ControlPlane::new());
+    let srv = TelemetryServer::bind("127.0.0.1:0", reg.clone(), cp.clone()).unwrap();
+    let addr = srv.local_addr().to_string();
+
+    let (code, text) = http(&addr, "GET", "/metrics", "");
+    assert_eq!(code, 200);
+    assert!(text.contains("text/plain; version=0.0.4"));
+    assert!(text.contains("t_live_total 7"));
+
+    assert_eq!(http(&addr, "GET", "/healthz", "").0, 200);
+    // not ready until the round loop marks it
+    assert_eq!(http(&addr, "GET", "/readyz", "").0, 503);
+    cp.mark_ready();
+    assert_eq!(http(&addr, "GET", "/readyz", "").0, 200);
+
+    cp.set_status("state=running round=5".to_string());
+    let (code, text) = http(&addr, "GET", "/status", "");
+    assert_eq!(code, 200);
+    assert!(text.contains("state=running round=5"));
+
+    assert_eq!(http(&addr, "GET", "/no-such-route", "").0, 404);
+    srv.shutdown();
+}
+
+#[test]
+fn live_server_control_verbs_roundtrip() {
+    let reg = Arc::new(Registry::new());
+    let cp = Arc::new(ControlPlane::new());
+    let srv = TelemetryServer::bind("127.0.0.1:0", reg.clone(), cp.clone()).unwrap();
+    let addr = srv.local_addr().to_string();
+
+    let (code, text) = http(&addr, "POST", "/control", "quiesce");
+    assert_eq!(code, 202, "{text}");
+    let (code, _) = http(&addr, "POST", "/control", "set-planner tiered:3");
+    assert_eq!(code, 202);
+    // invalid spec rejected eagerly, never enqueued
+    let (code, text) = http(&addr, "POST", "/control", "set-planner oracle:9");
+    assert_eq!(code, 400, "{text}");
+    let (code, _) = http(&addr, "POST", "/control", "definitely-not-a-verb");
+    assert_eq!(code, 400);
+
+    assert_eq!(
+        cp.drain_mailbox(),
+        vec![
+            ControlCmd::Quiesce,
+            ControlCmd::SetPlanner("tiered:3".to_string())
+        ]
+    );
+    // accepted verbs were counted, rejected ones were not
+    let text = reg.render();
+    assert!(text.contains("fedhpc_control_commands_total{verb=\"quiesce\"} 1"));
+    assert!(text.contains("fedhpc_control_commands_total{verb=\"set-planner\"} 1"));
+    srv.shutdown();
+}
+
+#[test]
+fn live_server_survives_garbage_requests() {
+    let reg = Arc::new(Registry::new());
+    let cp = Arc::new(ControlPlane::new());
+    let srv = TelemetryServer::bind("127.0.0.1:0", reg, cp).unwrap();
+    let addr = srv.local_addr().to_string();
+
+    // raw garbage (no valid request line)
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.write_all(b"\r\n\r\n").unwrap();
+    let mut text = String::new();
+    let _ = s.read_to_string(&mut text);
+    assert!(text.starts_with("HTTP/1.1 400"), "got: {text:?}");
+
+    // the server still answers normal requests afterwards
+    assert_eq!(http(&addr, "GET", "/healthz", "").0, 200);
+    srv.shutdown();
+}
+
+// ---------------------------------------------------------------- //
+// concurrency: relaxed atomics lose nothing
+
+#[test]
+fn hammered_registry_keeps_exact_totals() {
+    const THREADS: usize = 8;
+    const PER_THREAD: u64 = 20_000;
+    let reg = Arc::new(Registry::new());
+    let c = reg.counter("t_hammer_total", "hammered counter");
+    let g = reg.gauge("t_hammer_gauge", "hammered gauge");
+    let h = reg.histogram("t_hammer_hist", "hammered histogram", &[0.5, 1.5]);
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let (c, g, h) = (c.clone(), g.clone(), h.clone());
+            std::thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    c.inc();
+                    g.inc();
+                    // alternate buckets deterministically per thread
+                    h.observe(if (i + t as u64) % 2 == 0 { 0.25 } else { 1.0 });
+                }
+            })
+        })
+        .collect();
+    for hd in handles {
+        hd.join().unwrap();
+    }
+    let total = THREADS as u64 * PER_THREAD;
+    assert_eq!(c.get(), total);
+    assert_eq!(g.get(), total);
+    assert_eq!(h.count(), total);
+    // each thread splits its observations evenly across the 2 buckets
+    assert_eq!(h.bucket_counts(), vec![total / 2, total / 2, 0]);
+    let text = reg.render();
+    assert!(text.contains(&format!("t_hammer_total {total}")));
+    assert!(text.contains(&format!("t_hammer_hist_count {total}")));
+}
+
+// ---------------------------------------------------------------- //
+// drain mid-run: both engines finish the in-flight round/commit
+
+/// Hooks that submit `drain` right after the first completed
+/// round/commit — exactly what an operator POSTing mid-run looks like
+/// to the orchestrator (the command sits in the mailbox until the next
+/// boundary).
+struct DrainAfterFirst {
+    cp: Arc<ControlPlane>,
+    seen: u32,
+}
+
+impl OrchestratorHooks for DrainAfterFirst {
+    fn on_round(&mut self, _m: &RoundMetrics) {
+        self.seen += 1;
+        if self.seen == 1 {
+            self.cp.submit(ControlCmd::Drain);
+        }
+    }
+}
+
+fn small_cfg(name: &str) -> fedhpc::config::ExperimentConfig {
+    let mut cfg = quickstart();
+    cfg.name = name.to_string();
+    cfg.mock_runtime = true;
+    cfg.train.rounds = 8;
+    cfg.train.local_epochs = 1;
+    cfg.data.samples_per_client = 64;
+    cfg.data.eval_samples = 128;
+    cfg.data.partition = Partition::Iid;
+    cfg
+}
+
+#[test]
+fn drain_stops_sync_engine_with_complete_report() {
+    let cfg = small_cfg("drain_sync");
+    let cp = Arc::new(ControlPlane::new());
+    let mut hooks = DrainAfterFirst {
+        cp: cp.clone(),
+        seen: 0,
+    };
+    let report = run_real_with_control(&cfg, &mut hooks, Some(cp.clone())).unwrap();
+    assert!(
+        !report.rounds.is_empty() && report.rounds.len() < cfg.train.rounds,
+        "drain must stop early but keep finished rounds, got {} of {}",
+        report.rounds.len(),
+        cfg.train.rounds
+    );
+    // every kept round is fully populated (the in-flight round was
+    // finished, not abandoned)
+    for r in &report.rounds {
+        assert!(r.selected > 0);
+        assert!(r.duration_s >= 0.0);
+        assert_eq!((r.staleness_min, r.staleness_mean, r.staleness_max), (0, 0.0, 0));
+    }
+    assert!(cp.is_ready(), "first dispatch must have marked readiness");
+    assert!(
+        cp.status_line().contains("state=draining"),
+        "status after drain: {}",
+        cp.status_line()
+    );
+}
+
+#[test]
+fn drain_stops_async_engine_with_complete_report() {
+    let mut cfg = small_cfg("drain_async");
+    cfg.round_mode = RoundMode::BufferedAsync {
+        buffer_k: 3,
+        max_staleness: 20,
+        staleness: StalenessFn::Polynomial { alpha: 0.5 },
+    };
+    let cp = Arc::new(ControlPlane::new());
+    let mut hooks = DrainAfterFirst {
+        cp: cp.clone(),
+        seen: 0,
+    };
+    let report = run_real_with_control(&cfg, &mut hooks, Some(cp)).unwrap();
+    assert!(
+        !report.rounds.is_empty() && report.rounds.len() < cfg.train.rounds,
+        "drain must stop early but keep finished commits, got {} of {}",
+        report.rounds.len(),
+        cfg.train.rounds
+    );
+    // a commit may legitimately close empty at its deadline, but the
+    // run as a whole must have folded work, and every populated commit
+    // must carry a coherent staleness triple
+    assert!(report.rounds.iter().any(|r| r.reported > 0));
+    for r in &report.rounds {
+        assert!(r.staleness_min <= r.staleness_max);
+        assert!(r.staleness_mean >= f64::from(r.staleness_min));
+        assert!(r.staleness_mean <= f64::from(r.staleness_max));
+    }
+}

@@ -1,0 +1,14 @@
+// Known-bad fixture for the panic_safety rule in the telemetry
+// subsystem: a hand-rolled HTTP request parser the way it must NOT be
+// written. telemetry/ is wire-reachable (any scraper or operator can
+// send arbitrary bytes), so every construct below must be flagged.
+
+fn parse_request(head: &str) -> (String, String) {
+    // a malformed request line has no second token: unwrap panics
+    let mut parts = head.split_whitespace();
+    let method = parts.next().unwrap().to_string(); // unwrap
+    let target = parts.next().expect("no target").to_string(); // expect
+    let first = head.as_bytes()[0]; // indexing
+    assert!(first != b' '); // assert!
+    (method, target)
+}

@@ -24,6 +24,7 @@ PANIC_SCOPE = [
     "orchestrator/server.rs",
     "client/worker.rs",
     "util/logging.rs",
+    "telemetry/",
 ]
 DET_SCOPE = [
     "orchestrator/planner.rs",

@@ -56,6 +56,7 @@ pub const PANIC_SCOPE: &[&str] = &[
     "orchestrator/server.rs",
     "client/worker.rs",
     "util/logging.rs",
+    "telemetry/",
 ];
 
 /// Determinism-critical modules: cohort order, fold order, virtual time.
@@ -949,6 +950,9 @@ mod tests {
         assert!(in_scope("compress/mod.rs", PANIC_SCOPE));
         assert!(in_scope("orchestrator/server.rs", PANIC_SCOPE));
         assert!(!in_scope("orchestrator/planner.rs", PANIC_SCOPE));
+        assert!(in_scope("telemetry/http.rs", PANIC_SCOPE));
+        assert!(in_scope("telemetry/registry.rs", PANIC_SCOPE));
+        assert!(!in_scope("telemetry/http.rs", DET_SCOPE));
         assert!(in_scope("orchestrator/planner.rs", DET_SCOPE));
         assert!(in_scope("sim/mod.rs", DET_SCOPE));
         assert!(!in_scope("network/tcp.rs", DET_SCOPE));

@@ -9,6 +9,7 @@ const PANIC_GOOD: &str = include_str!("../fixtures/panic_good.rs");
 const DET_BAD: &str = include_str!("../fixtures/det_bad.rs");
 const DET_GOOD: &str = include_str!("../fixtures/det_good.rs");
 const ALLOW_NO_REASON: &str = include_str!("../fixtures/allow_no_reason.rs");
+const TELEMETRY_HTTP_BAD: &str = include_str!("../fixtures/telemetry_http_bad.rs");
 
 fn unallowed(vs: &[Violation]) -> Vec<&Violation> {
     vs.iter().filter(|v| !v.allowed).collect()
@@ -96,6 +97,30 @@ fn reasonless_or_unknown_allow_is_an_error_and_suppresses_nothing() {
             .count(),
         2
     );
+}
+
+#[test]
+fn telemetry_http_bad_fixture_fires_under_panic_scope() {
+    // telemetry/ joined PANIC_SCOPE in PR 7; this fixture proves an
+    // `.unwrap()` in a telemetry request parser is actually caught
+    assert!(fedhpc_lint::in_scope(
+        "telemetry/http.rs",
+        fedhpc_lint::PANIC_SCOPE
+    ));
+    let vs = scan_snippet(TELEMETRY_HTTP_BAD, true, false);
+    let bad = unallowed(&vs);
+    for needle in ["`.unwrap()`", "`.expect(`", "slice/array indexing", "`assert!`"] {
+        assert!(
+            bad.iter().any(|v| v.msg.contains(needle)),
+            "expected a {needle} finding, got {bad:?}"
+        );
+    }
+    // the unwrap is on the request line: pin it to its source line
+    let unwrap_line = vs
+        .iter()
+        .find(|v| v.msg.contains("`.unwrap()`"))
+        .map(|v| v.line);
+    assert_eq!(unwrap_line, Some(9), "unwrap site moved in the fixture?");
 }
 
 #[test]
