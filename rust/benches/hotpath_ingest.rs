@@ -17,23 +17,37 @@
 //! allocs avoided) so the repo's perf trajectory is machine-readable
 //! from this PR onward. `FEDHPC_BENCH_BUDGET_MS` shrinks the budget
 //! for CI smoke runs.
+//!
+//! The shard-scaling sweep (ISSUE 8) times the same round through the
+//! persistent shard-worker pool at 1/2/4/8 workers: 1M params × 200
+//! concurrent arrivals, bit-identity to the serial fold asserted at
+//! every worker count before any timing. Target: ≥2.5× serial
+//! updates/sec at 4 workers.
 
 use fedhpc::benchkit::{
     bench, budget_from_env, json_num_obj, print_table, write_json_report, BenchStats,
 };
-use fedhpc::compress::{compress, decompress, DecodedView, Encoded};
+use fedhpc::compress::{compress, decompress, DecodedView, Encoded, SharedDecoded};
 use fedhpc::config::{Aggregation, CompressionConfig};
 use fedhpc::network::pre_encode;
 use fedhpc::orchestrator::strategy::registry::strategy_from_config;
 use fedhpc::orchestrator::strategy::SgdServer;
-use fedhpc::orchestrator::{AggInput, RoundAggregator, ViewInput};
+use fedhpc::orchestrator::{
+    default_ingest_shards, AggInput, RoundAggregator, SharedInput, ViewInput,
+};
 use fedhpc::util::json::Value;
+use fedhpc::util::parallel::ShardPool;
 use fedhpc::util::rng::Rng;
 use fedhpc::util::scratch::ScratchPool;
 use std::sync::Arc;
 
 const P: usize = 1_000_000;
 const K: usize = 20;
+/// Concurrent arrivals per round for the shard-scaling sweep: 200
+/// updates over `K` distinct payloads (`Arc`-shared, like the server's
+/// owned ingest), so the sweep measures fold throughput, not codec
+/// memory.
+const CONC: usize = 200;
 
 struct Case {
     name: &'static str,
@@ -97,6 +111,148 @@ fn round_fused(
         agg.fold_view(&view_input(c as u32, &view)).unwrap();
     }
     agg.finalize(global, &mut SgdServer).unwrap().new_params
+}
+
+/// `CONC` arrivals through the serial streaming fold (the reference
+/// the sharded pool must reproduce bit-for-bit).
+fn round_serial_conc(
+    strategy: &Arc<dyn fedhpc::orchestrator::AggStrategy>,
+    global: &[f32],
+    encs: &[Encoded],
+) -> Vec<f32> {
+    let mut agg = RoundAggregator::new(strategy.clone(), P);
+    for c in 0..CONC {
+        let view = DecodedView::of(&encs[c % encs.len()], P).unwrap();
+        agg.fold_view(&view_input(c as u32, &view)).unwrap();
+    }
+    agg.finalize(global, &mut SgdServer).unwrap().new_params
+}
+
+/// The same `CONC` arrivals enqueued into a persistent shard-worker
+/// pool: workers fold disjoint spans concurrently, finalize barriers
+/// and merges in shard order.
+fn round_sharded(
+    strategy: &Arc<dyn fedhpc::orchestrator::AggStrategy>,
+    scratch: &Arc<ScratchPool>,
+    pool: &Arc<ShardPool>,
+    global: &[f32],
+    payloads: &[Arc<SharedDecoded>],
+) -> Vec<f32> {
+    let mut agg = RoundAggregator::with_ingest(
+        strategy.clone(),
+        P,
+        scratch.clone(),
+        Some(pool.clone()),
+    );
+    assert!(agg.ingest_sharded(), "FedAvg must take the sharded path");
+    for c in 0..CONC {
+        let (n_samples, train_loss, update_var) = stats_of(c as u32);
+        agg.fold_shared(&SharedInput {
+            client: c as u32,
+            payload: payloads[c % payloads.len()].clone(),
+            n_samples,
+            train_loss,
+            update_var,
+        })
+        .unwrap();
+    }
+    agg.finalize(global, &mut SgdServer).unwrap().new_params
+}
+
+/// Shard-scaling sweep (ISSUE 8 acceptance): 1M params × `CONC`
+/// concurrent updates at 1/2/4/8 workers vs the serial reference.
+/// Bit-identity is asserted before any timing; per-worker-count
+/// throughput lands in `BENCH_ingest.json`.
+fn shard_scaling_sweep(
+    strategy: &Arc<dyn fedhpc::orchestrator::AggStrategy>,
+    scratch: &Arc<ScratchPool>,
+    global: &[f32],
+    budget: std::time::Duration,
+    stats: &mut Vec<BenchStats>,
+    extra: &mut Vec<(String, Value)>,
+) {
+    let encs: Vec<Encoded> = (0..K)
+        .map(|c| {
+            let mut r = Rng::new(5000 + c as u64);
+            let upd: Vec<f32> = (0..P).map(|_| r.normal() as f32 * 0.01).collect();
+            compress(&upd, &CompressionConfig::PAPER, c as u64)
+        })
+        .collect();
+    let payloads: Vec<Arc<SharedDecoded>> = encs
+        .iter()
+        .map(|e| Arc::new(SharedDecoded::new(Arc::new(e.clone()), P).unwrap()))
+        .collect();
+
+    let reference = round_serial_conc(strategy, global, &encs);
+    let n_shards = default_ingest_shards(P);
+    let mut serial_ups = None;
+    let mut sweep = Vec::new();
+    let serial = bench(&format!("ingest serial      ({CONC} upd)"), budget, || {
+        std::hint::black_box(round_serial_conc(strategy, global, &encs).len());
+    });
+    let ups = |s: &BenchStats| CONC as f64 / (s.mean_ns / 1e9);
+    serial_ups.replace(ups(&serial));
+    stats.push(serial);
+
+    for workers in [1usize, 2, 4, 8] {
+        let pool = Arc::new(ShardPool::new(workers, n_shards));
+        // bit-identity before timing: the pool must reproduce the
+        // serial fold exactly, at every worker count
+        let got = round_sharded(strategy, scratch, &pool, global, &payloads);
+        for (x, y) in reference.iter().zip(&got) {
+            assert_eq!(x.to_bits(), y.to_bits(), "sharded({workers}w) diverged");
+        }
+        let s = bench(
+            &format!("ingest sharded {workers}w/{n_shards}s ({CONC} upd)"),
+            budget,
+            || {
+                std::hint::black_box(
+                    round_sharded(strategy, scratch, &pool, global, &payloads).len(),
+                );
+            },
+        );
+        // the whole sweep reuses each pool's threads: per-fold spawns
+        // would show up here as threads_spawned > workers
+        assert_eq!(
+            pool.threads_spawned(),
+            workers,
+            "pool must spawn each worker exactly once"
+        );
+        sweep.push((workers, ups(&s)));
+        stats.push(s);
+    }
+
+    let serial_ups = serial_ups.unwrap();
+    let mut fields: Vec<(String, f64)> = vec![
+        ("params".into(), P as f64),
+        ("concurrent_updates".into(), CONC as f64),
+        ("shards".into(), n_shards as f64),
+        ("serial_updates_per_sec".into(), serial_ups),
+    ];
+    for &(w, u) in &sweep {
+        fields.push((format!("sharded_{w}w_updates_per_sec"), u));
+        fields.push((format!("sharded_{w}w_speedup"), u / serial_ups));
+    }
+    let borrowed: Vec<(&str, f64)> = fields.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    extra.push(("shard_scaling".to_string(), json_num_obj(&borrowed)));
+
+    let at4 = sweep
+        .iter()
+        .find(|&&(w, _)| w == 4)
+        .map(|&(_, u)| u / serial_ups)
+        .unwrap();
+    let worst = sweep
+        .iter()
+        .map(|&(_, u)| u / serial_ups)
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "\nshard scaling: serial {:.0} updates/s; 4 workers {:.2}x ({}); worst worker count {:.2}x ({})",
+        serial_ups,
+        at4,
+        if at4 >= 2.5 { "MEETS >=2.5x target" } else { "misses >=2.5x target" },
+        worst,
+        if worst >= 0.9 { "multi-shard keeps up with serial" } else { "SLOWER than serial" },
+    );
 }
 
 fn main() {
@@ -202,6 +358,8 @@ fn main() {
         stats.push(fused);
         stats.push(wire);
     }
+
+    shard_scaling_sweep(&strategy, &pool, &global, budget, &mut stats, &mut extra);
 
     print_table(
         "update ingest (densify-then-fold baseline vs fused decode→fold), K=20 rounds of 1M params",

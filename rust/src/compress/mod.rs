@@ -54,6 +54,7 @@ pub use sparsify::{sparsify_topk, Sparse};
 use crate::config::CompressionConfig;
 use crate::util::bytes::{f32_le_at, i16_le_at, u32_le_at};
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// A wire-ready encoded update.
 #[derive(Debug, Clone, PartialEq)]
@@ -236,8 +237,12 @@ enum ViewKind<'a> {
     /// Explicit (strictly increasing) indices + values.
     Indexed { idx: IdxSlice<'a>, vals: ValSlice<'a> },
     /// Seeded federated-dropout mask: kept indices are regenerated
-    /// (owned, O(kept)); values are borrowed from the inner encoding.
-    Kept { kept: Vec<u32>, vals: ValSlice<'a> },
+    /// (owned, O(kept)) or borrowed from a [`SharedDecoded`] that
+    /// regenerated them once; values borrow from the inner encoding.
+    Kept {
+        kept: std::borrow::Cow<'a, [u32]>,
+        vals: ValSlice<'a>,
+    },
 }
 
 /// A validated, zero-materialization decode of an [`Encoded`] update:
@@ -252,10 +257,11 @@ pub struct DecodedView<'a> {
 /// Minimum stored entries before a fold parallelizes (below this the
 /// scoped-thread spawn costs more than the scatter).
 const PAR_MIN_NNZ: usize = 64 * 1024;
-/// Accumulator chunk for parallel folds — must stay identical to the
-/// dense fold in `orchestrator::aggregate` so thread-count determinism
-/// arguments carry over unchanged.
-const FOLD_CHUNK: usize = 256 * 1024;
+/// Accumulator chunk for parallel folds — the single shared constant in
+/// `util::parallel` keeps this path and the dense fold/normalize in
+/// `orchestrator::aggregate` chunking identically, so thread-count
+/// determinism arguments carry over unchanged.
+const FOLD_CHUNK: usize = crate::util::parallel::FOLD_CHUNK;
 
 impl<'a> DecodedView<'a> {
     /// Build a view over `enc` for a model of `n` parameters,
@@ -375,7 +381,10 @@ impl<'a> DecodedView<'a> {
         }
         Ok(DecodedView {
             n,
-            kind: ViewKind::Kept { kept, vals },
+            kind: ViewKind::Kept {
+                kept: std::borrow::Cow::Owned(kept),
+                vals,
+            },
         })
     }
 
@@ -445,54 +454,150 @@ impl<'a> DecodedView<'a> {
     pub fn fold_scaled_into(&self, acc: &mut [f64], w: f64) {
         // lint:allow(panic_safety) caller-contract arity (accumulators sized to dense_len), not wire input
         assert_eq!(acc.len(), self.n, "fold_scaled_into length mismatch");
+        let parallel = match &self.kind {
+            ViewKind::Dense(_) => true,
+            ViewKind::Indexed { idx, .. } => idx.len() >= PAR_MIN_NNZ,
+            ViewKind::Kept { kept, .. } => kept.len() >= PAR_MIN_NNZ,
+        };
+        if parallel {
+            crate::util::parallel::par_chunks_mut(acc, FOLD_CHUNK, |offset, chunk| {
+                self.fold_range(chunk, offset, w);
+            });
+        } else {
+            self.fold_range(acc, 0, w);
+        }
+    }
+
+    /// Fold only the stored entries with coordinates in `[lo, hi)` into
+    /// `seg` (the accumulator sub-slice covering that coordinate range:
+    /// `seg[i - lo] += w * value`). This is the sharded-ingest entry
+    /// point: each shard worker folds its disjoint range, so across
+    /// shards every element still receives exactly one addition and the
+    /// result is independent of shard count for a fixed arrival order.
+    pub fn fold_scaled_into_range(&self, seg: &mut [f64], lo: usize, hi: usize, w: f64) {
+        // lint:allow(panic_safety) caller-contract arity (shard spans are computed from dense_len), not wire input
+        assert!(
+            lo <= hi && hi <= self.n && seg.len() == hi - lo,
+            "fold_scaled_into_range span mismatch"
+        );
+        self.fold_range(seg, lo, w);
+    }
+
+    /// Shared scatter kernel: fold stored entries with coordinates in
+    /// `[lo, lo + seg.len())` into `seg`. Sparse kinds bracket the
+    /// stored-entry positions by binary search (indices are strictly
+    /// increasing by construction).
+    fn fold_range(&self, seg: &mut [f64], lo: usize, w: f64) {
+        let hi = lo + seg.len();
         match &self.kind {
             ViewKind::Dense(vals) => {
-                crate::util::parallel::par_chunks_mut(acc, FOLD_CHUNK, |offset, chunk| {
-                    vals.for_each_range(offset, offset + chunk.len(), |i, v| {
-                        // lint:allow(panic_safety) for_each_range yields i in offset..offset+chunk.len()
-                        chunk[i - offset] += w * v as f64;
-                    });
+                vals.for_each_range(lo, hi, |i, v| {
+                    // lint:allow(panic_safety) for_each_range yields i in lo..lo+seg.len()
+                    seg[i - lo] += w * v as f64;
                 });
             }
             ViewKind::Indexed { idx, vals } => {
-                if idx.len() < PAR_MIN_NNZ {
-                    vals.for_each_range(0, vals.len(), |j, v| {
-                        // lint:allow(panic_safety) indices < n validated by from_parts_indexed; acc.len() == n asserted above
-                        acc[idx.get(j) as usize] += w * v as f64;
-                    });
-                } else {
-                    // indices are strictly increasing: each accumulator
-                    // chunk owns a contiguous index subrange, found by
-                    // binary search
-                    crate::util::parallel::par_chunks_mut(acc, FOLD_CHUNK, |offset, chunk| {
-                        let lo = idx.lower_bound(offset as u32);
-                        let hi = idx.lower_bound((offset + chunk.len()) as u32);
-                        vals.for_each_range(lo, hi, |j, v| {
-                            // lint:allow(panic_safety) lower_bound brackets the chunk's index subrange; indices validated < n
-                            chunk[idx.get(j) as usize - offset] += w * v as f64;
-                        });
-                    });
-                }
+                let a = idx.lower_bound(lo as u32);
+                let b = idx.lower_bound(hi.min(u32::MAX as usize) as u32);
+                vals.for_each_range(a, b, |j, v| {
+                    // lint:allow(panic_safety) lower_bound brackets the span's index subrange; indices validated < n
+                    seg[idx.get(j) as usize - lo] += w * v as f64;
+                });
             }
             ViewKind::Kept { kept, vals } => {
-                if kept.len() < PAR_MIN_NNZ {
-                    vals.for_each_range(0, vals.len(), |j, v| {
-                        // lint:allow(panic_safety) kept indices < n by mask construction; arity validated by from_parts_masked
-                        acc[kept[j] as usize] += w * v as f64;
-                    });
-                } else {
-                    // kept indices are sorted ascending by construction
-                    crate::util::parallel::par_chunks_mut(acc, FOLD_CHUNK, |offset, chunk| {
-                        let lo = kept.partition_point(|&i| (i as usize) < offset);
-                        let hi = kept.partition_point(|&i| (i as usize) < offset + chunk.len());
-                        vals.for_each_range(lo, hi, |j, v| {
-                            // lint:allow(panic_safety) partition_point brackets the chunk's index subrange; kept indices < n
-                            chunk[kept[j] as usize - offset] += w * v as f64;
-                        });
-                    });
-                }
+                let a = kept.partition_point(|&i| (i as usize) < lo);
+                let b = kept.partition_point(|&i| (i as usize) < hi);
+                vals.for_each_range(a, b, |j, v| {
+                    // lint:allow(panic_safety) partition_point brackets the span's index subrange; kept indices < n
+                    seg[kept[j] as usize - lo] += w * v as f64;
+                });
             }
         }
+    }
+}
+
+/// An owned, validated, shard-shareable decode of an [`Encoded`]
+/// update. `new` performs every [`DecodedView::of`] check exactly once
+/// on the ingest thread (pre-encoded wire bytes are decoded to the
+/// owned inner encoding, bit-identically — pinned by property test;
+/// seeded dropout masks regenerate their kept-index set once); shard
+/// workers then re-view the payload without re-validating and fold
+/// disjoint coordinate ranges via [`DecodedView::fold_scaled_into_range`].
+pub struct SharedDecoded {
+    enc: Arc<Encoded>,
+    /// Kept-coordinate set for `Encoded::Masked`, regenerated once.
+    kept: Option<Arc<Vec<u32>>>,
+    n: usize,
+}
+
+impl SharedDecoded {
+    /// Validate `enc` for a model of `n` parameters and make it
+    /// shareable across shard workers.
+    pub fn new(enc: Arc<Encoded>, n: usize) -> Result<SharedDecoded> {
+        let enc = match enc.as_ref() {
+            // decode wire bytes once to the owned inner encoding so the
+            // payload is self-contained ('static) for shard queues
+            Encoded::PreEncoded(p) => Arc::new(crate::network::message::decode_payload(&p.bytes)?),
+            _ => enc,
+        };
+        let view = DecodedView::of(&enc, n)?;
+        let kept = match view.kind {
+            ViewKind::Kept { kept, .. } => Some(Arc::new(kept.into_owned())),
+            _ => None,
+        };
+        Ok(SharedDecoded { enc, kept, n })
+    }
+
+    /// Logical (dense) length of the decoded update.
+    pub fn dense_len(&self) -> usize {
+        self.n
+    }
+
+    /// Stored entries the payload will fold.
+    pub fn nnz(&self) -> usize {
+        self.trusted_view().map(|v| v.nnz()).unwrap_or(0)
+    }
+
+    /// Fold this payload's entries with coordinates in `[lo, hi)` into
+    /// the shard segment `seg` (see
+    /// [`DecodedView::fold_scaled_into_range`]).
+    pub fn fold_range_into(&self, seg: &mut [f64], lo: usize, hi: usize, w: f64) {
+        if let Some(view) = self.trusted_view() {
+            view.fold_scaled_into_range(seg, lo, hi, w);
+        }
+    }
+
+    /// Re-build a view over the already-validated payload without
+    /// re-running the constructor checks. Returns `None` only for
+    /// variants `new` makes unrepresentable (kept without mask, wire
+    /// bytes), so callers treat it as a structural no-op, not an error.
+    fn trusted_view(&self) -> Option<DecodedView<'_>> {
+        let kind = match self.enc.as_ref() {
+            Encoded::Dense(v) => ViewKind::Dense(ValSlice::F32(v)),
+            Encoded::QDense(q) => ViewKind::Dense(quantized_vals(q)),
+            Encoded::Sparse(s) => ViewKind::Indexed {
+                idx: IdxSlice::U32(&s.idx),
+                vals: ValSlice::F32(&s.val),
+            },
+            Encoded::QSparse { idx, q } => ViewKind::Indexed {
+                idx: IdxSlice::U32(idx),
+                vals: quantized_vals(q),
+            },
+            Encoded::Masked { inner, .. } => {
+                let vals = match inner.as_ref() {
+                    Encoded::Dense(v) => ValSlice::F32(v),
+                    Encoded::QDense(q) => quantized_vals(q),
+                    _ => return None,
+                };
+                let kept = self.kept.as_ref()?;
+                ViewKind::Kept {
+                    kept: std::borrow::Cow::Borrowed(kept.as_slice()),
+                    vals,
+                }
+            }
+            Encoded::PreEncoded(_) => return None,
+        };
+        Some(DecodedView { n: self.n, kind })
     }
 }
 

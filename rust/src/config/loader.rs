@@ -93,6 +93,15 @@ fn decode(v: &Value) -> Result<ExperimentConfig> {
             ),
         }
     };
+    // optional sibling of `kind` inside the aggregation object; absent
+    // means 0 = auto. Strict on junk values like max_staleness above.
+    let ingest_threads = match v.req("aggregation")?.get("ingest_threads") {
+        None => 0,
+        Some(t) => u32::try_from(t.as_usize().ok_or_else(|| {
+            anyhow!("aggregation.ingest_threads must be a non-negative integer")
+        })?)
+        .map_err(|_| anyhow!("aggregation.ingest_threads exceeds u32"))?,
+    };
     let server_opt = match v.get("server_opt") {
         None => ServerOptKind::Sgd,
         Some(o) => match str_of(o, "kind")?.as_str() {
@@ -262,6 +271,7 @@ fn decode(v: &Value) -> Result<ExperimentConfig> {
         cluster,
         train,
         aggregation,
+        ingest_threads,
         server_opt,
         round_mode,
         selection,
@@ -296,20 +306,24 @@ pub fn to_json(cfg: &ExperimentConfig) -> String {
             obj(vec![("kind", s("dirichlet")), ("alpha", num(alpha))])
         }
     };
-    let aggregation = match cfg.aggregation {
-        Aggregation::FedAvg => obj(vec![("kind", s("fedavg"))]),
-        Aggregation::FedProx { mu } => {
-            obj(vec![("kind", s("fedprox")), ("mu", num(mu as f64))])
-        }
-        Aggregation::Weighted(scheme) => obj(vec![
-            ("kind", s("weighted")),
-            ("scheme", s(scheme.name())),
-        ]),
-        Aggregation::TrimmedMean { trim_frac } => obj(vec![
-            ("kind", s("trimmed_mean")),
-            ("trim_frac", num(trim_frac as f64)),
-        ]),
-        Aggregation::CoordinateMedian => obj(vec![("kind", s("coordinate_median"))]),
+    let aggregation = {
+        let mut fields = match cfg.aggregation {
+            Aggregation::FedAvg => vec![("kind", s("fedavg"))],
+            Aggregation::FedProx { mu } => {
+                vec![("kind", s("fedprox")), ("mu", num(mu as f64))]
+            }
+            Aggregation::Weighted(scheme) => vec![
+                ("kind", s("weighted")),
+                ("scheme", s(scheme.name())),
+            ],
+            Aggregation::TrimmedMean { trim_frac } => vec![
+                ("kind", s("trimmed_mean")),
+                ("trim_frac", num(trim_frac as f64)),
+            ],
+            Aggregation::CoordinateMedian => vec![("kind", s("coordinate_median"))],
+        };
+        fields.push(("ingest_threads", num(f64::from(cfg.ingest_threads))));
+        obj(fields)
     };
     let server_opt = match cfg.server_opt {
         ServerOptKind::Sgd => obj(vec![("kind", s("sgd"))]),
@@ -633,6 +647,30 @@ mod tests {
         let err = from_json_str(&text).unwrap_err();
         assert!(
             format!("{err:#}").contains("max_staleness"),
+            "got: {err:#}"
+        );
+    }
+
+    #[test]
+    fn missing_ingest_threads_defaults_to_auto() {
+        // configs written before the parallel-ingest axis existed
+        // still load, resolving to auto (0)
+        let text = to_json(&quickstart());
+        assert!(text.contains("\"ingest_threads\":1"), "got: {text}");
+        let stripped = text.replace(",\"ingest_threads\":1", "");
+        assert!(!stripped.contains("ingest_threads"), "strip failed");
+        let cfg = from_json_str(&stripped).unwrap();
+        assert_eq!(cfg.ingest_threads, 0);
+    }
+
+    #[test]
+    fn negative_ingest_threads_errors_instead_of_saturating() {
+        let text = to_json(&quickstart())
+            .replace("\"ingest_threads\":1", "\"ingest_threads\":-2");
+        assert!(text.contains("-2"), "replacement failed: {text}");
+        let err = from_json_str(&text).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("ingest_threads"),
             "got: {err:#}"
         );
     }

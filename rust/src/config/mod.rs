@@ -907,6 +907,12 @@ pub struct ExperimentConfig {
     pub cluster: ClusterConfig,
     pub train: TrainConfig,
     pub aggregation: Aggregation,
+    /// Shard-worker threads for parallel server ingest: 0 = auto
+    /// (hardware parallelism), 1 = serial reference path, N > 1 = a
+    /// persistent pool of N workers folding update spans concurrently.
+    /// The aggregate is bit-identical for a fixed arrival order at any
+    /// setting (see `orchestrator::aggregate::ShardedAggregator`).
+    pub ingest_threads: u32,
     pub server_opt: ServerOptKind,
     /// Round execution semantics (sync rounds vs buffered async).
     pub round_mode: RoundMode,

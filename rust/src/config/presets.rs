@@ -61,6 +61,9 @@ pub fn quickstart() -> ExperimentConfig {
             ..TrainConfig::default()
         },
         aggregation: Aggregation::FedAvg,
+        // tests and examples want the serial reference path unless a
+        // run opts in; 1 builds no pool at all
+        ingest_threads: 1,
         server_opt: ServerOptKind::Sgd,
         round_mode: RoundMode::Sync,
         selection: SelectionConfig {
@@ -113,6 +116,9 @@ pub fn paper_testbed() -> ExperimentConfig {
             ..TrainConfig::default()
         },
         aggregation: Aggregation::FedProx { mu: 0.01 },
+        // the paper testbed ingests 20 clients/round of full-size
+        // models — let the pool size itself to the host
+        ingest_threads: 0,
         server_opt: ServerOptKind::Sgd,
         round_mode: RoundMode::Sync,
         selection: SelectionConfig {

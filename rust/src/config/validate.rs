@@ -77,6 +77,14 @@ pub fn validate(cfg: &ExperimentConfig) -> Result<()> {
     if cfg.train.lr.is_nan() || cfg.train.lr <= 0.0 {
         bail!("config: lr must be positive, got {}", cfg.train.lr);
     }
+    // 0 = auto and 1 = serial are always fine; an absurd explicit
+    // thread count is almost certainly a typo'd units mistake
+    if cfg.ingest_threads > 1024 {
+        bail!(
+            "config: ingest_threads must be <= 1024 (0 = auto), got {}",
+            cfg.ingest_threads
+        );
+    }
     // strategy / server-opt parameter ranges: shared with the name
     // parser so the CLI and config-file paths reject the same inputs
     cfg.aggregation.check_params()?;
@@ -238,6 +246,17 @@ mod tests {
             staleness: StalenessFn::Polynomial { alpha: f32::NAN },
         };
         assert!(validate(&c).is_err(), "NaN alpha");
+    }
+
+    #[test]
+    fn rejects_absurd_ingest_threads() {
+        let mut c = quickstart();
+        c.ingest_threads = 1025;
+        assert!(validate(&c).is_err());
+        for ok in [0, 1, 8, 1024] {
+            c.ingest_threads = ok;
+            assert!(validate(&c).is_ok(), "ingest_threads {ok} should pass");
+        }
     }
 
     #[test]

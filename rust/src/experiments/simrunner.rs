@@ -36,7 +36,7 @@
 //! both modes.
 
 use crate::cluster::{Cluster, Node};
-use crate::compress::expected_wire_bytes;
+use crate::compress::{expected_wire_bytes, Encoded, SharedDecoded};
 use crate::config::{ExperimentConfig, RoundMode, StalenessFn};
 use crate::data::FederatedDataset;
 use crate::faults::{FaultAction, FaultInjector};
@@ -45,12 +45,16 @@ use crate::network::ClientProfile;
 use crate::orchestrator::planner::planner_from_selection;
 use crate::orchestrator::strategy::registry as strategy_registry;
 use crate::orchestrator::{
-    AggInput, ClientRegistry, DispatchPlan, EvalHarness, PlanContext, RoundAggregator,
+    default_ingest_shards, AggInput, ClientRegistry, DispatchPlan, EvalHarness, PlanContext,
+    RoundAggregator, SharedInput,
 };
 use crate::runtime::{MockRuntime, ModelRuntime};
 use crate::sim::{EventQueue, VirtualClock};
+use crate::util::parallel::{resolve_ingest_threads, ShardPool};
 use crate::util::rng::Rng;
+use crate::util::scratch::ScratchPool;
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// Timing model parameters.
 #[derive(Debug, Clone, Copy)]
@@ -209,6 +213,49 @@ fn setup(cfg: &ExperimentConfig, with_training: bool) -> Result<SimSetup> {
     })
 }
 
+/// Build the sim's sharded-ingest pool from the config knob, exactly
+/// like the real orchestrator's builder: `None` is the serial
+/// reference path (`ingest_threads` 1, or auto on a 1-cpu box).
+fn sim_ingest_pool(cfg: &ExperimentConfig, n_params: usize) -> Option<Arc<ShardPool>> {
+    let threads = resolve_ingest_threads(cfg.ingest_threads);
+    (threads > 1).then(|| Arc::new(ShardPool::new(threads, default_ingest_shards(n_params))))
+}
+
+/// Fold one locally-trained update on whichever ingest path the round
+/// aggregator selected: the sharded pool takes ownership of the dense
+/// delta (workers fold disjoint spans), the serial path streams it.
+/// Both produce bit-identical aggregates for the sim's fixed virtual
+/// arrival order.
+fn sim_fold(
+    agg: &mut RoundAggregator,
+    input: AggInput,
+    n_params: usize,
+    scale: f64,
+) -> Result<()> {
+    if agg.ingest_sharded() {
+        let AggInput {
+            client,
+            delta,
+            n_samples,
+            train_loss,
+            update_var,
+        } = input;
+        let payload = SharedDecoded::new(Arc::new(Encoded::Dense(delta)), n_params)?;
+        agg.fold_shared_scaled(
+            &SharedInput {
+                client,
+                payload: Arc::new(payload),
+                n_samples,
+                train_loss,
+                update_var,
+            },
+            scale,
+        )
+    } else {
+        agg.fold_scaled(&input, scale)
+    }
+}
+
 /// Run a virtual-time experiment. `with_training=false` skips model
 /// math entirely (pure timing, e.g. Table 3); `true` trains a mock
 /// model so accuracy-vs-time questions can be answered. The engine —
@@ -252,6 +299,9 @@ fn run_sim_sync(
     let strategy = strategy_registry::strategy_from_config(&cfg.aggregation);
     let mut server_opt = strategy_registry::server_opt_from_config(&cfg.server_opt);
     let mut planner = planner_from_selection(&cfg.selection);
+    // one scratch + shard pool for the whole run, like the real loop
+    let scratch = Arc::new(ScratchPool::new());
+    let ingest = sim_ingest_pool(cfg, params.len());
     let mut rng = Rng::new(cfg.seed ^ 0x51312);
     let mut now_s = 0.0f64;
     let mut report = TrainingReport::new(&cfg.name);
@@ -396,9 +446,15 @@ fn run_sim_sync(
             if inputs.is_empty() {
                 (f64::NAN, None, None, 0.0)
             } else {
-                let mut agg = RoundAggregator::new(strategy.clone(), params.len());
-                for input in &inputs {
-                    agg.fold(input)?;
+                let mut agg = RoundAggregator::with_ingest(
+                    strategy.clone(),
+                    params.len(),
+                    scratch.clone(),
+                    ingest.clone(),
+                );
+                let n_params = params.len();
+                for input in inputs {
+                    sim_fold(&mut agg, input, n_params, 1.0)?;
                 }
                 let out = agg.finalize(&params, server_opt.as_mut())?;
                 let e = eval.as_ref().unwrap().evaluate(&out.new_params)?;
@@ -509,6 +565,9 @@ fn run_sim_async(
     let strategy = strategy_registry::strategy_from_config(&cfg.aggregation);
     let mut server_opt = strategy_registry::server_opt_from_config(&cfg.server_opt);
     let mut planner = planner_from_selection(&cfg.selection);
+    // one scratch + shard pool for the whole run, like the real loop
+    let scratch = Arc::new(ScratchPool::new());
+    let ingest = sim_ingest_pool(cfg, params.len());
     let mut rng = Rng::new(cfg.seed ^ 0x51312);
     let mut clock = VirtualClock::new();
     let mut queue: EventQueue<AsyncArrival> = EventQueue::new();
@@ -641,7 +700,12 @@ fn run_sim_async(
     }
 
     let total_commits = cfg.train.rounds as u32;
-    let mut agg = RoundAggregator::new(strategy.clone(), params.len());
+    let mut agg = RoundAggregator::with_ingest(
+        strategy.clone(),
+        params.len(),
+        scratch.clone(),
+        ingest.clone(),
+    );
     let mut folds: Vec<(u32, u32)> = Vec::new();
     let mut stale_drops: u32 = 0;
     let mut silent: u32 = 0;
@@ -663,7 +727,7 @@ fn run_sim_async(
                  (fault rates too high for buffer_k {buffer_k}?)"
             );
         }
-        let Some((t, arr)) = queue.pop() else {
+        let Some((t, mut arr)) = queue.pop() else {
             bail!("async sim: event queue drained unexpectedly");
         };
         clock.advance_to(t)?;
@@ -675,8 +739,8 @@ fn run_sim_async(
                 stale_drops += 1;
                 planner.report_failure(&mut registry, arr.client, commit);
             } else {
-                if let Some(input) = &arr.input {
-                    agg.fold_scaled(input, staleness.discount(s))?;
+                if let Some(input) = arr.input.take() {
+                    sim_fold(&mut agg, input, params.len(), staleness.discount(s))?;
                 }
                 folds.push((arr.client, s));
                 planner.report_success(
@@ -700,7 +764,12 @@ fn run_sim_async(
             let (train_loss, eval_accuracy, eval_loss, model_delta) = if with_training {
                 let full = std::mem::replace(
                     &mut agg,
-                    RoundAggregator::new(strategy.clone(), params.len()),
+                    RoundAggregator::with_ingest(
+                        strategy.clone(),
+                        params.len(),
+                        scratch.clone(),
+                        ingest.clone(),
+                    ),
                 );
                 let out = full.finalize(&params, server_opt.as_mut())?;
                 let e = eval.as_ref().unwrap().evaluate(&out.new_params)?;
@@ -716,7 +785,12 @@ fn run_sim_async(
                     delta,
                 )
             } else {
-                agg = RoundAggregator::new(strategy.clone(), params.len());
+                agg = RoundAggregator::with_ingest(
+                    strategy.clone(),
+                    params.len(),
+                    scratch.clone(),
+                    ingest.clone(),
+                );
                 (f64::NAN, None, None, 0.0)
             };
             let (staleness_min, staleness_mean, staleness_max) =

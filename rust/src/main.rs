@@ -111,6 +111,9 @@ fn load_config(p: &fedhpc::util::argparse::Parsed) -> Result<ExperimentConfig> {
     if let Some(addr) = p.get("telemetry-addr") {
         cfg.telemetry.addr = Some(addr.to_string());
     }
+    if let Some(t) = p.get("ingest-threads") {
+        cfg.ingest_threads = t.parse().context("--ingest-threads")?;
+    }
     config::validate(&cfg)?;
     Ok(cfg)
 }
@@ -165,6 +168,11 @@ fn train_args() -> Args {
             "telemetry-addr",
             None,
             "bind live /metrics + control endpoint (e.g. 127.0.0.1:9469)",
+        )
+        .opt(
+            "ingest-threads",
+            None,
+            "shard-worker threads for parallel server ingest: 0 = auto, 1 = serial",
         )
         .flag("mock", "use the pure-Rust mock runtime")
 }
@@ -259,6 +267,11 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             "telemetry-addr",
             None,
             "bind live /metrics + control endpoint (e.g. 127.0.0.1:9469)",
+        )
+        .opt(
+            "ingest-threads",
+            None,
+            "shard-worker threads for parallel server ingest: 0 = auto, 1 = serial",
         )
         .flag("mock", "use the mock runtime")
         .parse(rest)?;

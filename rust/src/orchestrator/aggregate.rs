@@ -51,9 +51,12 @@
 
 use super::strategy::{registry, RoundAggregator, SgdServer};
 use crate::cluster::NodeId;
-use crate::compress::DecodedView;
+use crate::compress::{DecodedView, SharedDecoded};
 use crate::config::Aggregation;
+use crate::util::lock_unpoisoned;
+use crate::util::parallel::{ShardPool, FOLD_CHUNK};
 use anyhow::{bail, Result};
+use std::sync::{Arc, Mutex};
 
 /// One client's contribution.
 #[derive(Debug, Clone)]
@@ -61,6 +64,20 @@ pub struct AggInput {
     pub client: NodeId,
     /// Dense decoded update Δ_c.
     pub delta: Vec<f32>,
+    pub n_samples: u64,
+    pub train_loss: f32,
+    pub update_var: f32,
+}
+
+/// One client's contribution as an owned, shard-shareable decoded
+/// payload — the sharded-ingest counterpart of [`ViewInput`]. The
+/// payload was validated exactly once on the ingest thread
+/// ([`SharedDecoded::new`]); shard workers fold disjoint coordinate
+/// ranges of it concurrently.
+pub struct SharedInput {
+    pub client: NodeId,
+    /// Validated, owned decode of the arriving update Δ_c.
+    pub payload: Arc<SharedDecoded>,
     pub n_samples: u64,
     pub train_loss: f32,
     pub update_var: f32,
@@ -144,10 +161,7 @@ impl StreamingAggregator {
     }
 
     fn check_weight(&self, w: f64, client: NodeId) -> Result<()> {
-        if w.is_nan() || w.is_infinite() || w < 0.0 {
-            bail!("aggregate: invalid weight {w} for client {client}");
-        }
-        Ok(())
+        check_weight(w, client)
     }
 
     /// Per-update bookkeeping shared by both fold entry points.
@@ -178,7 +192,7 @@ impl StreamingAggregator {
         // exactly one addition per fold, so the value is independent of
         // the thread count (arrival order is the only order that
         // matters — see module docs)
-        crate::util::parallel::par_chunks_mut(&mut self.acc, 256 * 1024, |offset, chunk| {
+        crate::util::parallel::par_chunks_mut(&mut self.acc, FOLD_CHUNK, |offset, chunk| {
             let d = &delta[offset..offset + chunk.len()];
             for (a, &x) in chunk.iter_mut().zip(d) {
                 *a += w * x as f64;
@@ -214,24 +228,197 @@ impl StreamingAggregator {
     /// Apply the single normalization scalar, producing the round's
     /// aggregated update `Δ_agg = acc / Σ raw_c`.
     pub fn finalize(self) -> Result<AggDelta> {
-        if self.raw.is_empty() {
-            bail!("aggregate: no updates to aggregate");
+        normalize_delta(
+            self.acc,
+            self.raw,
+            self.total_weight,
+            self.n_total,
+            self.loss_weighted,
+        )
+    }
+}
+
+/// Raw-weight sanity shared by every fold entry point.
+fn check_weight(w: f64, client: NodeId) -> Result<()> {
+    if w.is_nan() || w.is_infinite() || w < 0.0 {
+        bail!("aggregate: invalid weight {w} for client {client}");
+    }
+    Ok(())
+}
+
+/// Shared finalize tail: validate the weight mass, apply the single
+/// normalization scalar `1/Σ raw_c`, and package the round's
+/// [`AggDelta`]. Both the streaming and sharded backends end here, so
+/// their outputs are bit-identical by construction once their merged
+/// accumulators match.
+fn normalize_delta(
+    mut delta: Vec<f64>,
+    raw: Vec<(NodeId, f64)>,
+    total_weight: f64,
+    n_total: f64,
+    loss_weighted: f64,
+) -> Result<AggDelta> {
+    if raw.is_empty() {
+        bail!("aggregate: no updates to aggregate");
+    }
+    let total = total_weight;
+    if total.is_nan() || total <= 0.0 {
+        bail!("aggregate: degenerate weights (total {total})");
+    }
+    crate::util::parallel::par_chunks_mut(&mut delta, FOLD_CHUNK, |_offset, chunk| {
+        for a in chunk.iter_mut() {
+            *a /= total;
         }
-        let total = self.total_weight;
-        if total.is_nan() || total <= 0.0 {
-            bail!("aggregate: degenerate weights (total {total})");
+    });
+    Ok(AggDelta {
+        delta,
+        weights: raw.iter().map(|&(c, w)| (c, w / total)).collect(),
+        mean_train_loss: loss_weighted / n_total,
+    })
+}
+
+/// Elements per ingest shard. At 1M params this yields 8 shards, so the
+/// bench's 8-worker sweep point still has distinct shards to own.
+pub const INGEST_SHARD_SPAN: usize = 128 * 1024;
+
+/// Number of accumulator shards for a model of `n_params` elements — a
+/// pure function of the model size, never of the thread count, so the
+/// element→shard mapping (and hence the per-shard addition order) is
+/// identical no matter how many workers serve the pool.
+pub fn default_ingest_shards(n_params: usize) -> usize {
+    n_params.div_ceil(INGEST_SHARD_SPAN).max(1)
+}
+
+/// Fixed shard boundaries: `n_shards` contiguous disjoint `[lo, hi)`
+/// spans covering `[0, n_params)`. Computed once per round from the
+/// model size and shard count alone (determinism: same inputs → same
+/// boundaries, enforced by fedhpc-lint's determinism scope on this
+/// module).
+pub fn shard_spans(n_params: usize, n_shards: usize) -> Vec<(usize, usize)> {
+    let n_shards = n_shards.max(1);
+    let span = n_params.div_ceil(n_shards).max(1);
+    (0..n_shards)
+        .map(|s| ((s * span).min(n_params), ((s + 1) * span).min(n_params)))
+        .collect()
+}
+
+/// Sharded streaming backend: the f64 accumulator is split at the fixed
+/// [`shard_spans`] boundaries and each span lives behind its own lock;
+/// folding an update enqueues one job per shard on the persistent
+/// [`ShardPool`], so *different* updates fold concurrently on disjoint
+/// element ranges.
+///
+/// # Bit-identity argument
+///
+/// Every element belongs to exactly one shard (fixed boundaries,
+/// independent of worker count); each shard's queue is FIFO and served
+/// by exactly one worker, so a shard's elements receive their additions
+/// in submission (= arrival) order — the same per-element addition
+/// order as the serial [`StreamingAggregator`]. Segments start at
+/// `+0.0` like the serial accumulator, the merge at [`finalize`] is a
+/// bitwise copy in shard-index order, and the normalization tail is the
+/// shared [`normalize_delta`]. Hence for a fixed arrival order the
+/// result is bit-identical to the serial path at every shard/worker
+/// count — pinned by property test in `prop_invariants`.
+///
+/// [`finalize`]: ShardedAggregator::finalize
+pub struct ShardedAggregator {
+    pool: Arc<ShardPool>,
+    /// Fixed `[lo, hi)` coordinate span per shard.
+    spans: Vec<(usize, usize)>,
+    /// Per-shard accumulator segment (starts at `+0.0`).
+    segs: Vec<Arc<Mutex<Vec<f64>>>>,
+    raw: Vec<(NodeId, f64)>,
+    total_weight: f64,
+    n_total: f64,
+    loss_weighted: f64,
+    n_params: usize,
+}
+
+impl ShardedAggregator {
+    /// Start a round's sharded aggregation for a model of `n_params`
+    /// entries, reusing the given persistent pool (no threads spawn
+    /// here — that is the point).
+    pub fn new(n_params: usize, pool: Arc<ShardPool>) -> Self {
+        let spans = shard_spans(n_params, pool.n_shards());
+        let segs = spans
+            .iter()
+            .map(|&(lo, hi)| Arc::new(Mutex::new(vec![0f64; hi - lo])))
+            .collect();
+        ShardedAggregator {
+            pool,
+            spans,
+            segs,
+            raw: Vec::new(),
+            total_weight: 0.0,
+            n_total: 0.0,
+            loss_weighted: 0.0,
+            n_params,
         }
-        let mut delta = self.acc;
-        crate::util::parallel::par_chunks_mut(&mut delta, 256 * 1024, |_offset, chunk| {
-            for a in chunk.iter_mut() {
-                *a /= total;
+    }
+
+    /// Updates accepted (enqueued) so far.
+    pub fn n_updates(&self) -> usize {
+        self.raw.len()
+    }
+
+    /// Fold one arriving update with raw weight `w`: validation and
+    /// bookkeeping happen here on the ingest thread (same error surface
+    /// as [`StreamingAggregator::fold_view`]), then one job per shard
+    /// is enqueued in arrival order and this call returns — the actual
+    /// additions overlap with the next arrival.
+    pub fn fold_shared(&mut self, input: &SharedInput, w: f64) -> Result<()> {
+        if input.payload.dense_len() != self.n_params {
+            bail!(
+                "aggregate: client {} delta length {} != {}",
+                input.client,
+                input.payload.dense_len(),
+                self.n_params
+            );
+        }
+        check_weight(w, input.client)?;
+        for (s, (&(lo, hi), seg)) in self.spans.iter().zip(&self.segs).enumerate() {
+            let seg = seg.clone();
+            let payload = input.payload.clone();
+            self.pool.submit(s, move || {
+                let mut seg = lock_unpoisoned(&seg);
+                payload.fold_range_into(&mut seg, lo, hi, w);
+            });
+        }
+        self.raw.push((input.client, w));
+        self.total_weight += w;
+        let n = input.n_samples.max(1) as f64;
+        self.n_total += n;
+        self.loss_weighted += input.train_loss as f64 * n;
+        Ok(())
+    }
+
+    /// Deterministic barrier + merge: wait for every enqueued shard job
+    /// (re-throwing any worker panic), copy the segments back into one
+    /// accumulator in shard-index order, and normalize via the shared
+    /// tail — producing an [`AggDelta`] indistinguishable from the
+    /// serial backend's.
+    pub fn finalize(self) -> Result<AggDelta> {
+        self.pool.wait_idle();
+        let mut delta = vec![0f64; self.n_params];
+        for (&(lo, hi), seg) in self.spans.iter().zip(&self.segs) {
+            let seg = lock_unpoisoned(seg);
+            if let Some(dst) = delta.get_mut(lo..hi) {
+                dst.copy_from_slice(&seg);
             }
-        });
-        Ok(AggDelta {
+        }
+        normalize_delta(
             delta,
-            weights: self.raw.iter().map(|&(c, w)| (c, w / total)).collect(),
-            mean_train_loss: self.loss_weighted / self.n_total,
-        })
+            self.raw,
+            self.total_weight,
+            self.n_total,
+            self.loss_weighted,
+        )
+    }
+
+    /// The pool backing this aggregator (for telemetry sampling).
+    pub fn pool(&self) -> &Arc<ShardPool> {
+        &self.pool
     }
 }
 
@@ -553,6 +740,110 @@ mod tests {
         assert_eq!(agg.n_updates(), 0);
         agg.fold_view(&vi(&view), 2.0).unwrap();
         assert_eq!(agg.n_updates(), 1);
+    }
+
+    #[test]
+    fn shard_spans_are_disjoint_cover_and_size_independent_of_workers() {
+        for (n_params, n_shards) in [(1usize, 1usize), (10, 3), (1537, 7), (1 << 20, 8), (100, 200)]
+        {
+            let spans = shard_spans(n_params, n_shards);
+            assert_eq!(spans.len(), n_shards.max(1));
+            let mut cursor = 0;
+            for &(lo, hi) in &spans {
+                assert_eq!(lo, cursor.min(n_params));
+                assert!(lo <= hi && hi <= n_params);
+                cursor = hi.max(cursor);
+            }
+            assert_eq!(spans.last().map(|&(_, hi)| hi), Some(n_params));
+        }
+        // pure function of (n_params, n_shards): recomputing gives the
+        // exact same boundaries
+        assert_eq!(shard_spans(1 << 20, 8), shard_spans(1 << 20, 8));
+        assert_eq!(default_ingest_shards(1 << 20), 8);
+        assert_eq!(default_ingest_shards(1), 1);
+    }
+
+    #[test]
+    fn sharded_fold_is_bit_identical_to_streaming_for_fixed_arrival_order() {
+        use crate::compress::{compress, SharedDecoded};
+        use crate::config::CompressionConfig;
+        use crate::util::rng::Rng;
+        let p = 12_345;
+        let mut rng = Rng::new(17);
+        let updates: Vec<(u32, Vec<f32>, f64)> = (0..6u32)
+            .map(|c| {
+                let upd: Vec<f32> = (0..p).map(|_| rng.normal() as f32 * 0.01).collect();
+                (c, upd, 1.0 + c as f64 * 0.5)
+            })
+            .collect();
+        let mut serial = StreamingAggregator::new(p);
+        for (c, upd, w) in &updates {
+            serial
+                .fold(&input(*c, upd.clone(), 10, 1.0, 0.0), *w)
+                .unwrap();
+        }
+        let want = serial.finalize().unwrap();
+        for n_workers in [1usize, 2, 3] {
+            let pool = Arc::new(ShardPool::new(n_workers, 5));
+            let mut sharded = ShardedAggregator::new(p, pool);
+            for (c, upd, w) in &updates {
+                let payload = Arc::new(
+                    SharedDecoded::new(
+                        Arc::new(compress(upd, &CompressionConfig::NONE, *c as u64)),
+                        p,
+                    )
+                    .unwrap(),
+                );
+                sharded
+                    .fold_shared(
+                        &SharedInput {
+                            client: *c,
+                            payload,
+                            n_samples: 10,
+                            train_loss: 1.0,
+                            update_var: 0.0,
+                        },
+                        *w,
+                    )
+                    .unwrap();
+            }
+            let got = sharded.finalize().unwrap();
+            for (a, b) in want.delta.iter().zip(&got.delta) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{n_workers} workers diverged");
+            }
+            assert_eq!(want.weights, got.weights);
+            assert_eq!(
+                want.mean_train_loss.to_bits(),
+                got.mean_train_loss.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_rejects_bad_lengths_weights_and_empty() {
+        use crate::compress::{Encoded, SharedDecoded};
+        let pool = Arc::new(ShardPool::new(2, 3));
+        let payload =
+            Arc::new(SharedDecoded::new(Arc::new(Encoded::Dense(vec![1.0; 4])), 4).unwrap());
+        let si = |payload: &Arc<SharedDecoded>| SharedInput {
+            client: 0,
+            payload: payload.clone(),
+            n_samples: 1,
+            train_loss: 0.0,
+            update_var: 0.0,
+        };
+        let mut agg = ShardedAggregator::new(9, pool.clone());
+        assert!(agg.fold_shared(&si(&payload), 1.0).is_err());
+        assert_eq!(agg.n_updates(), 0);
+        let mut agg = ShardedAggregator::new(4, pool.clone());
+        assert!(agg.fold_shared(&si(&payload), f64::NAN).is_err());
+        assert!(agg.fold_shared(&si(&payload), -1.0).is_err());
+        assert_eq!(agg.n_updates(), 0);
+        assert!(ShardedAggregator::new(4, pool.clone()).finalize().is_err());
+        let mut agg = ShardedAggregator::new(4, pool);
+        agg.fold_shared(&si(&payload), 2.0).unwrap();
+        assert_eq!(agg.n_updates(), 1);
+        assert!(agg.finalize().is_ok());
     }
 
     #[test]

@@ -22,7 +22,10 @@ mod registry;
 mod server;
 pub mod strategy;
 
-pub use aggregate::{aggregate, AggDelta, AggInput, AggOutcome, StreamingAggregator, ViewInput};
+pub use aggregate::{
+    aggregate, default_ingest_shards, shard_spans, AggDelta, AggInput, AggOutcome,
+    ShardedAggregator, SharedInput, StreamingAggregator, ViewInput,
+};
 pub use convergence::ConvergenceTracker;
 pub use planner::{CohortPlanner, DispatchPlan, PlanContext, RoundPlan};
 pub use registry::{ClientRecord, ClientRegistry};

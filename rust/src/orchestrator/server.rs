@@ -56,19 +56,20 @@
 //! simply skipped (their registry reliability drops, which feeds back
 //! into selection).
 
-use super::aggregate::ViewInput;
+use super::aggregate::{default_ingest_shards, SharedInput, ViewInput};
 use super::convergence::ConvergenceTracker;
 use super::planner::{self, CohortPlanner, DispatchPlan, PlanContext, RoundPlan};
 use super::registry::ClientRegistry;
 use super::strategy::{registry as strategy_registry, AggStrategy, RoundAggregator, ServerOpt};
 use crate::cluster::NodeId;
-use crate::compress::{DecodedView, Encoded};
+use crate::compress::{DecodedView, Encoded, SharedDecoded};
 use crate::config::{ExperimentConfig, RoundMode, StalenessFn};
 use crate::data::{Batch, Shard};
 use crate::metrics::{staleness_summary, RoundMetrics, TrainingReport};
 use crate::network::{pre_encode_dense, Msg, ServerTransport, TrafficLog, UpdateStats};
 use crate::runtime::{EvalOut, ModelRuntime};
 use crate::telemetry::{self, ControlCmd, ControlPlane, Counter, Gauge, Histogram};
+use crate::util::parallel::{resolve_ingest_threads, ShardPool};
 use crate::util::rng::Rng;
 use crate::util::scratch::ScratchPool;
 use anyhow::{anyhow, bail, Result};
@@ -252,6 +253,22 @@ impl<T: ServerTransport> OrchestratorBuilder<T> {
             .unwrap_or_else(|| planner::planner_from_selection(&self.cfg.selection));
         let traffic = self.traffic.unwrap_or_else(|| Arc::new(TrafficLog::new()));
         let rng = Rng::new(self.cfg.seed ^ 0x0C5);
+        // Persistent shard-worker pool for parallel ingest. Built once
+        // per orchestrator (not per round): the pool owns its threads
+        // for the whole run and rounds merely enqueue fold jobs into
+        // it. `ingest_threads == 1` (or auto-resolving to 1) keeps the
+        // serial reference path with zero pool machinery.
+        let ingest = {
+            let threads = resolve_ingest_threads(self.cfg.ingest_threads);
+            if threads > 1 {
+                Some(Arc::new(ShardPool::new(
+                    threads,
+                    default_ingest_shards(params.len()),
+                )))
+            } else {
+                None
+            }
+        };
         Ok(Orchestrator {
             cfg: self.cfg,
             transport,
@@ -266,6 +283,9 @@ impl<T: ServerTransport> OrchestratorBuilder<T> {
             planner,
             eval_every: self.eval_every,
             scratch: Arc::new(ScratchPool::new()),
+            ingest,
+            last_stalls: 0,
+            last_fold_ns: 0,
             control: self.control,
             om: OrchMetrics::new(),
         })
@@ -285,6 +305,12 @@ struct OrchMetrics {
     ingest_bytes: Arc<Counter>,
     ingest_updates: Arc<Counter>,
     model_version: Arc<Gauge>,
+    /// Jobs waiting in the sharded-ingest pool queues (0 when serial).
+    shard_queue_depth: Arc<Gauge>,
+    /// Producer stalls on a full shard queue (backpressure events).
+    ingest_stalls: Arc<Counter>,
+    /// Nanoseconds shard workers spent inside fold jobs.
+    ingest_fold_ns: Arc<Counter>,
 }
 
 impl OrchMetrics {
@@ -325,6 +351,18 @@ impl OrchMetrics {
                 "Updates folded by the server.",
             ),
             model_version: g.gauge(names::MODEL_VERSION, "Current global model version."),
+            shard_queue_depth: g.gauge(
+                names::INGEST_SHARD_QUEUE_DEPTH,
+                "Fold jobs queued in the sharded-ingest pool (0 when serial).",
+            ),
+            ingest_stalls: g.counter(
+                names::INGEST_STALLS_TOTAL,
+                "Ingest producer stalls on a full shard queue.",
+            ),
+            ingest_fold_ns: g.counter(
+                names::INGEST_FOLD_NS_TOTAL,
+                "Nanoseconds shard workers spent folding updates.",
+            ),
         }
     }
 
@@ -367,6 +405,16 @@ pub struct Orchestrator<T: ServerTransport> {
     /// only by the ingest paths that must densify — see
     /// [`crate::util::scratch`]).
     scratch: Arc<ScratchPool>,
+    /// Persistent shard-worker pool for parallel ingest, shared by
+    /// every round's aggregator. `None` runs the serial reference
+    /// path (`aggregation.ingest_threads = 1`, or auto on a 1-cpu
+    /// box). See [`crate::util::parallel::ShardPool`].
+    ingest: Option<Arc<ShardPool>>,
+    /// Last-sampled pool stall count, for delta publication into the
+    /// monotone telemetry counter.
+    last_stalls: usize,
+    /// Last-sampled pool fold-nanoseconds, same delta scheme.
+    last_fold_ns: u64,
     /// Operator mailbox + readiness/status surface, when a telemetry
     /// endpoint is attached (see [`OrchestratorBuilder::control`]).
     control: Option<Arc<ControlPlane>>,
@@ -612,6 +660,26 @@ impl<T: ServerTransport> Orchestrator<T> {
         reached
     }
 
+    /// Publish sharded-ingest pool health into the global telemetry
+    /// registry. Called at round/commit boundaries: the gauge snapshots
+    /// current queue depth, the counters get the delta since the last
+    /// sample (pool totals are cumulative, registry counters are
+    /// monotone adds).
+    fn sample_ingest_pool(&mut self) {
+        let Some(pool) = &self.ingest else { return };
+        self.om.shard_queue_depth.set(pool.queue_depth() as u64);
+        let stalls = pool.stall_count();
+        self.om
+            .ingest_stalls
+            .add(stalls.saturating_sub(self.last_stalls) as u64);
+        self.last_stalls = stalls;
+        let fold_ns = pool.fold_ns_total();
+        self.om
+            .ingest_fold_ns
+            .add(fold_ns.saturating_sub(self.last_fold_ns));
+        self.last_fold_ns = fold_ns;
+    }
+
     /// Phase 2 (Algorithm 1 lines 6–10): collect updates under the
     /// deadline / partial-k stopping rule, folding each one into the
     /// aggregator as it arrives. `deadline_ms` is the cohort's maximum
@@ -666,16 +734,33 @@ impl<T: ServerTransport> Orchestrator<T> {
                     // NaN) skips this client, never aborts the round.
                     // Fused ingest: the update folds straight from its
                     // encoded form (O(nnz), no dense vector) — the
-                    // view validates everything decompress would.
-                    let folded = DecodedView::of(&delta, self.params.len()).and_then(|view| {
-                        agg.fold_view(&ViewInput {
-                            client,
-                            view: &view,
-                            n_samples: stats.n_samples,
-                            train_loss: stats.train_loss,
-                            update_var: stats.update_var,
+                    // view validates everything decompress would. A
+                    // sharded round takes ownership instead, so shard
+                    // workers can fold disjoint spans concurrently
+                    // while this loop returns to the socket.
+                    let folded = if agg.ingest_sharded() {
+                        SharedDecoded::new(Arc::new(delta), self.params.len()).and_then(
+                            |payload| {
+                                agg.fold_shared(&SharedInput {
+                                    client,
+                                    payload: Arc::new(payload),
+                                    n_samples: stats.n_samples,
+                                    train_loss: stats.train_loss,
+                                    update_var: stats.update_var,
+                                })
+                            },
+                        )
+                    } else {
+                        DecodedView::of(&delta, self.params.len()).and_then(|view| {
+                            agg.fold_view(&ViewInput {
+                                client,
+                                view: &view,
+                                n_samples: stats.n_samples,
+                                train_loss: stats.train_loss,
+                                update_var: stats.update_var,
+                            })
                         })
-                    });
+                    };
                     match folded {
                         Ok(()) => {
                             hooks.on_update(round, client, &stats);
@@ -785,6 +870,7 @@ impl<T: ServerTransport> Orchestrator<T> {
         self.om.round_seconds.observe(duration_s);
         self.om.ingest_bytes.add(bytes_up);
         self.om.model_version.set(u64::from(self.model_version));
+        self.sample_ingest_pool();
         Ok(RoundOutcome {
             metrics: RoundMetrics {
                 round,
@@ -820,10 +906,11 @@ impl<T: ServerTransport> Orchestrator<T> {
         let plan = self.select_phase(round)?;
         hooks.on_round_start(round, plan.cohort());
         let reached = self.broadcast_phase(round, &plan);
-        let mut agg = RoundAggregator::with_pool(
+        let mut agg = RoundAggregator::with_ingest(
             self.strategy.clone(),
             self.params.len(),
             self.scratch.clone(),
+            self.ingest.clone(),
         );
         let collect = self.collect_phase(
             round,
@@ -991,10 +1078,11 @@ impl<T: ServerTransport> Orchestrator<T> {
         self.mark_ready();
 
         let mut commit = 0u32;
-        let mut agg = RoundAggregator::with_pool(
+        let mut agg = RoundAggregator::with_ingest(
             self.strategy.clone(),
             self.params.len(),
             self.scratch.clone(),
+            self.ingest.clone(),
         );
         let mut t_commit = Instant::now();
         let mut stale_drops = 0u32;
@@ -1014,10 +1102,11 @@ impl<T: ServerTransport> Orchestrator<T> {
             if now >= deadline || agg.n_updates() >= buffer_k {
                 let full = std::mem::replace(
                     &mut agg,
-                    RoundAggregator::with_pool(
+                    RoundAggregator::with_ingest(
                         self.strategy.clone(),
                         self.params.len(),
                         self.scratch.clone(),
+                        self.ingest.clone(),
                     ),
                 );
                 let totals = self.traffic.totals();
@@ -1057,10 +1146,11 @@ impl<T: ServerTransport> Orchestrator<T> {
                 // a set-strategy at this boundary must govern the
                 // window that opens now; the replacement aggregator is
                 // still empty, so rebuilding it is free and safe
-                agg = RoundAggregator::with_pool(
+                agg = RoundAggregator::with_ingest(
                     self.strategy.clone(),
                     self.params.len(),
                     self.scratch.clone(),
+                    self.ingest.clone(),
                 );
                 // a long quiesce park must not expire the next window
                 // before it folds anything
@@ -1136,8 +1226,24 @@ impl<T: ServerTransport> Orchestrator<T> {
                         } else {
                             // fused ingest, staleness-discounted: the
                             // same O(nnz) path as the sync engine, with
-                            // scale = discount(s) instead of 1
-                            let folded =
+                            // scale = discount(s) instead of 1. Sharded
+                            // rounds hand ownership to the worker pool.
+                            let folded = if agg.ingest_sharded() {
+                                SharedDecoded::new(Arc::new(delta), self.params.len()).and_then(
+                                    |payload| {
+                                        agg.fold_shared_scaled(
+                                            &SharedInput {
+                                                client,
+                                                payload: Arc::new(payload),
+                                                n_samples: stats.n_samples,
+                                                train_loss: stats.train_loss,
+                                                update_var: stats.update_var,
+                                            },
+                                            staleness.discount(s),
+                                        )
+                                    },
+                                )
+                            } else {
                                 DecodedView::of(&delta, self.params.len()).and_then(|view| {
                                     agg.fold_view_scaled(
                                         &ViewInput {
@@ -1149,7 +1255,8 @@ impl<T: ServerTransport> Orchestrator<T> {
                                         },
                                         staleness.discount(s),
                                     )
-                                });
+                                })
+                            };
                             match folded {
                                 Ok(()) => {
                                     hooks.on_update(commit, client, &stats);
@@ -1240,6 +1347,7 @@ impl<T: ServerTransport> Orchestrator<T> {
         self.om.round_seconds.observe(duration_s);
         self.om.ingest_bytes.add(bytes_up);
         self.om.model_version.set(u64::from(self.model_version));
+        self.sample_ingest_pool();
         Ok(RoundOutcome {
             metrics: RoundMetrics {
                 round: commit,

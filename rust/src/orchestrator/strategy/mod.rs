@@ -54,8 +54,11 @@ mod server_opt;
 pub use robust::{CoordinateMedian, TrimmedMean};
 pub use server_opt::{FedAdam, FedAvgM, ServerOpt, SgdServer};
 
-use super::aggregate::{AggDelta, AggInput, AggOutcome, StreamingAggregator, ViewInput};
+use super::aggregate::{
+    AggDelta, AggInput, AggOutcome, ShardedAggregator, SharedInput, StreamingAggregator, ViewInput,
+};
 use crate::config::WeightScheme;
+use crate::util::parallel::ShardPool;
 use crate::util::scratch::ScratchPool;
 use anyhow::{bail, Result};
 use std::sync::Arc;
@@ -85,6 +88,22 @@ pub trait AggStrategy: Send + Sync {
     /// normalizes by the sum over arrived updates. Unused when
     /// `needs_buffering()`.
     fn weight(&self, input: &AggInput) -> f64;
+
+    /// Raw weight from the update's scalar stats alone, when the
+    /// strategy can compute it without inspecting delta values.
+    /// `Some` opts the strategy into the sharded ingest backend (the
+    /// weight must be known before the payload is enqueued to shard
+    /// workers); the `None` default keeps delta-inspecting custom
+    /// strategies on the serial reference path.
+    ///
+    /// Contract: whether this returns `Some` must not depend on the
+    /// argument *values* (the engine probes once at round start), and a
+    /// returned weight must equal what [`AggStrategy::weight`] /
+    /// [`AggStrategy::fold_view`] would fold with for the same stats —
+    /// otherwise sharded and serial rounds diverge.
+    fn scalar_weight(&self, _n_samples: u64, _train_loss: f32, _update_var: f32) -> Option<f64> {
+        None
+    }
 
     /// Buffered-mode aggregation over the full round (only called when
     /// `needs_buffering()`): produce the round's aggregated update
@@ -167,6 +186,10 @@ impl AggStrategy for FedAvg {
         stat_weight(None, input.n_samples, input.train_loss, input.update_var)
     }
 
+    fn scalar_weight(&self, n_samples: u64, train_loss: f32, update_var: f32) -> Option<f64> {
+        Some(stat_weight(None, n_samples, train_loss, update_var))
+    }
+
     fn fold_view(
         &self,
         core: &mut StreamingAggregator,
@@ -200,6 +223,10 @@ impl AggStrategy for FedProx {
         stat_weight(None, input.n_samples, input.train_loss, input.update_var)
     }
 
+    fn scalar_weight(&self, n_samples: u64, train_loss: f32, update_var: f32) -> Option<f64> {
+        Some(stat_weight(None, n_samples, train_loss, update_var))
+    }
+
     fn fold_view(
         &self,
         core: &mut StreamingAggregator,
@@ -231,6 +258,15 @@ impl AggStrategy for WeightedAgg {
             input.train_loss,
             input.update_var,
         )
+    }
+
+    fn scalar_weight(&self, n_samples: u64, train_loss: f32, update_var: f32) -> Option<f64> {
+        Some(stat_weight(
+            Some(self.scheme),
+            n_samples,
+            train_loss,
+            update_var,
+        ))
     }
 
     fn fold_view(
@@ -271,6 +307,10 @@ pub struct RoundAggregator {
 
 enum Mode {
     Streaming(StreamingAggregator),
+    /// Accumulator sharded across a persistent worker pool — selected
+    /// by [`RoundAggregator::with_ingest`] when the strategy can weigh
+    /// updates from scalar stats alone ([`AggStrategy::scalar_weight`]).
+    Sharded(ShardedAggregator),
     Buffered {
         n_params: usize,
         inputs: Vec<AggInput>,
@@ -291,13 +331,31 @@ impl RoundAggregator {
         n_params: usize,
         pool: Arc<ScratchPool>,
     ) -> Self {
-        let mode = if strategy.needs_buffering() {
-            Mode::Buffered {
+        Self::with_ingest(strategy, n_params, pool, None)
+    }
+
+    /// Begin a round with an optional persistent ingest pool. Sharded
+    /// mode engages only when a pool is supplied *and* the strategy
+    /// supports it (streaming, scalar-stat weights); everything else
+    /// falls back to the serial reference path, so passing a pool is
+    /// always safe.
+    pub fn with_ingest(
+        strategy: Arc<dyn AggStrategy>,
+        n_params: usize,
+        pool: Arc<ScratchPool>,
+        ingest: Option<Arc<ShardPool>>,
+    ) -> Self {
+        // probe with arbitrary stats: Some-ness must not depend on the
+        // values (documented scalar_weight contract)
+        let sharded_ok =
+            !strategy.needs_buffering() && strategy.scalar_weight(1, 0.0, 0.0).is_some();
+        let mode = match ingest {
+            Some(shards) if sharded_ok => Mode::Sharded(ShardedAggregator::new(n_params, shards)),
+            _ if strategy.needs_buffering() => Mode::Buffered {
                 n_params,
                 inputs: Vec::new(),
-            }
-        } else {
-            Mode::Streaming(StreamingAggregator::new(n_params))
+            },
+            _ => Mode::Streaming(StreamingAggregator::new(n_params)),
         };
         RoundAggregator {
             strategy,
@@ -311,10 +369,25 @@ impl RoundAggregator {
         self.strategy.as_ref()
     }
 
+    /// Whether this round folds through the sharded ingest backend
+    /// (callers pick the [`RoundAggregator::fold_shared`] entry point).
+    pub fn ingest_sharded(&self) -> bool {
+        matches!(self.mode, Mode::Sharded(_))
+    }
+
+    /// The shard pool backing a sharded round (telemetry sampling).
+    pub fn ingest_pool(&self) -> Option<&Arc<ShardPool>> {
+        match &self.mode {
+            Mode::Sharded(core) => Some(core.pool()),
+            _ => None,
+        }
+    }
+
     /// Updates accepted so far.
     pub fn n_updates(&self) -> usize {
         match &self.mode {
             Mode::Streaming(core) => core.n_updates(),
+            Mode::Sharded(core) => core.n_updates(),
             Mode::Buffered { inputs, .. } => inputs.len(),
         }
     }
@@ -339,6 +412,10 @@ impl RoundAggregator {
                 let w = scale * self.strategy.weight(input);
                 core.fold(input, w)
             }
+            Mode::Sharded(_) => bail!(
+                "strategy '{}': sharded round accepts only fold_shared (owned payloads)",
+                self.strategy.name()
+            ),
             Mode::Buffered { n_params, inputs } => {
                 if scale != 1.0 {
                     bail!(
@@ -384,6 +461,10 @@ impl RoundAggregator {
         } = self;
         match mode {
             Mode::Streaming(core) => strategy.fold_view(core, input, pool, scale),
+            Mode::Sharded(_) => bail!(
+                "strategy '{}': sharded round accepts only fold_shared (owned payloads)",
+                strategy.name()
+            ),
             Mode::Buffered { n_params, inputs } => {
                 if scale != 1.0 {
                     bail!(
@@ -413,11 +494,43 @@ impl RoundAggregator {
         }
     }
 
+    /// Fold one arriving update as an owned, shard-shareable payload —
+    /// the sharded-ingest entry point. Only valid on rounds where
+    /// [`RoundAggregator::ingest_sharded`] is true.
+    pub fn fold_shared(&mut self, input: &SharedInput) -> Result<()> {
+        self.fold_shared_scaled(input, 1.0)
+    }
+
+    /// [`RoundAggregator::fold_shared`] with a weight multiplier
+    /// (`scale` = the update's staleness discount in buffered-async
+    /// mode, `1.0` for sync rounds).
+    pub fn fold_shared_scaled(&mut self, input: &SharedInput, scale: f64) -> Result<()> {
+        let RoundAggregator { strategy, mode, .. } = self;
+        match mode {
+            Mode::Sharded(core) => {
+                let Some(w) =
+                    strategy.scalar_weight(input.n_samples, input.train_loss, input.update_var)
+                else {
+                    bail!(
+                        "strategy '{}' cannot weigh updates from scalar stats (sharded ingest)",
+                        strategy.name()
+                    );
+                };
+                core.fold_shared(input, scale * w)
+            }
+            _ => bail!(
+                "strategy '{}': fold_shared requires a sharded round (use fold_view)",
+                strategy.name()
+            ),
+        }
+    }
+
     /// Finalize the round: normalize (or run the order statistic),
     /// then apply the server optimizer `M_{r+1} = opt(M_r, Δ_agg)`.
     pub fn finalize(self, global: &[f32], opt: &mut dyn ServerOpt) -> Result<AggOutcome> {
         let agg = match self.mode {
             Mode::Streaming(core) => core.finalize()?,
+            Mode::Sharded(core) => core.finalize()?,
             Mode::Buffered { n_params, inputs } => {
                 if inputs.is_empty() {
                     bail!("aggregate: no updates to aggregate");
@@ -636,6 +749,130 @@ mod tests {
         // unit scale still works
         agg.fold_scaled(&input(0, vec![1.0, 2.0], 10), 1.0).unwrap();
         assert_eq!(agg.n_updates(), 1);
+    }
+
+    #[test]
+    fn with_ingest_selects_sharded_only_for_scalar_weight_streamers() {
+        let shards = Arc::new(ShardPool::new(2, 4));
+        let scratch = Arc::new(ScratchPool::new());
+        for strategy in [
+            Arc::new(FedAvg) as Arc<dyn AggStrategy>,
+            Arc::new(FedProx { mu: 0.1 }),
+            Arc::new(WeightedAgg {
+                scheme: WeightScheme::InverseVariance,
+            }),
+        ] {
+            let agg = RoundAggregator::with_ingest(
+                strategy.clone(),
+                8,
+                scratch.clone(),
+                Some(shards.clone()),
+            );
+            assert!(agg.ingest_sharded(), "{} should shard", strategy.name());
+            assert!(agg.ingest_pool().is_some());
+        }
+        // buffered strategies and no-pool rounds stay on the reference path
+        let agg = RoundAggregator::with_ingest(
+            Arc::new(CoordinateMedian),
+            8,
+            scratch.clone(),
+            Some(shards.clone()),
+        );
+        assert!(!agg.ingest_sharded());
+        let agg = RoundAggregator::with_ingest(Arc::new(FedAvg), 8, scratch.clone(), None);
+        assert!(!agg.ingest_sharded());
+        assert!(agg.ingest_pool().is_none());
+        // a delta-inspecting custom strategy (scalar_weight = None) too
+        struct DeltaPeek;
+        impl AggStrategy for DeltaPeek {
+            fn name(&self) -> &'static str {
+                "peek"
+            }
+            fn weight(&self, input: &AggInput) -> f64 {
+                input.delta.iter().map(|x| x.abs() as f64).sum()
+            }
+        }
+        let agg = RoundAggregator::with_ingest(Arc::new(DeltaPeek), 8, scratch, Some(shards));
+        assert!(!agg.ingest_sharded());
+    }
+
+    #[test]
+    fn sharded_round_matches_view_round_bitwise_and_scales() {
+        use crate::compress::{DecodedView, Encoded, SharedDecoded};
+        let shards = Arc::new(ShardPool::new(3, 5));
+        let scratch = Arc::new(ScratchPool::new());
+        for strategy in [
+            Arc::new(FedAvg) as Arc<dyn AggStrategy>,
+            Arc::new(WeightedAgg {
+                scheme: WeightScheme::InverseLoss,
+            }),
+        ] {
+            let deltas = [vec![2.0f32, 0.0, -1.5, 4.0], vec![0.0, 8.0, 0.25, -0.5]];
+            let mut serial = RoundAggregator::with_pool(strategy.clone(), 4, scratch.clone());
+            let mut sharded = RoundAggregator::with_ingest(
+                strategy.clone(),
+                4,
+                scratch.clone(),
+                Some(shards.clone()),
+            );
+            for (c, d) in deltas.iter().enumerate() {
+                let scale = if c == 0 { 1.0 } else { 0.25 };
+                let enc = Encoded::Dense(d.clone());
+                let view = DecodedView::of(&enc, 4).unwrap();
+                serial
+                    .fold_view_scaled(&view_input(c as u32, &view), scale)
+                    .unwrap();
+                let payload =
+                    Arc::new(SharedDecoded::new(Arc::new(Encoded::Dense(d.clone())), 4).unwrap());
+                sharded
+                    .fold_shared_scaled(
+                        &SharedInput {
+                            client: c as u32,
+                            payload,
+                            n_samples: 10,
+                            train_loss: 1.0,
+                            update_var: 0.0,
+                        },
+                        scale,
+                    )
+                    .unwrap();
+            }
+            let a = serial.finalize(&[0.0; 4], &mut SgdServer).unwrap();
+            let b = sharded.finalize(&[0.0; 4], &mut SgdServer).unwrap();
+            for (x, y) in a.new_params.iter().zip(&b.new_params) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{} diverged", strategy.name());
+            }
+            assert_eq!(a.weights, b.weights);
+        }
+    }
+
+    #[test]
+    fn sharded_round_rejects_mismatched_entry_points() {
+        use crate::compress::{DecodedView, Encoded, SharedDecoded};
+        let shards = Arc::new(ShardPool::new(2, 2));
+        let mut sharded = RoundAggregator::with_ingest(
+            Arc::new(FedAvg),
+            2,
+            Arc::new(ScratchPool::new()),
+            Some(shards),
+        );
+        assert!(sharded.fold(&input(0, vec![1.0, 2.0], 10)).is_err());
+        let enc = Encoded::Dense(vec![1.0, 2.0]);
+        let view = DecodedView::of(&enc, 2).unwrap();
+        assert!(sharded.fold_view(&view_input(0, &view)).is_err());
+        assert_eq!(sharded.n_updates(), 0);
+        // and a serial round rejects fold_shared
+        let payload = Arc::new(SharedDecoded::new(Arc::new(enc.clone()), 2).unwrap());
+        let mut serial = RoundAggregator::new(Arc::new(FedAvg), 2);
+        assert!(serial
+            .fold_shared(&SharedInput {
+                client: 0,
+                payload,
+                n_samples: 10,
+                train_loss: 1.0,
+                update_var: 0.0,
+            })
+            .is_err());
     }
 
     /// A custom strategy that only implements `weight` — including one

@@ -33,6 +33,12 @@ pub mod names {
     pub const INGEST_BYTES_TOTAL: &str = "fedhpc_ingest_bytes_total";
     /// Updates folded by the server.
     pub const INGEST_UPDATES_TOTAL: &str = "fedhpc_ingest_updates_total";
+    /// Fold jobs queued in the sharded-ingest pool (0 when serial).
+    pub const INGEST_SHARD_QUEUE_DEPTH: &str = "fedhpc_ingest_shard_queue_depth";
+    /// Ingest producer stalls on a full shard queue (backpressure).
+    pub const INGEST_STALLS_TOTAL: &str = "fedhpc_ingest_stalls_total";
+    /// Nanoseconds shard workers spent inside fold jobs.
+    pub const INGEST_FOLD_NS_TOTAL: &str = "fedhpc_ingest_fold_ns_total";
     /// ScratchPool takes served from the free-list.
     pub const SCRATCH_HITS_TOTAL: &str = "fedhpc_scratch_hits_total";
     /// ScratchPool takes that had to allocate.

@@ -1,10 +1,28 @@
-//! Scoped data-parallel helpers (no rayon on this image).
+//! Scoped data-parallel helpers and the persistent ingest worker pool
+//! (no rayon on this image).
 //!
 //! `par_chunks_mut` splits a mutable slice across `available_parallelism`
 //! threads with `std::thread::scope`; small inputs run inline so the
 //! helpers are safe to use unconditionally on hot paths.
+//!
+//! `ShardPool` is the opposite trade: N long-lived threads with
+//! per-shard bounded FIFO queues, parked when idle, so the server's
+//! sharded ingest pays zero thread spawns per fold. A shard is owned
+//! by exactly one worker (`shard % n_workers`), so jobs for a shard
+//! run serially in submission order — the property the sharded
+//! aggregator's bit-identity argument rests on.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::lock_unpoisoned;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Chunk size (elements) for parallel folds over the dense accumulator.
+/// Shared by `compress::DecodedView::fold_scaled_into` and the dense
+/// fold/normalize loops in `orchestrator::aggregate` — the paths must
+/// chunk identically so their floating-point addition order matches.
+pub const FOLD_CHUNK: usize = 256 * 1024;
 
 /// Threads to use for `n` elements with a minimum per-thread chunk.
 fn n_threads(n: usize, min_chunk: usize) -> usize {
@@ -64,7 +82,15 @@ where
                 s.spawn(move || (i, map(i * chunk, part)))
             })
             .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(v) => v,
+                // a panicking map closure must surface on the caller,
+                // not abort the scope with a generic join error
+                Err(payload) => std::panic::resume_unwind(payload),
+            })
+            .collect()
     });
     let mut sorted = results;
     sorted.sort_by_key(|(i, _)| *i);
@@ -78,6 +104,287 @@ pub static PAR_INVOCATIONS: AtomicUsize = AtomicUsize::new(0);
 #[doc(hidden)]
 pub fn note_invocation() {
     PAR_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Resolve the `ingest_threads` knob: 0 = auto (`available_parallelism`),
+/// anything else is taken literally.
+pub fn resolve_ingest_threads(requested: u32) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+    } else {
+        requested as usize
+    }
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Bound on each shard queue: a producer submitting to a full shard
+/// blocks (counted as an ingest stall) until the owning worker drains.
+const QUEUE_CAP: usize = 64;
+
+struct ShardQueue {
+    q: Mutex<VecDeque<Job>>,
+    not_full: Condvar,
+}
+
+struct PoolInner {
+    queues: Vec<ShardQueue>,
+    n_workers: usize,
+    /// Outstanding (submitted, not yet finished) jobs + idle condvar.
+    pending: Mutex<usize>,
+    idle: Condvar,
+    /// First panic payload from a worker job; re-thrown at `wait_idle`.
+    panicked: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    shutdown: AtomicBool,
+    spawned: AtomicUsize,
+    jobs: AtomicUsize,
+    stalls: AtomicUsize,
+    fold_ns: AtomicU64,
+}
+
+impl PoolInner {
+    fn finish_job(&self, outcome: std::thread::Result<()>, started: Instant) {
+        self.fold_ns
+            .fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        if let Err(payload) = outcome {
+            let mut slot = lock_unpoisoned(&self.panicked);
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        let mut p = lock_unpoisoned(&self.pending);
+        *p = p.saturating_sub(1);
+        if *p == 0 {
+            self.idle.notify_all();
+        }
+    }
+}
+
+fn worker_loop(inner: &Arc<PoolInner>, worker: usize) {
+    inner.spawned.fetch_add(1, Ordering::Relaxed);
+    let stride = inner.n_workers.max(1);
+    loop {
+        let mut ran = false;
+        let mut s = worker;
+        // sweep owned shards in index order; one job per shard per pass
+        // so no shard starves its siblings
+        while let Some(slot) = inner.queues.get(s) {
+            let job = {
+                let mut q = lock_unpoisoned(&slot.q);
+                let job = q.pop_front();
+                if job.is_some() {
+                    slot.not_full.notify_one();
+                }
+                job
+            };
+            if let Some(job) = job {
+                ran = true;
+                let t0 = Instant::now();
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                inner.finish_job(outcome, t0);
+            }
+            s += stride;
+        }
+        if !ran {
+            if inner.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            // the producer pushes before unparking, so a token left by a
+            // racing submit makes this park return immediately
+            std::thread::park();
+        }
+    }
+}
+
+/// Persistent shard-worker pool for the server ingest hot path.
+///
+/// `n_shards` FIFO queues are statically owned by `n_workers` threads
+/// (shard `s` → worker `s % n_workers`). Threads spawn once at
+/// construction and park when idle; `submit` never spawns. Per shard,
+/// jobs run serially in submission order — concurrency exists only
+/// *across* shards, which is what keeps the sharded fold bit-identical
+/// to the serial reference for a fixed arrival order.
+pub struct ShardPool {
+    inner: Arc<PoolInner>,
+    /// Worker thread handles for unparking on submit/shutdown.
+    workers: Vec<std::thread::Thread>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Spawn failed: run jobs inline on the caller instead of hanging.
+    inline: bool,
+}
+
+impl ShardPool {
+    /// Spawn `n_workers` threads serving `n_shards` queues. Worker count
+    /// is clamped to the shard count (extra workers would own nothing).
+    pub fn new(n_workers: usize, n_shards: usize) -> Self {
+        let n_shards = n_shards.max(1);
+        let n_workers = n_workers.clamp(1, n_shards);
+        let inner = Arc::new(PoolInner {
+            queues: (0..n_shards)
+                .map(|_| ShardQueue {
+                    q: Mutex::new(VecDeque::new()),
+                    not_full: Condvar::new(),
+                })
+                .collect(),
+            n_workers,
+            pending: Mutex::new(0),
+            idle: Condvar::new(),
+            panicked: Mutex::new(None),
+            shutdown: AtomicBool::new(false),
+            spawned: AtomicUsize::new(0),
+            jobs: AtomicUsize::new(0),
+            stalls: AtomicUsize::new(0),
+            fold_ns: AtomicU64::new(0),
+        });
+        let mut handles = Vec::with_capacity(n_workers);
+        let mut workers = Vec::with_capacity(n_workers);
+        let mut ok = true;
+        for w in 0..n_workers {
+            let inner_w = inner.clone();
+            match std::thread::Builder::new()
+                .name(format!("fedhpc-ingest-{w}"))
+                .spawn(move || worker_loop(&inner_w, w))
+            {
+                Ok(h) => {
+                    workers.push(h.thread().clone());
+                    handles.push(h);
+                }
+                Err(_) => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            // partial pools would strand shards owned by unspawned
+            // workers; fall back to inline execution entirely
+            inner.shutdown.store(true, Ordering::Release);
+            for t in &workers {
+                t.unpark();
+            }
+            for h in handles.drain(..) {
+                let _ = h.join();
+            }
+            workers.clear();
+        }
+        Self {
+            inner,
+            workers,
+            handles,
+            inline: !ok,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.inner.queues.len()
+    }
+
+    pub fn n_workers(&self) -> usize {
+        if self.inline {
+            0
+        } else {
+            self.inner.n_workers
+        }
+    }
+
+    /// Enqueue `f` on `shard`'s FIFO queue, blocking if it is full.
+    /// Jobs submitted to the same shard run serially in this order.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, shard: usize, f: F) {
+        let n = self.inner.queues.len();
+        let Some(slot) = self.inner.queues.get(shard % n.max(1)) else {
+            f();
+            return;
+        };
+        if self.inline {
+            let t0 = Instant::now();
+            {
+                let mut p = lock_unpoisoned(&self.inner.pending);
+                *p += 1;
+            }
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+            self.inner.finish_job(outcome, t0);
+            return;
+        }
+        {
+            let mut p = lock_unpoisoned(&self.inner.pending);
+            *p += 1;
+        }
+        let mut q = lock_unpoisoned(&slot.q);
+        while q.len() >= QUEUE_CAP {
+            self.inner.stalls.fetch_add(1, Ordering::Relaxed);
+            q = match slot.not_full.wait(q) {
+                Ok(g) => g,
+                Err(e) => e.into_inner(),
+            };
+        }
+        q.push_back(Box::new(f));
+        drop(q);
+        if let Some(t) = self.workers.get((shard % n.max(1)) % self.inner.n_workers.max(1)) {
+            t.unpark();
+        }
+    }
+
+    /// Block until every submitted job has finished. Re-throws the first
+    /// worker-job panic on the caller, mirroring `par_fold` semantics.
+    pub fn wait_idle(&self) {
+        {
+            let mut p = lock_unpoisoned(&self.inner.pending);
+            while *p > 0 {
+                p = match self.inner.idle.wait(p) {
+                    Ok(g) => g,
+                    Err(e) => e.into_inner(),
+                };
+            }
+        }
+        if let Some(payload) = lock_unpoisoned(&self.inner.panicked).take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Threads spawned over the pool's lifetime — constant after `new`,
+    /// which is exactly what the zero-spawn-per-fold test pins.
+    pub fn threads_spawned(&self) -> usize {
+        self.inner.spawned.load(Ordering::Relaxed)
+    }
+
+    /// Jobs executed to completion (including panicked ones).
+    pub fn jobs_executed(&self) -> usize {
+        self.inner.jobs.load(Ordering::Relaxed)
+    }
+
+    /// Times a producer blocked on a full shard queue.
+    pub fn stall_count(&self) -> usize {
+        self.inner.stalls.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative nanoseconds workers spent inside fold jobs.
+    pub fn fold_ns_total(&self) -> u64 {
+        self.inner.fold_ns.load(Ordering::Relaxed)
+    }
+
+    /// Jobs currently queued across all shards (point-in-time).
+    pub fn queue_depth(&self) -> usize {
+        self.inner
+            .queues
+            .iter()
+            .map(|s| lock_unpoisoned(&s.q).len())
+            .sum()
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::Release);
+        for t in &self.workers {
+            t.unpark();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -129,5 +436,129 @@ mod tests {
     fn par_fold_empty() {
         let v: Vec<f32> = vec![];
         assert!(par_fold(&v, 10, |_, c| c.len(), |a, b| a + b).is_none());
+    }
+
+    #[test]
+    fn par_fold_propagates_worker_panic() {
+        let v: Vec<u32> = (0..200_000).collect();
+        let caught = std::panic::catch_unwind(|| {
+            par_fold(
+                &v,
+                1024,
+                |off, _| {
+                    if off > 0 {
+                        panic!("boom at {off}");
+                    }
+                    0usize
+                },
+                |a, b| a + b,
+            )
+        });
+        let payload = caught.expect_err("panic must propagate to the caller");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("boom at"), "original payload lost: {msg:?}");
+    }
+
+    #[test]
+    fn shard_pool_runs_every_job_exactly_once() {
+        let pool = ShardPool::new(4, 8);
+        let hits = Arc::new(Mutex::new(vec![0u32; 1000]));
+        for i in 0..1000usize {
+            let hits = hits.clone();
+            pool.submit(i % 8, move || {
+                let mut h = lock_unpoisoned(&hits);
+                h[i] += 1;
+            });
+        }
+        pool.wait_idle();
+        assert!(lock_unpoisoned(&hits).iter().all(|&c| c == 1));
+        assert_eq!(pool.jobs_executed(), 1000);
+        assert_eq!(pool.queue_depth(), 0);
+    }
+
+    #[test]
+    fn shard_pool_preserves_per_shard_fifo_order() {
+        let pool = ShardPool::new(3, 7);
+        let seen: Arc<Vec<Mutex<Vec<usize>>>> =
+            Arc::new((0..7).map(|_| Mutex::new(Vec::new())).collect());
+        for seq in 0..700usize {
+            let shard = seq % 7;
+            let seen = seen.clone();
+            pool.submit(shard, move || {
+                lock_unpoisoned(&seen[shard]).push(seq);
+            });
+        }
+        pool.wait_idle();
+        for shard in 0..7 {
+            let order = lock_unpoisoned(&seen[shard]);
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(*order, sorted, "shard {shard} ran out of submission order");
+            assert_eq!(order.len(), 100);
+        }
+    }
+
+    #[test]
+    fn shard_pool_spawns_threads_once_across_many_folds() {
+        // the acceptance criterion: zero per-fold spawns — the pool's
+        // thread count is fixed at construction and reused forever
+        let pool = ShardPool::new(2, 4);
+        let spawned_at_birth = pool.threads_spawned();
+        assert_eq!(spawned_at_birth, 2);
+        for _round in 0..50 {
+            for shard in 0..4 {
+                pool.submit(shard, || {
+                    std::hint::black_box(1 + 1);
+                });
+            }
+            pool.wait_idle();
+        }
+        assert_eq!(pool.threads_spawned(), spawned_at_birth);
+        assert_eq!(pool.jobs_executed(), 200);
+    }
+
+    #[test]
+    fn shard_pool_rethrows_job_panic_at_wait_idle() {
+        let pool = ShardPool::new(2, 2);
+        pool.submit(0, || panic!("shard job exploded"));
+        pool.submit(1, || {});
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.wait_idle()));
+        let payload = caught.expect_err("wait_idle must re-throw the job panic");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert!(msg.contains("exploded"), "payload lost: {msg:?}");
+        // the pool stays usable after a panic
+        pool.submit(0, || {});
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn shard_pool_backpressure_counts_stalls() {
+        use std::sync::mpsc;
+        let pool = ShardPool::new(1, 1);
+        let (tx, rx) = mpsc::channel::<()>();
+        let rx = Arc::new(Mutex::new(rx));
+        // first job blocks the single worker until released
+        let rx0 = rx.clone();
+        pool.submit(0, move || {
+            let _ = lock_unpoisoned(&rx0).recv();
+        });
+        // overfill the queue from another thread, then release
+        let n_extra = QUEUE_CAP + 8;
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for _ in 0..n_extra {
+                    pool.submit(0, || {});
+                }
+            });
+            // give the producer time to hit the bound, then unblock
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            tx.send(()).unwrap();
+        });
+        pool.wait_idle();
+        assert_eq!(pool.jobs_executed(), n_extra + 1);
+        assert!(pool.stall_count() > 0, "full queue never stalled producer");
     }
 }

@@ -265,6 +265,127 @@ fn prop_fused_fold_matches_densify_then_fold_bitwise() {
     });
 }
 
+/// ISSUE 8 satellite: the parallel sharded ingest (`ShardPool` →
+/// `fold_shared`) must match the serial streaming fold (`fold_view`)
+/// **bit-for-bit** — for Dense, QDense, Sparse, QSparse and Masked
+/// encodings plus their pre-encoded wire-byte forms, every streaming
+/// strategy, random arrival-order permutations (both paths replay the
+/// same order), injected signed zeros, and shard counts
+/// {1, 2, 3, 7, hardware} with varying worker counts. One addition
+/// per element per update, in arrival order, at any partitioning.
+#[test]
+fn prop_sharded_ingest_matches_serial_bitwise_at_every_shard_count() {
+    use fedhpc::compress::{DecodedView, Encoded, SharedDecoded};
+    use fedhpc::network::pre_encode;
+    use fedhpc::orchestrator::strategy::registry::strategy_from_config;
+    use fedhpc::orchestrator::strategy::SgdServer;
+    use fedhpc::orchestrator::{RoundAggregator, SharedInput, ViewInput};
+    use fedhpc::util::parallel::{n_threads, ShardPool};
+    use fedhpc::util::scratch::ScratchPool;
+    use std::sync::Arc;
+    check("sharded ingest", 60, |g| {
+        let p = g.usize_in(1, 1500);
+        let k = g.usize_in(1, 6);
+        let global: Vec<f32> = (0..p).map(|_| g.f32_in(-1.0, 1.0)).collect();
+        let cfg = any_compression(g);
+        // sharded mode is the streaming strategies' opt-in (order
+        // statistics buffer whole rounds and stay serial)
+        let strat = *g.pick(&[
+            Aggregation::FedAvg,
+            Aggregation::FedProx { mu: 0.1 },
+            Aggregation::Weighted(WeightScheme::InverseLoss),
+            Aggregation::Weighted(WeightScheme::InverseVariance),
+        ]);
+        struct Update {
+            enc: Arc<Encoded>,
+            n_samples: u64,
+            train_loss: f32,
+            update_var: f32,
+        }
+        let updates: Vec<Update> = (0..k)
+            .map(|c| {
+                let mut v: Vec<f32> = (0..p).map(|_| g.f32_in(-1.0, 1.0)).collect();
+                for _ in 0..g.usize_in(0, 4) {
+                    let i = g.usize_in(0, p - 1);
+                    v[i] = if g.bool() { 0.0 } else { -0.0 };
+                }
+                let enc = compress(&v, &cfg, g.rng.next_u64() ^ c as u64);
+                let enc = if g.bool() {
+                    Encoded::PreEncoded(pre_encode(&enc))
+                } else {
+                    enc
+                };
+                Update {
+                    enc: Arc::new(enc),
+                    n_samples: g.usize_in(1, 1000) as u64,
+                    train_loss: g.f32_in(0.0, 10.0),
+                    update_var: g.f32_in(0.0, 5.0),
+                }
+            })
+            .collect();
+        // one random arrival order, replayed through every path
+        let mut order: Vec<usize> = (0..k).collect();
+        for i in (1..k).rev() {
+            let j = g.usize_in(0, i);
+            order.swap(i, j);
+        }
+        let strategy = strategy_from_config(&strat);
+        // serial reference: the PR 3 fused view fold
+        let mut serial = RoundAggregator::new(strategy.clone(), p);
+        for &c in &order {
+            let u = &updates[c];
+            let view = DecodedView::of(&u.enc, p).unwrap();
+            serial
+                .fold_view(&ViewInput {
+                    client: c as u32,
+                    view: &view,
+                    n_samples: u.n_samples,
+                    train_loss: u.train_loss,
+                    update_var: u.update_var,
+                })
+                .unwrap();
+        }
+        let want = serial.finalize(&global, &mut SgdServer).unwrap();
+        for (shards, workers) in [(1, 1), (2, 2), (3, 2), (7, 4), (n_threads(), n_threads())] {
+            let pool = Arc::new(ShardPool::new(workers, shards));
+            let mut sharded = RoundAggregator::with_ingest(
+                strategy.clone(),
+                p,
+                Arc::new(ScratchPool::new()),
+                Some(pool),
+            );
+            assert!(sharded.ingest_sharded(), "streaming strategy must shard");
+            for &c in &order {
+                let u = &updates[c];
+                let payload = SharedDecoded::new(u.enc.clone(), p).unwrap();
+                sharded
+                    .fold_shared(&SharedInput {
+                        client: c as u32,
+                        payload: Arc::new(payload),
+                        n_samples: u.n_samples,
+                        train_loss: u.train_loss,
+                        update_var: u.update_var,
+                    })
+                    .unwrap();
+            }
+            let got = sharded.finalize(&global, &mut SgdServer).unwrap();
+            for (j, (x, y)) in want.new_params.iter().zip(&got.new_params).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{strat:?}/{cfg:?} shards={shards} workers={workers} diverged at coord {j}"
+                );
+            }
+            assert_eq!(want.weights, got.weights, "shards={shards}");
+            assert_eq!(
+                want.mean_train_loss.to_bits(),
+                got.mean_train_loss.to_bits(),
+                "shards={shards}"
+            );
+        }
+    });
+}
+
 /// The empty-update regression (`k_of` satellite): compression of a
 /// zero-length vector must not panic for any config, and must round-
 /// trip through decompress and the view.

@@ -121,6 +121,63 @@ fn async_sim_with_faults_replays_bit_identically() {
     assert_ne!(a.details, c.details);
 }
 
+/// ISSUE 8 acceptance pin: the parallel sharded ingest changes *when*
+/// folds execute, never *what* they compute. A full faulty run with
+/// `ingest_threads = 1` (serial reference, no pool) and the same run
+/// with a multi-worker shard pool must produce the identical replay —
+/// per-round reporter sets, virtual times and the final model hash —
+/// in both round engines, run twice each to also pin run-to-run
+/// determinism of the pool itself.
+#[test]
+fn sharded_ingest_replays_serial_run_bit_identically_in_both_engines() {
+    let engines: [(&str, Option<RoundMode>); 2] = [
+        ("sync", None),
+        (
+            "async",
+            Some(RoundMode::BufferedAsync {
+                buffer_k: 3,
+                max_staleness: 50,
+                staleness: StalenessFn::Polynomial { alpha: 0.5 },
+            }),
+        ),
+    ];
+    for (engine, mode) in engines {
+        let mut cfg = fault_cfg("sim_sharded_ingest");
+        cfg.straggler.deadline_ms = Some(150);
+        cfg.straggler.partial_k = Some(2);
+        if let Some(m) = mode {
+            cfg.straggler.partial_k = None;
+            cfg.round_mode = m;
+        }
+
+        cfg.ingest_threads = 1; // serial reference path
+        let serial = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+
+        for threads in [2u32, 4, 0 /* auto */] {
+            cfg.ingest_threads = threads;
+            let a = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+            let b = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+            assert_eq!(
+                serial.details, a.details,
+                "{engine}: replay diverged at ingest_threads={threads}"
+            );
+            assert_eq!(
+                serial.model_hash, a.model_hash,
+                "{engine}: model diverged at ingest_threads={threads}"
+            );
+            assert!(serial.model_hash.is_some());
+            assert_eq!(
+                serial.total_time_s.to_bits(),
+                a.total_time_s.to_bits(),
+                "{engine}: virtual time diverged at ingest_threads={threads}"
+            );
+            // run-to-run: the pool schedules freely, folds don't move
+            assert_eq!(a.details, b.details, "{engine}: run-twice at {threads}");
+            assert_eq!(a.model_hash, b.model_hash, "{engine}: run-twice at {threads}");
+        }
+    }
+}
+
 /// Acceptance demo: under 4× stragglers, buffered-async reaches the
 /// synchronous engine's final eval accuracy in ≤ 60% of the virtual
 /// wall-clock time the synchronous engine needed to get there.

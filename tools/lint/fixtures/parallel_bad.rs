@@ -1,0 +1,16 @@
+// Known-bad fixture for the panic_safety rule in the ingest worker
+// pool: the shapes that caused the PR 8 bugfix, written the way they
+// must NOT be. util/parallel.rs joined PANIC_SCOPE because a panicking
+// worker thread must surface via `resume_unwind`, never via a second
+// panic on the server thread — `join().unwrap()` swallows the payload
+// and double-faults the hot path.
+
+fn drain_pool(handles: Vec<std::thread::JoinHandle<()>>, queues: &[Vec<u64>]) -> u64 {
+    let first = queues[0].len() as u64; // indexing
+    for h in handles {
+        h.join().unwrap(); // unwrap on a join result
+    }
+    let cap = std::thread::available_parallelism().expect("no cpus"); // expect
+    assert_eq!(first, 0); // assert_eq!
+    cap.get() as u64
+}

@@ -1,0 +1,20 @@
+// Known-bad fixture for the determinism rule in the sharded ingest
+// design space: a shard map keyed by HashMap, written the way it must
+// NOT be. Iteration order over a HashMap depends on the hasher's
+// per-process random seed, so draining shards through one would make
+// merge order — and therefore the f64 accumulator bit pattern — vary
+// run to run. The real aggregator uses fixed spans indexed by shard id.
+
+use std::collections::{HashMap, HashSet};
+
+fn merge_shards(shards: HashMap<usize, Vec<f64>>, acc: &mut Vec<f64>) {
+    let started = std::time::Instant::now(); // wall clock in scoped code
+    let mut seen: HashSet<usize> = HashSet::new();
+    for (id, seg) in shards {
+        // nondeterministic visit order: acc depends on the hasher seed
+        if seen.insert(id) {
+            acc.extend_from_slice(&seg);
+        }
+    }
+    let _ = started.elapsed();
+}

@@ -24,6 +24,7 @@ PANIC_SCOPE = [
     "orchestrator/server.rs",
     "client/worker.rs",
     "util/logging.rs",
+    "util/parallel.rs",
     "telemetry/",
 ]
 DET_SCOPE = [

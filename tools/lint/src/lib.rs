@@ -56,6 +56,7 @@ pub const PANIC_SCOPE: &[&str] = &[
     "orchestrator/server.rs",
     "client/worker.rs",
     "util/logging.rs",
+    "util/parallel.rs",
     "telemetry/",
 ];
 
@@ -952,6 +953,12 @@ mod tests {
         assert!(!in_scope("orchestrator/planner.rs", PANIC_SCOPE));
         assert!(in_scope("telemetry/http.rs", PANIC_SCOPE));
         assert!(in_scope("telemetry/registry.rs", PANIC_SCOPE));
+        // the ingest pool joins the panic scope (ISSUE 8) but stays out
+        // of the determinism scope: its Instant::now() timing counters
+        // are legal, and fold ordering is pinned by the shard queues
+        assert!(in_scope("util/parallel.rs", PANIC_SCOPE));
+        assert!(!in_scope("util/parallel.rs", DET_SCOPE));
+        assert!(!in_scope("util/scratch.rs", PANIC_SCOPE));
         assert!(!in_scope("telemetry/http.rs", DET_SCOPE));
         assert!(in_scope("orchestrator/planner.rs", DET_SCOPE));
         assert!(in_scope("sim/mod.rs", DET_SCOPE));

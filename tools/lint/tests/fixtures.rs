@@ -10,6 +10,8 @@ const DET_BAD: &str = include_str!("../fixtures/det_bad.rs");
 const DET_GOOD: &str = include_str!("../fixtures/det_good.rs");
 const ALLOW_NO_REASON: &str = include_str!("../fixtures/allow_no_reason.rs");
 const TELEMETRY_HTTP_BAD: &str = include_str!("../fixtures/telemetry_http_bad.rs");
+const PARALLEL_BAD: &str = include_str!("../fixtures/parallel_bad.rs");
+const SHARD_MAP_BAD: &str = include_str!("../fixtures/shard_map_bad.rs");
 
 fn unallowed(vs: &[Violation]) -> Vec<&Violation> {
     vs.iter().filter(|v| !v.allowed).collect()
@@ -121,6 +123,58 @@ fn telemetry_http_bad_fixture_fires_under_panic_scope() {
         .find(|v| v.msg.contains("`.unwrap()`"))
         .map(|v| v.line);
     assert_eq!(unwrap_line, Some(9), "unwrap site moved in the fixture?");
+}
+
+#[test]
+fn parallel_bad_fixture_fires_under_panic_scope() {
+    // util/parallel.rs joined PANIC_SCOPE in PR 8; this fixture proves
+    // the exact shape the satellite bugfix removed — `join().unwrap()`
+    // on a worker handle — is actually caught, alongside its friends
+    assert!(fedhpc_lint::in_scope(
+        "util/parallel.rs",
+        fedhpc_lint::PANIC_SCOPE
+    ));
+    let vs = scan_snippet(PARALLEL_BAD, true, false);
+    let bad = unallowed(&vs);
+    for needle in [
+        "`.unwrap()`",
+        "`.expect(`",
+        "slice/array indexing",
+        "`assert_eq!`",
+    ] {
+        assert!(
+            bad.iter().any(|v| v.msg.contains(needle)),
+            "expected a {needle} finding, got {bad:?}"
+        );
+    }
+    // the unwrap is on the join call: pin it to its source line
+    let unwrap_line = vs
+        .iter()
+        .find(|v| v.msg.contains("`.unwrap()`"))
+        .map(|v| v.line);
+    assert_eq!(unwrap_line, Some(11), "join().unwrap() site moved in the fixture?");
+}
+
+#[test]
+fn shard_map_bad_fixture_fires_under_det_scope() {
+    // design-space guard for the sharded aggregator: a HashMap-keyed
+    // shard map (nondeterministic merge order) must fire under the
+    // determinism scope that covers orchestrator/aggregate.rs
+    assert!(fedhpc_lint::in_scope(
+        "orchestrator/aggregate.rs",
+        fedhpc_lint::DET_SCOPE
+    ));
+    let vs = scan_snippet(SHARD_MAP_BAD, false, true);
+    let msgs: Vec<&str> = vs.iter().map(|v| v.msg.as_str()).collect();
+    for needle in ["`HashMap`", "`HashSet`", "`Instant::now`"] {
+        assert!(
+            msgs.iter().any(|m| m.contains(needle)),
+            "expected a {needle} finding, got {msgs:?}"
+        );
+    }
+    assert!(vs.iter().all(|v| v.rule == "determinism"));
+    // the map type appears in the use *and* the signature: both fire
+    assert!(vs.iter().filter(|v| v.msg.contains("`HashMap`")).count() >= 2);
 }
 
 #[test]
