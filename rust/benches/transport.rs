@@ -1,16 +1,45 @@
-//! Transport layer benchmarks: message codec round-trip, inproc
-//! hub round-trip, and framed-TCP round-trip with model-sized payloads
-//! (the "gRPC vs MPI" comparison from the paper's communication layer).
+//! Transport layer benchmarks.
+//!
+//! Three tiers: message codec round-trips, single-connection transport
+//! round-trips (inproc "MPI" vs framed-TCP "gRPC"), and a fleet-scale
+//! sweep — thousands of concurrent registered sockets completing
+//! broadcast→reply rounds against one readiness-driven server.
+//!
+//! Knobs:
+//! * `FEDHPC_BENCH_SOCKETS` — fleet size target (default 10000). The
+//!   bench opens both ends of every loopback connection in this
+//!   process, so the achievable count is bounded by `ulimit -n`; the
+//!   achieved count is reported, not assumed.
+//! * `FEDHPC_BENCH_BUDGET_MS` — per-case time budget (CI smoke).
+//!
+//! Emits `BENCH_transport.json`: per-case timing stats plus fleet round
+//! p50/p99 latency and broadcast bytes-on-wire compressed vs not.
 
-use fedhpc::benchkit::{bench, print_table};
+use fedhpc::benchkit::{
+    bench, budget_from_env, json_num_obj, print_table, write_json_report, BenchStats,
+};
 use fedhpc::compress::Encoded;
+use fedhpc::config::{CompressionConfig, TransportConfig};
+use fedhpc::network::framing;
 use fedhpc::network::inproc::InprocHub;
 use fedhpc::network::tcp::{TcpClient, TcpServer};
 use fedhpc::network::{
-    ClientProfile, ClientTransport, LinkShaper, Msg, ServerTransport, TrafficLog, UpdateStats,
+    pre_encode_dense, ClientProfile, ClientTransport, LinkShaper, Msg, ServerTransport,
+    TrafficLog, UpdateStats,
 };
-use std::sync::Arc;
-use std::time::Duration;
+use std::net::TcpStream;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+fn profile() -> ClientProfile {
+    ClientProfile {
+        speed_factor: 1.0,
+        mem_gb: 1.0,
+        link_bw: 1e9,
+        n_samples: 1,
+        bench_step_ms: 1.0,
+    }
+}
 
 fn update_msg(p: usize) -> Msg {
     Msg::Update {
@@ -28,8 +57,187 @@ fn update_msg(p: usize) -> Msg {
     }
 }
 
+fn round_end(round: u32) -> Msg {
+    Msg::RoundEnd {
+        round,
+        model_version: round,
+    }
+}
+
+/// Model broadcast with mildly structured (compressible, not constant)
+/// parameters — the shape frame compression sees in practice.
+fn broadcast_msg(p: usize) -> Msg {
+    let params: Vec<f32> = (0..p).map(|i| (i % 97) as f32 / 97.0).collect();
+    Msg::RoundStart {
+        round: 1,
+        model_version: 1,
+        deadline_ms: 1_000,
+        lr: 0.1,
+        mu: 0.0,
+        local_epochs: 1,
+        params: Encoded::PreEncoded(pre_encode_dense(&params)),
+        mask_seed: 0,
+        compression: CompressionConfig::NONE,
+    }
+}
+
+fn percentile(sorted_ns: &[f64], p: f64) -> f64 {
+    if sorted_ns.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ns.len() as f64 * p) as usize).min(sorted_ns.len() - 1);
+    sorted_ns[idx]
+}
+
+/// One fleet driver: connect + register a contiguous id range, report
+/// how many sockets came up, then serve rounds — read each broadcast,
+/// answer with a heartbeat — until Shutdown or disconnect.
+fn fleet_driver(addr: String, ids: std::ops::Range<u32>, up_tx: mpsc::Sender<usize>) {
+    let mut socks: Vec<(u32, TcpStream)> = Vec::with_capacity(ids.len());
+    for id in ids {
+        let mut attempt = 0;
+        let sock = loop {
+            match TcpStream::connect(&addr) {
+                Ok(s) => break Some(s),
+                Err(_) if attempt < 3 => {
+                    attempt += 1;
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(_) => break None, // fd limit or backlog: report what we got
+            }
+        };
+        let mut sock = match sock {
+            Some(s) => s,
+            None => break,
+        };
+        sock.set_nodelay(true).ok();
+        let reg = Msg::Register {
+            client: id,
+            profile: profile(),
+        };
+        let frame = framing::build_frame(&reg.encode(), None, false).unwrap();
+        if framing::write_frame(&mut sock, &frame).is_err() {
+            break;
+        }
+        socks.push((id, sock));
+    }
+    let _ = up_tx.send(socks.len());
+    drop(up_tx);
+    if socks.is_empty() {
+        return;
+    }
+    loop {
+        for (id, sock) in &mut socks {
+            let (payload, _) = match framing::read_frame(sock) {
+                Ok(x) => x,
+                Err(_) => return,
+            };
+            match Msg::decode(&payload) {
+                Ok(Msg::Shutdown) | Err(_) => return,
+                Ok(msg) => {
+                    let hb = Msg::Heartbeat {
+                        client: *id,
+                        round: match msg {
+                            Msg::RoundEnd { round, .. } => round,
+                            _ => 0,
+                        },
+                    };
+                    let frame = framing::build_frame(&hb.encode(), None, false).unwrap();
+                    if framing::write_frame(sock, &frame).is_err() {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fleet-scale sweep: `target` concurrent sockets, broadcast→reply
+/// rounds. Returns (stats row, achieved sockets, sorted round samples).
+fn fleet_rounds(target: usize, budget: Duration) -> (BenchStats, usize, Vec<f64>) {
+    let cfg = TransportConfig {
+        max_connections: target + 64,
+        compression: false, // tiny control frames; measure the reactor
+        ..TransportConfig::default()
+    };
+    let traffic = Arc::new(TrafficLog::new());
+    let server = TcpServer::bind_with("127.0.0.1:0", &cfg, traffic).unwrap();
+    let addr = server.local_addr.to_string();
+
+    let drivers = 8usize.min(target.max(1));
+    let chunk = target.div_ceil(drivers);
+    let (up_tx, up_rx) = mpsc::channel::<usize>();
+    let mut handles = Vec::new();
+    for d in 0..drivers {
+        let lo = (d * chunk).min(target) as u32;
+        let hi = ((d + 1) * chunk).min(target) as u32;
+        let tx = up_tx.clone();
+        let a = addr.clone();
+        handles.push(std::thread::spawn(move || fleet_driver(a, lo..hi, tx)));
+    }
+    drop(up_tx);
+    let achieved: usize = up_rx.iter().sum();
+
+    // drain the Registers, learning which ids actually made it up
+    let mut ids = Vec::with_capacity(achieved);
+    while ids.len() < achieved {
+        match server.recv_timeout(Duration::from_secs(10)) {
+            Ok(Some((from, Msg::Register { .. }))) => ids.push(from),
+            Ok(Some(_)) => {}
+            _ => break,
+        }
+    }
+
+    // rounds: broadcast a RoundEnd to every peer, collect every reply
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let deadline = Instant::now() + budget;
+    let mut round = 0u32;
+    while round < 3 || (Instant::now() < deadline && round < 200) {
+        round += 1;
+        let t0 = Instant::now();
+        let mut expected = 0usize;
+        ids.retain(|&id| {
+            let ok = server.send_to(id, &round_end(round)).is_ok();
+            expected += ok as usize;
+            ok
+        });
+        let mut got = 0usize;
+        while got < expected {
+            match server.recv_timeout(Duration::from_secs(10)) {
+                Ok(Some(_)) => got += 1,
+                _ => break,
+            }
+        }
+        samples_ns.push(t0.elapsed().as_nanos() as f64);
+        if ids.is_empty() {
+            break;
+        }
+    }
+
+    for &id in &ids {
+        let _ = server.send_to(id, &Msg::Shutdown);
+    }
+    drop(server); // EOFs any driver still mid-read
+    for h in handles {
+        let _ = h.join();
+    }
+
+    samples_ns.sort_by(f64::total_cmp);
+    let n = samples_ns.len().max(1);
+    let mean = samples_ns.iter().sum::<f64>() / n as f64;
+    let stats = BenchStats {
+        name: format!("fleet round ({achieved} sockets)"),
+        iters: samples_ns.len(),
+        mean_ns: mean,
+        median_ns: percentile(&samples_ns, 0.5),
+        p95_ns: percentile(&samples_ns, 0.95),
+        min_ns: samples_ns.first().copied().unwrap_or(0.0),
+    };
+    (stats, achieved, samples_ns)
+}
+
 fn main() {
-    let budget = Duration::from_secs(2);
+    let budget = budget_from_env(2_000);
     let mut stats = Vec::new();
 
     // codec
@@ -41,6 +249,23 @@ fn main() {
     }));
     stats.push(bench("Msg::decode 250k-param update", budget, || {
         std::hint::black_box(Msg::decode(&enc_big).unwrap());
+    }));
+
+    // frame compression: bytes on the wire for a model broadcast
+    let bcast = broadcast_msg(250_000);
+    let (head, shared) = bcast.encode_split();
+    let wire_plain = framing::frame_uncompressed(&head, shared.as_ref())
+        .unwrap()
+        .wire_len();
+    let wire_lz = framing::build_frame(&head, shared.as_ref(), true)
+        .unwrap()
+        .wire_len();
+    stats.push(bench("frame+compress 250k-param broadcast", budget, || {
+        std::hint::black_box(
+            framing::build_frame(&head, shared.as_ref(), true)
+                .unwrap()
+                .wire_len(),
+        );
     }));
 
     // inproc (MPI-like) round trip
@@ -57,20 +282,14 @@ fn main() {
         server.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
     }));
 
-    // tcp (gRPC-like) round trip
+    // tcp (gRPC-like) round trip over the reactor
     let tcp_server = TcpServer::bind("127.0.0.1:0", traffic.clone()).unwrap();
     let addr = tcp_server.local_addr.to_string();
     let tcp_client = TcpClient::connect(
         &addr,
         &Msg::Register {
             client: 0,
-            profile: ClientProfile {
-                speed_factor: 1.0,
-                mem_gb: 1.0,
-                link_bw: 1e9,
-                n_samples: 1,
-                bench_step_ms: 1.0,
-            },
+            profile: profile(),
         },
         LinkShaper::unshaped(),
         traffic,
@@ -91,6 +310,37 @@ fn main() {
             .unwrap()
             .unwrap();
     }));
+    drop(tcp_client);
+    drop(tcp_server);
+
+    // fleet sweep
+    let target: usize = std::env::var("FEDHPC_BENCH_SOCKETS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10_000);
+    let (fleet, achieved, samples_ns) = fleet_rounds(target, budget);
+    let p50_ms = percentile(&samples_ns, 0.5) / 1e6;
+    let p99_ms = percentile(&samples_ns, 0.99) / 1e6;
+    stats.push(fleet);
 
     print_table("transport layer (inproc='MPI' vs tcp='gRPC')", &stats);
+    println!(
+        "\nfleet: {achieved}/{target} sockets, round p50 {p50_ms:.2} ms, p99 {p99_ms:.2} ms"
+    );
+    let ratio = wire_plain as f64 / wire_lz.max(1) as f64;
+    println!(
+        "broadcast wire bytes: {wire_plain} plain vs {wire_lz} compressed ({ratio:.2}x)"
+    );
+
+    let extra = json_num_obj(&[
+        ("sockets_target", target as f64),
+        ("sockets_achieved", achieved as f64),
+        ("fleet_round_p50_ms", p50_ms),
+        ("fleet_round_p99_ms", p99_ms),
+        ("bcast_wire_bytes_uncompressed", wire_plain as f64),
+        ("bcast_wire_bytes_compressed", wire_lz as f64),
+        ("bcast_compression_ratio", ratio),
+    ]);
+    write_json_report("BENCH_transport.json", "transport", &stats, &[("metrics", extra)])
+        .expect("writing BENCH_transport.json");
 }

@@ -291,6 +291,37 @@ fn decode(v: &Value) -> Result<ExperimentConfig> {
                 .and_then(Value::as_str)
                 .map(str::to_string),
         },
+        // optional section: absent (old configs) means defaults
+        transport: match v.get("transport") {
+            None => TransportConfig::default(),
+            Some(t) => {
+                let d = TransportConfig::default();
+                TransportConfig {
+                    max_connections: t
+                        .get("max_connections")
+                        .and_then(Value::as_usize)
+                        .unwrap_or(d.max_connections),
+                    compression: t
+                        .get("compression")
+                        .and_then(Value::as_bool)
+                        .unwrap_or(d.compression),
+                    reactor_threads: t
+                        .get("reactor_threads")
+                        .and_then(Value::as_usize)
+                        .map(|n| n as u32)
+                        .unwrap_or(d.reactor_threads),
+                    idle_timeout_ms: t
+                        .get("idle_timeout_ms")
+                        .and_then(Value::as_f64)
+                        .map(|n| n as u64)
+                        .unwrap_or(d.idle_timeout_ms),
+                    outbox_frames: t
+                        .get("outbox_frames")
+                        .and_then(Value::as_usize)
+                        .unwrap_or(d.outbox_frames),
+                }
+            }
+        },
     })
 }
 
@@ -457,6 +488,25 @@ pub fn to_json(cfg: &ExperimentConfig) -> String {
             V::Bool(cfg.mock_runtime),
         ),
         ("telemetry", obj(telemetry_fields)),
+        (
+            "transport",
+            obj(vec![
+                (
+                    "max_connections",
+                    num(cfg.transport.max_connections as f64),
+                ),
+                ("compression", V::Bool(cfg.transport.compression)),
+                (
+                    "reactor_threads",
+                    num(f64::from(cfg.transport.reactor_threads)),
+                ),
+                (
+                    "idle_timeout_ms",
+                    num(cfg.transport.idle_timeout_ms as f64),
+                ),
+                ("outbox_frames", num(cfg.transport.outbox_frames as f64)),
+            ]),
+        ),
     ])
     .to_string()
 }
@@ -750,6 +800,75 @@ mod tests {
         let cfg = from_json_str(&stripped).unwrap();
         assert_eq!(cfg.telemetry, TelemetryConfig::default());
         assert_eq!(cfg.telemetry.addr, None);
+    }
+
+    #[test]
+    fn roundtrip_transport_section() {
+        let mut cfg = quickstart();
+        cfg.transport = TransportConfig {
+            max_connections: 4_096,
+            compression: false,
+            reactor_threads: 3,
+            idle_timeout_ms: 12_500,
+            outbox_frames: 16,
+        };
+        let back = from_json_str(&to_json(&cfg)).unwrap();
+        assert_eq!(back.transport, cfg.transport);
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn missing_transport_section_defaults() {
+        // configs written before the transport axis existed still load
+        let text = to_json(&quickstart());
+        let stripped = {
+            let v = Value::parse(&text).unwrap();
+            let keep: Vec<(&str, Value)> = [
+                "name",
+                "seed",
+                "data",
+                "cluster",
+                "train",
+                "aggregation",
+                "selection",
+            ]
+            .iter()
+            .map(|k| (*k, v.req(k).unwrap().clone()))
+            .collect();
+            json::obj(keep).to_string()
+        };
+        let cfg = from_json_str(&stripped).unwrap();
+        assert_eq!(cfg.transport, TransportConfig::default());
+        assert!(cfg.transport.compression);
+        assert_eq!(cfg.transport.max_connections, 10_240);
+    }
+
+    #[test]
+    fn partial_transport_section_fills_defaults() {
+        // an operator overriding one knob keeps the rest at defaults:
+        // parse the full config, swap in a one-field transport section
+        let v = Value::parse(&to_json(&quickstart())).unwrap();
+        let mut fields: Vec<(&str, Value)> = Vec::new();
+        for (k, val) in v.as_obj().unwrap() {
+            if k == "transport" {
+                fields.push((
+                    "transport",
+                    json::obj(vec![("compression", Value::Bool(false))]),
+                ));
+            } else {
+                fields.push((k.as_str(), val.clone()));
+            }
+        }
+        let cfg = from_json_str(&json::obj(fields).to_string()).unwrap();
+        assert!(!cfg.transport.compression);
+        assert_eq!(
+            cfg.transport.max_connections,
+            TransportConfig::default().max_connections
+        );
+        assert_eq!(
+            cfg.transport.outbox_frames,
+            TransportConfig::default().outbox_frames
+        );
     }
 
     #[test]

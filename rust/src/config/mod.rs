@@ -898,6 +898,41 @@ pub struct TelemetryConfig {
     pub addr: Option<String>,
 }
 
+/// TCP transport tuning (`network::reactor` + `network::framing`).
+/// Only consulted on the real-socket path; inproc ignores it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransportConfig {
+    /// Live-socket ceiling; connections beyond it are refused at
+    /// accept. Sized for 10k-client fleets by default.
+    pub max_connections: usize,
+    /// Transparent whole-frame compression (negotiated per peer: only
+    /// protocol-v3+ peers ever receive compressed frames; frames under
+    /// 256 B are never compressed).
+    pub compression: bool,
+    /// Reactor sweep threads; 0 = auto (hardware parallelism, capped).
+    pub reactor_threads: u32,
+    /// Reap connections that never register, stall mid-frame
+    /// (slowloris), or stop draining their outbox for this long.
+    /// Registered-but-quiet peers are never reaped.
+    pub idle_timeout_ms: u64,
+    /// Bounded per-peer outbox, in frames: enqueueing onto a full
+    /// outbox errors immediately (backpressure) instead of buffering
+    /// without limit behind a stalled client.
+    pub outbox_frames: usize,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            max_connections: 10_240,
+            compression: true,
+            reactor_threads: 0,
+            idle_timeout_ms: 30_000,
+            outbox_frames: 64,
+        }
+    }
+}
+
 /// Root experiment description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
@@ -927,6 +962,9 @@ pub struct ExperimentConfig {
     pub mock_runtime: bool,
     /// Optional live-operations endpoint (off by default).
     pub telemetry: TelemetryConfig,
+    /// TCP transport tuning (reactor pool, frame compression,
+    /// backpressure); defaults hold a 10k-client fleet.
+    pub transport: TransportConfig,
 }
 
 #[cfg(test)]

@@ -77,6 +77,7 @@ pub fn quickstart() -> ExperimentConfig {
         artifacts_dir: "artifacts".into(),
         mock_runtime: false,
         telemetry: TelemetryConfig::default(),
+        transport: TransportConfig::default(),
     }
 }
 
@@ -135,6 +136,7 @@ pub fn paper_testbed() -> ExperimentConfig {
         artifacts_dir: "artifacts".into(),
         mock_runtime: false,
         telemetry: TelemetryConfig::default(),
+        transport: TransportConfig::default(),
     }
 }
 

@@ -135,6 +135,33 @@ pub fn validate(cfg: &ExperimentConfig) -> Result<()> {
             cfg.faults.straggler_factor
         );
     }
+    if cfg.transport.max_connections == 0 {
+        bail!("config: transport.max_connections must be >= 1");
+    }
+    if cfg.transport.max_connections > 1_048_576 {
+        bail!(
+            "config: transport.max_connections must be <= 1048576, got {}",
+            cfg.transport.max_connections
+        );
+    }
+    // 0 = auto-size to the host; an explicit count beyond 256 sweep
+    // threads is certainly a typo (the pool busy-polls when loaded)
+    if cfg.transport.reactor_threads > 256 {
+        bail!(
+            "config: transport.reactor_threads must be <= 256 (0 = auto), got {}",
+            cfg.transport.reactor_threads
+        );
+    }
+    if cfg.transport.idle_timeout_ms < 10 {
+        bail!(
+            "config: transport.idle_timeout_ms must be >= 10, got {} — \
+             sub-10ms reaping races legitimate handshakes",
+            cfg.transport.idle_timeout_ms
+        );
+    }
+    if cfg.transport.outbox_frames == 0 {
+        bail!("config: transport.outbox_frames must be >= 1");
+    }
     Ok(())
 }
 
@@ -257,6 +284,33 @@ mod tests {
             c.ingest_threads = ok;
             assert!(validate(&c).is_ok(), "ingest_threads {ok} should pass");
         }
+    }
+
+    #[test]
+    fn rejects_bad_transport_params() {
+        let mut c = quickstart();
+        c.transport.max_connections = 0;
+        assert!(validate(&c).is_err(), "max_connections 0");
+        c.transport.max_connections = 2_000_000;
+        assert!(validate(&c).is_err(), "max_connections 2M");
+        let mut c = quickstart();
+        c.transport.reactor_threads = 257;
+        assert!(validate(&c).is_err(), "reactor_threads 257");
+        let mut c = quickstart();
+        c.transport.idle_timeout_ms = 5;
+        assert!(validate(&c).is_err(), "idle_timeout_ms 5");
+        let mut c = quickstart();
+        c.transport.outbox_frames = 0;
+        assert!(validate(&c).is_err(), "outbox_frames 0");
+        let mut c = quickstart();
+        c.transport = TransportConfig {
+            max_connections: 10_240,
+            compression: false,
+            reactor_threads: 0,
+            idle_timeout_ms: 30_000,
+            outbox_frames: 64,
+        };
+        assert!(validate(&c).is_ok());
     }
 
     #[test]

@@ -1,23 +1,31 @@
 //! Federation launcher: config → running system.
 //!
 //! Builds the simulated heterogeneous cluster, partitions the dataset,
-//! creates one worker thread per node over the in-process transport
-//! (link-shaped per SKU) and runs the orchestrator round loop to
-//! completion. This is the single entry point examples, the CLI and
-//! the accuracy experiments share.
+//! creates one worker thread per node and runs the orchestrator round
+//! loop to completion. This is the single entry point examples, the
+//! CLI and the accuracy experiments share.
+//!
+//! Transport selection follows the cluster backends: configs naming a
+//! `"grpc"` backend (the paper testbed's cloud side) run over the real
+//! TCP stack on loopback — reactor, framing, negotiated compression
+//! and all — while everything else stays on the in-process transport
+//! (microsecond latency, the default for tests).
 
 use crate::client::{Worker, WorkerOptions};
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, Node};
 use crate::config::ExperimentConfig;
 use crate::data::{FederatedDataset, Shard};
 use crate::faults::FaultInjector;
 use crate::metrics::TrainingReport;
 use crate::network::inproc::InprocHub;
-use crate::network::{LinkShaper, TrafficLog};
+use crate::network::tcp::{TcpClient, TcpServer};
+use crate::network::transport::{ClientTransport, ServerTransport};
+use crate::network::{LinkShaper, Msg, TrafficLog};
 use crate::orchestrator::{EvalHarness, NoHooks, Orchestrator, OrchestratorHooks};
 use crate::runtime::{MockRuntime, ModelRuntime, PjrtRuntime};
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::Duration;
 
 /// Build a runtime for `cfg`'s model. Mock runtimes only support
@@ -75,7 +83,6 @@ pub fn run_real_with_control(
     let dataset = FederatedDataset::build(&cfg.data, n_clients, cfg.seed)?;
 
     let traffic = Arc::new(TrafficLog::new());
-    let hub = InprocHub::new(traffic.clone());
 
     // PJRT: one shared service (clones share compiled executables);
     // mock: cheap per-worker instances.
@@ -102,38 +109,90 @@ pub fn run_real_with_control(
         shard: dataset.eval.clone(),
     };
 
-    // spawn workers
-    let mut handles = Vec::with_capacity(n_clients);
-    for (node, shard) in cluster.nodes.iter().zip(&dataset.clients) {
-        let endpoint = hub.add_client(node.id, LinkShaper::from_class(node.link()));
-        let runtime = worker_runtime(shard)?;
-        let injector = FaultInjector::new(cfg.faults, cfg.seed);
-        let worker = Worker::new(
-            endpoint,
-            runtime,
-            node.clone(),
-            shard.clone(),
-            injector,
-            WorkerOptions {
-                emulate_speed: true,
-                max_slowdown: 4.0,
-                bench_steps: 0,
-                seed: cfg.seed ^ node.id as u64,
-            },
-        );
-        let name = format!("worker-{}", node.id);
-        handles.push(
-            std::thread::Builder::new()
-                .name(name)
-                .spawn(move || worker.run())
-                .context("spawning worker thread")?,
-        );
-    }
+    // transport by backend name: "grpc" anywhere means the real TCP
+    // stack over loopback; otherwise the in-process hub
+    let use_tcp =
+        cfg.cluster.cloud_backend == "grpc" || cfg.cluster.hpc_backend == "grpc";
 
-    // run the orchestrator on this thread; strategy + server optimizer
-    // come from the config's registry names
+    let mut handles = Vec::with_capacity(n_clients);
+    if use_tcp {
+        let server = TcpServer::bind_with("127.0.0.1:0", &cfg.transport, traffic.clone())?;
+        let addr = server.local_addr.to_string();
+        for (node, shard) in cluster.nodes.iter().zip(&dataset.clients) {
+            let runtime = worker_runtime(shard)?;
+            let profile = crate::client::profile_runtime(runtime.as_ref(), node, shard, 0)?;
+            let endpoint = TcpClient::connect_with(
+                &addr,
+                &Msg::Register {
+                    client: node.id,
+                    profile,
+                },
+                LinkShaper::from_class(node.link()),
+                // one shared log: server records down on flush, each
+                // client records its own up on send — same split as
+                // the multi-process deployment
+                traffic.clone(),
+                cfg.transport.compression,
+            )?;
+            handles.push(spawn_worker(cfg, endpoint, runtime, node, shard)?);
+        }
+        orchestrate(cfg, server, traffic, initial, eval, n_clients, handles, hooks, control)
+    } else {
+        let hub = InprocHub::new(traffic.clone());
+        for (node, shard) in cluster.nodes.iter().zip(&dataset.clients) {
+            let endpoint = hub.add_client(node.id, LinkShaper::from_class(node.link()));
+            let runtime = worker_runtime(shard)?;
+            handles.push(spawn_worker(cfg, endpoint, runtime, node, shard)?);
+        }
+        orchestrate(cfg, hub.server(), traffic, initial, eval, n_clients, handles, hooks, control)
+    }
+}
+
+/// Spawn one worker thread over any client transport.
+fn spawn_worker<T: ClientTransport + Send + 'static>(
+    cfg: &ExperimentConfig,
+    endpoint: T,
+    runtime: Box<dyn ModelRuntime>,
+    node: &Node,
+    shard: &Shard,
+) -> Result<JoinHandle<Result<u64>>> {
+    let worker = Worker::new(
+        endpoint,
+        runtime,
+        node.clone(),
+        shard.clone(),
+        FaultInjector::new(cfg.faults, cfg.seed),
+        WorkerOptions {
+            emulate_speed: true,
+            max_slowdown: 4.0,
+            bench_steps: 0,
+            seed: cfg.seed ^ node.id as u64,
+        },
+    );
+    let name = format!("worker-{}", node.id);
+    std::thread::Builder::new()
+        .name(name)
+        .spawn(move || worker.run())
+        .context("spawning worker thread")
+}
+
+/// Run the orchestrator round loop over any server transport and
+/// reap the worker threads.
+#[allow(clippy::too_many_arguments)]
+fn orchestrate<T: ServerTransport>(
+    cfg: &ExperimentConfig,
+    transport: T,
+    traffic: Arc<TrafficLog>,
+    initial: Vec<f32>,
+    eval: EvalHarness,
+    n_clients: usize,
+    handles: Vec<JoinHandle<Result<u64>>>,
+    hooks: &mut dyn OrchestratorHooks,
+    control: Option<Arc<crate::telemetry::ControlPlane>>,
+) -> Result<TrainingReport> {
+    // strategy + server optimizer come from the config's registry names
     let mut builder = Orchestrator::builder(cfg.clone())
-        .transport(hub.server())
+        .transport(transport)
         .traffic(traffic)
         .initial_params(initial)
         .eval(eval);
@@ -181,6 +240,29 @@ mod tests {
         // traffic was accounted
         let (down, up) = report.total_bytes();
         assert!(down > 0 && up > 0);
+    }
+
+    /// The paper testbed names a "grpc" backend — that must select the
+    /// real TCP stack (reactor + framing + negotiated compression) on
+    /// loopback, and still learn + account traffic end-to-end.
+    #[test]
+    fn mock_federation_over_tcp_loopback() {
+        let mut cfg = quickstart();
+        cfg.mock_runtime = true;
+        cfg.cluster.cloud_backend = "grpc".into();
+        cfg.train.rounds = 3;
+        cfg.train.local_epochs = 1;
+        cfg.train.lr = 0.2;
+        cfg.selection.clients_per_round = 4;
+        cfg.data.samples_per_client = 64;
+        cfg.data.eval_samples = 128;
+        cfg.data.partition = Partition::Iid;
+        let report = run_real(&cfg).unwrap();
+        assert_eq!(report.rounds.len(), 3);
+        assert!(report.final_accuracy().is_some());
+        // traffic crossed real sockets in both directions
+        let (down, up) = report.total_bytes();
+        assert!(down > 0 && up > 0, "down {down} up {up}");
     }
 
     #[test]

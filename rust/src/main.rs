@@ -114,6 +114,16 @@ fn load_config(p: &fedhpc::util::argparse::Parsed) -> Result<ExperimentConfig> {
     if let Some(t) = p.get("ingest-threads") {
         cfg.ingest_threads = t.parse().context("--ingest-threads")?;
     }
+    if let Some(m) = p.get("max-connections") {
+        cfg.transport.max_connections = m.parse().context("--max-connections")?;
+    }
+    if let Some(c) = p.get("transport-compression") {
+        cfg.transport.compression = match c {
+            "on" => true,
+            "off" => false,
+            other => anyhow::bail!("--transport-compression must be 'on' or 'off', got '{other}'"),
+        };
+    }
     config::validate(&cfg)?;
     Ok(cfg)
 }
@@ -173,6 +183,16 @@ fn train_args() -> Args {
             "ingest-threads",
             None,
             "shard-worker threads for parallel server ingest: 0 = auto, 1 = serial",
+        )
+        .opt(
+            "max-connections",
+            None,
+            "TCP connection cap for the serve reactor (default 10240)",
+        )
+        .opt(
+            "transport-compression",
+            None,
+            "transparent TCP frame compression: on | off (default on)",
         )
         .flag("mock", "use the pure-Rust mock runtime")
 }
@@ -273,6 +293,16 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             None,
             "shard-worker threads for parallel server ingest: 0 = auto, 1 = serial",
         )
+        .opt(
+            "max-connections",
+            None,
+            "TCP connection cap for the reactor (default 10240)",
+        )
+        .opt(
+            "transport-compression",
+            None,
+            "transparent TCP frame compression: on | off (default on)",
+        )
         .flag("mock", "use the mock runtime")
         .parse(rest)?;
     let cfg = load_config(&p)?;
@@ -281,8 +311,13 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         None => cfg.cluster.total_nodes(),
     };
     let traffic = Arc::new(TrafficLog::new());
-    let server = TcpServer::bind(p.get("bind").unwrap(), traffic.clone())?;
-    println!("orchestrator listening on {}", server.local_addr);
+    let server = TcpServer::bind_with(p.get("bind").unwrap(), &cfg.transport, traffic.clone())?;
+    println!(
+        "orchestrator listening on {} (max {} connections, compression {})",
+        server.local_addr,
+        cfg.transport.max_connections,
+        if cfg.transport.compression { "on" } else { "off" }
+    );
 
     // centralized eval set + initial params
     let dataset = FederatedDataset::build(&cfg.data, expected, cfg.seed)?;
@@ -331,6 +366,11 @@ fn cmd_worker(rest: &[String]) -> Result<()> {
         .opt("seed", None, "override seed (must match server)")
         .opt("artifacts", None, "artifacts directory")
         .opt("clients", None, "total worker count (must match server)")
+        .opt(
+            "transport-compression",
+            None,
+            "transparent TCP frame compression: on | off (default on)",
+        )
         .flag("mock", "use the mock runtime")
         .parse(rest)?;
     let cfg = load_config(&p)?;
@@ -354,7 +394,7 @@ fn cmd_worker(rest: &[String]) -> Result<()> {
     };
     let traffic = Arc::new(TrafficLog::new());
     let profile = fedhpc::client::profile_runtime(runtime.as_ref(), &node, &shard, 0)?;
-    let transport = TcpClient::connect(
+    let transport = TcpClient::connect_with(
         p.get("connect").unwrap(),
         &Msg::Register {
             client: id,
@@ -362,6 +402,7 @@ fn cmd_worker(rest: &[String]) -> Result<()> {
         },
         LinkShaper::from_class(node.link()),
         traffic,
+        cfg.transport.compression,
     )?;
     println!("worker {id} connected ({})", node.sku.name);
     let worker = Worker::new(

@@ -1,0 +1,624 @@
+//! Frame layer for the TCP transport: length-prefixed frames with a
+//! transparently negotiated whole-frame compression flag.
+//!
+//! # Wire format
+//!
+//! Every frame is `[u32 LE header][payload]`. The low 31 bits of the
+//! header are the payload length on the wire; bit 31 ([`COMPRESSED_FLAG`])
+//! marks a compressed frame. This is backward compatible because the
+//! frame bound has always been [`MAX_FRAME`] = 2³⁰: a v1/v2 peer reads
+//! a flagged header as an absurd length and drops the connection, and we
+//! never send compressed frames to such peers (see negotiation below).
+//!
+//! * **Uncompressed** (`flag = 0`): the payload is the `Msg::encode()`
+//!   bytes, exactly as in protocol v1/v2.
+//! * **Compressed** (`flag = 1`): the payload is
+//!   `[u32 LE raw_len][LZ stream]`; decompressing the LZ stream must
+//!   yield exactly `raw_len` bytes, which are the `Msg::encode()` bytes.
+//!
+//! # Compression policy
+//!
+//! Frames are compressed only when (a) the peer negotiated protocol
+//! version ≥ `message::FRAME_COMPRESSION_VERSION`, (b) the logical
+//! payload is at least [`MIN_COMPRESS`] = 256 bytes (don't compress
+//! small control frames — the exemplar wire formats use the same
+//! threshold), and (c) compression actually shrinks the payload.
+//! Otherwise the uncompressed form is sent; decoders always accept
+//! both. Frame compression is transparent to the application layer and
+//! composes with (does not replace) the gradient codecs in `compress::`
+//! — a quantized/sparse delta rides inside a compressed frame like any
+//! other bytes.
+//!
+//! # Codec
+//!
+//! The LZ stream is a dependency-free LZSS variant: tokens are grouped
+//! eight to a control byte (bit set ⇒ back-reference). A literal is one
+//! byte; a back-reference is `[u16 LE offset][u8 length − 4]` with
+//! offsets in `1..=65535` and match lengths in `4..=259`. The encoder
+//! is greedy over a 2¹⁵-slot hash table of 4-byte prefixes. The decoder
+//! is fully bounds-checked: truncated streams, bad offsets, and streams
+//! that disagree with the declared `raw_len` are refused with an error,
+//! never a panic.
+
+use anyhow::{bail, Result};
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+/// 1 GiB sanity bound on the logical (decompressed) frame payload.
+pub const MAX_FRAME: u32 = 1 << 30;
+
+/// Bit 31 of the frame header: payload is `[u32 raw_len][LZ stream]`.
+pub const COMPRESSED_FLAG: u32 = 1 << 31;
+
+/// Frames with logical payloads below this many bytes are never
+/// compressed (zstd-exemplar threshold: "don't compress under 256 B").
+pub const MIN_COMPRESS: usize = 256;
+
+/// Bytes of the `[u32 LE]` frame header.
+pub const FRAME_HEADER_BYTES: u64 = 4;
+
+const MIN_MATCH: usize = 4;
+const MAX_MATCH: usize = 255 + MIN_MATCH;
+const MAX_OFFSET: usize = u16::MAX as usize;
+const HASH_BITS: u32 = 15;
+
+#[inline]
+fn read4(input: &[u8], i: usize) -> Option<[u8; 4]> {
+    let end = i.checked_add(4)?;
+    input.get(i..end)?.try_into().ok()
+}
+
+#[inline]
+fn hash4(b: [u8; 4]) -> usize {
+    let v = u32::from_le_bytes(b);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Greedy LZSS compression of `input`. Infallible; the output may be
+/// larger than the input (the framing layer then keeps the raw form).
+pub fn lz_compress(input: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(input.len() / 2 + 16);
+    let mut table = vec![u32::MAX; 1usize << HASH_BITS];
+    let len = input.len();
+    let mut i = 0usize;
+    while i < len {
+        let ctrl_at = out.len();
+        out.push(0u8);
+        let mut ctrl = 0u8;
+        let mut slot = 0u32;
+        while slot < 8 && i < len {
+            let mut matched = 0usize;
+            let mut offset = 0usize;
+            if let Some(four) = read4(input, i) {
+                let h = hash4(four);
+                let cand = table.get(h).copied().unwrap_or(u32::MAX) as usize;
+                if let Some(t) = table.get_mut(h) {
+                    *t = i as u32;
+                }
+                if cand < i && i - cand <= MAX_OFFSET && read4(input, cand) == Some(four) {
+                    let mut l = MIN_MATCH;
+                    while l < MAX_MATCH
+                        && input.get(i + l).is_some()
+                        && input.get(i + l) == input.get(cand + l)
+                    {
+                        l += 1;
+                    }
+                    matched = l;
+                    offset = i - cand;
+                }
+            }
+            if matched >= MIN_MATCH {
+                ctrl |= 1 << slot;
+                out.extend_from_slice(&(offset as u16).to_le_bytes());
+                out.push((matched - MIN_MATCH) as u8);
+                i += matched;
+            } else {
+                if let Some(&b) = input.get(i) {
+                    out.push(b);
+                }
+                i += 1;
+            }
+            slot += 1;
+        }
+        if let Some(c) = out.get_mut(ctrl_at) {
+            *c = ctrl;
+        }
+    }
+    out
+}
+
+/// Decompress an LZSS stream that must expand to exactly `raw_len`
+/// bytes. Hostile input (truncation, bad offsets, length mismatch)
+/// errors out; nothing here can panic.
+pub fn lz_decompress(data: &[u8], raw_len: usize) -> Result<Vec<u8>> {
+    if raw_len > MAX_FRAME as usize {
+        bail!("declared decompressed length too large: {raw_len}");
+    }
+    let mut out: Vec<u8> = Vec::with_capacity(raw_len);
+    let mut pos = 0usize;
+    while pos < data.len() {
+        if out.len() >= raw_len {
+            bail!("compressed frame has trailing data");
+        }
+        let Some(&ctrl) = data.get(pos) else { break };
+        pos += 1;
+        let mut slot = 0u32;
+        while slot < 8 {
+            if out.len() == raw_len {
+                if pos < data.len() {
+                    bail!("compressed frame has trailing data");
+                }
+                break;
+            }
+            if pos >= data.len() {
+                // the final group may cover fewer than 8 tokens — only
+                // valid if the output is already complete (checked above)
+                bail!("truncated compressed frame");
+            }
+            if ctrl & (1u8 << slot) != 0 {
+                let (Some(&o0), Some(&o1), Some(&l0)) =
+                    (data.get(pos), data.get(pos + 1), data.get(pos + 2))
+                else {
+                    bail!("truncated back-reference in compressed frame");
+                };
+                pos += 3;
+                let offset = u16::from_le_bytes([o0, o1]) as usize;
+                let mlen = l0 as usize + MIN_MATCH;
+                if offset == 0 || offset > out.len() {
+                    bail!("bad match offset {offset} at output position {}", out.len());
+                }
+                if out.len() + mlen > raw_len {
+                    bail!("compressed frame expands past declared length {raw_len}");
+                }
+                // byte-at-a-time: matches may overlap their own output
+                for _ in 0..mlen {
+                    let Some(&b) = out.get(out.len() - offset) else {
+                        bail!("bad match offset {offset}");
+                    };
+                    out.push(b);
+                }
+            } else {
+                let Some(&b) = data.get(pos) else {
+                    bail!("truncated literal in compressed frame");
+                };
+                pos += 1;
+                out.push(b);
+            }
+            slot += 1;
+        }
+    }
+    if out.len() != raw_len {
+        bail!(
+            "truncated compressed frame: produced {} of declared {raw_len} bytes",
+            out.len()
+        );
+    }
+    Ok(out)
+}
+
+/// Split a frame-header word into (payload length on the wire,
+/// compressed flag), rejecting oversized lengths.
+pub fn parse_header(word: u32) -> Result<(usize, bool)> {
+    let compressed = word & COMPRESSED_FLAG != 0;
+    let len = word & !COMPRESSED_FLAG;
+    if len > MAX_FRAME {
+        bail!("frame too large: {len}");
+    }
+    Ok((len as usize, compressed))
+}
+
+fn header_word(len: usize, compressed: bool) -> Result<u32> {
+    if len > MAX_FRAME as usize {
+        bail!("frame too large: {len}");
+    }
+    let mut w = len as u32;
+    if compressed {
+        w |= COMPRESSED_FLAG;
+    }
+    Ok(w)
+}
+
+/// Decode a frame payload (the bytes after the header) into the logical
+/// `Msg::encode()` bytes, honoring the header's compressed flag.
+pub fn unframe(payload: &[u8], compressed: bool) -> Result<Vec<u8>> {
+    if !compressed {
+        return Ok(payload.to_vec());
+    }
+    let (Some(&a), Some(&b), Some(&c), Some(&d)) = (
+        payload.first(),
+        payload.get(1),
+        payload.get(2),
+        payload.get(3),
+    ) else {
+        bail!("compressed frame shorter than its raw-length prefix");
+    };
+    let raw_len = u32::from_le_bytes([a, b, c, d]);
+    if raw_len > MAX_FRAME {
+        bail!("declared decompressed length too large: {raw_len}");
+    }
+    let body = payload.get(4..).unwrap_or(&[]);
+    lz_decompress(body, raw_len as usize)
+}
+
+/// One wire-ready frame (header included), kept in up to two segments
+/// so an Arc-shared broadcast payload is never copied per peer.
+#[derive(Clone, Debug)]
+pub enum FrameBytes {
+    /// Complete frame owned by one peer's outbox.
+    Owned(Vec<u8>),
+    /// `pre` = header + message head (owned); `shared` payload follows.
+    Split { pre: Vec<u8>, shared: Arc<[u8]> },
+    /// Complete frame shared across the cohort (compressed broadcast:
+    /// the whole-frame bytes are identical for every recipient).
+    Shared(Arc<[u8]>),
+}
+
+impl FrameBytes {
+    /// Total bytes this frame occupies on the wire (header included).
+    pub fn wire_len(&self) -> u64 {
+        let (a, b) = self.segments();
+        (a.len() + b.len()) as u64
+    }
+
+    /// The frame as two back-to-back byte segments.
+    pub fn segments(&self) -> (&[u8], &[u8]) {
+        match self {
+            FrameBytes::Owned(v) => (v.as_slice(), &[]),
+            FrameBytes::Split { pre, shared } => (pre.as_slice(), shared),
+            FrameBytes::Shared(a) => (a, &[]),
+        }
+    }
+}
+
+/// Build the uncompressed frame for `head ++ shared`: the header and
+/// head go into an owned prefix, the shared payload is Arc-appended.
+pub fn frame_uncompressed(head: &[u8], shared: Option<&Arc<[u8]>>) -> Result<FrameBytes> {
+    let tail_len = shared.map_or(0, |s| s.len());
+    let word = header_word(head.len() + tail_len, false)?;
+    let mut pre = Vec::with_capacity(4 + head.len());
+    pre.extend_from_slice(&word.to_le_bytes());
+    pre.extend_from_slice(head);
+    Ok(match shared {
+        Some(s) if !s.is_empty() => FrameBytes::Split {
+            pre,
+            shared: s.clone(),
+        },
+        _ => FrameBytes::Owned(pre),
+    })
+}
+
+/// Try to build a complete compressed frame (header included) over
+/// `head ++ tail`. Returns `None` when the payload is under
+/// [`MIN_COMPRESS`] or when compression does not shrink it — the caller
+/// then sends the uncompressed form.
+pub fn try_frame_compressed(head: &[u8], tail: &[u8]) -> Result<Option<Vec<u8>>> {
+    let raw_len = head.len() + tail.len();
+    if raw_len < MIN_COMPRESS || raw_len > MAX_FRAME as usize {
+        return Ok(None);
+    }
+    let lz = if tail.is_empty() {
+        lz_compress(head)
+    } else {
+        let mut raw = Vec::with_capacity(raw_len);
+        raw.extend_from_slice(head);
+        raw.extend_from_slice(tail);
+        lz_compress(&raw)
+    };
+    let payload_len = 4 + lz.len();
+    if payload_len >= raw_len {
+        return Ok(None);
+    }
+    let word = header_word(payload_len, true)?;
+    let mut frame = Vec::with_capacity(4 + payload_len);
+    frame.extend_from_slice(&word.to_le_bytes());
+    frame.extend_from_slice(&(raw_len as u32).to_le_bytes());
+    frame.extend_from_slice(&lz);
+    Ok(Some(frame))
+}
+
+/// Build the frame for `head ++ shared`, compressing when `compress`
+/// is set and profitable (see the module docs for the policy).
+pub fn build_frame(head: &[u8], shared: Option<&Arc<[u8]>>, compress: bool) -> Result<FrameBytes> {
+    if compress {
+        let tail: &[u8] = shared.map_or(&[][..], |s| s);
+        if let Some(frame) = try_frame_compressed(head, tail)? {
+            return Ok(FrameBytes::Owned(frame));
+        }
+    }
+    frame_uncompressed(head, shared)
+}
+
+/// Incremental frame parser for nonblocking reads: feed raw socket
+/// bytes with [`extend`](FrameAssembler::extend), pop logical payloads
+/// with [`next_frame`](FrameAssembler::next_frame).
+#[derive(Default)]
+pub struct FrameAssembler {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+fn read_u32_le(buf: &[u8], at: usize) -> Option<u32> {
+    let b0 = *buf.get(at)?;
+    let b1 = *buf.get(at.checked_add(1)?)?;
+    let b2 = *buf.get(at.checked_add(2)?)?;
+    let b3 = *buf.get(at.checked_add(3)?)?;
+    Some(u32::from_le_bytes([b0, b1, b2, b3]))
+}
+
+impl FrameAssembler {
+    pub fn new() -> FrameAssembler {
+        FrameAssembler::default()
+    }
+
+    /// Append raw bytes read from the socket.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        // reclaim the consumed prefix before growing further
+        if self.pos > 0 && (self.pos >= self.buf.len() || self.pos >= 64 * 1024) {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete frame's logical payload; `None` when more
+    /// bytes are needed. Malformed headers or compressed bodies error.
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        let Some(word) = read_u32_le(&self.buf, self.pos) else {
+            return Ok(None);
+        };
+        let (len, compressed) = parse_header(word)?;
+        let Some(start) = self.pos.checked_add(4) else {
+            bail!("frame bounds overflow");
+        };
+        let Some(end) = start.checked_add(len) else {
+            bail!("frame bounds overflow");
+        };
+        let Some(payload) = self.buf.get(start..end) else {
+            return Ok(None);
+        };
+        let out = unframe(payload, compressed)?;
+        self.pos = end;
+        Ok(Some(out))
+    }
+
+    /// True when a started-but-incomplete frame is buffered — the
+    /// half-frame (slowloris) condition the idle reaper keys on.
+    pub fn mid_frame(&self) -> bool {
+        self.pos < self.buf.len()
+    }
+
+    /// Unconsumed bytes currently buffered.
+    pub fn buffered(&self) -> usize {
+        self.buf.len().saturating_sub(self.pos)
+    }
+}
+
+/// Blocking read of one frame: returns the logical payload and the
+/// bytes that crossed the wire (header included).
+pub fn read_frame(stream: &mut impl Read) -> Result<(Vec<u8>, u64)> {
+    let mut hdr = [0u8; 4];
+    stream.read_exact(&mut hdr)?;
+    let (len, compressed) = parse_header(u32::from_le_bytes(hdr))?;
+    let mut buf = vec![0u8; len];
+    stream.read_exact(&mut buf)?;
+    let payload = unframe(&buf, compressed)?;
+    Ok((payload, FRAME_HEADER_BYTES + len as u64))
+}
+
+/// Blocking write of a built frame; returns its wire length.
+pub fn write_frame(stream: &mut impl Write, frame: &FrameBytes) -> Result<u64> {
+    let (a, b) = frame.segments();
+    stream.write_all(a)?;
+    if !b.is_empty() {
+        stream.write_all(b)?;
+    }
+    Ok(frame.wire_len())
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests may panic freely
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(data: &[u8]) {
+        let lz = lz_compress(data);
+        let back = lz_decompress(&lz, data.len()).unwrap();
+        assert_eq!(back, data, "lz roundtrip mismatch at len {}", data.len());
+    }
+
+    #[test]
+    fn lz_roundtrips_basic_shapes() {
+        roundtrip(b"");
+        roundtrip(b"a");
+        roundtrip(b"abcd");
+        roundtrip(b"aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa");
+        roundtrip("hello hello hello hello hello hello".as_bytes());
+        let long: Vec<u8> = (0..100_000u32).map(|i| (i % 7) as u8).collect();
+        roundtrip(&long);
+        // overlapping match (RLE-style): offset 1, long run
+        let run = vec![42u8; 10_000];
+        let lz = lz_compress(&run);
+        assert!(lz.len() < run.len() / 8, "run should compress hard: {}", lz.len());
+        roundtrip(&run);
+    }
+
+    #[test]
+    fn lz_roundtrips_incompressible_random() {
+        let mut rng = Rng::new(7);
+        for len in [1usize, 5, 255, 256, 4096, 70_000] {
+            let data: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+            roundtrip(&data);
+        }
+    }
+
+    #[test]
+    fn lz_decompress_refuses_hostile_input() {
+        // declared length never produced
+        assert!(lz_decompress(&[], 1).is_err());
+        // truncated back-reference
+        assert!(lz_decompress(&[0b1, 0x01], 8).is_err());
+        // offset 0 and offset beyond output are both invalid
+        assert!(lz_decompress(&[0b1, 0, 0, 0], 8).is_err());
+        assert!(lz_decompress(&[0b1, 0xFF, 0xFF, 0], 8).is_err());
+        // match expanding past the declared length
+        assert!(lz_decompress(&[0, b'a', 0b1, 1, 0, 255], 6).is_err());
+        // trailing data after the declared length is complete
+        let mut lz = lz_compress(b"abc");
+        lz.push(0);
+        assert!(lz_decompress(&lz, 3).is_err());
+        // declared length over the frame bound
+        assert!(lz_decompress(&[0], MAX_FRAME as usize + 1).is_err());
+        // valid stream, wrong declared length (too long)
+        let lz = lz_compress(b"abcdef");
+        assert!(lz_decompress(&lz, 7).is_err());
+    }
+
+    #[test]
+    fn header_flag_and_bounds() {
+        let (len, comp) = parse_header(1234).unwrap();
+        assert_eq!((len, comp), (1234, false));
+        let (len, comp) = parse_header(1234 | COMPRESSED_FLAG).unwrap();
+        assert_eq!((len, comp), (1234, true));
+        assert!(parse_header(MAX_FRAME + 1).is_err());
+        assert!(parse_header((MAX_FRAME + 1) | COMPRESSED_FLAG).is_err());
+    }
+
+    #[test]
+    fn small_or_unprofitable_payloads_stay_uncompressed() {
+        // under the 256 B threshold: never compressed
+        let head = vec![9u8; MIN_COMPRESS - 1];
+        assert!(try_frame_compressed(&head, &[]).unwrap().is_none());
+        let frame = build_frame(&head, None, true).unwrap();
+        assert!(matches!(frame, FrameBytes::Owned(_)));
+        let (a, _) = frame.segments();
+        let word = read_u32_le(a, 0).unwrap();
+        assert_eq!(word & COMPRESSED_FLAG, 0, "sub-threshold frame must be raw");
+        // at/over the threshold but incompressible: falls back to raw
+        let mut rng = Rng::new(3);
+        let noise: Vec<u8> = (0..4096).map(|_| rng.next_u32() as u8).collect();
+        assert!(try_frame_compressed(&noise, &[]).unwrap().is_none());
+    }
+
+    #[test]
+    fn compressed_frame_roundtrips_through_assembler() {
+        let head: Vec<u8> = b"header-bytes".to_vec();
+        let tail: Vec<u8> = (0..10_000u32).map(|i| (i % 11) as u8).collect();
+        let frame = try_frame_compressed(&head, &tail).unwrap().expect("compressible");
+        let mut logical = head.clone();
+        logical.extend_from_slice(&tail);
+        assert!(frame.len() < logical.len() + 4, "must shrink on the wire");
+        let mut asm = FrameAssembler::new();
+        asm.extend(&frame);
+        let got = asm.next_frame().unwrap().unwrap();
+        assert_eq!(got, logical);
+        assert!(!asm.mid_frame());
+    }
+
+    #[test]
+    fn assembler_handles_split_and_back_to_back_frames() {
+        let f1 = build_frame(b"first", None, false).unwrap();
+        let shared: Arc<[u8]> = vec![7u8; 500].into();
+        let f2 = build_frame(b"second", Some(&shared), true).unwrap();
+        let mut wire = Vec::new();
+        let (a, b) = f1.segments();
+        wire.extend_from_slice(a);
+        wire.extend_from_slice(b);
+        let (a, b) = f2.segments();
+        wire.extend_from_slice(a);
+        wire.extend_from_slice(b);
+        // feed one byte at a time: frames pop exactly when complete
+        let mut asm = FrameAssembler::new();
+        let mut got = Vec::new();
+        for &byte in &wire {
+            asm.extend(&[byte]);
+            while let Some(p) = asm.next_frame().unwrap() {
+                got.push(p);
+            }
+        }
+        let mut expect2 = b"second".to_vec();
+        expect2.extend_from_slice(&shared);
+        assert_eq!(got, vec![b"first".to_vec(), expect2]);
+        assert_eq!(asm.buffered(), 0);
+        // half a header is mid-frame
+        asm.extend(&[1, 0]);
+        assert!(asm.mid_frame());
+        assert!(asm.next_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn hostile_compressed_frames_refused_without_panic() {
+        let tail: Vec<u8> = (0..5_000u32).map(|i| (i % 13) as u8).collect();
+        let frame = try_frame_compressed(b"", &tail).unwrap().expect("compressible");
+        // truncate the body: assembler sees a complete frame whose LZ
+        // stream is short — must error, not block or panic
+        let mut cut = frame.clone();
+        let body_len = cut.len() - 4 - 1;
+        cut.truncate(cut.len() - 1);
+        let word = (body_len as u32 + 4) | COMPRESSED_FLAG;
+        cut.splice(..4, word.to_le_bytes());
+        let mut asm = FrameAssembler::new();
+        asm.extend(&cut);
+        assert!(asm.next_frame().is_err());
+        // inflate the declared raw_len past what the stream produces
+        let mut over = frame.clone();
+        over.splice(4..8, 1_000_000u32.to_le_bytes());
+        let mut asm = FrameAssembler::new();
+        asm.extend(&over);
+        assert!(asm.next_frame().is_err());
+        // declared raw_len above MAX_FRAME
+        let mut huge = frame;
+        huge.splice(4..8, (MAX_FRAME + 1).to_le_bytes());
+        let mut asm = FrameAssembler::new();
+        asm.extend(&huge);
+        assert!(asm.next_frame().is_err());
+    }
+
+    #[test]
+    fn blocking_read_write_roundtrip_both_forms() {
+        for compress in [false, true] {
+            let payload: Vec<u8> = (0..3_000u32).map(|i| (i % 9) as u8).collect();
+            let frame = build_frame(&payload, None, compress).unwrap();
+            let mut wire = Vec::new();
+            let wrote = write_frame(&mut wire, &frame).unwrap();
+            assert_eq!(wrote as usize, wire.len());
+            let mut cursor = std::io::Cursor::new(wire);
+            let (got, wire_bytes) = read_frame(&mut cursor).unwrap();
+            assert_eq!(got, payload);
+            assert_eq!(wire_bytes, wrote);
+            if compress {
+                assert!(wrote < payload.len() as u64, "patterned payload must shrink");
+            }
+        }
+    }
+
+    /// Property: arbitrary payloads round-trip bit-identically through
+    /// the compressed framing, on both sides of the 256 B threshold.
+    #[test]
+    fn prop_framing_roundtrips_bit_identically() {
+        crate::testkit::check("framing_roundtrip", 64, |g| {
+            let len = g.usize_in(0, 2_048);
+            let mode = g.rng.below(3);
+            let data: Vec<u8> = (0..len)
+                .map(|i| match mode {
+                    0 => (g.rng.next_u32() & 0xFF) as u8, // noise
+                    1 => (i % 17) as u8,                  // periodic
+                    _ => ((i / 64) % 251) as u8,          // long runs
+                })
+                .collect();
+            let split = g.usize_in(0, len);
+            let head = data.get(..split).unwrap_or(&[]).to_vec();
+            let tail: Arc<[u8]> = data.get(split..).unwrap_or(&[]).to_vec().into();
+            let frame = build_frame(&head, Some(&tail), true).unwrap();
+            let mut asm = FrameAssembler::new();
+            let (a, b) = frame.segments();
+            asm.extend(a);
+            asm.extend(b);
+            let got = asm
+                .next_frame()
+                .unwrap()
+                .expect("complete frame must parse");
+            assert_eq!(got, data, "roundtrip mismatch: len {len} mode {mode} split {split}");
+        });
+    }
+}

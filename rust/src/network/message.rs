@@ -11,10 +11,17 @@
 //! * **v2** — [`Msg::Update`] additionally carries `base_version`, the
 //!   model version the client trained on (right after `client`). The
 //!   buffered-async round engine needs it to compute an update's
-//!   staleness; the synchronous engine ignores it. Encoders always emit
-//!   v2; the decoder still accepts v1 frames (every other message is
-//!   layout-identical, and a v1 `Update` defaults `base_version` to its
-//!   round tag — exactly what a synchronous client would have sent).
+//!   staleness; the synchronous engine ignores it. The decoder still
+//!   accepts v1 frames (every other message is layout-identical, and a
+//!   v1 `Update` defaults `base_version` to its round tag — exactly
+//!   what a synchronous client would have sent).
+//! * **v3** — message layout identical to v2. The bump is a
+//!   *capability signal* for the TCP frame layer: a peer whose frames
+//!   carry version ≥ 3 ([`FRAME_COMPRESSION_VERSION`]) understands the
+//!   compressed-frame flag in `network::framing`, so the other side may
+//!   start sending compressed frames to it. v1/v2 peers keep receiving
+//!   plain frames — interop is preserved without any handshake message.
+//!   Encoders always emit v3.
 
 use crate::cluster::NodeId;
 use crate::compress::{DecodedView, Encoded, PreEncoded, QData, Quantized, Sparse};
@@ -23,11 +30,18 @@ use crate::util::bytes::{Reader, Writer};
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
-pub const PROTOCOL_VERSION: u8 = 2;
+pub const PROTOCOL_VERSION: u8 = 3;
 
 /// Oldest protocol version the decoder still accepts (see the module
 /// docs for the per-version differences).
 pub const MIN_PROTOCOL_VERSION: u8 = 1;
+
+/// Peers emitting this protocol version (or newer) decode the
+/// compressed-frame flag (`network::framing::COMPRESSED_FLAG`). The
+/// transport inspects the version byte of a peer's frames — byte 0 of
+/// every encoded message — and only compresses toward peers that have
+/// proven it.
+pub const FRAME_COMPRESSION_VERSION: u8 = 3;
 
 /// What a client reports about itself at registration / profiling
 /// (paper §4.1 resource profiling).

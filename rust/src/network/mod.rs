@@ -7,6 +7,13 @@
 //!   simulation and the default for tests (microsecond latency).
 //! * [`tcp`] — length-prefixed framed TCP: the "gRPC" path; actually
 //!   crosses a socket, supports multi-process deployment.
+//! * [`framing`] — the frame layer under `tcp`: length-prefixed frames
+//!   with transparent, protocol-negotiated whole-frame compression
+//!   (std-only LZ codec, 256 B threshold, v1/v2 interop).
+//! * [`reactor`] — the server-side readiness-driven connection layer:
+//!   a fixed reactor thread pool sweeping nonblocking sockets, bounded
+//!   per-peer outboxes (backpressure), generation-tagged peer map, one
+//!   deregistration path, idle/half-frame timeouts.
 //! * [`shaper`] — per-link bandwidth/latency shaping + byte accounting,
 //!   applied uniformly to either transport.
 
@@ -16,8 +23,10 @@
 // unwrap/expect subclass unwriteable even under plain clippy.
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
+pub mod framing;
 pub mod inproc;
 pub mod message;
+pub mod reactor;
 pub mod shaper;
 pub mod tcp;
 pub mod transport;

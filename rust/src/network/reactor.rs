@@ -1,0 +1,826 @@
+//! Readiness-driven connection layer for the TCP server.
+//!
+//! Replaces the old thread-per-connection design with a small fixed
+//! pool of reactor threads sweeping nonblocking sockets (DESIGN
+//! rationale: a 10k-client fleet cannot afford 10k reader threads, and
+//! the old path's global peer lock serialized every send behind the
+//! slowest socket). The std library has no epoll binding, so readiness
+//! is emulated: each reactor thread owns a disjoint set of connections
+//! and sweeps them with nonblocking reads/writes, parking with a short
+//! adaptive backoff when a sweep makes no progress and being unparked
+//! by the accept loop or by [`Reactor::send_to`] enqueues.
+//!
+//! Key structural properties (each fixes a bug in the old transport):
+//!
+//! * **No socket I/O under the peer-map lock.** `send_to` locks the map
+//!   only to clone the target's outbox handle; writes happen on the
+//!   owning reactor thread. A stalled client can fill its own bounded
+//!   outbox (further sends to *it* fail) but never delays sends to
+//!   healthy peers, `connected()`, or deregistrations.
+//! * **Generation-tagged registrations.** Every registration gets a
+//!   fresh generation from a process-wide counter; deregistration
+//!   removes the map entry only when the generation matches, so a
+//!   re-registering peer's *old* connection can no longer evict the new
+//!   stream or corrupt the active-connections gauge.
+//! * **One deregistration path.** Every connection exit — EOF, read or
+//!   write error, malformed frame, idle/half-frame timeout, server
+//!   channel closed, replacement, shutdown — funnels through
+//!   [`close_conn`], so the peer map, the per-server counters, and the
+//!   `fedhpc_tcp_active_connections` gauge cannot drift.
+//! * **Traffic recorded on completion only.** Bytes-on-wire (frame
+//!   header + possibly-compressed payload) are recorded against
+//!   [`TrafficLog`] when the frame fully flushes, never before.
+//!
+//! Backpressure: each peer has a bounded outbox
+//! (`transport.outbox_frames`); enqueueing onto a full or closed outbox
+//! errors immediately, which the orchestrator already treats as a
+//! dropped client. Timeouts: connections that never register, stall
+//! mid-frame (slowloris), or stop draining their outbox are reaped
+//! after `transport.idle_timeout_ms`; registered peers that are merely
+//! quiet are never reaped (long local training is normal).
+
+use super::framing::{self, FrameAssembler, FrameBytes};
+use super::message::Msg;
+use super::shaper::TrafficLog;
+use crate::cluster::NodeId;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::thread::{self, Thread};
+use std::time::{Duration, Instant};
+
+/// Resolved reactor parameters (from `config::TransportConfig`).
+#[derive(Clone, Debug)]
+pub struct Tuning {
+    pub reactor_threads: usize,
+    pub max_connections: usize,
+    pub compression: bool,
+    pub idle_timeout: Duration,
+    pub outbox_frames: usize,
+}
+
+impl Tuning {
+    pub fn from_config(t: &crate::config::TransportConfig) -> Tuning {
+        let threads = if t.reactor_threads == 0 {
+            // auto: a handful of sweepers saturate a NIC long before
+            // core count matters; cap so 128-core HPC nodes don't spin
+            thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(2)
+                .clamp(1, 8)
+        } else {
+            t.reactor_threads as usize
+        };
+        Tuning {
+            reactor_threads: threads.max(1),
+            max_connections: t.max_connections.max(1),
+            compression: t.compression,
+            idle_timeout: Duration::from_millis(t.idle_timeout_ms.max(1)),
+            outbox_frames: t.outbox_frames.max(1),
+        }
+    }
+}
+
+impl Default for Tuning {
+    fn default() -> Tuning {
+        Tuning::from_config(&crate::config::TransportConfig::default())
+    }
+}
+
+/// One queued outbound frame plus its accounting metadata.
+struct OutFrame {
+    bytes: FrameBytes,
+    round: u32,
+    /// Logical (pre-compression) payload bytes, for the raw/wire ratio.
+    raw_len: u64,
+}
+
+struct Outbox {
+    q: VecDeque<OutFrame>,
+    /// Set when the owning connection is gone or replaced: enqueues
+    /// fail and the sweeping thread drops the connection.
+    closed: bool,
+}
+
+struct PeerEntry {
+    generation: u64,
+    thread: usize,
+    compress: bool,
+    outbox: Arc<Mutex<Outbox>>,
+}
+
+struct Metrics {
+    accepts: Arc<crate::telemetry::Counter>,
+    active: Arc<crate::telemetry::Gauge>,
+    outbox_depth: Arc<crate::telemetry::Gauge>,
+    wakeups: Arc<crate::telemetry::Counter>,
+    tx_raw: Arc<crate::telemetry::Counter>,
+    tx_wire: Arc<crate::telemetry::Counter>,
+    rx_wire: Arc<crate::telemetry::Counter>,
+}
+
+impl Metrics {
+    fn bind() -> Metrics {
+        use crate::telemetry::names;
+        let g = crate::telemetry::global();
+        Metrics {
+            accepts: g.counter(
+                names::TCP_ACCEPTS_TOTAL,
+                "TCP connections accepted since process start.",
+            ),
+            active: g.gauge(
+                names::TCP_ACTIVE_CONNECTIONS,
+                "Registered TCP peers currently connected.",
+            ),
+            outbox_depth: g.gauge(
+                names::TCP_OUTBOX_FRAMES,
+                "Outbound frames queued across all peer outboxes.",
+            ),
+            wakeups: g.counter(
+                names::TCP_REACTOR_WAKEUPS_TOTAL,
+                "Reactor thread park/unpark wakeups.",
+            ),
+            tx_raw: g.counter(
+                names::TCP_TX_RAW_BYTES_TOTAL,
+                "Logical payload bytes sent, before frame compression.",
+            ),
+            tx_wire: g.counter(
+                names::TCP_TX_WIRE_BYTES_TOTAL,
+                "Bytes put on the wire (headers + possibly-compressed payloads).",
+            ),
+            rx_wire: g.counter(
+                names::TCP_RX_WIRE_BYTES_TOTAL,
+                "Bytes read off the wire (headers + possibly-compressed payloads).",
+            ),
+        }
+    }
+}
+
+/// One-slot-per-head cache of compressed broadcast frames: a round's
+/// Arc-shared payload is compressed once per distinct message head (the
+/// planner may vary deadlines/epochs per client) and the resulting
+/// whole-frame bytes are shared across the cohort.
+struct BcastEntry {
+    payload_ptr: usize,
+    head: Vec<u8>,
+    /// `None` records "compression unprofitable for this payload+head".
+    frame: Option<Arc<[u8]>>,
+}
+
+const BCAST_CACHE_CAP: usize = 8;
+
+/// The connection layer. Owned by `TcpServer`, shared with its accept
+/// and reactor threads.
+pub struct Reactor {
+    tuning: Tuning,
+    peers: Mutex<HashMap<NodeId, PeerEntry>>,
+    /// Unpark handles, one per reactor thread (filled during start).
+    threads: Mutex<Vec<Thread>>,
+    stop: AtomicBool,
+    next_generation: AtomicU64,
+    /// Registered peers (distinct ids) — mirrors the global gauge but
+    /// is per-server, so tests are immune to cross-test contamination.
+    active_peers: AtomicUsize,
+    /// Sockets currently owned by reactor threads (registered or not).
+    open_conns: AtomicUsize,
+    traffic: Arc<TrafficLog>,
+    metrics: Metrics,
+    bcast_cache: Mutex<VecDeque<BcastEntry>>,
+}
+
+impl Reactor {
+    /// Spawn the accept loop and reactor pool over a bound listener.
+    pub(crate) fn start(
+        listener: TcpListener,
+        tuning: Tuning,
+        traffic: Arc<TrafficLog>,
+        tx: Sender<(NodeId, Msg)>,
+    ) -> Result<Arc<Reactor>> {
+        listener
+            .set_nonblocking(true)
+            .context("setting listener nonblocking")?;
+        let r = Arc::new(Reactor {
+            tuning: tuning.clone(),
+            peers: Mutex::new(HashMap::new()),
+            threads: Mutex::new(Vec::new()),
+            stop: AtomicBool::new(false),
+            next_generation: AtomicU64::new(0),
+            active_peers: AtomicUsize::new(0),
+            open_conns: AtomicUsize::new(0),
+            traffic,
+            metrics: Metrics::bind(),
+            bcast_cache: Mutex::new(VecDeque::new()),
+        });
+        let mut queues: Vec<Arc<Mutex<Vec<TcpStream>>>> = Vec::new();
+        for idx in 0..tuning.reactor_threads {
+            let q: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+            queues.push(q.clone());
+            let rt = r.clone();
+            let txc = tx.clone();
+            let handle = thread::Builder::new()
+                .name(format!("tcp-reactor-{idx}"))
+                .spawn(move || reactor_loop(&rt, idx, &q, &txc))
+                .context("spawning reactor thread")?;
+            crate::util::lock_unpoisoned(&r.threads).push(handle.thread().clone());
+        }
+        let rt = r.clone();
+        thread::Builder::new()
+            .name("tcp-accept".into())
+            .spawn(move || accept_loop(&rt, &listener, &queues))
+            .context("spawning tcp accept thread")?;
+        Ok(r)
+    }
+
+    /// Build and enqueue a frame onto `to`'s outbox. Never performs
+    /// socket I/O and never blocks on another peer.
+    pub(crate) fn send_to(&self, to: NodeId, msg: &Msg) -> Result<()> {
+        let (outbox, thread_idx, compress) = {
+            let peers = crate::util::lock_unpoisoned(&self.peers);
+            let e = peers
+                .get(&to)
+                .ok_or_else(|| anyhow!("tcp: client {to} not connected"))?;
+            (e.outbox.clone(), e.thread, e.compress)
+        };
+        let (head, shared) = msg.encode_split();
+        let raw_len = (head.len() + shared.as_ref().map_or(0, |p| p.len())) as u64;
+        let bytes = self.build_frame(&head, shared.as_ref(), compress)?;
+        let round = super::round_of(msg);
+        {
+            let mut ob = crate::util::lock_unpoisoned(&outbox);
+            if ob.closed {
+                bail!("tcp: client {to} disconnected");
+            }
+            if ob.q.len() >= self.tuning.outbox_frames {
+                bail!(
+                    "tcp: client {to} outbox full ({} frames queued)",
+                    ob.q.len()
+                );
+            }
+            ob.q.push_back(OutFrame {
+                bytes,
+                round,
+                raw_len,
+            });
+        }
+        self.metrics.outbox_depth.inc();
+        if let Some(t) = crate::util::lock_unpoisoned(&self.threads).get(thread_idx) {
+            t.unpark();
+        }
+        Ok(())
+    }
+
+    fn build_frame(
+        &self,
+        head: &[u8],
+        shared: Option<&Arc<[u8]>>,
+        compress: bool,
+    ) -> Result<FrameBytes> {
+        if !compress {
+            return framing::frame_uncompressed(head, shared);
+        }
+        let Some(payload) = shared else {
+            // per-client frame: owned by one outbox, compress directly
+            return framing::build_frame(head, None, true);
+        };
+        // broadcast frame: compress once per (payload, head) and share
+        let key = payload.as_ptr() as usize;
+        {
+            let cache = crate::util::lock_unpoisoned(&self.bcast_cache);
+            if let Some(hit) = cache
+                .iter()
+                .find(|e| e.payload_ptr == key && e.head == head)
+            {
+                return match &hit.frame {
+                    Some(f) => Ok(FrameBytes::Shared(f.clone())),
+                    None => framing::frame_uncompressed(head, Some(payload)),
+                };
+            }
+        }
+        let compressed = framing::try_frame_compressed(head, payload)?;
+        let frame_arc: Option<Arc<[u8]>> = compressed.map(Arc::from);
+        let out = match &frame_arc {
+            Some(f) => FrameBytes::Shared(f.clone()),
+            None => framing::frame_uncompressed(head, Some(payload))?,
+        };
+        let mut cache = crate::util::lock_unpoisoned(&self.bcast_cache);
+        cache.push_front(BcastEntry {
+            payload_ptr: key,
+            head: head.to_vec(),
+            frame: frame_arc,
+        });
+        cache.truncate(BCAST_CACHE_CAP);
+        Ok(out)
+    }
+
+    /// Sorted ids of currently registered peers.
+    pub(crate) fn connected(&self) -> Vec<NodeId> {
+        let mut v: Vec<NodeId> = crate::util::lock_unpoisoned(&self.peers)
+            .keys()
+            .copied()
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Registered peers (what `fedhpc_tcp_active_connections` mirrors).
+    pub(crate) fn active_peers(&self) -> usize {
+        self.active_peers.load(Ordering::Acquire)
+    }
+
+    /// Live sockets including not-yet-registered ones.
+    pub(crate) fn open_conns(&self) -> usize {
+        self.open_conns.load(Ordering::Acquire)
+    }
+
+    /// Signal every thread to wind down (connections are closed through
+    /// the usual deregistration path on their owning threads).
+    pub(crate) fn shutdown(&self) {
+        self.stop.store(true, Ordering::Release);
+        for t in crate::util::lock_unpoisoned(&self.threads).iter() {
+            t.unpark();
+        }
+    }
+}
+
+fn accept_loop(r: &Arc<Reactor>, listener: &TcpListener, queues: &[Arc<Mutex<Vec<TcpStream>>>]) {
+    if queues.is_empty() {
+        return;
+    }
+    let mut next = 0usize;
+    while !r.stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                r.metrics.accepts.inc();
+                if r.open_conns.load(Ordering::Acquire) >= r.tuning.max_connections {
+                    log::warn!(
+                        "tcp: refusing connection, at max_connections={}",
+                        r.tuning.max_connections
+                    );
+                    continue; // stream dropped ⇒ RST/FIN to the peer
+                }
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                stream.set_nodelay(true).ok();
+                let idx = next % queues.len();
+                next = next.wrapping_add(1);
+                r.open_conns.fetch_add(1, Ordering::AcqRel);
+                if let Some(q) = queues.get(idx) {
+                    crate::util::lock_unpoisoned(q).push(stream);
+                }
+                if let Some(t) = crate::util::lock_unpoisoned(&r.threads).get(idx) {
+                    t.unpark();
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_micros(500));
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => {
+                log::warn!("tcp: accept error: {e}");
+                thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+/// Per-connection state owned by exactly one reactor thread.
+struct Conn {
+    stream: TcpStream,
+    asm: FrameAssembler,
+    outbox: Arc<Mutex<Outbox>>,
+    /// Frame currently being flushed + its write offset.
+    cur: Option<OutFrame>,
+    cur_off: usize,
+    /// `(id, generation)` once the peer has registered.
+    peer: Option<(NodeId, u64)>,
+    opened: Instant,
+    last_read: Instant,
+    last_write: Instant,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, now: Instant) -> Conn {
+        Conn {
+            stream,
+            asm: FrameAssembler::new(),
+            outbox: Arc::new(Mutex::new(Outbox {
+                q: VecDeque::new(),
+                closed: false,
+            })),
+            cur: None,
+            cur_off: 0,
+            peer: None,
+            opened: now,
+            last_read: now,
+            last_write: now,
+        }
+    }
+}
+
+fn reactor_loop(
+    r: &Arc<Reactor>,
+    idx: usize,
+    incoming: &Arc<Mutex<Vec<TcpStream>>>,
+    tx: &Sender<(NodeId, Msg)>,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut buf = vec![0u8; 64 * 1024];
+    let mut idle_spins = 0u32;
+    loop {
+        if r.stop.load(Ordering::Acquire) {
+            break;
+        }
+        let fresh: Vec<TcpStream> =
+            std::mem::take(&mut *crate::util::lock_unpoisoned(incoming));
+        let now = Instant::now();
+        for stream in fresh {
+            conns.push(Conn::new(stream, now));
+        }
+        let mut progress = false;
+        let mut i = 0usize;
+        while i < conns.len() {
+            let Some(conn) = conns.get_mut(i) else { break };
+            let (keep, prog) = sweep(r, idx, conn, &mut buf, tx, now);
+            progress |= prog;
+            if keep {
+                i += 1;
+            } else {
+                let mut dead = conns.swap_remove(i);
+                close_conn(r, &mut dead);
+            }
+        }
+        if progress {
+            idle_spins = 0;
+            continue;
+        }
+        // idle: park with adaptive backoff (0.5 ms → 16 ms); unparked
+        // early by enqueues and new connections
+        idle_spins = idle_spins.saturating_add(1);
+        let backoff = Duration::from_micros(500u64 << idle_spins.min(5) as u64);
+        thread::park_timeout(backoff);
+        r.metrics.wakeups.inc();
+    }
+    // shutdown: close every owned connection through the single path
+    for mut c in conns.drain(..) {
+        close_conn(r, &mut c);
+    }
+    for stream in crate::util::lock_unpoisoned(incoming).drain(..) {
+        drop(stream);
+        r.open_conns.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// One nonblocking pass over a connection: flush outbox, drain socket,
+/// parse frames, check timeouts. Returns `(keep, made_progress)`.
+fn sweep(
+    r: &Reactor,
+    idx: usize,
+    conn: &mut Conn,
+    buf: &mut [u8],
+    tx: &Sender<(NodeId, Msg)>,
+    now: Instant,
+) -> (bool, bool) {
+    let mut progress = false;
+
+    // ---- writes: flush queued frames until empty or WouldBlock
+    loop {
+        if conn.cur.is_none() {
+            let mut ob = crate::util::lock_unpoisoned(&conn.outbox);
+            if ob.closed {
+                // replaced by a re-registration: this socket is an orphan
+                return (false, progress);
+            }
+            let Some(f) = ob.q.pop_front() else { break };
+            drop(ob);
+            r.metrics.outbox_depth.dec();
+            conn.cur = Some(f);
+            conn.cur_off = 0;
+        }
+        let Some(f) = conn.cur.as_ref() else { break };
+        match write_step(&mut conn.stream, &f.bytes, &mut conn.cur_off) {
+            Ok((done, wrote)) => {
+                if wrote > 0 {
+                    progress = true;
+                    conn.last_write = now;
+                }
+                if !done {
+                    break; // kernel buffer full — try next sweep
+                }
+                let wire = f.bytes.wire_len();
+                r.traffic.record_down(f.round, wire);
+                r.metrics.tx_wire.add(wire);
+                r.metrics.tx_raw.add(f.raw_len);
+                conn.cur = None;
+            }
+            Err(e) => {
+                log::debug!("tcp: write error, dropping conn: {e}");
+                return (false, progress);
+            }
+        }
+    }
+
+    // ---- reads: drain the socket (bounded per sweep for fairness)
+    let mut chunks = 0u32;
+    loop {
+        match conn.stream.read(buf) {
+            Ok(0) => return (false, progress), // peer closed
+            Ok(n) => {
+                progress = true;
+                conn.last_read = now;
+                let Some(chunk) = buf.get(..n) else {
+                    return (false, progress);
+                };
+                conn.asm.extend(chunk);
+                r.metrics.rx_wire.add(n as u64);
+                chunks += 1;
+                if n < buf.len() || chunks >= 8 {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) => {
+                log::debug!("tcp: read error, dropping conn: {e}");
+                return (false, progress);
+            }
+        }
+    }
+
+    // ---- parse every complete frame
+    loop {
+        match conn.asm.next_frame() {
+            Ok(Some(payload)) => {
+                if !handle_frame(r, idx, conn, tx, &payload) {
+                    return (false, progress);
+                }
+            }
+            Ok(None) => break,
+            Err(e) => {
+                let who = conn.peer.map_or(u32::MAX, |(id, _)| id);
+                log::warn!("tcp: bad frame from peer {who}: {e}");
+                return (false, progress);
+            }
+        }
+    }
+
+    // ---- timeouts: never-registered, half-frame stall, write stall.
+    // Registered peers that are merely quiet are left alone.
+    let idle = r.tuning.idle_timeout;
+    if conn.peer.is_none() && now.duration_since(conn.opened) > idle {
+        log::debug!("tcp: reaping connection that never registered");
+        return (false, progress);
+    }
+    if conn.asm.mid_frame() && now.duration_since(conn.last_read) > idle {
+        log::debug!("tcp: reaping half-frame (slowloris) connection");
+        return (false, progress);
+    }
+    if conn.cur.is_some() && now.duration_since(conn.last_write) > idle {
+        log::debug!("tcp: reaping write-stalled connection");
+        return (false, progress);
+    }
+    (true, progress)
+}
+
+/// Write as much of `frame` as the kernel accepts, resuming at `*off`.
+/// Returns `(frame_complete, bytes_written_now)`; WouldBlock is not an
+/// error (returns incomplete), hard errors propagate.
+fn write_step(
+    stream: &mut TcpStream,
+    frame: &FrameBytes,
+    off: &mut usize,
+) -> std::io::Result<(bool, usize)> {
+    let (a, b) = frame.segments();
+    let total = a.len() + b.len();
+    let mut wrote = 0usize;
+    while *off < total {
+        let chunk = if *off < a.len() {
+            a.get(*off..).unwrap_or(&[])
+        } else {
+            b.get(*off - a.len()..).unwrap_or(&[])
+        };
+        match stream.write(chunk) {
+            Ok(0) => return Err(ErrorKind::WriteZero.into()),
+            Ok(n) => {
+                *off += n;
+                wrote += n;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok((*off >= total, wrote))
+}
+
+/// Dispatch one decoded frame. Returns false to drop the connection.
+fn handle_frame(
+    r: &Reactor,
+    idx: usize,
+    conn: &mut Conn,
+    tx: &Sender<(NodeId, Msg)>,
+    payload: &[u8],
+) -> bool {
+    let msg = match Msg::decode(payload) {
+        Ok(m) => m,
+        Err(e) => {
+            log::warn!("tcp: undecodable frame: {e}");
+            return false;
+        }
+    };
+    if let Some((id, _gen)) = conn.peer {
+        // a same-id re-Register on the same socket is a profile refresh;
+        // a different id on an established socket is a protocol error
+        if let Msg::Register { client, .. } = &msg {
+            if *client != id {
+                log::warn!("tcp: peer {id} tried to re-register as {client}");
+                return false;
+            }
+        }
+        return tx.send((id, msg)).is_ok();
+    }
+    let Msg::Register { client, .. } = &msg else {
+        log::warn!("tcp: first frame was {}, expected Register", msg.name());
+        return false;
+    };
+    let id = *client;
+    // negotiation: only peers speaking v3+ receive compressed frames
+    let peer_version = payload.first().copied().unwrap_or(0);
+    let compress =
+        r.tuning.compression && peer_version >= super::message::FRAME_COMPRESSION_VERSION;
+    let generation = r.next_generation.fetch_add(1, Ordering::AcqRel) + 1;
+    conn.peer = Some((id, generation));
+    {
+        let mut peers = crate::util::lock_unpoisoned(&r.peers);
+        let prev = peers.insert(
+            id,
+            PeerEntry {
+                generation,
+                thread: idx,
+                compress,
+                outbox: conn.outbox.clone(),
+            },
+        );
+        match prev {
+            Some(old) => {
+                // the id stays connected through the NEW socket; poison
+                // the old outbox so its owning thread drops the orphan
+                crate::util::lock_unpoisoned(&old.outbox).closed = true;
+            }
+            None => {
+                r.active_peers.fetch_add(1, Ordering::AcqRel);
+                r.metrics.active.inc();
+            }
+        }
+    }
+    tx.send((id, msg)).is_ok()
+}
+
+/// The single deregistration path: every connection exit funnels here.
+fn close_conn(r: &Reactor, conn: &mut Conn) {
+    let dropped = {
+        let mut ob = crate::util::lock_unpoisoned(&conn.outbox);
+        ob.closed = true;
+        let n = ob.q.len();
+        ob.q.clear();
+        n
+    };
+    for _ in 0..dropped {
+        r.metrics.outbox_depth.dec();
+    }
+    if let Some((id, generation)) = conn.peer.take() {
+        let mut peers = crate::util::lock_unpoisoned(&r.peers);
+        let matches = peers
+            .get(&id)
+            .is_some_and(|e| e.generation == generation);
+        if matches {
+            peers.remove(&id);
+            drop(peers);
+            r.active_peers.fetch_sub(1, Ordering::AcqRel);
+            r.metrics.active.dec();
+        }
+    }
+    r.open_conns.fetch_sub(1, Ordering::AcqRel);
+    conn.stream.shutdown(std::net::Shutdown::Both).ok();
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests may panic freely
+mod tests {
+    use super::*;
+    use crate::network::message::ClientProfile;
+    use std::sync::mpsc::channel;
+
+    fn tiny_tuning() -> Tuning {
+        Tuning {
+            reactor_threads: 1,
+            max_connections: 4,
+            compression: true,
+            idle_timeout: Duration::from_millis(200),
+            outbox_frames: 2,
+        }
+    }
+
+    fn register(id: NodeId) -> Msg {
+        Msg::Register {
+            client: id,
+            profile: ClientProfile {
+                speed_factor: 1.0,
+                mem_gb: 1.0,
+                link_bw: 1e9,
+                n_samples: 1,
+                bench_step_ms: 1.0,
+            },
+        }
+    }
+
+    fn wait_until(mut cond: impl FnMut() -> bool) -> bool {
+        let start = Instant::now();
+        while start.elapsed() < Duration::from_secs(5) {
+            if cond() {
+                return true;
+            }
+            thread::sleep(Duration::from_millis(10));
+        }
+        false
+    }
+
+    /// Regression (gauge/map leak): when the server-side channel is
+    /// gone, a registering connection must still be deregistered — the
+    /// old transport's reader thread early-returned and leaked the map
+    /// entry and gauge increment forever.
+    #[test]
+    fn closed_server_channel_still_deregisters() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (tx, rx) = channel();
+        let r = Reactor::start(listener, tiny_tuning(), Arc::new(TrafficLog::new()), tx)
+            .unwrap();
+        drop(rx); // server consumer is gone
+        let mut sock = TcpStream::connect(addr).unwrap();
+        let frame = framing::build_frame(&register(9).encode(), None, false).unwrap();
+        framing::write_frame(&mut sock, &frame).unwrap();
+        // the register dispatch fails ⇒ the conn must fully deregister
+        assert!(
+            wait_until(|| r.active_peers() == 0 && r.open_conns() == 0),
+            "conn leaked: active={} open={}",
+            r.active_peers(),
+            r.open_conns()
+        );
+        r.shutdown();
+    }
+
+    /// Connections that never register are reaped by the idle timeout.
+    #[test]
+    fn unregistered_connection_is_reaped() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (tx, _rx) = channel();
+        let r = Reactor::start(listener, tiny_tuning(), Arc::new(TrafficLog::new()), tx)
+            .unwrap();
+        let sock = TcpStream::connect(addr).unwrap();
+        assert!(wait_until(|| r.open_conns() == 1));
+        // no register, no bytes: the 200 ms idle timeout reaps it
+        assert!(
+            wait_until(|| r.open_conns() == 0),
+            "idle unregistered conn not reaped"
+        );
+        drop(sock);
+        r.shutdown();
+    }
+
+    /// The accept loop refuses connections over `max_connections`.
+    #[test]
+    fn connection_limit_is_enforced() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (tx, _rx) = channel();
+        let mut tuning = tiny_tuning();
+        tuning.max_connections = 2;
+        tuning.idle_timeout = Duration::from_secs(30);
+        let r = Reactor::start(listener, tuning, Arc::new(TrafficLog::new()), tx).unwrap();
+        let keep: Vec<TcpStream> = (0..2)
+            .map(|_| TcpStream::connect(addr).unwrap())
+            .collect();
+        assert!(wait_until(|| r.open_conns() == 2));
+        // the third connect is accepted at the OS level then dropped:
+        // reading from it hits EOF quickly
+        let mut extra = TcpStream::connect(addr).unwrap();
+        extra
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let mut byte = [0u8; 1];
+        let got = extra.read(&mut byte);
+        assert!(
+            matches!(got, Ok(0)) || got.is_err(),
+            "over-limit conn should be closed"
+        );
+        assert_eq!(r.open_conns(), 2);
+        drop(keep);
+        r.shutdown();
+    }
+}

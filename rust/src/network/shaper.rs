@@ -8,7 +8,10 @@
 //! upload a 45 MB model) without needing real slow links.
 //!
 //! [`TrafficLog`] aggregates per-round byte counts — the source of
-//! Table 4 / ablation E6 numbers.
+//! Table 4 / ablation E6 numbers. Over the TCP transport the recorded
+//! counts are true bytes-on-wire: frame header included, after frame
+//! compression, and recorded only once a frame actually (fully) hits
+//! the socket — a failed or still-queued send contributes nothing.
 
 use crate::cluster::LinkClass;
 use std::collections::BTreeMap;

@@ -1,176 +1,98 @@
 //! Framed-TCP transport — the "gRPC" path (paper: cloud backend).
 //!
-//! Wire format: `[u32 frame length][Msg::encode() bytes]`. A real
-//! socket per client; the server accepts connections and identifies
-//! each peer by its first message (which must be `Register`). Reader
-//! threads decode frames and feed a shared queue; writes go through a
-//! per-peer mutexed stream. Optional link shaping adds artificial
-//! delay on top of real socket time (receiver-side hold, like inproc).
+//! Wire format: `[u32 LE header][payload]` per [`super::framing`] — the
+//! low 31 header bits are the payload length, bit 31 flags transparent
+//! whole-frame compression (negotiated: only sent to peers speaking
+//! protocol v3+, so v1/v2 peers interop untouched). A real socket per
+//! client; the server identifies each peer by its first message (which
+//! must be `Register`).
+//!
+//! The server side is the readiness-driven [`super::reactor`]: a small
+//! fixed pool of reactor threads sweeps all connections with
+//! nonblocking I/O, `send_to` enqueues onto a bounded per-peer outbox
+//! (backpressure: a full outbox errors instead of blocking), and one
+//! deregistration path keeps the peer map and gauges exact. The client
+//! side stays a plain blocking socket + reader thread — a worker owns
+//! one connection, so per-connection threads are the right shape there.
+//! Optional link shaping adds artificial delay on top of real socket
+//! time (receiver-side hold, like inproc), sized by actual bytes on the
+//! wire (post-compression, header included) — which is also exactly
+//! what [`TrafficLog`] records, and only after a successful write.
 
-use super::message::Msg;
+use super::framing;
+use super::message::{Msg, FRAME_COMPRESSION_VERSION};
+use super::reactor::{Reactor, Tuning};
 use super::shaper::{LinkShaper, TrafficLog};
 use super::transport::{ClientTransport, ServerTransport};
 use crate::cluster::NodeId;
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
-use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use anyhow::{bail, Context, Result};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-const MAX_FRAME: u32 = 1 << 30; // 1 GiB sanity bound
-
-fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
-    write_frame_parts(stream, payload, &[])
-}
-
-/// Write one frame from two parts without concatenating them — the
-/// broadcast path sends a per-client header followed by the round's
-/// shared (pre-encoded) model payload, so nothing is copied per send.
-fn write_frame_parts(stream: &mut TcpStream, head: &[u8], tail: &[u8]) -> Result<()> {
-    let len = head.len() + tail.len();
-    if len > MAX_FRAME as usize {
-        bail!("frame too large: {len}");
-    }
-    stream.write_all(&(len as u32).to_le_bytes())?;
-    stream.write_all(head)?;
-    if !tail.is_empty() {
-        stream.write_all(tail)?;
-    }
-    Ok(())
-}
-
-fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
-    let mut hdr = [0u8; 4];
-    stream.read_exact(&mut hdr)?;
-    let len = u32::from_le_bytes(hdr);
-    if len > MAX_FRAME {
-        bail!("frame too large: {len}");
-    }
-    let mut buf = vec![0u8; len as usize];
-    stream.read_exact(&mut buf)?;
-    Ok(buf)
-}
-
-/// Server: accept loop + per-connection reader threads.
+/// Server: accept loop + reactor thread pool (see [`super::reactor`]).
 pub struct TcpServer {
     rx: Mutex<Receiver<(NodeId, Msg)>>,
-    peers: Arc<Mutex<HashMap<NodeId, TcpStream>>>,
-    traffic: Arc<TrafficLog>,
+    reactor: Arc<Reactor>,
     pub local_addr: std::net::SocketAddr,
 }
 
 impl TcpServer {
-    /// Bind and start accepting. `addr` like "127.0.0.1:0".
+    /// Bind and start accepting with default transport tuning.
+    /// `addr` like "127.0.0.1:0".
     pub fn bind(addr: &str, traffic: Arc<TrafficLog>) -> Result<TcpServer> {
-        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Self::bind_with(
+            addr,
+            &crate::config::TransportConfig::default(),
+            traffic,
+        )
+    }
+
+    /// Bind with explicit transport tuning (`transport.*` config).
+    pub fn bind_with(
+        addr: &str,
+        cfg: &crate::config::TransportConfig,
+        traffic: Arc<TrafficLog>,
+    ) -> Result<TcpServer> {
+        let listener =
+            std::net::TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local_addr = listener.local_addr()?;
         let (tx, rx) = channel::<(NodeId, Msg)>();
-        let peers: Arc<Mutex<HashMap<NodeId, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
-        let peers_accept = peers.clone();
-        // telemetry handles resolved once at bind; per-event cost is a
-        // relaxed atomic op (see crate::telemetry accuracy contract)
-        let g = crate::telemetry::global();
-        let accepts = g.counter(
-            crate::telemetry::names::TCP_ACCEPTS_TOTAL,
-            "TCP connections accepted since process start.",
-        );
-        let active = g.gauge(
-            crate::telemetry::names::TCP_ACTIVE_CONNECTIONS,
-            "Registered TCP peers currently connected.",
-        );
-        std::thread::Builder::new()
-            .name("tcp-accept".into())
-            .spawn(move || {
-                for conn in listener.incoming() {
-                    let Ok(mut stream) = conn else { continue };
-                    accepts.inc();
-                    let tx = tx.clone();
-                    let peers = peers_accept.clone();
-                    let active = active.clone();
-                    std::thread::Builder::new()
-                        .name("tcp-read".into())
-                        .spawn(move || {
-                            // first frame must identify the peer
-                            let Ok(first) = read_frame(&mut stream) else {
-                                return;
-                            };
-                            let Ok(msg) = Msg::decode(&first) else {
-                                log::warn!("tcp: undecodable first frame, dropping conn");
-                                return;
-                            };
-                            let id = match &msg {
-                                Msg::Register { client, .. } => *client,
-                                other => {
-                                    log::warn!(
-                                        "tcp: first frame was {}, expected Register",
-                                        other.name()
-                                    );
-                                    return;
-                                }
-                            };
-                            if let Ok(w) = stream.try_clone() {
-                                // a re-registering peer replaces its old
-                                // stream — the gauge counts distinct ids
-                                if crate::util::lock_unpoisoned(&peers)
-                                    .insert(id, w)
-                                    .is_none()
-                                {
-                                    active.inc();
-                                }
-                            }
-                            if tx.send((id, msg)).is_err() {
-                                return;
-                            }
-                            loop {
-                                match read_frame(&mut stream) {
-                                    Ok(buf) => match Msg::decode(&buf) {
-                                        Ok(m) => {
-                                            if tx.send((id, m)).is_err() {
-                                                break;
-                                            }
-                                        }
-                                        Err(e) => {
-                                            log::warn!("tcp: bad frame from {id}: {e}");
-                                            break;
-                                        }
-                                    },
-                                    Err(_) => break, // peer closed
-                                }
-                            }
-                            if crate::util::lock_unpoisoned(&peers).remove(&id).is_some() {
-                                active.dec();
-                            }
-                        })
-                        .ok();
-                }
-            })
-            .context("spawning tcp accept thread")?;
+        let reactor = Reactor::start(listener, Tuning::from_config(cfg), traffic, tx)?;
         Ok(TcpServer {
             rx: Mutex::new(rx),
-            peers,
-            traffic,
+            reactor,
             local_addr,
         })
+    }
+
+    /// Registered peers on this server (what the process-wide
+    /// `fedhpc_tcp_active_connections` gauge mirrors, but test-safe
+    /// under parallel servers).
+    pub fn active_connections(&self) -> usize {
+        self.reactor.active_peers()
+    }
+
+    /// Live sockets on this server, including not-yet-registered ones.
+    pub fn open_connections(&self) -> usize {
+        self.reactor.open_conns()
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.reactor.shutdown();
     }
 }
 
 impl ServerTransport for TcpServer {
     fn send_to(&self, to: NodeId, msg: &Msg) -> Result<()> {
-        // shared payloads (pre-encoded broadcasts) are written as a
-        // second frame part: serialized once per round, not per client
-        let (head, shared) = msg.encode_split();
-        let total = head.len() + shared.as_ref().map_or(0, |p| p.len());
-        self.traffic.record_down(super::round_of(msg), total as u64);
-        let mut peers = crate::util::lock_unpoisoned(&self.peers);
-        let stream = peers
-            .get_mut(&to)
-            .ok_or_else(|| anyhow!("tcp: client {to} not connected"))?;
-        match shared {
-            None => write_frame(stream, &head),
-            Some(payload) => write_frame_parts(stream, &head, &payload),
-        }
+        // encode-once broadcast economics live in the reactor: shared
+        // payloads ride as Arc segments (uncompressed) or a cohort-
+        // shared compressed frame; enqueueing never touches a socket
+        self.reactor.send_to(to, msg)
     }
 
     fn recv_timeout(&self, timeout: Duration) -> Result<Option<(NodeId, Msg)>> {
@@ -182,12 +104,7 @@ impl ServerTransport for TcpServer {
     }
 
     fn connected(&self) -> Vec<NodeId> {
-        let mut v: Vec<NodeId> = crate::util::lock_unpoisoned(&self.peers)
-            .keys()
-            .copied()
-            .collect();
-        v.sort_unstable();
-        v
+        self.reactor.connected()
     }
 }
 
@@ -198,15 +115,33 @@ pub struct TcpClient {
     rx: Mutex<Receiver<Msg>>,
     traffic: Arc<TrafficLog>,
     shaper: LinkShaper,
+    /// Our side wants compression (config).
+    compress: bool,
+    /// Peer proved v3+ (set by the reader on the first inbound frame):
+    /// only then do we start compressing uplink frames.
+    peer_compresses: Arc<AtomicBool>,
 }
 
 impl TcpClient {
     /// Connect and immediately send `register` (must be Msg::Register).
+    /// Frame compression is on (it still only engages once the server
+    /// proves v3+); use [`connect_with`](Self::connect_with) to disable.
     pub fn connect(
         addr: &str,
         register: &Msg,
         shaper: LinkShaper,
         traffic: Arc<TrafficLog>,
+    ) -> Result<TcpClient> {
+        Self::connect_with(addr, register, shaper, traffic, true)
+    }
+
+    /// [`connect`](Self::connect) with explicit compression opt-in.
+    pub fn connect_with(
+        addr: &str,
+        register: &Msg,
+        shaper: LinkShaper,
+        traffic: Arc<TrafficLog>,
+        compression: bool,
     ) -> Result<TcpClient> {
         let id = match register {
             Msg::Register { client, .. } => *client,
@@ -215,28 +150,41 @@ impl TcpClient {
         let mut stream =
             TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         stream.set_nodelay(true).ok();
-        let payload = register.encode();
-        traffic.record_up(0, payload.len() as u64);
-        write_frame(&mut stream, &payload)?;
+        // the Register always goes uncompressed: nothing is negotiated
+        // yet (and it is far below the compression threshold anyway)
+        let frame = framing::build_frame(&register.encode(), None, false)?;
+        let wire = framing::write_frame(&mut stream, &frame)?;
+        traffic.record_up(0, wire);
         let reader = stream.try_clone()?;
         let (tx, rx) = channel::<Msg>();
+        let peer_compresses = Arc::new(AtomicBool::new(false));
+        let flag = peer_compresses.clone();
         std::thread::Builder::new()
             .name(format!("tcp-client-{id}"))
             .spawn(move || {
                 let mut reader = reader;
                 loop {
-                    match read_frame(&mut reader) {
-                        Ok(buf) => match Msg::decode(&buf) {
-                            Ok(m) => {
-                                if tx.send(m).is_err() {
+                    match framing::read_frame(&mut reader) {
+                        Ok((payload, _wire)) => {
+                            // negotiation: any inbound v3+ frame proves
+                            // the server decodes compressed frames
+                            if payload.first().copied().unwrap_or(0)
+                                >= FRAME_COMPRESSION_VERSION
+                            {
+                                flag.store(true, Ordering::Release);
+                            }
+                            match Msg::decode(&payload) {
+                                Ok(m) => {
+                                    if tx.send(m).is_err() {
+                                        break;
+                                    }
+                                }
+                                Err(e) => {
+                                    log::warn!("tcp client: bad frame: {e}");
                                     break;
                                 }
                             }
-                            Err(e) => {
-                                log::warn!("tcp client: bad frame: {e}");
-                                break;
-                            }
-                        },
+                        }
                         Err(_) => break,
                     }
                 }
@@ -248,6 +196,8 @@ impl TcpClient {
             rx: Mutex::new(rx),
             traffic,
             shaper,
+            compress: compression,
+            peer_compresses,
         })
     }
 }
@@ -255,15 +205,20 @@ impl TcpClient {
 impl ClientTransport for TcpClient {
     fn send(&self, msg: &Msg) -> Result<()> {
         let payload = msg.encode();
-        self.traffic
-            .record_up(super::round_of(msg), payload.len() as u64);
+        let compress = self.compress && self.peer_compresses.load(Ordering::Acquire);
+        let frame = framing::build_frame(&payload, None, compress)?;
+        let wire = frame.wire_len();
         // emulate constrained uplink: hold before writing (the paper's
-        // WAN clients really do take longer to upload)
-        let delay = self.shaper.delay(payload.len() as u64);
+        // WAN clients really do take longer to upload) — sized by what
+        // actually crosses the wire, so frame compression shortens it
+        let delay = self.shaper.delay(wire);
         if !delay.is_zero() {
             std::thread::sleep(delay);
         }
-        write_frame(&mut crate::util::lock_unpoisoned(&self.writer), &payload)
+        framing::write_frame(&mut *crate::util::lock_unpoisoned(&self.writer), &frame)?;
+        // recorded only after the write succeeded, with real wire bytes
+        self.traffic.record_up(super::round_of(msg), wire);
+        Ok(())
     }
 
     fn recv_timeout(&self, timeout: Duration) -> Result<Option<Msg>> {
@@ -332,6 +287,7 @@ mod tests {
             .unwrap()
             .unwrap();
         assert!(matches!(hb, Msg::Heartbeat { .. }));
+        assert_eq!(server.active_connections(), 1);
     }
 
     #[test]
@@ -450,5 +406,76 @@ mod tests {
             },
             _ => unreachable!(),
         }
+    }
+
+    /// Both directions flow compressed once negotiation completes, and
+    /// payloads still arrive bit-identically.
+    #[test]
+    fn negotiated_compression_roundtrips() {
+        let traffic = Arc::new(TrafficLog::new());
+        let server = TcpServer::bind("127.0.0.1:0", traffic.clone()).unwrap();
+        let addr = server.local_addr.to_string();
+        let client =
+            TcpClient::connect(&addr, &register(7), LinkShaper::unshaped(), traffic).unwrap();
+        server.recv_timeout(Duration::from_secs(2)).unwrap(); // drain Register
+        // server → client: a highly compressible broadcast
+        let params: Vec<f32> = vec![0.5f32; 50_000];
+        let pre = super::super::message::pre_encode_dense(&params);
+        server
+            .send_to(
+                7,
+                &Msg::RoundStart {
+                    round: 1,
+                    model_version: 1,
+                    deadline_ms: 1_000,
+                    lr: 0.1,
+                    mu: 0.0,
+                    local_epochs: 1,
+                    params: crate::compress::Encoded::PreEncoded(pre),
+                    mask_seed: 0,
+                    compression: crate::config::CompressionConfig::NONE,
+                },
+            )
+            .unwrap();
+        let got = client.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        match got {
+            Msg::RoundStart { params: p, .. } => {
+                assert_eq!(p, crate::compress::Encoded::Dense(params.clone()));
+            }
+            other => panic!("expected RoundStart, got {}", other.name()),
+        }
+        // having seen a v3 frame, the client now compresses its uplink
+        assert!(client.peer_compresses.load(Ordering::Acquire));
+        client
+            .send(&Msg::Update {
+                round: 1,
+                client: 7,
+                base_version: 1,
+                delta: crate::compress::Encoded::Dense(params.clone()),
+                stats: super::super::message::UpdateStats {
+                    n_samples: 1,
+                    train_loss: 0.0,
+                    steps: 1,
+                    compute_ms: 0.0,
+                    update_var: 0.0,
+                },
+            })
+            .unwrap();
+        let (_, msg) = server
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap()
+            .unwrap();
+        match msg {
+            Msg::Update { delta, .. } => {
+                assert_eq!(delta, crate::compress::Encoded::Dense(params));
+            }
+            other => panic!("expected Update, got {}", other.name()),
+        }
+        // the constant-valued upload must have shrunk on the wire
+        let up: u64 = traffic.totals().1;
+        assert!(
+            up < 100_000,
+            "200 KB constant payload should compress hard, wire={up}"
+        );
     }
 }

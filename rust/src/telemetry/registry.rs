@@ -47,6 +47,17 @@ pub mod names {
     pub const TCP_ACCEPTS_TOTAL: &str = "fedhpc_tcp_accepts_total";
     /// Registered TCP peers currently connected.
     pub const TCP_ACTIVE_CONNECTIONS: &str = "fedhpc_tcp_active_connections";
+    /// Frames queued in per-peer TCP outboxes (backpressure depth).
+    pub const TCP_OUTBOX_FRAMES: &str = "fedhpc_tcp_outbox_frames";
+    /// Reactor sweep-thread wakeups (park/unpark churn).
+    pub const TCP_REACTOR_WAKEUPS_TOTAL: &str = "fedhpc_tcp_reactor_wakeups_total";
+    /// Server→client payload bytes before frame compression.
+    pub const TCP_TX_RAW_BYTES_TOTAL: &str = "fedhpc_tcp_tx_raw_bytes_total";
+    /// Server→client bytes actually written to sockets (post-compression,
+    /// frame headers included).
+    pub const TCP_TX_WIRE_BYTES_TOTAL: &str = "fedhpc_tcp_tx_wire_bytes_total";
+    /// Client→server bytes read off sockets (frame headers included).
+    pub const TCP_RX_WIRE_BYTES_TOTAL: &str = "fedhpc_tcp_rx_wire_bytes_total";
     /// Current global model version (commits applied).
     pub const MODEL_VERSION: &str = "fedhpc_model_version";
     /// Cohorts planned since process start.

@@ -1,0 +1,442 @@
+//! Regression + scale tests for the readiness-driven TCP transport.
+//!
+//! Each of the first four tests pins one structural bug of the old
+//! thread-per-connection server (they fail against that design):
+//!
+//! 1. head-of-line blocking — `send_to` held the global peer lock
+//!    across a blocking socket write, so one stalled client delayed
+//!    sends to every healthy peer;
+//! 2. re-registration race — the replaced connection's reader removed
+//!    the *new* stream from the peer map and decremented the gauge;
+//! 3. gauge/peer-map leak — reader exits that skipped deregistration;
+//! 4. traffic misaccounting — bytes recorded before the write could
+//!    fail, and the 4-byte frame header never counted.
+//!
+//! The rest exercise the new layer at scale: a 512-connection round,
+//! slowloris reaping, outbox backpressure, and v2 compression interop.
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+use fedhpc::compress::Encoded;
+use fedhpc::config::{CompressionConfig, TransportConfig};
+use fedhpc::network::framing;
+use fedhpc::network::tcp::{TcpClient, TcpServer};
+use fedhpc::network::transport::{ClientTransport, ServerTransport};
+use fedhpc::network::{pre_encode_dense, ClientProfile, LinkShaper, Msg, TrafficLog, UpdateStats};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn profile() -> ClientProfile {
+    ClientProfile {
+        speed_factor: 1.0,
+        mem_gb: 1.0,
+        link_bw: 1e9,
+        n_samples: 10,
+        bench_step_ms: 1.0,
+    }
+}
+
+fn register(id: u32) -> Msg {
+    Msg::Register {
+        client: id,
+        profile: profile(),
+    }
+}
+
+/// Connect a raw blocking socket and send an (uncompressed) Register.
+fn raw_register(addr: &str, id: u32) -> TcpStream {
+    let mut sock = TcpStream::connect(addr).unwrap();
+    let frame = framing::build_frame(&register(id).encode(), None, false).unwrap();
+    framing::write_frame(&mut sock, &frame).unwrap();
+    sock
+}
+
+fn wait_until(mut cond: impl FnMut() -> bool) -> bool {
+    let start = Instant::now();
+    while start.elapsed() < Duration::from_secs(10) {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    false
+}
+
+fn round_end(round: u32, model_version: u32) -> Msg {
+    Msg::RoundEnd {
+        round,
+        model_version,
+    }
+}
+
+/// A big, compressible server→client broadcast message.
+fn big_round_start(n: usize) -> Msg {
+    let params: Vec<f32> = vec![0.125f32; n];
+    Msg::RoundStart {
+        round: 1,
+        model_version: 1,
+        deadline_ms: 1_000,
+        lr: 0.1,
+        mu: 0.0,
+        local_epochs: 1,
+        params: Encoded::PreEncoded(pre_encode_dense(&params)),
+        mask_seed: 0,
+        compression: CompressionConfig::NONE,
+    }
+}
+
+fn update_msg(id: u32, n: usize) -> Msg {
+    Msg::Update {
+        round: 1,
+        client: id,
+        base_version: 1,
+        delta: Encoded::Dense((0..n).map(|i| i as f32).collect()),
+        stats: UpdateStats {
+            n_samples: 1,
+            train_loss: 0.0,
+            steps: 1,
+            compute_ms: 0.0,
+            update_var: 0.0,
+        },
+    }
+}
+
+/// Bug 1 (head-of-line blocking): a peer that stops draining its socket
+/// must only poison its *own* sends — a send to a healthy peer stays
+/// fast. The old transport serialized every `send_to` behind the global
+/// peer mutex while a blocking write to the stalled socket wedged it.
+#[test]
+fn stalled_peer_does_not_block_sends_to_healthy_peers() {
+    let cfg = TransportConfig {
+        outbox_frames: 4,
+        compression: false,
+        ..TransportConfig::default()
+    };
+    let traffic = Arc::new(TrafficLog::new());
+    let server = TcpServer::bind_with("127.0.0.1:0", &cfg, traffic.clone()).unwrap();
+    let addr = server.local_addr.to_string();
+
+    // the stalled peer: registers, then never reads its socket
+    let stalled = raw_register(&addr, 1);
+    // the healthy peer: a real client that keeps receiving
+    let healthy =
+        TcpClient::connect(&addr, &register(2), LinkShaper::unshaped(), traffic).unwrap();
+    for _ in 0..2 {
+        server.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+    }
+
+    // jam peer 1: its kernel buffer fills, then its bounded outbox
+    // fills, then send_to starts failing fast — never blocking
+    let big = big_round_start(64 * 1024); // ~256 KB frames
+    let mut jammed = None;
+    for i in 0..256 {
+        if let Err(e) = server.send_to(1, &big) {
+            jammed = Some((i, format!("{e:#}")));
+            break;
+        }
+    }
+    let (_, err) = jammed.expect("bounded outbox must eventually refuse");
+    assert!(
+        err.contains("outbox full"),
+        "expected backpressure error, got: {err}"
+    );
+
+    // the healthy peer is unaffected, and the send is fast: enqueue
+    // only, no socket I/O under any shared lock
+    let t0 = Instant::now();
+    server.send_to(2, &round_end(1, 1)).unwrap();
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_millis(500),
+        "send_to(healthy) took {elapsed:?} while peer 1 is stalled"
+    );
+    let got = healthy.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+    assert_eq!(got, round_end(1, 1));
+    drop(stalled);
+}
+
+/// Bug 2 (re-registration race): when a client reconnects under the
+/// same id, the replaced connection's teardown must not evict the new
+/// stream from the peer map or corrupt the connection gauge.
+#[test]
+fn re_registering_peer_stays_reachable_on_the_new_socket() {
+    let traffic = Arc::new(TrafficLog::new());
+    let server = TcpServer::bind("127.0.0.1:0", traffic).unwrap();
+    let addr = server.local_addr.to_string();
+
+    let mut old_sock = raw_register(&addr, 7);
+    server.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+    assert!(wait_until(|| server.active_connections() == 1));
+
+    // same id reconnects — the old socket must be dropped server-side
+    let mut new_sock = raw_register(&addr, 7);
+    server.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+
+    // the old socket reaches EOF (poisoned outbox ⇒ orphan dropped)
+    old_sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut byte = [0u8; 1];
+    let got = old_sock.read(&mut byte);
+    assert!(
+        matches!(got, Ok(0)) || got.is_err(),
+        "old socket should be closed after replacement"
+    );
+
+    // the id keeps exactly one registered connection (old code: the
+    // replaced reader's cleanup removed the NEW entry and dec'd twice)
+    assert!(
+        wait_until(|| server.active_connections() == 1 && server.open_connections() == 1),
+        "active={} open={}",
+        server.active_connections(),
+        server.open_connections()
+    );
+    // and it is reachable through the NEW socket
+    server.send_to(7, &Msg::RegisterAck { client: 7 }).unwrap();
+    let (payload, _) = framing::read_frame(&mut new_sock).unwrap();
+    let msg = Msg::decode(&payload).unwrap();
+    assert_eq!(msg, Msg::RegisterAck { client: 7 });
+    assert_eq!(server.connected(), vec![7]);
+}
+
+/// Bug 3 (gauge/map leak): every disconnect path must deregister. Churn
+/// peers through normal closes and assert the counters return to zero
+/// exactly (the old reader's early-return on a closed server channel
+/// leaked the map entry; see also the unit test in `network::reactor`).
+#[test]
+fn disconnect_churn_leaves_no_gauge_or_map_residue() {
+    let traffic = Arc::new(TrafficLog::new());
+    let server = TcpServer::bind("127.0.0.1:0", traffic).unwrap();
+    let addr = server.local_addr.to_string();
+    for round in 0..3 {
+        let socks: Vec<TcpStream> = (0..8).map(|i| raw_register(&addr, i)).collect();
+        for _ in 0..8 {
+            server.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        }
+        assert!(
+            wait_until(|| server.active_connections() == 8),
+            "round {round}: active={}",
+            server.active_connections()
+        );
+        drop(socks);
+        assert!(
+            wait_until(|| server.active_connections() == 0 && server.open_connections() == 0),
+            "round {round} leaked: active={} open={}",
+            server.active_connections(),
+            server.open_connections()
+        );
+        assert!(server.connected().is_empty());
+    }
+}
+
+/// Bug 4 (traffic misaccounting): `TrafficLog` must record exactly the
+/// bytes that cross the wire — frame header included, post-compression,
+/// and only for writes that actually completed.
+#[test]
+fn traffic_log_matches_bytes_observed_on_the_wire() {
+    // ---- downlink: count what a raw peer socket actually receives
+    let traffic = Arc::new(TrafficLog::new());
+    let server = TcpServer::bind("127.0.0.1:0", traffic.clone()).unwrap();
+    let addr = server.local_addr.to_string();
+    let mut peer = raw_register(&addr, 3);
+    server.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+
+    server.send_to(3, &Msg::RegisterAck { client: 3 }).unwrap();
+    server.send_to(3, &big_round_start(50_000)).unwrap(); // compresses
+    server.send_to(3, &round_end(1, 2)).unwrap();
+    let mut observed = 0u64;
+    for _ in 0..3 {
+        let (payload, wire) = framing::read_frame(&mut peer).unwrap();
+        Msg::decode(&payload).unwrap();
+        observed += wire;
+    }
+    assert!(
+        wait_until(|| traffic.totals().0 == observed),
+        "recorded down {} != observed {observed}",
+        traffic.totals().0
+    );
+    // headers are in: 3 frames can never fit in payload bytes alone
+    assert!(observed > 3 * 4);
+
+    // ---- uplink: a raw server counts what the client actually sends
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let raw_addr = listener.local_addr().unwrap().to_string();
+    let sink = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut observed = 0u64;
+        for _ in 0..2 {
+            let (payload, wire) = framing::read_frame(&mut s).unwrap();
+            Msg::decode(&payload).unwrap();
+            observed += wire;
+        }
+        observed
+    });
+    let up_traffic = Arc::new(TrafficLog::new());
+    let client = TcpClient::connect(
+        &raw_addr,
+        &register(4),
+        LinkShaper::unshaped(),
+        up_traffic.clone(),
+    )
+    .unwrap();
+    client.send(&update_msg(4, 10_000)).unwrap();
+    let observed_up = sink.join().unwrap();
+    assert_eq!(
+        up_traffic.totals().1,
+        observed_up,
+        "client-recorded up bytes must equal bytes on the wire"
+    );
+}
+
+/// Scale: 512 concurrent registered connections complete a full
+/// broadcast + reply round, and the connection counters stay exact
+/// through mass disconnect.
+#[test]
+fn five_hundred_twelve_connections_complete_a_round() {
+    let traffic = Arc::new(TrafficLog::new());
+    let server = TcpServer::bind("127.0.0.1:0", traffic).unwrap();
+    let addr = server.local_addr.to_string();
+    const N: u32 = 512;
+
+    let mut socks: Vec<TcpStream> = (0..N).map(|i| raw_register(&addr, i)).collect();
+    let mut seen = std::collections::HashSet::new();
+    while seen.len() < N as usize {
+        let (from, msg) = server
+            .recv_timeout(Duration::from_secs(10))
+            .unwrap()
+            .expect("missing Register at scale");
+        assert!(matches!(msg, Msg::Register { .. }));
+        seen.insert(from);
+    }
+    assert!(wait_until(|| server.active_connections() == N as usize));
+
+    // broadcast one frame to every peer, then read it everywhere
+    for id in 0..N {
+        server.send_to(id, &round_end(1, 1)).unwrap();
+    }
+    for sock in &mut socks {
+        let (payload, _) = framing::read_frame(sock).unwrap();
+        assert_eq!(Msg::decode(&payload).unwrap(), round_end(1, 1));
+    }
+
+    // every peer replies; the server sees all N
+    for (i, sock) in socks.iter_mut().enumerate() {
+        let hb = Msg::Heartbeat {
+            client: i as u32,
+            round: 1,
+        };
+        let frame = framing::build_frame(&hb.encode(), None, false).unwrap();
+        framing::write_frame(sock, &frame).unwrap();
+    }
+    let mut replies = 0usize;
+    while replies < N as usize {
+        let (_, msg) = server
+            .recv_timeout(Duration::from_secs(10))
+            .unwrap()
+            .expect("missing Heartbeat at scale");
+        assert!(matches!(msg, Msg::Heartbeat { .. }));
+        replies += 1;
+    }
+
+    drop(socks);
+    assert!(
+        wait_until(|| server.active_connections() == 0 && server.open_connections() == 0),
+        "teardown leaked: active={} open={}",
+        server.active_connections(),
+        server.open_connections()
+    );
+}
+
+/// Slowloris: a registered peer that sends half a frame header and goes
+/// silent is reaped by the idle timeout — without wedging the reactor
+/// or disturbing healthy peers.
+#[test]
+fn slowloris_half_frame_is_reaped_without_wedging_the_reactor() {
+    let cfg = TransportConfig {
+        idle_timeout_ms: 300,
+        ..TransportConfig::default()
+    };
+    let traffic = Arc::new(TrafficLog::new());
+    let server = TcpServer::bind_with("127.0.0.1:0", &cfg, traffic.clone()).unwrap();
+    let addr = server.local_addr.to_string();
+
+    let healthy =
+        TcpClient::connect(&addr, &register(2), LinkShaper::unshaped(), traffic).unwrap();
+    let mut loris = raw_register(&addr, 9);
+    for _ in 0..2 {
+        server.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+    }
+    assert!(wait_until(|| server.active_connections() == 2));
+
+    // half a frame header, then silence
+    loris.write_all(&[0xAB, 0x00]).unwrap();
+    assert!(
+        wait_until(|| server.active_connections() == 1 && server.open_connections() == 1),
+        "slowloris not reaped: active={} open={}",
+        server.active_connections(),
+        server.open_connections()
+    );
+
+    // the reactor still serves the healthy peer
+    server.send_to(2, &round_end(3, 1)).unwrap();
+    let got = healthy.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+    assert_eq!(got, round_end(3, 1));
+    let gone = server.send_to(9, &Msg::Shutdown);
+    assert!(gone.is_err(), "loris must be gone");
+}
+
+/// Interop: a peer that registered with protocol v2 must never receive
+/// a compressed frame, while a v3 peer on the same server does — the
+/// compression flag is strictly opt-in by negotiated version.
+#[test]
+fn v2_peers_never_receive_compressed_frames() {
+    let traffic = Arc::new(TrafficLog::new());
+    let server = TcpServer::bind("127.0.0.1:0", traffic).unwrap();
+    let addr = server.local_addr.to_string();
+
+    // v2 peer: rewrite the version byte of an otherwise-identical
+    // Register (v2 layout is byte-compatible)
+    let mut legacy = TcpStream::connect(&addr).unwrap();
+    let mut reg = register(5).encode();
+    *reg.first_mut().unwrap() = 2;
+    let frame = framing::build_frame(&reg, None, false).unwrap();
+    framing::write_frame(&mut legacy, &frame).unwrap();
+    server.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+
+    // v3 peer for contrast (encode() emits the current version)
+    let mut modern = raw_register(&addr, 6);
+    server.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+
+    let big = big_round_start(50_000);
+    server.send_to(5, &big).unwrap();
+    server.send_to(6, &big).unwrap();
+
+    let read_header = |sock: &mut TcpStream| -> (u32, Vec<u8>) {
+        let mut hdr = [0u8; 4];
+        sock.read_exact(&mut hdr).unwrap();
+        let word = u32::from_le_bytes(hdr);
+        let len = (word & !framing::COMPRESSED_FLAG) as usize;
+        let mut body = vec![0u8; len];
+        sock.read_exact(&mut body).unwrap();
+        (word, body)
+    };
+
+    let (word, body) = read_header(&mut legacy);
+    assert_eq!(
+        word & framing::COMPRESSED_FLAG,
+        0,
+        "v2 peer got a compressed frame"
+    );
+    Msg::decode(&body).expect("v2 peer reads the plain frame");
+
+    let (word, body) = read_header(&mut modern);
+    assert_ne!(
+        word & framing::COMPRESSED_FLAG,
+        0,
+        "v3 peer should get the compressed broadcast"
+    );
+    let logical = framing::unframe(&body, true).unwrap();
+    Msg::decode(&logical).expect("compressed frame decodes");
+    // and the compressed broadcast is genuinely smaller than the raw one
+    assert!((body.len() as u64) < logical.len() as u64);
+}

@@ -353,6 +353,13 @@ def in_scope(rel, scope):
     return any(rel == s or (s.endswith("/") and rel.startswith(s)) for s in scope)
 
 
+# The readiness-driven transport rebuild added two wire-facing modules
+# (frame codec + reactor); the network/ subtree rule must keep covering
+# them — mirrors the scope_matching test in tools/lint/src/lib.rs.
+assert in_scope("network/framing.rs", PANIC_SCOPE)
+assert in_scope("network/reactor.rs", PANIC_SCOPE)
+
+
 def extract_strings(text):
     out = []
     i = 0

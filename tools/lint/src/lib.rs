@@ -948,6 +948,12 @@ mod tests {
     #[test]
     fn scope_matching() {
         assert!(in_scope("network/tcp.rs", PANIC_SCOPE));
+        // the readiness-driven transport rebuild (ISSUE 9) added two
+        // wire-facing modules; the network/ subtree rule must cover
+        // them — a hostile peer reaches both the frame decoder and the
+        // reactor's read path directly
+        assert!(in_scope("network/framing.rs", PANIC_SCOPE));
+        assert!(in_scope("network/reactor.rs", PANIC_SCOPE));
         assert!(in_scope("compress/mod.rs", PANIC_SCOPE));
         assert!(in_scope("orchestrator/server.rs", PANIC_SCOPE));
         assert!(!in_scope("orchestrator/planner.rs", PANIC_SCOPE));
