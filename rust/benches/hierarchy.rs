@@ -1,0 +1,100 @@
+//! Hierarchical aggregation plane bench: the cross-facility wire-byte
+//! claim at scale. A 1000-client / 10-site virtual-time run is compared
+//! against the equivalent flat deployment: the tree must move at least
+//! 5× fewer cross-facility bytes per direction (it lands near 100×,
+//! one site report standing in for ~100 client updates). Emits
+//! `BENCH_hierarchy.json` via benchkit (`FEDHPC_BENCH_BUDGET_MS`
+//! shrinks the timing budget for CI smoke runs; the byte comparison
+//! always runs in full).
+
+use fedhpc::benchkit::{bench, budget_from_env, json_num_obj, print_table, write_json_report};
+use fedhpc::config::presets::quickstart;
+use fedhpc::config::{ExperimentConfig, GroupingPolicy, Partition};
+use fedhpc::experiments::{run_sim, SimTiming};
+
+const CLIENTS: usize = 1_000;
+const SITES: usize = 10;
+const ROUNDS: usize = 2;
+
+fn cfg_for(n_clients: usize, sites: Option<usize>, rounds: usize) -> ExperimentConfig {
+    let mut cfg = quickstart();
+    cfg.name = match sites {
+        Some(s) => format!("bench_hierarchy_{n_clients}c_{s}s"),
+        None => format!("bench_hierarchy_{n_clients}c_flat"),
+    };
+    cfg.seed = 7;
+    cfg.mock_runtime = true;
+    let q = n_clients / 4;
+    cfg.cluster.nodes = vec![
+        ("p3.2xlarge".into(), q),
+        ("t3.large".into(), q),
+        ("hpc-rtx6000".into(), q),
+        ("hpc-cpu".into(), n_clients - 3 * q),
+    ];
+    // every client participates every round: the flat baseline pays
+    // O(clients) cross-facility traffic, the tree O(sites)
+    cfg.selection.clients_per_round = n_clients;
+    cfg.train.rounds = rounds;
+    cfg.train.local_epochs = 1;
+    cfg.data.samples_per_client = 16;
+    cfg.data.eval_samples = 32;
+    cfg.data.partition = Partition::Iid;
+    if let Some(s) = sites {
+        cfg.hierarchy.grouping = GroupingPolicy::Site { sites: s };
+    }
+    cfg
+}
+
+fn total_bytes(cfg: &ExperimentConfig) -> (u64, u64) {
+    let sim = run_sim(cfg, &SimTiming::default(), false).expect("sim run");
+    let down = sim.report.rounds.iter().map(|r| r.bytes_down).sum();
+    let up = sim.report.rounds.iter().map(|r| r.bytes_up).sum();
+    (down, up)
+}
+
+fn main() {
+    // the acceptance claim, measured in full regardless of budget
+    let (down_flat, up_flat) = total_bytes(&cfg_for(CLIENTS, None, ROUNDS));
+    let (down_tree, up_tree) = total_bytes(&cfg_for(CLIENTS, Some(SITES), ROUNDS));
+    let red_up = up_flat as f64 / up_tree.max(1) as f64;
+    let red_down = down_flat as f64 / down_tree.max(1) as f64;
+    println!("=== cross-facility wire bytes, {CLIENTS} clients / {SITES} sites, {ROUNDS} rounds ===");
+    println!("{:>10} {:>14} {:>14} {:>9}", "direction", "flat", "tree", "ratio");
+    println!("{:>10} {:>14} {:>14} {:>8.1}x", "up", up_flat, up_tree, red_up);
+    println!("{:>10} {:>14} {:>14} {:>8.1}x", "down", down_flat, down_tree, red_down);
+    assert!(
+        red_up >= 5.0 && red_down >= 5.0,
+        "hierarchy must cut cross-facility bytes ≥5× (got up {red_up:.1}x, down {red_down:.1}x)"
+    );
+
+    // simulator cost of the tree plane (smaller fleet so the timing
+    // loop stays cheap under CI budgets)
+    let budget = budget_from_env(2_000);
+    let flat_small = cfg_for(200, None, 2);
+    let tree_small = cfg_for(200, Some(SITES), 2);
+    let mut stats = Vec::new();
+    for (tag, cfg) in [("flat", &flat_small), ("two-tier", &tree_small)] {
+        stats.push(bench(
+            &format!("run_sim {tag} 200 clients x 2 rounds"),
+            budget,
+            || {
+                std::hint::black_box(run_sim(cfg, &SimTiming::default(), false).unwrap());
+            },
+        ));
+    }
+    print_table("two-tier sim throughput", &stats);
+
+    let shape = json_num_obj(&[
+        ("clients", CLIENTS as f64),
+        ("sites", SITES as f64),
+        ("rounds", ROUNDS as f64),
+        ("bytes_up_flat", up_flat as f64),
+        ("bytes_up_tree", up_tree as f64),
+        ("bytes_down_flat", down_flat as f64),
+        ("bytes_down_tree", down_tree as f64),
+        ("reduction_up", red_up),
+        ("reduction_down", red_down),
+    ]);
+    write_json_report("BENCH_hierarchy.json", "hierarchy", &stats, &[("shape", shape)])
+        .expect("writing BENCH_hierarchy.json");
+}

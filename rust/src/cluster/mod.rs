@@ -13,7 +13,7 @@ mod topology;
 
 pub use availability::AvailabilityModel;
 pub use catalog::{catalog, lookup_sku, NodeSku};
-pub use topology::{Cluster, Node, NodeId};
+pub use topology::{Cluster, Node, NodeId, SiteMap};
 
 /// Where a node lives — decides transport backend, scheduler adapter
 /// and link class.

@@ -2,7 +2,7 @@
 //! per-node speed samples, availability models and link classes.
 
 use super::{catalog::lookup_sku, AvailabilityModel, Domain, LinkClass, NodeSku};
-use crate::config::ClusterConfig;
+use crate::config::{ClusterConfig, GroupingPolicy};
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
 
@@ -111,6 +111,95 @@ impl Cluster {
     }
 }
 
+/// Deterministic partition of a cluster's node ids into aggregation
+/// sites — the tree shape of the hierarchical aggregation plane
+/// (`orchestrator::hierarchy`). Derivable from the cluster config
+/// alone (no RNG, no built [`Cluster`] needed), so the root, every
+/// aggregator, every worker and both sim engines reconstruct the
+/// identical tree from the shared experiment config.
+///
+/// Site ids are dense `0..n_sites()`; members are ascending node ids.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SiteMap {
+    /// Site index per node, indexed by [`NodeId`].
+    assignment: Vec<usize>,
+    /// Member node ids per site, each ascending.
+    members: Vec<Vec<NodeId>>,
+}
+
+impl SiteMap {
+    /// Build the site partition for `cfg` under `policy`:
+    ///
+    /// * `flat` — one site holding every node (the degenerate
+    ///   single-server tree).
+    /// * `site:<n>` — `n` contiguous, balanced blocks of node ids
+    ///   (node `i` lands in site `i·n / total`).
+    /// * `zone` — one site per non-empty `(sku, count)` entry, in
+    ///   entry order ([`Cluster::build`] assigns ids sequentially per
+    ///   entry, so a zone is exactly one entry's id range).
+    pub fn build(cfg: &ClusterConfig, policy: GroupingPolicy) -> Result<SiteMap> {
+        let total = cfg.total_nodes();
+        if total == 0 {
+            bail!("site map: cluster has no nodes");
+        }
+        let assignment: Vec<usize> = match policy {
+            GroupingPolicy::Flat => vec![0; total],
+            GroupingPolicy::Site { sites } => {
+                if sites == 0 || sites > total {
+                    bail!("site map: {sites} sites over {total} nodes");
+                }
+                (0..total).map(|i| i * sites / total).collect()
+            }
+            GroupingPolicy::Zone => {
+                let mut a = Vec::with_capacity(total);
+                let mut zone = 0usize;
+                for (_, count) in &cfg.nodes {
+                    if *count == 0 {
+                        continue; // empty entries produce no site
+                    }
+                    let len = a.len();
+                    a.resize(len + *count, zone);
+                    zone += 1;
+                }
+                a
+            }
+        };
+        let n_sites = assignment.iter().copied().max().map_or(0, |m| m + 1);
+        let mut members: Vec<Vec<NodeId>> = vec![Vec::new(); n_sites];
+        for (id, &site) in assignment.iter().enumerate() {
+            if let Some(m) = members.get_mut(site) {
+                m.push(id as NodeId);
+            }
+        }
+        Ok(SiteMap {
+            assignment,
+            members,
+        })
+    }
+
+    /// Number of sites (every site has at least one member).
+    pub fn n_sites(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Which site a node belongs to; `None` for ids outside the
+    /// cluster.
+    pub fn site_of(&self, id: NodeId) -> Option<usize> {
+        self.assignment.get(id as usize).copied()
+    }
+
+    /// A site's member node ids, ascending. Empty for unknown sites.
+    pub fn members(&self, site: usize) -> &[NodeId] {
+        self.members.get(site).map_or(&[], Vec::as_slice)
+    }
+
+    /// The site's stable representative (lowest member id) — the
+    /// client id its aggregator reports upstream under.
+    pub fn representative(&self, site: usize) -> Option<NodeId> {
+        self.members.get(site).and_then(|m| m.first().copied())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,6 +279,63 @@ mod tests {
         let wan = &c.nodes[3];
         let payload = 45 * 1024 * 1024; // paper Table 4: ~45 MB model
         assert!(wan.transfer_time_s(payload) > 10.0 * hpc.transfer_time_s(payload));
+    }
+
+    #[test]
+    fn site_map_flat_is_one_site() {
+        let m = SiteMap::build(&cfg(), GroupingPolicy::Flat).unwrap();
+        assert_eq!(m.n_sites(), 1);
+        assert_eq!(m.members(0).len(), 6);
+        assert_eq!(m.site_of(5), Some(0));
+        assert_eq!(m.site_of(6), None);
+    }
+
+    #[test]
+    fn site_map_contiguous_blocks_are_balanced() {
+        let m = SiteMap::build(&cfg(), GroupingPolicy::Site { sites: 3 }).unwrap();
+        assert_eq!(m.n_sites(), 3);
+        assert_eq!(m.members(0), &[0, 1]);
+        assert_eq!(m.members(1), &[2, 3]);
+        assert_eq!(m.members(2), &[4, 5]);
+        assert_eq!(m.representative(2), Some(4));
+        // uneven split: every site non-empty, sizes differ by ≤ 1
+        let m = SiteMap::build(&cfg(), GroupingPolicy::Site { sites: 4 }).unwrap();
+        let sizes: Vec<usize> = (0..4).map(|s| m.members(s).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 6);
+        assert!(sizes.iter().all(|&s| (1..=2).contains(&s)));
+    }
+
+    #[test]
+    fn site_map_zone_follows_sku_entries() {
+        let m = SiteMap::build(&cfg(), GroupingPolicy::Zone).unwrap();
+        assert_eq!(m.n_sites(), 3);
+        assert_eq!(m.members(0), &[0, 1, 2]); // 3× hpc-rtx6000
+        assert_eq!(m.members(1), &[3, 4]); // 2× t3.large
+        assert_eq!(m.members(2), &[5]); // 1× p3.2xlarge-spot
+        // zone ids match Cluster::build's sequential id assignment
+        let c = Cluster::build(&cfg(), 1).unwrap();
+        assert_eq!(c.len(), m.members(0).len() + m.members(1).len() + m.members(2).len());
+    }
+
+    #[test]
+    fn site_map_zone_skips_empty_entries() {
+        let mut c = cfg();
+        c.nodes.insert(1, ("t3.large".into(), 0));
+        let m = SiteMap::build(&c, GroupingPolicy::Zone).unwrap();
+        assert_eq!(m.n_sites(), 3);
+        assert!((0..m.n_sites()).all(|s| !m.members(s).is_empty()));
+    }
+
+    #[test]
+    fn site_map_rejects_degenerate_shapes() {
+        assert!(SiteMap::build(&cfg(), GroupingPolicy::Site { sites: 0 }).is_err());
+        assert!(SiteMap::build(&cfg(), GroupingPolicy::Site { sites: 7 }).is_err());
+        let empty = ClusterConfig {
+            nodes: vec![],
+            cloud_backend: "inproc".into(),
+            hpc_backend: "inproc".into(),
+        };
+        assert!(SiteMap::build(&empty, GroupingPolicy::Flat).is_err());
     }
 
     #[test]

@@ -322,6 +322,21 @@ fn decode(v: &Value) -> Result<ExperimentConfig> {
                 }
             }
         },
+        // optional section: absent (old configs) means flat (no
+        // aggregator tier); grouping specs are registry names
+        // ("flat", "site:<n>", "zone") — unknown names are load-time
+        // errors, never panics
+        hierarchy: match v.get("hierarchy") {
+            None => HierarchyConfig::default(),
+            Some(h) => HierarchyConfig {
+                grouping: match h.get("grouping") {
+                    None => GroupingPolicy::default(),
+                    Some(g) => GroupingPolicy::parse(g.as_str().ok_or_else(
+                        || anyhow!("hierarchy.grouping must be a spec string"),
+                    )?)?,
+                },
+            },
+        },
     })
 }
 
@@ -506,6 +521,10 @@ pub fn to_json(cfg: &ExperimentConfig) -> String {
                 ),
                 ("outbox_frames", num(cfg.transport.outbox_frames as f64)),
             ]),
+        ),
+        (
+            "hierarchy",
+            obj(vec![("grouping", s(&cfg.hierarchy.grouping.spec()))]),
         ),
     ])
     .to_string()
@@ -868,6 +887,58 @@ mod tests {
         assert_eq!(
             cfg.transport.outbox_frames,
             TransportConfig::default().outbox_frames
+        );
+    }
+
+    #[test]
+    fn roundtrip_hierarchy_section() {
+        for grouping in [
+            GroupingPolicy::Flat,
+            GroupingPolicy::Site { sites: 2 },
+            GroupingPolicy::Zone,
+        ] {
+            let mut cfg = quickstart();
+            cfg.hierarchy.grouping = grouping;
+            let back = from_json_str(&to_json(&cfg)).unwrap();
+            assert_eq!(back.hierarchy.grouping, grouping);
+            assert_eq!(cfg, back);
+        }
+    }
+
+    #[test]
+    fn missing_hierarchy_section_defaults_to_flat() {
+        // configs written before the hierarchy axis existed still load
+        let text = to_json(&quickstart());
+        let stripped = {
+            let v = Value::parse(&text).unwrap();
+            let keep: Vec<(&str, Value)> = [
+                "name",
+                "seed",
+                "data",
+                "cluster",
+                "train",
+                "aggregation",
+                "selection",
+            ]
+            .iter()
+            .map(|k| (*k, v.req(k).unwrap().clone()))
+            .collect();
+            json::obj(keep).to_string()
+        };
+        let cfg = from_json_str(&stripped).unwrap();
+        assert_eq!(cfg.hierarchy, HierarchyConfig::default());
+        assert!(!cfg.hierarchy.enabled());
+    }
+
+    #[test]
+    fn unknown_grouping_policy_errors() {
+        let mut cfg = quickstart();
+        cfg.hierarchy.grouping = GroupingPolicy::Zone;
+        let text = to_json(&cfg).replace("\"zone\"", "\"region:3\"");
+        let err = from_json_str(&text).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("unknown grouping policy 'region'"),
+            "got: {err:#}"
         );
     }
 

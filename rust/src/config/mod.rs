@@ -933,6 +933,111 @@ impl Default for TransportConfig {
     }
 }
 
+/// How nodes are grouped into aggregation sites for the hierarchical
+/// plane (`orchestrator::hierarchy`). Selected by registry name:
+/// `"flat"` (no aggregator tier — every client reports straight to the
+/// root), `"site"` / `"site:<n>"` (n contiguous blocks of node ids),
+/// `"zone"` (one site per `(sku, count)` entry of the cluster config —
+/// the natural "facility" boundary of the testbed model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GroupingPolicy {
+    /// Single-server topology (the default): no aggregator tier.
+    #[default]
+    Flat,
+    /// Partition node ids into `sites` contiguous, balanced blocks.
+    Site { sites: usize },
+    /// One site per cluster-config `(sku, count)` entry.
+    Zone,
+}
+
+impl GroupingPolicy {
+    pub const KINDS: &'static [&'static str] = &["flat", "site", "zone"];
+
+    /// Default site count for a bare `"site"` spec.
+    pub const DEFAULT_SITES: usize = 4;
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GroupingPolicy::Flat => "flat",
+            GroupingPolicy::Site { .. } => "site",
+            GroupingPolicy::Zone => "zone",
+        }
+    }
+
+    /// The `"name[:param]"` spec that parses back to this value.
+    pub fn spec(&self) -> String {
+        match *self {
+            GroupingPolicy::Flat => "flat".into(),
+            GroupingPolicy::Site { sites } => format!("site:{sites}"),
+            GroupingPolicy::Zone => "zone".into(),
+        }
+    }
+
+    /// Parse by registry name: `"flat"`, `"site"` / `"site:<n>"`,
+    /// `"zone"`.
+    pub fn parse(spec: &str) -> Result<GroupingPolicy> {
+        let (kind, arg) = match spec.split_once(':') {
+            Some((k, a)) => (k, Some(a)),
+            None => (spec, None),
+        };
+        let g = match kind {
+            "flat" => {
+                if let Some(a) = arg {
+                    bail!("grouping 'flat' takes no parameter (got '{a}')");
+                }
+                GroupingPolicy::Flat
+            }
+            "site" => {
+                let sites = match arg {
+                    None => Self::DEFAULT_SITES,
+                    Some(a) => a
+                        .parse::<usize>()
+                        .map_err(|_| anyhow::anyhow!("grouping 'site': bad parameter '{a}'"))?,
+                };
+                GroupingPolicy::Site { sites }
+            }
+            "zone" => {
+                if let Some(a) = arg {
+                    bail!("grouping 'zone' takes no parameter (got '{a}')");
+                }
+                GroupingPolicy::Zone
+            }
+            k => bail!(
+                "unknown grouping policy '{k}' (known: {})",
+                GroupingPolicy::KINDS.join(", ")
+            ),
+        };
+        g.check_params()?;
+        Ok(g)
+    }
+
+    pub fn check_params(&self) -> Result<()> {
+        if let GroupingPolicy::Site { sites } = *self {
+            if sites == 0 {
+                bail!("config: hierarchy grouping 'site' needs at least 1 site");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Hierarchical aggregation plane (`orchestrator::hierarchy`): a tier
+/// of per-site aggregators that fold their clients' updates locally
+/// and report one pre-aggregated update upstream, cutting
+/// cross-facility traffic from O(clients) to O(sites) per round.
+/// `grouping: flat` (the default) disables the tier entirely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct HierarchyConfig {
+    pub grouping: GroupingPolicy,
+}
+
+impl HierarchyConfig {
+    /// Whether the aggregator tier is on at all.
+    pub fn enabled(&self) -> bool {
+        self.grouping != GroupingPolicy::Flat
+    }
+}
+
 /// Root experiment description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
@@ -965,6 +1070,9 @@ pub struct ExperimentConfig {
     /// TCP transport tuning (reactor pool, frame compression,
     /// backpressure); defaults hold a 10k-client fleet.
     pub transport: TransportConfig,
+    /// Hierarchical aggregation plane: site grouping for the
+    /// tree-of-aggregators topology (`flat` = single server).
+    pub hierarchy: HierarchyConfig,
 }
 
 #[cfg(test)]
@@ -1017,6 +1125,46 @@ mod tests {
         // silently discarding it
         assert!(Aggregation::parse("fedavg:1").is_err());
         assert!(Aggregation::parse("coordinate_median:0.3").is_err());
+    }
+
+    #[test]
+    fn grouping_parse_known_names_and_params() {
+        assert_eq!(GroupingPolicy::parse("flat").unwrap(), GroupingPolicy::Flat);
+        assert_eq!(
+            GroupingPolicy::parse("site").unwrap(),
+            GroupingPolicy::Site {
+                sites: GroupingPolicy::DEFAULT_SITES
+            }
+        );
+        assert_eq!(
+            GroupingPolicy::parse("site:10").unwrap(),
+            GroupingPolicy::Site { sites: 10 }
+        );
+        assert_eq!(GroupingPolicy::parse("zone").unwrap(), GroupingPolicy::Zone);
+        // every registered kind parses with defaults and round-trips
+        // through its spec
+        for kind in GroupingPolicy::KINDS {
+            let g = GroupingPolicy::parse(kind).unwrap();
+            assert_eq!(&g.name(), kind);
+            assert_eq!(GroupingPolicy::parse(&g.spec()).unwrap(), g);
+        }
+        assert!(GroupingPolicy::parse("region").is_err());
+        assert!(GroupingPolicy::parse("site:zero").is_err());
+        assert!(GroupingPolicy::parse("site:0").is_err());
+        // parameterless kinds reject a stray parameter
+        assert!(GroupingPolicy::parse("flat:1").is_err());
+        assert!(GroupingPolicy::parse("zone:2").is_err());
+    }
+
+    #[test]
+    fn hierarchy_default_is_flat_and_disabled() {
+        let h = HierarchyConfig::default();
+        assert_eq!(h.grouping, GroupingPolicy::Flat);
+        assert!(!h.enabled());
+        assert!(HierarchyConfig {
+            grouping: GroupingPolicy::Zone
+        }
+        .enabled());
     }
 
     #[test]

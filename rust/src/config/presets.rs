@@ -78,6 +78,7 @@ pub fn quickstart() -> ExperimentConfig {
         mock_runtime: false,
         telemetry: TelemetryConfig::default(),
         transport: TransportConfig::default(),
+        hierarchy: HierarchyConfig::default(),
     }
 }
 
@@ -137,6 +138,7 @@ pub fn paper_testbed() -> ExperimentConfig {
         mock_runtime: false,
         telemetry: TelemetryConfig::default(),
         transport: TransportConfig::default(),
+        hierarchy: HierarchyConfig::default(),
     }
 }
 

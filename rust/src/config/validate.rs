@@ -162,6 +162,25 @@ pub fn validate(cfg: &ExperimentConfig) -> Result<()> {
     if cfg.transport.outbox_frames == 0 {
         bail!("config: transport.outbox_frames must be >= 1");
     }
+    cfg.hierarchy.grouping.check_params()?;
+    if cfg.hierarchy.enabled() {
+        // the grouping must actually partition this cluster (e.g.
+        // "site:10" over 6 nodes has empty sites)
+        crate::cluster::SiteMap::build(&cfg.cluster, cfg.hierarchy.grouping)?;
+        // order-statistic strategies buffer whole cohorts; a site
+        // aggregator can only report one pre-folded mean upstream, so
+        // trimming / medians do not compose across the tree
+        if matches!(
+            cfg.aggregation,
+            Aggregation::TrimmedMean { .. } | Aggregation::CoordinateMedian
+        ) {
+            bail!(
+                "config: hierarchical aggregation requires a streaming strategy \
+                 (got buffered '{}') — order statistics do not compose across sites",
+                cfg.aggregation.name()
+            );
+        }
+    }
     Ok(())
 }
 
@@ -310,6 +329,30 @@ mod tests {
             idle_timeout_ms: 30_000,
             outbox_frames: 64,
         };
+        assert!(validate(&c).is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_hierarchy() {
+        // more sites than nodes: the site map cannot be built
+        let mut c = quickstart();
+        c.hierarchy.grouping = GroupingPolicy::Site { sites: 100 };
+        assert!(validate(&c).is_err(), "site:100 over 8 nodes");
+        // zero sites is a parameter error even without building the map
+        let mut c = quickstart();
+        c.hierarchy.grouping = GroupingPolicy::Site { sites: 0 };
+        assert!(validate(&c).is_err(), "site:0");
+        // buffered strategies do not compose across sites
+        let mut c = quickstart();
+        c.hierarchy.grouping = GroupingPolicy::Site { sites: 2 };
+        c.aggregation = Aggregation::TrimmedMean { trim_frac: 0.25 };
+        assert!(validate(&c).is_err(), "trimmed_mean under hierarchy");
+        c.aggregation = Aggregation::CoordinateMedian;
+        assert!(validate(&c).is_err(), "coordinate_median under hierarchy");
+        // streaming strategies over a feasible grouping are fine
+        c.aggregation = Aggregation::FedAvg;
+        assert!(validate(&c).is_ok());
+        c.hierarchy.grouping = GroupingPolicy::Zone;
         assert!(validate(&c).is_ok());
     }
 

@@ -12,7 +12,7 @@
 //! (microsecond latency, the default for tests).
 
 use crate::client::{Worker, WorkerOptions};
-use crate::cluster::{Cluster, Node};
+use crate::cluster::{Cluster, Node, SiteMap};
 use crate::config::ExperimentConfig;
 use crate::data::{FederatedDataset, Shard};
 use crate::faults::FaultInjector;
@@ -21,7 +21,7 @@ use crate::network::inproc::InprocHub;
 use crate::network::tcp::{TcpClient, TcpServer};
 use crate::network::transport::{ClientTransport, ServerTransport};
 use crate::network::{LinkShaper, Msg, TrafficLog};
-use crate::orchestrator::{EvalHarness, NoHooks, Orchestrator, OrchestratorHooks};
+use crate::orchestrator::{Aggregator, EvalHarness, NoHooks, Orchestrator, OrchestratorHooks};
 use crate::runtime::{MockRuntime, ModelRuntime, PjrtRuntime};
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -108,6 +108,75 @@ pub fn run_real_with_control(
         runtime: eval_runtime,
         shard: dataset.eval.clone(),
     };
+
+    // hierarchical plane (config `hierarchy`): root ⇄ site aggregators
+    // ⇄ workers, all in-process — multi-process trees deploy via
+    // `serve --role aggregator` instead. The launcher's shared traffic
+    // log sees only the tier-2 (cross-facility) hop; each site hub runs
+    // its own intra-facility log, so `report.total_bytes()` measures
+    // exactly the traffic that would cross facilities.
+    if cfg.hierarchy.enabled() {
+        let map = SiteMap::build(&cfg.cluster, cfg.hierarchy.grouping)?;
+        log::info!(
+            "hierarchy: {} sites under '{}' (launcher trees run in-process)",
+            map.n_sites(),
+            cfg.hierarchy.grouping.spec()
+        );
+        let root_hub = InprocHub::new(traffic.clone());
+        let mut handles = Vec::with_capacity(n_clients + map.n_sites());
+        for site in 0..map.n_sites() {
+            let members = map.members(site).to_vec();
+            let rep = map
+                .representative(site)
+                .ok_or_else(|| anyhow::anyhow!("site {site} has no members"))?;
+            let rep_node = cluster
+                .node(rep)
+                .ok_or_else(|| anyhow::anyhow!("unknown representative node {rep}"))?;
+            // the site's upstream leg rides the representative's link
+            let upstream = root_hub.add_client(rep, LinkShaper::from_class(rep_node.link()));
+            let site_hub = InprocHub::new(Arc::new(TrafficLog::new()));
+            for &m in &members {
+                let node = cluster
+                    .node(m)
+                    .ok_or_else(|| anyhow::anyhow!("unknown node {m}"))?;
+                let shard = dataset
+                    .clients
+                    .get(m as usize)
+                    .ok_or_else(|| anyhow::anyhow!("no shard for node {m}"))?;
+                let endpoint = site_hub.add_client(m, LinkShaper::from_class(node.link()));
+                let runtime = worker_runtime(shard)?;
+                handles.push(spawn_worker(cfg, endpoint, runtime, node, shard)?);
+            }
+            let mut agg =
+                Aggregator::new(cfg.clone(), site, initial.len(), site_hub.server(), upstream);
+            let expected = members.len();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("site-agg-{site}"))
+                    .spawn(move || agg.run(expected, Duration::from_secs(60)))
+                    .context("spawning site aggregator thread")?,
+            );
+        }
+        // the root sees one "client" per site: select every site each
+        // round, never cut a site off at partial-k, and double the
+        // round budget (site aggregators hand members 3/4 of theirs)
+        let mut root_cfg = cfg.clone();
+        root_cfg.selection.clients_per_round = map.n_sites();
+        root_cfg.straggler.partial_k = None;
+        root_cfg.straggler.deadline_ms =
+            cfg.straggler.deadline_ms.map(|d| d.saturating_mul(2));
+        return orchestrate(
+            &root_cfg,
+            root_hub.server(),
+            traffic,
+            initial,
+            eval,
+            map.n_sites(),
+            handles,
+            hooks,
+            control,
+        );
+    }
 
     // transport by backend name: "grpc" anywhere means the real TCP
     // stack over loopback; otherwise the in-process hub
@@ -280,6 +349,34 @@ mod tests {
         let total_dropped: u32 = report.rounds.iter().map(|r| r.dropped).sum();
         assert!(total_dropped > 0, "expected injected dropouts");
         assert!(report.final_accuracy().is_some());
+    }
+
+    /// Two-tier in-process tree: 8 workers under 2 site aggregators.
+    /// The root folds pre-folded site reports and the federation still
+    /// learns; every round commits with both sites reporting, and the
+    /// shared traffic log counts only the tier-2 (cross-facility) hop.
+    #[test]
+    fn hierarchical_federation_learns() {
+        let mut cfg = quickstart();
+        cfg.mock_runtime = true;
+        cfg.train.rounds = 6;
+        cfg.train.local_epochs = 1;
+        cfg.train.lr = 0.2;
+        cfg.data.samples_per_client = 96;
+        cfg.data.eval_samples = 256;
+        cfg.data.partition = Partition::Iid;
+        cfg.hierarchy.grouping = crate::config::GroupingPolicy::Site { sites: 2 };
+        let report = run_real(&cfg).unwrap();
+        assert_eq!(report.rounds.len(), 6);
+        let final_acc = report.final_accuracy().unwrap();
+        assert!(
+            final_acc > 0.5,
+            "tree federation should learn, got {final_acc}"
+        );
+        for r in &report.rounds {
+            assert_eq!(r.selected, 2, "root must select every site");
+            assert_eq!(r.reported, 2, "round {} lost a site report", r.round);
+        }
     }
 
     #[test]

@@ -35,7 +35,7 @@
 //! `orchestrator::aggregate` — `rust/tests/sim_faults.rs` pins this in
 //! both modes.
 
-use crate::cluster::{Cluster, Node};
+use crate::cluster::{Cluster, Node, SiteMap};
 use crate::compress::{expected_wire_bytes, Encoded, SharedDecoded};
 use crate::config::{ExperimentConfig, RoundMode, StalenessFn};
 use crate::data::FederatedDataset;
@@ -50,10 +50,12 @@ use crate::orchestrator::{
 };
 use crate::runtime::{MockRuntime, ModelRuntime};
 use crate::sim::{EventQueue, VirtualClock};
+use crate::telemetry::{self, Counter};
 use crate::util::parallel::{resolve_ingest_threads, ShardPool};
 use crate::util::rng::Rng;
 use crate::util::scratch::ScratchPool;
 use anyhow::{bail, Result};
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
 /// Timing model parameters.
@@ -256,6 +258,85 @@ fn sim_fold(
     }
 }
 
+/// Per-site telemetry handles for a sim run (one pair per site,
+/// resolved once — bumped only at site-round / commit boundaries, the
+/// same sampling discipline the live `Aggregator` uses).
+struct SimSiteCounters {
+    updates: Arc<Counter>,
+    upstream_bytes: Arc<Counter>,
+}
+
+fn sim_site_counters(n_sites: usize) -> Vec<SimSiteCounters> {
+    use crate::telemetry::names;
+    let g = telemetry::global();
+    (0..n_sites)
+        .map(|site| {
+            let s = site.to_string();
+            SimSiteCounters {
+                updates: g.counter_with(
+                    names::SITE_UPDATES_TOTAL,
+                    "Member updates folded by a site aggregator, by site.",
+                    "site",
+                    &s,
+                ),
+                upstream_bytes: g.counter_with(
+                    names::UPSTREAM_REPORT_BYTES_TOTAL,
+                    "Encoded bytes of pre-folded deltas reported upstream, by site.",
+                    "site",
+                    &s,
+                ),
+            }
+        })
+        .collect()
+}
+
+/// Build the run's site map when the config enables the hierarchy
+/// plane (validated already, so `build` cannot fail on a validated
+/// config — errors still propagate for injected configs).
+fn sim_site_map(cfg: &ExperimentConfig) -> Result<Option<SiteMap>> {
+    if cfg.hierarchy.enabled() {
+        Ok(Some(SiteMap::build(&cfg.cluster, cfg.hierarchy.grouping)?))
+    } else {
+        Ok(None)
+    }
+}
+
+/// Fold a site's member inputs (arrival order) and return the site's
+/// upstream report as one [`AggInput`] — the sim counterpart of the
+/// live `Aggregator::run_site_round` re-encode: the pre-folded f32
+/// site mean at the site's summed weight, attributed to the site's
+/// representative node. Returns `None` when no member folded.
+#[allow(clippy::too_many_arguments)]
+fn fold_site_report(
+    map: &SiteMap,
+    site: usize,
+    members: Vec<AggInput>,
+    n_params: usize,
+    strategy: &Arc<dyn crate::orchestrator::AggStrategy>,
+    scratch: &Arc<ScratchPool>,
+    ingest: &Option<Arc<ShardPool>>,
+) -> Result<Option<AggInput>> {
+    if members.is_empty() {
+        return Ok(None);
+    }
+    let mut site_agg =
+        RoundAggregator::with_ingest(strategy.clone(), n_params, scratch.clone(), ingest.clone());
+    for input in members {
+        sim_fold(&mut site_agg, input, n_params, 1.0)?;
+    }
+    let (site_delta, total_weight) = site_agg.finalize_delta()?;
+    let rep = map.representative(site).unwrap_or(0);
+    Ok(Some(AggInput {
+        client: rep,
+        delta: site_delta.delta.iter().map(|&d| d as f32).collect(),
+        // the site's summed weight, carried exactly like the live
+        // aggregator's `stats.n_samples` (rounded at the tier boundary)
+        n_samples: (total_weight.round() as u64).max(1),
+        train_loss: site_delta.mean_train_loss as f32,
+        update_var: 0.0,
+    }))
+}
+
 /// Run a virtual-time experiment. `with_training=false` skips model
 /// math entirely (pure timing, e.g. Table 3); `true` trains a mock
 /// model so accuracy-vs-time questions can be answered. The engine —
@@ -302,6 +383,11 @@ fn run_sim_sync(
     // one scratch + shard pool for the whole run, like the real loop
     let scratch = Arc::new(ScratchPool::new());
     let ingest = sim_ingest_pool(cfg, params.len());
+    // two-tier plane (config `hierarchy`): reporters fold per site,
+    // each reporting site ships ONE pre-folded delta cross-facility
+    let sites = sim_site_map(cfg)?;
+    let site_up_bytes = expected_wire_bytes(params.len(), &cfg.compression);
+    let site_counters = sites.as_ref().map(|m| sim_site_counters(m.n_sites()));
     let mut rng = Rng::new(cfg.seed ^ 0x51312);
     let mut now_s = 0.0f64;
     let mut report = TrainingReport::new(&cfg.name);
@@ -404,6 +490,28 @@ fn run_sim_sync(
                 .fold(0.0, f64::max);
             round_ends_s = round_ends_s.max(last_wait);
         }
+        if let Some(map) = &sites {
+            // tier-2 hop: a site aggregator can only re-encode and ship
+            // its folded delta after its last reporting member lands, so
+            // the global round ends at the slowest site's report arrival
+            // (per-tier link class via the representative node)
+            let mut tier2_end = 0.0f64;
+            for site in 0..map.n_sites() {
+                let last = reporters
+                    .iter()
+                    .filter(|a| map.site_of(a.client) == Some(site))
+                    .map(|a| a.finish_s)
+                    .fold(f64::NEG_INFINITY, f64::max);
+                if last.is_finite() {
+                    let hop = map
+                        .representative(site)
+                        .and_then(|r| cluster.node(r))
+                        .map_or(0.0, |n| n.transfer_time_s(site_up_bytes));
+                    tier2_end = tier2_end.max(last + hop);
+                }
+            }
+            round_ends_s = round_ends_s.max(tier2_end);
+        }
         let duration_s = round_ends_s + timing.orchestrator_overhead_s;
 
         // planner feedback — adaptive/tiered planners learn from
@@ -453,8 +561,33 @@ fn run_sim_sync(
                     ingest.clone(),
                 );
                 let n_params = params.len();
-                for input in inputs {
-                    sim_fold(&mut agg, input, n_params, 1.0)?;
+                match &sites {
+                    None => {
+                        for input in inputs {
+                            sim_fold(&mut agg, input, n_params, 1.0)?;
+                        }
+                    }
+                    Some(map) => {
+                        // two-tier fold: members fold per site (arrival
+                        // order within the site), the root folds each
+                        // site's pre-folded mean at its summed weight in
+                        // ascending site order — the virtual replay of
+                        // the live tree
+                        let mut per_site: BTreeMap<usize, Vec<AggInput>> = BTreeMap::new();
+                        for input in inputs {
+                            let Some(site) = map.site_of(input.client) else {
+                                bail!("round {round}: client {} has no site", input.client);
+                            };
+                            per_site.entry(site).or_default().push(input);
+                        }
+                        for (site, members) in per_site {
+                            if let Some(report) = fold_site_report(
+                                map, site, members, n_params, &strategy, &scratch, &ingest,
+                            )? {
+                                sim_fold(&mut agg, report, n_params, 1.0)?;
+                            }
+                        }
+                    }
                 }
                 let out = agg.finalize(&params, server_opt.as_mut())?;
                 let e = eval.as_ref().unwrap().evaluate(&out.new_params)?;
@@ -474,7 +607,37 @@ fn run_sim_sync(
 
         now_s += duration_s;
         let n_rep = reporters.len() as u32;
-        let bytes_up_round: u64 = reporters.iter().map(|a| a.up_bytes).sum();
+        // byte metrics: flat counts the root's own link; two-tier counts
+        // the cross-facility tier only (root ⇄ site aggregators) —
+        // intra-site traffic never leaves the facility, and the
+        // O(clients) → O(sites) uplink shrink is exactly what
+        // BENCH_hierarchy.json measures
+        let (bytes_down_round, bytes_up_round) = match &sites {
+            None => (
+                down_bytes * selected as u64,
+                reporters.iter().map(|a| a.up_bytes).sum(),
+            ),
+            Some(map) => {
+                let mut site_members: BTreeMap<usize, u64> = BTreeMap::new();
+                for a in &reporters {
+                    if let Some(s) = map.site_of(a.client) {
+                        *site_members.entry(s).or_default() += 1;
+                    }
+                }
+                if let Some(counters) = &site_counters {
+                    for (&site, &n) in &site_members {
+                        if let Some(c) = counters.get(site) {
+                            c.updates.add(n);
+                            c.upstream_bytes.add(site_up_bytes);
+                        }
+                    }
+                }
+                (
+                    down_bytes * map.n_sites() as u64,
+                    site_members.len() as u64 * site_up_bytes,
+                )
+            }
+        };
         details.push(RoundDetail {
             round,
             reporters: reporters.iter().map(|a| (a.client, 0)).collect(),
@@ -493,7 +656,7 @@ fn run_sim_sync(
             eval_accuracy,
             eval_loss,
             duration_s,
-            bytes_down: down_bytes * selected as u64,
+            bytes_down: bytes_down_round,
             bytes_up: bytes_up_round,
             model_delta,
             staleness_min: 0,
@@ -522,7 +685,10 @@ fn run_sim_sync(
     })
 }
 
-/// One in-flight client's eventual arrival at the async server.
+/// One in-flight client's eventual arrival at the async server. Under
+/// the hierarchy plane the "client" is a whole site (keyed by its
+/// representative node): one dispatch runs a batched site round and the
+/// arrival carries the site's pre-folded report.
 struct AsyncArrival {
     client: u32,
     /// Commit count when the client was dispatched (its base model).
@@ -530,8 +696,12 @@ struct AsyncArrival {
     /// False for injected dropouts/preemptions: the slot comes back,
     /// but nothing folds.
     reports: bool,
-    /// Upload size under this client's planned compression.
+    /// Upload size under this client's planned compression (the
+    /// cross-facility report size in hierarchy mode).
     up_bytes: u64,
+    /// Member updates folded into this arrival (1 flat; the site's
+    /// reporting-member count in hierarchy mode) — per-site telemetry.
+    member_updates: u64,
     /// The locally-trained update (`with_training` only) — computed at
     /// dispatch against the then-current model, exactly what a real
     /// client would have produced from that broadcast.
@@ -568,6 +738,11 @@ fn run_sim_async(
     // one scratch + shard pool for the whole run, like the real loop
     let scratch = Arc::new(ScratchPool::new());
     let ingest = sim_ingest_pool(cfg, params.len());
+    // two-tier plane: dispatch granularity becomes the site — one
+    // batched site round per dispatch, one pre-folded report per arrival
+    let sites = sim_site_map(cfg)?;
+    let site_up_bytes = expected_wire_bytes(params.len(), &cfg.compression);
+    let site_counters = sites.as_ref().map(|m| sim_site_counters(m.n_sites()));
     let mut rng = Rng::new(cfg.seed ^ 0x51312);
     let mut clock = VirtualClock::new();
     let mut queue: EventQueue<AsyncArrival> = EventQueue::new();
@@ -654,6 +829,106 @@ fn run_sim_async(
                 base_version: commit,
                 reports: action.reports_update(),
                 up_bytes,
+                member_updates: 1,
+                input,
+            },
+        );
+        Ok(())
+    };
+
+    // one site dispatch (hierarchy mode): run the whole site's member
+    // round against the current model — per-member fault/jitter/train
+    // draws exactly like flat dispatches — then queue ONE arrival at
+    // the site's straggler finish time plus the representative's
+    // cross-facility hop, carrying the pre-folded site report
+    #[allow(clippy::too_many_arguments)]
+    let dispatch_site = |map: &SiteMap,
+                         site: usize,
+                         now_s: f64,
+                         commit: u32,
+                         params: &[f32],
+                         plans: &BTreeMap<u32, DispatchPlan>,
+                         dispatch_seq: &mut u64,
+                         jitter_rng: &mut Rng,
+                         queue: &mut EventQueue<AsyncArrival>,
+                         bytes_down_total: &mut u64|
+     -> Result<()> {
+        let mut site_finish = now_s;
+        let mut member_inputs: Vec<AggInput> = Vec::new();
+        let mut member_updates = 0u64;
+        for &c in map.members(site) {
+            let node = cluster
+                .node(c)
+                .ok_or_else(|| anyhow::anyhow!("unknown client {c}"))?;
+            let seq = *dispatch_seq;
+            *dispatch_seq += 1;
+            let action = injector.action(seq as u32, c, node.sku.preempt_per_hour > 0.0);
+            let p = plans.get(&c).copied().unwrap_or(defaults);
+            let t_down = node.transfer_time_s(down_bytes);
+            let steps = steps_per_epoch * p.local_epochs as usize;
+            let work_s = steps as f64 * timing.ref_step_s;
+            let up_bytes = expected_wire_bytes(params.len(), &p.compression);
+            let mut t_compute = node.compute_time_s(work_s, jitter_rng);
+            let member_finish = match action {
+                FaultAction::Straggle { factor } => {
+                    t_compute *= factor;
+                    now_s + t_down + t_compute + node.transfer_time_s(up_bytes)
+                }
+                FaultAction::Preempt { progress } => now_s + t_down + t_compute * progress,
+                _ => now_s + t_down + t_compute + node.transfer_time_s(up_bytes),
+            };
+            site_finish = site_finish.max(member_finish);
+            if action.reports_update() {
+                member_updates += 1;
+                if let (Some(ds), Some(rt)) = (&dataset, &runtime) {
+                    let shard = &ds.clients[c as usize];
+                    let out = crate::client::train_local(
+                        rt,
+                        shard,
+                        params,
+                        p.local_epochs as usize,
+                        cfg.train.lr,
+                        strategy.mu(),
+                        cfg.seed ^ ((seq << 20) | c as u64),
+                        1.0,
+                    )?;
+                    member_inputs.push(AggInput {
+                        client: c,
+                        delta: out.delta,
+                        n_samples: out.n_samples,
+                        train_loss: out.train_loss,
+                        update_var: out.update_var,
+                    });
+                }
+            }
+        }
+        // one cross-facility broadcast down, one report hop up
+        *bytes_down_total += down_bytes;
+        let rep = map.representative(site).unwrap_or(0);
+        let reports = member_updates > 0;
+        if reports {
+            let hop = cluster
+                .node(rep)
+                .map_or(0.0, |n| n.transfer_time_s(site_up_bytes));
+            site_finish += hop;
+        }
+        let input = fold_site_report(
+            map,
+            site,
+            member_inputs,
+            params.len(),
+            &strategy,
+            &scratch,
+            &ingest,
+        )?;
+        queue.push(
+            site_finish,
+            AsyncArrival {
+                client: rep,
+                base_version: commit,
+                reports,
+                up_bytes: site_up_bytes,
+                member_updates,
                 input,
             },
         );
@@ -685,18 +960,41 @@ fn run_sim_async(
     // client for the whole run, exactly like the real async engine
     let plans = launch_plan.to_map();
     let selected: Vec<u32> = launch_plan.cohort().to_vec();
-    for (c, p) in launch_plan.iter() {
-        dispatch(
-            c,
-            0.0,
-            0,
-            &params,
-            p,
-            &mut dispatch_seq,
-            &mut jitter_rng,
-            &mut queue,
-            &mut bytes_down_total,
-        )?;
+    match &sites {
+        None => {
+            for (c, p) in launch_plan.iter() {
+                dispatch(
+                    c,
+                    0.0,
+                    0,
+                    &params,
+                    p,
+                    &mut dispatch_seq,
+                    &mut jitter_rng,
+                    &mut queue,
+                    &mut bytes_down_total,
+                )?;
+            }
+        }
+        Some(map) => {
+            // hierarchy: concurrency = sites; every site is launched as
+            // one in-flight batched round (members keep their planned
+            // per-client dispatch terms where the launch cohort set any)
+            for site in 0..map.n_sites() {
+                dispatch_site(
+                    map,
+                    site,
+                    0.0,
+                    0,
+                    &params,
+                    &plans,
+                    &mut dispatch_seq,
+                    &mut jitter_rng,
+                    &mut queue,
+                    &mut bytes_down_total,
+                )?;
+            }
+        }
     }
 
     let total_commits = cfg.train.rounds as u32;
@@ -733,6 +1031,14 @@ fn run_sim_async(
         clock.advance_to(t)?;
         if arr.reports {
             bytes_up_total += arr.up_bytes;
+            // hierarchy: each arrival closes one site round — the same
+            // boundary at which the live aggregator samples its metrics
+            if let (Some(map), Some(counters)) = (&sites, &site_counters) {
+                if let Some(c) = map.site_of(arr.client).and_then(|s| counters.get(s)) {
+                    c.updates.add(arr.member_updates);
+                    c.upstream_bytes.add(arr.up_bytes);
+                }
+            }
             // staleness: commits finished since this client's dispatch
             let s = commit - arr.base_version;
             if s > max_staleness {
@@ -808,7 +1114,8 @@ fn run_sim_async(
             // `deadline_misses` = the too-stale subset
             report.push(RoundMetrics {
                 round: commit,
-                selected: selected.len() as u32,
+                // hierarchy: the in-flight unit is the site
+                selected: sites.as_ref().map_or(selected.len(), SiteMap::n_sites) as u32,
                 reported: buffer_k as u32,
                 dropped: stale_drops + silent,
                 deadline_misses: stale_drops,
@@ -836,22 +1143,42 @@ fn run_sim_async(
                 }
             }
         }
-        // the slot is free again: hand the client the current model.
-        // Deliberately *after* the commit block, mirroring the real
-        // engine's pending-drain ordering — the arrival that fills the
-        // buffer is re-dispatched on the post-commit model
-        let p = plans.get(&arr.client).copied().unwrap_or(defaults);
-        dispatch(
-            arr.client,
-            t,
-            commit,
-            &params,
-            &p,
-            &mut dispatch_seq,
-            &mut jitter_rng,
-            &mut queue,
-            &mut bytes_down_total,
-        )?;
+        // the slot is free again: hand the client (or whole site) the
+        // current model. Deliberately *after* the commit block,
+        // mirroring the real engine's pending-drain ordering — the
+        // arrival that fills the buffer is re-dispatched on the
+        // post-commit model
+        match &sites {
+            None => {
+                let p = plans.get(&arr.client).copied().unwrap_or(defaults);
+                dispatch(
+                    arr.client,
+                    t,
+                    commit,
+                    &params,
+                    &p,
+                    &mut dispatch_seq,
+                    &mut jitter_rng,
+                    &mut queue,
+                    &mut bytes_down_total,
+                )?;
+            }
+            Some(map) => {
+                let site = map.site_of(arr.client).unwrap_or(0);
+                dispatch_site(
+                    map,
+                    site,
+                    t,
+                    commit,
+                    &params,
+                    &plans,
+                    &mut dispatch_seq,
+                    &mut jitter_rng,
+                    &mut queue,
+                    &mut bytes_down_total,
+                )?;
+            }
+        }
     }
     if let Some(t) = cfg.train.target_accuracy {
         report.target_accuracy_at = report.target_accuracy_at.or(report.rounds_to_accuracy(t));

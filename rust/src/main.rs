@@ -10,14 +10,14 @@
 
 use anyhow::{Context, Result};
 use fedhpc::client::{Worker, WorkerOptions};
-use fedhpc::cluster::Cluster;
+use fedhpc::cluster::{Cluster, SiteMap};
 use fedhpc::config::{self, ExperimentConfig, Preset};
 use fedhpc::data::FederatedDataset;
 use fedhpc::experiments;
 use fedhpc::faults::FaultInjector;
 use fedhpc::network::tcp::{TcpClient, TcpServer};
-use fedhpc::network::{LinkShaper, Msg, TrafficLog};
-use fedhpc::orchestrator::{EvalHarness, NoHooks, Orchestrator};
+use fedhpc::network::{ClientProfile, LinkShaper, Msg, TrafficLog};
+use fedhpc::orchestrator::{Aggregator, EvalHarness, NoHooks, Orchestrator};
 use fedhpc::runtime::{Manifest, MockRuntime, ModelRuntime, PjrtRuntime};
 use fedhpc::telemetry::{ControlPlane, TelemetryServer};
 use fedhpc::util::argparse::Args;
@@ -108,6 +108,9 @@ fn load_config(p: &fedhpc::util::argparse::Parsed) -> Result<ExperimentConfig> {
     if let Some(pl) = p.get("planner") {
         cfg.selection.planner = Some(config::PlannerKind::parse(pl).context("--planner")?);
     }
+    if let Some(g) = p.get("grouping") {
+        cfg.hierarchy.grouping = config::GroupingPolicy::parse(g).context("--grouping")?;
+    }
     if let Some(addr) = p.get("telemetry-addr") {
         cfg.telemetry.addr = Some(addr.to_string());
     }
@@ -172,6 +175,11 @@ fn train_args() -> Args {
             None,
             "cohort planner: random | adaptive[:explore[:exclude]] | tiered[:n] | \
              deadline[:ms]",
+        )
+        .opt(
+            "grouping",
+            None,
+            "aggregation tree grouping: flat | site[:n] | zone",
         )
         .opt("out", Some("results"), "output directory for reports")
         .opt(
@@ -271,6 +279,21 @@ fn cmd_sim(rest: &[String]) -> Result<()> {
 fn cmd_serve(rest: &[String]) -> Result<()> {
     let p = Args::new()
         .opt("bind", Some("127.0.0.1:7070"), "listen address")
+        .opt(
+            "role",
+            Some("server"),
+            "node role in the aggregation tree: server (root) | aggregator (mid-tier)",
+        )
+        .opt(
+            "upstream",
+            None,
+            "root orchestrator address (required with --role aggregator)",
+        )
+        .opt(
+            "site",
+            None,
+            "site index this aggregator serves (required with --role aggregator)",
+        )
         .opt("preset", Some("quickstart"), "preset: quickstart | paper")
         .opt("config", None, "JSON config file")
         .opt("rounds", None, "override training rounds")
@@ -281,6 +304,11 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .opt("server-opt", None, "server optimizer by registry name")
         .opt("round-mode", None, "round engine by registry name")
         .opt("planner", None, "cohort planner by registry name")
+        .opt(
+            "grouping",
+            None,
+            "aggregation tree grouping: flat | site[:n] | zone",
+        )
         .opt("out", Some("results"), "output directory")
         .opt("clients", None, "expected worker count (default: cluster size)")
         .opt(
@@ -305,22 +333,51 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         )
         .flag("mock", "use the mock runtime")
         .parse(rest)?;
-    let cfg = load_config(&p)?;
+    let mut cfg = load_config(&p)?;
+    match p.get("role").unwrap_or("server") {
+        "server" => {}
+        "aggregator" => return serve_aggregator(&p, &cfg),
+        other => anyhow::bail!("--role must be 'server' or 'aggregator', got '{other}'"),
+    }
+    // Root of a multi-process aggregator tree: the registered "clients"
+    // are the site aggregators, one per site — the same transform the
+    // in-process launcher applies (select every site, no partial-k,
+    // doubled round budget so site rounds fit inside root rounds).
+    let hier_sites = if cfg.hierarchy.enabled() {
+        let n = SiteMap::build(&cfg.cluster, cfg.hierarchy.grouping)?.n_sites();
+        cfg.selection.clients_per_round = n;
+        cfg.straggler.partial_k = None;
+        cfg.straggler.deadline_ms = cfg.straggler.deadline_ms.map(|d| d.saturating_mul(2));
+        Some(n)
+    } else {
+        None
+    };
     let expected = match p.get("clients") {
         Some(c) => c.parse().context("--clients")?,
-        None => cfg.cluster.total_nodes(),
+        None => hier_sites.unwrap_or_else(|| cfg.cluster.total_nodes()),
     };
     let traffic = Arc::new(TrafficLog::new());
     let server = TcpServer::bind_with(p.get("bind").unwrap(), &cfg.transport, traffic.clone())?;
     println!(
-        "orchestrator listening on {} (max {} connections, compression {})",
+        "orchestrator listening on {} (max {} connections, compression {}{})",
         server.local_addr,
         cfg.transport.max_connections,
-        if cfg.transport.compression { "on" } else { "off" }
+        if cfg.transport.compression { "on" } else { "off" },
+        match hier_sites {
+            Some(n) => format!(", tree root over {n} sites"),
+            None => String::new(),
+        }
     );
 
-    // centralized eval set + initial params
-    let dataset = FederatedDataset::build(&cfg.data, expected, cfg.seed)?;
+    // centralized eval set + initial params; in tree mode the model
+    // shapes must match what the workers (who shard over the full
+    // cluster) derive, not the aggregator count
+    let data_clients = if hier_sites.is_some() {
+        cfg.cluster.total_nodes()
+    } else {
+        expected
+    };
+    let dataset = FederatedDataset::build(&cfg.data, data_clients, cfg.seed)?;
     let runtime: Box<dyn ModelRuntime> = if cfg.mock_runtime {
         Box::new(MockRuntime::new(dataset.eval.x_len, dataset.n_classes))
     } else {
@@ -338,6 +395,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .initial_params(initial)
         .eval(eval);
     if let Some((_, cp)) = &telemetry {
+        cp.set_identity("server", None);
         builder = builder.control(cp.clone());
     }
     let mut orch = builder.build()?;
@@ -353,6 +411,94 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             .final_accuracy()
             .map_or("-".into(), |a| format!("{:.3}", a))
     );
+    Ok(())
+}
+
+/// `serve --role aggregator`: a mid-tier node that serves one site's
+/// workers over its own TCP listener and reports the folded site delta
+/// upstream to the root, speaking the ordinary client protocol.
+fn serve_aggregator(p: &fedhpc::util::argparse::Parsed, cfg: &ExperimentConfig) -> Result<()> {
+    let upstream_addr = p
+        .get("upstream")
+        .context("--role aggregator requires --upstream <addr>")?;
+    let site: usize = p
+        .get("site")
+        .context("--role aggregator requires --site <idx>")?
+        .parse()
+        .context("--site")?;
+    let map = SiteMap::build(&cfg.cluster, cfg.hierarchy.grouping)?;
+    if site >= map.n_sites() {
+        anyhow::bail!(
+            "--site {site} out of range: the {} grouping yields {} sites",
+            cfg.hierarchy.grouping.name(),
+            map.n_sites()
+        );
+    }
+    let rep = map
+        .representative(site)
+        .with_context(|| format!("site {site} has no members"))?;
+    let expected = match p.get("clients") {
+        Some(c) => c.parse().context("--clients")?,
+        None => map.members(site).len(),
+    };
+
+    // The aggregator never trains, but it re-encodes the folded site
+    // delta, so it needs the model's parameter count — derived the same
+    // way the root derives it (same seed ⇒ same shapes).
+    let dataset = FederatedDataset::build(&cfg.data, cfg.cluster.total_nodes(), cfg.seed)?;
+    let runtime: Box<dyn ModelRuntime> = if cfg.mock_runtime {
+        Box::new(MockRuntime::new(dataset.eval.x_len, dataset.n_classes))
+    } else {
+        Box::new(PjrtRuntime::load(&cfg.artifacts_dir, &cfg.data.dataset)?)
+    };
+    let n_params = runtime.init(cfg.seed as u32)?.len();
+
+    let traffic = Arc::new(TrafficLog::new());
+    let downstream = TcpServer::bind_with(p.get("bind").unwrap(), &cfg.transport, traffic)?;
+    println!(
+        "site {site} aggregator listening on {} ({expected} workers expected)",
+        downstream.local_addr
+    );
+
+    // Connect upstream as the site's representative. The profile here
+    // is a placeholder for the connect handshake; `Aggregator::run`
+    // re-registers with the true site-aggregate profile once the
+    // members have joined.
+    let cluster = Cluster::build(&cfg.cluster, cfg.seed)?;
+    let node = cluster
+        .node(rep)
+        .with_context(|| format!("representative {rep} exceeds cluster size"))?;
+    let upstream = TcpClient::connect_with(
+        upstream_addr,
+        &Msg::Register {
+            client: rep,
+            profile: ClientProfile {
+                speed_factor: 1.0,
+                mem_gb: 1.0,
+                link_bw: 1.0e9,
+                n_samples: 1,
+                bench_step_ms: 1.0,
+            },
+        },
+        LinkShaper::from_class(node.link()),
+        Arc::new(TrafficLog::new()),
+        cfg.transport.compression,
+    )?;
+    println!("site {site} aggregator connected upstream to {upstream_addr} as client {rep}");
+
+    let telemetry = start_telemetry(cfg)?;
+    if let Some((_, cp)) = &telemetry {
+        cp.set_identity("aggregator", Some(upstream_addr));
+        cp.set_status(format!("state=site-aggregator site={site}"));
+        cp.mark_ready();
+    }
+    let mut agg = Aggregator::new(cfg.clone(), site, n_params, downstream, upstream);
+    let rounds = agg.run(expected, Duration::from_secs(120))?;
+    if let Some((tsrv, control)) = telemetry {
+        control.set_status("state=done".to_string());
+        tsrv.shutdown();
+    }
+    println!("site {site} aggregator done after {rounds} rounds");
     Ok(())
 }
 
@@ -446,6 +592,10 @@ fn cmd_list() -> Result<()> {
          staleness fns: {})",
         fedhpc::config::RoundMode::KINDS.join(", "),
         fedhpc::config::StalenessFn::KINDS.join(", ")
+    );
+    println!(
+        "hierarchy groupings: {} (site[:n]; serve --role aggregator --site <idx>)",
+        fedhpc::config::GroupingPolicy::KINDS.join(", ")
     );
     println!("\nSKUs:");
     for sku in fedhpc::cluster::catalog() {

@@ -160,6 +160,13 @@ impl StreamingAggregator {
         self.raw.len()
     }
 
+    /// Summed raw (unnormalized) weight `Σ raw_c` folded so far — the
+    /// quantity a site aggregator must carry upstream so the root's
+    /// fold weighs the site exactly as much as its members.
+    pub fn total_weight(&self) -> f64 {
+        self.total_weight
+    }
+
     fn check_weight(&self, w: f64, client: NodeId) -> Result<()> {
         check_weight(w, client)
     }
@@ -360,6 +367,12 @@ impl ShardedAggregator {
     /// Updates accepted (enqueued) so far.
     pub fn n_updates(&self) -> usize {
         self.raw.len()
+    }
+
+    /// Summed raw (unnormalized) weight `Σ raw_c` folded so far (see
+    /// [`StreamingAggregator::total_weight`]).
+    pub fn total_weight(&self) -> f64 {
+        self.total_weight
     }
 
     /// Fold one arriving update with raw weight `w`: validation and

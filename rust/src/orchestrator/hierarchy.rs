@@ -1,0 +1,843 @@
+//! Hierarchical aggregation plane: the tree-of-aggregators subsystem
+//! (paper §3.2 scaled out; cf. OmniFed's edge-to-HPC topologies and
+//! cross-facility FL on multiple supercomputers).
+//!
+//! Every update in a flat deployment funnels into one orchestrator —
+//! O(clients) cross-facility traffic per round. This module adds a
+//! middle tier: a site [`Aggregator`] runs the same fold machinery as
+//! the root against its own site's clients over the ordinary reactor
+//! transport, then re-encodes its *pre-folded* delta and reports it
+//! upstream **as if it were a client**. The wire protocol is unchanged
+//! ([`Msg::Update`] carries the site report); the root needs zero
+//! special-casing because the summed site weight rides in
+//! `stats.n_samples` and `AggStrategy::scalar_weight` already folds
+//! weight-correctly. Cross-facility traffic drops to O(sites).
+//!
+//! # [`FoldCore`]
+//!
+//! The role-agnostic heart of both the root engines and the site
+//! aggregator: "begin a round's aggregator, fold encoded updates into
+//! it, finalize". It is exactly the select→broadcast→collect→finalize
+//! fold path factored out of `Orchestrator::run_round` / `run_async` —
+//! the fused O(nnz) ingest ([`crate::compress::DecodedView`]), the
+//! sharded ingest pool handoff ([`crate::compress::SharedDecoded`])
+//! and the [`RoundAggregator`] mode selection are reused as-is, so a
+//! site round is bit-compatible with a root round by construction.
+//!
+//! # Determinism contract
+//!
+//! Fold-then-normalize is associative across sites when weights are
+//! carried exactly: the root folds `W_site · Δ_site` where
+//! `Δ_site = (Σ_c raw_c·Δ_c)/W_site`, which recovers the flat sum
+//! `Σ_c raw_c·Δ_c` whenever the division and the f32 narrowing of the
+//! site mean are exact (dyadic update values and power-of-two integral
+//! weights — pinned by property test in `rust/tests/hierarchy.rs`);
+//! for arbitrary inputs the two-tier result differs from flat by ≤1 ulp
+//! per coordinate. Buffered (order-statistic) strategies do not
+//! compose across sites at all and are refused by config validation.
+//! The summed weight is shipped through `stats.n_samples` (a `u64`),
+//! which is exact for the sample-count weight schemes; fractional
+//! schemes round to the nearest integer at the site boundary.
+
+use super::aggregate::{default_ingest_shards, SharedInput, ViewInput};
+use super::registry::ClientRegistry;
+use super::server::mask_seed;
+use super::strategy::{registry as strategy_registry, AggStrategy, RoundAggregator};
+use crate::cluster::NodeId;
+use crate::compress::{compress, decompress_owned, expected_wire_bytes, DecodedView, Encoded,
+                      SharedDecoded};
+use crate::config::{CompressionConfig, ExperimentConfig};
+use crate::network::{pre_encode_dense, ClientProfile, ClientTransport, Msg, ServerTransport,
+                     UpdateStats};
+use crate::telemetry::{self, Counter};
+use crate::util::parallel::{resolve_ingest_threads, ShardPool};
+use crate::util::scratch::ScratchPool;
+use anyhow::{bail, Result};
+use std::collections::BTreeSet;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Wall-clock reads, funneled through one site: a live aggregator's
+/// deadlines and fold timings are inherently wall-clock (the sim
+/// engines never construct an [`Aggregator`], so virtual time is not
+/// at stake here).
+fn now() -> Instant {
+    // lint:allow(determinism) live site deadlines / fold timing are wall-clock by nature
+    Instant::now()
+}
+
+/// The role-agnostic fold/commit core shared by the root orchestrator
+/// engines and the site [`Aggregator`]: everything a round needs to
+/// turn encoded updates into a finalized aggregate, minus any role
+/// policy (selection, deadlines, model stepping).
+///
+/// Cheap to construct (three `Arc` clones); the orchestrator builds
+/// one per use so a live `set-strategy` control swap is always
+/// reflected.
+pub struct FoldCore {
+    strategy: Arc<dyn AggStrategy>,
+    scratch: Arc<ScratchPool>,
+    ingest: Option<Arc<ShardPool>>,
+    n_params: usize,
+}
+
+impl FoldCore {
+    pub fn new(
+        strategy: Arc<dyn AggStrategy>,
+        n_params: usize,
+        scratch: Arc<ScratchPool>,
+        ingest: Option<Arc<ShardPool>>,
+    ) -> Self {
+        FoldCore {
+            strategy,
+            scratch,
+            ingest,
+            n_params,
+        }
+    }
+
+    /// Assemble a core from a config alone (the site-aggregator path:
+    /// strategy from the registry name, fresh scratch pool, ingest
+    /// pool per `cfg.ingest_threads` exactly like the root builder).
+    pub fn from_config(cfg: &ExperimentConfig, n_params: usize) -> Self {
+        let threads = resolve_ingest_threads(cfg.ingest_threads);
+        let ingest = if threads > 1 {
+            Some(Arc::new(ShardPool::new(
+                threads,
+                default_ingest_shards(n_params),
+            )))
+        } else {
+            None
+        };
+        FoldCore::new(
+            strategy_registry::strategy_from_config(&cfg.aggregation),
+            n_params,
+            Arc::new(ScratchPool::new()),
+            ingest,
+        )
+    }
+
+    /// Model size this core folds.
+    pub fn n_params(&self) -> usize {
+        self.n_params
+    }
+
+    /// The strategy updates fold under.
+    pub fn strategy(&self) -> &dyn AggStrategy {
+        self.strategy.as_ref()
+    }
+
+    /// Begin one round/commit window: a fresh [`RoundAggregator`] in
+    /// whichever mode the strategy + ingest pool select (sharded /
+    /// streaming / buffered) — the exact constructor call the engines
+    /// used inline before this refactor.
+    pub fn begin(&self) -> RoundAggregator {
+        RoundAggregator::with_ingest(
+            self.strategy.clone(),
+            self.n_params,
+            self.scratch.clone(),
+            self.ingest.clone(),
+        )
+    }
+
+    /// Fold one arriving encoded update into `agg` — the single fused
+    /// ingest dispatch both engines and the site aggregator share.
+    /// `scale` is the update's staleness discount (1.0 in sync
+    /// rounds). A sharded round takes ownership of the decode so shard
+    /// workers fold disjoint spans concurrently while the caller
+    /// returns to the socket; otherwise the update folds straight from
+    /// its [`DecodedView`] (O(nnz), no dense materialization). A bad
+    /// update (undecodable, or refused by the strategy) returns `Err`
+    /// and must skip the client, never abort the round.
+    pub fn fold_encoded(
+        &self,
+        agg: &mut RoundAggregator,
+        client: NodeId,
+        delta: Encoded,
+        stats: &UpdateStats,
+        scale: f64,
+    ) -> Result<()> {
+        if agg.ingest_sharded() {
+            SharedDecoded::new(Arc::new(delta), self.n_params).and_then(|payload| {
+                agg.fold_shared_scaled(
+                    &SharedInput {
+                        client,
+                        payload: Arc::new(payload),
+                        n_samples: stats.n_samples,
+                        train_loss: stats.train_loss,
+                        update_var: stats.update_var,
+                    },
+                    scale,
+                )
+            })
+        } else {
+            DecodedView::of(&delta, self.n_params).and_then(|view| {
+                agg.fold_view_scaled(
+                    &ViewInput {
+                        client,
+                        view: &view,
+                        n_samples: stats.n_samples,
+                        train_loss: stats.train_loss,
+                        update_var: stats.update_var,
+                    },
+                    scale,
+                )
+            })
+        }
+    }
+}
+
+/// Per-site telemetry, resolved once (commit-boundary sampling — the
+/// per-update path never touches the registry mutex).
+struct SiteMetrics {
+    updates: Arc<Counter>,
+    fold_ns: Arc<Counter>,
+    upstream_bytes: Arc<Counter>,
+}
+
+impl SiteMetrics {
+    fn new(site: usize) -> Self {
+        use crate::telemetry::names;
+        let g = telemetry::global();
+        let s = site.to_string();
+        SiteMetrics {
+            updates: g.counter_with(
+                names::SITE_UPDATES_TOTAL,
+                "Member updates folded by a site aggregator, by site.",
+                "site",
+                &s,
+            ),
+            fold_ns: g.counter_with(
+                names::SITE_FOLD_NS_TOTAL,
+                "Nanoseconds a site aggregator spent folding, by site.",
+                "site",
+                &s,
+            ),
+            upstream_bytes: g.counter_with(
+                names::UPSTREAM_REPORT_BYTES_TOTAL,
+                "Encoded bytes of pre-folded deltas reported upstream, by site.",
+                "site",
+                &s,
+            ),
+        }
+    }
+}
+
+/// One upstream `RoundStart`, destructured (keeps the per-round entry
+/// point a single argument).
+struct SiteRound {
+    round: u32,
+    model_version: u32,
+    deadline_ms: u64,
+    lr: f32,
+    mu: f32,
+    local_epochs: u32,
+    params: Encoded,
+    mask_seed: u64,
+    compression: CompressionConfig,
+}
+
+/// A mid-tier site aggregator: a server toward its site's clients, a
+/// client toward the root. Its event loop mirrors
+/// [`crate::client::Worker::run`] — register upstream, then answer
+/// each `RoundStart` — but "local training" is a whole site round run
+/// through the same [`FoldCore`] the root uses.
+///
+/// Crash behaviour is the graceful-degradation contract: if the
+/// aggregator dies (or its site produces zero updates), the root
+/// simply counts one missing reporter — the round still commits from
+/// the other sites, exactly like any slow flat client.
+pub struct Aggregator<D: ServerTransport, U: ClientTransport> {
+    downstream: D,
+    upstream: U,
+    core: FoldCore,
+    registry: ClientRegistry,
+    cfg: ExperimentConfig,
+    metrics: SiteMetrics,
+}
+
+impl<D: ServerTransport, U: ClientTransport> Aggregator<D, U> {
+    /// Build a site aggregator for site index `site` over a model of
+    /// `n_params` entries. `downstream` serves the site's clients;
+    /// `upstream` connects to the root (or a higher-tier aggregator —
+    /// the protocol is tier-agnostic).
+    pub fn new(
+        cfg: ExperimentConfig,
+        site: usize,
+        n_params: usize,
+        downstream: D,
+        upstream: U,
+    ) -> Self {
+        let core = FoldCore::from_config(&cfg, n_params);
+        Aggregator {
+            downstream,
+            upstream,
+            core,
+            registry: ClientRegistry::new(),
+            cfg,
+            metrics: SiteMetrics::new(site),
+        }
+    }
+
+    /// Members registered so far.
+    pub fn n_members(&self) -> usize {
+        self.registry.len()
+    }
+
+    /// Absorb member registrations until `expected` joined or
+    /// `timeout` passed (the site-side mirror of
+    /// `Orchestrator::wait_for_clients`).
+    pub fn wait_for_members(&mut self, expected: usize, timeout: Duration) -> Result<usize> {
+        let deadline = now() + timeout;
+        while self.registry.len() < expected {
+            let t = now();
+            if t >= deadline {
+                break;
+            }
+            let step = (deadline - t).min(Duration::from_millis(100));
+            if let Some((from, msg)) = self.downstream.recv_timeout(step)? {
+                self.handle_member_control(from, msg)?;
+            }
+        }
+        log::info!(
+            "aggregator: {} / {expected} members registered",
+            self.registry.len()
+        );
+        Ok(self.registry.len())
+    }
+
+    fn handle_member_control(&mut self, from: NodeId, msg: Msg) -> Result<()> {
+        match msg {
+            Msg::Register { client, profile } => {
+                if client != from {
+                    log::warn!("register id mismatch: envelope {from}, body {client}");
+                }
+                self.registry.register(client, profile);
+                self.downstream
+                    .send_to(client, &Msg::RegisterAck { client })?;
+            }
+            Msg::Heartbeat { .. } => {}
+            other => {
+                log::debug!("aggregator: ignoring {} outside round", other.name());
+            }
+        }
+        Ok(())
+    }
+
+    /// Register with the root as one client whose profile summarizes
+    /// the site: total samples (the weight mass it will report),
+    /// slowest member speed (the site finishes with its straggler) and
+    /// the narrowest member link.
+    fn register_upstream(&self) -> Result<()> {
+        let mut profile = ClientProfile {
+            speed_factor: f64::INFINITY,
+            mem_gb: f64::INFINITY,
+            link_bw: f64::INFINITY,
+            n_samples: 0,
+            bench_step_ms: 0.0,
+        };
+        for r in self.registry.records() {
+            profile.speed_factor = profile.speed_factor.min(r.profile.speed_factor);
+            profile.mem_gb = profile.mem_gb.min(r.profile.mem_gb);
+            profile.link_bw = profile.link_bw.min(r.profile.link_bw);
+            profile.n_samples += r.profile.n_samples;
+            profile.bench_step_ms = profile.bench_step_ms.max(r.profile.bench_step_ms);
+        }
+        if !profile.speed_factor.is_finite() {
+            bail!("aggregator: cannot register upstream with zero members");
+        }
+        self.upstream.send(&Msg::Register {
+            client: self.upstream.id(),
+            profile,
+        })
+    }
+
+    /// Drain pending member traffic (late registrations, heartbeats)
+    /// while idle between upstream rounds.
+    fn pump_downstream(&mut self) -> Result<()> {
+        while let Some((from, msg)) = self.downstream.recv_timeout(Duration::from_millis(1))? {
+            self.handle_member_control(from, msg)?;
+        }
+        Ok(())
+    }
+
+    /// Forward a root notification to every registered member (send
+    /// failures degrade to that member missing the notification).
+    fn forward_to_members(&self, msg: &Msg) {
+        for id in self.registry.ids() {
+            if let Err(e) = self.downstream.send_to(id, msg) {
+                log::debug!("aggregator: forward {} to {id} failed ({e})", msg.name());
+            }
+        }
+    }
+
+    /// Main loop: wait for `expected` members, register upstream, then
+    /// answer `RoundStart`s until `Shutdown`. Returns the number of
+    /// site rounds run.
+    pub fn run(&mut self, expected: usize, join_timeout: Duration) -> Result<u64> {
+        let got = self.wait_for_members(expected, join_timeout)?;
+        if got == 0 {
+            bail!("aggregator: no members registered");
+        }
+        self.register_upstream()?;
+        let mut rounds = 0u64;
+        loop {
+            let Some(msg) = self.upstream.recv_timeout(Duration::from_millis(250))? else {
+                self.pump_downstream()?;
+                continue;
+            };
+            match msg {
+                Msg::RoundStart {
+                    round,
+                    model_version,
+                    deadline_ms,
+                    lr,
+                    mu,
+                    local_epochs,
+                    params,
+                    mask_seed,
+                    compression,
+                } => {
+                    let site_round = SiteRound {
+                        round,
+                        model_version,
+                        deadline_ms,
+                        lr,
+                        mu,
+                        local_epochs,
+                        params,
+                        mask_seed,
+                        compression,
+                    };
+                    if let Some(report) = self.run_site_round(site_round)? {
+                        self.upstream.send(&report)?;
+                    }
+                    rounds += 1;
+                }
+                m @ (Msg::RoundEnd { .. } | Msg::Abort { .. }) => self.forward_to_members(&m),
+                Msg::Shutdown => {
+                    self.forward_to_members(&Msg::Shutdown);
+                    return Ok(rounds);
+                }
+                Msg::RegisterAck { .. } => {}
+                other => log::debug!("aggregator: unexpected {}", other.name()),
+            }
+        }
+    }
+
+    /// Run one site round: rebroadcast the model to every member,
+    /// collect their updates through the shared [`FoldCore`], and
+    /// package the pre-folded site delta as one upstream
+    /// [`Msg::Update`]. Returns `None` when no member reported — the
+    /// root then counts this site as one missing reporter and the
+    /// global round still commits (graceful degradation).
+    fn run_site_round(&mut self, sr: SiteRound) -> Result<Option<Msg>> {
+        let t_round = now();
+        // decode the broadcast exactly once, then share the re-encoded
+        // dense bytes across every member RoundStart (same single
+        // serialization discipline as the root's broadcast phase)
+        let dense = decompress_owned(sr.params, self.core.n_params())?;
+        let shared = Encoded::PreEncoded(pre_encode_dense(&dense));
+        drop(dense);
+        // the site must fold and report before the root's deadline:
+        // members get 3/4 of the handed-down budget. Clamped to
+        // [50ms, 24h] — a disabled root deadline arrives as u64::MAX,
+        // which must not overflow `Instant + Duration`
+        let site_deadline_ms = (sr.deadline_ms / 4).saturating_mul(3).clamp(50, 86_400_000);
+        let members = self.registry.ids();
+        let mut reached: Vec<NodeId> = Vec::with_capacity(members.len());
+        for &m in &members {
+            let msg = Msg::RoundStart {
+                round: sr.round,
+                model_version: sr.model_version,
+                deadline_ms: site_deadline_ms,
+                lr: sr.lr,
+                mu: sr.mu,
+                local_epochs: sr.local_epochs,
+                params: shared.clone(),
+                // the same (experiment, round, client) mask-seed
+                // formula the flat root uses, so a member behaves
+                // identically under either topology
+                mask_seed: mask_seed(self.cfg.seed, sr.round, m),
+                compression: sr.compression,
+            };
+            match self.downstream.send_to(m, &msg) {
+                Ok(()) => reached.push(m),
+                Err(e) => log::warn!(
+                    "site round {}: broadcast to {m} failed ({e}) — excluded",
+                    sr.round
+                ),
+            }
+        }
+        let mut agg = self.core.begin();
+        let mut fold_ns = 0u64;
+        let deadline = t_round + Duration::from_millis(site_deadline_ms);
+        let reached_set: BTreeSet<NodeId> = reached.iter().copied().collect();
+        let mut reported: BTreeSet<NodeId> = BTreeSet::new();
+        while reported.len() < reached.len() {
+            let t = now();
+            if t >= deadline {
+                break;
+            }
+            let step = (deadline - t).min(Duration::from_millis(50));
+            let Some((from, msg)) = self.downstream.recv_timeout(step)? else {
+                continue;
+            };
+            match msg {
+                Msg::Update {
+                    round: r,
+                    client,
+                    base_version: _,
+                    delta,
+                    stats,
+                } => {
+                    if r != sr.round
+                        || !reached_set.contains(&client)
+                        || reported.contains(&client)
+                    {
+                        continue;
+                    }
+                    let t_fold = now();
+                    match self.core.fold_encoded(&mut agg, client, delta, &stats, 1.0) {
+                        Ok(()) => {
+                            reported.insert(client);
+                            self.registry.report_success(
+                                client,
+                                sr.round,
+                                t_round.elapsed().as_secs_f64() * 1e3,
+                            );
+                        }
+                        Err(e) => {
+                            log::warn!("site round {}: bad update from {client}: {e}", sr.round);
+                            self.registry.report_failure(client, sr.round);
+                            reported.insert(client);
+                        }
+                    }
+                    fold_ns += t_fold.elapsed().as_nanos() as u64;
+                }
+                other => self.handle_member_control(from, other)?,
+            }
+        }
+        for &m in &members {
+            if !reported.contains(&m) {
+                self.registry.report_failure(m, sr.round);
+            }
+        }
+        let n_updates = agg.n_updates();
+        // commit-boundary telemetry sample (never per-update)
+        self.metrics.updates.add(n_updates as u64);
+        self.metrics.fold_ns.add(fold_ns);
+        if n_updates == 0 {
+            log::warn!(
+                "site round {}: zero member updates — reporting nothing upstream",
+                sr.round
+            );
+            return Ok(None);
+        }
+        let (site_delta, total_weight) = agg.finalize_delta()?;
+        let mean_f32: Vec<f32> = site_delta.delta.iter().map(|&d| d as f32).collect();
+        let delta = compress(&mean_f32, &sr.compression, sr.mask_seed);
+        self.metrics
+            .upstream_bytes
+            .add(expected_wire_bytes(mean_f32.len(), &sr.compression));
+        let stats = UpdateStats {
+            // the site's exact weight mass for sample-count schemes;
+            // fractional schemes round at this tier boundary (see the
+            // module docs' determinism contract)
+            n_samples: (total_weight.round() as u64).max(1),
+            train_loss: site_delta.mean_train_loss as f32,
+            steps: n_updates as u32,
+            compute_ms: t_round.elapsed().as_secs_f64() * 1e3,
+            update_var: 0.0,
+        };
+        Ok(Some(Msg::Update {
+            round: sr.round,
+            client: self.upstream.id(),
+            // protocol-v2 carriage: in async mode the root derives this
+            // site report's staleness from the base version of the
+            // model the site folded against
+            base_version: sr.model_version,
+            delta,
+            stats,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::registry::test_profile;
+    use super::super::strategy::SgdServer;
+    use super::*;
+    use crate::config::presets::quickstart;
+    use crate::network::inproc::InprocHub;
+    use crate::network::TrafficLog;
+    use crate::network::LinkShaper;
+
+    fn stats_for(n: u64) -> UpdateStats {
+        UpdateStats {
+            n_samples: n,
+            train_loss: 1.0,
+            steps: 1,
+            compute_ms: 1.0,
+            update_var: 0.0,
+        }
+    }
+
+    #[test]
+    fn fold_core_matches_inline_round_aggregator() {
+        let cfg = quickstart();
+        let core = FoldCore::from_config(&cfg, 4);
+        assert_eq!(core.n_params(), 4);
+        assert_eq!(core.strategy().name(), "fedavg");
+        let mut agg = core.begin();
+        core.fold_encoded(
+            &mut agg,
+            0,
+            Encoded::Dense(vec![1.0, 2.0, 3.0, 4.0]),
+            &stats_for(8),
+            1.0,
+        )
+        .unwrap();
+        core.fold_encoded(
+            &mut agg,
+            1,
+            Encoded::Dense(vec![0.0; 4]),
+            &stats_for(8),
+            1.0,
+        )
+        .unwrap();
+        assert_eq!(agg.n_updates(), 2);
+        let out = agg.finalize(&[0.0; 4], &mut SgdServer).unwrap();
+        assert_eq!(out.new_params, vec![0.5, 1.0, 1.5, 2.0]);
+    }
+
+    #[test]
+    fn fold_core_rejects_bad_updates_without_poisoning_round() {
+        let cfg = quickstart();
+        let core = FoldCore::from_config(&cfg, 4);
+        let mut agg = core.begin();
+        // wrong length: refused, aggregator untouched
+        assert!(core
+            .fold_encoded(&mut agg, 0, Encoded::Dense(vec![1.0]), &stats_for(1), 1.0)
+            .is_err());
+        assert_eq!(agg.n_updates(), 0);
+        core.fold_encoded(
+            &mut agg,
+            1,
+            Encoded::Dense(vec![1.0; 4]),
+            &stats_for(4),
+            1.0,
+        )
+        .unwrap();
+        assert_eq!(agg.n_updates(), 1);
+    }
+
+    #[test]
+    fn finalize_delta_carries_summed_weight() {
+        let cfg = quickstart();
+        let core = FoldCore::from_config(&cfg, 2);
+        let mut agg = core.begin();
+        core.fold_encoded(
+            &mut agg,
+            0,
+            Encoded::Dense(vec![1.0, 0.0]),
+            &stats_for(3),
+            1.0,
+        )
+        .unwrap();
+        core.fold_encoded(
+            &mut agg,
+            1,
+            Encoded::Dense(vec![0.0, 1.0]),
+            &stats_for(5),
+            1.0,
+        )
+        .unwrap();
+        let (delta, total) = agg.finalize_delta().unwrap();
+        assert_eq!(total, 8.0);
+        assert!((delta.delta[0] - 3.0 / 8.0).abs() < 1e-12);
+        assert!((delta.delta[1] - 5.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn finalize_delta_refuses_buffered_strategies() {
+        let core = FoldCore::new(
+            strategy_registry::strategy_by_name("coordinate_median").unwrap(),
+            2,
+            Arc::new(ScratchPool::new()),
+            None,
+        );
+        let mut agg = core.begin();
+        core.fold_encoded(
+            &mut agg,
+            0,
+            Encoded::Dense(vec![1.0, 1.0]),
+            &stats_for(1),
+            1.0,
+        )
+        .unwrap();
+        let err = agg.finalize_delta().unwrap_err();
+        assert!(format!("{err:#}").contains("cannot report"), "got {err:#}");
+    }
+
+    /// One full site round over inproc hubs: two hand-driven members
+    /// report fixed dyadic updates, and the aggregator's upstream
+    /// report must carry the exact site mean and summed weight.
+    #[test]
+    fn aggregator_reports_site_mean_and_weight_upstream() {
+        let root_traffic = Arc::new(TrafficLog::new());
+        let root_hub = InprocHub::new(root_traffic);
+        // the aggregator joins the root as client 0 (its site's
+        // representative id)
+        let up = root_hub.add_client(0, LinkShaper::unshaped());
+        let root = root_hub.server();
+
+        let site_traffic = Arc::new(TrafficLog::new());
+        let site_hub = InprocHub::new(site_traffic);
+        let m0 = site_hub.add_client(0, LinkShaper::unshaped());
+        let m1 = site_hub.add_client(1, LinkShaper::unshaped());
+        let down = site_hub.server();
+
+        let mut cfg = quickstart();
+        cfg.seed = 9;
+        let seed = cfg.seed;
+        let mut agg = Aggregator::new(cfg, 0, 2, down, up);
+        for c in [&m0, &m1] {
+            c.send(&Msg::Register {
+                client: c.id(),
+                profile: test_profile(1.0, 1e9),
+            })
+            .unwrap();
+        }
+        let handle = std::thread::spawn(move || agg.run(2, Duration::from_secs(5)).unwrap());
+
+        // members drain their acks
+        for c in [&m0, &m1] {
+            let ack = c.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+            assert!(matches!(ack, Msg::RegisterAck { .. }));
+        }
+        // the aggregator registers upstream with the summed site profile
+        let (from, reg) = root.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(from, 0);
+        match reg {
+            Msg::Register { client, profile } => {
+                assert_eq!(client, 0);
+                assert_eq!(profile.n_samples, 2 * test_profile(1.0, 1e9).n_samples);
+            }
+            other => panic!("expected Register, got {}", other.name()),
+        }
+        // root opens a round
+        root.send_to(
+            0,
+            &Msg::RoundStart {
+                round: 3,
+                model_version: 7,
+                deadline_ms: 4_000,
+                lr: 0.1,
+                mu: 0.0,
+                local_epochs: 1,
+                params: Encoded::Dense(vec![0.0, 0.0]),
+                mask_seed: mask_seed(seed, 3, 0),
+                compression: CompressionConfig::NONE,
+            },
+        )
+        .unwrap();
+        // members see the rebroadcast with per-member mask seeds and a
+        // shrunken deadline, then answer with dyadic updates
+        for (c, delta, n) in [(&m0, vec![1.0f32, 0.0], 1u64), (&m1, vec![0.0, 1.0], 3)] {
+            let rs = c.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+            match rs {
+                Msg::RoundStart {
+                    round,
+                    model_version,
+                    deadline_ms,
+                    mask_seed: ms,
+                    ..
+                } => {
+                    assert_eq!(round, 3);
+                    assert_eq!(model_version, 7);
+                    assert_eq!(deadline_ms, 3_000);
+                    assert_eq!(ms, mask_seed(seed, 3, c.id()));
+                }
+                other => panic!("expected RoundStart, got {}", other.name()),
+            }
+            c.send(&Msg::Update {
+                round: 3,
+                client: c.id(),
+                base_version: 7,
+                delta: Encoded::Dense(delta),
+                stats: stats_for(n),
+            })
+            .unwrap();
+        }
+        // the upstream report: site mean (1/4, 3/4), weight 4, base
+        // version echoed for async staleness
+        let (_, up_msg) = root.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        match up_msg {
+            Msg::Update {
+                round,
+                client,
+                base_version,
+                delta,
+                stats,
+            } => {
+                assert_eq!(round, 3);
+                assert_eq!(client, 0);
+                assert_eq!(base_version, 7);
+                assert_eq!(stats.n_samples, 4);
+                assert_eq!(stats.steps, 2);
+                let d = crate::compress::decompress(&delta, 2).unwrap();
+                assert_eq!(d, vec![0.25, 0.75]);
+            }
+            other => panic!("expected Update, got {}", other.name()),
+        }
+        root.send_to(0, &Msg::Shutdown).unwrap();
+        assert_eq!(handle.join().unwrap(), 1);
+        // members got the forwarded shutdown
+        for c in [&m0, &m1] {
+            let msg = c.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+            assert!(matches!(msg, Msg::Shutdown));
+        }
+    }
+
+    /// Zero member reports: the site round closes with no upstream
+    /// report (the root degrades it to a missing reporter).
+    #[test]
+    fn aggregator_reports_nothing_on_empty_site_round() {
+        let root_hub = InprocHub::new(Arc::new(TrafficLog::new()));
+        let up = root_hub.add_client(5, LinkShaper::unshaped());
+        let root = root_hub.server();
+        let site_hub = InprocHub::new(Arc::new(TrafficLog::new()));
+        let member = site_hub.add_client(6, LinkShaper::unshaped());
+        let down = site_hub.server();
+        let mut agg = Aggregator::new(quickstart(), 1, 2, down, up);
+        member
+            .send(&Msg::Register {
+                client: 6,
+                profile: test_profile(1.0, 1e9),
+            })
+            .unwrap();
+        let handle = std::thread::spawn(move || agg.run(1, Duration::from_secs(5)).unwrap());
+        root.recv_timeout(Duration::from_secs(5)).unwrap(); // Register
+        root.send_to(
+            5,
+            &Msg::RoundStart {
+                round: 0,
+                model_version: 0,
+                deadline_ms: 400,
+                lr: 0.1,
+                mu: 0.0,
+                local_epochs: 1,
+                params: Encoded::Dense(vec![0.0, 0.0]),
+                mask_seed: 1,
+                compression: CompressionConfig::NONE,
+            },
+        )
+        .unwrap();
+        // the member stays silent; no upstream Update may arrive
+        let got = root.recv_timeout(Duration::from_millis(900)).unwrap();
+        assert!(got.is_none(), "empty site sent {got:?}");
+        root.send_to(5, &Msg::Shutdown).unwrap();
+        assert_eq!(handle.join().unwrap(), 1);
+    }
+}

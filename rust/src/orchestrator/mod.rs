@@ -14,9 +14,13 @@
 //! * [`convergence`] — Algorithm 1 line 13.
 //! * [`server`] — the round loop over a [`crate::network::ServerTransport`],
 //!   assembled via [`OrchestratorBuilder`].
+//! * [`hierarchy`] — the tree-of-aggregators plane: the role-agnostic
+//!   [`FoldCore`] both engines fold through, and the mid-tier site
+//!   [`Aggregator`] that reports pre-folded deltas upstream.
 
 pub mod aggregate;
 mod convergence;
+pub mod hierarchy;
 pub mod planner;
 mod registry;
 mod server;
@@ -27,6 +31,7 @@ pub use aggregate::{
     ShardedAggregator, SharedInput, StreamingAggregator, ViewInput,
 };
 pub use convergence::ConvergenceTracker;
+pub use hierarchy::{Aggregator, FoldCore};
 pub use planner::{CohortPlanner, DispatchPlan, PlanContext, RoundPlan};
 pub use registry::{ClientRecord, ClientRegistry};
 pub use server::{

@@ -56,13 +56,14 @@
 //! simply skipped (their registry reliability drops, which feeds back
 //! into selection).
 
-use super::aggregate::{default_ingest_shards, SharedInput, ViewInput};
+use super::aggregate::default_ingest_shards;
 use super::convergence::ConvergenceTracker;
+use super::hierarchy::FoldCore;
 use super::planner::{self, CohortPlanner, DispatchPlan, PlanContext, RoundPlan};
 use super::registry::ClientRegistry;
 use super::strategy::{registry as strategy_registry, AggStrategy, RoundAggregator, ServerOpt};
 use crate::cluster::NodeId;
-use crate::compress::{DecodedView, Encoded, SharedDecoded};
+use crate::compress::Encoded;
 use crate::config::{ExperimentConfig, RoundMode, StalenessFn};
 use crate::data::{Batch, Shard};
 use crate::metrics::{staleness_summary, RoundMetrics, TrainingReport};
@@ -694,6 +695,7 @@ impl<T: ServerTransport> Orchestrator<T> {
         agg: &mut RoundAggregator,
         hooks: &mut dyn OrchestratorHooks,
     ) -> Result<CollectOutcome> {
+        let core = self.fold_core();
         let partial_k = self
             .cfg
             .straggler
@@ -732,36 +734,11 @@ impl<T: ServerTransport> Orchestrator<T> {
                     // a bad update (undecodable, or rejected by the
                     // strategy — e.g. a custom weight() returning
                     // NaN) skips this client, never aborts the round.
-                    // Fused ingest: the update folds straight from its
-                    // encoded form (O(nnz), no dense vector) — the
-                    // view validates everything decompress would. A
-                    // sharded round takes ownership instead, so shard
-                    // workers can fold disjoint spans concurrently
-                    // while this loop returns to the socket.
-                    let folded = if agg.ingest_sharded() {
-                        SharedDecoded::new(Arc::new(delta), self.params.len()).and_then(
-                            |payload| {
-                                agg.fold_shared(&SharedInput {
-                                    client,
-                                    payload: Arc::new(payload),
-                                    n_samples: stats.n_samples,
-                                    train_loss: stats.train_loss,
-                                    update_var: stats.update_var,
-                                })
-                            },
-                        )
-                    } else {
-                        DecodedView::of(&delta, self.params.len()).and_then(|view| {
-                            agg.fold_view(&ViewInput {
-                                client,
-                                view: &view,
-                                n_samples: stats.n_samples,
-                                train_loss: stats.train_loss,
-                                update_var: stats.update_var,
-                            })
-                        })
-                    };
-                    match folded {
+                    // The fused O(nnz) ingest dispatch lives in
+                    // [`FoldCore::fold_encoded`] (shared with the
+                    // async engine and the site aggregator); sync
+                    // rounds fold at scale 1.
+                    match core.fold_encoded(agg, client, delta, &stats, 1.0) {
                         Ok(()) => {
                             hooks.on_update(round, client, &stats);
                             // sync rounds fold only same-version updates
@@ -894,6 +871,18 @@ impl<T: ServerTransport> Orchestrator<T> {
         })
     }
 
+    /// The role-agnostic fold core this orchestrator's rounds run
+    /// through — three `Arc` clones, built per use so a live
+    /// `set-strategy` swap is always reflected in the next window.
+    fn fold_core(&self) -> FoldCore {
+        FoldCore::new(
+            self.strategy.clone(),
+            self.params.len(),
+            self.scratch.clone(),
+            self.ingest.clone(),
+        )
+    }
+
     /// Run one round `r`: broadcast → collect → finalize. Blocking;
     /// returns metrics + convergence info.
     pub fn run_round(
@@ -906,12 +895,7 @@ impl<T: ServerTransport> Orchestrator<T> {
         let plan = self.select_phase(round)?;
         hooks.on_round_start(round, plan.cohort());
         let reached = self.broadcast_phase(round, &plan);
-        let mut agg = RoundAggregator::with_ingest(
-            self.strategy.clone(),
-            self.params.len(),
-            self.scratch.clone(),
-            self.ingest.clone(),
-        );
+        let mut agg = self.fold_core().begin();
         let collect = self.collect_phase(
             round,
             t_round,
@@ -1078,12 +1062,8 @@ impl<T: ServerTransport> Orchestrator<T> {
         self.mark_ready();
 
         let mut commit = 0u32;
-        let mut agg = RoundAggregator::with_ingest(
-            self.strategy.clone(),
-            self.params.len(),
-            self.scratch.clone(),
-            self.ingest.clone(),
-        );
+        let mut core = self.fold_core();
+        let mut agg = core.begin();
         let mut t_commit = Instant::now();
         let mut stale_drops = 0u32;
         let mut bad_folds = 0u32;
@@ -1100,15 +1080,7 @@ impl<T: ServerTransport> Orchestrator<T> {
             // a commit may not wait forever: at the deadline it closes
             // with whatever arrived (possibly nothing — model unchanged)
             if now >= deadline || agg.n_updates() >= buffer_k {
-                let full = std::mem::replace(
-                    &mut agg,
-                    RoundAggregator::with_ingest(
-                        self.strategy.clone(),
-                        self.params.len(),
-                        self.scratch.clone(),
-                        self.ingest.clone(),
-                    ),
-                );
+                let full = std::mem::replace(&mut agg, core.begin());
                 let totals = self.traffic.totals();
                 let traffic_delta = (totals.0 - last_traffic.0, totals.1 - last_traffic.1);
                 last_traffic = totals;
@@ -1145,13 +1117,10 @@ impl<T: ServerTransport> Orchestrator<T> {
                 }
                 // a set-strategy at this boundary must govern the
                 // window that opens now; the replacement aggregator is
-                // still empty, so rebuilding it is free and safe
-                agg = RoundAggregator::with_ingest(
-                    self.strategy.clone(),
-                    self.params.len(),
-                    self.scratch.clone(),
-                    self.ingest.clone(),
-                );
+                // still empty, so rebuilding core + aggregator is free
+                // and safe
+                core = self.fold_core();
+                agg = core.begin();
                 // a long quiesce park must not expire the next window
                 // before it folds anything
                 t_commit = Instant::now();
@@ -1224,40 +1193,17 @@ impl<T: ServerTransport> Orchestrator<T> {
                             self.om.miss_for(speed).inc();
                             self.planner.report_failure(&mut self.registry, client, commit);
                         } else {
-                            // fused ingest, staleness-discounted: the
-                            // same O(nnz) path as the sync engine, with
-                            // scale = discount(s) instead of 1. Sharded
-                            // rounds hand ownership to the worker pool.
-                            let folded = if agg.ingest_sharded() {
-                                SharedDecoded::new(Arc::new(delta), self.params.len()).and_then(
-                                    |payload| {
-                                        agg.fold_shared_scaled(
-                                            &SharedInput {
-                                                client,
-                                                payload: Arc::new(payload),
-                                                n_samples: stats.n_samples,
-                                                train_loss: stats.train_loss,
-                                                update_var: stats.update_var,
-                                            },
-                                            staleness.discount(s),
-                                        )
-                                    },
-                                )
-                            } else {
-                                DecodedView::of(&delta, self.params.len()).and_then(|view| {
-                                    agg.fold_view_scaled(
-                                        &ViewInput {
-                                            client,
-                                            view: &view,
-                                            n_samples: stats.n_samples,
-                                            train_loss: stats.train_loss,
-                                            update_var: stats.update_var,
-                                        },
-                                        staleness.discount(s),
-                                    )
-                                })
-                            };
-                            match folded {
+                            // the same fused [`FoldCore::fold_encoded`]
+                            // path as the sync engine, with scale =
+                            // discount(s) instead of 1. Sharded rounds
+                            // hand ownership to the worker pool.
+                            match core.fold_encoded(
+                                &mut agg,
+                                client,
+                                delta,
+                                &stats,
+                                staleness.discount(s),
+                            ) {
                                 Ok(()) => {
                                     hooks.on_update(commit, client, &stats);
                                     fold_staleness.push(s);

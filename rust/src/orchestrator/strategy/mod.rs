@@ -550,6 +550,35 @@ impl RoundAggregator {
             mean_train_loss: agg.mean_train_loss,
         })
     }
+
+    /// Finalize the round *without* a server optimizer step, returning
+    /// the normalized aggregate Δ_agg together with the summed raw
+    /// weight `Σ raw_c` — the mid-tier exit used by a site aggregator,
+    /// which reports `(Δ_site, W_site)` upstream instead of stepping a
+    /// model. Carrying W_site makes fold-then-normalize associative
+    /// across the tree: the root folds `W_site · Δ_site`, which equals
+    /// `Σ_c raw_c·Δ_c` over the site's members exactly.
+    ///
+    /// Buffered (order-statistic) strategies have no summed weight that
+    /// composes this way, so they are rejected here — `validate`
+    /// refuses them up front when the hierarchy is enabled.
+    pub fn finalize_delta(self) -> Result<(AggDelta, f64)> {
+        match self.mode {
+            Mode::Streaming(core) => {
+                let total = core.total_weight();
+                Ok((core.finalize()?, total))
+            }
+            Mode::Sharded(core) => {
+                let total = core.total_weight();
+                Ok((core.finalize()?, total))
+            }
+            Mode::Buffered { .. } => bail!(
+                "strategy '{}' buffers whole rounds and cannot report a \
+                 pre-folded delta upstream",
+                self.strategy.name()
+            ),
+        }
+    }
 }
 
 /// Uniform per-client report weights for order-statistic strategies

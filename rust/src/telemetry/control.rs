@@ -142,6 +142,16 @@ pub struct ControlPlane {
     ready: AtomicBool,
     /// Last state line published by the orchestrator at a boundary.
     status: Mutex<String>,
+    /// Role + upstream of this node in the aggregation tree, set once
+    /// at startup. `None` (the default) means a flat root server, which
+    /// keeps the status line byte-identical to pre-hierarchy builds.
+    identity: Mutex<Option<NodeIdentity>>,
+}
+
+#[derive(Clone, Debug)]
+struct NodeIdentity {
+    role: String,
+    upstream: Option<String>,
 }
 
 impl ControlPlane {
@@ -150,6 +160,7 @@ impl ControlPlane {
             mailbox: Mutex::new(VecDeque::new()),
             ready: AtomicBool::new(false),
             status: Mutex::new("state=starting".to_string()),
+            identity: Mutex::new(None),
         }
     }
 
@@ -181,7 +192,37 @@ impl ControlPlane {
     }
 
     pub fn status_line(&self) -> String {
-        crate::util::lock_unpoisoned(&self.status).clone()
+        let mut line = crate::util::lock_unpoisoned(&self.status).clone();
+        if let Some(id) = crate::util::lock_unpoisoned(&self.identity).as_ref() {
+            line.push_str(" role=");
+            line.push_str(&id.role);
+            if let Some(up) = &id.upstream {
+                line.push_str(" upstream=");
+                line.push_str(up);
+            }
+        }
+        line
+    }
+
+    /// Declare this node's place in the aggregation tree. Called once
+    /// at startup by the launcher/CLI; `role` shows on `/status` and
+    /// `"aggregator"` additionally gates the mutating registry verbs
+    /// (`set-planner` / `set-strategy`), which only make sense on the
+    /// root where the cohort planner and strategy actually live.
+    pub fn set_identity(&self, role: &str, upstream: Option<&str>) {
+        *crate::util::lock_unpoisoned(&self.identity) = Some(NodeIdentity {
+            role: role.to_string(),
+            upstream: upstream.map(str::to_string),
+        });
+    }
+
+    /// True when [`ControlPlane::set_identity`] declared this node a
+    /// mid-tier aggregator (the HTTP layer answers `409` to
+    /// `set-planner` / `set-strategy` in that case).
+    pub fn is_aggregator(&self) -> bool {
+        crate::util::lock_unpoisoned(&self.identity)
+            .as_ref()
+            .is_some_and(|id| id.role == "aggregator")
     }
 }
 
@@ -249,6 +290,26 @@ mod tests {
         assert_eq!(cp.status_line(), "state=starting");
         cp.set_status("state=running round=3".to_string());
         assert_eq!(cp.status_line(), "state=running round=3");
+    }
+
+    #[test]
+    fn identity_extends_status_and_gates_aggregators() {
+        let cp = ControlPlane::new();
+        // default: no identity, no suffix, not an aggregator
+        assert!(!cp.is_aggregator());
+        assert_eq!(cp.status_line(), "state=starting");
+        // a root server advertises its role but stays mutable
+        cp.set_identity("server", None);
+        assert!(!cp.is_aggregator());
+        assert_eq!(cp.status_line(), "state=starting role=server");
+        // a mid-tier aggregator advertises role + upstream and is gated
+        cp.set_identity("aggregator", Some("10.0.0.1:7070"));
+        assert!(cp.is_aggregator());
+        cp.set_status("state=running round=2".to_string());
+        assert_eq!(
+            cp.status_line(),
+            "state=running round=2 role=aggregator upstream=10.0.0.1:7070"
+        );
     }
 
     #[test]

@@ -238,6 +238,21 @@ fn handle_control(body: &str, registry: &Registry, control: &ControlPlane) -> Re
         Ok(cmd) => cmd,
         Err(e) => return Response::text(400, "Bad Request", &format!("rejected: {e}\n")),
     };
+    // Mid-tier aggregators have no planner or strategy of their own —
+    // both live on the root — so the mutating registry verbs are
+    // refused with 409 rather than silently accepted and dropped.
+    if control.is_aggregator()
+        && matches!(cmd, ControlCmd::SetPlanner(_) | ControlCmd::SetStrategy(_))
+    {
+        return Response::text(
+            409,
+            "Conflict",
+            &format!(
+                "refused: {} is not valid on an aggregator-role node (issue it to the root)\n",
+                cmd.verb().name()
+            ),
+        );
+    }
     registry
         .counter_with(
             names::CONTROL_COMMANDS_TOTAL,
@@ -349,5 +364,27 @@ mod tests {
         let text = reg.render();
         assert!(text.contains("fedhpc_control_commands_total{verb=\"quiesce\"} 1"));
         assert!(text.contains("fedhpc_control_commands_total{verb=\"status\"} 1"));
+    }
+
+    #[test]
+    fn aggregator_role_refuses_registry_verbs_with_409() {
+        let reg = Registry::new();
+        let cp = ControlPlane::new();
+        cp.set_identity("aggregator", Some("127.0.0.1:7070"));
+        for verb in ["set-planner tiered:4", "set-strategy fedprox:0.1"] {
+            let r = route(&req("POST", "/control", verb), &reg, &cp);
+            assert_eq!(r.code, 409);
+            assert!(r.body.contains("aggregator-role"));
+            assert!(cp.drain_mailbox().is_empty());
+        }
+        // refused verbs are not counted as accepted
+        assert!(!reg.render().contains("verb=\"set-planner\""));
+        // lifecycle verbs still flow (an operator can drain a site)
+        let r = route(&req("POST", "/control", "quiesce"), &reg, &cp);
+        assert_eq!(r.code, 202);
+        assert_eq!(cp.drain_mailbox(), vec![ControlCmd::Quiesce]);
+        // /status carries the tree identity
+        let r = route(&req("GET", "/status", ""), &reg, &cp);
+        assert!(r.body.contains("role=aggregator upstream=127.0.0.1:7070"));
     }
 }

@@ -66,6 +66,13 @@ pub mod names {
     pub const COHORT_SIZE: &str = "fedhpc_cohort_size";
     /// Operator control verbs accepted, labelled by verb.
     pub const CONTROL_COMMANDS_TOTAL: &str = "fedhpc_control_commands_total";
+    /// Member updates folded by a site aggregator, labelled by site.
+    pub const SITE_UPDATES_TOTAL: &str = "fedhpc_site_updates_total";
+    /// Nanoseconds a site aggregator spent folding, labelled by site.
+    pub const SITE_FOLD_NS_TOTAL: &str = "fedhpc_site_fold_ns_total";
+    /// Encoded bytes of pre-folded deltas reported upstream, labelled
+    /// by site.
+    pub const UPSTREAM_REPORT_BYTES_TOTAL: &str = "fedhpc_upstream_report_bytes_total";
 }
 
 /// Round/commit latency buckets, seconds.

@@ -1,0 +1,365 @@
+//! Hierarchical aggregation plane acceptance (PR 10).
+//!
+//! * Two-tier FedAvg is **bit-identical** to flat aggregation on dyadic
+//!   inputs at a fixed per-site arrival order — the determinism
+//!   contract pinned in `orchestrator::hierarchy`'s module docs —
+//!   across several site splits, weight patterns and both ingest paths
+//!   (serial view fold and the sharded pool).
+//! * The two-tier virtual-time sim replays bit-identically run-twice,
+//!   for the sync engine AND the async_fedbuff engine, and moves fewer
+//!   cross-facility bytes than the equivalent flat run.
+//! * A crashed (silent) site aggregator degrades gracefully: the root
+//!   commits every round from the surviving site.
+
+use fedhpc::compress::{compress, Encoded};
+use fedhpc::config::presets::quickstart;
+use fedhpc::config::{
+    CompressionConfig, ExperimentConfig, GroupingPolicy, Partition, RoundMode, StalenessFn,
+};
+use fedhpc::data::FederatedDataset;
+use fedhpc::experiments::{run_sim, SimTiming};
+use fedhpc::network::inproc::InprocHub;
+use fedhpc::network::{
+    ClientProfile, ClientTransport, LinkShaper, Msg, TrafficLog, UpdateStats,
+};
+use fedhpc::orchestrator::{Aggregator, EvalHarness, FoldCore, NoHooks, Orchestrator};
+use fedhpc::runtime::{MockRuntime, ModelRuntime};
+use std::sync::Arc;
+use std::time::Duration;
+
+const N_PARAMS: usize = 512;
+
+/// Dyadic update values (integer multiples of 2⁻⁶): exactly
+/// representable in f32 and f64, so every fold/normalize/narrow step
+/// in the two-tier pipeline is exact.
+fn dyadic_delta(c: usize) -> Vec<f32> {
+    (0..N_PARAMS)
+        .map(|j| ((((c * 7 + j * 3) % 33) as i32) - 16) as f32 / 64.0)
+        .collect()
+}
+
+fn stats(n: u64) -> UpdateStats {
+    UpdateStats {
+        n_samples: n,
+        train_loss: 0.5,
+        steps: 1,
+        compute_ms: 1.0,
+        update_var: 0.0,
+    }
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|d| d.to_bits()).collect()
+}
+
+/// Property pin: folding per-site and re-folding the site means at the
+/// root reproduces the flat fold bit-for-bit, for dyadic updates and
+/// power-of-two site weight masses, at a fixed (site-major) arrival
+/// order — for several tree shapes and both ingest paths.
+#[test]
+fn two_tier_fedavg_is_bit_identical_to_flat_on_dyadic_inputs() {
+    // (tag, site sizes, per-client weights). Each site's weight mass
+    // sums to a power of two so the site-mean division is exact; the
+    // *global* total (24 / 30 / 50) is deliberately not one — both
+    // topologies divide the identical exact numerator by it.
+    let splits: &[(&str, &[usize], &[u64])] = &[
+        ("2x4", &[4, 4], &[1, 1, 2, 4, 2, 2, 4, 8]),
+        ("4x2", &[2, 2, 2, 2], &[4, 4, 2, 2, 1, 1, 8, 8]),
+        ("1x8", &[8], &[1, 1, 2, 4, 2, 2, 4, 8]),
+        ("mixed", &[2, 4, 2], &[8, 8, 1, 1, 2, 4, 16, 16]),
+    ];
+    for ingest_threads in [1usize, 0] {
+        let mut cfg = quickstart();
+        cfg.ingest_threads = ingest_threads;
+        let core = FoldCore::from_config(&cfg, N_PARAMS);
+        for (tag, sizes, weights) in splits {
+            let n_clients: usize = sizes.iter().sum();
+            assert_eq!(n_clients, weights.len(), "{tag}: bad fixture");
+
+            // flat baseline: every client folds straight into one root,
+            // in site-major order
+            let mut flat = core.begin();
+            for c in 0..n_clients {
+                core.fold_encoded(
+                    &mut flat,
+                    c as u32,
+                    Encoded::Dense(dyadic_delta(c)),
+                    &stats(weights[c]),
+                    1.0,
+                )
+                .unwrap();
+            }
+            let (flat_delta, flat_w) = flat.finalize_delta().unwrap();
+
+            // two-tier: per-site folds, each re-encoded exactly the way
+            // the site aggregator reports upstream (f64 mean → f32 →
+            // wire encoding → root fold weighted by the summed mass)
+            let mut root = core.begin();
+            let mut next = 0usize;
+            for (site, &size) in sizes.iter().enumerate() {
+                let members = next..next + size;
+                next += size;
+                let mut site_agg = core.begin();
+                for c in members {
+                    core.fold_encoded(
+                        &mut site_agg,
+                        c as u32,
+                        Encoded::Dense(dyadic_delta(c)),
+                        &stats(weights[c]),
+                        1.0,
+                    )
+                    .unwrap();
+                }
+                let (site_delta, site_w) = site_agg.finalize_delta().unwrap();
+                let mean_f32: Vec<f32> = site_delta.delta.iter().map(|&d| d as f32).collect();
+                let enc = compress(&mean_f32, &CompressionConfig::NONE, site as u64);
+                let report = UpdateStats {
+                    n_samples: (site_w.round() as u64).max(1),
+                    train_loss: site_delta.mean_train_loss as f32,
+                    steps: size as u32,
+                    compute_ms: 1.0,
+                    update_var: 0.0,
+                };
+                core.fold_encoded(&mut root, site as u32, enc, &report, 1.0)
+                    .unwrap();
+            }
+            let (tree_delta, tree_w) = root.finalize_delta().unwrap();
+
+            assert_eq!(
+                flat_w.to_bits(),
+                tree_w.to_bits(),
+                "{tag}/threads={ingest_threads}: weight mass diverged"
+            );
+            assert_eq!(
+                bits(&flat_delta.delta),
+                bits(&tree_delta.delta),
+                "{tag}/threads={ingest_threads}: two-tier delta is not bit-identical to flat"
+            );
+            assert_eq!(
+                flat_delta.mean_train_loss.to_bits(),
+                tree_delta.mean_train_loss.to_bits(),
+                "{tag}/threads={ingest_threads}: mean loss diverged"
+            );
+        }
+    }
+}
+
+/// A two-tier virtual-time scenario on the quickstart fleet: 8 clients
+/// under 2 site aggregators, stragglers injected, deadline armed.
+fn tree_sim_cfg(name: &str) -> ExperimentConfig {
+    let mut cfg = quickstart();
+    cfg.name = name.into();
+    cfg.mock_runtime = true;
+    cfg.train.rounds = 6;
+    cfg.train.local_epochs = 1;
+    cfg.data.samples_per_client = 64;
+    cfg.data.eval_samples = 128;
+    cfg.data.partition = Partition::Iid;
+    cfg.selection.clients_per_round = 8;
+    cfg.straggler.deadline_ms = Some(2_000);
+    cfg.faults.straggler_prob = 0.3;
+    cfg.faults.straggler_factor = 3.0;
+    cfg.hierarchy.grouping = GroupingPolicy::Site { sites: 2 };
+    cfg
+}
+
+/// Run-twice determinism for the two-tier **sync** sim, plus the
+/// cross-facility byte claim against the equivalent flat run.
+#[test]
+fn two_tier_sync_sim_replays_bit_identically_and_cuts_wire_bytes() {
+    let cfg = tree_sim_cfg("hierarchy_sync_det");
+    let a = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+    let b = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+    assert_eq!(a.details, b.details, "reporter sets diverged");
+    assert_eq!(a.model_hash, b.model_hash, "model hash diverged");
+    assert!(a.model_hash.is_some());
+    assert_eq!(
+        a.total_time_s.to_bits(),
+        b.total_time_s.to_bits(),
+        "virtual durations diverged"
+    );
+    // a different seed produces a different trajectory
+    let mut reseeded = cfg.clone();
+    reseeded.seed += 1;
+    let c = run_sim(&reseeded, &SimTiming::default(), true).unwrap();
+    assert_ne!(a.details, c.details, "seed had no effect");
+
+    // the tree crosses facilities with O(sites) traffic, flat with
+    // O(clients): per-round up/down bytes must both shrink
+    let mut flat_cfg = cfg.clone();
+    flat_cfg.name = "hierarchy_sync_flat".into();
+    flat_cfg.hierarchy.grouping = GroupingPolicy::Flat;
+    let flat = run_sim(&flat_cfg, &SimTiming::default(), true).unwrap();
+    let up = |r: &fedhpc::experiments::SimReport| -> u64 {
+        r.report.rounds.iter().map(|m| m.bytes_up).sum()
+    };
+    let down = |r: &fedhpc::experiments::SimReport| -> u64 {
+        r.report.rounds.iter().map(|m| m.bytes_down).sum()
+    };
+    assert!(
+        up(&a) < up(&flat),
+        "tree up {} should undercut flat up {}",
+        up(&a),
+        up(&flat)
+    );
+    assert!(
+        down(&a) < down(&flat),
+        "tree down {} should undercut flat down {}",
+        down(&a),
+        down(&flat)
+    );
+}
+
+/// Run-twice determinism for the two-tier **async_fedbuff** sim: site
+/// reports arrive as staleness-tagged updates and every commit closes
+/// on `buffer_k` site reports.
+#[test]
+fn two_tier_async_sim_replays_bit_identically() {
+    let mut cfg = tree_sim_cfg("hierarchy_async_det");
+    cfg.round_mode = RoundMode::BufferedAsync {
+        buffer_k: 2,
+        max_staleness: 50,
+        staleness: StalenessFn::Polynomial { alpha: 0.5 },
+    };
+    let a = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+    let b = run_sim(&cfg, &SimTiming::default(), true).unwrap();
+    assert_eq!(a.details, b.details, "reporter sets diverged");
+    assert_eq!(a.model_hash, b.model_hash, "model hash diverged");
+    assert_eq!(
+        a.total_time_s.to_bits(),
+        b.total_time_s.to_bits(),
+        "virtual durations diverged"
+    );
+    assert_eq!(a.report.rounds.len(), 6);
+    for r in &a.report.rounds {
+        assert!(
+            r.reported >= 1 && r.reported <= 2,
+            "commit {} closed on {} site reports",
+            r.round,
+            r.reported
+        );
+    }
+}
+
+fn member_profile() -> ClientProfile {
+    ClientProfile {
+        speed_factor: 1.0,
+        mem_gb: 16.0,
+        link_bw: 1e9,
+        n_samples: 64,
+        bench_step_ms: 10.0,
+    }
+}
+
+/// A hand-driven site member: registers, answers every `RoundStart`
+/// with a fixed dense update, exits on `Shutdown`. Bounded so a broken
+/// aggregator can never hang the test harness.
+fn run_member<T: ClientTransport>(c: T, n_params: usize) {
+    let _ = c.send(&Msg::Register {
+        client: c.id(),
+        profile: member_profile(),
+    });
+    for _ in 0..300 {
+        let msg = match c.recv_timeout(Duration::from_millis(100)) {
+            Ok(Some(m)) => m,
+            Ok(None) => continue,
+            Err(_) => return,
+        };
+        match msg {
+            Msg::RoundStart {
+                round,
+                model_version,
+                ..
+            } => {
+                let _ = c.send(&Msg::Update {
+                    round,
+                    client: c.id(),
+                    base_version: model_version,
+                    delta: Encoded::Dense(vec![0.01; n_params]),
+                    stats: stats(64),
+                });
+            }
+            Msg::Shutdown => return,
+            _ => {}
+        }
+    }
+}
+
+/// Graceful degradation: one live site aggregator (two members) plus
+/// one site whose aggregator registered and then crashed (goes silent
+/// forever). The root must still commit every round from the surviving
+/// site — a dead site is just one missing reporter.
+#[test]
+fn root_survives_a_crashed_site_aggregator() {
+    let mut cfg = quickstart();
+    cfg.mock_runtime = true;
+    cfg.train.rounds = 2;
+    cfg.train.local_epochs = 1;
+    cfg.data.samples_per_client = 64;
+    cfg.data.eval_samples = 128;
+    cfg.selection.clients_per_round = 2;
+    cfg.straggler.deadline_ms = Some(1_500);
+
+    // centralized eval + initial model, exactly as the launcher builds them
+    let dataset = FederatedDataset::build(&cfg.data, 8, cfg.seed).unwrap();
+    let eval_runtime: Box<dyn ModelRuntime> =
+        Box::new(MockRuntime::new(dataset.eval.x_len, dataset.n_classes));
+    let initial = eval_runtime.init(cfg.seed as u32).unwrap();
+    let n_params = initial.len();
+    let eval = EvalHarness {
+        runtime: eval_runtime,
+        shard: dataset.eval.clone(),
+    };
+
+    let traffic = Arc::new(TrafficLog::new());
+    let root_hub = InprocHub::new(traffic.clone());
+    let live_up = root_hub.add_client(0, LinkShaper::unshaped());
+    let dead_up = root_hub.add_client(4, LinkShaper::unshaped());
+
+    // site 0: a real aggregator over two hand-driven members
+    let site_hub = InprocHub::new(Arc::new(TrafficLog::new()));
+    let mut handles = Vec::new();
+    for m in [1u32, 2] {
+        let endpoint = site_hub.add_client(m, LinkShaper::unshaped());
+        handles.push(std::thread::spawn(move || run_member(endpoint, n_params)));
+    }
+    let mut agg = Aggregator::new(cfg.clone(), 0, n_params, site_hub.server(), live_up);
+    handles.push(std::thread::spawn(move || {
+        agg.run(2, Duration::from_secs(10)).unwrap();
+    }));
+
+    // site 1's aggregator "crashes" right after joining: it registers
+    // and never speaks again (the transport stays connected)
+    dead_up
+        .send(&Msg::Register {
+            client: 4,
+            profile: member_profile(),
+        })
+        .unwrap();
+
+    let mut orch = Orchestrator::builder(cfg)
+        .transport(root_hub.server())
+        .traffic(traffic)
+        .initial_params(initial)
+        .eval(eval)
+        .build()
+        .unwrap();
+    let report = orch
+        .run(Some((2, Duration::from_secs(10))), &mut NoHooks)
+        .unwrap();
+
+    assert_eq!(report.rounds.len(), 2);
+    for r in &report.rounds {
+        assert_eq!(r.selected, 2, "root must still select the dead site");
+        assert_eq!(
+            r.reported, 1,
+            "round {} should commit from the surviving site alone",
+            r.round
+        );
+    }
+    assert!(report.final_accuracy().is_some());
+    drop(dead_up);
+    for h in handles {
+        h.join().unwrap();
+    }
+}

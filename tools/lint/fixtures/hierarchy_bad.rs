@@ -1,0 +1,22 @@
+// Known-bad fixture for the hierarchical aggregation plane (PR 10).
+// orchestrator/hierarchy.rs sits in BOTH rule scopes: a site
+// aggregator folds wire-delivered member updates (panic_safety — a
+// hostile member must produce an Err, never a panic) and its fold
+// order underwrites the two-tier ≡ flat bit-identity claim
+// (determinism — no hash-order iteration, no wall-clock in the fold).
+// Every construct below is a shape the real module must never contain.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+fn fold_site_round(updates: &[Vec<f32>], weights: &HashMap<u64, f64>) -> Vec<f32> {
+    let started = Instant::now(); // wall-clock inside the fold
+    let first = updates[0].clone(); // indexing a wire-provided slice
+    let w = weights.get(&0).unwrap(); // unwrap on peer-controlled data
+    assert!(*w > 0.0); // assert! on a wire value
+    let _ = started;
+    let mut out = first;
+    let head = out.first_mut().expect("empty update"); // expect
+    *head *= *w as f32;
+    out
+}

@@ -22,6 +22,7 @@ PANIC_SCOPE = [
     "network/",
     "compress/",
     "orchestrator/server.rs",
+    "orchestrator/hierarchy.rs",
     "client/worker.rs",
     "util/logging.rs",
     "util/parallel.rs",
@@ -30,6 +31,7 @@ PANIC_SCOPE = [
 DET_SCOPE = [
     "orchestrator/planner.rs",
     "orchestrator/aggregate.rs",
+    "orchestrator/hierarchy.rs",
     "orchestrator/strategy/",
     "sim/",
     "experiments/simrunner.rs",
@@ -47,11 +49,13 @@ REGISTRY_GROUPS = [
     ("RoundMode", "round_mode"),
     ("StalenessFn", "staleness"),
     ("WeightScheme", "weight_scheme"),
+    ("GroupingPolicy", "hierarchy"),
 ]
 # Parse-only aliases: accepted by the grammar, intentionally not listed.
 REGISTRY_ALIASES = ["none"]
 MAIN_TOKENS = ["strategy_names()", "server_opt_names()", "planner_names()",
-               "RoundMode::KINDS", "StalenessFn::KINDS", "WeightScheme::KINDS"]
+               "RoundMode::KINDS", "StalenessFn::KINDS", "WeightScheme::KINDS",
+               "GroupingPolicy::KINDS"]
 
 
 def strip_source(src, keep_strings=False):
@@ -358,6 +362,11 @@ def in_scope(rel, scope):
 # them — mirrors the scope_matching test in tools/lint/src/lib.rs.
 assert in_scope("network/framing.rs", PANIC_SCOPE)
 assert in_scope("network/reactor.rs", PANIC_SCOPE)
+# The hierarchical aggregation plane joins BOTH scopes: a site
+# aggregator folds wire-delivered member updates, and its fold order
+# pins the two-tier bit-identity claim.
+assert in_scope("orchestrator/hierarchy.rs", PANIC_SCOPE)
+assert in_scope("orchestrator/hierarchy.rs", DET_SCOPE)
 
 
 def extract_strings(text):

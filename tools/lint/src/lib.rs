@@ -54,6 +54,7 @@ pub const PANIC_SCOPE: &[&str] = &[
     "network/",
     "compress/",
     "orchestrator/server.rs",
+    "orchestrator/hierarchy.rs",
     "client/worker.rs",
     "util/logging.rs",
     "util/parallel.rs",
@@ -64,6 +65,7 @@ pub const PANIC_SCOPE: &[&str] = &[
 pub const DET_SCOPE: &[&str] = &[
     "orchestrator/planner.rs",
     "orchestrator/aggregate.rs",
+    "orchestrator/hierarchy.rs",
     "orchestrator/strategy/",
     "sim/",
     "experiments/simrunner.rs",
@@ -105,6 +107,7 @@ pub const REGISTRY_GROUPS: &[(&str, &str)] = &[
     ("RoundMode", "round_mode"),
     ("StalenessFn", "staleness"),
     ("WeightScheme", "weight_scheme"),
+    ("GroupingPolicy", "hierarchy"),
 ];
 
 /// Parse-only aliases: accepted by the grammar, intentionally unlisted.
@@ -119,6 +122,7 @@ pub const MAIN_TOKENS: &[&str] = &[
     "RoundMode::KINDS",
     "StalenessFn::KINDS",
     "WeightScheme::KINDS",
+    "GroupingPolicy::KINDS",
 ];
 
 /// One diagnostic. `line` is 1-based; registry findings use line 0.
@@ -964,6 +968,12 @@ mod tests {
         // are legal, and fold ordering is pinned by the shard queues
         assert!(in_scope("util/parallel.rs", PANIC_SCOPE));
         assert!(!in_scope("util/parallel.rs", DET_SCOPE));
+        // the hierarchical aggregation plane (ISSUE 10) is in BOTH
+        // scopes: a site aggregator folds wire-delivered updates (a
+        // hostile member reaches it directly) and its fold order pins
+        // the two-tier bit-identity claim
+        assert!(in_scope("orchestrator/hierarchy.rs", PANIC_SCOPE));
+        assert!(in_scope("orchestrator/hierarchy.rs", DET_SCOPE));
         assert!(!in_scope("util/scratch.rs", PANIC_SCOPE));
         assert!(!in_scope("telemetry/http.rs", DET_SCOPE));
         assert!(in_scope("orchestrator/planner.rs", DET_SCOPE));
@@ -979,6 +989,7 @@ impl PlannerKind { pub const KINDS: &'static [&'static str] = &["random"]; }
 impl RoundMode { pub const KINDS: &'static [&'static str] = &["sync"]; }
 impl StalenessFn { pub const KINDS: &'static [&'static str] = &["poly"]; }
 impl WeightScheme { pub const KINDS: &'static [&'static str] = &["data_size"]; }
+impl GroupingPolicy { pub const KINDS: &'static [&'static str] = &["flat"]; }
 fn parse(s: &str) -> u8 {
     match s {
         "fedavg" => 1,
@@ -987,13 +998,15 @@ fn parse(s: &str) -> u8 {
         "sync" => 4,
         "poly" => 5,
         "data_size" => 6,
+        "flat" => 7,
         _ => 0,
     }
 }
 "#;
     const GOOD_MAIN: &str = "strategy_names() server_opt_names() planner_names() \
-                             RoundMode::KINDS StalenessFn::KINDS WeightScheme::KINDS";
-    const GOOD_README: &str = "fedavg sgd random sync poly data_size";
+                             RoundMode::KINDS StalenessFn::KINDS WeightScheme::KINDS \
+                             GroupingPolicy::KINDS";
+    const GOOD_README: &str = "fedavg sgd random sync poly data_size flat";
 
     #[test]
     fn registry_clean_config_passes() {

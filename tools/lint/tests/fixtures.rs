@@ -12,6 +12,7 @@ const ALLOW_NO_REASON: &str = include_str!("../fixtures/allow_no_reason.rs");
 const TELEMETRY_HTTP_BAD: &str = include_str!("../fixtures/telemetry_http_bad.rs");
 const PARALLEL_BAD: &str = include_str!("../fixtures/parallel_bad.rs");
 const SHARD_MAP_BAD: &str = include_str!("../fixtures/shard_map_bad.rs");
+const HIERARCHY_BAD: &str = include_str!("../fixtures/hierarchy_bad.rs");
 
 fn unallowed(vs: &[Violation]) -> Vec<&Violation> {
     vs.iter().filter(|v| !v.allowed).collect()
@@ -175,6 +176,39 @@ fn shard_map_bad_fixture_fires_under_det_scope() {
     assert!(vs.iter().all(|v| v.rule == "determinism"));
     // the map type appears in the use *and* the signature: both fire
     assert!(vs.iter().filter(|v| v.msg.contains("`HashMap`")).count() >= 2);
+}
+
+#[test]
+fn hierarchy_bad_fixture_fires_under_both_scopes() {
+    // orchestrator/hierarchy.rs joined BOTH scopes in PR 10: the site
+    // aggregator's fold path is wire-reachable (panic_safety) and its
+    // fold order pins two-tier ≡ flat bit-identity (determinism)
+    assert!(fedhpc_lint::in_scope(
+        "orchestrator/hierarchy.rs",
+        fedhpc_lint::PANIC_SCOPE
+    ));
+    assert!(fedhpc_lint::in_scope(
+        "orchestrator/hierarchy.rs",
+        fedhpc_lint::DET_SCOPE
+    ));
+    let vs = scan_snippet(HIERARCHY_BAD, true, true);
+    let bad = unallowed(&vs);
+    for needle in [
+        "`.unwrap()`",
+        "`.expect(`",
+        "slice/array indexing",
+        "`assert!`",
+        "`HashMap`",
+        "`Instant::now`",
+    ] {
+        assert!(
+            bad.iter().any(|v| v.msg.contains(needle)),
+            "expected a {needle} finding, got {bad:?}"
+        );
+    }
+    // both rule families fire on the same fixture
+    assert!(bad.iter().any(|v| v.rule == "panic_safety"));
+    assert!(bad.iter().any(|v| v.rule == "determinism"));
 }
 
 #[test]
